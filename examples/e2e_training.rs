@@ -1,0 +1,116 @@
+//! End-to-end training driver: the real three-layer stack on a real
+//! workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_training -- --steps 300
+//! ```
+//!
+//! Loads the AOT-lowered tiny-BERT *training step* (fwd + bwd + SGD, with
+//! the Pallas attention/linear kernels on the forward path), and drives a
+//! few hundred optimizer steps from rust over a synthetic copy-task
+//! corpus. Logs the loss curve, proving L1→L2→L3 compose; then calibrates
+//! the simulator from the measured step time and reports what the same
+//! step would cost on each A100 GPU instance. Results are recorded in
+//! EXPERIMENTS.md §E2E.
+
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::profile::profiles_for;
+use migperf::models::cost::{train_cost, Precision};
+use migperf::models::zoo;
+use migperf::runtime::executor::{load_params, Engine, HostTensor};
+use migperf::runtime::manifest::Manifest;
+use migperf::runtime::{artifacts_available, artifacts_dir};
+use migperf::simgpu::calibrate::Calibration;
+use migperf::simgpu::perfmodel::PerfModel;
+use migperf::simgpu::resource::ExecResource;
+use migperf::util::argparse::Args;
+use migperf::util::prng::Prng;
+use migperf::util::table::{fmt_num, sparkline, Table};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let steps: u64 = args.parse_or("steps", 300u64)?;
+    let log_every: u64 = args.parse_or("log-every", 20u64)?;
+
+    if !artifacts_available() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let manifest = Manifest::load(artifacts_dir())?;
+    let entry = manifest.entry("bert_tiny_train_b8").expect("train entry in manifest");
+
+    let mut engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    engine.load_hlo_text(&entry.name, &manifest.hlo_path(entry))?;
+    let mut params = load_params(&manifest, entry)?;
+    println!(
+        "loaded {} parameter tensors ({} floats) + compiled {}",
+        params.len(),
+        params.iter().map(HostTensor::elements).sum::<usize>(),
+        entry.hlo_file,
+    );
+
+    let batch = entry.inputs[entry.num_param_inputs].shape[0];
+    let seq = entry.inputs[entry.num_param_inputs].shape[1];
+    let vocab = 512u64;
+    let mut rng = Prng::new(0x5eed);
+
+    // Training loop: fresh synthetic batch each step (copy task: target =
+    // tokens shifted right by one, matching model.synthetic_batch).
+    let mut losses: Vec<f32> = Vec::new();
+    let mut total_exec_s = 0.0;
+    for step in 0..steps {
+        let tokens: Vec<i32> =
+            (0..batch * seq).map(|_| rng.below(vocab) as i32).collect();
+        let mut targets = Vec::with_capacity(tokens.len());
+        for row in tokens.chunks(seq as usize) {
+            targets.push(row[seq as usize - 1]);
+            targets.extend_from_slice(&row[..seq as usize - 1]);
+        }
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::I32(tokens, vec![batch, seq]));
+        inputs.push(HostTensor::I32(targets, vec![batch, seq]));
+        let out = engine.execute(&entry.name, &inputs)?;
+        total_exec_s += out.wall_s;
+        let loss = out.outputs[0].as_f32().expect("scalar loss")[0];
+        losses.push(loss);
+        params = out.outputs[1..].to_vec();
+        if step % log_every == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    println!("\nloss curve: {}", sparkline(&losses.iter().map(|&x| x as f64).collect::<Vec<_>>()));
+    println!("loss {first:.3} → {last:.3} over {steps} steps ({} samples)", steps * batch as u64);
+    assert!(last < first, "training must reduce loss");
+
+    // Calibration: anchor the simulator on the measured per-step cost.
+    let per_step_s = total_exec_s / steps as f64;
+    let cal = Calibration::from_measurement(&entry.name, entry.flops, per_step_s);
+    println!(
+        "\nmeasured {:.2} ms/step on PJRT-CPU → {:.2} GFLOP/s effective",
+        per_step_s * 1e3,
+        cal.cpu_eff_flops / 1e9
+    );
+
+    // What would the paper-scale BERT-base training step cost per GI?
+    let pm = PerfModel::default();
+    let m = zoo::lookup("bert-base").unwrap();
+    let cost = train_cost(m, 32, 128, Precision::Half);
+    let mut t = Table::new(&["A100 GI", "step_ms", "throughput seq/s", "gract"]);
+    for p in profiles_for(GpuModel::A100_80GB) {
+        let res = ExecResource::from_gi(GpuModel::A100_80GB, p);
+        if let Some(est) = cal.predict_on(&pm, &res, &cost) {
+            t.row(&[
+                p.name.to_string(),
+                fmt_num(est.seconds * 1e3),
+                fmt_num(32.0 / est.seconds),
+                fmt_num(est.gract),
+            ]);
+        }
+    }
+    println!("\nsimulated BERT-base (batch 32, seq 128) training step per A100 GI:\n{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT lowering: JAX/Pallas entry points → HLO text artifacts.
+
+Runs ONCE at build time (``make artifacts``). For every entry point it
+writes ``artifacts/<name>.hlo.txt`` plus a ``manifest.json`` describing
+input specs, output arity and analytic FLOPs; the training entry also gets
+``bert_tiny.params.bin`` (flat little-endian f32, spec order) so the rust
+runtime can seed the training loop.
+
+HLO *text* is the interchange format, NOT ``lowered.compile()`` /
+serialized protos: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the rust ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Inference entries close over baked-in weights (single tensor input, the
+token/image batch) — that keeps the rust serving hot path to one literal.
+The training entry takes (params..., tokens, targets) and returns
+(loss, new_params...) so rust can run the optimizer loop.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted computation to HLO text with return_tuple=True."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tensor_spec(name, arr_or_shape, dtype):
+    shape = list(arr_or_shape.shape) if hasattr(arr_or_shape, "shape") else list(arr_or_shape)
+    return {"name": name, "dtype": dtype, "shape": shape}
+
+
+def _bert_flops(cfg: model.BertConfig, batch: int, train: bool) -> float:
+    """Dominant-term FLOPs of one tiny-BERT execution (for calibration)."""
+    s, h, l, m = cfg.max_seq, cfg.hidden, cfg.layers, cfg.mlp_mult
+    per_tok = 2 * (4 * h * h + 2 * m * h * h) * l + 2 * h * cfg.vocab
+    attn = 4 * l * s * s * h
+    fwd = batch * (s * per_tok + attn)
+    return float(fwd * (3 if train else 1))
+
+
+def _resnet_flops(cfg: model.ResNetConfig, batch: int) -> float:
+    """Rough conv FLOPs of one tiny-ResNet forward."""
+    hw = cfg.in_size * cfg.in_size
+    total = 2 * 9 * 3 * cfg.channels[0] * hw
+    size = hw
+    in_c = cfg.channels[0]
+    for s, c in enumerate(cfg.channels):
+        if s > 0:
+            size //= 4
+        total += 2 * 9 * in_c * c * size + 2 * 9 * c * c * size
+        in_c = c
+    return float(batch * total)
+
+
+def build_entries(out_dir: str):
+    """Lower every entry point, returning manifest entry dicts."""
+    entries = []
+    cfg = model.TINY_BERT
+    params = model.bert_init(cfg, seed=0)
+
+    # --- BERT inference at several batch sizes (weights baked in) ---
+    for batch in (1, 4, 8):
+        name = f"bert_tiny_infer_b{batch}"
+        fn = lambda tokens: (model.bert_infer_pooled(params, tokens, cfg),)
+        spec = jax.ShapeDtypeStruct((batch, cfg.max_seq), jnp.int32)
+        text = to_hlo_text(jax.jit(fn).lower(spec))
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_file), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "hlo_file": hlo_file,
+            "inputs": [_tensor_spec("tokens", (batch, cfg.max_seq), "i32")],
+            "num_outputs": 1,
+            "flops": _bert_flops(cfg, batch, train=False),
+        })
+
+    # --- BERT training step (params explicit; loss + new params out) ---
+    batch = 8
+    name = f"bert_tiny_train_b{batch}"
+
+    def train_fn(*args):
+        ps = list(args[: len(params)])
+        tokens, targets = args[len(params)], args[len(params) + 1]
+        loss, new_ps = model.bert_train_step(ps, tokens, targets, cfg)
+        return (loss, *new_ps)
+
+    arg_specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params]
+    arg_specs.append(jax.ShapeDtypeStruct((batch, cfg.max_seq), jnp.int32))
+    arg_specs.append(jax.ShapeDtypeStruct((batch, cfg.max_seq), jnp.int32))
+    # §Perf (L2): donate the parameter buffers — the lowered HLO gets
+    # input/output aliasing, so XLA updates weights in place instead of
+    # allocating a fresh copy of every tensor each step.
+    text = to_hlo_text(
+        jax.jit(train_fn, donate_argnums=tuple(range(len(params)))).lower(*arg_specs)
+    )
+    hlo_file = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_file), "w") as f:
+        f.write(text)
+    params_file = "bert_tiny.params.bin"
+    flat = np.concatenate([np.asarray(p, dtype=np.float32).ravel() for p in params])
+    flat.tofile(os.path.join(out_dir, params_file))
+    inputs = [
+        _tensor_spec(n, shape, "f32") for (n, shape) in model.bert_param_specs(cfg)
+    ]
+    inputs.append(_tensor_spec("tokens", (batch, cfg.max_seq), "i32"))
+    inputs.append(_tensor_spec("targets", (batch, cfg.max_seq), "i32"))
+    entries.append({
+        "name": name,
+        "hlo_file": hlo_file,
+        "inputs": inputs,
+        "num_outputs": 1 + len(params),
+        "flops": _bert_flops(cfg, batch, train=True),
+        "params_file": params_file,
+        "num_param_inputs": len(params),
+    })
+
+    # --- ResNet inference (weights baked in) ---
+    rcfg = model.TINY_RESNET
+    rparams = model.resnet_init(rcfg, seed=1)
+    for batch in (1, 8):
+        name = f"resnet_tiny_infer_b{batch}"
+        fn = lambda images: (model.resnet_forward(rparams, images, rcfg),)
+        spec = jax.ShapeDtypeStruct((batch, 3, rcfg.in_size, rcfg.in_size), jnp.float32)
+        text = to_hlo_text(jax.jit(fn).lower(spec))
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_file), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "hlo_file": hlo_file,
+            "inputs": [_tensor_spec("images", (batch, 3, rcfg.in_size, rcfg.in_size), "f32")],
+            "num_outputs": 1,
+            "flops": _resnet_flops(rcfg, batch),
+        })
+
+    return entries
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = parser.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    entries = build_entries(out_dir)
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    total = sum(
+        os.path.getsize(os.path.join(out_dir, e["hlo_file"])) for e in entries
+    )
+    print(f"wrote {len(entries)} entries ({total / 1e6:.1f} MB of HLO) to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: fused scaled-dot-product attention.
+
+The compute hot-spot of the BERT-style workloads, written as a Pallas
+kernel so the QK^T → softmax → AV chain runs out of one VMEM-resident
+tile without materializing the score matrix in HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over
+(batch × heads); each program instance owns one ``[seq, head_dim]`` Q/K/V
+tile in VMEM and both matmuls feed the MXU. On this CPU-only image the
+kernel runs under ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md); performance on TPU is therefore *estimated*
+from the VMEM footprint and MXU shape in DESIGN.md §6.
+
+Training support: Pallas kernels have no automatic VJP, so the kernel is
+wrapped in ``jax.custom_vjp`` whose backward pass differentiates the pure
+jnp reference — forward stays on the Pallas path, gradients are exactly
+the reference gradients.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    """One (batch·head) attention tile: everything lives in VMEM."""
+    q = q_ref[0]  # [seq, head_dim]
+    k = k_ref[0]
+    v = v_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.dot(q, k.T) * scale                     # MXU matmul 1
+    m = scores.max(axis=-1, keepdims=True)               # VPU reductions
+    w = jnp.exp(scores - m)
+    w = w / w.sum(axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(w, v)                             # MXU matmul 2
+
+
+def _pallas_mha(q, k, v):
+    """Raw pallas_call over a [bh, seq, head_dim] problem."""
+    bh, seq, hd = q.shape
+    block = pl.BlockSpec((1, seq, hd), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=(bh,),
+        in_specs=[block, block, block],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct((bh, seq, hd), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def fused_attention(q, k, v):
+    """Multi-head attention ``[batch*heads, seq, head_dim]`` on the Pallas path.
+
+    Numerically identical to :func:`ref.mha_ref` (asserted in
+    ``python/tests/test_kernels.py``); differentiable via a custom VJP that
+    backprops through the reference.
+    """
+    return _pallas_mha(q, k, v)
+
+
+def _fwd(q, k, v):
+    return _pallas_mha(q, k, v), (q, k, v)
+
+
+def _bwd(residual, g):
+    q, k, v = residual
+    _, vjp = jax.vjp(ref.mha_ref, q, k, v)
+    return vjp(g)
+
+
+fused_attention.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("num_heads",))
+def mha(x_q, x_k, x_v, num_heads):
+    """Convenience wrapper: split ``[batch, seq, hidden]`` into heads, run
+    the kernel, merge back."""
+    b, s, h = x_q.shape
+    hd = h // num_heads
+
+    def split(x):
+        return x.reshape(b, s, num_heads, hd).transpose(0, 2, 1, 3).reshape(b * num_heads, s, hd)
+
+    def merge(x):
+        return x.reshape(b, num_heads, s, hd).transpose(0, 2, 1, 3).reshape(b, s, h)
+
+    return merge(fused_attention(split(x_q), split(x_k), split(x_v)))

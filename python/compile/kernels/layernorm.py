@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: fused layer normalization.
+
+LayerNorm appears twice per transformer block; fusing the mean/variance
+reduction with the affine transform keeps each row's statistics in VMEM
+registers instead of round-tripping through HBM. Tiled over rows like
+``linear.py``; runs under ``interpret=True`` on this CPU-only image;
+differentiable via a custom VJP through the jnp reference.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_BLOCK_ROWS = 8
+_EPS = 1e-5
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]                    # [block_rows, dim] in VMEM
+    g = g_ref[...]                    # [dim]
+    b = b_ref[...]                    # [dim]
+    mu = x.mean(axis=-1, keepdims=True)            # VPU row reduction
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + _EPS) * g + b
+
+
+def _pallas_layernorm(x, gamma, beta):
+    rows, dim = x.shape
+    pad = (-rows) % _BLOCK_ROWS
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    out = pl.pallas_call(
+        _layernorm_kernel,
+        grid=(xp.shape[0] // _BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK_ROWS, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], dim), x.dtype),
+        interpret=True,
+    )(xp, gamma, beta)
+    return out[:rows] if pad else out
+
+
+@jax.custom_vjp
+def fused_layernorm(x, gamma, beta):
+    """LayerNorm over the last axis on the Pallas path.
+
+    Shapes: ``x [rows, dim]``, ``gamma/beta [dim]``. Matches
+    :func:`ref.layernorm_ref` (asserted in tests); gradients flow through
+    the reference.
+    """
+    return _pallas_layernorm(x, gamma, beta)
+
+
+def _fwd(x, gamma, beta):
+    return _pallas_layernorm(x, gamma, beta), (x, gamma, beta)
+
+
+def _bwd(residual, grad):
+    x, gamma, beta = residual
+    _, vjp = jax.vjp(ref.layernorm_ref, x, gamma, beta)
+    return vjp(grad)
+
+
+fused_layernorm.defvjp(_fwd, _bwd)

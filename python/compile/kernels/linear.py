@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fused linear + bias + GELU.
+
+The transformer MLP's first matmul fused with its activation, tiled over
+rows so each program instance streams one row-block of ``x`` through VMEM
+while ``w``/``b`` stay resident. Runs under ``interpret=True`` on this
+CPU-only image (see attention.py for the rationale); differentiable via a
+custom VJP through the jnp reference.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows per program instance. 8 sublanes is the natural TPU tile height;
+# callers' row counts (batch × seq) are padded up to a multiple.
+_BLOCK_ROWS = 8
+
+
+def _linear_gelu_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]          # [block_rows, in_dim] in VMEM
+    w = w_ref[...]          # [in_dim, out_dim] resident across the grid
+    b = b_ref[...]          # [out_dim]
+    y = jnp.dot(x, w) + b[None, :]          # MXU matmul + VPU add
+    c = jnp.asarray(0.7978845608028654, dtype=y.dtype)
+    o_ref[...] = 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y * y * y)))
+
+
+def _pallas_linear_gelu(x, w, b):
+    rows, in_dim = x.shape
+    out_dim = w.shape[1]
+    pad = (-rows) % _BLOCK_ROWS
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (xp.shape[0] // _BLOCK_ROWS,)
+    out = pl.pallas_call(
+        _linear_gelu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_BLOCK_ROWS, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((in_dim, out_dim), lambda i: (0, 0)),
+            pl.BlockSpec((out_dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], out_dim), x.dtype),
+        interpret=True,
+    )(xp, w, b)
+    return out[:rows] if pad else out
+
+
+@jax.custom_vjp
+def fused_linear_gelu(x, w, b):
+    """``gelu(x @ w + b)`` on the Pallas path.
+
+    Shapes: ``x [rows, in_dim]``, ``w [in_dim, out_dim]``, ``b [out_dim]``.
+    Matches :func:`ref.linear_gelu_ref` (asserted in tests); gradients flow
+    through the reference.
+    """
+    return _pallas_linear_gelu(x, w, b)
+
+
+def _fwd(x, w, b):
+    return _pallas_linear_gelu(x, w, b), (x, w, b)
+
+
+def _bwd(residual, g):
+    x, w, b = residual
+    _, vjp = jax.vjp(ref.linear_gelu_ref, x, w, b)
+    return vjp(g)
+
+
+fused_linear_gelu.defvjp(_fwd, _bwd)

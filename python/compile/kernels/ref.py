@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests`` asserts
+``assert_allclose(kernel(x), ref(x))`` across shapes and dtypes (including
+hypothesis sweeps) — this is the core L1 correctness signal. The custom
+VJPs of the kernels also differentiate *through these references*, so
+training gradients are exactly the reference gradients.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Scaled dot-product attention for one head.
+
+    Args:
+      q, k, v: ``[seq, head_dim]`` arrays.
+
+    Returns:
+      ``[seq, head_dim]`` attention output.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = (q @ k.T) * scale
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return weights @ v
+
+
+def mha_ref(q, k, v):
+    """Batched multi-head attention: ``[batch*heads, seq, head_dim]``."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("bsd,btd->bst", q, k) * scale
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bst,btd->bsd", weights, v)
+
+
+def gelu_ref(x):
+    """tanh-approximated GELU (the BERT variant)."""
+    c = jnp.asarray(0.7978845608028654, dtype=x.dtype)  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def linear_gelu_ref(x, w, b):
+    """Fused ``gelu(x @ w + b)``.
+
+    Args:
+      x: ``[rows, in_dim]``.
+      w: ``[in_dim, out_dim]``.
+      b: ``[out_dim]``.
+    """
+    return gelu_ref(x @ w + b)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Layer normalization over the last axis."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

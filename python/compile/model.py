@@ -1,0 +1,273 @@
+"""L2 JAX models: tiny-BERT encoder and tiny-ResNet CNN.
+
+These are the *executable* counterparts of the paper's benchmark models
+(Appendix A Table 4): architecturally faithful but scaled down so they run
+in milliseconds on the PJRT CPU client. The transformer's attention and
+MLP hot-spots go through the L1 Pallas kernels (``kernels.attention``,
+``kernels.linear``), so the AOT-lowered HLO exercises the full
+three-layer stack. `aot.py` lowers the entry points defined here to HLO
+text; the rust runtime executes them for end-to-end validation and
+simulator calibration.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import fused_attention
+from .kernels.layernorm import fused_layernorm
+from .kernels.linear import fused_linear_gelu
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Tiny BERT
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    """Configuration of the tiny BERT encoder."""
+
+    vocab: int = 512
+    hidden: int = 64
+    layers: int = 2
+    heads: int = 4
+    mlp_mult: int = 4
+    max_seq: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+
+TINY_BERT = BertConfig()
+
+
+def bert_param_specs(cfg: BertConfig):
+    """Ordered (name, shape) of every parameter tensor.
+
+    The order is the flattening contract shared with the rust runtime
+    (``manifest.json`` lists the same specs).
+    """
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.hidden)),
+        ("pos_emb", (cfg.max_seq, cfg.hidden)),
+    ]
+    for i in range(cfg.layers):
+        specs += [
+            (f"l{i}.wq", (cfg.hidden, cfg.hidden)),
+            (f"l{i}.wk", (cfg.hidden, cfg.hidden)),
+            (f"l{i}.wv", (cfg.hidden, cfg.hidden)),
+            (f"l{i}.wo", (cfg.hidden, cfg.hidden)),
+            (f"l{i}.ln1_g", (cfg.hidden,)),
+            (f"l{i}.ln1_b", (cfg.hidden,)),
+            (f"l{i}.w1", (cfg.hidden, cfg.hidden * cfg.mlp_mult)),
+            (f"l{i}.b1", (cfg.hidden * cfg.mlp_mult,)),
+            (f"l{i}.w2", (cfg.hidden * cfg.mlp_mult, cfg.hidden)),
+            (f"l{i}.b2", (cfg.hidden,)),
+            (f"l{i}.ln2_g", (cfg.hidden,)),
+            (f"l{i}.ln2_b", (cfg.hidden,)),
+        ]
+    specs.append(("out_w", (cfg.hidden, cfg.vocab)))
+    specs.append(("out_b", (cfg.vocab,)))
+    return specs
+
+
+def bert_init(cfg: BertConfig, seed: int = 0):
+    """Initialize parameters as a flat list of arrays (spec order)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in bert_param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", ".b1", ".b2")) or name.endswith("ln1_b") or name.endswith("ln2_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(("ln1_g", "ln2_g")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * (1.0 / jnp.sqrt(fan_in))
+            )
+    return params
+
+
+def _split_heads(x, cfg: BertConfig):
+    b, s, h = x.shape
+    return (
+        x.reshape(b, s, cfg.heads, cfg.head_dim)
+        .transpose(0, 2, 1, 3)
+        .reshape(b * cfg.heads, s, cfg.head_dim)
+    )
+
+
+def _merge_heads(x, b, s, cfg: BertConfig):
+    return (
+        x.reshape(b, cfg.heads, s, cfg.head_dim)
+        .transpose(0, 2, 1, 3)
+        .reshape(b, s, cfg.hidden)
+    )
+
+
+def _ln(x, gamma, beta, cfg: BertConfig):
+    """LayerNorm over [batch, seq, hidden] via the Pallas row kernel."""
+    b, s, h = x.shape
+    return fused_layernorm(x.reshape(b * s, h), gamma, beta).reshape(b, s, h)
+
+
+def bert_forward(params, tokens, cfg: BertConfig = TINY_BERT):
+    """Forward pass: ``tokens [batch, seq] i32`` → logits ``[batch, seq, vocab]``.
+
+    All three hot-spots run on Pallas kernels: attention on
+    ``fused_attention``, the MLP's first matmul+GELU on
+    ``fused_linear_gelu``, and both pre-norms on ``fused_layernorm``.
+    """
+    it = iter(params)
+    nxt = lambda: next(it)
+    tok_emb, pos_emb = nxt(), nxt()
+    b, s = tokens.shape
+    x = tok_emb[tokens] + pos_emb[:s][None, :, :]
+    for _ in range(cfg.layers):
+        wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt()
+        ln1_g, ln1_b = nxt(), nxt()
+        w1, b1, w2, b2 = nxt(), nxt(), nxt(), nxt()
+        ln2_g, ln2_b = nxt(), nxt()
+        # --- attention block (pre-LN) ---
+        h = _ln(x, ln1_g, ln1_b, cfg)
+        q, k, v = h @ wq, h @ wk, h @ wv
+        attn = fused_attention(
+            _split_heads(q, cfg), _split_heads(k, cfg), _split_heads(v, cfg)
+        )
+        x = x + _merge_heads(attn, b, s, cfg) @ wo
+        # --- MLP block ---
+        h = _ln(x, ln2_g, ln2_b, cfg)
+        rows = h.reshape(b * s, cfg.hidden)
+        y = fused_linear_gelu(rows, w1, b1)
+        x = x + (y @ w2 + b2).reshape(b, s, cfg.hidden)
+    out_w, out_b = nxt(), nxt()
+    return x @ out_w + out_b
+
+
+def bert_infer_pooled(params, tokens, cfg: BertConfig = TINY_BERT):
+    """Inference entry: mean-pooled logits ``[batch, vocab]``."""
+    return bert_forward(params, tokens, cfg).mean(axis=1)
+
+
+def bert_loss(params, tokens, targets, cfg: BertConfig = TINY_BERT):
+    """Mean cross-entropy of next-token prediction."""
+    logits = bert_forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def bert_train_step(params, tokens, targets, cfg: BertConfig = TINY_BERT, lr: float = 0.1):
+    """One SGD step: returns ``(loss, new_params)``.
+
+    Forward runs through the Pallas kernels; backward flows through their
+    custom VJPs (the jnp references).
+    """
+    loss, grads = jax.value_and_grad(lambda p: bert_loss(p, tokens, targets, cfg))(
+        list(params)
+    )
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return loss, new_params
+
+
+# ---------------------------------------------------------------------------
+# Tiny ResNet
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    """Configuration of the tiny residual CNN."""
+
+    in_size: int = 16
+    channels: tuple = (8, 16)
+    blocks_per_stage: int = 1
+    classes: int = 10
+
+
+TINY_RESNET = ResNetConfig()
+
+
+def resnet_param_specs(cfg: ResNetConfig):
+    """Ordered (name, shape) of every parameter tensor (NCHW conv kernels
+    as ``[out_c, in_c, 3, 3]``)."""
+    specs = [("stem", (cfg.channels[0], 3, 3, 3))]
+    for s, c in enumerate(cfg.channels):
+        in_c = cfg.channels[max(s - 1, 0)] if s > 0 else cfg.channels[0]
+        for b in range(cfg.blocks_per_stage):
+            bin_c = in_c if b == 0 else c
+            specs += [
+                (f"s{s}b{b}.conv1", (c, bin_c, 3, 3)),
+                (f"s{s}b{b}.conv2", (c, c, 3, 3)),
+            ]
+            if bin_c != c:
+                specs.append((f"s{s}b{b}.proj", (c, bin_c, 1, 1)))
+    specs += [("head_w", (cfg.channels[-1], cfg.classes)), ("head_b", (cfg.classes,))]
+    return specs
+
+
+def resnet_init(cfg: ResNetConfig = TINY_RESNET, seed: int = 1):
+    """He-initialized parameters, flat list in spec order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in resnet_param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name == "head_b":
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[1:]:
+                fan_in *= d
+            params.append(jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in))
+    return params
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def resnet_forward(params, images, cfg: ResNetConfig = TINY_RESNET):
+    """Forward: ``images [batch, 3, H, W] f32`` → logits ``[batch, classes]``."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    x = jax.nn.relu(_conv(images, nxt()))
+    in_c = cfg.channels[0]
+    for s, c in enumerate(cfg.channels):
+        for b in range(cfg.blocks_per_stage):
+            bin_c = in_c if b == 0 else c
+            stride = 2 if (s > 0 and b == 0) else 1
+            w1, w2 = nxt(), nxt()
+            h = jax.nn.relu(_conv(x, w1, stride))
+            h = _conv(h, w2)
+            shortcut = x
+            if bin_c != c:
+                shortcut = _conv(x, nxt(), stride)
+            elif stride != 1:
+                shortcut = x[:, :, ::stride, ::stride]
+            x = jax.nn.relu(h + shortcut)
+        in_c = c
+    pooled = x.mean(axis=(2, 3))
+    return pooled @ nxt() + nxt()
+
+
+# ---------------------------------------------------------------------------
+# Synthetic data (the copy-task corpus used by the e2e training example)
+# ---------------------------------------------------------------------------
+
+
+def synthetic_batch(key, batch, cfg: BertConfig = TINY_BERT):
+    """Learnable synthetic LM task: predict the previous token (shift-by-one
+    copy). Returns ``(tokens, targets)``, both ``[batch, max_seq] i32``."""
+    tokens = jax.random.randint(key, (batch, cfg.max_seq), 0, cfg.vocab, dtype=jnp.int32)
+    targets = jnp.roll(tokens, 1, axis=1)
+    return tokens, targets

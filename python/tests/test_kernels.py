@@ -1,0 +1,218 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+The core build-time signal: every kernel must match its ``ref.py`` oracle
+across shapes and dtypes (hypothesis sweeps), and its custom VJP must
+produce the reference gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import fused_attention, mha
+from compile.kernels.linear import fused_linear_gelu
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+class TestAttentionKernel:
+    def test_matches_ref_basic(self):
+        k = jax.random.PRNGKey(0)
+        kq, kk, kv = jax.random.split(k, 3)
+        q, kk_, v = _rand(kq, (4, 16, 8)), _rand(kk, (4, 16, 8)), _rand(kv, (4, 16, 8))
+        np.testing.assert_allclose(
+            fused_attention(q, kk_, v), ref.mha_ref(q, kk_, v), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        bh=st.integers(1, 6),
+        seq=st.integers(2, 24),
+        hd=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, bh, seq, hd, seed):
+        k = jax.random.PRNGKey(seed)
+        kq, kk, kv = jax.random.split(k, 3)
+        q, kk_, v = _rand(kq, (bh, seq, hd)), _rand(kk, (bh, seq, hd)), _rand(kv, (bh, seq, hd))
+        np.testing.assert_allclose(
+            fused_attention(q, kk_, v), ref.mha_ref(q, kk_, v), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        k = jax.random.PRNGKey(3)
+        kq, kk, kv = jax.random.split(k, 3)
+        q = _rand(kq, (2, 8, 8), dtype)
+        kk_ = _rand(kk, (2, 8, 8), dtype)
+        v = _rand(kv, (2, 8, 8), dtype)
+        out = fused_attention(q, kk_, v)
+        expect = ref.mha_ref(q, kk_, v)
+        assert out.dtype == dtype
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), expect.astype(jnp.float32), rtol=tol, atol=tol
+        )
+
+    def test_softmax_rows_implicitly_normalized(self):
+        # With v = identity-ish stacking, output rows are convex combos of v
+        # rows: all outputs stay within [min(v), max(v)].
+        k = jax.random.PRNGKey(5)
+        kq, kk, kv = jax.random.split(k, 3)
+        q, kk_, v = _rand(kq, (1, 8, 4)), _rand(kk, (1, 8, 4)), _rand(kv, (1, 8, 4))
+        out = np.asarray(fused_attention(q, kk_, v))
+        assert out.max() <= np.asarray(v).max() + 1e-5
+        assert out.min() >= np.asarray(v).min() - 1e-5
+
+    def test_numerical_stability_large_logits(self):
+        # Large-magnitude q/k would overflow a naive softmax.
+        k = jax.random.PRNGKey(7)
+        kq, kk, kv = jax.random.split(k, 3)
+        q = _rand(kq, (1, 8, 8), scale=60.0)
+        kk_ = _rand(kk, (1, 8, 8), scale=60.0)
+        v = _rand(kv, (1, 8, 8))
+        out = np.asarray(fused_attention(q, kk_, v))
+        assert np.isfinite(out).all()
+
+    def test_gradients_match_reference(self):
+        k = jax.random.PRNGKey(11)
+        kq, kk, kv = jax.random.split(k, 3)
+        q, kk_, v = _rand(kq, (2, 8, 4)), _rand(kk, (2, 8, 4)), _rand(kv, (2, 8, 4))
+        g_kernel = jax.grad(lambda a, b, c: fused_attention(a, b, c).sum(), argnums=(0, 1, 2))(
+            q, kk_, v
+        )
+        g_ref = jax.grad(lambda a, b, c: ref.mha_ref(a, b, c).sum(), argnums=(0, 1, 2))(q, kk_, v)
+        for gk, gr in zip(g_kernel, g_ref):
+            np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-5)
+
+    def test_mha_wrapper_shapes(self):
+        k = jax.random.PRNGKey(13)
+        x = _rand(k, (2, 8, 16))
+        out = mha(x, x, x, num_heads=4)
+        assert out.shape == (2, 8, 16)
+
+    def test_jit_compatible(self):
+        k = jax.random.PRNGKey(17)
+        kq, kk, kv = jax.random.split(k, 3)
+        q, kk_, v = _rand(kq, (2, 4, 4)), _rand(kk, (2, 4, 4)), _rand(kv, (2, 4, 4))
+        jitted = jax.jit(fused_attention)
+        np.testing.assert_allclose(jitted(q, kk_, v), fused_attention(q, kk_, v), rtol=1e-6)
+
+
+class TestLinearGeluKernel:
+    def test_matches_ref_basic(self):
+        k = jax.random.PRNGKey(0)
+        kx, kw, kb = jax.random.split(k, 3)
+        x, w, b = _rand(kx, (16, 32)), _rand(kw, (32, 64)), _rand(kb, (64,))
+        np.testing.assert_allclose(
+            fused_linear_gelu(x, w, b), ref.linear_gelu_ref(x, w, b), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 40),
+        in_dim=st.sampled_from([4, 16, 32]),
+        out_dim=st.sampled_from([8, 24, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, rows, in_dim, out_dim, seed):
+        # rows intentionally not a multiple of the 8-row block: exercises
+        # the padding path.
+        k = jax.random.PRNGKey(seed)
+        kx, kw, kb = jax.random.split(k, 3)
+        x, w, b = _rand(kx, (rows, in_dim)), _rand(kw, (in_dim, out_dim)), _rand(kb, (out_dim,))
+        np.testing.assert_allclose(
+            fused_linear_gelu(x, w, b), ref.linear_gelu_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_gradients_match_reference(self):
+        k = jax.random.PRNGKey(23)
+        kx, kw, kb = jax.random.split(k, 3)
+        x, w, b = _rand(kx, (5, 8)), _rand(kw, (8, 12)), _rand(kb, (12,))
+        gk = jax.grad(lambda *a: fused_linear_gelu(*a).sum(), argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(lambda *a: ref.linear_gelu_ref(*a).sum(), argnums=(0, 1, 2))(x, w, b)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-5)
+
+    def test_gelu_ref_known_values(self):
+        # gelu(0) = 0; gelu is ~identity for large positive x, ~0 for large
+        # negative x.
+        x = jnp.array([-10.0, 0.0, 10.0])
+        y = np.asarray(ref.gelu_ref(x))
+        assert abs(y[1]) < 1e-7
+        assert abs(y[2] - 10.0) < 1e-3
+        assert abs(y[0]) < 1e-3
+
+    def test_single_row(self):
+        k = jax.random.PRNGKey(29)
+        kx, kw, kb = jax.random.split(k, 3)
+        x, w, b = _rand(kx, (1, 4)), _rand(kw, (4, 4)), _rand(kb, (4,))
+        np.testing.assert_allclose(
+            fused_linear_gelu(x, w, b), ref.linear_gelu_ref(x, w, b), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestLayernormKernel:
+    def test_matches_ref_basic(self):
+        from compile.kernels.layernorm import fused_layernorm
+
+        k = jax.random.PRNGKey(0)
+        kx, kg, kb = jax.random.split(k, 3)
+        x = _rand(kx, (16, 32), scale=3.0)
+        g = 1.0 + _rand(kg, (32,), scale=0.1)
+        b = _rand(kb, (32,), scale=0.1)
+        np.testing.assert_allclose(
+            fused_layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.integers(1, 40),
+        dim=st.sampled_from([4, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, rows, dim, seed):
+        from compile.kernels.layernorm import fused_layernorm
+
+        k = jax.random.PRNGKey(seed)
+        kx, kg, kb = jax.random.split(k, 3)
+        x = _rand(kx, (rows, dim), scale=5.0)
+        g = 1.0 + _rand(kg, (dim,), scale=0.2)
+        b = _rand(kb, (dim,), scale=0.2)
+        np.testing.assert_allclose(
+            fused_layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_gradients_match_reference(self):
+        from compile.kernels.layernorm import fused_layernorm
+
+        k = jax.random.PRNGKey(7)
+        kx, kg, kb = jax.random.split(k, 3)
+        x = _rand(kx, (5, 8))
+        g = 1.0 + _rand(kg, (8,), scale=0.1)
+        b = _rand(kb, (8,), scale=0.1)
+        gk = jax.grad(lambda *a: fused_layernorm(*a).sum(), argnums=(0, 1, 2))(x, g, b)
+        gr = jax.grad(lambda *a: ref.layernorm_ref(*a).sum(), argnums=(0, 1, 2))(x, g, b)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-5)
+
+
+class TestLayernormRef:
+    def test_normalizes(self):
+        k = jax.random.PRNGKey(31)
+        x = _rand(k, (4, 16), scale=5.0)
+        y = np.asarray(ref.layernorm_ref(x, jnp.ones(16), jnp.zeros(16)))
+        np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-2)
+
+    def test_affine_params(self):
+        x = jnp.ones((2, 4))  # constant rows → normalized to 0
+        y = np.asarray(ref.layernorm_ref(x, jnp.full(4, 3.0), jnp.full(4, 7.0)))
+        np.testing.assert_allclose(y, 7.0, atol=1e-2)

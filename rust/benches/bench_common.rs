@@ -1,0 +1,71 @@
+//! Shared helpers for the figure/table benches.
+//!
+//! Each bench binary (`cargo bench --bench figN_...`) regenerates one
+//! table or figure from the paper's evaluation section: it runs the
+//! corresponding experiment on the simulated substrate and prints the
+//! same rows/series the paper reports, plus a `shape-check:` line
+//! asserting the qualitative finding. Optionally writes CSV next to the
+//! terminal output when `MIGPERF_BENCH_OUT` is set.
+
+use migperf::profiler::report::BenchReport;
+use migperf::util::table::{fmt_num, sparkline};
+
+/// Print a figure banner.
+#[allow(dead_code)]
+pub fn banner(id: &str, caption: &str) {
+    println!("==========================================================");
+    println!("{id}: {caption}");
+    println!("==========================================================");
+}
+
+/// Print per-instance series of one metric as aligned rows + sparkline.
+#[allow(dead_code)]
+pub fn print_series(
+    report: &BenchReport,
+    metric_name: &str,
+    metric: impl Fn(&migperf::metrics::collector::RunSummary) -> f64,
+    x_name: &str,
+    x_is_seq: bool,
+) {
+    let series = report.series(&metric, x_is_seq);
+    let xs: Vec<u32> = series
+        .first()
+        .map(|(_, pts)| pts.iter().map(|&(x, _)| x).collect())
+        .unwrap_or_default();
+    println!("\n{metric_name} vs {x_name}:");
+    print!("{:>10} |", x_name);
+    for x in &xs {
+        print!("{x:>9}");
+    }
+    println!();
+    for (inst, pts) in &series {
+        print!("{inst:>10} |");
+        for &(_, y) in pts {
+            print!("{:>9}", fmt_num(y));
+        }
+        let ys: Vec<f64> = pts.iter().map(|&(_, y)| y).collect();
+        println!("  {}", sparkline(&ys));
+    }
+}
+
+/// Write a report's summaries as CSV if MIGPERF_BENCH_OUT is set.
+#[allow(dead_code)]
+pub fn maybe_write_csv(name: &str, report: &BenchReport) {
+    if let Some(dir) = std::env::var_os("MIGPERF_BENCH_OUT") {
+        let dir = std::path::PathBuf::from(dir);
+        let _ = std::fs::create_dir_all(&dir);
+        let rows: Vec<_> = report.rows().iter().map(|r| r.summary.clone()).collect();
+        let csv = migperf::metrics::export::summaries_to_csv(&rows);
+        let path = dir.join(format!("{name}.csv"));
+        if std::fs::write(&path, csv).is_ok() {
+            println!("(csv written to {})", path.display());
+        }
+    }
+}
+
+/// Assert + report a qualitative shape check.
+#[allow(dead_code)]
+pub fn shape_check(desc: &str, ok: bool) {
+    println!("shape-check: {desc} ... {}", if ok { "OK" } else { "FAILED" });
+    assert!(ok, "shape check failed: {desc}");
+}

@@ -1,0 +1,99 @@
+//! Fig 2: BERT training on A100 GPU instances — throughput, GRACT, memory
+//! and energy vs batch size.
+//!
+//! Regenerates the four panels of the paper's Figure 2 on the simulated
+//! substrate and asserts the qualitative findings of §4.3.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, maybe_write_csv, print_series, shape_check};
+use migperf::mig::gpu::GpuModel;
+use migperf::profiler::session::ProfileSession;
+use migperf::profiler::task::{BenchTask, SweepAxis};
+use migperf::workload::spec::WorkloadKind;
+
+fn main() {
+    banner("Figure 2", "BERT-base training on A100 GIs vs batch size");
+    let task = BenchTask {
+        name: "fig2".into(),
+        gpu: GpuModel::A100_80GB,
+        gi_profiles: vec![
+            "1g.10gb".into(),
+            "2g.20gb".into(),
+            "3g.40gb".into(),
+            "7g.80gb".into(),
+        ],
+        model: "bert-base".into(),
+        kind: WorkloadKind::Training,
+        batch: 32,
+        seq: 128,
+        sweep: SweepAxis::Batch(vec![8, 16, 32, 64, 128]),
+        iterations: 100,
+        layout: Default::default(),
+    };
+    let report = ProfileSession::default().run(&task).expect("fig2 session");
+
+    print_series(&report, "(a) throughput seq/s", |s| s.throughput, "batch", false);
+    print_series(&report, "(b) GRACT", |s| s.mean_gract, "batch", false);
+    print_series(&report, "(c) FB used MiB", |s| s.peak_fb_mib, "batch", false);
+    print_series(&report, "(d) energy J (100 steps)", |s| s.energy_j, "batch", false);
+    maybe_write_csv("fig2", &report);
+    println!();
+
+    // §4.3 findings.
+    let tput = |inst: &str, batch: u32| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.batch == batch)
+            .map(|r| r.summary.throughput)
+            .unwrap()
+    };
+    shape_check(
+        "1g.10gb throughput flat past batch 32 (Fig 2a)",
+        tput("1g.10gb", 128) / tput("1g.10gb", 32) < 1.15,
+    );
+    shape_check(
+        "7g.80gb throughput keeps growing with batch (Fig 2a)",
+        tput("7g.80gb", 128) / tput("7g.80gb", 32) > 1.25,
+    );
+    let gract = |inst: &str, batch: u32| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.batch == batch)
+            .map(|r| r.summary.mean_gract)
+            .unwrap()
+    };
+    shape_check(
+        "small GIs high & stable utilization, large GIs lower (Fig 2b)",
+        gract("1g.10gb", 32) > gract("7g.80gb", 32) && gract("1g.10gb", 32) > 0.8,
+    );
+    let fb = |inst: &str| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.batch == 32)
+            .map(|r| r.summary.peak_fb_mib)
+            .unwrap()
+    };
+    shape_check(
+        "memory usage identical across GI sizes at fixed batch (Fig 2c)",
+        (fb("1g.10gb") - fb("7g.80gb")).abs() < 1.0,
+    );
+    let energy = |inst: &str| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.batch == 32)
+            .map(|r| r.summary.energy_j)
+            .unwrap()
+    };
+    shape_check(
+        "larger instance → less energy for same work (Fig 2d)",
+        energy("7g.80gb") < energy("3g.40gb")
+            && energy("3g.40gb") < energy("2g.20gb")
+            && energy("2g.20gb") < energy("1g.10gb"),
+    );
+}

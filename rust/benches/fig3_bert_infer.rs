@@ -1,0 +1,109 @@
+//! Fig 3: BERT inference on A100 GPU instances — latency, GRACT, memory
+//! and energy vs batch size (the paper sweeps input size for inference;
+//! §4.4 discusses the batch-size axis, which is what we sweep here, with
+//! a seq-length sweep as a second panel matching the figure caption).
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, maybe_write_csv, print_series, shape_check};
+use migperf::mig::gpu::GpuModel;
+use migperf::profiler::session::ProfileSession;
+use migperf::profiler::task::{BenchTask, SweepAxis};
+use migperf::workload::spec::WorkloadKind;
+
+fn main() {
+    banner("Figure 3", "BERT-base inference on A100 GIs");
+    let gis = vec!["1g.10gb".to_string(), "2g.20gb".into(), "3g.40gb".into(), "7g.80gb".into()];
+
+    // Batch-size sweep (panels a–d as discussed in §4.4).
+    let task = BenchTask {
+        name: "fig3-batch".into(),
+        gpu: GpuModel::A100_80GB,
+        gi_profiles: gis.clone(),
+        model: "bert-base".into(),
+        kind: WorkloadKind::Inference,
+        batch: 8,
+        seq: 128,
+        sweep: SweepAxis::Batch(vec![1, 2, 4, 8, 16, 32]),
+        iterations: 200,
+        layout: Default::default(),
+    };
+    let report = ProfileSession::default().run(&task).expect("fig3 session");
+    print_series(&report, "(a) avg latency ms", |s| s.avg_latency_ms, "batch", false);
+    print_series(&report, "(b) GRACT", |s| s.mean_gract, "batch", false);
+    print_series(&report, "(c) FB used MiB", |s| s.peak_fb_mib, "batch", false);
+    print_series(&report, "(d) energy J", |s| s.energy_j, "batch", false);
+    maybe_write_csv("fig3_batch", &report);
+
+    // Sequence-length sweep (the figure's title axis).
+    let task_seq = BenchTask {
+        name: "fig3-seq".into(),
+        gpu: GpuModel::A100_80GB,
+        gi_profiles: gis,
+        model: "bert-base".into(),
+        kind: WorkloadKind::Inference,
+        batch: 8,
+        seq: 128,
+        sweep: SweepAxis::SeqLen(vec![32, 64, 128, 256, 512]),
+        iterations: 200,
+        layout: Default::default(),
+    };
+    let report_seq = ProfileSession::default().run(&task_seq).expect("fig3 seq session");
+    print_series(&report_seq, "avg latency ms", |s| s.avg_latency_ms, "seq", true);
+    maybe_write_csv("fig3_seq", &report_seq);
+    println!();
+
+    let lat = |inst: &str, batch: u32| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.batch == batch)
+            .map(|r| r.summary.avg_latency_ms)
+            .unwrap()
+    };
+    shape_check(
+        "latency strongly batch-sensitive on small GI (Fig 3a)",
+        lat("1g.10gb", 32) / lat("1g.10gb", 1) > 4.0,
+    );
+    shape_check(
+        "batch influence marginal on large GI (Fig 3a)",
+        lat("7g.80gb", 32) / lat("7g.80gb", 1) < lat("1g.10gb", 32) / lat("1g.10gb", 1) / 2.0,
+    );
+    let gract = |inst: &str| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.batch == 8)
+            .map(|r| r.summary.mean_gract)
+            .unwrap()
+    };
+    shape_check(
+        "utilization decreases as GI size increases (Fig 3b)",
+        gract("1g.10gb") > gract("2g.20gb") && gract("2g.20gb") > gract("7g.80gb"),
+    );
+    let fb = |batch: u32| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == "7g.80gb" && r.batch == batch)
+            .map(|r| r.summary.peak_fb_mib)
+            .unwrap()
+    };
+    shape_check(
+        "FB growth marginal at small batch, larger at big batch (Fig 3c)",
+        (fb(2) - fb(1)) < (fb(32) - fb(16)),
+    );
+    let seq_lat = |inst: &str, seq: u32| {
+        report_seq
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.seq == seq)
+            .map(|r| r.summary.avg_latency_ms)
+            .unwrap()
+    };
+    shape_check(
+        "sequence length superlinear in latency on small GI",
+        seq_lat("1g.10gb", 512) / seq_lat("1g.10gb", 128) > 3.9,
+    );
+}

@@ -1,0 +1,77 @@
+//! Fig 4: average latency, MIG vs MPS, ResNet18/ResNet50 vs batch size.
+//!
+//! Paper §4.5: "MPS can have a very similar performance to that of MIG
+//! when the batch size is small"; variance grows with batch.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, shape_check};
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::profile::lookup as gi_lookup;
+use migperf::models::zoo;
+use migperf::sharing::mps::MpsModel;
+use migperf::simgpu::resource::ExecResource;
+use migperf::util::table::{fmt_num, Table};
+use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
+use migperf::workload::spec::WorkloadSpec;
+
+const BATCHES: &[u32] = &[1, 2, 4, 8, 16, 32];
+const TENANTS: u32 = 2;
+const REQUESTS: u64 = 1500;
+
+fn run(model: &str, batch: u32, mig: bool) -> migperf::metrics::collector::RunSummary {
+    let gpu = GpuModel::A30_24GB;
+    let spec = WorkloadSpec::inference(zoo::lookup(model).unwrap(), batch, 224);
+    let mode = if mig {
+        let p = gi_lookup(gpu, "2g.12gb").unwrap();
+        SharingMode::Mig(vec![ExecResource::from_gi(gpu, p); TENANTS as usize])
+    } else {
+        SharingMode::Mps {
+            gpu: ExecResource::whole_gpu(gpu),
+            n_clients: TENANTS,
+            model: MpsModel::default(),
+        }
+    };
+    ServingSim { mode, load: LoadMode::Closed { requests_per_server: REQUESTS }, spec, seed: 44 }
+        .run()
+        .expect("serving sim")
+        .pooled
+}
+
+fn main() {
+    banner("Figure 4", "average latency MIG vs MPS (A30, 2 tenants)");
+    let mut ratios_small = Vec::new();
+    let mut ratios_large = Vec::new();
+    for model in ["resnet18", "resnet50"] {
+        let mut t = Table::new(&["batch", "MIG avg_ms", "MPS avg_ms", "MPS std_ms", "MPS/MIG"]);
+        for &b in BATCHES {
+            let mig = run(model, b, true);
+            let mps = run(model, b, false);
+            let ratio = mps.avg_latency_ms / mig.avg_latency_ms;
+            if b <= 2 {
+                ratios_small.push(ratio);
+            }
+            if b >= 16 {
+                ratios_large.push(mps.std_latency_ms / mps.avg_latency_ms);
+            }
+            t.row(&[
+                b.to_string(),
+                fmt_num(mig.avg_latency_ms),
+                fmt_num(mps.avg_latency_ms),
+                fmt_num(mps.std_latency_ms),
+                fmt_num(ratio),
+            ]);
+        }
+        println!("\n({}) {model}:\n{}", if model == "resnet18" { "a" } else { "b" }, t.render());
+    }
+    println!();
+    shape_check(
+        "MPS average ≈ MIG at small batch (Fig 4)",
+        ratios_small.iter().all(|&r| r < 1.5),
+    );
+    shape_check(
+        "MPS deviation grows at large batch (Fig 4)",
+        ratios_large.iter().all(|&cv| cv > 0.05),
+    );
+}

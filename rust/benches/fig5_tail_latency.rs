@@ -1,0 +1,83 @@
+//! Fig 5: tail latency, MIG vs MPS at batch 8, ResNet18 and ResNet50.
+//!
+//! Paper §4.5: "from a tail latency perspective, MIG outperforms MPS a
+//! lot. MIG has a lower latency and can process users' requests stably."
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, shape_check};
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::profile::lookup as gi_lookup;
+use migperf::models::zoo;
+use migperf::sharing::mps::MpsModel;
+use migperf::simgpu::resource::ExecResource;
+use migperf::util::table::{fmt_num, Table};
+use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
+use migperf::workload::spec::WorkloadSpec;
+
+const BATCH: u32 = 8;
+const TENANTS: u32 = 2;
+const REQUESTS: u64 = 4000;
+
+fn main() {
+    banner("Figure 5", "tail latency MIG vs MPS at batch 8 (A30)");
+    let gpu = GpuModel::A30_24GB;
+    let mut t = Table::new(&[
+        "model", "mode", "p50_ms", "p99_ms", "max_ms", "std_ms",
+    ]);
+    let mut checks = Vec::new();
+    for model in ["resnet18", "resnet50"] {
+        let spec = WorkloadSpec::inference(zoo::lookup(model).unwrap(), BATCH, 224);
+        let p = gi_lookup(gpu, "2g.12gb").unwrap();
+        let mig = ServingSim {
+            mode: SharingMode::Mig(vec![ExecResource::from_gi(gpu, p); TENANTS as usize]),
+            load: LoadMode::Closed { requests_per_server: REQUESTS },
+            spec: spec.clone(),
+            seed: 55,
+        }
+        .run()
+        .unwrap()
+        .pooled;
+        let mps = ServingSim {
+            mode: SharingMode::Mps {
+                gpu: ExecResource::whole_gpu(gpu),
+                n_clients: TENANTS,
+                model: MpsModel::default(),
+            },
+            load: LoadMode::Closed { requests_per_server: REQUESTS },
+            spec,
+            seed: 55,
+        }
+        .run()
+        .unwrap()
+        .pooled;
+        for (mode, s) in [("MIG", &mig), ("MPS", &mps)] {
+            t.row(&[
+                model.to_string(),
+                mode.to_string(),
+                fmt_num(s.p50_latency_ms),
+                fmt_num(s.p99_latency_ms),
+                fmt_num(s.max_latency_ms),
+                fmt_num(s.std_latency_ms),
+            ]);
+        }
+        checks.push((
+            model,
+            mps.p99_latency_ms / mig.p99_latency_ms,
+            mps.std_latency_ms,
+            mig.std_latency_ms,
+        ));
+    }
+    println!("\n{}", t.render());
+    for (model, p99_ratio, mps_std, mig_std) in checks {
+        shape_check(
+            &format!("{model}: MIG p99 well below MPS p99 (ratio {:.2}×)", p99_ratio),
+            p99_ratio > 1.3,
+        );
+        shape_check(
+            &format!("{model}: MIG more stable than MPS"),
+            mig_std < mps_std,
+        );
+    }
+}

@@ -1,0 +1,72 @@
+//! Fig 7: tail latency of different-sized models, MIG vs MPS, batch 8.
+//!
+//! Paper §4.5: "both MIG and MPS can support small size models well, but
+//! MIG have a lower latency for larger models compared to MPS … This can
+//! be attributed to physical isolation."
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, shape_check};
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::profile::lookup as gi_lookup;
+use migperf::models::zoo;
+use migperf::sharing::mps::MpsModel;
+use migperf::simgpu::resource::ExecResource;
+use migperf::util::table::{fmt_num, Table};
+use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
+use migperf::workload::spec::WorkloadSpec;
+
+const MODELS: &[&str] = &["resnet18", "resnet34", "resnet50", "resnet101"];
+const BATCH: u32 = 8;
+const TENANTS: u32 = 2;
+const REQUESTS: u64 = 3000;
+
+fn main() {
+    banner("Figure 7", "p99 latency vs model size at batch 8, MIG vs MPS (A30)");
+    let gpu = GpuModel::A30_24GB;
+    let mut t = Table::new(&["model", "params M", "MIG p99_ms", "MPS p99_ms", "MPS/MIG"]);
+    let mut ratios = Vec::new();
+    for model in MODELS {
+        let desc = zoo::lookup(model).unwrap();
+        let spec = WorkloadSpec::inference(desc, BATCH, 224);
+        let p = gi_lookup(gpu, "2g.12gb").unwrap();
+        let mig = ServingSim {
+            mode: SharingMode::Mig(vec![ExecResource::from_gi(gpu, p); TENANTS as usize]),
+            load: LoadMode::Closed { requests_per_server: REQUESTS },
+            spec: spec.clone(),
+            seed: 77,
+        }
+        .run()
+        .unwrap()
+        .pooled;
+        let mps = ServingSim {
+            mode: SharingMode::Mps {
+                gpu: ExecResource::whole_gpu(gpu),
+                n_clients: TENANTS,
+                model: MpsModel::default(),
+            },
+            load: LoadMode::Closed { requests_per_server: REQUESTS },
+            spec,
+            seed: 77,
+        }
+        .run()
+        .unwrap()
+        .pooled;
+        let ratio = mps.p99_latency_ms / mig.p99_latency_ms;
+        ratios.push(ratio);
+        t.row(&[
+            model.to_string(),
+            fmt_num(desc.params as f64 / 1e6),
+            fmt_num(mig.p99_latency_ms),
+            fmt_num(mps.p99_latency_ms),
+            fmt_num(ratio),
+        ]);
+    }
+    println!("\n{}", t.render());
+    shape_check(
+        "MPS/MIG tail gap larger for the largest model than the smallest (Fig 7)",
+        ratios.last().unwrap() > &ratios[0],
+    );
+    shape_check("MIG never loses on tails (Fig 7)", ratios.iter().all(|&r| r >= 1.0));
+}

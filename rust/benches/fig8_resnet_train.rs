@@ -1,0 +1,69 @@
+//! Fig 8 (appendix): ResNet-50 training on A100 GPU instances vs batch
+//! size — throughput, GRACT, memory, energy.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, maybe_write_csv, print_series, shape_check};
+use migperf::mig::gpu::GpuModel;
+use migperf::profiler::session::ProfileSession;
+use migperf::profiler::task::{BenchTask, SweepAxis};
+use migperf::workload::spec::WorkloadKind;
+
+fn main() {
+    banner("Figure 8", "ResNet-50 training on A100 GIs vs batch size (appendix B)");
+    let task = BenchTask {
+        name: "fig8".into(),
+        gpu: GpuModel::A100_80GB,
+        gi_profiles: vec![
+            "1g.10gb".into(),
+            "2g.20gb".into(),
+            "3g.40gb".into(),
+            "7g.80gb".into(),
+        ],
+        model: "resnet50".into(),
+        kind: WorkloadKind::Training,
+        batch: 32,
+        seq: 224,
+        sweep: SweepAxis::Batch(vec![8, 16, 32, 64, 128]),
+        iterations: 100,
+        layout: Default::default(),
+    };
+    let report = ProfileSession::default().run(&task).expect("fig8 session");
+    print_series(&report, "(a) throughput img/s", |s| s.throughput, "batch", false);
+    print_series(&report, "(b) GRACT", |s| s.mean_gract, "batch", false);
+    print_series(&report, "(c) FB used MiB", |s| s.peak_fb_mib, "batch", false);
+    print_series(&report, "(d) energy J (100 steps)", |s| s.energy_j, "batch", false);
+    maybe_write_csv("fig8", &report);
+    println!();
+
+    let get = |inst: &str, batch: u32, f: fn(&migperf::metrics::collector::RunSummary) -> f64| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.batch == batch)
+            .map(|r| f(&r.summary))
+            .unwrap()
+    };
+    shape_check(
+        "1g throughput saturates (Fig 8a)",
+        get("1g.10gb", 128, |s| s.throughput) / get("1g.10gb", 32, |s| s.throughput) < 1.2,
+    );
+    shape_check(
+        "larger GI → higher throughput at batch 64 (Fig 8a)",
+        get("7g.80gb", 64, |s| s.throughput) > get("1g.10gb", 64, |s| s.throughput) * 2.0,
+    );
+    shape_check(
+        "larger GI → less energy (Fig 8d)",
+        get("7g.80gb", 32, |s| s.energy_j) < get("1g.10gb", 32, |s| s.energy_j),
+    );
+    // ResNet-50 activations dominate: training batch 128 must OOM on 1g.
+    let oom_row = report
+        .rows()
+        .iter()
+        .find(|r| r.instance == "1g.10gb" && r.batch == 128);
+    shape_check(
+        "ResNet-50 b128 training does not fit 1g.10gb (skipped as OOM)",
+        oom_row.map(|r| r.skipped.is_some()).unwrap_or(false),
+    );
+}

@@ -1,0 +1,58 @@
+//! Fig 9 (appendix): ResNet-50 inference on A100 GPU instances vs batch.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, maybe_write_csv, print_series, shape_check};
+use migperf::mig::gpu::GpuModel;
+use migperf::profiler::session::ProfileSession;
+use migperf::profiler::task::{BenchTask, SweepAxis};
+use migperf::workload::spec::WorkloadKind;
+
+fn main() {
+    banner("Figure 9", "ResNet-50 inference on A100 GIs vs batch size (appendix B)");
+    let task = BenchTask {
+        name: "fig9".into(),
+        gpu: GpuModel::A100_80GB,
+        gi_profiles: vec![
+            "1g.10gb".into(),
+            "2g.20gb".into(),
+            "3g.40gb".into(),
+            "7g.80gb".into(),
+        ],
+        model: "resnet50".into(),
+        kind: WorkloadKind::Inference,
+        batch: 8,
+        seq: 224,
+        sweep: SweepAxis::Batch(vec![1, 2, 4, 8, 16, 32]),
+        iterations: 200,
+        layout: Default::default(),
+    };
+    let report = ProfileSession::default().run(&task).expect("fig9 session");
+    print_series(&report, "(a) avg latency ms", |s| s.avg_latency_ms, "batch", false);
+    print_series(&report, "(b) GRACT", |s| s.mean_gract, "batch", false);
+    print_series(&report, "(c) FB used MiB", |s| s.peak_fb_mib, "batch", false);
+    print_series(&report, "(d) energy J", |s| s.energy_j, "batch", false);
+    maybe_write_csv("fig9", &report);
+    println!();
+
+    let lat = |inst: &str, batch: u32| {
+        report
+            .rows()
+            .iter()
+            .find(|r| r.instance == inst && r.batch == batch)
+            .map(|r| r.summary.avg_latency_ms)
+            .unwrap()
+    };
+    shape_check(
+        "small-GI latency batch-sensitive, large-GI marginal (Fig 9a)",
+        lat("1g.10gb", 32) / lat("1g.10gb", 1) > 2.0
+            && lat("7g.80gb", 32) / lat("7g.80gb", 1) < lat("1g.10gb", 32) / lat("1g.10gb", 1),
+    );
+    shape_check(
+        "latency non-increasing with GI size (Fig 9a)",
+        lat("7g.80gb", 8) <= lat("3g.40gb", 8)
+            && lat("3g.40gb", 8) <= lat("2g.20gb", 8)
+            && lat("2g.20gb", 8) <= lat("1g.10gb", 8),
+    );
+}

@@ -1,0 +1,161 @@
+//! L3 hot-path microbenchmarks (no criterion offline — first-party timing
+//! harness with warmup, repetitions and ns/op reporting).
+//!
+//! Covers the paths the profiler and serving simulator hammer: roofline
+//! pricing, DES event processing, latency-histogram recording, MPS
+//! request pricing, serving simulation end-to-end, and (when artifacts
+//! exist) real PJRT execution of the tiny models. Used by the §Perf pass
+//! in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use migperf::metrics::collector::MetricsCollector;
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::profile::lookup as gi_lookup;
+use migperf::models::cost::{infer_cost, Precision};
+use migperf::models::zoo;
+use migperf::sharing::mps::MpsModel;
+use migperf::simgpu::desim::Des;
+use migperf::simgpu::perfmodel::PerfModel;
+use migperf::simgpu::resource::ExecResource;
+use migperf::util::prng::Prng;
+use migperf::util::stats::LatencyHistogram;
+use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
+use migperf::workload::spec::WorkloadSpec;
+
+/// Time `f` over `iters` iterations after `warmup` iterations; returns
+/// ns/op. A black-box consume of the result prevents dead-code deletion.
+fn bench<T>(name: &str, warmup: u64, iters: u64, mut f: impl FnMut(u64) -> T) -> f64 {
+    let mut sink = 0u64;
+    for i in 0..warmup {
+        sink = sink.wrapping_add(consume(&f(i)));
+    }
+    let start = Instant::now();
+    for i in 0..iters {
+        sink = sink.wrapping_add(consume(&f(i)));
+    }
+    let elapsed = start.elapsed().as_nanos() as f64;
+    let ns_op = elapsed / iters as f64;
+    println!("{name:<44} {:>12.1} ns/op   ({iters} iters, sink {sink:x})", ns_op);
+    ns_op
+}
+
+fn consume<T>(t: &T) -> u64 {
+    // Read one byte of the value so the optimizer must materialize it.
+    let p = t as *const T as *const u8;
+    if std::mem::size_of::<T>() == 0 {
+        0
+    } else {
+        unsafe { std::ptr::read_volatile(p) as u64 }
+    }
+}
+
+fn main() {
+    println!("== perf_hotpath: L3 microbenchmarks ==\n");
+    let pm = PerfModel::default();
+    let m = zoo::lookup("bert-base").unwrap();
+    let res = ExecResource::from_gi(
+        GpuModel::A100_80GB,
+        gi_lookup(GpuModel::A100_80GB, "2g.20gb").unwrap(),
+    );
+    let cost = infer_cost(m, 8, 128, Precision::Half);
+
+    bench("roofline step pricing", 1_000, 1_000_000, |_| pm.step(&res, &cost).unwrap());
+
+    bench("analytic cost construction", 1_000, 1_000_000, |i| {
+        infer_cost(m, 1 + (i % 64) as u32, 128, Precision::Half)
+    });
+
+    let mut hist = LatencyHistogram::for_latency_ms();
+    let mut rng = Prng::new(1);
+    // Pre-generate samples so the PRNG's transcendental calls don't mask
+    // the histogram cost being measured.
+    let samples: Vec<f64> = (0..65536).map(|_| rng.lognormal(1.0, 0.5)).collect();
+    bench("latency histogram record", 10_000, 5_000_000, |i| {
+        hist.record(samples[(i & 0xffff) as usize]);
+    });
+    bench("latency histogram p99", 100, 200_000, |_| hist.percentile(99.0));
+
+    let mps = MpsModel::default();
+    let whole = ExecResource::whole_gpu(GpuModel::A30_24GB);
+    let isolated = pm.step(&whole, &cost).unwrap();
+    let mut rng2 = Prng::new(2);
+    bench("MPS request pricing (stochastic)", 10_000, 2_000_000, |_| {
+        mps.request_time(&isolated, &cost, &whole, 3, &mut rng2)
+    });
+
+    bench("DES schedule+pop", 1_000, 200_000, |i| {
+        let mut des: Des<u32> = Des::new();
+        for k in 0..16u32 {
+            des.schedule_at((i % 97) as f64 + k as f64, k);
+        }
+        let mut last = 0;
+        while let Some((_, e)) = des.next() {
+            last = e;
+        }
+        last
+    });
+
+    bench("metrics collector record+summarize/1k", 10, 2_000, |i| {
+        let mut c = MetricsCollector::new("bench");
+        for k in 0..1000u64 {
+            c.record_completion((i + k) as f64 * 1e-3, 5.0, 1);
+        }
+        c.summarize().completed
+    });
+
+    // End-to-end serving sims (the figure benches' inner loop).
+    let spec = WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 8, 224);
+    let p = gi_lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
+    bench("serving sim MIG 4×500 reqs", 2, 50, |i| {
+        ServingSim {
+            mode: SharingMode::Mig(vec![
+                ExecResource::from_gi(GpuModel::A30_24GB, p);
+                4
+            ]),
+            load: LoadMode::Closed { requests_per_server: 500 },
+            spec: spec.clone(),
+            seed: i,
+        }
+        .run()
+        .unwrap()
+        .pooled
+        .completed
+    });
+    bench("serving sim MPS 4×500 reqs", 2, 50, |i| {
+        ServingSim {
+            mode: SharingMode::Mps {
+                gpu: ExecResource::whole_gpu(GpuModel::A30_24GB),
+                n_clients: 4,
+                model: MpsModel::default(),
+            },
+            load: LoadMode::Closed { requests_per_server: 500 },
+            spec: spec.clone(),
+            seed: i,
+        }
+        .run()
+        .unwrap()
+        .pooled
+        .completed
+    });
+
+    // Real PJRT execution, if artifacts are built.
+    if migperf::runtime::artifacts_available() {
+        use migperf::runtime::executor::{Engine, HostTensor};
+        use migperf::runtime::Manifest;
+        let manifest = Manifest::load(migperf::runtime::artifacts_dir()).unwrap();
+        let e = manifest.entry("bert_tiny_infer_b4").unwrap();
+        let mut engine = Engine::cpu().unwrap();
+        engine.load_hlo_text(&e.name, &manifest.hlo_path(e)).unwrap();
+        let seq = e.inputs[0].shape[1];
+        let mut rng3 = Prng::new(3);
+        let tokens: Vec<i32> = (0..4 * seq).map(|_| rng3.below(512) as i32).collect();
+        let input = HostTensor::I32(tokens, vec![4, seq]);
+        bench("PJRT real exec bert_tiny_infer_b4", 3, 100, |_| {
+            engine.execute(&e.name, std::slice::from_ref(&input)).unwrap().outputs.len()
+        });
+    } else {
+        println!("(PJRT bench skipped: run `make artifacts` first)");
+    }
+    println!("\ndone.");
+}

@@ -1,0 +1,46 @@
+//! Table 1: training-framework compatibility with MIG.
+//!
+//! Regenerates the paper's Table 1 on the simulated CUDA runtime: two GIs
+//! on an A30, four training frameworks, only MIG 0 ever usable — and the
+//! PyTorch-1.13 quirk of reporting a visible-device count of 0.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, shape_check};
+use migperf::frameworks::run_training_matrix;
+use migperf::util::table::Table;
+
+fn main() {
+    banner("Table 1", "Training framework compatibility with MIG (2-GI A30)");
+    let rows = run_training_matrix();
+    let mut t = Table::new(&[
+        "Training framework",
+        "Version",
+        "Visible device count",
+        "Training on MIG 0",
+        "Training on MIG 1",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.framework.to_string(),
+            r.version.to_string(),
+            r.visible_device_count.to_string(),
+            if r.works_on_mig0 { "Yes" } else { "No" }.to_string(),
+            if r.works_on_mig1 { "Yes" } else { "No device" }.to_string(),
+        ]);
+    }
+    println!("\n{}", t.render());
+
+    shape_check("4 training frameworks probed", rows.len() == 4);
+    shape_check(
+        "all frameworks train on MIG 0, none on MIG 1",
+        rows.iter().all(|r| r.works_on_mig0 && !r.works_on_mig1),
+    );
+    let pt = rows.iter().find(|r| r.framework == "PyTorch").unwrap();
+    shape_check("PyTorch 1.13 reports visible device count 0", pt.visible_device_count == 0);
+    shape_check(
+        "TF/MxNet/Paddle report visible device count 1",
+        rows.iter().filter(|r| r.framework != "PyTorch").all(|r| r.visible_device_count == 1),
+    );
+}

@@ -1,0 +1,58 @@
+//! Table 2: serving-framework compatibility with MIG.
+//!
+//! Regenerates the paper's Table 2: three serving frameworks on a 2-GI
+//! A30 — every one serves on MIG 0, none finds MIG 1 — plus the docker
+//! workaround demonstration the paper describes in §4.6.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{banner, shape_check};
+use migperf::frameworks::docker::ContainerHost;
+use migperf::frameworks::run_serving_matrix;
+use migperf::mig::controller::MigController;
+use migperf::mig::gpu::GpuModel;
+use migperf::util::table::Table;
+
+fn main() {
+    banner("Table 2", "Serving framework compatibility with MIG (2-GI A30)");
+    let rows = run_serving_matrix();
+    let mut t = Table::new(&["Serving framework", "Version", "Serving on MIG 0", "Serving on MIG 1"]);
+    for r in &rows {
+        t.row(&[
+            r.framework.to_string(),
+            r.version.to_string(),
+            if r.works_on_mig0 { "Yes" } else { "No" }.to_string(),
+            if r.works_on_mig1 { "Yes" } else { "Device not found" }.to_string(),
+        ]);
+    }
+    println!("\n{}", t.render());
+
+    shape_check("3 serving frameworks probed", rows.len() == 3);
+    shape_check(
+        "all serve on MIG 0, none finds MIG 1",
+        rows.iter().all(|r| r.works_on_mig0 && !r.works_on_mig1),
+    );
+
+    // §4.6 workaround: container binding reaches MIG 1.
+    let mut ctl = MigController::new(GpuModel::A30_24GB);
+    ctl.enable_mig().unwrap();
+    let a = ctl.create_instance("1g.6gb").unwrap();
+    let b = ctl.create_instance("1g.6gb").unwrap();
+    ctl.create_default_ci(a).unwrap();
+    ctl.create_default_ci(b).unwrap();
+    let mut host = ContainerHost::new();
+    host.bind(&ctl, "triton-mig1", b).unwrap();
+    let devs = host.devices_in(&ctl, "triton-mig1").unwrap();
+    shape_check(
+        "docker binding makes MIG 1 servable (paper §4.6 workaround)",
+        devs.len() == 1 && devs[0].mig_uuid.as_deref().unwrap().contains("/1/"),
+    );
+    // …but reconfiguration requires the stop/unbind/resize/rebind dance.
+    let refused = host.destroy_gi(&mut ctl, b).is_err();
+    shape_check(
+        "bound GI cannot be reconfigured while the container runs (§4.6 friction)",
+        refused,
+    );
+    println!("\ndemonstrated: docker-bound container reaches MIG 1; live reconfiguration refused.");
+}

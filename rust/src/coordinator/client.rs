@@ -1,0 +1,117 @@
+//! User-facing client: submit benchmark suites, collect formatted reports.
+//!
+//! Mirrors the paper's client component ("users can install the client of
+//! MIGPerf on their own laptops to remotely control the whole process and
+//! conduct analysis locally", §3.1). The transport here is the in-process
+//! coordinator; the wire format is the JSON task/report schema, so a
+//! network transport could be slotted in without touching callers.
+
+use crate::profiler::report::BenchReport;
+use crate::profiler::task::BenchTask;
+use crate::util::json::{self, Json};
+
+use super::leader::{Coordinator, TaskHandle};
+
+/// Client handle over a coordinator.
+pub struct Client<'a> {
+    coordinator: &'a mut Coordinator,
+}
+
+impl<'a> Client<'a> {
+    /// Client over a coordinator.
+    pub fn new(coordinator: &'a mut Coordinator) -> Self {
+        Client { coordinator }
+    }
+
+    /// Submit a single task.
+    pub fn submit(&mut self, task: BenchTask) -> Result<TaskHandle, String> {
+        self.coordinator.submit(task)
+    }
+
+    /// Submit a task expressed as JSON (the wire format).
+    pub fn submit_json(&mut self, doc: &str) -> Result<TaskHandle, String> {
+        let v = json::parse(doc).map_err(|e| e.to_string())?;
+        let task = BenchTask::from_json(&v)?;
+        self.submit(task)
+    }
+
+    /// Submit a suite (JSON array of tasks); returns handles in order.
+    pub fn submit_suite_json(&mut self, doc: &str) -> Result<Vec<TaskHandle>, String> {
+        let v = json::parse(doc).map_err(|e| e.to_string())?;
+        let arr = v.as_arr().ok_or("suite must be a JSON array")?;
+        arr.iter()
+            .map(|t| BenchTask::from_json(t).and_then(|task| self.submit(task)))
+            .collect()
+    }
+
+    /// Wait for a task and return its report.
+    pub fn collect(&mut self, id: TaskHandle) -> Result<std::sync::Arc<BenchReport>, String> {
+        self.coordinator.wait(id)
+    }
+
+    /// Wait for a task and render its table (what the paper's visualizer
+    /// shows).
+    pub fn collect_rendered(&mut self, id: TaskHandle) -> Result<String, String> {
+        Ok(self.collect(id)?.render_table())
+    }
+
+    /// Wait for a suite and serialize all reports as one JSON document.
+    pub fn collect_suite_json(&mut self, ids: &[TaskHandle]) -> Result<String, String> {
+        let reports = self.coordinator.wait_all(ids);
+        let mut arr = Vec::new();
+        for r in reports {
+            arr.push(r?.to_json());
+        }
+        Ok(Json::Arr(arr).to_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TASK_JSON: &str = r#"{
+        "name": "client-test", "gpu": "a30", "gi_profiles": ["1g.6gb"],
+        "model": "resnet18", "kind": "inference", "batch": 2, "seq": 224,
+        "iterations": 10
+    }"#;
+
+    #[test]
+    fn submit_json_roundtrip() {
+        let mut coord = Coordinator::paper_testbed();
+        let mut client = Client::new(&mut coord);
+        let id = client.submit_json(TASK_JSON).unwrap();
+        let report = client.collect(id).unwrap();
+        assert_eq!(report.name, "client-test");
+    }
+
+    #[test]
+    fn suite_submission() {
+        let mut coord = Coordinator::paper_testbed();
+        let mut client = Client::new(&mut coord);
+        let suite = format!("[{TASK_JSON}, {TASK_JSON}]");
+        let ids = client.submit_suite_json(&suite).unwrap();
+        assert_eq!(ids.len(), 2);
+        let out = client.collect_suite_json(&ids).unwrap();
+        let parsed = json::parse(&out).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rendered_report_contains_table() {
+        let mut coord = Coordinator::paper_testbed();
+        let mut client = Client::new(&mut coord);
+        let id = client.submit_json(TASK_JSON).unwrap();
+        let text = client.collect_rendered(id).unwrap();
+        assert!(text.contains("instance"));
+        assert!(text.contains("1g.6gb"));
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        let mut coord = Coordinator::paper_testbed();
+        let mut client = Client::new(&mut coord);
+        assert!(client.submit_json("{not json").is_err());
+        assert!(client.submit_suite_json("{}").is_err(), "suite must be array");
+    }
+}

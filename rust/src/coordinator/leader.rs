@@ -1,0 +1,273 @@
+//! Coordinator leader: task queue, routing and worker pool.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::mig::gpu::GpuModel;
+use crate::mig::topology::ServerSpec;
+use crate::profiler::report::BenchReport;
+use crate::profiler::session::ProfileSession;
+use crate::profiler::task::BenchTask;
+
+/// Task identifier assigned at submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskHandle(pub u64);
+
+/// Lifecycle of a submitted task.
+#[derive(Debug, Clone)]
+pub enum TaskStatus {
+    /// Queued or running on a worker.
+    Pending,
+    /// Finished with a report.
+    Done(std::sync::Arc<BenchReport>),
+    /// Failed with an error message.
+    Failed(String),
+}
+
+enum WorkerMsg {
+    Run(TaskHandle, BenchTask),
+    Shutdown,
+}
+
+struct Worker {
+    gpu: GpuModel,
+    tx: Sender<WorkerMsg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The coordinator leader.
+pub struct Coordinator {
+    workers: Vec<Worker>,
+    results_rx: Receiver<(TaskHandle, Result<BenchReport, String>)>,
+    results_tx: Sender<(TaskHandle, Result<BenchReport, String>)>,
+    statuses: BTreeMap<TaskHandle, TaskStatus>,
+    next_id: u64,
+    round_robin: usize,
+}
+
+impl Coordinator {
+    /// Coordinator over the given benchmark servers (one worker thread
+    /// per server).
+    pub fn new(servers: &[&'static ServerSpec]) -> Self {
+        let (results_tx, results_rx) = channel();
+        let workers = servers
+            .iter()
+            .map(|spec| {
+                let (tx, rx) = channel::<WorkerMsg>();
+                let results = results_tx.clone();
+                let name = spec.name;
+                let handle = std::thread::Builder::new()
+                    .name(format!("migperf-worker-{name}"))
+                    .spawn(move || worker_loop(rx, results))
+                    .expect("spawn worker");
+                Worker { gpu: spec.gpu_model, tx, handle: Some(handle) }
+            })
+            .collect();
+        Coordinator {
+            workers,
+            results_rx,
+            results_tx,
+            statuses: BTreeMap::new(),
+            next_id: 0,
+            round_robin: 0,
+        }
+    }
+
+    /// Coordinator over the paper's testbed (A100 + A30 servers).
+    pub fn paper_testbed() -> Self {
+        Coordinator::new(&[&crate::mig::topology::A100_SERVER, &crate::mig::topology::A30_SERVER])
+    }
+
+    /// Submit a task; it is routed to a worker whose server has the
+    /// matching GPU model (round-robin among matches). Errors immediately
+    /// if no server has that GPU.
+    pub fn submit(&mut self, task: BenchTask) -> Result<TaskHandle, String> {
+        let matches: Vec<usize> = self
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.gpu == task.gpu)
+            .map(|(i, _)| i)
+            .collect();
+        if matches.is_empty() {
+            return Err(format!("no benchmark server with GPU {:?}", task.gpu));
+        }
+        let target = matches[self.round_robin % matches.len()];
+        self.round_robin += 1;
+        let id = TaskHandle(self.next_id);
+        self.next_id += 1;
+        self.statuses.insert(id, TaskStatus::Pending);
+        self.workers[target]
+            .tx
+            .send(WorkerMsg::Run(id, task))
+            .map_err(|_| "worker thread died".to_string())?;
+        Ok(id)
+    }
+
+    fn drain_results(&mut self, block_for: Option<TaskHandle>) {
+        loop {
+            let pending_target = block_for
+                .map(|h| matches!(self.statuses.get(&h), Some(TaskStatus::Pending)))
+                .unwrap_or(false);
+            let msg = if pending_target {
+                match self.results_rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => None,
+                }
+            } else {
+                self.results_rx.try_recv().ok()
+            };
+            match msg {
+                Some((id, Ok(report))) => {
+                    self.statuses.insert(id, TaskStatus::Done(std::sync::Arc::new(report)));
+                }
+                Some((id, Err(e))) => {
+                    self.statuses.insert(id, TaskStatus::Failed(e));
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Non-blocking status query.
+    pub fn status(&mut self, id: TaskHandle) -> TaskStatus {
+        self.drain_results(None);
+        self.statuses.get(&id).cloned().unwrap_or(TaskStatus::Failed("unknown task".into()))
+    }
+
+    /// Block until a task finishes and return its report (or error).
+    pub fn wait(&mut self, id: TaskHandle) -> Result<std::sync::Arc<BenchReport>, String> {
+        self.drain_results(Some(id));
+        match self.statuses.get(&id) {
+            Some(TaskStatus::Done(r)) => Ok(r.clone()),
+            Some(TaskStatus::Failed(e)) => Err(e.clone()),
+            _ => Err("task did not complete".into()),
+        }
+    }
+
+    /// Wait for a batch of tasks, preserving order.
+    pub fn wait_all(
+        &mut self,
+        ids: &[TaskHandle],
+    ) -> Vec<Result<std::sync::Arc<BenchReport>, String>> {
+        ids.iter().map(|&id| self.wait(id)).collect()
+    }
+
+    /// Clone of the internal results sender (lets tests inject results).
+    #[doc(hidden)]
+    pub fn results_sender(&self) -> Sender<(TaskHandle, Result<BenchReport, String>)> {
+        self.results_tx.clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<WorkerMsg>,
+    results: Sender<(TaskHandle, Result<BenchReport, String>)>,
+) {
+    let session = ProfileSession::default();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Shutdown => break,
+            WorkerMsg::Run(id, task) => {
+                let outcome = session.run(&task).map_err(|e| e.to_string());
+                if results.send((id, outcome)).is_err() {
+                    break; // coordinator gone
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::task::SweepAxis;
+    use crate::workload::spec::WorkloadKind;
+
+    fn task(gpu: GpuModel, name: &str) -> BenchTask {
+        BenchTask {
+            name: name.into(),
+            gpu,
+            gi_profiles: vec![if gpu == GpuModel::A100_80GB { "1g.10gb" } else { "1g.6gb" }.into()],
+            model: "resnet18".into(),
+            kind: WorkloadKind::Inference,
+            batch: 4,
+            seq: 224,
+            sweep: SweepAxis::None,
+            iterations: 10,
+            layout: Default::default(),
+        }
+    }
+
+    #[test]
+    fn submits_and_completes() {
+        let mut c = Coordinator::paper_testbed();
+        let id = c.submit(task(GpuModel::A30_24GB, "t1")).unwrap();
+        let report = c.wait(id).unwrap();
+        assert_eq!(report.name, "t1");
+        assert_eq!(report.rows().len(), 1);
+    }
+
+    #[test]
+    fn routes_by_gpu_model() {
+        let mut c = Coordinator::paper_testbed();
+        let a = c.submit(task(GpuModel::A100_80GB, "a100")).unwrap();
+        let b = c.submit(task(GpuModel::A30_24GB, "a30")).unwrap();
+        let reports = c.wait_all(&[a, b]);
+        assert!(reports.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn unroutable_gpu_rejected() {
+        let mut c = Coordinator::new(&[&crate::mig::topology::A30_SERVER]);
+        assert!(c.submit(task(GpuModel::A100_80GB, "x")).is_err());
+    }
+
+    #[test]
+    fn failed_task_reports_error() {
+        let mut c = Coordinator::paper_testbed();
+        let mut t = task(GpuModel::A100_80GB, "bad");
+        t.gi_profiles = vec!["4g.40gb".into(), "3g.40gb".into()]; // excluded combo
+        t.layout = crate::profiler::task::LayoutMode::Concurrent;
+        let id = c.submit(t).unwrap();
+        let res = c.wait(id);
+        assert!(res.is_err());
+        // The controller's auto-placement finds no slot for 3g.40gb next
+        // to 4g.40gb (NVIDIA exclusion rule).
+        assert!(res.unwrap_err().contains("no valid placement"));
+    }
+
+    #[test]
+    fn status_transitions() {
+        let mut c = Coordinator::paper_testbed();
+        let id = c.submit(task(GpuModel::A30_24GB, "s")).unwrap();
+        let _ = c.wait(id);
+        assert!(matches!(c.status(id), TaskStatus::Done(_)));
+        assert!(matches!(c.status(TaskHandle(999)), TaskStatus::Failed(_)));
+    }
+
+    #[test]
+    fn many_tasks_in_parallel() {
+        let mut c = Coordinator::paper_testbed();
+        let ids: Vec<_> = (0..8)
+            .map(|i| c.submit(task(GpuModel::A30_24GB, &format!("t{i}"))).unwrap())
+            .collect();
+        let reports = c.wait_all(&ids);
+        assert_eq!(reports.len(), 8);
+        assert!(reports.iter().all(|r| r.is_ok()));
+    }
+}

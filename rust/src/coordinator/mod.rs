@@ -1,0 +1,19 @@
+//! Benchmark coordinator (paper Fig 1).
+//!
+//! "The system first accepts users' benchmarking tasks. Then it
+//! distributes the tasks to dedicated servers to complete them
+//! automatically. Finally, it will send a detailed report and guidelines
+//! back to users."
+//!
+//! The coordinator owns a pool of worker threads, one per benchmark
+//! server (the paper's A100 and A30 machines). Tasks are routed to the
+//! worker whose server has the matching GPU model; each worker runs a
+//! [`ProfileSession`] and sends the report back over a channel. The
+//! client half ([`client`]) is the user-facing handle that submits tasks
+//! and collects reports, mirroring the paper's remote-control client.
+
+pub mod client;
+pub mod leader;
+
+pub use client::Client;
+pub use leader::{Coordinator, TaskHandle, TaskStatus};

@@ -1,0 +1,174 @@
+//! Framework registry and the compatibility matrix (Tables 1–2).
+//!
+//! Each framework is modelled by how it discovers devices through the
+//! simulated CUDA runtime and how it reports the result. The quirk the
+//! paper records in Table 1 — PyTorch 1.13 reporting a *visible device
+//! count of 0* while still training fine on MIG 0 — comes from PyTorch
+//! counting only non-MIG devices in that version, and is reproduced here.
+
+use crate::mig::controller::MigController;
+use crate::mig::gpu::GpuModel;
+
+use super::cuda::{enumerate, ProcessEnv};
+
+/// Framework category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameworkKind {
+    /// Training framework (Table 1).
+    Training,
+    /// Serving framework (Table 2).
+    Serving,
+}
+
+/// A DL framework under compatibility test.
+#[derive(Debug, Clone)]
+pub struct Framework {
+    /// Name as reported in the paper.
+    pub name: &'static str,
+    /// Version the paper tested.
+    pub version: &'static str,
+    /// Training or serving.
+    pub kind: FrameworkKind,
+    /// Whether this framework's device-count API counts MIG devices.
+    /// (PyTorch 1.13's `torch.cuda.device_count()` returned 0 on MIG.)
+    counts_mig_devices: bool,
+}
+
+/// The paper's Table 1 frameworks.
+pub static TRAINING_FRAMEWORKS: &[Framework] = &[
+    Framework { name: "PyTorch", version: "1.13.0", kind: FrameworkKind::Training, counts_mig_devices: false },
+    Framework { name: "TensorFlow", version: "2.11.0", kind: FrameworkKind::Training, counts_mig_devices: true },
+    Framework { name: "MxNet", version: "1.9.1", kind: FrameworkKind::Training, counts_mig_devices: true },
+    Framework { name: "PaddlePaddle", version: "2.4.1", kind: FrameworkKind::Training, counts_mig_devices: true },
+];
+
+/// The paper's Table 2 frameworks.
+pub static SERVING_FRAMEWORKS: &[Framework] = &[
+    Framework { name: "TensorFlow Serving", version: "2.8.4", kind: FrameworkKind::Serving, counts_mig_devices: true },
+    Framework { name: "Triton Inference Server", version: "21.09", kind: FrameworkKind::Serving, counts_mig_devices: true },
+    Framework { name: "Ray Serve", version: "2.2.0", kind: FrameworkKind::Serving, counts_mig_devices: true },
+];
+
+/// Result of probing one framework against a MIG layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompatResult {
+    /// Framework name.
+    pub framework: &'static str,
+    /// Framework version.
+    pub version: &'static str,
+    /// What the framework's device-count API reports.
+    pub visible_device_count: u32,
+    /// Can it run a workload on MIG 0?
+    pub works_on_mig0: bool,
+    /// Can it run a workload on MIG 1 (without container binding)?
+    pub works_on_mig1: bool,
+}
+
+impl Framework {
+    /// Probe this framework on a host with the given GPU controllers.
+    pub fn probe(&self, controllers: &[&MigController]) -> CompatResult {
+        let devices = enumerate(controllers, &ProcessEnv::default());
+        let mig_devices: Vec<_> = devices.iter().filter(|d| d.mig_uuid.is_some()).collect();
+        let visible_device_count = if self.counts_mig_devices {
+            devices.len() as u32
+        } else {
+            // PyTorch 1.13 behaviour: MIG devices not counted.
+            (devices.len() - mig_devices.len()) as u32
+        };
+        // A workload runs on MIG k iff a default process can reach that
+        // instance: only ever MIG 0.
+        let works_on_mig0 = devices
+            .iter()
+            .any(|d| d.mig_uuid.as_deref().map(|u| u.contains("/0/")).unwrap_or(true));
+        let works_on_mig1 = devices
+            .iter()
+            .any(|d| d.mig_uuid.as_deref().map(|u| u.contains("/1/")).unwrap_or(false));
+        CompatResult {
+            framework: self.name,
+            version: self.version,
+            visible_device_count,
+            works_on_mig0,
+            works_on_mig1,
+        }
+    }
+}
+
+/// Build the paper's Table 1 setup: an A30 with two 1g.6gb GIs (CIs
+/// created), and probe every training framework.
+pub fn run_training_matrix() -> Vec<CompatResult> {
+    let ctl = two_gi_a30();
+    TRAINING_FRAMEWORKS.iter().map(|f| f.probe(&[&ctl])).collect()
+}
+
+/// Build the paper's Table 2 setup and probe every serving framework.
+pub fn run_serving_matrix() -> Vec<CompatResult> {
+    let ctl = two_gi_a30();
+    SERVING_FRAMEWORKS.iter().map(|f| f.probe(&[&ctl])).collect()
+}
+
+fn two_gi_a30() -> MigController {
+    let mut c = MigController::new(GpuModel::A30_24GB);
+    c.enable_mig().expect("fresh controller");
+    let a = c.create_instance("1g.6gb").expect("first GI");
+    let b = c.create_instance("1g.6gb").expect("second GI");
+    c.create_default_ci(a).expect("CI 0");
+    c.create_default_ci(b).expect("CI 1");
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape() {
+        let rows = run_training_matrix();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.works_on_mig0, "{} must train on MIG 0", r.framework);
+            assert!(!r.works_on_mig1, "{} must NOT see MIG 1", r.framework);
+        }
+    }
+
+    #[test]
+    fn table1_pytorch_counts_zero() {
+        // The paper's PyTorch row: visible device count 0, still trains.
+        let rows = run_training_matrix();
+        let pt = rows.iter().find(|r| r.framework == "PyTorch").unwrap();
+        assert_eq!(pt.visible_device_count, 0);
+        assert!(pt.works_on_mig0);
+    }
+
+    #[test]
+    fn table1_others_count_one() {
+        let rows = run_training_matrix();
+        for name in ["TensorFlow", "MxNet", "PaddlePaddle"] {
+            let r = rows.iter().find(|r| r.framework == name).unwrap();
+            assert_eq!(r.visible_device_count, 1, "{name}");
+        }
+    }
+
+    #[test]
+    fn table2_shape() {
+        let rows = run_serving_matrix();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.works_on_mig0, "{} must serve on MIG 0", r.framework);
+            assert!(!r.works_on_mig1, "{}: device not found on MIG 1", r.framework);
+        }
+    }
+
+    #[test]
+    fn versions_match_paper() {
+        assert!(TRAINING_FRAMEWORKS.iter().any(|f| f.name == "PyTorch" && f.version == "1.13.0"));
+        assert!(SERVING_FRAMEWORKS.iter().any(|f| f.name == "Triton Inference Server" && f.version == "21.09"));
+    }
+
+    #[test]
+    fn without_mig_framework_sees_whole_gpu() {
+        let ctl = MigController::new(GpuModel::A30_24GB);
+        let r = TRAINING_FRAMEWORKS[1].probe(&[&ctl]);
+        assert_eq!(r.visible_device_count, 1);
+        assert!(r.works_on_mig0, "whole GPU counts as usable");
+    }
+}

@@ -1,0 +1,181 @@
+//! Simulated CUDA runtime device enumeration on MIG.
+//!
+//! The key (and at the time of the paper, surprising) semantics:
+//!
+//! * with MIG **disabled**, each physical GPU enumerates as one device;
+//! * with MIG **enabled**, a process can address **at most one** MIG
+//!   compute instance — by default the first CI of the first GI
+//!   ("MIG 0"). Other GIs exist but are invisible to the process unless
+//!   `CUDA_VISIBLE_DEVICES` pins it to exactly one MIG UUID;
+//! * pinning to a MIG UUID makes *that* instance device 0 and hides
+//!   everything else.
+
+use crate::mig::controller::MigController;
+
+/// A device visible to one process, as the CUDA runtime would report it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VisibleDevice {
+    /// CUDA device ordinal within the process.
+    pub ordinal: u32,
+    /// Device name string.
+    pub name: String,
+    /// MIG UUID if this is a MIG instance.
+    pub mig_uuid: Option<String>,
+}
+
+/// Per-process CUDA environment (the subset that matters here).
+#[derive(Debug, Clone, Default)]
+pub struct ProcessEnv {
+    /// `CUDA_VISIBLE_DEVICES`, if set: either GPU ordinals or MIG UUIDs.
+    pub cuda_visible_devices: Option<String>,
+}
+
+/// Enumerate devices for a process, given the state of the GPU(s).
+///
+/// `controllers` is the host's GPU set (one controller per physical GPU).
+pub fn enumerate(controllers: &[&MigController], env: &ProcessEnv) -> Vec<VisibleDevice> {
+    // Explicit MIG-UUID pinning: expose exactly the named instances (CUDA
+    // actually honors only the first MIG UUID; we model that too).
+    if let Some(visible) = &env.cuda_visible_devices {
+        let mut out = Vec::new();
+        for token in visible.split(',').map(str::trim) {
+            if token.starts_with("MIG-") {
+                for ctl in controllers {
+                    for gi in ctl.list_instances() {
+                        if gi.uuid == token && !gi.compute_instances.is_empty() {
+                            out.push(VisibleDevice {
+                                ordinal: out.len() as u32,
+                                name: format!("{} ({})", ctl.model(), gi.profile.name),
+                                mig_uuid: Some(gi.uuid.clone()),
+                            });
+                        }
+                    }
+                }
+                // CUDA limitation: only the FIRST MIG device is usable.
+                if !out.is_empty() {
+                    return out.into_iter().take(1).collect();
+                }
+            } else if let Ok(ord) = token.parse::<usize>() {
+                if let Some(ctl) = controllers.get(ord) {
+                    out.extend(enumerate_one(ctl, out.len() as u32));
+                }
+            }
+        }
+        return out;
+    }
+    // Default: walk physical GPUs in order.
+    let mut out = Vec::new();
+    for ctl in controllers {
+        out.extend(enumerate_one(ctl, out.len() as u32));
+        // With MIG enabled anywhere, CUDA stops after the first MIG
+        // instance: a process cannot address more than one.
+        if ctl.mig_enabled() && !out.is_empty() {
+            return out;
+        }
+    }
+    out
+}
+
+fn enumerate_one(ctl: &MigController, base_ordinal: u32) -> Vec<VisibleDevice> {
+    if !ctl.mig_enabled() {
+        return vec![VisibleDevice {
+            ordinal: base_ordinal,
+            name: ctl.model().to_string(),
+            mig_uuid: None,
+        }];
+    }
+    // MIG on: only the first GI that has a CI is visible, as "MIG 0".
+    for gi in ctl.list_instances() {
+        if !gi.compute_instances.is_empty() {
+            return vec![VisibleDevice {
+                ordinal: base_ordinal,
+                name: format!("{} ({})", ctl.model(), gi.profile.name),
+                mig_uuid: Some(gi.uuid.clone()),
+            }];
+        }
+    }
+    Vec::new() // MIG on but no GI/CI: nothing to enumerate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::GpuModel;
+
+    fn two_gi_a30() -> MigController {
+        let mut c = MigController::new(GpuModel::A30_24GB);
+        c.enable_mig().unwrap();
+        let a = c.create_instance("1g.6gb").unwrap();
+        let b = c.create_instance("1g.6gb").unwrap();
+        c.create_default_ci(a).unwrap();
+        c.create_default_ci(b).unwrap();
+        c
+    }
+
+    #[test]
+    fn mig_disabled_enumerates_whole_gpu() {
+        let c = MigController::new(GpuModel::A30_24GB);
+        let devs = enumerate(&[&c], &ProcessEnv::default());
+        assert_eq!(devs.len(), 1);
+        assert!(devs[0].mig_uuid.is_none());
+    }
+
+    #[test]
+    fn paper_table1_only_mig0_visible() {
+        // Two GIs exist, but a default process sees at most MIG 0.
+        let c = two_gi_a30();
+        let devs = enumerate(&[&c], &ProcessEnv::default());
+        assert_eq!(devs.len(), 1, "only one MIG device per process");
+        let uuid = devs[0].mig_uuid.as_ref().unwrap();
+        assert!(uuid.contains("/0/"), "must be the first GI: {uuid}");
+    }
+
+    #[test]
+    fn pinning_reaches_mig1() {
+        let c = two_gi_a30();
+        let gi1_uuid = c.list_instances()[1].uuid.clone();
+        let env = ProcessEnv { cuda_visible_devices: Some(gi1_uuid.clone()) };
+        let devs = enumerate(&[&c], &env);
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].mig_uuid.as_deref(), Some(gi1_uuid.as_str()));
+    }
+
+    #[test]
+    fn pinning_two_uuids_only_first_usable() {
+        let c = two_gi_a30();
+        let u0 = c.list_instances()[0].uuid.clone();
+        let u1 = c.list_instances()[1].uuid.clone();
+        let env = ProcessEnv { cuda_visible_devices: Some(format!("{u0},{u1}")) };
+        let devs = enumerate(&[&c], &env);
+        assert_eq!(devs.len(), 1, "CUDA exposes only the first MIG instance");
+        assert_eq!(devs[0].mig_uuid.as_deref(), Some(u0.as_str()));
+    }
+
+    #[test]
+    fn gi_without_ci_is_invisible() {
+        let mut c = MigController::new(GpuModel::A30_24GB);
+        c.enable_mig().unwrap();
+        c.create_instance("1g.6gb").unwrap(); // no CI
+        let devs = enumerate(&[&c], &ProcessEnv::default());
+        assert!(devs.is_empty());
+    }
+
+    #[test]
+    fn multi_gpu_without_mig() {
+        let a = MigController::for_gpu(GpuModel::A30_24GB, 0);
+        let b = MigController::for_gpu(GpuModel::A30_24GB, 1);
+        let devs = enumerate(&[&a, &b], &ProcessEnv::default());
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[1].ordinal, 1);
+    }
+
+    #[test]
+    fn ordinal_selection() {
+        let a = MigController::for_gpu(GpuModel::A30_24GB, 0);
+        let b = MigController::for_gpu(GpuModel::A30_24GB, 1);
+        let env = ProcessEnv { cuda_visible_devices: Some("1".into()) };
+        let devs = enumerate(&[&a, &b], &env);
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].ordinal, 0, "pinned device becomes ordinal 0");
+    }
+}

@@ -1,0 +1,230 @@
+//! Container-binding workaround for MIG visibility (paper §4.6).
+//!
+//! The paper notes the one-MIG-device-per-process limit "can be initially
+//! addressed by utilizing docker techniques": bind one container to one GI
+//! via its MIG UUID. But reconfiguring then requires stopping containers,
+//! unbinding, resizing the GI and rebinding — this module models that
+//! lifecycle, including the friction the paper complains about (a bound
+//! GI cannot be destroyed or resized until its container stops).
+
+use std::collections::BTreeMap;
+
+use crate::mig::controller::{GiId, MigController, MigError};
+
+use super::cuda::{enumerate, ProcessEnv, VisibleDevice};
+
+/// A container bound to one GI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Container {
+    /// Container name.
+    pub name: String,
+    /// Bound GI.
+    pub gi: GiId,
+    /// MIG UUID baked into the container's environment.
+    pub mig_uuid: String,
+    /// Whether the container is running.
+    pub running: bool,
+}
+
+/// Errors from the container binding model.
+#[derive(Debug, thiserror::Error)]
+pub enum DockerError {
+    /// Name already used.
+    #[error("container '{0}' already exists")]
+    Duplicate(String),
+    /// Unknown container.
+    #[error("no such container '{0}'")]
+    NotFound(String),
+    /// The GI is still bound by a running container.
+    #[error("GPU instance {0:?} is bound by running container '{1}'")]
+    GiBusy(GiId, String),
+    /// Underlying MIG operation failed.
+    #[error(transparent)]
+    Mig(#[from] MigError),
+}
+
+/// Host-level orchestration of containers over one MIG GPU.
+#[derive(Debug, Default)]
+pub struct ContainerHost {
+    containers: BTreeMap<String, Container>,
+}
+
+impl ContainerHost {
+    /// Empty host.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind a new (running) container to a GI.
+    pub fn bind(
+        &mut self,
+        ctl: &MigController,
+        name: impl Into<String>,
+        gi: GiId,
+    ) -> Result<(), DockerError> {
+        let name = name.into();
+        if self.containers.contains_key(&name) {
+            return Err(DockerError::Duplicate(name));
+        }
+        let inst = ctl.instance(gi)?;
+        self.containers.insert(
+            name.clone(),
+            Container { name, gi, mig_uuid: inst.uuid.clone(), running: true },
+        );
+        Ok(())
+    }
+
+    /// Devices visible *inside* a container: exactly its bound GI.
+    pub fn devices_in(
+        &self,
+        ctl: &MigController,
+        name: &str,
+    ) -> Result<Vec<VisibleDevice>, DockerError> {
+        let c = self.containers.get(name).ok_or_else(|| DockerError::NotFound(name.into()))?;
+        let env = ProcessEnv { cuda_visible_devices: Some(c.mig_uuid.clone()) };
+        Ok(enumerate(&[ctl], &env))
+    }
+
+    /// Stop a container (frees its GI for reconfiguration).
+    pub fn stop(&mut self, name: &str) -> Result<(), DockerError> {
+        let c = self.containers.get_mut(name).ok_or_else(|| DockerError::NotFound(name.into()))?;
+        c.running = false;
+        Ok(())
+    }
+
+    /// Remove a stopped container.
+    pub fn remove(&mut self, name: &str) -> Result<(), DockerError> {
+        match self.containers.get(name) {
+            None => Err(DockerError::NotFound(name.into())),
+            Some(c) if c.running => Err(DockerError::GiBusy(c.gi, name.into())),
+            Some(_) => {
+                self.containers.remove(name);
+                Ok(())
+            }
+        }
+    }
+
+    /// Attempt to destroy a GI: refused while a running container binds
+    /// it (the paper's reconfiguration friction).
+    pub fn destroy_gi(&self, ctl: &mut MigController, gi: GiId) -> Result<(), DockerError> {
+        if let Some(c) = self.containers.values().find(|c| c.gi == gi && c.running) {
+            return Err(DockerError::GiBusy(gi, c.name.clone()));
+        }
+        // CIs must go first, mirroring nvidia-smi.
+        let cis: Vec<_> = ctl.instance(gi)?.compute_instances.iter().map(|c| c.id).collect();
+        for ci in cis {
+            ctl.destroy_compute_instance(gi, ci)?;
+        }
+        ctl.destroy_instance(gi)?;
+        Ok(())
+    }
+
+    /// The paper's full reconfiguration dance: stop container → destroy GI
+    /// → create new profile → rebind → (re)run. Returns the new GI.
+    pub fn reconfigure(
+        &mut self,
+        ctl: &mut MigController,
+        container: &str,
+        new_profile: &str,
+    ) -> Result<GiId, DockerError> {
+        let gi = self
+            .containers
+            .get(container)
+            .ok_or_else(|| DockerError::NotFound(container.into()))?
+            .gi;
+        self.stop(container)?;
+        self.destroy_gi(ctl, gi)?;
+        self.remove(container)?;
+        let new_gi = ctl.create_instance(new_profile)?;
+        ctl.create_default_ci(new_gi)?;
+        self.bind(ctl, container, new_gi)?;
+        Ok(new_gi)
+    }
+
+    /// Number of containers (any state).
+    pub fn len(&self) -> usize {
+        self.containers.len()
+    }
+
+    /// True when no containers exist.
+    pub fn is_empty(&self) -> bool {
+        self.containers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::GpuModel;
+
+    fn setup() -> (MigController, GiId, GiId) {
+        let mut ctl = MigController::new(GpuModel::A30_24GB);
+        ctl.enable_mig().unwrap();
+        let a = ctl.create_instance("1g.6gb").unwrap();
+        let b = ctl.create_instance("1g.6gb").unwrap();
+        ctl.create_default_ci(a).unwrap();
+        ctl.create_default_ci(b).unwrap();
+        (ctl, a, b)
+    }
+
+    #[test]
+    fn container_reaches_its_own_gi() {
+        // The paper's workaround: binding a container to GI 1 makes MIG 1
+        // usable.
+        let (ctl, _a, b) = setup();
+        let mut host = ContainerHost::new();
+        host.bind(&ctl, "serve-1", b).unwrap();
+        let devs = host.devices_in(&ctl, "serve-1").unwrap();
+        assert_eq!(devs.len(), 1);
+        assert!(devs[0].mig_uuid.as_deref().unwrap().contains("/1/"));
+    }
+
+    #[test]
+    fn gi_destroy_refused_while_bound() {
+        let (mut ctl, a, _b) = setup();
+        let mut host = ContainerHost::new();
+        host.bind(&ctl, "train-0", a).unwrap();
+        assert!(matches!(host.destroy_gi(&mut ctl, a), Err(DockerError::GiBusy(_, _))));
+        host.stop("train-0").unwrap();
+        host.destroy_gi(&mut ctl, a).unwrap();
+    }
+
+    #[test]
+    fn reconfigure_dance() {
+        let (mut ctl, a, b) = setup();
+        let mut host = ContainerHost::new();
+        host.bind(&ctl, "job", a).unwrap();
+        // Free the other GI so a bigger profile fits.
+        let cis: Vec<_> = ctl.instance(b).unwrap().compute_instances.iter().map(|c| c.id).collect();
+        for ci in cis {
+            ctl.destroy_compute_instance(b, ci).unwrap();
+        }
+        ctl.destroy_instance(b).unwrap();
+        let new_gi = host.reconfigure(&mut ctl, "job", "2g.12gb").unwrap();
+        let devs = host.devices_in(&ctl, "job").unwrap();
+        assert_eq!(devs.len(), 1);
+        assert!(devs[0].name.contains("2g.12gb"));
+        assert_eq!(ctl.instance(new_gi).unwrap().profile.name, "2g.12gb");
+    }
+
+    #[test]
+    fn duplicate_and_missing_names() {
+        let (ctl, a, _b) = setup();
+        let mut host = ContainerHost::new();
+        host.bind(&ctl, "x", a).unwrap();
+        assert!(matches!(host.bind(&ctl, "x", a), Err(DockerError::Duplicate(_))));
+        assert!(matches!(host.devices_in(&ctl, "y"), Err(DockerError::NotFound(_))));
+        assert!(matches!(host.stop("y"), Err(DockerError::NotFound(_))));
+    }
+
+    #[test]
+    fn remove_requires_stop() {
+        let (ctl, a, _b) = setup();
+        let mut host = ContainerHost::new();
+        host.bind(&ctl, "x", a).unwrap();
+        assert!(matches!(host.remove("x"), Err(DockerError::GiBusy(_, _))));
+        host.stop("x").unwrap();
+        host.remove("x").unwrap();
+        assert!(host.is_empty());
+    }
+}

@@ -1,0 +1,18 @@
+//! Framework-compatibility rig (paper §4.6, Tables 1–2).
+//!
+//! Reproduces the paper's finding that, on a 2-GI A30, every tested
+//! training and serving framework can only use the *first* MIG instance:
+//! the CUDA runtime exposes at most one MIG compute instance per process,
+//! so frameworks enumerate 0 or 1 devices and "MIG 1" is never reachable
+//! without container binding.
+//!
+//! [`cuda`] models the CUDA-runtime enumeration semantics; [`compat`]
+//! registers the paper's seven frameworks and runs the compatibility
+//! matrix; [`docker`] models the container-binding workaround (and its
+//! reconfiguration friction) the paper describes.
+
+pub mod compat;
+pub mod cuda;
+pub mod docker;
+
+pub use compat::{run_serving_matrix, run_training_matrix, CompatResult, Framework};

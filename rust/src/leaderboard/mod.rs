@@ -1,0 +1,258 @@
+//! Benchmark leaderboard.
+//!
+//! The paper maintains "a public leaderboard to continuously update the
+//! recent benchmark studies on MIG" (§2.1). This module is that
+//! leaderboard's engine: a persistent store of submitted run summaries
+//! keyed by (model, workload, GPU, instance), with ranking queries and a
+//! markdown renderer for publication.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::metrics::collector::RunSummary;
+use crate::metrics::export::summary_to_json;
+use crate::util::json::{self, Json};
+use crate::util::table::{fmt_num, Table};
+
+/// One leaderboard submission.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Submitter identity (free-form).
+    pub submitter: String,
+    /// Model benchmarked.
+    pub model: String,
+    /// `training` or `inference`.
+    pub workload: String,
+    /// GPU + instance, e.g. `a100/1g.10gb`.
+    pub device: String,
+    /// Batch size used.
+    pub batch: u32,
+    /// The measured summary.
+    pub summary: RunSummary,
+}
+
+/// The leaderboard store.
+#[derive(Debug, Default)]
+pub struct Leaderboard {
+    entries: Vec<Entry>,
+}
+
+/// Ranking metric for queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rank {
+    /// Higher throughput is better.
+    Throughput,
+    /// Lower p99 latency is better.
+    TailLatency,
+    /// Lower energy is better.
+    Energy,
+}
+
+impl Leaderboard {
+    /// Empty leaderboard.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit an entry.
+    pub fn submit(&mut self, entry: Entry) {
+        self.entries.push(entry);
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entries exist.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries for a (model, workload) pair, best-first under `rank`.
+    pub fn ranking(&self, model: &str, workload: &str, rank: Rank) -> Vec<&Entry> {
+        let mut rows: Vec<&Entry> = self
+            .entries
+            .iter()
+            .filter(|e| e.model == model && e.workload == workload)
+            .collect();
+        rows.sort_by(|a, b| {
+            let key = |e: &Entry| match rank {
+                Rank::Throughput => -e.summary.throughput,
+                Rank::TailLatency => e.summary.p99_latency_ms,
+                Rank::Energy => e.summary.energy_j,
+            };
+            key(a).partial_cmp(&key(b)).unwrap()
+        });
+        rows
+    }
+
+    /// Distinct (model, workload) boards present.
+    pub fn boards(&self) -> Vec<(String, String)> {
+        let mut set = BTreeMap::new();
+        for e in &self.entries {
+            set.insert((e.model.clone(), e.workload.clone()), ());
+        }
+        set.into_keys().collect()
+    }
+
+    /// Render one board as a markdown table.
+    pub fn render_markdown(&self, model: &str, workload: &str, rank: Rank) -> String {
+        let mut t = Table::new(&["#", "device", "batch", "tput", "p99_ms", "energy_j", "submitter"]);
+        for (i, e) in self.ranking(model, workload, rank).iter().enumerate() {
+            t.row(&[
+                (i + 1).to_string(),
+                e.device.clone(),
+                e.batch.to_string(),
+                fmt_num(e.summary.throughput),
+                fmt_num(e.summary.p99_latency_ms),
+                fmt_num(e.summary.energy_j),
+                e.submitter.clone(),
+            ]);
+        }
+        format!("## {model} / {workload}\n\n{}", t.render())
+    }
+
+    /// Serialize the whole leaderboard to JSON.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("submitter", e.submitter.as_str().into()),
+                    ("model", e.model.as_str().into()),
+                    ("workload", e.workload.as_str().into()),
+                    ("device", e.device.as_str().into()),
+                    ("batch", (e.batch as i64).into()),
+                    ("summary", summary_to_json(&e.summary)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("entries", Json::Arr(entries))])
+    }
+
+    /// Persist to a JSON file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    /// Load from a JSON file previously written by [`save`](Self::save).
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let v = json::parse(&text).map_err(|e| e.to_string())?;
+        let mut lb = Leaderboard::new();
+        for e in v.get("entries").and_then(Json::as_arr).ok_or("missing entries")? {
+            let s = e.get("summary").ok_or("missing summary")?;
+            let f = |k: &str| s.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            lb.submit(Entry {
+                submitter: e.get("submitter").and_then(Json::as_str).unwrap_or("?").into(),
+                model: e.get("model").and_then(Json::as_str).ok_or("missing model")?.into(),
+                workload: e.get("workload").and_then(Json::as_str).ok_or("missing workload")?.into(),
+                device: e.get("device").and_then(Json::as_str).unwrap_or("?").into(),
+                batch: e.get("batch").and_then(Json::as_i64).unwrap_or(0) as u32,
+                summary: RunSummary {
+                    label: s.get("label").and_then(Json::as_str).unwrap_or("").into(),
+                    completed: f("completed") as u64,
+                    avg_latency_ms: f("avg_latency_ms"),
+                    std_latency_ms: f("std_latency_ms"),
+                    p50_latency_ms: f("p50_latency_ms"),
+                    p99_latency_ms: f("p99_latency_ms"),
+                    max_latency_ms: f("max_latency_ms"),
+                    throughput: f("throughput"),
+                    mean_gract: f("mean_gract"),
+                    peak_fb_mib: f("peak_fb_mib"),
+                    energy_j: f("energy_j"),
+                    duration_s: f("duration_s"),
+                },
+            });
+        }
+        Ok(lb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(device: &str, tput: f64, p99: f64) -> Entry {
+        Entry {
+            submitter: "migperf".into(),
+            model: "bert-base".into(),
+            workload: "inference".into(),
+            device: device.into(),
+            batch: 8,
+            summary: RunSummary {
+                label: device.into(),
+                completed: 100,
+                avg_latency_ms: p99 * 0.6,
+                std_latency_ms: 0.1,
+                p50_latency_ms: p99 * 0.5,
+                p99_latency_ms: p99,
+                max_latency_ms: p99 * 1.2,
+                throughput: tput,
+                mean_gract: 0.8,
+                peak_fb_mib: 1000.0,
+                energy_j: 100.0 / tput,
+                duration_s: 1.0,
+            },
+        }
+    }
+
+    #[test]
+    fn ranking_orders_by_metric() {
+        let mut lb = Leaderboard::new();
+        lb.submit(entry("a100/1g.10gb", 100.0, 10.0));
+        lb.submit(entry("a100/7g.80gb", 700.0, 2.0));
+        lb.submit(entry("a30/1g.6gb", 60.0, 14.0));
+        let by_tput = lb.ranking("bert-base", "inference", Rank::Throughput);
+        assert_eq!(by_tput[0].device, "a100/7g.80gb");
+        assert_eq!(by_tput[2].device, "a30/1g.6gb");
+        let by_tail = lb.ranking("bert-base", "inference", Rank::TailLatency);
+        assert_eq!(by_tail[0].device, "a100/7g.80gb");
+        let by_energy = lb.ranking("bert-base", "inference", Rank::Energy);
+        assert_eq!(by_energy[0].device, "a100/7g.80gb");
+    }
+
+    #[test]
+    fn boards_deduplicate() {
+        let mut lb = Leaderboard::new();
+        lb.submit(entry("x", 1.0, 1.0));
+        lb.submit(entry("y", 2.0, 2.0));
+        assert_eq!(lb.boards(), vec![("bert-base".to_string(), "inference".to_string())]);
+    }
+
+    #[test]
+    fn markdown_contains_ranks() {
+        let mut lb = Leaderboard::new();
+        lb.submit(entry("a100/7g.80gb", 700.0, 2.0));
+        lb.submit(entry("a100/1g.10gb", 100.0, 10.0));
+        let md = lb.render_markdown("bert-base", "inference", Rank::Throughput);
+        assert!(md.contains("## bert-base / inference"));
+        let pos7 = md.find("7g.80gb").unwrap();
+        let pos1 = md.find("1g.10gb").unwrap();
+        assert!(pos7 < pos1, "7g must rank first");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut lb = Leaderboard::new();
+        lb.submit(entry("a100/3g.40gb", 300.0, 4.0));
+        let dir = std::env::temp_dir().join("migperf-lb-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("board.json");
+        lb.save(&path).unwrap();
+        let back = Leaderboard::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        let e = &back.ranking("bert-base", "inference", Rank::Throughput)[0];
+        assert_eq!(e.device, "a100/3g.40gb");
+        assert!((e.summary.throughput - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_board_is_empty() {
+        let lb = Leaderboard::new();
+        assert!(lb.ranking("gpt", "inference", Rank::Throughput).is_empty());
+        assert!(lb.is_empty());
+    }
+}

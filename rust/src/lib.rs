@@ -1,0 +1,51 @@
+//! # MIGPerf
+//!
+//! A comprehensive benchmark framework for deep-learning training and
+//! inference workloads on Multi-Instance GPUs (MIG), reproducing
+//! *MIGPerf: A Comprehensive Benchmark for Deep Learning Training and
+//! Inference Workloads on Multi-Instance GPUs* (Zhang et al., 2023) as a
+//! three-layer rust + JAX + Pallas system.
+//!
+//! ## Architecture
+//!
+//! - **L3 (this crate)** — the MIGPerf system itself: MIG controller,
+//!   profiler, metrics pipeline, GPU-sharing comparison (MIG vs MPS),
+//!   framework-compatibility rig and the benchmark coordinator.
+//! - **L2 (`python/compile/model.py`)** — JAX models (tiny BERT/ResNet)
+//!   AOT-lowered to HLO text artifacts at build time.
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels (fused attention,
+//!   fused linear) called from the L2 graphs.
+//!
+//! The request path is pure rust: `runtime::` loads the HLO artifacts into
+//! a PJRT CPU client and executes them; `simgpu::` scales the measured and
+//! analytic costs onto simulated A100/A30 GPU instances.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use migperf::mig::{controller::MigController, gpu::GpuModel};
+//!
+//! let mut ctl = MigController::new(GpuModel::A100_80GB);
+//! ctl.enable_mig().unwrap();
+//! let gi = ctl.create_instance("1g.10gb").unwrap();
+//! println!("created GI {gi:?}");
+//! ```
+
+pub mod coordinator;
+pub mod frameworks;
+pub mod leaderboard;
+pub mod metrics;
+pub mod mig;
+pub mod models;
+pub mod profiler;
+pub mod runtime;
+pub mod scheduler;
+pub mod sharing;
+pub mod simgpu;
+pub mod util;
+pub mod workload;
+
+/// Crate version (from Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

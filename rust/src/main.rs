@@ -1,0 +1,376 @@
+//! `migperf` CLI: partition GPUs, run benchmarks, compare sharing modes,
+//! probe framework compatibility, export results.
+
+use std::process::ExitCode;
+
+use migperf::coordinator::{Client, Coordinator};
+use migperf::frameworks::{run_serving_matrix, run_training_matrix};
+use migperf::metrics::export;
+use migperf::mig::controller::MigController;
+use migperf::mig::gpu::GpuModel;
+use migperf::models::zoo;
+use migperf::profiler::session::ProfileSession;
+use migperf::profiler::task::{BenchTask, SweepAxis};
+use migperf::util::argparse::{render_help, Args, OptSpec};
+use migperf::util::table::Table;
+use migperf::workload::spec::WorkloadKind;
+
+const BOOL_FLAGS: &[&str] = &["help", "json", "csv", "real"];
+
+fn main() -> ExitCode {
+    let args = match Args::parse(std::env::args().skip(1), BOOL_FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("partition") => cmd_partition(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("compat") => cmd_compat(&args),
+        Some("profiles") => cmd_profiles(&args),
+        Some("suite") => cmd_suite(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("layouts") => cmd_layouts(&args),
+        Some("version") => {
+            println!("migperf {}", migperf::version());
+            Ok(())
+        }
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "migperf {} — MIG benchmark framework\n\n\
+         USAGE:\n  migperf <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n  \
+         partition   validate and show a MIG partition layout\n  \
+         profiles    list GI profiles for a GPU model\n  \
+         bench       run a training/inference benchmark sweep\n  \
+         compat      framework compatibility matrix (paper Tables 1–2)\n  \
+         suite       run a JSON task suite through the coordinator\n  \
+         layouts     enumerate all valid maximal MIG layouts\n  \
+         plan        optimize a hybrid train+serve partition (paper §5)\n  \
+         version     print the version\n\n\
+         Run `migperf <COMMAND> --help` for command options.",
+        migperf::version()
+    );
+}
+
+fn parse_gpu(args: &Args) -> Result<GpuModel, String> {
+    let name = args.str_or("gpu", "a100");
+    GpuModel::parse(&name).ok_or_else(|| format!("unknown GPU '{name}' (use a100 or a30)"))
+}
+
+fn cmd_profiles(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help("migperf", "profiles", "List GI profiles for a GPU model", &[OptSpec {
+                name: "gpu",
+                value: "MODEL",
+                help: "GPU model (a100 | a30)",
+                default: Some("a100"),
+            }])
+        );
+        return Ok(());
+    }
+    let gpu = parse_gpu(args)?;
+    let mut t = Table::new(&["profile", "compute", "memory_gib", "max_count", "placements"]);
+    for p in migperf::mig::profile::profiles_for(gpu) {
+        t.row(&[
+            p.name.to_string(),
+            p.slice_notation(gpu),
+            format!("{:.2}", p.memory_gib),
+            p.max_count.to_string(),
+            format!("{:?}", p.placements),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help("migperf", "partition", "Validate and show a MIG partition", &[
+                OptSpec { name: "gpu", value: "MODEL", help: "GPU model", default: Some("a100") },
+                OptSpec {
+                    name: "gi",
+                    value: "P1,P2,...",
+                    help: "comma-separated GI profiles to create",
+                    default: Some("1g.10gb"),
+                },
+            ])
+        );
+        return Ok(());
+    }
+    let gpu = parse_gpu(args)?;
+    let profiles: Vec<String> =
+        args.str_or("gi", "1g.10gb").split(',').map(str::to_string).collect();
+    let mut ctl = MigController::new(gpu);
+    ctl.enable_mig().map_err(|e| e.to_string())?;
+    for p in &profiles {
+        ctl.create_instance(p).map_err(|e| e.to_string())?;
+    }
+    let mut t = Table::new(&["gi", "profile", "slices", "memory_gib", "uuid"]);
+    for gi in ctl.list_instances() {
+        t.row(&[
+            format!("{}", gi.id.0),
+            gi.profile.name.to_string(),
+            gi.profile.slice_notation(gpu),
+            format!("{:.2}", gi.profile.memory_gib),
+            gi.uuid.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    let avail: Vec<&str> = ctl.available_profiles().iter().map(|p| p.name).collect();
+    println!("still placeable: {avail:?}");
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help("migperf", "bench", "Run a benchmark sweep on MIG instances", &[
+                OptSpec { name: "gpu", value: "MODEL", help: "GPU model", default: Some("a100") },
+                OptSpec { name: "model", value: "NAME", help: "model from the zoo", default: Some("bert-base") },
+                OptSpec { name: "kind", value: "K", help: "training | inference", default: Some("inference") },
+                OptSpec { name: "gi", value: "P1,P2", help: "GI profiles (one instance each)", default: Some("1g.10gb,7g.80gb") },
+                OptSpec { name: "batch", value: "B1,B2", help: "batch-size sweep", default: Some("1,8,32") },
+                OptSpec { name: "seq", value: "S", help: "sequence length", default: Some("128") },
+                OptSpec { name: "iters", value: "N", help: "steps/requests per point", default: Some("100") },
+                OptSpec { name: "json", value: "", help: "emit JSON instead of a table", default: None },
+                OptSpec { name: "csv", value: "", help: "emit CSV instead of a table", default: None },
+                OptSpec { name: "leaderboard", value: "FILE", help: "append results to a leaderboard JSON and print rankings", default: None },
+            ])
+        );
+        return Ok(());
+    }
+    let gpu = parse_gpu(args)?;
+    let model = args.str_or("model", "bert-base");
+    if zoo::lookup(&model).is_none() {
+        let names: Vec<&str> = zoo::ZOO.iter().map(|m| m.name).collect();
+        return Err(format!("unknown model '{model}'; available: {names:?}"));
+    }
+    let kind = match args.str_or("kind", "inference").as_str() {
+        "training" | "train" => WorkloadKind::Training,
+        "inference" | "infer" => WorkloadKind::Inference,
+        other => return Err(format!("unknown kind '{other}'")),
+    };
+    let default_gi = match gpu {
+        GpuModel::A100_80GB => "1g.10gb,7g.80gb",
+        GpuModel::A30_24GB => "1g.6gb,4g.24gb",
+    };
+    let gi_profiles: Vec<String> =
+        args.str_or("gi", default_gi).split(',').map(str::to_string).collect();
+    let batches = args.list_or("batch", &[1u32, 8, 32]).map_err(|e| e.to_string())?;
+    let task = BenchTask {
+        name: format!("{model}-{:?}", kind).to_lowercase(),
+        gpu,
+        gi_profiles,
+        model,
+        kind,
+        batch: batches[0],
+        seq: args.parse_or("seq", 128u32).map_err(|e| e.to_string())?,
+        sweep: SweepAxis::Batch(batches),
+        iterations: args.parse_or("iters", 100u64).map_err(|e| e.to_string())?,
+        layout: Default::default(),
+    };
+    let report = ProfileSession::default().run(&task).map_err(|e| e.to_string())?;
+    if let Some(board_path) = args.get("leaderboard") {
+        use migperf::leaderboard::{Entry, Leaderboard, Rank};
+        let path = std::path::Path::new(board_path);
+        let mut board = if path.exists() {
+            Leaderboard::load(path)?
+        } else {
+            Leaderboard::new()
+        };
+        let workload = match task.kind {
+            WorkloadKind::Training => "training",
+            WorkloadKind::Inference => "inference",
+        };
+        for r in report.rows().iter().filter(|r| r.skipped.is_none()) {
+            board.submit(Entry {
+                submitter: "migperf-cli".into(),
+                model: task.model.clone(),
+                workload: workload.into(),
+                device: format!("{}/{}", args.str_or("gpu", "a100"), r.instance),
+                batch: r.batch,
+                summary: r.summary.clone(),
+            });
+        }
+        board.save(path).map_err(|e| e.to_string())?;
+        println!("{}", board.render_markdown(&task.model, workload, Rank::Throughput));
+    }
+    if args.flag("json") {
+        println!("{}", report.to_json().to_pretty());
+    } else if args.flag("csv") {
+        let rows: Vec<_> = report.rows().iter().map(|r| r.summary.clone()).collect();
+        print!("{}", export::summaries_to_csv(&rows));
+    } else {
+        println!("{}", report.render_table());
+    }
+    Ok(())
+}
+
+fn cmd_compat(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!("Reproduce the paper's framework-compatibility matrix (Tables 1–2).");
+        return Ok(());
+    }
+    let mut t1 = Table::new(&["Training framework", "Version", "Visible device count", "Training on MIG 0", "Training on MIG 1"]);
+    for r in run_training_matrix() {
+        t1.row(&[
+            r.framework.to_string(),
+            r.version.to_string(),
+            r.visible_device_count.to_string(),
+            if r.works_on_mig0 { "Yes" } else { "No" }.to_string(),
+            if r.works_on_mig1 { "Yes" } else { "No device" }.to_string(),
+        ]);
+    }
+    println!("Table 1. Training framework compatibility with MIG.\n{}", t1.render());
+    let mut t2 = Table::new(&["Serving framework", "Version", "Serving on MIG 0", "Serving on MIG 1"]);
+    for r in run_serving_matrix() {
+        t2.row(&[
+            r.framework.to_string(),
+            r.version.to_string(),
+            if r.works_on_mig0 { "Yes" } else { "No" }.to_string(),
+            if r.works_on_mig1 { "Yes" } else { "Device not found" }.to_string(),
+        ]);
+    }
+    println!("Table 2. Serving framework compatibility with MIG.\n{}", t2.render());
+    Ok(())
+}
+
+fn cmd_layouts(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!("Enumerate every valid maximal MIG layout for --gpu (a100|a30).");
+        return Ok(());
+    }
+    let gpu = parse_gpu(args)?;
+    let layouts = migperf::mig::enumerate::maximal_layouts(gpu);
+    let mut t = Table::new(&["#", "layout", "instances", "compute slices"]);
+    for (i, l) in layouts.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            l.profile_names().join(" + "),
+            l.len().to_string(),
+            format!("{}/{}", l.compute_slices(), gpu.spec().compute_slices),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{} maximal layouts on {}", layouts.len(), gpu);
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help("migperf", "plan", "Optimize a hybrid train+serve MIG partition", &[
+                OptSpec { name: "gpu", value: "MODEL", help: "GPU model", default: Some("a100") },
+                OptSpec { name: "train", value: "MODEL:BATCH", help: "training workload", default: Some("bert-base:32") },
+                OptSpec { name: "serve", value: "MODEL:BATCH:SLO_MS,...", help: "inference services", default: Some("resnet50:4:15,resnet50:4:15") },
+                OptSpec { name: "objective", value: "O", help: "throughput | energy", default: Some("throughput") },
+            ])
+        );
+        return Ok(());
+    }
+    use migperf::scheduler::{Objective, Scheduler, SloWorkload};
+    use migperf::workload::spec::WorkloadSpec;
+    let gpu = parse_gpu(args)?;
+    let mut workloads = Vec::new();
+    let parse_model = |name: &str| {
+        zoo::lookup(name).ok_or_else(|| format!("unknown model '{name}'"))
+    };
+    let train = args.str_or("train", "bert-base:32");
+    if !train.is_empty() && train != "none" {
+        let (m, b) = train.split_once(':').ok_or("train format: MODEL:BATCH")?;
+        let batch: u32 = b.parse().map_err(|_| "bad train batch")?;
+        workloads.push(SloWorkload::best_effort(WorkloadSpec::training(parse_model(m)?, batch, 128)));
+    }
+    for svc in args.str_or("serve", "resnet50:4:15,resnet50:4:15").split(',').filter(|s| !s.is_empty()) {
+        let parts: Vec<&str> = svc.split(':').collect();
+        if parts.len() != 3 {
+            return Err("serve format: MODEL:BATCH:SLO_MS".into());
+        }
+        let batch: u32 = parts[1].parse().map_err(|_| "bad serve batch")?;
+        let slo: f64 = parts[2].parse().map_err(|_| "bad SLO")?;
+        workloads.push(SloWorkload::with_slo(
+            WorkloadSpec::inference(parse_model(parts[0])?, batch, 224),
+            slo,
+        ));
+    }
+    let objective = match args.str_or("objective", "throughput").as_str() {
+        "throughput" => Objective::MaxThroughput,
+        "energy" => Objective::MinEnergy,
+        o => return Err(format!("unknown objective '{o}'")),
+    };
+    let sched = Scheduler::new(gpu);
+    match sched.plan(&workloads, objective) {
+        None => {
+            println!("no feasible plan: SLOs or memory cannot be satisfied on {gpu}");
+            Err("infeasible".into())
+        }
+        Some(plan) => {
+            println!("layout: {:?}\n", plan.layout);
+            let mut t =
+                Table::new(&["workload", "profile", "latency_ms", "tput", "goodput", "power_w"]);
+            for a in &plan.assignments {
+                let w = &workloads[a.workload];
+                t.row(&[
+                    w.spec.label()
+                        + &w.slo_ms.map(|s| format!(" (SLO {s}ms)")).unwrap_or_default(),
+                    a.profile.to_string(),
+                    format!("{:.2}", a.latency_ms),
+                    format!("{:.1}", a.throughput),
+                    format!("{:.1}", a.goodput),
+                    format!("{:.1}", a.power_w),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_suite(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help("migperf", "suite", "Run a JSON task suite through the coordinator", &[
+                OptSpec { name: "file", value: "PATH", help: "JSON file: array of tasks", default: None },
+                OptSpec { name: "json", value: "", help: "emit JSON reports", default: None },
+            ])
+        );
+        return Ok(());
+    }
+    let path = args.required("file").map_err(|e| e.to_string())?;
+    let doc = std::fs::read_to_string(&path).map_err(|e| format!("reading {path}: {e}"))?;
+    let mut coord = Coordinator::paper_testbed();
+    let mut client = Client::new(&mut coord);
+    let ids = client.submit_suite_json(&doc)?;
+    if args.flag("json") {
+        println!("{}", client.collect_suite_json(&ids)?);
+    } else {
+        for id in ids {
+            println!("{}", client.collect_rendered(id)?);
+        }
+    }
+    Ok(())
+}

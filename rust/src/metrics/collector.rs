@@ -1,0 +1,203 @@
+//! Run-level metrics aggregation.
+//!
+//! One [`MetricsCollector`] accompanies each profiling run: the workload
+//! driver feeds it per-request/per-step observations plus DCGM samples,
+//! and `summarize` reduces everything to the quantities the paper reports
+//! (average latency, p99 tail latency, throughput, mean GRACT, peak FB,
+//! total energy).
+
+use crate::util::stats::{LatencyHistogram, Moments};
+use crate::util::timeseries::SeriesSet;
+
+/// Aggregated outcome of one profiling run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    /// Label of the run (model / instance / mode).
+    pub label: String,
+    /// Requests or steps completed.
+    pub completed: u64,
+    /// Average latency, milliseconds.
+    pub avg_latency_ms: f64,
+    /// Latency standard deviation, milliseconds.
+    pub std_latency_ms: f64,
+    /// 50th percentile latency, milliseconds.
+    pub p50_latency_ms: f64,
+    /// 99th percentile latency, milliseconds.
+    pub p99_latency_ms: f64,
+    /// Maximum observed latency, milliseconds.
+    pub max_latency_ms: f64,
+    /// Samples (or requests) per second over the measured window.
+    pub throughput: f64,
+    /// Mean graphics-engine activity, 0..1.
+    pub mean_gract: f64,
+    /// Peak frame-buffer use, MiB.
+    pub peak_fb_mib: f64,
+    /// Total energy, joules.
+    pub energy_j: f64,
+    /// Measured window length, seconds (simulated time).
+    pub duration_s: f64,
+}
+
+/// Streaming collector for one run.
+#[derive(Debug)]
+pub struct MetricsCollector {
+    label: String,
+    latency: LatencyHistogram,
+    latency_moments: Moments,
+    samples_done: u64,
+    start_t: f64,
+    end_t: f64,
+    energy_j: f64,
+    gract: Moments,
+    peak_fb_bytes: f64,
+    series: SeriesSet,
+}
+
+impl MetricsCollector {
+    /// New collector with a run label.
+    pub fn new(label: impl Into<String>) -> Self {
+        MetricsCollector {
+            label: label.into(),
+            latency: LatencyHistogram::for_latency_ms(),
+            latency_moments: Moments::new(),
+            samples_done: 0,
+            start_t: f64::INFINITY,
+            end_t: 0.0,
+            energy_j: 0.0,
+            gract: Moments::new(),
+            peak_fb_bytes: 0.0,
+            series: SeriesSet::new(),
+        }
+    }
+
+    /// Record one completed request/step.
+    ///
+    /// `t` — completion time on the run clock; `latency_ms` — request
+    /// latency; `samples` — samples it carried (batch size for steps, 1
+    /// for single requests).
+    pub fn record_completion(&mut self, t: f64, latency_ms: f64, samples: u64) {
+        self.latency.record(latency_ms);
+        self.latency_moments.record(latency_ms);
+        self.samples_done += samples;
+        self.start_t = self.start_t.min(t - latency_ms / 1e3);
+        self.end_t = self.end_t.max(t);
+    }
+
+    /// Record an energy increment (joules).
+    pub fn record_energy(&mut self, joules: f64) {
+        self.energy_j += joules;
+    }
+
+    /// Record an instantaneous GRACT observation.
+    pub fn record_gract(&mut self, gract: f64) {
+        self.gract.record(gract);
+    }
+
+    /// Record a frame-buffer residency observation (bytes).
+    pub fn record_fb(&mut self, bytes: f64) {
+        self.peak_fb_bytes = self.peak_fb_bytes.max(bytes);
+    }
+
+    /// Attach the DCGM series collected alongside (kept for export).
+    pub fn attach_series(&mut self, set: SeriesSet) {
+        self.series.extend(set);
+    }
+
+    /// Collected time series (DCGM samples etc.).
+    pub fn series(&self) -> &SeriesSet {
+        &self.series
+    }
+
+    /// Requests recorded so far.
+    pub fn completions(&self) -> u64 {
+        self.latency.count()
+    }
+
+    /// Reduce to the run summary.
+    pub fn summarize(&self) -> RunSummary {
+        let duration = (self.end_t - self.start_t).max(0.0);
+        RunSummary {
+            label: self.label.clone(),
+            completed: self.latency.count(),
+            avg_latency_ms: self.latency.mean(),
+            std_latency_ms: self.latency_moments.stddev(),
+            p50_latency_ms: self.latency.percentile(50.0),
+            p99_latency_ms: self.latency.percentile(99.0),
+            max_latency_ms: self.latency.max(),
+            throughput: if duration > 0.0 { self.samples_done as f64 / duration } else { 0.0 },
+            mean_gract: self.gract.mean(),
+            peak_fb_mib: self.peak_fb_bytes / (1u64 << 20) as f64,
+            energy_j: self.energy_j,
+            duration_s: duration,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_uniform_run() {
+        let mut c = MetricsCollector::new("test");
+        // 100 requests, 10 ms each, one per 10 ms of sim time.
+        for i in 0..100u64 {
+            let t = (i + 1) as f64 * 0.010;
+            c.record_completion(t, 10.0, 1);
+        }
+        let s = c.summarize();
+        assert_eq!(s.completed, 100);
+        assert!((s.avg_latency_ms - 10.0).abs() < 0.2);
+        assert!((s.p99_latency_ms - 10.0).abs() / 10.0 < 0.03);
+        // 100 samples over ~1 s.
+        assert!((s.throughput - 100.0).abs() < 2.0, "tput={}", s.throughput);
+    }
+
+    #[test]
+    fn tail_latency_captured() {
+        let mut c = MetricsCollector::new("tail");
+        for i in 0..1000u64 {
+            // 2% of requests are slow → p99 must land in the tail.
+            let lat = if i % 50 == 0 { 100.0 } else { 5.0 };
+            c.record_completion(i as f64 * 0.01, lat, 1);
+        }
+        let s = c.summarize();
+        assert!(s.p50_latency_ms < 6.0);
+        assert!(s.p99_latency_ms > 50.0, "p99={}", s.p99_latency_ms);
+        assert_eq!(s.max_latency_ms, 100.0);
+    }
+
+    #[test]
+    fn energy_and_gract_and_fb() {
+        let mut c = MetricsCollector::new("e");
+        c.record_energy(50.0);
+        c.record_energy(25.0);
+        c.record_gract(0.4);
+        c.record_gract(0.8);
+        c.record_fb(2.0 * (1u64 << 30) as f64);
+        c.record_fb(1.0 * (1u64 << 30) as f64);
+        let s = c.summarize();
+        assert_eq!(s.energy_j, 75.0);
+        assert!((s.mean_gract - 0.6).abs() < 1e-12);
+        assert!((s.peak_fb_mib - 2048.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_is_safe() {
+        let s = MetricsCollector::new("empty").summarize();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.throughput, 0.0);
+        assert_eq!(s.avg_latency_ms, 0.0);
+    }
+
+    #[test]
+    fn batched_steps_count_samples() {
+        let mut c = MetricsCollector::new("b");
+        c.record_completion(1.0, 1000.0, 32);
+        c.record_completion(2.0, 1000.0, 32);
+        let s = c.summarize();
+        assert_eq!(s.completed, 2);
+        // 64 samples over 2 s window.
+        assert!((s.throughput - 32.0).abs() < 2.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Results exporters: CSV, JSONL and Prometheus exposition format.
+//!
+//! The paper's exporter "can format the saved performance results so they
+//! can be demonstrated with different performance analysis tools" (§3.2) —
+//! specifically Prometheus and notebook tooling. Each exporter here
+//! serializes either run summaries or raw time series.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+use crate::util::timeseries::{Series, SeriesSet};
+
+use super::collector::RunSummary;
+
+/// CSV header used by [`summaries_to_csv`].
+pub const SUMMARY_CSV_HEADER: &str = "label,completed,avg_latency_ms,std_latency_ms,p50_latency_ms,p99_latency_ms,max_latency_ms,throughput,mean_gract,peak_fb_mib,energy_j,duration_s";
+
+/// Serialize run summaries as CSV (with header).
+pub fn summaries_to_csv(rows: &[RunSummary]) -> String {
+    let mut out = String::from(SUMMARY_CSV_HEADER);
+    out.push('\n');
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.3},{:.3},{:.6}",
+            csv_escape(&r.label),
+            r.completed,
+            r.avg_latency_ms,
+            r.std_latency_ms,
+            r.p50_latency_ms,
+            r.p99_latency_ms,
+            r.max_latency_ms,
+            r.throughput,
+            r.mean_gract,
+            r.peak_fb_mib,
+            r.energy_j,
+            r.duration_s,
+        );
+    }
+    out
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// One JSON object per line, one line per summary (JSONL).
+pub fn summaries_to_jsonl(rows: &[RunSummary]) -> String {
+    let mut out = String::new();
+    for r in rows {
+        out.push_str(&summary_to_json(r).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// A run summary as a JSON object.
+pub fn summary_to_json(r: &RunSummary) -> Json {
+    Json::obj(vec![
+        ("label", r.label.as_str().into()),
+        ("completed", (r.completed as i64).into()),
+        ("avg_latency_ms", r.avg_latency_ms.into()),
+        ("std_latency_ms", r.std_latency_ms.into()),
+        ("p50_latency_ms", r.p50_latency_ms.into()),
+        ("p99_latency_ms", r.p99_latency_ms.into()),
+        ("max_latency_ms", r.max_latency_ms.into()),
+        ("throughput", r.throughput.into()),
+        ("mean_gract", r.mean_gract.into()),
+        ("peak_fb_mib", r.peak_fb_mib.into()),
+        ("energy_j", r.energy_j.into()),
+        ("duration_s", r.duration_s.into()),
+    ])
+}
+
+/// Serialize a time-series set in Prometheus exposition format, using the
+/// series' tags as labels and timestamps in milliseconds.
+pub fn series_to_prometheus(set: &SeriesSet) -> String {
+    let mut out = String::new();
+    let mut seen_names: Vec<&str> = Vec::new();
+    for s in set.all() {
+        if !seen_names.contains(&s.name.as_str()) {
+            let _ = writeln!(out, "# TYPE migperf_{} gauge", s.name);
+            seen_names.push(&s.name);
+        }
+        let labels = render_labels(s);
+        for p in s.points() {
+            let _ = writeln!(out, "migperf_{}{} {} {}", s.name, labels, p.value, (p.t * 1e3) as i64);
+        }
+    }
+    out
+}
+
+fn render_labels(s: &Series) -> String {
+    if s.tags.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = s
+        .tags
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "\\\"")))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Serialize raw series as long-format CSV: `metric,instance,t,value`.
+pub fn series_to_csv(set: &SeriesSet) -> String {
+    let mut out = String::from("metric,tags,t,value\n");
+    for s in set.all() {
+        let tags: Vec<String> = s.tags.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let tagstr = tags.join(";");
+        for p in s.points() {
+            let _ = writeln!(out, "{},{},{:.6},{:.6}", s.name, csv_escape(&tagstr), p.t, p.value);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use crate::util::timeseries::Series;
+
+    fn summary(label: &str) -> RunSummary {
+        RunSummary {
+            label: label.to_string(),
+            completed: 10,
+            avg_latency_ms: 5.5,
+            std_latency_ms: 0.5,
+            p50_latency_ms: 5.0,
+            p99_latency_ms: 9.0,
+            max_latency_ms: 10.0,
+            throughput: 100.0,
+            mean_gract: 0.9,
+            peak_fb_mib: 2048.0,
+            energy_j: 42.0,
+            duration_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let out = summaries_to_csv(&[summary("a"), summary("b")]);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("label,completed"));
+        assert!(lines[1].starts_with("a,10,"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let out = summaries_to_csv(&[summary("bert,base")]);
+        assert!(out.contains("\"bert,base\""));
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let out = summaries_to_jsonl(&[summary("x")]);
+        let v = json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("label").unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("completed").unwrap().as_i64(), Some(10));
+        assert_eq!(v.get("energy_j").unwrap().as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn prometheus_format() {
+        let mut set = SeriesSet::new();
+        let mut s = Series::new("gract").with_tag("instance", "1g.10gb");
+        s.push(1.0, 0.75);
+        set.add(s);
+        let out = series_to_prometheus(&set);
+        assert!(out.contains("# TYPE migperf_gract gauge"));
+        assert!(out.contains("migperf_gract{instance=\"1g.10gb\"} 0.75 1000"));
+    }
+
+    #[test]
+    fn prometheus_type_line_emitted_once_per_metric() {
+        let mut set = SeriesSet::new();
+        for inst in ["a", "b"] {
+            let mut s = Series::new("gract").with_tag("instance", inst);
+            s.push(0.0, 0.5);
+            set.add(s);
+        }
+        let out = series_to_prometheus(&set);
+        assert_eq!(out.matches("# TYPE migperf_gract").count(), 1);
+    }
+
+    #[test]
+    fn series_csv_long_format() {
+        let mut set = SeriesSet::new();
+        let mut s = Series::new("power_w").with_tag("gi", "2g.20gb");
+        s.push(0.5, 120.0);
+        set.add(s);
+        let out = series_to_csv(&set);
+        assert!(out.contains("power_w,gi=2g.20gb,0.500000,120.000000"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Metrics pipeline: DCGM-style counters, collection, and export.
+//!
+//! Mirrors the paper's performance aggregator (§3.2): it "monitors the
+//! workload performance and system resource usage and saves them in the
+//! database … developed based on tools like DCGM". [`dcgm`] emulates the
+//! counter sampling, [`collector`] aggregates a profiling run into the
+//! report the paper's figures are drawn from, and [`export`] writes the
+//! formats third-party tools consume (CSV, JSONL, Prometheus exposition).
+
+pub mod collector;
+pub mod dcgm;
+pub mod export;
+
+pub use collector::{MetricsCollector, RunSummary};
+pub use dcgm::{DcgmCounter, DcgmSampler};

@@ -1,0 +1,428 @@
+//! MIG controller: GPU-instance and compute-instance lifecycle.
+//!
+//! Mirrors the paper's MIG Controller component (§3.2): python APIs to
+//! "1) enable MIG on a GPU, 2) operate the partition process, and 3) track
+//! the GIs", plus compute-instance (CI) creation inside a GI so that
+//! "computation resources for jobs running in the same GI can be isolated
+//! while the memory resources can be shared".
+//!
+//! The controller wraps the [`PlacementEngine`] rule checker with a state
+//! machine that matches `nvidia-smi mig` semantics: MIG mode must be
+//! enabled before partitioning, GIs cannot be destroyed while they still
+//! hold CIs, and MIG mode cannot be disabled while GIs exist.
+
+use std::collections::BTreeMap;
+
+use super::gpu::GpuModel;
+use super::placement::{Placement, PlacementEngine, PlacementError};
+use super::profile::{lookup, GiProfile};
+
+/// Opaque GPU-instance identifier (stable for the controller's lifetime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GiId(pub u32);
+
+/// Opaque compute-instance identifier, scoped to its GI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CiId(pub u32);
+
+/// A live compute instance inside a GI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeInstance {
+    /// Identifier within the parent GI.
+    pub id: CiId,
+    /// Compute slices owned by this CI.
+    pub slices: u32,
+}
+
+/// A live GPU instance.
+#[derive(Debug, Clone)]
+pub struct GpuInstance {
+    /// Identifier on this GPU.
+    pub id: GiId,
+    /// Profile this GI was created from.
+    pub profile: &'static GiProfile,
+    /// Memory-slice offset where it lives.
+    pub start: u32,
+    /// MIG device UUID-style handle (what CUDA_VISIBLE_DEVICES takes).
+    pub uuid: String,
+    /// Compute instances inside this GI.
+    pub compute_instances: Vec<ComputeInstance>,
+}
+
+impl GpuInstance {
+    /// Compute slices not yet assigned to a CI.
+    pub fn free_ci_slices(&self) -> u32 {
+        let used: u32 = self.compute_instances.iter().map(|c| c.slices).sum();
+        self.profile.compute_slices - used
+    }
+}
+
+/// Controller errors.
+#[derive(Debug, thiserror::Error)]
+pub enum MigError {
+    /// Operation requires MIG mode on.
+    #[error("MIG mode is not enabled on this GPU")]
+    MigDisabled,
+    /// MIG mode already in the requested state.
+    #[error("MIG mode is already {0}")]
+    AlreadyInState(&'static str),
+    /// Cannot disable MIG while instances exist.
+    #[error("cannot disable MIG: {0} GPU instance(s) still exist")]
+    InstancesExist(usize),
+    /// Unknown profile name for this GPU.
+    #[error("unknown GI profile '{0}' for this GPU model")]
+    UnknownProfile(String),
+    /// Placement rules rejected the request.
+    #[error(transparent)]
+    Placement(#[from] PlacementError),
+    /// No free slot for the profile.
+    #[error("no valid placement available for profile '{0}'")]
+    NoSlot(String),
+    /// GI id not found.
+    #[error("no such GPU instance: {0:?}")]
+    NoSuchGi(GiId),
+    /// CI id not found in the GI.
+    #[error("no such compute instance {1:?} in {0:?}")]
+    NoSuchCi(GiId, CiId),
+    /// GI still holds CIs.
+    #[error("GPU instance {0:?} still has {1} compute instance(s)")]
+    CisExist(GiId, usize),
+    /// CI slice request exceeds what the GI has free.
+    #[error("compute-instance request of {need} slice(s) exceeds {free} free in the GI")]
+    CiSlicesExhausted {
+        /// Requested slices.
+        need: u32,
+        /// Free slices in the GI.
+        free: u32,
+    },
+}
+
+/// MIG controller for one physical GPU.
+#[derive(Debug)]
+pub struct MigController {
+    model: GpuModel,
+    /// Index of this GPU on its server (part of the MIG UUID).
+    gpu_index: u32,
+    engine: PlacementEngine,
+    mig_enabled: bool,
+    instances: BTreeMap<GiId, GpuInstance>,
+    next_gi: u32,
+    next_ci: u32,
+}
+
+impl MigController {
+    /// Controller for GPU 0 of the given model.
+    pub fn new(model: GpuModel) -> Self {
+        Self::for_gpu(model, 0)
+    }
+
+    /// Controller for a specific GPU index on a server.
+    pub fn for_gpu(model: GpuModel, gpu_index: u32) -> Self {
+        MigController {
+            model,
+            gpu_index,
+            engine: PlacementEngine::new(model),
+            mig_enabled: false,
+            instances: BTreeMap::new(),
+            next_gi: 0,
+            next_ci: 0,
+        }
+    }
+
+    /// GPU model under management.
+    pub fn model(&self) -> GpuModel {
+        self.model
+    }
+
+    /// Whether MIG mode is currently enabled.
+    pub fn mig_enabled(&self) -> bool {
+        self.mig_enabled
+    }
+
+    /// Enable MIG mode (idempotent failure, like `nvidia-smi -mig 1`).
+    pub fn enable_mig(&mut self) -> Result<(), MigError> {
+        if self.mig_enabled {
+            return Err(MigError::AlreadyInState("enabled"));
+        }
+        self.mig_enabled = true;
+        Ok(())
+    }
+
+    /// Disable MIG mode; fails while GIs exist.
+    pub fn disable_mig(&mut self) -> Result<(), MigError> {
+        if !self.mig_enabled {
+            return Err(MigError::AlreadyInState("disabled"));
+        }
+        if !self.instances.is_empty() {
+            return Err(MigError::InstancesExist(self.instances.len()));
+        }
+        self.mig_enabled = false;
+        Ok(())
+    }
+
+    fn placements(&self) -> Vec<Placement> {
+        self.instances
+            .values()
+            .map(|gi| Placement { profile: gi.profile, start: gi.start })
+            .collect()
+    }
+
+    /// Create a GI of the named profile at the first valid slot.
+    pub fn create_instance(&mut self, profile_name: &str) -> Result<GiId, MigError> {
+        if !self.mig_enabled {
+            return Err(MigError::MigDisabled);
+        }
+        let profile = lookup(self.model, profile_name)
+            .ok_or_else(|| MigError::UnknownProfile(profile_name.to_string()))?;
+        let start = self
+            .engine
+            .find_slot(&self.placements(), profile)
+            .ok_or_else(|| MigError::NoSlot(profile_name.to_string()))?;
+        self.create_at(profile, start)
+    }
+
+    /// Create a GI at an explicit memory-slice offset.
+    pub fn create_instance_at(&mut self, profile_name: &str, start: u32) -> Result<GiId, MigError> {
+        if !self.mig_enabled {
+            return Err(MigError::MigDisabled);
+        }
+        let profile = lookup(self.model, profile_name)
+            .ok_or_else(|| MigError::UnknownProfile(profile_name.to_string()))?;
+        self.engine.check(&self.placements(), &Placement { profile, start })?;
+        self.create_at(profile, start)
+    }
+
+    fn create_at(&mut self, profile: &'static GiProfile, start: u32) -> Result<GiId, MigError> {
+        let id = GiId(self.next_gi);
+        self.next_gi += 1;
+        let uuid = format!("MIG-GPU-{}/{}/{}", self.gpu_index, id.0, profile.name);
+        self.instances.insert(
+            id,
+            GpuInstance { id, profile, start, uuid, compute_instances: Vec::new() },
+        );
+        Ok(id)
+    }
+
+    /// Destroy a GI. Its CIs must have been destroyed first.
+    pub fn destroy_instance(&mut self, id: GiId) -> Result<(), MigError> {
+        let gi = self.instances.get(&id).ok_or(MigError::NoSuchGi(id))?;
+        if !gi.compute_instances.is_empty() {
+            return Err(MigError::CisExist(id, gi.compute_instances.len()));
+        }
+        self.instances.remove(&id);
+        Ok(())
+    }
+
+    /// Create a CI of `slices` compute slices inside a GI.
+    pub fn create_compute_instance(&mut self, gi: GiId, slices: u32) -> Result<CiId, MigError> {
+        let inst = self.instances.get_mut(&gi).ok_or(MigError::NoSuchGi(gi))?;
+        let free = inst.free_ci_slices();
+        if slices == 0 || slices > free {
+            return Err(MigError::CiSlicesExhausted { need: slices, free });
+        }
+        let id = CiId(self.next_ci);
+        self.next_ci += 1;
+        inst.compute_instances.push(ComputeInstance { id, slices });
+        Ok(id)
+    }
+
+    /// Create the default CI spanning the GI's full compute capacity.
+    pub fn create_default_ci(&mut self, gi: GiId) -> Result<CiId, MigError> {
+        let slices = self.instance(gi)?.profile.compute_slices;
+        self.create_compute_instance(gi, slices)
+    }
+
+    /// Destroy one CI.
+    pub fn destroy_compute_instance(&mut self, gi: GiId, ci: CiId) -> Result<(), MigError> {
+        let inst = self.instances.get_mut(&gi).ok_or(MigError::NoSuchGi(gi))?;
+        let before = inst.compute_instances.len();
+        inst.compute_instances.retain(|c| c.id != ci);
+        if inst.compute_instances.len() == before {
+            return Err(MigError::NoSuchCi(gi, ci));
+        }
+        Ok(())
+    }
+
+    /// Look up one instance.
+    pub fn instance(&self, id: GiId) -> Result<&GpuInstance, MigError> {
+        self.instances.get(&id).ok_or(MigError::NoSuchGi(id))
+    }
+
+    /// All live instances, ordered by id.
+    pub fn list_instances(&self) -> Vec<&GpuInstance> {
+        self.instances.values().collect()
+    }
+
+    /// Profiles that can still be placed right now.
+    pub fn available_profiles(&self) -> Vec<&'static GiProfile> {
+        if !self.mig_enabled {
+            return Vec::new();
+        }
+        self.engine.available_profiles(&self.placements())
+    }
+
+    /// Destroy all CIs and GIs (convenience for benchmark teardown).
+    pub fn reset(&mut self) {
+        for gi in self.instances.values_mut() {
+            gi.compute_instances.clear();
+        }
+        self.instances.clear();
+    }
+
+    /// Partition the GPU into `n` equal instances of the given profile,
+    /// returning the created ids. Fails atomically: on error, nothing new
+    /// remains.
+    pub fn partition_uniform(&mut self, profile_name: &str, n: u32) -> Result<Vec<GiId>, MigError> {
+        let mut made = Vec::new();
+        for _ in 0..n {
+            match self.create_instance(profile_name) {
+                Ok(id) => made.push(id),
+                Err(e) => {
+                    for id in made {
+                        let _ = self.destroy_instance(id);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(made)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled(model: GpuModel) -> MigController {
+        let mut c = MigController::new(model);
+        c.enable_mig().unwrap();
+        c
+    }
+
+    #[test]
+    fn requires_mig_mode() {
+        let mut c = MigController::new(GpuModel::A100_80GB);
+        assert!(matches!(c.create_instance("1g.10gb"), Err(MigError::MigDisabled)));
+        c.enable_mig().unwrap();
+        assert!(c.create_instance("1g.10gb").is_ok());
+    }
+
+    #[test]
+    fn enable_twice_fails() {
+        let mut c = enabled(GpuModel::A100_80GB);
+        assert!(matches!(c.enable_mig(), Err(MigError::AlreadyInState("enabled"))));
+    }
+
+    #[test]
+    fn disable_blocked_by_instances() {
+        let mut c = enabled(GpuModel::A100_80GB);
+        let gi = c.create_instance("2g.20gb").unwrap();
+        assert!(matches!(c.disable_mig(), Err(MigError::InstancesExist(1))));
+        c.destroy_instance(gi).unwrap();
+        c.disable_mig().unwrap();
+        assert!(!c.mig_enabled());
+    }
+
+    #[test]
+    fn partition_into_seven() {
+        let mut c = enabled(GpuModel::A100_80GB);
+        let ids = c.partition_uniform("1g.10gb", 7).unwrap();
+        assert_eq!(ids.len(), 7);
+        assert_eq!(c.list_instances().len(), 7);
+        // Eighth fails.
+        assert!(matches!(c.create_instance("1g.10gb"), Err(MigError::NoSlot(_))));
+    }
+
+    #[test]
+    fn partition_uniform_rolls_back() {
+        let mut c = enabled(GpuModel::A30_24GB);
+        // 3×2g.12gb cannot fit on A30 (max 2): all-or-nothing.
+        assert!(c.partition_uniform("2g.12gb", 3).is_err());
+        assert_eq!(c.list_instances().len(), 0);
+    }
+
+    #[test]
+    fn unknown_profile() {
+        let mut c = enabled(GpuModel::A30_24GB);
+        assert!(matches!(c.create_instance("3g.40gb"), Err(MigError::UnknownProfile(_))));
+    }
+
+    #[test]
+    fn explicit_offset_validation() {
+        let mut c = enabled(GpuModel::A100_80GB);
+        assert!(c.create_instance_at("3g.40gb", 4).is_ok());
+        assert!(matches!(
+            c.create_instance_at("3g.40gb", 2),
+            Err(MigError::Placement(PlacementError::InvalidOffset { .. }))
+        ));
+    }
+
+    #[test]
+    fn uuids_are_unique_and_stable() {
+        let mut c = enabled(GpuModel::A100_80GB);
+        let a = c.create_instance("1g.10gb").unwrap();
+        let b = c.create_instance("1g.10gb").unwrap();
+        let ua = c.instance(a).unwrap().uuid.clone();
+        let ub = c.instance(b).unwrap().uuid.clone();
+        assert_ne!(ua, ub);
+        assert!(ua.starts_with("MIG-GPU-0/"));
+    }
+
+    #[test]
+    fn ci_lifecycle() {
+        let mut c = enabled(GpuModel::A100_80GB);
+        let gi = c.create_instance("3g.40gb").unwrap();
+        let c1 = c.create_compute_instance(gi, 1).unwrap();
+        let c2 = c.create_compute_instance(gi, 2).unwrap();
+        assert_eq!(c.instance(gi).unwrap().free_ci_slices(), 0);
+        assert!(matches!(
+            c.create_compute_instance(gi, 1),
+            Err(MigError::CiSlicesExhausted { need: 1, free: 0 })
+        ));
+        // GI destruction blocked while CIs exist (nvidia-smi semantics).
+        assert!(matches!(c.destroy_instance(gi), Err(MigError::CisExist(_, 2))));
+        c.destroy_compute_instance(gi, c1).unwrap();
+        c.destroy_compute_instance(gi, c2).unwrap();
+        c.destroy_instance(gi).unwrap();
+    }
+
+    #[test]
+    fn default_ci_spans_profile() {
+        let mut c = enabled(GpuModel::A30_24GB);
+        let gi = c.create_instance("2g.12gb").unwrap();
+        c.create_default_ci(gi).unwrap();
+        assert_eq!(c.instance(gi).unwrap().free_ci_slices(), 0);
+    }
+
+    #[test]
+    fn destroy_unknown_ci() {
+        let mut c = enabled(GpuModel::A30_24GB);
+        let gi = c.create_instance("1g.6gb").unwrap();
+        assert!(matches!(
+            c.destroy_compute_instance(gi, CiId(99)),
+            Err(MigError::NoSuchCi(_, _))
+        ));
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut c = enabled(GpuModel::A100_80GB);
+        let gi = c.create_instance("2g.20gb").unwrap();
+        c.create_default_ci(gi).unwrap();
+        c.reset();
+        assert!(c.list_instances().is_empty());
+        c.disable_mig().unwrap();
+    }
+
+    #[test]
+    fn available_profiles_shrink() {
+        let mut c = enabled(GpuModel::A100_80GB);
+        let n0 = c.available_profiles().len();
+        c.create_instance("4g.40gb").unwrap();
+        let after: Vec<&str> = c.available_profiles().iter().map(|p| p.name).collect();
+        assert!(after.len() < n0);
+        assert!(!after.contains(&"3g.40gb"), "exclusion rule must hide 3g.40gb");
+        assert!(!after.contains(&"7g.80gb"));
+        assert!(after.contains(&"1g.10gb"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Exhaustive enumeration of valid MIG layouts.
+//!
+//! The scheduler/optimizer (paper §5 future work: "hybrid scheduling for
+//! training and inference on MIG") needs the full space of partitions a
+//! GPU supports. This module enumerates every *maximal* valid layout —
+//! a set of placed GIs to which no further GI can be added — which is
+//! exactly the set of "GPU configurations" the reconfigurable-scheduling
+//! literature (Tan et al., 2021) searches over.
+
+use super::gpu::GpuModel;
+use super::placement::{Placement, PlacementEngine};
+use super::profile::profiles_for;
+
+/// A complete layout: placed profiles, sorted by memory-slice offset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layout {
+    /// The placements, ordered by start offset.
+    pub placements: Vec<Placement>,
+}
+
+impl Layout {
+    /// Profile names in offset order (canonical form, e.g.
+    /// `["3g.40gb", "3g.40gb"]`).
+    pub fn profile_names(&self) -> Vec<&'static str> {
+        self.placements.iter().map(|p| p.profile.name).collect()
+    }
+
+    /// Total compute slices used.
+    pub fn compute_slices(&self) -> u32 {
+        self.placements.iter().map(|p| p.profile.compute_slices).sum()
+    }
+
+    /// Number of instances.
+    pub fn len(&self) -> usize {
+        self.placements.len()
+    }
+
+    /// True when the layout holds no instance.
+    pub fn is_empty(&self) -> bool {
+        self.placements.is_empty()
+    }
+}
+
+/// Enumerate every maximal valid layout for a GPU model.
+///
+/// Layouts are deduplicated by their (profile, offset) multiset; the
+/// recursion explores placements in canonical (offset-ascending) order so
+/// each set is produced exactly once.
+pub fn maximal_layouts(model: GpuModel) -> Vec<Layout> {
+    let engine = PlacementEngine::new(model);
+    let mut out: Vec<Layout> = Vec::new();
+    let mut current: Vec<Placement> = Vec::new();
+    recurse(&engine, model, &mut current, 0, &mut out);
+    out
+}
+
+fn recurse(
+    engine: &PlacementEngine,
+    model: GpuModel,
+    current: &mut Vec<Placement>,
+    min_start: u32,
+    out: &mut Vec<Layout>,
+) {
+    let mut extended = false;
+    for profile in profiles_for(model) {
+        for &start in profile.placements {
+            // Canonical order: only place at offsets >= everything so far.
+            if start < min_start {
+                continue;
+            }
+            let candidate = Placement { profile, start };
+            if engine.check(current, &candidate).is_ok() {
+                extended = true;
+                current.push(candidate);
+                recurse(engine, model, current, start, out);
+                current.pop();
+            }
+        }
+    }
+    if !extended && !current.is_empty() {
+        // Maximal w.r.t. canonical extension — but a layout like [1g@1]
+        // could still accept 1g@0; require true maximality against ALL
+        // offsets before recording.
+        let truly_maximal = profiles_for(model).iter().all(|p| {
+            p.placements
+                .iter()
+                .all(|&s| engine.check(current, &Placement { profile: p, start: s }).is_err())
+        });
+        if truly_maximal {
+            let mut placements = current.clone();
+            placements.sort_by_key(|p| p.start);
+            let layout = Layout { placements };
+            if !out.contains(&layout) {
+                out.push(layout);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a30_layouts_match_hand_count() {
+        // A30 profiles: 1g.6gb (starts 0-3), 2g.12gb (starts 0,2),
+        // 4g.24gb (start 0). Maximal layouts:
+        //   4g | 2g+2g | 2g+1g+1g | 1g+1g+2g | 1g+1g+1g+1g
+        let layouts = maximal_layouts(GpuModel::A30_24GB);
+        let names: Vec<Vec<&str>> = layouts.iter().map(|l| l.profile_names()).collect();
+        assert!(names.contains(&vec!["4g.24gb"]));
+        assert!(names.contains(&vec!["2g.12gb", "2g.12gb"]));
+        assert!(names.contains(&vec!["2g.12gb", "1g.6gb", "1g.6gb"]));
+        assert!(names.contains(&vec!["1g.6gb", "1g.6gb", "2g.12gb"]));
+        assert!(names.contains(&vec!["1g.6gb", "1g.6gb", "1g.6gb", "1g.6gb"]));
+        assert_eq!(layouts.len(), 5, "{names:?}");
+    }
+
+    #[test]
+    fn all_layouts_are_valid() {
+        for model in GpuModel::all() {
+            let engine = PlacementEngine::new(*model);
+            for layout in maximal_layouts(*model) {
+                engine
+                    .check_layout(&layout.placements)
+                    .unwrap_or_else(|e| panic!("invalid layout {:?}: {e}", layout.profile_names()));
+            }
+        }
+    }
+
+    #[test]
+    fn all_layouts_are_maximal() {
+        for model in GpuModel::all() {
+            let engine = PlacementEngine::new(*model);
+            for layout in maximal_layouts(*model) {
+                assert!(
+                    engine.available_profiles(&layout.placements).is_empty(),
+                    "layout {:?} not maximal",
+                    layout.profile_names()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn a100_contains_paper_layouts() {
+        let layouts = maximal_layouts(GpuModel::A100_80GB);
+        let names: Vec<Vec<&str>> = layouts.iter().map(|l| l.profile_names()).collect();
+        // Whole GPU and 7 small (paper §1 examples).
+        assert!(names.contains(&vec!["7g.80gb"]));
+        assert!(names.contains(&vec!["1g.10gb"; 7]));
+        // The paper's mixed 4/7 + 2/7 + 1/7 layout.
+        assert!(names.contains(&vec!["4g.40gb", "2g.20gb", "1g.10gb"]));
+        // The excluded 4g+3g combination must NOT appear.
+        assert!(!names.iter().any(|l| l.contains(&"4g.40gb") && l.contains(&"3g.40gb")));
+        // Sanity on size: a100 has a rich but bounded layout space.
+        assert!(layouts.len() >= 15 && layouts.len() <= 200, "{}", layouts.len());
+    }
+
+    #[test]
+    fn layouts_never_overcommit() {
+        for model in GpuModel::all() {
+            let max = model.spec().compute_slices;
+            for layout in maximal_layouts(*model) {
+                assert!(layout.compute_slices() <= max);
+                assert!(!layout.is_empty());
+                assert!(layout.len() <= max as usize);
+            }
+        }
+    }
+}

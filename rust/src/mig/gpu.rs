@@ -1,0 +1,174 @@
+//! Physical GPU models with MIG support.
+//!
+//! Encodes the two devices the paper benchmarks (§4.1, Appendix A Table 3):
+//! NVIDIA A100-80GB (SXM) and NVIDIA A30. The numbers are the public
+//! datasheet values; the simulator (`simgpu::`) treats them as the
+//! whole-GPU roofline that GI slices scale down from.
+
+use std::fmt;
+
+/// A MIG-capable GPU model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[allow(non_camel_case_types)]
+pub enum GpuModel {
+    /// NVIDIA A100 80GB SXM (Ampere GA100).
+    A100_80GB,
+    /// NVIDIA A30 24GB (Ampere GA100 derivative).
+    A30_24GB,
+}
+
+/// Static capability description of a GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Marketing name.
+    pub name: &'static str,
+    /// Model enum this spec describes.
+    pub model: GpuModel,
+    /// Number of MIG compute slices (GPC groups usable by MIG).
+    pub compute_slices: u32,
+    /// Number of MIG memory slices.
+    pub memory_slices: u32,
+    /// Streaming multiprocessors available to MIG slices (per slice × slices).
+    pub total_sms: u32,
+    /// Total frame buffer in GiB.
+    pub memory_gib: f64,
+    /// HBM bandwidth, GB/s, whole GPU.
+    pub mem_bw_gbps: f64,
+    /// Peak dense FP16/BF16 tensor-core throughput, TFLOP/s, whole GPU.
+    pub peak_tf16: f64,
+    /// Peak FP32 (non-tensor) throughput, TFLOP/s, whole GPU.
+    pub peak_tf32: f64,
+    /// L2 cache size in MiB, whole GPU.
+    pub l2_mib: f64,
+    /// Board power limit (TDP), watts.
+    pub tdp_w: f64,
+    /// Idle board power, watts (drawn even with no work resident).
+    pub idle_w: f64,
+}
+
+impl GpuModel {
+    /// Datasheet specification for this model.
+    pub fn spec(&self) -> &'static GpuSpec {
+        match self {
+            GpuModel::A100_80GB => &A100_SPEC,
+            GpuModel::A30_24GB => &A30_SPEC,
+        }
+    }
+
+    /// All supported models.
+    pub fn all() -> &'static [GpuModel] {
+        &[GpuModel::A100_80GB, GpuModel::A30_24GB]
+    }
+
+    /// Parse from a human name (`a100`, `a100-80gb`, `a30`).
+    pub fn parse(s: &str) -> Option<GpuModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "a100" | "a100-80gb" | "a100_80gb" => Some(GpuModel::A100_80GB),
+            "a30" | "a30-24gb" | "a30_24gb" => Some(GpuModel::A30_24GB),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for GpuModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.spec().name)
+    }
+}
+
+/// A100-80GB: 108 SMs on die; MIG exposes 7 compute slices × 14 SMs = 98.
+static A100_SPEC: GpuSpec = GpuSpec {
+    name: "NVIDIA A100-80GB",
+    model: GpuModel::A100_80GB,
+    compute_slices: 7,
+    memory_slices: 8,
+    total_sms: 98,
+    memory_gib: 80.0,
+    mem_bw_gbps: 2039.0,
+    peak_tf16: 312.0,
+    peak_tf32: 19.5,
+    l2_mib: 40.0,
+    tdp_w: 400.0,
+    idle_w: 55.0,
+};
+
+/// A30: 56 SMs on die; MIG exposes 4 compute slices × 14 SMs = 56.
+static A30_SPEC: GpuSpec = GpuSpec {
+    name: "NVIDIA A30",
+    model: GpuModel::A30_24GB,
+    compute_slices: 4,
+    memory_slices: 4,
+    total_sms: 56,
+    memory_gib: 24.0,
+    mem_bw_gbps: 933.0,
+    peak_tf16: 165.0,
+    peak_tf32: 10.3,
+    l2_mib: 24.0,
+    tdp_w: 165.0,
+    idle_w: 30.0,
+};
+
+impl GpuSpec {
+    /// SMs per compute slice.
+    pub fn sms_per_slice(&self) -> u32 {
+        self.total_sms / self.compute_slices
+    }
+
+    /// GiB of frame buffer per memory slice.
+    pub fn gib_per_mem_slice(&self) -> f64 {
+        self.memory_gib / self.memory_slices as f64
+    }
+
+    /// Bandwidth (GB/s) per memory slice.
+    pub fn bw_per_mem_slice(&self) -> f64 {
+        self.mem_bw_gbps / self.memory_slices as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_are_consistent() {
+        for m in GpuModel::all() {
+            let s = m.spec();
+            assert_eq!(s.model, *m);
+            assert_eq!(s.total_sms % s.compute_slices, 0, "{}: SMs not slice-divisible", s.name);
+            assert!(s.peak_tf16 > s.peak_tf32);
+            assert!(s.tdp_w > s.idle_w);
+            assert!(s.memory_gib > 0.0 && s.mem_bw_gbps > 0.0);
+        }
+    }
+
+    #[test]
+    fn a100_slice_shape() {
+        let s = GpuModel::A100_80GB.spec();
+        assert_eq!(s.compute_slices, 7);
+        assert_eq!(s.memory_slices, 8);
+        assert_eq!(s.sms_per_slice(), 14);
+        assert!((s.gib_per_mem_slice() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a30_slice_shape() {
+        let s = GpuModel::A30_24GB.spec();
+        assert_eq!(s.compute_slices, 4);
+        assert_eq!(s.memory_slices, 4);
+        assert_eq!(s.sms_per_slice(), 14);
+        assert!((s.gib_per_mem_slice() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(GpuModel::parse("A100"), Some(GpuModel::A100_80GB));
+        assert_eq!(GpuModel::parse("a100-80gb"), Some(GpuModel::A100_80GB));
+        assert_eq!(GpuModel::parse("a30"), Some(GpuModel::A30_24GB));
+        assert_eq!(GpuModel::parse("h100"), None);
+    }
+
+    #[test]
+    fn display_matches_name() {
+        assert_eq!(GpuModel::A30_24GB.to_string(), "NVIDIA A30");
+    }
+}

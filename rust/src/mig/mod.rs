@@ -1,0 +1,20 @@
+//! Multi-Instance GPU (MIG) substrate.
+//!
+//! A faithful software model of NVIDIA's MIG partitioning: device specs
+//! ([`gpu`]), the hard-coded GI profile tables ([`profile`]), the
+//! placement rule engine ([`placement`]), the GI/CI lifecycle controller
+//! ([`controller`]), and the paper's two benchmark servers ([`topology`]).
+//!
+//! This is the substrate substitution for the paper's physical A100/A30
+//! testbed — see DESIGN.md §1 for the substitution argument.
+
+pub mod controller;
+pub mod enumerate;
+pub mod gpu;
+pub mod placement;
+pub mod profile;
+pub mod topology;
+
+pub use controller::{GiId, MigController, MigError};
+pub use gpu::GpuModel;
+pub use profile::GiProfile;

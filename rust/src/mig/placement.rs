@@ -1,0 +1,274 @@
+//! MIG placement rule engine.
+//!
+//! Validates whether a set of GPU instances can coexist on one physical
+//! GPU under NVIDIA's hard-coded rules:
+//!
+//! 1. each GI sits at one of its profile's published placement offsets;
+//! 2. memory-slice intervals of live GIs are pairwise disjoint;
+//! 3. total compute slices never exceed the device's compute slices;
+//! 4. profile-pair exclusions hold (e.g. A100 forbids 4g.40gb + 3g.40gb).
+//!
+//! The engine answers both "is this layout valid" and "where can profile X
+//! still go", which is what the controller uses for auto-placement.
+
+use super::gpu::GpuModel;
+use super::profile::{exclusions_for, GiProfile};
+
+/// A placed GPU instance: a profile at a concrete memory-slice offset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    /// Profile being placed.
+    pub profile: &'static GiProfile,
+    /// Start offset in memory slices.
+    pub start: u32,
+}
+
+impl Placement {
+    /// Memory-slice interval `[start, end)` occupied.
+    pub fn interval(&self) -> (u32, u32) {
+        (self.start, self.start + self.profile.memory_slices)
+    }
+
+    /// True if two placements overlap in the memory-slice map.
+    pub fn overlaps(&self, other: &Placement) -> bool {
+        let (a0, a1) = self.interval();
+        let (b0, b1) = other.interval();
+        a0 < b1 && b0 < a1
+    }
+}
+
+/// Why a placement or layout was rejected.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum PlacementError {
+    /// Offset not in the profile's published placement list.
+    #[error("profile {profile} cannot be placed at memory-slice {start}")]
+    InvalidOffset {
+        /// Profile name.
+        profile: String,
+        /// Requested offset.
+        start: u32,
+    },
+    /// Memory-slice interval collides with an existing GI.
+    #[error("memory slices [{start}, {end}) already occupied")]
+    MemoryOverlap {
+        /// Requested interval start.
+        start: u32,
+        /// Requested interval end (exclusive).
+        end: u32,
+    },
+    /// Device compute-slice budget exhausted.
+    #[error("compute slices exhausted: need {need}, only {avail} free")]
+    ComputeExhausted {
+        /// Slices required by the new GI.
+        need: u32,
+        /// Slices remaining.
+        avail: u32,
+    },
+    /// NVIDIA forbids this profile combination outright.
+    #[error("profiles {a} and {b} cannot coexist (NVIDIA hard-coded rule)")]
+    ExcludedCombination {
+        /// First profile.
+        a: String,
+        /// Second profile.
+        b: String,
+    },
+}
+
+/// Placement validator bound to one GPU model.
+#[derive(Debug, Clone)]
+pub struct PlacementEngine {
+    model: GpuModel,
+}
+
+impl PlacementEngine {
+    /// Engine for a GPU model.
+    pub fn new(model: GpuModel) -> Self {
+        PlacementEngine { model }
+    }
+
+    /// The GPU model this engine validates against.
+    pub fn model(&self) -> GpuModel {
+        self.model
+    }
+
+    /// Check whether `candidate` can join `existing` on this GPU.
+    pub fn check(
+        &self,
+        existing: &[Placement],
+        candidate: &Placement,
+    ) -> Result<(), PlacementError> {
+        let p = candidate.profile;
+        if !p.placements.contains(&candidate.start) {
+            return Err(PlacementError::InvalidOffset {
+                profile: p.name.to_string(),
+                start: candidate.start,
+            });
+        }
+        for e in existing {
+            if e.overlaps(candidate) {
+                let (s, t) = candidate.interval();
+                return Err(PlacementError::MemoryOverlap { start: s, end: t });
+            }
+        }
+        let used: u32 = existing.iter().map(|e| e.profile.compute_slices).sum();
+        let avail = self.model.spec().compute_slices.saturating_sub(used);
+        if p.compute_slices > avail {
+            return Err(PlacementError::ComputeExhausted { need: p.compute_slices, avail });
+        }
+        for (a, b) in exclusions_for(self.model) {
+            let names: Vec<&str> = existing.iter().map(|e| e.profile.name).collect();
+            if (p.name == *a && names.contains(b)) || (p.name == *b && names.contains(a)) {
+                return Err(PlacementError::ExcludedCombination {
+                    a: a.to_string(),
+                    b: b.to_string(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate an entire layout from scratch (order-independent).
+    pub fn check_layout(&self, layout: &[Placement]) -> Result<(), PlacementError> {
+        let mut placed: Vec<Placement> = Vec::new();
+        for c in layout {
+            self.check(&placed, c)?;
+            placed.push(c.clone());
+        }
+        Ok(())
+    }
+
+    /// First valid offset where `profile` fits alongside `existing`, if any.
+    pub fn find_slot(
+        &self,
+        existing: &[Placement],
+        profile: &'static GiProfile,
+    ) -> Option<u32> {
+        profile
+            .placements
+            .iter()
+            .copied()
+            .find(|&start| self.check(existing, &Placement { profile, start }).is_ok())
+    }
+
+    /// All profiles (by reference) that can still be placed given `existing`.
+    pub fn available_profiles(&self, existing: &[Placement]) -> Vec<&'static GiProfile> {
+        super::profile::profiles_for(self.model)
+            .iter()
+            .filter(|p| self.find_slot(existing, p).is_some())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::lookup;
+
+    fn prof(name: &str) -> &'static GiProfile {
+        lookup(GpuModel::A100_80GB, name).unwrap()
+    }
+    fn prof30(name: &str) -> &'static GiProfile {
+        lookup(GpuModel::A30_24GB, name).unwrap()
+    }
+
+    #[test]
+    fn seven_small_instances_fit_a100() {
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        let mut layout = Vec::new();
+        for start in 0..7 {
+            let c = Placement { profile: prof("1g.10gb"), start };
+            eng.check(&layout, &c).unwrap();
+            layout.push(c);
+        }
+        // Slot 7 exists in memory but 1g.10gb only publishes placements 0–6.
+        assert!(eng.find_slot(&layout, prof("1g.10gb")).is_none());
+    }
+
+    #[test]
+    fn paper_rule_no_4g_plus_3g() {
+        // Paper §1: "users can not have both 4/7 and 3/7 GIs simultaneously".
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        let four = Placement { profile: prof("4g.40gb"), start: 0 };
+        eng.check(&[], &four).unwrap();
+        let err = eng.check(std::slice::from_ref(&four), &Placement { profile: prof("3g.40gb"), start: 4 });
+        assert!(
+            matches!(err, Err(PlacementError::ExcludedCombination { .. })),
+            "expected exclusion, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn paper_mixed_layout_4_2_1() {
+        // Paper §1: "users are able to set up three 4/7, 2/7, and 1/7 GIs".
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        let layout = vec![
+            Placement { profile: prof("4g.40gb"), start: 0 },
+            Placement { profile: prof("2g.20gb"), start: 4 },
+            Placement { profile: prof("1g.10gb"), start: 6 },
+        ];
+        eng.check_layout(&layout).unwrap();
+    }
+
+    #[test]
+    fn memory_overlap_rejected() {
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        let a = Placement { profile: prof("2g.20gb"), start: 0 };
+        let b = Placement { profile: prof("1g.10gb"), start: 1 };
+        assert!(matches!(
+            eng.check(&[a], &b),
+            Err(PlacementError::MemoryOverlap { start: 1, end: 2 })
+        ));
+    }
+
+    #[test]
+    fn invalid_offset_rejected() {
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        let c = Placement { profile: prof("3g.40gb"), start: 2 };
+        assert!(matches!(eng.check(&[], &c), Err(PlacementError::InvalidOffset { .. })));
+    }
+
+    #[test]
+    fn compute_exhaustion() {
+        // 7g owns all compute; nothing else fits even though the memory map
+        // check happens first for overlapping offsets.
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        let seven = Placement { profile: prof("7g.80gb"), start: 0 };
+        assert!(eng.available_profiles(&[seven]).is_empty());
+    }
+
+    #[test]
+    fn two_3g_instances_allowed() {
+        // 3g+3g is a supported combination (placements 0 and 4).
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        let layout = vec![
+            Placement { profile: prof("3g.40gb"), start: 0 },
+            Placement { profile: prof("3g.40gb"), start: 4 },
+        ];
+        eng.check_layout(&layout).unwrap();
+    }
+
+    #[test]
+    fn a30_four_small() {
+        let eng = PlacementEngine::new(GpuModel::A30_24GB);
+        let mut layout = Vec::new();
+        for start in 0..4 {
+            let c = Placement { profile: prof30("1g.6gb"), start };
+            eng.check(&layout, &c).unwrap();
+            layout.push(c);
+        }
+        assert!(eng.available_profiles(&layout).is_empty());
+    }
+
+    #[test]
+    fn find_slot_skips_occupied() {
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        let existing = vec![Placement { profile: prof("2g.20gb"), start: 0 }];
+        assert_eq!(eng.find_slot(&existing, prof("2g.20gb")), Some(2));
+    }
+
+    #[test]
+    fn available_profiles_on_empty_gpu_is_full_table() {
+        let eng = PlacementEngine::new(GpuModel::A100_80GB);
+        assert_eq!(eng.available_profiles(&[]).len(), 6);
+    }
+}

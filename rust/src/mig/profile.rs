@@ -1,0 +1,173 @@
+//! GPU-instance (GI) profiles.
+//!
+//! A GI profile names a fixed bundle of compute slices + memory slices,
+//! e.g. `1g.10gb` = 1 compute slice and 10 GiB (one A100-80GB memory
+//! slice). The set of profiles per GPU is hard-coded by NVIDIA (paper §1:
+//! "NVIDIA limits the partition by setting up hard-coded rules"); this
+//! module encodes the published tables for A100-80GB and A30.
+
+use super::gpu::GpuModel;
+
+/// A MIG GPU-instance profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GiProfile {
+    /// Canonical NVIDIA name, e.g. `2g.20gb`.
+    pub name: &'static str,
+    /// Compute slices (the `Ng` part).
+    pub compute_slices: u32,
+    /// Memory slices occupied.
+    pub memory_slices: u32,
+    /// Frame buffer available to workloads, GiB.
+    pub memory_gib: f64,
+    /// Maximum number of instances of this profile alone on one GPU.
+    pub max_count: u32,
+    /// Valid placement start offsets, in memory-slice units.
+    ///
+    /// NVIDIA publishes placements per profile; a GI occupies
+    /// `[start, start + memory_slices)` in the memory-slice map.
+    pub placements: &'static [u32],
+}
+
+/// A100-80GB GI profiles (NVIDIA MIG user guide, GA100 80GB table).
+pub static A100_PROFILES: &[GiProfile] = &[
+    GiProfile { name: "1g.10gb", compute_slices: 1, memory_slices: 1, memory_gib: 9.75, max_count: 7, placements: &[0, 1, 2, 3, 4, 5, 6] },
+    GiProfile { name: "1g.20gb", compute_slices: 1, memory_slices: 2, memory_gib: 19.5, max_count: 4, placements: &[0, 2, 4, 6] },
+    GiProfile { name: "2g.20gb", compute_slices: 2, memory_slices: 2, memory_gib: 19.5, max_count: 3, placements: &[0, 2, 4] },
+    GiProfile { name: "3g.40gb", compute_slices: 3, memory_slices: 4, memory_gib: 39.25, max_count: 2, placements: &[0, 4] },
+    GiProfile { name: "4g.40gb", compute_slices: 4, memory_slices: 4, memory_gib: 39.25, max_count: 1, placements: &[0] },
+    GiProfile { name: "7g.80gb", compute_slices: 7, memory_slices: 8, memory_gib: 78.0, max_count: 1, placements: &[0] },
+];
+
+/// A30 GI profiles (NVIDIA MIG user guide, GA100 24GB/A30 table).
+pub static A30_PROFILES: &[GiProfile] = &[
+    GiProfile { name: "1g.6gb", compute_slices: 1, memory_slices: 1, memory_gib: 5.81, max_count: 4, placements: &[0, 1, 2, 3] },
+    GiProfile { name: "2g.12gb", compute_slices: 2, memory_slices: 2, memory_gib: 11.75, max_count: 2, placements: &[0, 2] },
+    GiProfile { name: "4g.24gb", compute_slices: 4, memory_slices: 4, memory_gib: 23.5, max_count: 1, placements: &[0] },
+];
+
+/// Pairs of profiles that NVIDIA's rules forbid from coexisting even when
+/// a naive slice count would fit. The paper calls out the famous example:
+/// "users can not have both 4/7 and 3/7 GIs simultaneously for an A100".
+pub static A100_EXCLUSIONS: &[(&str, &str)] = &[("4g.40gb", "3g.40gb")];
+
+/// Profile table for a GPU model.
+pub fn profiles_for(model: GpuModel) -> &'static [GiProfile] {
+    match model {
+        GpuModel::A100_80GB => A100_PROFILES,
+        GpuModel::A30_24GB => A30_PROFILES,
+    }
+}
+
+/// Exclusion pairs for a GPU model.
+pub fn exclusions_for(model: GpuModel) -> &'static [(&'static str, &'static str)] {
+    match model {
+        GpuModel::A100_80GB => A100_EXCLUSIONS,
+        GpuModel::A30_24GB => &[],
+    }
+}
+
+/// Look up a profile by name on a model (case-insensitive).
+pub fn lookup(model: GpuModel, name: &str) -> Option<&'static GiProfile> {
+    let lname = name.to_ascii_lowercase();
+    profiles_for(model).iter().find(|p| p.name == lname)
+}
+
+impl GiProfile {
+    /// Fraction of the whole GPU's compute this profile owns.
+    pub fn compute_fraction(&self, model: GpuModel) -> f64 {
+        self.compute_slices as f64 / model.spec().compute_slices as f64
+    }
+
+    /// Fraction of the whole GPU's memory bandwidth (and L2) this owns.
+    pub fn memory_fraction(&self, model: GpuModel) -> f64 {
+        self.memory_slices as f64 / model.spec().memory_slices as f64
+    }
+
+    /// SM count in this profile on the given model.
+    pub fn sm_count(&self, model: GpuModel) -> u32 {
+        self.compute_slices * model.spec().sms_per_slice()
+    }
+
+    /// Human-readable "k/N" form used throughout the paper (e.g. "4/7").
+    pub fn slice_notation(&self, model: GpuModel) -> String {
+        format!("{}/{}", self.compute_slices, model.spec().compute_slices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_profile_count_and_names() {
+        let names: Vec<&str> = A100_PROFILES.iter().map(|p| p.name).collect();
+        assert!(names.contains(&"1g.10gb"));
+        assert!(names.contains(&"7g.80gb"));
+        assert_eq!(A100_PROFILES.len(), 6);
+    }
+
+    #[test]
+    fn placements_fit_on_device() {
+        for model in GpuModel::all() {
+            let mem_slices = model.spec().memory_slices;
+            for p in profiles_for(*model) {
+                for &start in p.placements {
+                    assert!(
+                        start + p.memory_slices <= mem_slices,
+                        "{} placement {start} overflows {model}",
+                        p.name
+                    );
+                }
+                assert!(p.compute_slices <= model.spec().compute_slices);
+            }
+        }
+    }
+
+    #[test]
+    fn max_count_consistent_with_slices() {
+        for model in GpuModel::all() {
+            let spec = model.spec();
+            for p in profiles_for(*model) {
+                // max_count can never exceed what compute or memory slices allow.
+                assert!(p.max_count * p.compute_slices <= spec.compute_slices + 0, "{}", p.name);
+                assert!(p.max_count * p.memory_slices <= spec.memory_slices, "{}", p.name);
+                // ...but 1g.20gb-style profiles are deliberately sparser; at
+                // minimum one instance must fit.
+                assert!(p.max_count >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(lookup(GpuModel::A100_80GB, "1G.10GB").is_some());
+        assert!(lookup(GpuModel::A100_80GB, "1g.6gb").is_none(), "A30 profile on A100");
+        assert!(lookup(GpuModel::A30_24GB, "1g.6gb").is_some());
+    }
+
+    #[test]
+    fn fractions() {
+        let p = lookup(GpuModel::A100_80GB, "2g.20gb").unwrap();
+        assert!((p.compute_fraction(GpuModel::A100_80GB) - 2.0 / 7.0).abs() < 1e-12);
+        assert!((p.memory_fraction(GpuModel::A100_80GB) - 0.25).abs() < 1e-12);
+        assert_eq!(p.sm_count(GpuModel::A100_80GB), 28);
+        assert_eq!(p.slice_notation(GpuModel::A100_80GB), "2/7");
+    }
+
+    #[test]
+    fn full_gpu_profiles_own_everything() {
+        let p7 = lookup(GpuModel::A100_80GB, "7g.80gb").unwrap();
+        assert_eq!(p7.compute_fraction(GpuModel::A100_80GB), 1.0);
+        assert_eq!(p7.memory_fraction(GpuModel::A100_80GB), 1.0);
+        let p4 = lookup(GpuModel::A30_24GB, "4g.24gb").unwrap();
+        assert_eq!(p4.compute_fraction(GpuModel::A30_24GB), 1.0);
+    }
+
+    #[test]
+    fn exclusion_table_names_exist() {
+        for (a, b) in exclusions_for(GpuModel::A100_80GB) {
+            assert!(lookup(GpuModel::A100_80GB, a).is_some());
+            assert!(lookup(GpuModel::A100_80GB, b).is_some());
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Server topology: the physical testbeds the paper benchmarks on.
+//!
+//! Appendix A Table 3 describes two servers — an 8×A100-80GB machine and a
+//! 2×A30 machine. The coordinator (paper Fig 1) distributes benchmark
+//! tasks to "dedicated servers"; this module models those servers so a
+//! whole benchmark suite can run against a faithful inventory.
+
+use super::controller::MigController;
+use super::gpu::GpuModel;
+
+/// Host-side description of a benchmark server (paper Table 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerSpec {
+    /// Human name used in reports.
+    pub name: &'static str,
+    /// CPU model string.
+    pub cpu_model: &'static str,
+    /// Number of physical CPU sockets.
+    pub cpu_sockets: u32,
+    /// Physical core count.
+    pub cpu_cores: u32,
+    /// Virtual CPU count.
+    pub vcpus: u32,
+    /// Host memory, GiB.
+    pub memory_gib: u32,
+    /// GPU model installed.
+    pub gpu_model: GpuModel,
+    /// Number of GPUs installed.
+    pub gpu_count: u32,
+    /// NVIDIA driver version (informational, used by the compat rig).
+    pub driver: &'static str,
+    /// CUDA version (informational).
+    pub cuda: &'static str,
+}
+
+/// The paper's A100 server (Table 3, left column).
+pub static A100_SERVER: ServerSpec = ServerSpec {
+    name: "a100-server",
+    cpu_model: "Intel Xeon Platinum 8369B",
+    cpu_sockets: 2,
+    cpu_cores: 64,
+    vcpus: 128,
+    memory_gib: 1024,
+    gpu_model: GpuModel::A100_80GB,
+    gpu_count: 8,
+    driver: "470.82.01",
+    cuda: "11.4",
+};
+
+/// The paper's A30 server (Table 3, right column).
+pub static A30_SERVER: ServerSpec = ServerSpec {
+    name: "a30-server",
+    cpu_model: "AMD EPYC 7302P",
+    cpu_sockets: 1,
+    cpu_cores: 16,
+    vcpus: 32,
+    memory_gib: 128,
+    gpu_model: GpuModel::A30_24GB,
+    gpu_count: 2,
+    driver: "515.65.01",
+    cuda: "11.6",
+};
+
+/// A running server instance: spec + one MIG controller per GPU.
+#[derive(Debug)]
+pub struct Server {
+    /// Static description.
+    pub spec: &'static ServerSpec,
+    /// Controllers, one per physical GPU.
+    pub gpus: Vec<MigController>,
+}
+
+impl Server {
+    /// Boot a server from its spec with MIG disabled on every GPU.
+    pub fn boot(spec: &'static ServerSpec) -> Self {
+        let gpus = (0..spec.gpu_count)
+            .map(|i| MigController::for_gpu(spec.gpu_model, i))
+            .collect();
+        Server { spec, gpus }
+    }
+
+    /// The paper's testbed: both servers.
+    pub fn paper_testbed() -> Vec<Server> {
+        vec![Server::boot(&A100_SERVER), Server::boot(&A30_SERVER)]
+    }
+
+    /// Controller for one GPU index.
+    pub fn gpu(&mut self, index: usize) -> Option<&mut MigController> {
+        self.gpus.get_mut(index)
+    }
+
+    /// Total GPU instances live across all GPUs.
+    pub fn total_instances(&self) -> usize {
+        self.gpus.iter().map(|g| g.list_instances().len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_matches_table3() {
+        let servers = Server::paper_testbed();
+        assert_eq!(servers.len(), 2);
+        assert_eq!(servers[0].spec.gpu_count, 8);
+        assert_eq!(servers[0].spec.gpu_model, GpuModel::A100_80GB);
+        assert_eq!(servers[0].spec.vcpus, 128);
+        assert_eq!(servers[1].spec.gpu_count, 2);
+        assert_eq!(servers[1].spec.gpu_model, GpuModel::A30_24GB);
+        assert_eq!(servers[1].spec.memory_gib, 128);
+    }
+
+    #[test]
+    fn gpus_are_independent() {
+        let mut s = Server::boot(&A30_SERVER);
+        s.gpu(0).unwrap().enable_mig().unwrap();
+        s.gpu(0).unwrap().create_instance("1g.6gb").unwrap();
+        assert!(!s.gpu(1).unwrap().mig_enabled());
+        assert_eq!(s.total_instances(), 1);
+    }
+
+    #[test]
+    fn gpu_index_bounds() {
+        let mut s = Server::boot(&A30_SERVER);
+        assert!(s.gpu(1).is_some());
+        assert!(s.gpu(2).is_none());
+    }
+}

@@ -1,0 +1,213 @@
+//! Analytic step-cost computation.
+//!
+//! Converts a (model, batch, seq/image) workload description into the three
+//! quantities the roofline performance model prices: FLOPs, HBM traffic
+//! and frame-buffer residency. Formulas are the standard dominant-term
+//! estimates; DESIGN.md §3.4 explains how they drive the paper's figure
+//! shapes.
+
+use super::zoo::{ModelDesc, ModelFamily};
+
+/// Numeric precision of the workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// FP16/BF16 with tensor cores (the paper's default).
+    Half,
+    /// FP32 without tensor cores.
+    Single,
+}
+
+impl Precision {
+    /// Bytes per element.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Precision::Half => 2,
+            Precision::Single => 4,
+        }
+    }
+}
+
+/// Cost of one step (one forward batch, or one fwd+bwd+update batch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepCost {
+    /// Total floating-point operations.
+    pub flops: f64,
+    /// HBM bytes moved (reads + writes, after ideal L2 reuse).
+    pub hbm_bytes: f64,
+    /// Peak frame-buffer residency in bytes (weights + activations + state).
+    pub fb_bytes: f64,
+    /// Batch size, carried for the SM-saturation efficiency curve.
+    pub batch: u32,
+    /// Precision used.
+    pub precision: Precision,
+}
+
+/// Forward FLOPs for one sample of `model` at sequence length `seq`
+/// (transformers) or the 224×224 reference size (CNNs).
+fn fwd_flops_per_sample(model: &ModelDesc, seq: u32) -> f64 {
+    match model.family {
+        ModelFamily::Cnn => model.fwd_gflops_ref * 1e9,
+        ModelFamily::Transformer => {
+            // Dense part: 2 FLOPs per parameter per token (matmul dominated;
+            // embeddings excluded via the 0.95 non-embedding factor), plus
+            // the quadratic attention term 2·2·L·s²·h (QKᵀ and AV matmuls).
+            let s = seq as f64;
+            let h = model.hidden as f64;
+            let l = model.layers as f64;
+            let dense = 2.0 * (model.params as f64 * 0.95) * s;
+            let attn = 4.0 * l * s * s * h;
+            dense + attn
+        }
+    }
+}
+
+/// Activation bytes per sample, scaled from the reference input size.
+fn act_bytes_per_sample(model: &ModelDesc, seq: u32, precision: Precision) -> f64 {
+    let scale = match model.family {
+        ModelFamily::Cnn => 1.0,
+        // Linear in seq for the dense activations plus a quadratic
+        // attention-matrix term that starts mattering past ~256 tokens.
+        ModelFamily::Transformer => {
+            let s = seq as f64 / 128.0;
+            s + 0.15 * s * s
+        }
+    };
+    model.act_bytes_per_sample as f64 * scale * precision.bytes() as f64 / 2.0
+}
+
+/// Price one inference step: forward pass over a batch.
+///
+/// `seq` is the token count for transformers and ignored for CNNs.
+pub fn infer_cost(model: &ModelDesc, batch: u32, seq: u32, precision: Precision) -> StepCost {
+    assert!(batch > 0, "batch must be positive");
+    let b = batch as f64;
+    let flops = fwd_flops_per_sample(model, seq) * b;
+    let weight_bytes = model.param_bytes(precision.bytes()) as f64;
+    let act = act_bytes_per_sample(model, seq, precision);
+    // Weights stream from HBM once per step (ideal L2 reuse across the
+    // batch); activations are written and re-read once per layer boundary.
+    let hbm = weight_bytes + 2.0 * act * b;
+    // FB residency: weights + live activations (inference frees layer by
+    // layer; ~25% of total activations are live at the peak).
+    let fb = weight_bytes + 0.25 * act * b + 256.0 * (1 << 20) as f64; // +workspace/context
+    StepCost { flops, hbm_bytes: hbm, fb_bytes: fb, batch, precision }
+}
+
+/// Price one training step: forward + backward + optimizer update.
+pub fn train_cost(model: &ModelDesc, batch: u32, seq: u32, precision: Precision) -> StepCost {
+    assert!(batch > 0, "batch must be positive");
+    let b = batch as f64;
+    // Backward ≈ 2× forward FLOPs; optimizer update is memory-bound and
+    // negligible in FLOPs.
+    let flops = 3.0 * fwd_flops_per_sample(model, seq) * b;
+    let weight_bytes = model.param_bytes(precision.bytes()) as f64;
+    let act = act_bytes_per_sample(model, seq, precision);
+    // Weights read fwd+bwd, gradients written, optimizer state (Adam:
+    // fp32 master + 2 moments) read/written once.
+    let opt_state = model.param_bytes(4) as f64 * 3.0;
+    let hbm = 3.0 * weight_bytes + 2.0 * opt_state + 3.0 * act * b;
+    // FB: weights + grads + optimizer state + *all* activations (kept for
+    // backward).
+    let fb = 2.0 * weight_bytes + opt_state + act * b + 512.0 * (1 << 20) as f64;
+    StepCost { flops, hbm_bytes: hbm, fb_bytes: fb, batch, precision }
+}
+
+/// Arithmetic intensity (FLOPs per HBM byte) — decides compute- vs
+/// memory-bound on the roofline.
+impl StepCost {
+    /// FLOPs per byte of HBM traffic.
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.hbm_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::lookup;
+
+    #[test]
+    fn bert_base_ref_flops_close_to_published() {
+        let m = lookup("bert-base").unwrap();
+        let per_sample = fwd_flops_per_sample(m, 128) / 1e9;
+        // Published ≈ 22.5 GFLOPs at seq=128; dominant-term estimate
+        // should land within ~35%.
+        assert!(
+            (per_sample - m.fwd_gflops_ref).abs() / m.fwd_gflops_ref < 0.35,
+            "estimate {per_sample} vs published {}",
+            m.fwd_gflops_ref
+        );
+    }
+
+    #[test]
+    fn intensity_grows_with_batch() {
+        let m = lookup("bert-base").unwrap();
+        let c1 = infer_cost(m, 1, 128, Precision::Half);
+        let c32 = infer_cost(m, 32, 128, Precision::Half);
+        assert!(c32.intensity() > c1.intensity(), "batching must amortize weight reads");
+    }
+
+    #[test]
+    fn train_is_about_3x_infer_flops() {
+        let m = lookup("resnet50").unwrap();
+        let i = infer_cost(m, 8, 224, Precision::Half);
+        let t = train_cost(m, 8, 224, Precision::Half);
+        assert!((t.flops / i.flops - 3.0).abs() < 1e-9);
+        assert!(t.fb_bytes > i.fb_bytes);
+        assert!(t.hbm_bytes > i.hbm_bytes);
+    }
+
+    #[test]
+    fn flops_linear_in_batch() {
+        let m = lookup("resnet18").unwrap();
+        let c4 = infer_cost(m, 4, 224, Precision::Half);
+        let c8 = infer_cost(m, 8, 224, Precision::Half);
+        assert!((c8.flops / c4.flops - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seq_length_superlinear_for_transformers() {
+        let m = lookup("bert-large").unwrap();
+        let c128 = infer_cost(m, 1, 128, Precision::Half);
+        let c512 = infer_cost(m, 1, 512, Precision::Half);
+        // seq ×4 → more than ×4 FLOPs (attention quadratic term).
+        assert!(c512.flops / c128.flops > 4.0);
+    }
+
+    #[test]
+    fn seq_irrelevant_for_cnns() {
+        let m = lookup("resnet50").unwrap();
+        let a = infer_cost(m, 8, 1, Precision::Half);
+        let b = infer_cost(m, 8, 999, Precision::Half);
+        assert_eq!(a.flops, b.flops);
+    }
+
+    #[test]
+    fn precision_changes_bytes_not_flops() {
+        let m = lookup("bert-base").unwrap();
+        let h = infer_cost(m, 8, 128, Precision::Half);
+        let s = infer_cost(m, 8, 128, Precision::Single);
+        assert_eq!(h.flops, s.flops);
+        assert!(s.hbm_bytes > h.hbm_bytes);
+        assert!(s.fb_bytes > h.fb_bytes);
+    }
+
+    #[test]
+    fn fb_fits_expected_envelope() {
+        // BERT-base fp16 inference at batch 8 must fit a 1g.10gb slice
+        // (paper Fig 2c: "even for the smallest GIs, it can handle BERT").
+        let m = lookup("bert-base").unwrap();
+        let c = infer_cost(m, 8, 128, Precision::Half);
+        assert!(c.fb_bytes < 9.75 * (1u64 << 30) as f64, "fb={}", c.fb_bytes);
+        // BERT-large training at batch 128 must NOT fit in 10 GiB.
+        let big = train_cost(lookup("bert-large").unwrap(), 128, 128, Precision::Half);
+        assert!(big.fb_bytes > 9.75 * (1u64 << 30) as f64);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch must be positive")]
+    fn zero_batch_panics() {
+        let m = lookup("resnet18").unwrap();
+        let _ = infer_cost(m, 0, 224, Precision::Half);
+    }
+}

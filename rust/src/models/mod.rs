@@ -1,0 +1,16 @@
+//! Deep-learning model zoo: analytic cost descriptors.
+//!
+//! The paper benchmarks models from TorchHub and Hugging Face (Appendix A
+//! Table 4): ResNet-18/34/50/101 for image classification and
+//! DistilBERT/BERT/BERT-Large for text classification. This module
+//! describes each model analytically — parameters, forward FLOPs,
+//! activation footprint — so the simulator can price a training or
+//! inference step on any GPU instance at paper scale, while the
+//! *executable* tiny variants live in `python/compile/model.py` and run
+//! through `runtime::`.
+
+pub mod cost;
+pub mod zoo;
+
+pub use cost::{infer_cost, train_cost, Precision, StepCost};
+pub use zoo::{lookup, ModelDesc, ModelFamily, ZOO};

@@ -1,0 +1,211 @@
+//! Model descriptors (paper Appendix A, Table 4, plus extensions).
+
+/// Broad architectural family; decides which cost formulas apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelFamily {
+    /// Convolutional image classifier (input: `batch × 3 × H × W`).
+    Cnn,
+    /// Transformer encoder (input: `batch × seq` token ids).
+    Transformer,
+}
+
+/// Analytic description of one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDesc {
+    /// Canonical name used in configs and reports.
+    pub name: &'static str,
+    /// Model repository the paper pulled it from (informational).
+    pub repository: &'static str,
+    /// Architectural family.
+    pub family: ModelFamily,
+    /// Parameter count.
+    pub params: u64,
+    /// CNNs: forward GFLOPs for one 224×224 image. Transformers: unused
+    /// (computed from dims); kept for reference at seq=128.
+    pub fwd_gflops_ref: f64,
+    /// Transformer dims (layers, hidden, heads, ffn multiple); zeros for CNNs.
+    pub layers: u32,
+    /// Hidden width (transformers) or peak channel width (CNNs).
+    pub hidden: u32,
+    /// Attention heads (transformers only).
+    pub heads: u32,
+    /// Activation bytes per sample at the reference input size, forward
+    /// pass, fp16. Drives frame-buffer accounting.
+    pub act_bytes_per_sample: u64,
+}
+
+/// The benchmark zoo. FLOP/param numbers are the standard published
+/// values; activation footprints are the dominant-term analytic estimates.
+pub static ZOO: &[ModelDesc] = &[
+    ModelDesc {
+        name: "resnet18",
+        repository: "torchhub",
+        family: ModelFamily::Cnn,
+        params: 11_690_000,
+        fwd_gflops_ref: 1.82,
+        layers: 18,
+        hidden: 512,
+        heads: 0,
+        act_bytes_per_sample: 25 << 20, // ~25 MiB of activations @224²
+    },
+    ModelDesc {
+        name: "resnet34",
+        repository: "torchhub",
+        family: ModelFamily::Cnn,
+        params: 21_800_000,
+        fwd_gflops_ref: 3.67,
+        layers: 34,
+        hidden: 512,
+        heads: 0,
+        act_bytes_per_sample: 38 << 20,
+    },
+    ModelDesc {
+        name: "resnet50",
+        repository: "torchhub",
+        family: ModelFamily::Cnn,
+        params: 25_560_000,
+        fwd_gflops_ref: 4.09,
+        layers: 50,
+        hidden: 2048,
+        heads: 0,
+        act_bytes_per_sample: 95 << 20,
+    },
+    ModelDesc {
+        name: "resnet101",
+        repository: "torchhub",
+        family: ModelFamily::Cnn,
+        params: 44_550_000,
+        fwd_gflops_ref: 7.83,
+        layers: 101,
+        hidden: 2048,
+        heads: 0,
+        act_bytes_per_sample: 140 << 20,
+    },
+    ModelDesc {
+        name: "distilbert",
+        repository: "huggingface",
+        family: ModelFamily::Transformer,
+        params: 66_000_000,
+        fwd_gflops_ref: 11.3, // seq=128 reference
+        layers: 6,
+        hidden: 768,
+        heads: 12,
+        act_bytes_per_sample: 9 << 20, // seq=128 fp16 activations
+    },
+    ModelDesc {
+        name: "bert-base",
+        repository: "huggingface",
+        family: ModelFamily::Transformer,
+        params: 110_000_000,
+        fwd_gflops_ref: 22.5,
+        layers: 12,
+        hidden: 768,
+        heads: 12,
+        act_bytes_per_sample: 18 << 20,
+    },
+    ModelDesc {
+        name: "bert-large",
+        repository: "huggingface",
+        family: ModelFamily::Transformer,
+        params: 340_000_000,
+        fwd_gflops_ref: 80.0,
+        layers: 24,
+        hidden: 1024,
+        heads: 16,
+        act_bytes_per_sample: 48 << 20,
+    },
+    // Extension beyond Table 4: the paper's intro motivates ViT; included
+    // so the sweeps cover an attention-heavy vision model too.
+    ModelDesc {
+        name: "vit-base",
+        repository: "huggingface",
+        family: ModelFamily::Transformer,
+        params: 86_000_000,
+        fwd_gflops_ref: 17.6, // 197 patch tokens
+        layers: 12,
+        hidden: 768,
+        heads: 12,
+        act_bytes_per_sample: 24 << 20,
+    },
+];
+
+/// Look up a model by name (case-insensitive).
+pub fn lookup(name: &str) -> Option<&'static ModelDesc> {
+    let l = name.to_ascii_lowercase();
+    ZOO.iter().find(|m| m.name == l)
+}
+
+impl ModelDesc {
+    /// Parameter bytes at a given element width.
+    pub fn param_bytes(&self, bytes_per_elem: u64) -> u64 {
+        self.params * bytes_per_elem
+    }
+
+    /// Relative size class used in reports ("small"/"medium"/"large"),
+    /// following the paper's ResNet-26/50/152 small/medium/large framing.
+    pub fn size_class(&self) -> &'static str {
+        match self.params {
+            p if p < 20_000_000 => "small",
+            p if p < 100_000_000 => "medium",
+            _ => "large",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_covers_paper_table4() {
+        for name in
+            ["resnet18", "resnet34", "resnet50", "resnet101", "distilbert", "bert-base", "bert-large"]
+        {
+            assert!(lookup(name).is_some(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn lookup_case_insensitive_and_missing() {
+        assert!(lookup("BERT-Base").is_some());
+        assert!(lookup("gpt-3").is_none());
+    }
+
+    #[test]
+    fn params_ordered_within_families() {
+        let r: Vec<u64> = ["resnet18", "resnet34", "resnet50", "resnet101"]
+            .iter()
+            .map(|n| lookup(n).unwrap().params)
+            .collect();
+        assert!(r.windows(2).all(|w| w[0] < w[1]));
+        let b: Vec<u64> = ["distilbert", "bert-base", "bert-large"]
+            .iter()
+            .map(|n| lookup(n).unwrap().params)
+            .collect();
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn flops_ordered_with_depth() {
+        let r: Vec<f64> = ["resnet18", "resnet34", "resnet50", "resnet101"]
+            .iter()
+            .map(|n| lookup(n).unwrap().fwd_gflops_ref)
+            .collect();
+        assert!(r.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn size_classes() {
+        assert_eq!(lookup("resnet18").unwrap().size_class(), "small");
+        assert_eq!(lookup("resnet50").unwrap().size_class(), "medium");
+        assert_eq!(lookup("bert-large").unwrap().size_class(), "large");
+    }
+
+    #[test]
+    fn transformer_dims_present() {
+        for m in ZOO.iter().filter(|m| m.family == ModelFamily::Transformer) {
+            assert!(m.layers > 0 && m.hidden > 0 && m.heads > 0, "{}", m.name);
+            assert_eq!(m.hidden % m.heads, 0, "{}: hidden not divisible by heads", m.name);
+        }
+    }
+}

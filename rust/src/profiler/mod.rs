@@ -1,0 +1,16 @@
+//! MIG Profiler: the benchmark engine (paper §3.2).
+//!
+//! The profiler "abstracts the general deep learning training and
+//! inference workloads and monitors their running performance": given a
+//! benchmark task (model, workload kind, batch/seq sweep, instance
+//! layout), it partitions the GPU through the MIG controller, runs the
+//! workload drivers on each instance, aggregates metrics and produces the
+//! rows behind every figure in the paper.
+
+pub mod report;
+pub mod session;
+pub mod task;
+
+pub use report::BenchReport;
+pub use session::ProfileSession;
+pub use task::{BenchTask, SweepAxis};

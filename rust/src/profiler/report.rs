@@ -1,0 +1,216 @@
+//! Benchmark report: the structured result of a profiling session.
+
+use crate::metrics::collector::RunSummary;
+use crate::metrics::export::summary_to_json;
+use crate::util::json::Json;
+use crate::util::table::{fmt_num, Table};
+
+/// One row: a (instance, batch, seq) point and its summary.
+#[derive(Debug, Clone)]
+pub struct ReportRow {
+    /// Instance label (GI profile or sharing mode).
+    pub instance: String,
+    /// Batch size at this point.
+    pub batch: u32,
+    /// Sequence length at this point.
+    pub seq: u32,
+    /// Aggregated metrics.
+    pub summary: RunSummary,
+    /// If set, the point did not run (e.g. OOM) and this explains why.
+    pub skipped: Option<String>,
+}
+
+impl ReportRow {
+    /// A skipped point (OOM etc.) with an empty summary.
+    pub fn skipped(instance: String, batch: u32, seq: u32, reason: String) -> Self {
+        ReportRow {
+            instance,
+            batch,
+            seq,
+            summary: RunSummary {
+                label: String::new(),
+                completed: 0,
+                avg_latency_ms: 0.0,
+                std_latency_ms: 0.0,
+                p50_latency_ms: 0.0,
+                p99_latency_ms: 0.0,
+                max_latency_ms: 0.0,
+                throughput: 0.0,
+                mean_gract: 0.0,
+                peak_fb_mib: 0.0,
+                energy_j: 0.0,
+                duration_s: 0.0,
+            },
+            skipped: Some(reason),
+        }
+    }
+}
+
+/// Full report for one benchmark task.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// Task name.
+    pub name: String,
+    rows: Vec<ReportRow>,
+}
+
+impl BenchReport {
+    /// Empty report for a task.
+    pub fn new(name: &str) -> Self {
+        BenchReport { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Append a row.
+    pub fn push(&mut self, row: ReportRow) {
+        self.rows.push(row);
+    }
+
+    /// All rows.
+    pub fn rows(&self) -> &[ReportRow] {
+        &self.rows
+    }
+
+    /// Rows for one instance label, in sweep order.
+    pub fn for_instance(&self, instance: &str) -> Vec<&ReportRow> {
+        self.rows.iter().filter(|r| r.instance == instance).collect()
+    }
+
+    /// Distinct instance labels, in first-appearance order.
+    pub fn instances(&self) -> Vec<&str> {
+        let mut seen = Vec::new();
+        for r in &self.rows {
+            if !seen.contains(&r.instance.as_str()) {
+                seen.push(r.instance.as_str());
+            }
+        }
+        seen
+    }
+
+    /// Extract one metric as a series per instance: `(instance, [(x, y)])`
+    /// with `x` = batch (or seq when sweeping seq).
+    pub fn series(&self, metric: impl Fn(&RunSummary) -> f64, x_is_seq: bool) -> Vec<(String, Vec<(u32, f64)>)> {
+        self.instances()
+            .into_iter()
+            .map(|inst| {
+                let pts = self
+                    .for_instance(inst)
+                    .into_iter()
+                    .filter(|r| r.skipped.is_none())
+                    .map(|r| (if x_is_seq { r.seq } else { r.batch }, metric(&r.summary)))
+                    .collect();
+                (inst.to_string(), pts)
+            })
+            .collect()
+    }
+
+    /// Render as an aligned text table.
+    pub fn render_table(&self) -> String {
+        let mut t = Table::new(&[
+            "instance", "batch", "seq", "avg_ms", "p99_ms", "tput", "gract", "fb_mib", "energy_j", "note",
+        ]);
+        for r in &self.rows {
+            if let Some(reason) = &r.skipped {
+                t.row(&[
+                    r.instance.clone(),
+                    r.batch.to_string(),
+                    r.seq.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    reason.clone(),
+                ]);
+            } else {
+                let s = &r.summary;
+                t.row(&[
+                    r.instance.clone(),
+                    r.batch.to_string(),
+                    r.seq.to_string(),
+                    fmt_num(s.avg_latency_ms),
+                    fmt_num(s.p99_latency_ms),
+                    fmt_num(s.throughput),
+                    fmt_num(s.mean_gract),
+                    fmt_num(s.peak_fb_mib),
+                    fmt_num(s.energy_j),
+                    String::new(),
+                ]);
+            }
+        }
+        format!("== {} ==\n{}", self.name, t.render())
+    }
+
+    /// Serialize to JSON (array of row objects under the task name).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("instance", Json::from(r.instance.as_str())),
+                    ("batch", (r.batch as i64).into()),
+                    ("seq", (r.seq as i64).into()),
+                    ("summary", summary_to_json(&r.summary)),
+                ];
+                if let Some(reason) = &r.skipped {
+                    fields.push(("skipped", reason.as_str().into()));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![("task", self.name.as_str().into()), ("rows", Json::Arr(rows))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(inst: &str, batch: u32, tput: f64) -> ReportRow {
+        let mut r = ReportRow::skipped(inst.to_string(), batch, 128, String::new());
+        r.skipped = None;
+        r.summary.throughput = tput;
+        r.summary.completed = 1;
+        r
+    }
+
+    #[test]
+    fn instances_dedup_in_order() {
+        let mut rep = BenchReport::new("t");
+        rep.push(row("a", 1, 1.0));
+        rep.push(row("b", 1, 2.0));
+        rep.push(row("a", 2, 3.0));
+        assert_eq!(rep.instances(), vec!["a", "b"]);
+        assert_eq!(rep.for_instance("a").len(), 2);
+    }
+
+    #[test]
+    fn series_extraction() {
+        let mut rep = BenchReport::new("t");
+        rep.push(row("a", 8, 100.0));
+        rep.push(row("a", 16, 150.0));
+        rep.push(ReportRow::skipped("a".into(), 32, 128, "oom".into()));
+        let s = rep.series(|x| x.throughput, false);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].1, vec![(8, 100.0), (16, 150.0)]); // skipped omitted
+    }
+
+    #[test]
+    fn table_marks_skipped() {
+        let mut rep = BenchReport::new("t");
+        rep.push(ReportRow::skipped("1g.10gb".into(), 64, 128, "out of memory".into()));
+        let out = rep.render_table();
+        assert!(out.contains("out of memory"));
+        assert!(out.contains("== t =="));
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut rep = BenchReport::new("fig2");
+        rep.push(row("a", 8, 100.0));
+        let j = rep.to_json();
+        assert_eq!(j.get("task").unwrap().as_str(), Some("fig2"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

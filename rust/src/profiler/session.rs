@@ -1,0 +1,220 @@
+//! Profiling session: execute one benchmark task end-to-end.
+//!
+//! A session takes a [`BenchTask`], drives the MIG controller to build the
+//! requested partition, runs the workload at every sweep point on every
+//! instance, and collects the results into a [`BenchReport`]. This is the
+//! "workload performer + performance aggregator" loop of the paper's
+//! profiler (§3.2), on the simulated substrate.
+
+use crate::mig::controller::MigController;
+use crate::simgpu::energy::EnergyModel;
+use crate::simgpu::perfmodel::{PerfError, PerfModel};
+use crate::simgpu::resource::ExecResource;
+use crate::workload::serving::{LoadMode, ServingSim, SharingMode};
+use crate::workload::spec::{WorkloadKind, WorkloadSpec};
+use crate::workload::training::{run_training, TrainingConfig};
+
+use super::report::{BenchReport, ReportRow};
+use super::task::BenchTask;
+
+/// Session errors.
+#[derive(Debug, thiserror::Error)]
+pub enum SessionError {
+    /// Task referenced an unknown model.
+    #[error("unknown model '{0}'")]
+    UnknownModel(String),
+    /// MIG partitioning failed.
+    #[error("partitioning failed: {0}")]
+    Mig(#[from] crate::mig::controller::MigError),
+    /// A sweep point failed to run.
+    #[error("workload failed at {label}: {source}")]
+    Workload {
+        /// Sweep-point label.
+        label: String,
+        /// Underlying perf error.
+        #[source]
+        source: PerfError,
+    },
+}
+
+/// Executes benchmark tasks against simulated GPUs.
+#[derive(Debug)]
+pub struct ProfileSession {
+    perf: PerfModel,
+    energy: EnergyModel,
+    /// Seed for stochastic workloads (serving).
+    pub seed: u64,
+    /// If true, OOM points are recorded as skipped rows instead of
+    /// failing the session (the paper reports such points as absent).
+    pub skip_oom: bool,
+}
+
+impl Default for ProfileSession {
+    fn default() -> Self {
+        ProfileSession { perf: PerfModel::default(), energy: EnergyModel::default(), seed: 0xA100, skip_oom: true }
+    }
+}
+
+impl ProfileSession {
+    /// Session with explicit models (used by calibration paths).
+    pub fn with_models(perf: PerfModel, energy: EnergyModel) -> Self {
+        ProfileSession { perf, energy, ..Default::default() }
+    }
+
+    /// Run a full task, returning its report.
+    pub fn run(&self, task: &BenchTask) -> Result<BenchReport, SessionError> {
+        let model =
+            task.model_desc().ok_or_else(|| SessionError::UnknownModel(task.model.clone()))?;
+
+        // Partition the GPU exactly as requested (validates NVIDIA rules).
+        // Sequential layout mirrors the paper's Figs 2/3/8/9 methodology:
+        // the GPU is re-partitioned between per-profile runs, so each
+        // profile only needs to fit on an empty GPU. Concurrent layout
+        // places everything at once (co-location experiments).
+        let mut ctl = MigController::new(task.gpu);
+        ctl.enable_mig()?;
+        let mut resources = Vec::new();
+        for prof_name in &task.gi_profiles {
+            if task.layout == crate::profiler::task::LayoutMode::Sequential {
+                ctl.reset();
+            }
+            let gi = ctl.create_instance(prof_name)?;
+            let inst = ctl.instance(gi)?;
+            resources.push(ExecResource::from_gi(task.gpu, inst.profile));
+        }
+
+        let mut report = BenchReport::new(&task.name);
+        for (batch, seq) in task.sweep_points() {
+            for res in &resources {
+                let spec = match task.kind {
+                    WorkloadKind::Training => WorkloadSpec::training(model, batch, seq),
+                    WorkloadKind::Inference => WorkloadSpec::inference(model, batch, seq),
+                };
+                let label = format!("{}@{}", spec.label(), res.label);
+                let outcome = match task.kind {
+                    WorkloadKind::Training => run_training(
+                        res,
+                        &spec,
+                        &TrainingConfig { steps: task.iterations, sample_interval_s: 0.5 },
+                        &self.perf,
+                        &self.energy,
+                    ),
+                    WorkloadKind::Inference => ServingSim {
+                        mode: SharingMode::Mig(vec![res.clone()]),
+                        load: LoadMode::Closed { requests_per_server: task.iterations },
+                        spec: spec.clone(),
+                        seed: self.seed,
+                    }
+                    .run()
+                    .map(|o| o.pooled),
+                };
+                match outcome {
+                    Ok(summary) => report.push(ReportRow {
+                        instance: res.label.clone(),
+                        batch,
+                        seq,
+                        summary,
+                        skipped: None,
+                    }),
+                    Err(e @ PerfError::OutOfMemory { .. }) if self.skip_oom => {
+                        report.push(ReportRow::skipped(res.label.clone(), batch, seq, e.to_string()));
+                    }
+                    Err(e) => return Err(SessionError::Workload { label, source: e }),
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::GpuModel;
+    use crate::profiler::task::SweepAxis;
+
+    fn fig2_task() -> BenchTask {
+        BenchTask {
+            name: "fig2-mini".into(),
+            gpu: GpuModel::A100_80GB,
+            gi_profiles: vec!["1g.10gb".into(), "2g.20gb".into(), "3g.40gb".into()],
+            model: "bert-base".into(),
+            kind: WorkloadKind::Training,
+            batch: 32,
+            seq: 128,
+            sweep: SweepAxis::Batch(vec![8, 32]),
+            iterations: 20,
+            layout: Default::default(),
+        }
+    }
+
+    #[test]
+    fn session_runs_full_sweep() {
+        let report = ProfileSession::default().run(&fig2_task()).unwrap();
+        // 2 sweep points × 3 instances.
+        assert_eq!(report.rows().len(), 6);
+        assert!(report.rows().iter().all(|r| r.skipped.is_none()));
+    }
+
+    #[test]
+    fn invalid_partition_fails() {
+        let mut t = fig2_task();
+        t.gi_profiles = vec!["4g.40gb".into(), "3g.40gb".into()]; // NVIDIA exclusion
+        t.layout = crate::profiler::task::LayoutMode::Concurrent;
+        assert!(matches!(ProfileSession::default().run(&t), Err(SessionError::Mig(_))));
+    }
+
+    #[test]
+    fn sequential_layout_allows_full_gpu_sweep() {
+        // The paper's Fig 2 methodology: 1g…7g benchmarked one at a time.
+        let mut t = fig2_task();
+        t.gi_profiles =
+            vec!["1g.10gb".into(), "2g.20gb".into(), "3g.40gb".into(), "4g.40gb".into(), "7g.80gb".into()];
+        let report = ProfileSession::default().run(&t).unwrap();
+        assert_eq!(report.rows().len(), 2 * 5);
+    }
+
+    #[test]
+    fn oom_points_are_skipped_rows() {
+        let mut t = fig2_task();
+        t.model = "bert-large".into();
+        t.gi_profiles = vec!["1g.10gb".into()];
+        t.sweep = SweepAxis::Batch(vec![256]);
+        let report = ProfileSession::default().run(&t).unwrap();
+        assert_eq!(report.rows().len(), 1);
+        assert!(report.rows()[0].skipped.is_some());
+    }
+
+    #[test]
+    fn oom_fails_hard_when_not_skipping() {
+        let mut session = ProfileSession::default();
+        session.skip_oom = false;
+        let mut t = fig2_task();
+        t.model = "bert-large".into();
+        t.gi_profiles = vec!["1g.10gb".into()];
+        t.sweep = SweepAxis::Batch(vec![256]);
+        assert!(matches!(session.run(&t), Err(SessionError::Workload { .. })));
+    }
+
+    #[test]
+    fn inference_task_uses_serving_path() {
+        let mut t = fig2_task();
+        t.kind = WorkloadKind::Inference;
+        t.iterations = 30;
+        let report = ProfileSession::default().run(&t).unwrap();
+        assert_eq!(report.rows().len(), 6);
+        for r in report.rows() {
+            assert_eq!(r.summary.completed, 30);
+        }
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let mut t = fig2_task();
+        t.model = "alexnet".into();
+        assert!(matches!(
+            ProfileSession::default().run(&t),
+            Err(SessionError::UnknownModel(_))
+        ));
+    }
+}

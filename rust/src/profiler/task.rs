@@ -1,0 +1,245 @@
+//! Benchmark task description.
+//!
+//! A [`BenchTask`] is what a user submits to the coordinator (paper Fig 1:
+//! "the system first accepts users' benchmarking tasks"): which GPU, which
+//! MIG partition(s), which model/workload, and what to sweep.
+
+use crate::mig::gpu::GpuModel;
+use crate::models::zoo::{lookup, ModelDesc};
+use crate::util::json::Json;
+use crate::workload::spec::WorkloadKind;
+
+/// How the task's GI profiles are laid out on the GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LayoutMode {
+    /// Each profile is benchmarked alone: the GPU is re-partitioned
+    /// between runs (the paper's Figs 2/3/8/9 methodology — a 7g.80gb
+    /// run cannot coexist with anything else).
+    #[default]
+    Sequential,
+    /// All profiles are created simultaneously and must satisfy NVIDIA's
+    /// placement rules together (hybrid/co-location experiments).
+    Concurrent,
+}
+
+/// The axis a task sweeps over.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepAxis {
+    /// Sweep batch size over these values.
+    Batch(Vec<u32>),
+    /// Sweep sequence length over these values (transformers).
+    SeqLen(Vec<u32>),
+    /// No sweep: single point.
+    None,
+}
+
+/// A complete benchmark task.
+#[derive(Debug, Clone)]
+pub struct BenchTask {
+    /// Task name for the report.
+    pub name: String,
+    /// GPU model to benchmark on.
+    pub gpu: GpuModel,
+    /// GI profiles to create, one instance each (e.g. `["1g.10gb", "7g.80gb"]`).
+    pub gi_profiles: Vec<String>,
+    /// Model name from the zoo.
+    pub model: String,
+    /// Training or inference.
+    pub kind: WorkloadKind,
+    /// Default batch size (overridden by a batch sweep).
+    pub batch: u32,
+    /// Default sequence length (overridden by a seq sweep).
+    pub seq: u32,
+    /// The sweep to run.
+    pub sweep: SweepAxis,
+    /// Steps (training) or requests (inference) per point.
+    pub iterations: u64,
+    /// Whether profiles are benchmarked one-at-a-time or co-resident.
+    pub layout: LayoutMode,
+}
+
+impl BenchTask {
+    /// Resolve the model name against the zoo.
+    pub fn model_desc(&self) -> Option<&'static ModelDesc> {
+        lookup(&self.model)
+    }
+
+    /// The (batch, seq) points this task evaluates.
+    pub fn sweep_points(&self) -> Vec<(u32, u32)> {
+        match &self.sweep {
+            SweepAxis::Batch(bs) => bs.iter().map(|&b| (b, self.seq)).collect(),
+            SweepAxis::SeqLen(ss) => ss.iter().map(|&s| (self.batch, s)).collect(),
+            SweepAxis::None => vec![(self.batch, self.seq)],
+        }
+    }
+
+    /// Parse a task from its JSON form (the coordinator's wire format).
+    pub fn from_json(v: &Json) -> Result<BenchTask, String> {
+        let str_field = |k: &str| -> Result<String, String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing or non-string field '{k}'"))
+        };
+        let gpu_name = str_field("gpu")?;
+        let gpu = GpuModel::parse(&gpu_name).ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?;
+        let kind = match str_field("kind")?.as_str() {
+            "training" | "train" => WorkloadKind::Training,
+            "inference" | "infer" => WorkloadKind::Inference,
+            other => return Err(format!("unknown kind '{other}'")),
+        };
+        let gi_profiles = v
+            .get("gi_profiles")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'gi_profiles' array")?
+            .iter()
+            .map(|j| j.as_str().map(str::to_string).ok_or("non-string gi profile".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        let u32s = |key: &str| -> Option<Vec<u32>> {
+            v.get(key)?.as_arr().map(|a| a.iter().filter_map(|j| j.as_i64()).map(|x| x as u32).collect())
+        };
+        let sweep = if let Some(bs) = u32s("batch_sweep") {
+            SweepAxis::Batch(bs)
+        } else if let Some(ss) = u32s("seq_sweep") {
+            SweepAxis::SeqLen(ss)
+        } else {
+            SweepAxis::None
+        };
+        let task = BenchTask {
+            name: str_field("name")?,
+            gpu,
+            gi_profiles,
+            model: str_field("model")?,
+            kind,
+            batch: v.get("batch").and_then(Json::as_i64).unwrap_or(8) as u32,
+            seq: v.get("seq").and_then(Json::as_i64).unwrap_or(128) as u32,
+            sweep,
+            iterations: v.get("iterations").and_then(Json::as_i64).unwrap_or(100) as u64,
+            layout: match v.get("layout").and_then(Json::as_str) {
+                Some("concurrent") => LayoutMode::Concurrent,
+                _ => LayoutMode::Sequential,
+            },
+        };
+        if task.model_desc().is_none() {
+            return Err(format!("unknown model '{}'", task.model));
+        }
+        Ok(task)
+    }
+
+    /// Serialize to the coordinator's wire format.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("name", self.name.as_str().into()),
+            ("gpu", match self.gpu {
+                GpuModel::A100_80GB => "a100".into(),
+                GpuModel::A30_24GB => "a30".into(),
+            }),
+            ("gi_profiles", Json::Arr(self.gi_profiles.iter().map(|s| s.as_str().into()).collect())),
+            ("model", self.model.as_str().into()),
+            ("kind", match self.kind {
+                WorkloadKind::Training => "training".into(),
+                WorkloadKind::Inference => "inference".into(),
+            }),
+            ("batch", (self.batch as i64).into()),
+            ("seq", (self.seq as i64).into()),
+            ("iterations", (self.iterations as i64).into()),
+            ("layout", match self.layout {
+                LayoutMode::Sequential => "sequential".into(),
+                LayoutMode::Concurrent => "concurrent".into(),
+            }),
+        ];
+        match &self.sweep {
+            SweepAxis::Batch(bs) => {
+                fields.push(("batch_sweep", Json::Arr(bs.iter().map(|&b| (b as i64).into()).collect())))
+            }
+            SweepAxis::SeqLen(ss) => {
+                fields.push(("seq_sweep", Json::Arr(ss.iter().map(|&s| (s as i64).into()).collect())))
+            }
+            SweepAxis::None => {}
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn example() -> BenchTask {
+        BenchTask {
+            name: "fig2".to_string(),
+            gpu: GpuModel::A100_80GB,
+            gi_profiles: vec!["1g.10gb".into(), "7g.80gb".into()],
+            model: "bert-base".into(),
+            kind: WorkloadKind::Training,
+            batch: 32,
+            seq: 128,
+            sweep: SweepAxis::Batch(vec![8, 16, 32]),
+            iterations: 50,
+            layout: Default::default(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = example();
+        let j = t.to_json();
+        let back = BenchTask::from_json(&j).unwrap();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.gpu, t.gpu);
+        assert_eq!(back.gi_profiles, t.gi_profiles);
+        assert_eq!(back.sweep, t.sweep);
+        assert_eq!(back.iterations, 50);
+    }
+
+    #[test]
+    fn sweep_points_batch() {
+        let t = example();
+        assert_eq!(t.sweep_points(), vec![(8, 128), (16, 128), (32, 128)]);
+    }
+
+    #[test]
+    fn sweep_points_seq_and_none() {
+        let mut t = example();
+        t.sweep = SweepAxis::SeqLen(vec![64, 256]);
+        assert_eq!(t.sweep_points(), vec![(32, 64), (32, 256)]);
+        t.sweep = SweepAxis::None;
+        assert_eq!(t.sweep_points(), vec![(32, 128)]);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_model() {
+        let src = r#"{"name":"x","gpu":"a100","gi_profiles":["1g.10gb"],
+                      "model":"nope","kind":"training"}"#;
+        let v = json::parse(src).unwrap();
+        assert!(BenchTask::from_json(&v).unwrap_err().contains("unknown model"));
+    }
+
+    #[test]
+    fn from_json_rejects_bad_gpu_and_kind() {
+        let bad_gpu = json::parse(
+            r#"{"name":"x","gpu":"h100","gi_profiles":[],"model":"bert-base","kind":"training"}"#,
+        )
+        .unwrap();
+        assert!(BenchTask::from_json(&bad_gpu).is_err());
+        let bad_kind = json::parse(
+            r#"{"name":"x","gpu":"a100","gi_profiles":[],"model":"bert-base","kind":"serve"}"#,
+        )
+        .unwrap();
+        assert!(BenchTask::from_json(&bad_kind).is_err());
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let v = json::parse(
+            r#"{"name":"d","gpu":"a30","gi_profiles":["1g.6gb"],"model":"resnet18","kind":"infer"}"#,
+        )
+        .unwrap();
+        let t = BenchTask::from_json(&v).unwrap();
+        assert_eq!(t.batch, 8);
+        assert_eq!(t.seq, 128);
+        assert_eq!(t.iterations, 100);
+        assert_eq!(t.sweep, SweepAxis::None);
+    }
+}

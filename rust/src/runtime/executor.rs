@@ -1,0 +1,231 @@
+//! PJRT execution engine: load HLO artifacts, compile once, execute many.
+//!
+//! The heart of the rust-side request path: `Engine` wraps one PJRT CPU
+//! client, compiles each artifact the first time it is requested, and
+//! caches the loaded executable. Inputs/outputs cross the boundary as
+//! `xla::Literal`s built from plain `f32`/`i32` slices.
+//!
+//! HLO *text* is the interchange format — see `/opt/xla-example/README.md`
+//! and `python/compile/aot.py`: jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects, while the text parser
+//! reassigns ids.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{read_f32_blob, DType, EntryPoint, Manifest};
+
+/// A host-side tensor crossing into/out of an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    /// f32 data with shape.
+    F32(Vec<f32>, Vec<i64>),
+    /// i32 data with shape.
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl HostTensor {
+    /// Shape of the tensor.
+    pub fn shape(&self) -> &[i64] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    /// Element count.
+    pub fn elements(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    /// Borrow f32 data (None for i32 tensors).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(v, shape) => xla::Literal::vec1(v).reshape(shape)?,
+            HostTensor::I32(v, shape) => xla::Literal::vec1(v).reshape(shape)?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
+            other => Err(anyhow!("unsupported output element type {other:?}")),
+        }
+    }
+}
+
+/// Outcome of one execution: outputs plus the measured wall time.
+#[derive(Debug)]
+pub struct ExecOutcome {
+    /// Output tensors, in tuple order.
+    pub outputs: Vec<HostTensor>,
+    /// Wall-clock seconds the execution took (used for calibration).
+    pub wall_s: f64,
+}
+
+/// PJRT execution engine with an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create an engine on the PJRT CPU client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: HashMap::new() })
+    }
+
+    /// Platform name of the underlying client (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Load and compile an HLO text file under a cache key.
+    pub fn load_hlo_text(&mut self, key: &str, path: &Path) -> Result<()> {
+        if self.cache.contains_key(key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {key}"))?;
+        self.cache.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a cached executable with host tensors; returns outputs and
+    /// wall time. The executable must have been lowered with
+    /// `return_tuple=True` (aot.py always does).
+    pub fn execute(&self, key: &str, inputs: &[HostTensor]) -> Result<ExecOutcome> {
+        let exe = self.cache.get(key).ok_or_else(|| anyhow!("executable '{key}' not loaded"))?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(HostTensor::to_literal).collect::<Result<_>>()?;
+        let start = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let wall_s = start.elapsed().as_secs_f64();
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let outputs =
+            parts.iter().map(HostTensor::from_literal).collect::<Result<Vec<_>>>()?;
+        Ok(ExecOutcome { outputs, wall_s })
+    }
+
+    /// Load every entry of a manifest (compiling all artifacts up front).
+    pub fn load_manifest(&mut self, manifest: &Manifest) -> Result<()> {
+        for e in &manifest.entries {
+            self.load_hlo_text(&e.name, &manifest.hlo_path(e))?;
+        }
+        Ok(())
+    }
+}
+
+/// Split a flat f32 params blob into per-tensor [`HostTensor`]s following
+/// the entry's parameter input specs.
+pub fn unflatten_params(entry: &EntryPoint, flat: &[f32]) -> Result<Vec<HostTensor>> {
+    let mut out = Vec::new();
+    let mut offset = 0usize;
+    for spec in entry.inputs.iter().take(entry.num_param_inputs) {
+        if spec.dtype != DType::F32 {
+            return Err(anyhow!("parameter input '{}' must be f32", spec.name));
+        }
+        let n = spec.elements();
+        if offset + n > flat.len() {
+            return Err(anyhow!(
+                "params blob too short: need {} elements at offset {offset}, have {}",
+                n,
+                flat.len()
+            ));
+        }
+        out.push(HostTensor::F32(flat[offset..offset + n].to_vec(), spec.shape.clone()));
+        offset += n;
+    }
+    if offset != flat.len() {
+        return Err(anyhow!("params blob has {} trailing elements", flat.len() - offset));
+    }
+    Ok(out)
+}
+
+/// Load an entry's initial parameters from its params blob.
+pub fn load_params(manifest: &Manifest, entry: &EntryPoint) -> Result<Vec<HostTensor>> {
+    let path = manifest
+        .params_path(entry)
+        .ok_or_else(|| anyhow!("entry '{}' has no params file", entry.name))?;
+    let flat = read_f32_blob(&path).with_context(|| format!("reading {path:?}"))?;
+    unflatten_params(entry, &flat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn entry_with_params() -> EntryPoint {
+        EntryPoint {
+            name: "t".into(),
+            hlo_file: "t.hlo.txt".into(),
+            inputs: vec![
+                TensorSpec { name: "w0".into(), shape: vec![2, 3], dtype: DType::F32 },
+                TensorSpec { name: "b0".into(), shape: vec![3], dtype: DType::F32 },
+                TensorSpec { name: "x".into(), shape: vec![1, 2], dtype: DType::I32 },
+            ],
+            num_outputs: 1,
+            flops: 0.0,
+            params_file: Some("t.params.bin".into()),
+            num_param_inputs: 2,
+        }
+    }
+
+    #[test]
+    fn unflatten_splits_by_spec() {
+        let e = entry_with_params();
+        let flat: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let parts = unflatten_params(&e, &flat).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].shape(), &[2, 3]);
+        assert_eq!(parts[0].as_f32().unwrap(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(parts[1].as_f32().unwrap(), &[6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn unflatten_rejects_wrong_length() {
+        let e = entry_with_params();
+        assert!(unflatten_params(&e, &[0.0; 8]).is_err(), "too short");
+        assert!(unflatten_params(&e, &[0.0; 10]).is_err(), "too long");
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.elements(), 2);
+        assert_eq!(t.shape(), &[2]);
+        assert!(t.as_f32().is_some());
+        let i = HostTensor::I32(vec![1, 2, 3], vec![3]);
+        assert!(i.as_f32().is_none());
+        assert_eq!(i.elements(), 3);
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs and
+    // are gated on the artifacts directory existing.
+}

@@ -1,0 +1,254 @@
+//! AOT artifact manifest.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every lowered HLO entry point: file name, input tensor specs, output
+//! arity and the analytic FLOPs of the step (used for calibration). It
+//! also dumps initial parameters for the training entry point as raw
+//! little-endian f32 in `artifacts/<name>.params.bin`. This module parses
+//! that manifest.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Element type of a tensor input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed integer.
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" | "float32" => Some(DType::F32),
+            "i32" | "int32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// One tensor argument of an entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Argument name (informational).
+    pub name: String,
+    /// Shape, row-major.
+    pub shape: Vec<i64>,
+    /// Element dtype.
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<i64>() as usize
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    /// Entry name, e.g. `bert_tiny_infer_b8`.
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub hlo_file: String,
+    /// Input tensor specs, in call order. For training entries the
+    /// parameter tensors come first, then the data batch.
+    pub inputs: Vec<TensorSpec>,
+    /// Number of outputs in the result tuple.
+    pub num_outputs: usize,
+    /// Analytic FLOPs of one execution (for calibration).
+    pub flops: f64,
+    /// Parameter-initialization blob, if this entry trains.
+    pub params_file: Option<String>,
+    /// Number of leading inputs that are parameters (training entries).
+    pub num_param_inputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// All entry points.
+    pub entries: Vec<EntryPoint>,
+}
+
+/// Manifest errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    /// File could not be read.
+    #[error("cannot read manifest at {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    /// JSON was malformed.
+    #[error("manifest JSON invalid: {0}")]
+    Json(#[from] json::ParseError),
+    /// Schema violation.
+    #[error("manifest schema error: {0}")]
+    Schema(String),
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| ManifestError::Io(path.clone(), e))?;
+        let v = json::parse(&text)?;
+        Self::from_json(dir, &v)
+    }
+
+    /// Parse from an already-loaded JSON document.
+    pub fn from_json(dir: PathBuf, v: &Json) -> Result<Manifest, ManifestError> {
+        let schema = |m: &str| ManifestError::Schema(m.to_string());
+        let entries_json =
+            v.get("entries").and_then(Json::as_arr).ok_or_else(|| schema("missing 'entries'"))?;
+        let mut entries = Vec::new();
+        for e in entries_json {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| schema("entry missing 'name'"))?
+                .to_string();
+            let hlo_file = e
+                .get("hlo_file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| schema("entry missing 'hlo_file'"))?
+                .to_string();
+            let inputs_json = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| schema("entry missing 'inputs'"))?;
+            let mut inputs = Vec::new();
+            for i in inputs_json {
+                let iname =
+                    i.get("name").and_then(Json::as_str).unwrap_or("arg").to_string();
+                let dtype_s = i
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| schema("input missing 'dtype'"))?;
+                let dtype = DType::parse(dtype_s)
+                    .ok_or_else(|| schema(&format!("unsupported dtype '{dtype_s}'")))?;
+                let shape = i
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| schema("input missing 'shape'"))?
+                    .iter()
+                    .map(|d| d.as_i64().ok_or_else(|| schema("non-integer dim")))
+                    .collect::<Result<Vec<_>, _>>()?;
+                inputs.push(TensorSpec { name: iname, shape, dtype });
+            }
+            entries.push(EntryPoint {
+                name,
+                hlo_file,
+                inputs,
+                num_outputs: e.get("num_outputs").and_then(Json::as_i64).unwrap_or(1) as usize,
+                flops: e.get("flops").and_then(Json::as_f64).unwrap_or(0.0),
+                params_file: e.get("params_file").and_then(Json::as_str).map(str::to_string),
+                num_param_inputs: e.get("num_param_inputs").and_then(Json::as_i64).unwrap_or(0)
+                    as usize,
+            });
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Find an entry by name.
+    pub fn entry(&self, name: &str) -> Option<&EntryPoint> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &EntryPoint) -> PathBuf {
+        self.dir.join(&entry.hlo_file)
+    }
+
+    /// Absolute path of an entry's params blob, if any.
+    pub fn params_path(&self, entry: &EntryPoint) -> Option<PathBuf> {
+        entry.params_file.as_ref().map(|f| self.dir.join(f))
+    }
+}
+
+/// Read a raw little-endian f32 blob (the params file format).
+pub fn read_f32_blob(path: &Path) -> std::io::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("f32 blob length {} not a multiple of 4", bytes.len()),
+        ));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "entries": [
+        {"name": "bert_tiny_infer_b4",
+         "hlo_file": "bert_tiny_infer_b4.hlo.txt",
+         "inputs": [{"name": "tokens", "dtype": "i32", "shape": [4, 32]}],
+         "num_outputs": 1, "flops": 123456.0},
+        {"name": "bert_tiny_train_b8",
+         "hlo_file": "bert_tiny_train_b8.hlo.txt",
+         "inputs": [
+            {"name": "w0", "dtype": "f32", "shape": [64, 64]},
+            {"name": "tokens", "dtype": "i32", "shape": [8, 32]}],
+         "num_outputs": 2, "flops": 1e6,
+         "params_file": "bert_tiny.params.bin", "num_param_inputs": 1}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let v = json::parse(DOC).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp/a"), &v).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("bert_tiny_infer_b4").unwrap();
+        assert_eq!(e.inputs[0].dtype, DType::I32);
+        assert_eq!(e.inputs[0].elements(), 128);
+        assert_eq!(e.num_outputs, 1);
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn training_entry_has_params() {
+        let v = json::parse(DOC).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/x"), &v).unwrap();
+        let e = m.entry("bert_tiny_train_b8").unwrap();
+        assert_eq!(e.num_param_inputs, 1);
+        assert_eq!(m.params_path(e).unwrap(), PathBuf::from("/x/bert_tiny.params.bin"));
+        assert_eq!(m.hlo_path(e), PathBuf::from("/x/bert_tiny_train_b8.hlo.txt"));
+    }
+
+    #[test]
+    fn schema_errors() {
+        let bad = json::parse(r#"{"entries": [{"name": "x"}]}"#).unwrap();
+        assert!(Manifest::from_json(PathBuf::new(), &bad).is_err());
+        let no_entries = json::parse("{}").unwrap();
+        assert!(Manifest::from_json(PathBuf::new(), &no_entries).is_err());
+    }
+
+    #[test]
+    fn f32_blob_roundtrip() {
+        let dir = std::env::temp_dir().join("migperf-test-blob");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let vals = [1.5f32, -2.25, 0.0, 3.0e-5];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_blob(&path).unwrap(), vals);
+        std::fs::write(&path, [0u8; 5]).unwrap();
+        assert!(read_f32_blob(&path).is_err());
+    }
+}

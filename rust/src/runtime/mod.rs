@@ -1,0 +1,27 @@
+//! PJRT runtime: the bridge from AOT artifacts to executable compute.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time,
+//! producing HLO text + `manifest.json` + parameter blobs under
+//! `artifacts/`. At run time this module loads those files into a PJRT
+//! CPU client ([`executor::Engine`]), so the rust request path executes
+//! the *actual* JAX/Pallas-lowered computation with no Python anywhere.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Engine, ExecOutcome, HostTensor};
+pub use manifest::{EntryPoint, Manifest};
+
+/// Default artifacts directory, overridable with `MIGPERF_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("MIGPERF_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when the artifacts directory holds a manifest (i.e. `make
+/// artifacts` has run). Tests and examples use this to skip real-execution
+/// paths gracefully.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

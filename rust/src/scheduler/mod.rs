@@ -1,0 +1,19 @@
+//! Hybrid workload scheduler / partition optimizer.
+//!
+//! The paper's headline future-work item (§5): "hybrid scheduling for
+//! training and inference on MIG and MIG/MPS orchestration", in the
+//! spirit of the reconfigurable-machine-scheduling problem of Tan et al.
+//! (2021) that the paper benchmarks against.
+//!
+//! Given a set of workloads — each a model + batch + kind, inference ones
+//! carrying a latency SLO — the optimizer searches the *complete*
+//! enumerated space of valid MIG layouts ([`mig::enumerate`]) and every
+//! assignment of workloads to instances, scoring each plan by aggregate
+//! goodput, and returns the best plan that satisfies all SLOs. On A100/
+//! A30 the layout space is small enough that exhaustive search is exact
+//! (and fast); the same interface would admit a heuristic for bigger
+//! spaces.
+
+pub mod optimizer;
+
+pub use optimizer::{Objective, Plan, Scheduler, SloWorkload};

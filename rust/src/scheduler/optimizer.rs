@@ -1,0 +1,315 @@
+//! Exhaustive MIG partition optimizer.
+
+use crate::mig::enumerate::{maximal_layouts, Layout};
+use crate::mig::gpu::GpuModel;
+use crate::simgpu::energy::EnergyModel;
+use crate::simgpu::perfmodel::PerfModel;
+use crate::simgpu::resource::ExecResource;
+use crate::workload::spec::WorkloadSpec;
+
+/// A workload to place, with an optional latency SLO (inference).
+#[derive(Debug, Clone)]
+pub struct SloWorkload {
+    /// The workload.
+    pub spec: WorkloadSpec,
+    /// Per-step latency budget in milliseconds (None for training /
+    /// best-effort jobs).
+    pub slo_ms: Option<f64>,
+}
+
+impl SloWorkload {
+    /// Best-effort workload (no SLO).
+    pub fn best_effort(spec: WorkloadSpec) -> Self {
+        SloWorkload { spec, slo_ms: None }
+    }
+
+    /// Latency-bound workload.
+    pub fn with_slo(spec: WorkloadSpec, slo_ms: f64) -> Self {
+        SloWorkload { spec, slo_ms: Some(slo_ms) }
+    }
+}
+
+/// Optimization objective.
+///
+/// Under [`Objective::MaxThroughput`], SLO-bound workloads contribute
+/// *goodput*: their throughput counts only up to the rate their SLO
+/// demands (`batch / slo`), because serving a request faster than its
+/// deadline adds no value. Best-effort workloads (training) contribute
+/// raw throughput. This is what makes the optimizer hand the big slice
+/// to training in the paper's hybrid scenario instead of gold-plating an
+/// inference service that was already meeting its SLO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Maximize summed goodput (samples/s, SLO-capped) across workloads.
+    MaxThroughput,
+    /// Minimize summed power draw while meeting SLOs.
+    MinEnergy,
+}
+
+/// One placement decision in a plan.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// Index into the submitted workload list.
+    pub workload: usize,
+    /// GI profile name the workload got.
+    pub profile: &'static str,
+    /// Predicted per-step latency, ms.
+    pub latency_ms: f64,
+    /// Predicted throughput, samples/s.
+    pub throughput: f64,
+    /// SLO-capped goodput, samples/s (== throughput for best-effort).
+    pub goodput: f64,
+    /// Predicted power draw, W.
+    pub power_w: f64,
+}
+
+/// A complete scheduling plan.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Chosen layout (profile names in offset order).
+    pub layout: Vec<&'static str>,
+    /// Workload → instance assignments.
+    pub assignments: Vec<Assignment>,
+    /// Objective score (higher is better; energy objective is negated).
+    pub score: f64,
+}
+
+/// The optimizer.
+#[derive(Debug)]
+pub struct Scheduler {
+    /// GPU being partitioned.
+    pub gpu: GpuModel,
+    /// Performance model used for predictions.
+    pub perf: PerfModel,
+    /// Energy model used for power predictions.
+    pub energy: EnergyModel,
+}
+
+impl Scheduler {
+    /// Scheduler with default models.
+    pub fn new(gpu: GpuModel) -> Self {
+        Scheduler { gpu, perf: PerfModel::default(), energy: EnergyModel::default() }
+    }
+
+    /// Find the best plan for `workloads` under `objective`.
+    ///
+    /// Returns `None` when no layout can host every workload within its
+    /// SLO (and memory). Exhaustive over layouts × assignments; workload
+    /// counts in the paper's scenarios are ≤ 7, so the assignment search
+    /// (distinct instances, best-profile-first) stays tiny.
+    pub fn plan(&self, workloads: &[SloWorkload], objective: Objective) -> Option<Plan> {
+        if workloads.is_empty() {
+            return None;
+        }
+        let mut best: Option<Plan> = None;
+        for layout in maximal_layouts(self.gpu) {
+            if layout.len() < workloads.len() {
+                continue; // not enough instances
+            }
+            if let Some(plan) = self.best_assignment(&layout, workloads, objective) {
+                let better = match &best {
+                    None => true,
+                    Some(b) => plan.score > b.score,
+                };
+                if better {
+                    best = Some(plan);
+                }
+            }
+        }
+        best
+    }
+
+    /// Best assignment of workloads onto a specific layout, or None if
+    /// some workload cannot meet its SLO anywhere.
+    fn best_assignment(
+        &self,
+        layout: &Layout,
+        workloads: &[SloWorkload],
+        objective: Objective,
+    ) -> Option<Plan> {
+        // Predict each workload on each distinct instance of the layout.
+        let resources: Vec<ExecResource> = layout
+            .placements
+            .iter()
+            .map(|p| ExecResource::from_gi(self.gpu, p.profile))
+            .collect();
+        // candidates[w][i] = Some(assignment) if workload w fits instance i.
+        let candidates: Vec<Vec<Option<Assignment>>> = workloads
+            .iter()
+            .enumerate()
+            .map(|(wi, w)| {
+                resources
+                    .iter()
+                    .enumerate()
+                    .map(|(ri, res)| {
+                        let est = self.perf.step(res, &w.spec.step_cost()).ok()?;
+                        let latency_ms = est.seconds * 1e3;
+                        let throughput = w.spec.batch as f64 / est.seconds;
+                        let goodput = match w.slo_ms {
+                            Some(slo) => {
+                                if latency_ms > slo {
+                                    return None;
+                                }
+                                // Value saturates at the SLO-demanded rate.
+                                throughput.min(w.spec.batch as f64 * 1e3 / slo)
+                            }
+                            None => throughput,
+                        };
+                        Some(Assignment {
+                            workload: wi,
+                            profile: layout.placements[ri].profile.name,
+                            latency_ms,
+                            throughput,
+                            goodput,
+                            power_w: self.energy.marginal_power_w(res, est.gract),
+                        })
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // Branch-and-bound over injective assignments (≤7! worst case,
+        // but layouts have ≤7 instances and pruning cuts hard).
+        let mut used = vec![false; resources.len()];
+        let mut chosen: Vec<Assignment> = Vec::new();
+        let mut best: Option<(f64, Vec<Assignment>)> = None;
+        Self::search(&candidates, objective, 0, &mut used, &mut chosen, &mut best);
+        let (score, assignments) = best?;
+        Some(Plan { layout: layout.profile_names(), assignments, score })
+    }
+
+    fn score_of(a: &Assignment, objective: Objective) -> f64 {
+        match objective {
+            Objective::MaxThroughput => a.goodput,
+            Objective::MinEnergy => -a.power_w,
+        }
+    }
+
+    fn search(
+        candidates: &[Vec<Option<Assignment>>],
+        objective: Objective,
+        w: usize,
+        used: &mut [bool],
+        chosen: &mut Vec<Assignment>,
+        best: &mut Option<(f64, Vec<Assignment>)>,
+    ) {
+        if w == candidates.len() {
+            let score: f64 = chosen.iter().map(|a| Self::score_of(a, objective)).sum();
+            if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+                *best = Some((score, chosen.clone()));
+            }
+            return;
+        }
+        for (ri, cand) in candidates[w].iter().enumerate() {
+            if used[ri] {
+                continue;
+            }
+            if let Some(a) = cand {
+                used[ri] = true;
+                chosen.push(a.clone());
+                Self::search(candidates, objective, w + 1, used, chosen, best);
+                chosen.pop();
+                used[ri] = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::lookup;
+    use crate::workload::spec::WorkloadSpec;
+
+    fn bert_train() -> SloWorkload {
+        SloWorkload::best_effort(WorkloadSpec::training(lookup("bert-base").unwrap(), 32, 128))
+    }
+
+    fn resnet_serve(slo_ms: f64) -> SloWorkload {
+        SloWorkload::with_slo(WorkloadSpec::inference(lookup("resnet50").unwrap(), 4, 224), slo_ms)
+    }
+
+    #[test]
+    fn paper_hybrid_scenario_produces_mixed_layout() {
+        // §1's motivating setup: train + two inference services on one
+        // A100. The optimizer should give training the big slice.
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let workloads = [bert_train(), resnet_serve(20.0), resnet_serve(20.0)];
+        let plan = sched.plan(&workloads, Objective::MaxThroughput).expect("feasible");
+        assert_eq!(plan.assignments.len(), 3);
+        // Training gets the largest instance in the plan.
+        let train_profile = plan.assignments.iter().find(|a| a.workload == 0).unwrap().profile;
+        for a in &plan.assignments {
+            let train_slices: u32 = train_profile.split('g').next().unwrap().parse().unwrap();
+            let this: u32 = a.profile.split('g').next().unwrap().parse().unwrap();
+            assert!(train_slices >= this, "training must own the biggest slice: {plan:?}");
+        }
+        // All SLOs met by construction.
+        for a in plan.assignments.iter().filter(|a| a.workload > 0) {
+            assert!(a.latency_ms <= 20.0);
+        }
+    }
+
+    #[test]
+    fn single_training_job_gets_whole_gpu() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let plan = sched.plan(&[bert_train()], Objective::MaxThroughput).unwrap();
+        assert_eq!(plan.assignments[0].profile, "7g.80gb");
+        assert_eq!(plan.layout, vec!["7g.80gb"]);
+    }
+
+    #[test]
+    fn infeasible_slo_returns_none() {
+        let sched = Scheduler::new(GpuModel::A30_24GB);
+        // 0.01 ms SLO is physically impossible (launch overhead alone is
+        // 0.45 ms).
+        assert!(sched.plan(&[resnet_serve(0.01)], Objective::MaxThroughput).is_none());
+    }
+
+    #[test]
+    fn too_many_workloads_for_device() {
+        let sched = Scheduler::new(GpuModel::A30_24GB);
+        let ws: Vec<_> = (0..5).map(|_| resnet_serve(1000.0)).collect();
+        assert!(sched.plan(&ws, Objective::MaxThroughput).is_none(), "A30 has at most 4 GIs");
+    }
+
+    #[test]
+    fn four_services_land_on_four_slices() {
+        let sched = Scheduler::new(GpuModel::A30_24GB);
+        let ws: Vec<_> = (0..4).map(|_| resnet_serve(1000.0)).collect();
+        let plan = sched.plan(&ws, Objective::MaxThroughput).unwrap();
+        assert_eq!(plan.layout, vec!["1g.6gb"; 4]);
+    }
+
+    #[test]
+    fn energy_objective_prefers_smaller_slices() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let w = [resnet_serve(1000.0)];
+        let tput_plan = sched.plan(&w, Objective::MaxThroughput).unwrap();
+        let energy_plan = sched.plan(&w, Objective::MinEnergy).unwrap();
+        let slices = |p: &Plan| -> u32 {
+            p.assignments[0].profile.split('g').next().unwrap().parse().unwrap()
+        };
+        assert!(slices(&energy_plan) <= slices(&tput_plan));
+        assert!(energy_plan.assignments[0].power_w <= tput_plan.assignments[0].power_w);
+    }
+
+    #[test]
+    fn empty_workloads_rejected() {
+        let sched = Scheduler::new(GpuModel::A30_24GB);
+        assert!(sched.plan(&[], Objective::MaxThroughput).is_none());
+    }
+
+    #[test]
+    fn oom_workload_excluded_from_small_slices() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let big = SloWorkload::best_effort(WorkloadSpec::training(
+            lookup("bert-large").unwrap(),
+            128,
+            128,
+        ));
+        let plan = sched.plan(&[big], Objective::MaxThroughput).unwrap();
+        // Must land on an instance with enough FB (>= 3g.40gb).
+        assert!(["3g.40gb", "4g.40gb", "7g.80gb"].contains(&plan.assignments[0].profile));
+    }
+}

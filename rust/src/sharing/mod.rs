@@ -1,0 +1,13 @@
+//! GPU-sharing technologies compared against MIG.
+//!
+//! The paper's GPU-sharing characterization (§4.5) pits MIG's physical
+//! isolation against NVIDIA MPS (software sharing). [`mps`] implements the
+//! MPS contention model; [`timeslice`] adds the classic time-slicing
+//! baseline (plain CUDA context switching) as an ablation beyond the
+//! paper, since it is the default when neither MIG nor MPS is configured.
+
+pub mod mps;
+pub mod timeslice;
+
+pub use mps::MpsModel;
+pub use timeslice::TimeSliceModel;

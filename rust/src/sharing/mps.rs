@@ -1,0 +1,210 @@
+//! MPS (Multi-Process Service) sharing model.
+//!
+//! MPS lets multiple processes share a GPU without context switches, but —
+//! unlike MIG — provides **no physical isolation**: clients contend for
+//! SMs, L2 and HBM bandwidth. The paper's GPU-sharing characterization
+//! (§4.5, Figs 4–7, 10–11) turns on exactly this difference:
+//!
+//! * small requests: MPS ≈ MIG on average latency (contention is rare);
+//! * large batches / large models: MPS tail latency blows up and becomes
+//!   unstable, while MIG stays flat (physical isolation).
+//!
+//! The model prices a request in two parts: a fair-share slowdown that
+//! grows smoothly with how much of the machine the co-runners demand, and
+//! stochastic contention spikes (log-normal inflation) whose probability
+//! scales with the request's own memory traffic relative to L2 capacity —
+//! heavy traffic both suffers and causes interference.
+
+use crate::models::cost::StepCost;
+use crate::simgpu::perfmodel::{PerfError, PerfModel, StepEstimate};
+use crate::simgpu::resource::ExecResource;
+use crate::util::prng::Prng;
+
+/// Tunables of the MPS interference model.
+#[derive(Debug, Clone)]
+pub struct MpsModel {
+    /// Fair-share slowdown coefficient per busy co-runner.
+    pub contention_alpha: f64,
+    /// Base probability of a contention spike per request at reference
+    /// traffic (one full L2's worth of data).
+    pub spike_prob_at_ref: f64,
+    /// Log-normal σ of spike inflation (μ is derived from severity).
+    pub spike_sigma: f64,
+    /// Mean multiplicative inflation when a spike hits.
+    pub spike_mean_inflation: f64,
+}
+
+impl Default for MpsModel {
+    fn default() -> Self {
+        MpsModel {
+            contention_alpha: 0.18,
+            spike_prob_at_ref: 0.35,
+            spike_sigma: 0.55,
+            spike_mean_inflation: 2.6,
+        }
+    }
+}
+
+impl MpsModel {
+    /// Deterministic fair-share slowdown multiplier with `busy` active
+    /// co-runners (not counting the request's own process).
+    pub fn fair_share_slowdown(&self, busy: u32) -> f64 {
+        1.0 + self.contention_alpha * busy as f64
+    }
+
+    /// Probability that this request triggers/suffers a contention spike,
+    /// given its HBM traffic and the GPU's L2 size. More co-runners and
+    /// more traffic → more collisions.
+    pub fn spike_probability(&self, cost: &StepCost, res: &ExecResource, busy: u32) -> f64 {
+        if busy == 0 {
+            return 0.0;
+        }
+        let l2_bytes = res.spec().l2_mib * (1u64 << 20) as f64;
+        let traffic_ratio = (cost.hbm_bytes / (l2_bytes * 32.0)).min(4.0);
+        let co = (busy as f64 / 3.0).min(1.5);
+        (self.spike_prob_at_ref * traffic_ratio * co).min(0.95)
+    }
+
+    /// Price one request on an MPS client.
+    ///
+    /// `isolated` must be the estimate for this cost on a *whole-GPU*
+    /// resource (MPS clients launch on the full SM array); `busy` is the
+    /// number of other clients with work in flight; `rng` drives the
+    /// stochastic spike draw.
+    pub fn request_time(
+        &self,
+        isolated: &StepEstimate,
+        cost: &StepCost,
+        res: &ExecResource,
+        busy: u32,
+        rng: &mut Prng,
+    ) -> f64 {
+        let mut t = isolated.seconds * self.fair_share_slowdown(busy);
+        let p = self.spike_probability(cost, res, busy);
+        if rng.chance(p) {
+            // Log-normal with mean `spike_mean_inflation`:
+            // mean = exp(mu + sigma^2/2)  =>  mu = ln(mean) - sigma^2/2.
+            let mu = self.spike_mean_inflation.ln() - self.spike_sigma * self.spike_sigma / 2.0;
+            let inflation = rng.lognormal(mu, self.spike_sigma).max(1.0);
+            t *= inflation;
+        }
+        t
+    }
+
+    /// Convenience: price a request end-to-end from a cost, running the
+    /// roofline for the isolated time internally.
+    pub fn step(
+        &self,
+        pm: &PerfModel,
+        gpu: &ExecResource,
+        cost: &StepCost,
+        busy: u32,
+        rng: &mut Prng,
+    ) -> Result<f64, PerfError> {
+        debug_assert!(
+            gpu.compute_fraction == 1.0,
+            "MPS isolated estimate must be priced on the whole GPU"
+        );
+        let isolated = pm.step(gpu, cost)?;
+        Ok(self.request_time(&isolated, cost, gpu, busy, rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::GpuModel;
+    use crate::models::cost::{infer_cost, Precision};
+    use crate::models::zoo;
+    use crate::util::stats::percentile;
+
+    fn whole() -> ExecResource {
+        ExecResource::whole_gpu(GpuModel::A30_24GB)
+    }
+
+    fn sample_latencies(batch: u32, busy: u32, n: usize, model: &str) -> Vec<f64> {
+        let mps = MpsModel::default();
+        let pm = PerfModel::default();
+        let gpu = whole();
+        let m = zoo::lookup(model).unwrap();
+        let cost = infer_cost(m, batch, 128, Precision::Half);
+        let mut rng = Prng::new(1234);
+        (0..n).map(|_| mps.step(&pm, &gpu, &cost, busy, &mut rng).unwrap() * 1e3).collect()
+    }
+
+    #[test]
+    fn no_corunners_no_interference() {
+        let lat = sample_latencies(8, 0, 500, "resnet50");
+        let spread = percentile(&lat, 99.0) / percentile(&lat, 50.0);
+        assert!((spread - 1.0).abs() < 1e-9, "solo MPS must be deterministic, spread={spread}");
+    }
+
+    #[test]
+    fn fig4_small_batch_mps_close_to_isolated() {
+        // Paper Fig 4: at small batch, MPS average ≈ MIG average.
+        let mps = MpsModel::default();
+        let pm = PerfModel::default();
+        let gpu = whole();
+        let m = zoo::lookup("resnet18").unwrap();
+        let cost = infer_cost(m, 1, 128, Precision::Half);
+        let isolated = pm.step(&gpu, &cost).unwrap().seconds;
+        let mut rng = Prng::new(7);
+        let n = 2000;
+        let mean: f64 = (0..n)
+            .map(|_| mps.step(&pm, &gpu, &cost, 1, &mut rng).unwrap())
+            .sum::<f64>()
+            / n as f64;
+        assert!(mean / isolated < 1.45, "small-batch MPS mean inflation {}", mean / isolated);
+    }
+
+    #[test]
+    fn fig6_tail_gap_grows_with_batch() {
+        // Paper Fig 6: p99 gap vs batch size grows.
+        let tail_ratio = |batch: u32| {
+            let lat = sample_latencies(batch, 1, 4000, "resnet50");
+            percentile(&lat, 99.0) / percentile(&lat, 50.0)
+        };
+        let small = tail_ratio(1);
+        let large = tail_ratio(32);
+        assert!(large > small * 1.15, "tail blow-up must grow with batch: {small} → {large}");
+    }
+
+    #[test]
+    fn fig7_larger_models_suffer_more() {
+        // Paper Fig 7: MIG beats MPS more for larger models at batch 8.
+        let spread = |model: &str| {
+            let lat = sample_latencies(8, 1, 4000, model);
+            percentile(&lat, 99.0) / percentile(&lat, 50.0)
+        };
+        assert!(
+            spread("resnet101") > spread("resnet18"),
+            "resnet101 spread {} vs resnet18 {}",
+            spread("resnet101"),
+            spread("resnet18")
+        );
+    }
+
+    #[test]
+    fn fair_share_monotone_in_busy() {
+        let mps = MpsModel::default();
+        assert_eq!(mps.fair_share_slowdown(0), 1.0);
+        assert!(mps.fair_share_slowdown(3) > mps.fair_share_slowdown(1));
+    }
+
+    #[test]
+    fn spike_probability_bounded() {
+        let mps = MpsModel::default();
+        let gpu = whole();
+        let m = zoo::lookup("bert-large").unwrap();
+        let cost = infer_cost(m, 64, 512, Precision::Half);
+        let p = mps.spike_probability(&cost, &gpu, 10);
+        assert!((0.0..=0.95).contains(&p));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sample_latencies(8, 2, 100, "resnet50");
+        let b = sample_latencies(8, 2, 100, "resnet50");
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,101 @@
+//! Time-slicing baseline (default CUDA multi-process behaviour).
+//!
+//! Without MPS or MIG, concurrent processes on one GPU are time-sliced by
+//! the driver with full context switches between them. The paper cites
+//! this as the failure mode MPS was designed to avoid ("costly context
+//! switches caused by multiple workloads in the same GPU", §2.2). The
+//! model is included as an ablation baseline for the sharing benches:
+//! requests serialize, and each switch between distinct processes pays a
+//! fixed context-switch penalty.
+
+use crate::simgpu::perfmodel::StepEstimate;
+
+/// Time-slicing cost model.
+#[derive(Debug, Clone)]
+pub struct TimeSliceModel {
+    /// Context-switch latency between processes, seconds. The driver swaps
+    /// the full GPU context (~100 µs – 1 ms depending on residency).
+    pub context_switch_s: f64,
+    /// Scheduler quantum, seconds: how long one process runs before the
+    /// driver considers switching.
+    pub quantum_s: f64,
+}
+
+impl Default for TimeSliceModel {
+    fn default() -> Self {
+        TimeSliceModel { context_switch_s: 0.5e-3, quantum_s: 2e-3 }
+    }
+}
+
+impl TimeSliceModel {
+    /// Expected completion time for a request whose isolated estimate is
+    /// `isolated`, with `busy` other processes round-robin sharing the
+    /// GPU.
+    ///
+    /// With `n = busy + 1` runnable processes, a request that needs `w`
+    /// seconds of GPU time waits `busy` quanta (plus switches) for every
+    /// quantum it runs, so the turnaround is `w·n` plus switch overhead
+    /// for every quantum boundary crossed.
+    pub fn request_time(&self, isolated: &StepEstimate, busy: u32) -> f64 {
+        let n = (busy + 1) as f64;
+        let w = isolated.seconds;
+        let quanta = (w / self.quantum_s).ceil().max(1.0);
+        let switch_overhead = quanta * n * self.context_switch_s;
+        w * n + switch_overhead
+    }
+
+    /// Effective throughput degradation factor vs exclusive access.
+    pub fn slowdown(&self, isolated: &StepEstimate, busy: u32) -> f64 {
+        self.request_time(isolated, busy) / isolated.seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(seconds: f64) -> StepEstimate {
+        StepEstimate { seconds, gract: 0.8, compute_bound: true, fb_bytes: 0.0 }
+    }
+
+    #[test]
+    fn solo_still_pays_switch_overhead_only_minimally() {
+        let ts = TimeSliceModel::default();
+        let e = est(0.010);
+        let t = ts.request_time(&e, 0);
+        assert!(t >= 0.010);
+        assert!(t < 0.014, "solo overhead too large: {t}");
+    }
+
+    #[test]
+    fn slowdown_exceeds_fair_share() {
+        // Unlike MPS, time-slicing pays context switches on top of the
+        // n-way share, so slowdown > n.
+        let ts = TimeSliceModel::default();
+        let e = est(0.010);
+        for busy in [1u32, 3, 7] {
+            let s = ts.slowdown(&e, busy);
+            assert!(s > (busy + 1) as f64, "busy={busy}: slowdown {s} <= fair share");
+        }
+    }
+
+    #[test]
+    fn worse_than_mps_fair_share() {
+        use crate::sharing::mps::MpsModel;
+        let ts = TimeSliceModel::default();
+        let mps = MpsModel::default();
+        let e = est(0.010);
+        // MPS deterministic part for 3 busy co-runners vs time-slicing.
+        let t_mps = e.seconds * mps.fair_share_slowdown(3);
+        let t_slice = ts.request_time(&e, 3);
+        assert!(t_slice > t_mps, "time-slicing {t_slice} must exceed MPS {t_mps}");
+    }
+
+    #[test]
+    fn monotone_in_busy() {
+        let ts = TimeSliceModel::default();
+        let e = est(0.005);
+        let times: Vec<f64> = (0..5).map(|b| ts.request_time(&e, b)).collect();
+        assert!(times.windows(2).all(|w| w[1] > w[0]));
+    }
+}

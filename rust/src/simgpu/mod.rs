@@ -1,0 +1,20 @@
+//! Simulated-GPU substrate: resources, roofline pricing, energy and the
+//! discrete-event core.
+//!
+//! This is the substitution for the paper's physical execution of
+//! workloads on A100/A30 hardware (DESIGN.md §1): the roofline model
+//! prices each training/inference step on the resource slice it runs on,
+//! the energy model integrates board power over the simulated timeline,
+//! and the DES drives open-loop serving experiments. `runtime::calibrate`
+//! anchors the model against real HLO execution of the tiny L2 models.
+
+pub mod calibrate;
+pub mod desim;
+pub mod energy;
+pub mod perfmodel;
+pub mod resource;
+
+pub use desim::Des;
+pub use energy::EnergyModel;
+pub use perfmodel::{PerfError, PerfModel, StepEstimate};
+pub use resource::{ExecResource, ShareMode};

@@ -1,0 +1,194 @@
+//! Execution resources: the slice of a GPU a workload actually runs on.
+//!
+//! Unifies the three ways the paper runs workloads — a MIG GPU instance,
+//! an MPS share of a whole GPU, or the whole GPU exclusively — into one
+//! descriptor the roofline model prices against.
+
+use crate::mig::gpu::{GpuModel, GpuSpec};
+use crate::mig::profile::GiProfile;
+
+/// How the resource is carved out of the physical GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShareMode {
+    /// Exclusive whole-GPU access.
+    Exclusive,
+    /// A MIG GPU instance: physically isolated compute + memory.
+    Mig,
+    /// An MPS share: full SM access, software scheduling, no isolation.
+    Mps,
+}
+
+/// A concrete execution resource.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecResource {
+    /// Underlying physical GPU.
+    pub gpu: GpuModel,
+    /// Carve-out mode.
+    pub mode: ShareMode,
+    /// Fraction of the GPU's compute (SMs / tensor cores) available.
+    pub compute_fraction: f64,
+    /// Fraction of HBM bandwidth available.
+    pub bandwidth_fraction: f64,
+    /// Fraction of L2 available.
+    pub l2_fraction: f64,
+    /// Frame-buffer capacity in bytes.
+    pub fb_capacity_bytes: f64,
+    /// SMs available (drives the batch-saturation curve).
+    pub sm_count: u32,
+    /// Human label for reports (profile name, "mps", "full").
+    pub label: String,
+}
+
+impl ExecResource {
+    /// Whole GPU, exclusive.
+    pub fn whole_gpu(gpu: GpuModel) -> Self {
+        let s = gpu.spec();
+        ExecResource {
+            gpu,
+            mode: ShareMode::Exclusive,
+            compute_fraction: 1.0,
+            bandwidth_fraction: 1.0,
+            l2_fraction: 1.0,
+            fb_capacity_bytes: s.memory_gib * GIB,
+            sm_count: s.total_sms,
+            label: "full".to_string(),
+        }
+    }
+
+    /// A MIG GPU instance of the given profile.
+    pub fn from_gi(gpu: GpuModel, profile: &GiProfile) -> Self {
+        ExecResource {
+            gpu,
+            mode: ShareMode::Mig,
+            compute_fraction: profile.compute_fraction(gpu),
+            bandwidth_fraction: profile.memory_fraction(gpu),
+            l2_fraction: profile.memory_fraction(gpu),
+            fb_capacity_bytes: profile.memory_gib * GIB,
+            sm_count: profile.sm_count(gpu),
+            label: profile.name.to_string(),
+        }
+    }
+
+    /// One of `n` MPS client processes sharing the whole GPU.
+    ///
+    /// MPS does not partition: each client may use every SM and the full
+    /// bandwidth, but *on average* gets `1/n` of each when all clients are
+    /// busy. The interference dynamics live in `sharing::mps`; this
+    /// resource carries the fair-share averages.
+    pub fn mps_share(gpu: GpuModel, n_clients: u32) -> Self {
+        assert!(n_clients >= 1);
+        let s = gpu.spec();
+        let f = 1.0 / n_clients as f64;
+        ExecResource {
+            gpu,
+            mode: ShareMode::Mps,
+            compute_fraction: f,
+            bandwidth_fraction: f,
+            l2_fraction: f,
+            // MPS shares the whole FB; a client can use all of it (minus
+            // the other clients' residency, enforced at admission).
+            fb_capacity_bytes: s.memory_gib * GIB,
+            sm_count: s.total_sms, // full SM reach — key MPS/MIG difference
+            label: format!("mps/{n_clients}"),
+        }
+    }
+
+    /// An MPS client provisioned with `CUDA_MPS_ACTIVE_THREAD_PERCENTAGE`.
+    ///
+    /// Real MPS deployments cap each client's SM reach to reduce
+    /// interference; the cap bounds both the client's peak compute and
+    /// its SM count (which drives the saturation curve). Extension beyond
+    /// the paper's default-MPS experiments.
+    pub fn mps_share_limited(gpu: GpuModel, n_clients: u32, active_thread_pct: f64) -> Self {
+        assert!((0.0..=100.0).contains(&active_thread_pct) && active_thread_pct > 0.0);
+        let mut r = Self::mps_share(gpu, n_clients);
+        let cap = active_thread_pct / 100.0;
+        r.compute_fraction = r.compute_fraction.min(cap);
+        r.sm_count = ((gpu.spec().total_sms as f64 * cap).round() as u32).max(1);
+        r.label = format!("mps/{n_clients}@{active_thread_pct}%");
+        r
+    }
+
+    /// Spec of the underlying GPU.
+    pub fn spec(&self) -> &'static GpuSpec {
+        self.gpu.spec()
+    }
+
+    /// Peak tensor FLOP/s available to this resource.
+    pub fn peak_flops(&self, half_precision: bool) -> f64 {
+        let s = self.spec();
+        let whole = if half_precision { s.peak_tf16 } else { s.peak_tf32 };
+        whole * 1e12 * self.compute_fraction
+    }
+
+    /// HBM bandwidth (bytes/s) available to this resource.
+    pub fn bandwidth(&self) -> f64 {
+        self.spec().mem_bw_gbps * 1e9 * self.bandwidth_fraction
+    }
+}
+
+/// Bytes per GiB.
+pub const GIB: f64 = (1u64 << 30) as f64;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::lookup;
+
+    #[test]
+    fn whole_gpu_owns_everything() {
+        let r = ExecResource::whole_gpu(GpuModel::A100_80GB);
+        assert_eq!(r.compute_fraction, 1.0);
+        assert_eq!(r.sm_count, 98);
+        assert!((r.peak_flops(true) - 312e12).abs() < 1e6);
+        assert!((r.bandwidth() - 2039e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn gi_resources_scale_with_profile() {
+        let p = lookup(GpuModel::A100_80GB, "2g.20gb").unwrap();
+        let r = ExecResource::from_gi(GpuModel::A100_80GB, p);
+        assert!((r.compute_fraction - 2.0 / 7.0).abs() < 1e-12);
+        assert!((r.bandwidth_fraction - 0.25).abs() < 1e-12);
+        assert_eq!(r.sm_count, 28);
+        assert_eq!(r.mode, ShareMode::Mig);
+        assert!((r.fb_capacity_bytes / GIB - 19.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mps_share_keeps_full_sm_reach() {
+        let r = ExecResource::mps_share(GpuModel::A30_24GB, 4);
+        assert_eq!(r.sm_count, 56, "MPS clients see all SMs");
+        assert!((r.compute_fraction - 0.25).abs() < 1e-12);
+        assert_eq!(r.mode, ShareMode::Mps);
+        // FB is shared, not partitioned.
+        assert!((r.fb_capacity_bytes / GIB - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mig_vs_mps_quarter_same_average_compute() {
+        let p = lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
+        let mig = ExecResource::from_gi(GpuModel::A30_24GB, p);
+        let mps = ExecResource::mps_share(GpuModel::A30_24GB, 4);
+        assert!((mig.peak_flops(true) - mps.peak_flops(true)).abs() < 1e6);
+    }
+
+    #[test]
+    fn mps_active_thread_percentage_caps_reach() {
+        let free = ExecResource::mps_share(GpuModel::A100_80GB, 4);
+        let capped = ExecResource::mps_share_limited(GpuModel::A100_80GB, 4, 25.0);
+        assert!(capped.sm_count < free.sm_count, "ATP must cap SM reach");
+        assert!((capped.sm_count as f64 - 98.0 * 0.25).abs() <= 1.0);
+        assert!(capped.peak_flops(true) <= free.peak_flops(true));
+        assert!(capped.label.contains("25"));
+        // A generous cap (> fair share) changes nothing about compute.
+        let loose = ExecResource::mps_share_limited(GpuModel::A100_80GB, 4, 90.0);
+        assert_eq!(loose.compute_fraction, free.compute_fraction);
+    }
+
+    #[test]
+    fn half_vs_single_precision_peaks() {
+        let r = ExecResource::whole_gpu(GpuModel::A30_24GB);
+        assert!(r.peak_flops(true) > r.peak_flops(false));
+    }
+}

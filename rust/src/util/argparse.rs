@@ -1,0 +1,248 @@
+//! Tiny command-line argument parser for the `migperf` CLI.
+//!
+//! No `clap` in the offline toolchain, so this module implements the small
+//! subset MIGPerf needs: subcommands, `--flag`, `--key value` /
+//! `--key=value` options with typed accessors, positional arguments, and
+//! generated help text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative description of one option for help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without leading dashes, e.g. `batch-size`.
+    pub name: &'static str,
+    /// Placeholder for the value in help output; empty for boolean flags.
+    pub value: &'static str,
+    /// One-line description.
+    pub help: &'static str,
+    /// Default rendered in help output (informational only).
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: subcommand, options, flags and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-option token, if any (the subcommand).
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Errors from argument parsing or typed access.
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    /// An option that expects a value appeared last without one.
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    /// Typed accessor failed to parse the value.
+    #[error("invalid value for --{name}: '{value}' ({expected})")]
+    BadValue {
+        /// Option name.
+        name: String,
+        /// Offending raw value.
+        value: String,
+        /// What was expected.
+        expected: &'static str,
+    },
+    /// A required option was absent.
+    #[error("missing required option --{0}")]
+    Missing(String),
+}
+
+impl Args {
+    /// Parse a raw token stream (usually `std::env::args().skip(1)`).
+    ///
+    /// Every `--name` token consumes the following token as its value
+    /// unless it contains `=` or the name appears in `bool_flags`.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        tokens: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, ArgError> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) => {
+                            out.opts.insert(body.to_string(), v);
+                        }
+                        None => return Err(ArgError::MissingValue(body.to_string())),
+                    }
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Required string option.
+    pub fn required(&self, name: &str) -> Result<String, ArgError> {
+        self.get(name).map(str::to_string).ok_or_else(|| ArgError::Missing(name.to_string()))
+    }
+
+    /// Typed option access with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|_| ArgError::BadValue {
+                name: name.to_string(),
+                value: raw.to_string(),
+                expected: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Comma-separated list of a parseable type, e.g. `--batch 1,2,4`.
+    pub fn list_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, ArgError>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| ArgError::BadValue {
+                        name: name.to_string(),
+                        value: s.to_string(),
+                        expected: std::any::type_name::<T>(),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// True if the boolean flag was present.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments after the subcommand.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(program: &str, command: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{about}\n");
+    let _ = writeln!(s, "USAGE:\n  {program} {command} [OPTIONS]\n");
+    if !opts.is_empty() {
+        let _ = writeln!(s, "OPTIONS:");
+        for o in opts {
+            let left = if o.value.is_empty() {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <{}>", o.name, o.value)
+            };
+            let default = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  {left:<28} {}{default}", o.help);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(toks("bench --model bert-base --batch 8"), &[]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get("model"), Some("bert-base"));
+        assert_eq!(a.parse_or::<u32>("batch", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(toks("run --gi=1g.10gb"), &[]).unwrap();
+        assert_eq!(a.get("gi"), Some("1g.10gb"));
+    }
+
+    #[test]
+    fn bool_flags_do_not_consume() {
+        let a = Args::parse(toks("run --real positional"), &["real"]).unwrap();
+        assert!(a.flag("real"));
+        assert_eq!(a.positional(), &["positional".to_string()]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(toks("x --batch 1,2,4,8"), &[]).unwrap();
+        assert_eq!(a.list_or::<u32>("batch", &[]).unwrap(), vec![1, 2, 4, 8]);
+        let b = Args::parse(toks("x"), &[]).unwrap();
+        assert_eq!(b.list_or::<u32>("batch", &[16]).unwrap(), vec![16]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(matches!(
+            Args::parse(toks("x --model"), &[]),
+            Err(ArgError::MissingValue(m)) if m == "model"
+        ));
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = Args::parse(toks("x --batch nope"), &[]).unwrap();
+        assert!(matches!(a.parse_or::<u32>("batch", 1), Err(ArgError::BadValue { .. })));
+    }
+
+    #[test]
+    fn required_missing() {
+        let a = Args::parse(toks("x"), &[]).unwrap();
+        assert!(matches!(a.required("model"), Err(ArgError::Missing(_))));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(toks("x"), &[]).unwrap();
+        assert_eq!(a.str_or("out", "results"), "results");
+        assert_eq!(a.parse_or::<f64>("rate", 2.5).unwrap(), 2.5);
+        assert!(!a.flag("real"));
+    }
+
+    #[test]
+    fn help_renders_options() {
+        let h = render_help(
+            "migperf",
+            "bench",
+            "Run a benchmark",
+            &[OptSpec { name: "model", value: "NAME", help: "model to run", default: Some("bert-base") }],
+        );
+        assert!(h.contains("--model <NAME>"));
+        assert!(h.contains("[default: bert-base]"));
+    }
+}

@@ -1,0 +1,15 @@
+//! First-party substrates: PRNG, statistics, time series, JSON, argument
+//! parsing, property testing and table rendering.
+//!
+//! The offline build environment provides no general-purpose crates beyond
+//! the `xla` toolchain, so these are implemented from scratch and treated
+//! as part of the system inventory (DESIGN.md §5.13).
+
+pub mod argparse;
+pub mod json;
+pub mod plot;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+pub mod timeseries;

@@ -1,0 +1,130 @@
+//! ASCII line charts for the terminal visualizer.
+//!
+//! The paper's visualizer component renders benchmark series for quick
+//! analysis (§3.2). Sparklines (`util::table::sparkline`) cover inline
+//! use; this module draws full charts with axes and multiple labelled
+//! series so `cargo bench` output approximates the paper's figures
+//! without plotting tools.
+
+use std::fmt::Write as _;
+
+/// One labelled series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct PlotSeries {
+    /// Legend label.
+    pub label: String,
+    /// Data points (x need not be uniform).
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Glyphs assigned to series, in order.
+const GLYPHS: [char; 8] = ['●', '▲', '■', '◆', '○', '△', '□', '◇'];
+
+/// Render a chart of the given pixel-grid size (columns × rows of text).
+///
+/// Y is linearly scaled between the data extremes; X likewise. Axis
+/// labels show the extremes. Overlapping series draw in order, later
+/// series on top.
+pub fn render(series: &[PlotSeries], width: usize, height: usize) -> String {
+    assert!(width >= 16 && height >= 4, "chart too small");
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if pts.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = glyph;
+        }
+    }
+    let mut out = String::new();
+    let ylab = |v: f64| format!("{v:>9.3}");
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            ylab(y1)
+        } else if r == height - 1 {
+            ylab(y0)
+        } else {
+            " ".repeat(9)
+        };
+        let line: String = row.iter().collect();
+        let _ = writeln!(out, "{label} │{line}");
+    }
+    let _ = writeln!(out, "{} └{}", " ".repeat(9), "─".repeat(width));
+    let xlab_l = format!("{x0:.2}");
+    let xlab_r = format!("{x1:.2}");
+    let pad = width.saturating_sub(xlab_l.len() + xlab_r.len());
+    let _ = writeln!(out, "{}  {}{}{}", " ".repeat(9), xlab_l, " ".repeat(pad), xlab_r);
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "{}  {} {}", " ".repeat(9), GLYPHS[si % GLYPHS.len()], s.label);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(label: &str, f: impl Fn(f64) -> f64) -> PlotSeries {
+        PlotSeries {
+            label: label.into(),
+            points: (0..10).map(|i| (i as f64, f(i as f64))).collect(),
+        }
+    }
+
+    #[test]
+    fn renders_axes_and_legend() {
+        let out = render(&[line("up", |x| x), line("down", |x| 9.0 - x)], 40, 10);
+        assert!(out.contains('│'));
+        assert!(out.contains('└'));
+        assert!(out.contains("● up"));
+        assert!(out.contains("▲ down"));
+        // Extremes labelled.
+        assert!(out.contains("9.000"));
+        assert!(out.contains("0.000"));
+    }
+
+    #[test]
+    fn monotone_series_hits_corners() {
+        let out = render(&[line("up", |x| x)], 40, 8);
+        let rows: Vec<&str> = out.lines().collect();
+        // Top row holds the max point (right side), bottom data row the min.
+        assert!(rows[0].trim_end().ends_with('●'));
+        assert!(rows[7].contains('●'));
+    }
+
+    #[test]
+    fn constant_series_does_not_panic() {
+        let s = PlotSeries { label: "flat".into(), points: vec![(0.0, 5.0), (1.0, 5.0)] };
+        let out = render(&[s], 20, 5);
+        assert!(out.contains('●'));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        assert_eq!(render(&[], 20, 5), "(no data)\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "chart too small")]
+    fn rejects_tiny_canvas() {
+        let _ = render(&[], 4, 2);
+    }
+}

@@ -1,0 +1,238 @@
+//! Deterministic pseudo-random number generation and distributions.
+//!
+//! The benchmark environment provides no external `rand` crate, so MIGPerf
+//! carries its own small, fully deterministic PRNG. Every stochastic
+//! component in the simulator (arrival processes, MPS interference spikes,
+//! synthetic data) derives its randomness from an explicitly seeded
+//! [`Prng`], which makes every figure bench reproducible bit-for-bit.
+//!
+//! The generator is SplitMix64 (Steele, Lea & Flood, OOPSLA'14): a tiny,
+//! statistically solid 64-bit generator that is trivially splittable —
+//! ideal for handing independent streams to concurrently simulated GPU
+//! instances without cross-talk.
+
+/// SplitMix64 pseudo-random number generator.
+///
+/// Passes BigCrush when used as a 64-bit generator; period 2^64. Not
+/// cryptographic — strictly for simulation.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Create a generator from an explicit seed.
+    pub fn new(seed: u64) -> Self {
+        Prng { state: seed }
+    }
+
+    /// Derive an independent child stream. The child's seed is the parent's
+    /// next output mixed with a distinct constant, so parent and child
+    /// sequences do not overlap in practice.
+    pub fn split(&mut self) -> Prng {
+        let s = self.next_u64() ^ 0x9e37_79b9_7f4a_7c15;
+        Prng::new(s.wrapping_mul(0xbf58_476d_1ce4_e5b9) | 1)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be non-zero.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's nearly-divisionless bounded sampling.
+        let mut m = (self.next_u64() as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                m = (self.next_u64() as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    pub fn range_inclusive(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Exponentially distributed sample with the given rate (λ).
+    ///
+    /// Used for Poisson arrival inter-arrival gaps (paper Figs 10–11).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        // Inverse CDF; (1 - u) avoids ln(0).
+        -(1.0 - self.next_f64()).ln() / rate
+    }
+
+    /// Standard normal sample via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.next_f64(); // (0, 1]
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal sample with mean `mu` and standard deviation `sigma`.
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Log-normal sample: `exp(N(mu, sigma))`.
+    ///
+    /// The MPS interference model uses log-normal inflation to produce the
+    /// heavy latency tails the paper observes at large batch sizes.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_with(mu, sigma).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element (panics on empty slice).
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Prng::new(7);
+        let mut child = parent.split();
+        let p: Vec<u64> = (0..32).map(|_| parent.next_u64()).collect();
+        let c: Vec<u64> = (0..32).map(|_| child.next_u64()).collect();
+        assert_ne!(p, c);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Prng::new(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Prng::new(9);
+        for n in [1u64, 2, 3, 7, 100, 1 << 40] {
+            for _ in 0..200 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn below_covers_all_residues() {
+        let mut r = Prng::new(11);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            seen[r.below(5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exponential_mean_close_to_inverse_rate() {
+        let mut r = Prng::new(5);
+        let rate = 4.0;
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Prng::new(13);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_is_positive() {
+        let mut r = Prng::new(17);
+        for _ in 0..10_000 {
+            assert!(r.lognormal(0.0, 1.5) > 0.0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Prng::new(21);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_inclusive_hits_endpoints() {
+        let mut r = Prng::new(23);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..2000 {
+            match r.range_inclusive(-3, 3) {
+                -3 => lo_seen = true,
+                3 => hi_seen = true,
+                x => assert!((-3..=3).contains(&x)),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal property-based testing harness.
+//!
+//! No `proptest`/`quickcheck` offline, so this module provides the core of
+//! the idea: run a property over many PRNG-generated cases and, on
+//! failure, greedily shrink the failing input before reporting. Generation
+//! is driven by [`Gen`], a thin wrapper over [`Prng`] with size-aware
+//! helpers. Tests across the crate use [`check`] for invariants like
+//! "every accepted MIG layout fits in the slice budget" or "simulated
+//! latency is monotone in batch size".
+
+use crate::util::prng::Prng;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    rng: Prng,
+    /// Soft bound on the magnitude of generated sizes; grows over the run
+    /// so early cases are small (easier to debug) and later ones stress.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Internal: construct with explicit seed and size.
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: Prng::new(seed), size }
+    }
+
+    /// Uniform u64 below `n`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    /// Uniform usize in `[0, size]` (the canonical "small size" draw).
+    pub fn small(&mut self) -> usize {
+        self.rng.below(self.size as u64 + 1) as usize
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_inclusive(lo, hi)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// Vector of values from a element generator, length ≤ `size`.
+    pub fn vec<T>(&mut self, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.small();
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Access the raw PRNG (for distributions).
+    pub fn rng(&mut self) -> &mut Prng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`, so a failure report's seed
+    /// reproduces that exact case.
+    pub seed: u64,
+    /// Maximum `Gen::size` reached at the last case.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x4d49_4750, max_size: 64 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases; panic with the seed and
+/// message of the first failure. Properties draw their own inputs from the
+/// supplied [`Gen`], which makes failures reproducible from the seed alone.
+pub fn check_with(cfg: Config, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    for i in 0..cfg.cases {
+        let size = 1 + (cfg.max_size * i) / cfg.cases.max(1);
+        let seed = cfg.seed.wrapping_add(i as u64);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // Re-run nearby smaller sizes with the same seed to present the
+            // smallest failing size (a cheap form of shrinking: our
+            // generators scale all drawn sizes by `Gen::size`).
+            let mut best = (size, msg);
+            for s in 1..size {
+                let mut g2 = Gen::new(seed, s);
+                if let Err(m2) = prop(&mut g2) {
+                    best = (s, m2);
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={seed:#x}, size={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// [`check_with`] under the default configuration.
+pub fn check(prop: impl FnMut(&mut Gen) -> PropResult) {
+    check_with(Config::default(), prop);
+}
+
+/// Helper macro: turn a boolean with context into a `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check_with(Config { cases: 50, ..Default::default() }, |g| {
+            n += 1;
+            let x = g.int(0, 100);
+            prop_assert!(x >= 0 && x <= 100, "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(|g| {
+            let v = g.vec(|g| g.int(0, 10));
+            prop_assert!(v.len() < 5, "vector too long: {}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_grow_over_run() {
+        let mut max_seen = 0;
+        check_with(Config { cases: 100, max_size: 40, ..Default::default() }, |g| {
+            max_seen = max_seen.max(g.size);
+            Ok(())
+        });
+        assert!(max_seen >= 39, "max_seen={max_seen}");
+    }
+
+    #[test]
+    fn same_seed_reproduces_case() {
+        let mut a = Gen::new(123, 10);
+        let mut b = Gen::new(123, 10);
+        let va = a.vec(|g| g.int(0, 1000));
+        let vb = b.vec(|g| g.int(0, 1000));
+        assert_eq!(va, vb);
+    }
+}

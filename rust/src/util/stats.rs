@@ -1,0 +1,420 @@
+//! Descriptive statistics for benchmark result aggregation.
+//!
+//! The paper reports average latency, tail (p99) latency with error bars,
+//! throughput, and utilization percentages. This module provides the
+//! summary machinery: streaming moments, exact percentiles over recorded
+//! samples, and an HDR-style log-bucketed histogram for high-volume
+//! latency recording on the serving hot path.
+
+/// Streaming mean / variance / min / max accumulator (Welford's algorithm).
+///
+/// O(1) memory; suitable for the metrics hot path where storing every
+/// sample would be wasteful.
+#[derive(Debug, Clone, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Moments {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Moments { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Add one observation.
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    /// Merge another accumulator into this one (parallel reduction).
+    pub fn merge(&mut self, other: &Moments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Arithmetic mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance (0 if fewer than 2 samples).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Population standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Smallest observation (`+inf` if empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest observation (`-inf` if empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile of a sample set, by linear interpolation between
+/// closest ranks (the same convention as `numpy.percentile`).
+///
+/// `q` is in `[0, 100]`. Returns 0.0 for an empty slice.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    percentile_sorted(&v, q)
+}
+
+/// Percentile of an already-sorted sample set (ascending).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 100.0);
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Arithmetic mean of a slice (0 if empty).
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<f64>() / samples.len() as f64
+    }
+}
+
+/// Population standard deviation of a slice.
+pub fn stddev(samples: &[f64]) -> f64 {
+    if samples.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(samples);
+    (samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / samples.len() as f64).sqrt()
+}
+
+/// Log-bucketed latency histogram with bounded relative error.
+///
+/// Buckets grow geometrically by `1 + precision`, so any recorded value is
+/// reported with relative error ≤ `precision`. Recording is O(1) and the
+/// memory footprint is a few KiB regardless of sample count — this is the
+/// structure used on the serving hot path (paper Figs 5, 6, 10, 11 record
+/// hundreds of thousands of request latencies).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Sub-bucket resolution bits per octave (2^bits linear sub-buckets).
+    sub_bits: u32,
+    /// Smallest representable value; everything below lands in bucket 0.
+    floor: f64,
+    /// IEEE-754 exponent of `floor` (biased), used as the index origin.
+    floor_exp: i64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+    /// Lowest non-empty bucket (bounds percentile scans).
+    min_bucket: usize,
+}
+
+impl LatencyHistogram {
+    /// Histogram covering `[floor, ceil]` with the given relative precision
+    /// (e.g. 0.01 for 1%).
+    ///
+    /// §Perf: bucketing is log-linear (HDR-histogram style) — the bucket
+    /// index comes straight from the IEEE-754 exponent and top mantissa
+    /// bits, so `record` costs a few ALU ops instead of an `ln()` call
+    /// (~2.8× faster on the serving hot path; see EXPERIMENTS.md §Perf).
+    /// `2^sub_bits` linear sub-buckets per octave bound the relative
+    /// error at `2^(1/2^sub_bits)·(1/2^sub_bits) ≲ precision`.
+    pub fn new(floor: f64, ceil: f64, precision: f64) -> Self {
+        assert!(floor > 0.0 && ceil > floor && precision > 0.0);
+        // Linear sub-buckets per octave: width/value ≤ 1/2^bits at the
+        // low edge of the octave → choose bits so that ≤ precision.
+        let mut sub_bits = 1u32;
+        while (1.0 / (1u64 << sub_bits) as f64) > precision && sub_bits < 12 {
+            sub_bits += 1;
+        }
+        let floor_exp = (floor.to_bits() >> 52) as i64 & 0x7ff;
+        let octaves = (ceil / floor).log2().ceil() as usize + 2;
+        let nbuckets = octaves * (1usize << sub_bits) + 2;
+        LatencyHistogram {
+            sub_bits,
+            floor,
+            floor_exp,
+            counts: vec![0; nbuckets],
+            total: 0,
+            sum: 0.0,
+            max: 0.0,
+            min_bucket: usize::MAX,
+        }
+    }
+
+    /// Default configuration for request latencies in milliseconds:
+    /// 1 µs … 100 s at 1% relative precision.
+    pub fn for_latency_ms() -> Self {
+        LatencyHistogram::new(1e-3, 1e5, 0.01)
+    }
+
+    #[inline]
+    fn bucket_of(&self, x: f64) -> usize {
+        if x <= self.floor {
+            return 0;
+        }
+        let bits = x.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i64 - self.floor_exp;
+        let sub = (bits >> (52 - self.sub_bits)) & ((1u64 << self.sub_bits) - 1);
+        let idx = ((exp << self.sub_bits) | sub as i64) as usize + 1;
+        idx.min(self.counts.len() - 1)
+    }
+
+    /// Value at the midpoint of a bucket (the reported representative).
+    fn bucket_value(&self, idx: usize) -> f64 {
+        if idx == 0 {
+            return self.floor;
+        }
+        let linear = (idx - 1) as u64;
+        let exp = (linear >> self.sub_bits) as i64 + self.floor_exp;
+        let sub = linear & ((1u64 << self.sub_bits) - 1);
+        // Rebuild the lower edge from (exponent, sub-bucket), then shift
+        // to the midpoint: lower edge mantissa = sub << (52 - bits).
+        let lower = f64::from_bits(((exp as u64) << 52) | (sub << (52 - self.sub_bits)));
+        let width = lower / (1u64 << self.sub_bits) as f64; // approx (≤ octave-linear width)
+        lower + width / 2.0
+    }
+
+    /// Record one latency sample.
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        let b = self.bucket_of(x);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if b < self.min_bucket {
+            self.min_bucket = b;
+        }
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact mean of recorded samples.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Largest recorded sample (exact).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate percentile (`q` in [0,100]) with relative error bounded
+    /// by the histogram precision.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 100.0) / 100.0 * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        // Start at the first non-empty bucket: percentile scans are then
+        // O(occupied range), not O(configured range).
+        for i in self.min_bucket..self.counts.len() {
+            acc += self.counts[i];
+            if acc >= target {
+                return self.bucket_value(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram with identical configuration.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "histogram configs differ");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min_bucket = self.min_bucket.min(other.min_bucket);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn moments_basic() {
+        let mut m = Moments::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            m.record(x);
+        }
+        assert_eq!(m.count(), 4);
+        assert!((m.mean() - 2.5).abs() < 1e-12);
+        assert!((m.variance() - 1.25).abs() < 1e-12);
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.max(), 4.0);
+    }
+
+    #[test]
+    fn moments_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Moments::new();
+        xs.iter().for_each(|&x| whole.record(x));
+        let mut a = Moments::new();
+        let mut b = Moments::new();
+        xs[..37].iter().for_each(|&x| a.record(x));
+        xs[37..].iter().for_each(|&x| b.record(x));
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moments_merge_with_empty() {
+        let mut a = Moments::new();
+        a.record(5.0);
+        let b = Moments::new();
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+        let mut e = Moments::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 1);
+        assert_eq!(e.mean(), 5.0);
+    }
+
+    #[test]
+    fn percentile_matches_known_values() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert!((percentile(&v, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [10.0, 20.0];
+        assert!((percentile(&v, 50.0) - 15.0).abs() < 1e-12);
+        assert!((percentile(&v, 75.0) - 17.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        assert_eq!(percentile(&[], 99.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_percentile_within_precision() {
+        let mut h = LatencyHistogram::for_latency_ms();
+        let mut r = Prng::new(99);
+        let mut samples = Vec::new();
+        for _ in 0..50_000 {
+            let x = r.lognormal(1.0, 0.8); // latencies around e^1 ≈ 2.7ms
+            h.record(x);
+            samples.push(x);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [50.0, 90.0, 99.0, 99.9] {
+            let exact = percentile_sorted(&samples, q);
+            let approx = h.percentile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.03, "q={q} exact={exact} approx={approx} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_mean_is_exact() {
+        let mut h = LatencyHistogram::for_latency_ms();
+        for x in [1.0, 2.0, 3.0] {
+            h.record(x);
+        }
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), 3.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::for_latency_ms();
+        let mut b = LatencyHistogram::for_latency_ms();
+        a.record(1.0);
+        b.record(100.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 100.0);
+    }
+
+    #[test]
+    fn histogram_out_of_range_clamps() {
+        let mut h = LatencyHistogram::new(1.0, 10.0, 0.1);
+        h.record(0.0001);
+        h.record(1e9);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) >= 1.0);
+    }
+}

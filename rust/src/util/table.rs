@@ -1,0 +1,172 @@
+//! ASCII table and sparkline rendering for benchmark reports.
+//!
+//! MIGPerf's "visualizer" component (paper §3.2) renders results directly
+//! in the terminal: aligned tables for the paper's Tables 1–2 and compact
+//! unicode sparklines for figure series, so `cargo bench` output is
+//! human-readable without plotting tools.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; padded/truncated to the header width.
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        let mut r: Vec<String> = cells.to_vec();
+        r.resize(self.header.len(), String::new());
+        self.rows.push(r);
+        self
+    }
+
+    /// Convenience for string-slice rows.
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with column alignment and a separator under the header.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| display_width(h)).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(display_width(cell));
+            }
+        }
+        let mut out = String::new();
+        render_row(&mut out, &self.header, &widths);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        render_row(&mut out, &sep, &widths);
+        for row in &self.rows {
+            render_row(&mut out, row, &widths);
+        }
+        out
+    }
+}
+
+fn display_width(s: &str) -> usize {
+    s.chars().count()
+}
+
+fn render_row(out: &mut String, cells: &[String], widths: &[usize]) {
+    for (i, w) in widths.iter().enumerate() {
+        let cell = cells.get(i).map(String::as_str).unwrap_or("");
+        out.push_str(cell);
+        for _ in display_width(cell)..*w {
+            out.push(' ');
+        }
+        if i + 1 < widths.len() {
+            out.push_str("  ");
+        }
+    }
+    out.push('\n');
+}
+
+/// Render a series of values as a unicode sparkline (▁▂▃▄▅▆▇█).
+///
+/// Values are min-max normalized; a constant series renders mid-height.
+pub fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return String::new();
+    }
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    values
+        .iter()
+        .map(|&v| {
+            if hi - lo < 1e-12 {
+                BARS[3]
+            } else {
+                let idx = ((v - lo) / (hi - lo) * 7.0).round() as usize;
+                BARS[idx.min(7)]
+            }
+        })
+        .collect()
+}
+
+/// Format a float with engineering-friendly precision: 3 significant-ish
+/// digits, no scientific notation for the magnitudes benchmarks produce.
+pub fn fmt_num(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row_strs(&["a", "1"]);
+        t.row_strs(&["longer-name", "22"]);
+        let out = t.render();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines should start their second column at the same offset.
+        let off = lines[0].find("value").unwrap();
+        assert_eq!(lines[2].chars().count().min(off + 1), off + 1);
+        assert!(lines[3].starts_with("longer-name"));
+    }
+
+    #[test]
+    fn short_rows_are_padded() {
+        let mut t = Table::new(&["a", "b", "c"]);
+        t.row_strs(&["only-one"]);
+        let out = t.render();
+        assert!(out.contains("only-one"));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+
+    #[test]
+    fn sparkline_constant_and_empty() {
+        assert_eq!(sparkline(&[]), "");
+        let s = sparkline(&[5.0, 5.0, 5.0]);
+        assert!(s.chars().all(|c| c == '▄'));
+    }
+
+    #[test]
+    fn fmt_num_magnitudes() {
+        assert_eq!(fmt_num(0.0), "0");
+        assert_eq!(fmt_num(12345.6), "12346");
+        assert_eq!(fmt_num(42.25), "42.2");
+        assert_eq!(fmt_num(3.14159), "3.14");
+        assert_eq!(fmt_num(0.012345), "0.0123");
+    }
+}

@@ -1,0 +1,263 @@
+//! Time-series storage for sampled metrics.
+//!
+//! The paper's performance aggregator "saves results into a local file in a
+//! time series manner" (§3.1). This module is the in-memory half of that:
+//! a tagged series of (timestamp, value) points with windowed reduction,
+//! consumed by the exporters in `metrics::export`.
+
+use std::collections::BTreeMap;
+
+/// One sampled point on the simulation (or wall) clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    /// Seconds since the start of the run (virtual clock for simulated
+    /// workloads, wall clock for real-execution runs).
+    pub t: f64,
+    pub value: f64,
+}
+
+/// A named, tag-annotated series of points, kept in insertion order.
+///
+/// Timestamps are expected to be non-decreasing (the DES clock only moves
+/// forward); `push` enforces this in debug builds.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    /// Metric name, e.g. `gract`, `fb_used_mib`, `power_w`.
+    pub name: String,
+    /// Free-form tags, e.g. `{"gi": "1g.10gb", "model": "bert-base"}`.
+    pub tags: BTreeMap<String, String>,
+    points: Vec<Point>,
+}
+
+impl Series {
+    /// New empty series with a metric name.
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), tags: BTreeMap::new(), points: Vec::new() }
+    }
+
+    /// Builder-style tag attachment.
+    pub fn with_tag(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
+        self.tags.insert(k.into(), v.into());
+        self
+    }
+
+    /// Append a sample. Timestamps must be non-decreasing.
+    pub fn push(&mut self, t: f64, value: f64) {
+        debug_assert!(
+            self.points.last().map_or(true, |p| t >= p.t),
+            "timestamps must be non-decreasing: {} after {}",
+            t,
+            self.points.last().unwrap().t
+        );
+        self.points.push(Point { t, value });
+    }
+
+    /// All points, in time order.
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True if no samples recorded.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Mean of values over the whole series (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.value).sum::<f64>() / self.points.len() as f64
+    }
+
+    /// Time-weighted average: each sample holds until the next sample's
+    /// timestamp. More faithful than `mean` for utilization counters whose
+    /// sampling interval varies. Returns plain mean when < 2 points.
+    pub fn time_weighted_mean(&self) -> f64 {
+        if self.points.len() < 2 {
+            return self.mean();
+        }
+        let mut area = 0.0;
+        for w in self.points.windows(2) {
+            area += w[0].value * (w[1].t - w[0].t);
+        }
+        let span = self.points.last().unwrap().t - self.points[0].t;
+        if span <= 0.0 {
+            self.mean()
+        } else {
+            area / span
+        }
+    }
+
+    /// Trapezoidal integral of the series over time (e.g. power → energy).
+    pub fn integral(&self) -> f64 {
+        let mut area = 0.0;
+        for w in self.points.windows(2) {
+            area += 0.5 * (w[0].value + w[1].value) * (w[1].t - w[0].t);
+        }
+        area
+    }
+
+    /// Largest value (0 if empty).
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|p| p.value).fold(0.0, f64::max)
+    }
+
+    /// Downsample into fixed windows of `dt` seconds, averaging within each
+    /// window. Used by the visualizer/exporter to bound output size.
+    pub fn downsample(&self, dt: f64) -> Series {
+        assert!(dt > 0.0);
+        let mut out = Series { name: self.name.clone(), tags: self.tags.clone(), points: Vec::new() };
+        if self.points.is_empty() {
+            return out;
+        }
+        let t0 = self.points[0].t;
+        let mut window = 0usize;
+        let mut acc = 0.0;
+        let mut n = 0u32;
+        for p in &self.points {
+            let w = ((p.t - t0) / dt) as usize;
+            if w != window && n > 0 {
+                out.push(t0 + (window as f64 + 0.5) * dt, acc / n as f64);
+                acc = 0.0;
+                n = 0;
+                window = w;
+            }
+            acc += p.value;
+            n += 1;
+        }
+        if n > 0 {
+            out.push(t0 + (window as f64 + 0.5) * dt, acc / n as f64);
+        }
+        out
+    }
+}
+
+/// A bundle of series produced by one profiling run.
+#[derive(Debug, Clone, Default)]
+pub struct SeriesSet {
+    series: Vec<Series>,
+}
+
+impl SeriesSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        SeriesSet { series: Vec::new() }
+    }
+
+    /// Add a complete series.
+    pub fn add(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    /// All series.
+    pub fn all(&self) -> &[Series] {
+        &self.series
+    }
+
+    /// Find the first series with the given metric name.
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Find a series by name and a required tag key/value.
+    pub fn get_tagged(&self, name: &str, key: &str, value: &str) -> Option<&Series> {
+        self.series
+            .iter()
+            .find(|s| s.name == name && s.tags.get(key).map(String::as_str) == Some(value))
+    }
+
+    /// Merge another set into this one.
+    pub fn extend(&mut self, other: SeriesSet) {
+        self.series.extend(other.series);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp() -> Series {
+        let mut s = Series::new("ramp");
+        for i in 0..=10 {
+            s.push(i as f64, i as f64);
+        }
+        s
+    }
+
+    #[test]
+    fn push_and_len() {
+        let s = ramp();
+        assert_eq!(s.len(), 11);
+        assert!(!s.is_empty());
+        assert_eq!(s.points()[3], Point { t: 3.0, value: 3.0 });
+    }
+
+    #[test]
+    fn mean_and_max() {
+        let s = ramp();
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn time_weighted_mean_of_step_function() {
+        let mut s = Series::new("step");
+        // 0 for 9 seconds, then 10 at the last instant: plain mean = 5,
+        // time-weighted ≈ 0 (the 10 holds for zero duration).
+        s.push(0.0, 0.0);
+        s.push(9.0, 0.0);
+        s.push(9.0, 10.0);
+        assert!(s.time_weighted_mean() < 0.01);
+    }
+
+    #[test]
+    fn integral_of_constant_power() {
+        let mut s = Series::new("power_w");
+        s.push(0.0, 100.0);
+        s.push(60.0, 100.0);
+        // 100 W for 60 s = 6000 J
+        assert!((s.integral() - 6000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integral_trapezoid() {
+        let mut s = Series::new("p");
+        s.push(0.0, 0.0);
+        s.push(2.0, 2.0);
+        assert!((s.integral() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn downsample_halves_points() {
+        let s = ramp();
+        let d = s.downsample(2.0);
+        assert!(d.len() <= 6);
+        assert!((d.mean() - 5.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn seriesset_lookup() {
+        let mut set = SeriesSet::new();
+        set.add(Series::new("gract").with_tag("gi", "1g.10gb"));
+        set.add(Series::new("gract").with_tag("gi", "7g.80gb"));
+        assert!(set.get("gract").is_some());
+        assert!(set.get_tagged("gract", "gi", "7g.80gb").is_some());
+        assert!(set.get_tagged("gract", "gi", "3g.40gb").is_none());
+        assert!(set.get("nope").is_none());
+    }
+
+    #[test]
+    fn empty_series_edge_cases() {
+        let s = Series::new("e");
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.time_weighted_mean(), 0.0);
+        assert_eq!(s.integral(), 0.0);
+        assert_eq!(s.downsample(1.0).len(), 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Request arrival processes.
+//!
+//! The appendix experiments (Figs 10–11) "send asynchronous requests to
+//! each server simultaneously with different request workloads (i.e.,
+//! request arrival rate)". This module generates those streams: Poisson
+//! (exponential gaps), uniform (fixed gaps) and bursty (Markov-modulated
+//! on/off) arrivals, all on the deterministic PRNG.
+
+use crate::util::prng::Prng;
+
+/// An arrival process that yields inter-arrival gaps (seconds).
+pub trait Arrival {
+    /// Next gap before the following request.
+    fn next_gap(&mut self) -> f64;
+    /// Mean request rate (requests/second) of the process.
+    fn rate(&self) -> f64;
+}
+
+/// Poisson process: exponential inter-arrival gaps at a fixed rate.
+#[derive(Debug)]
+pub struct PoissonArrival {
+    rate: f64,
+    rng: Prng,
+}
+
+impl PoissonArrival {
+    /// Poisson process with `rate` requests/second.
+    pub fn new(rate: f64, seed: u64) -> Self {
+        assert!(rate > 0.0);
+        PoissonArrival { rate, rng: Prng::new(seed) }
+    }
+}
+
+impl Arrival for PoissonArrival {
+    fn next_gap(&mut self) -> f64 {
+        self.rng.exponential(self.rate)
+    }
+    fn rate(&self) -> f64 {
+        self.rate
+    }
+}
+
+/// Deterministic uniform arrivals (fixed gap).
+#[derive(Debug)]
+pub struct UniformArrival {
+    gap: f64,
+}
+
+impl UniformArrival {
+    /// Uniform arrivals at `rate` requests/second.
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0);
+        UniformArrival { gap: 1.0 / rate }
+    }
+}
+
+impl Arrival for UniformArrival {
+    fn next_gap(&mut self) -> f64 {
+        self.gap
+    }
+    fn rate(&self) -> f64 {
+        1.0 / self.gap
+    }
+}
+
+/// Markov-modulated on/off burst process: alternates between a burst state
+/// (high rate) and an idle state (low rate), with exponential dwell times.
+/// Extension beyond the paper for stress-testing batching policies.
+#[derive(Debug)]
+pub struct BurstyArrival {
+    high_rate: f64,
+    low_rate: f64,
+    mean_dwell_s: f64,
+    in_burst: bool,
+    state_left_s: f64,
+    rng: Prng,
+}
+
+impl BurstyArrival {
+    /// Bursty process alternating between `high_rate` and `low_rate`
+    /// (requests/s), with exponential state dwell of mean `mean_dwell_s`.
+    pub fn new(high_rate: f64, low_rate: f64, mean_dwell_s: f64, seed: u64) -> Self {
+        assert!(high_rate > low_rate && low_rate > 0.0 && mean_dwell_s > 0.0);
+        let mut rng = Prng::new(seed);
+        let dwell = rng.exponential(1.0 / mean_dwell_s);
+        BurstyArrival {
+            high_rate,
+            low_rate,
+            mean_dwell_s,
+            in_burst: true,
+            state_left_s: dwell,
+            rng,
+        }
+    }
+}
+
+impl Arrival for BurstyArrival {
+    fn next_gap(&mut self) -> f64 {
+        let rate = if self.in_burst { self.high_rate } else { self.low_rate };
+        let gap = self.rng.exponential(rate);
+        self.state_left_s -= gap;
+        if self.state_left_s <= 0.0 {
+            self.in_burst = !self.in_burst;
+            self.state_left_s = self.rng.exponential(1.0 / self.mean_dwell_s);
+        }
+        gap
+    }
+    fn rate(&self) -> f64 {
+        // Long-run average with symmetric dwell times.
+        (self.high_rate + self.low_rate) / 2.0
+    }
+}
+
+/// Materialize the first `n` arrival timestamps of a process.
+pub fn arrival_times(process: &mut dyn Arrival, n: usize) -> Vec<f64> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += process.next_gap();
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut p = PoissonArrival::new(50.0, 42);
+        let times = arrival_times(&mut p, 20_000);
+        let measured = times.len() as f64 / times.last().unwrap();
+        assert!((measured - 50.0).abs() / 50.0 < 0.03, "measured rate {measured}");
+    }
+
+    #[test]
+    fn poisson_gaps_are_variable() {
+        let mut p = PoissonArrival::new(10.0, 7);
+        let gaps: Vec<f64> = (0..1000).map(|_| p.next_gap()).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        // Exponential: std ≈ mean.
+        assert!((var.sqrt() / mean - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn uniform_gaps_are_constant() {
+        let mut u = UniformArrival::new(4.0);
+        assert_eq!(u.next_gap(), 0.25);
+        assert_eq!(u.next_gap(), 0.25);
+        assert_eq!(u.rate(), 4.0);
+    }
+
+    #[test]
+    fn bursty_alternates() {
+        let mut b = BurstyArrival::new(100.0, 1.0, 0.5, 3);
+        let times = arrival_times(&mut b, 5000);
+        // Average rate should sit strictly between low and high.
+        let measured = times.len() as f64 / times.last().unwrap();
+        assert!(measured > 1.0 && measured < 100.0, "rate {measured}");
+    }
+
+    #[test]
+    fn arrivals_strictly_increasing() {
+        let mut p = PoissonArrival::new(20.0, 11);
+        let times = arrival_times(&mut p, 500);
+        assert!(times.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let a = arrival_times(&mut PoissonArrival::new(5.0, 9), 100);
+        let b = arrival_times(&mut PoissonArrival::new(5.0, 9), 100);
+        assert_eq!(a, b);
+    }
+}

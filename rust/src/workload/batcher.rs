@@ -1,0 +1,173 @@
+//! Dynamic request batcher.
+//!
+//! Serving frameworks (Triton, TF-Serving) coalesce individual requests
+//! into batches before dispatching to the GPU. The paper's serving
+//! experiments fix the batch size; this batcher is the realistic front-end
+//! used by the `serve_mig` example and the batching ablation bench: close
+//! a batch when it reaches `max_batch` or when the oldest request has
+//! waited `max_delay_s`.
+
+/// A single queued request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PendingRequest {
+    /// Request id (monotonic).
+    pub id: u64,
+    /// Arrival timestamp, seconds.
+    pub arrived_at: f64,
+}
+
+/// A closed batch ready for dispatch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    /// Requests in the batch, arrival order.
+    pub requests: Vec<PendingRequest>,
+    /// Time the batch was closed.
+    pub closed_at: f64,
+}
+
+impl Batch {
+    /// Batch size.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// True if the batch carries no requests.
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Mean queueing delay of the batch's requests at close time.
+    pub fn mean_wait_s(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| self.closed_at - r.arrived_at).sum::<f64>()
+            / self.requests.len() as f64
+    }
+}
+
+/// Dynamic batcher with max-size and max-delay closing rules.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before forced dispatch.
+    pub max_delay_s: f64,
+    queue: Vec<PendingRequest>,
+    next_id: u64,
+}
+
+impl DynamicBatcher {
+    /// Batcher with the given policy.
+    pub fn new(max_batch: usize, max_delay_s: f64) -> Self {
+        assert!(max_batch >= 1 && max_delay_s >= 0.0);
+        DynamicBatcher { max_batch, max_delay_s, queue: Vec::new(), next_id: 0 }
+    }
+
+    /// Number of queued requests.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue a request at time `t`; returns a closed batch if the size
+    /// rule fires.
+    pub fn offer(&mut self, t: f64) -> Option<Batch> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(PendingRequest { id, arrived_at: t });
+        if self.queue.len() >= self.max_batch {
+            return Some(self.close(t));
+        }
+        None
+    }
+
+    /// The deadline by which the current queue must be dispatched, if any.
+    pub fn deadline(&self) -> Option<f64> {
+        self.queue.first().map(|r| r.arrived_at + self.max_delay_s)
+    }
+
+    /// Check the delay rule at time `t`; returns a batch if the oldest
+    /// request has waited out the delay.
+    pub fn poll(&mut self, t: f64) -> Option<Batch> {
+        match self.deadline() {
+            Some(d) if t >= d && !self.queue.is_empty() => Some(self.close(t)),
+            _ => None,
+        }
+    }
+
+    /// Force-close whatever is queued.
+    pub fn flush(&mut self, t: f64) -> Option<Batch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.close(t))
+        }
+    }
+
+    fn close(&mut self, t: f64) -> Batch {
+        Batch { requests: std::mem::take(&mut self.queue), closed_at: t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_rule_fires_at_max_batch() {
+        let mut b = DynamicBatcher::new(4, 1.0);
+        assert!(b.offer(0.0).is_none());
+        assert!(b.offer(0.1).is_none());
+        assert!(b.offer(0.2).is_none());
+        let batch = b.offer(0.3).expect("4th request closes the batch");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn delay_rule_fires_on_poll() {
+        let mut b = DynamicBatcher::new(8, 0.5);
+        b.offer(0.0);
+        b.offer(0.1);
+        assert!(b.poll(0.4).is_none(), "deadline not reached");
+        let batch = b.poll(0.5).expect("deadline reached");
+        assert_eq!(batch.len(), 2);
+        assert!((batch.mean_wait_s() - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(8, 1.0);
+        assert_eq!(b.deadline(), None);
+        b.offer(2.0);
+        b.offer(3.0);
+        assert_eq!(b.deadline(), Some(3.0));
+    }
+
+    #[test]
+    fn flush_closes_partial() {
+        let mut b = DynamicBatcher::new(8, 1.0);
+        b.offer(0.0);
+        let batch = b.flush(0.2).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.flush(0.3).is_none());
+    }
+
+    #[test]
+    fn ids_are_monotonic_across_batches() {
+        let mut b = DynamicBatcher::new(2, 1.0);
+        b.offer(0.0);
+        let first = b.offer(0.0).unwrap();
+        b.offer(1.0);
+        let second = b.offer(1.0).unwrap();
+        assert_eq!(first.requests[1].id + 1, second.requests[0].id);
+    }
+
+    #[test]
+    fn batch_of_one_when_max_batch_is_one() {
+        let mut b = DynamicBatcher::new(1, 0.0);
+        let batch = b.offer(5.0).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.mean_wait_s(), 0.0);
+    }
+}

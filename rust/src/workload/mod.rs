@@ -1,0 +1,19 @@
+//! Workload drivers: the "workload performer" half of the paper's MIG
+//! Profiler (§3.2).
+//!
+//! [`spec`] describes a benchmark workload; [`training`] runs training
+//! steps on a simulated instance; [`serving`] runs single- and
+//! multi-server inference on the discrete-event simulator (closed-loop
+//! for the sharing comparison, open-loop Poisson for the arrival-rate
+//! appendix experiments); [`arrival`] generates request streams;
+//! [`batcher`] implements the dynamic batcher used by the serving
+//! examples.
+
+pub mod arrival;
+pub mod batcher;
+pub mod serving;
+pub mod spec;
+pub mod trace;
+pub mod training;
+
+pub use spec::{WorkloadKind, WorkloadSpec};

@@ -1,0 +1,495 @@
+//! Multi-server inference serving simulation.
+//!
+//! Drives the paper's GPU-sharing experiments (§4.5, Appendix C): `n`
+//! inference servers share one physical GPU either as MIG instances
+//! (physical isolation) or as MPS client processes (software sharing).
+//! Two load modes:
+//!
+//! * **closed-loop** — every server issues its next batch immediately
+//!   (Figs 4–7: latency vs batch size / model size);
+//! * **open-loop** — Poisson request arrivals per server at a configured
+//!   rate, FIFO queueing (Figs 10–11: tail latency vs arrival rate).
+//!
+//! The service-time model is the roofline estimate for the server's
+//! resource; in MPS mode, per-request interference from `sharing::mps` is
+//! layered on top with the *current number of busy co-runners*.
+
+use crate::metrics::collector::{MetricsCollector, RunSummary};
+use crate::models::cost::StepCost;
+use crate::sharing::mps::MpsModel;
+use crate::simgpu::desim::Des;
+use crate::simgpu::energy::EnergyModel;
+use crate::simgpu::perfmodel::{PerfError, PerfModel};
+use crate::simgpu::resource::ExecResource;
+use crate::util::prng::Prng;
+
+use super::spec::WorkloadSpec;
+
+/// How the co-located servers share the GPU.
+#[derive(Debug, Clone)]
+pub enum SharingMode {
+    /// Each server owns a MIG GI with the given resource.
+    Mig(Vec<ExecResource>),
+    /// All servers are MPS clients on one whole GPU.
+    Mps {
+        /// The whole-GPU resource requests execute on.
+        gpu: ExecResource,
+        /// Number of client processes.
+        n_clients: u32,
+        /// Interference model.
+        model: MpsModel,
+    },
+}
+
+impl SharingMode {
+    /// Number of servers.
+    pub fn servers(&self) -> usize {
+        match self {
+            SharingMode::Mig(v) => v.len(),
+            SharingMode::Mps { n_clients, .. } => *n_clients as usize,
+        }
+    }
+}
+
+/// Load generation mode.
+#[derive(Debug, Clone)]
+pub enum LoadMode {
+    /// Closed loop: each server re-issues immediately; value = requests
+    /// per server.
+    Closed {
+        /// Requests each server issues.
+        requests_per_server: u64,
+    },
+    /// Open loop: Poisson arrivals at `rate` requests/s per server; run
+    /// until `requests_per_server` have been *issued* per server.
+    OpenPoisson {
+        /// Per-server arrival rate, requests/second.
+        rate: f64,
+        /// Requests each server receives.
+        requests_per_server: u64,
+    },
+    /// Open loop replaying recorded traces, one per server (index-aligned;
+    /// servers beyond the trace list reuse the last trace). Lets a MIG run
+    /// and an MPS run be driven by the *identical* request sequence.
+    Replay {
+        /// Arrival traces (absolute timestamps).
+        traces: Vec<crate::workload::trace::Trace>,
+    },
+}
+
+/// One serving simulation.
+pub struct ServingSim {
+    /// Sharing configuration.
+    pub mode: SharingMode,
+    /// Load configuration.
+    pub load: LoadMode,
+    /// Workload each request carries.
+    pub spec: WorkloadSpec,
+    /// PRNG seed for arrivals + interference.
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival { server: usize },
+    Done { server: usize },
+}
+
+struct ServerState {
+    queue: std::collections::VecDeque<f64>, // arrival timestamps
+    busy: bool,
+    issued: u64,
+    in_service_since: f64,
+}
+
+/// Result of a serving simulation: per-server summaries plus the pooled
+/// latency summary the paper's figures report.
+#[derive(Debug)]
+pub struct ServingOutcome {
+    /// Pooled over all servers.
+    pub pooled: RunSummary,
+    /// One summary per server.
+    pub per_server: Vec<RunSummary>,
+}
+
+impl ServingSim {
+    /// Run the simulation to completion.
+    pub fn run(&self) -> Result<ServingOutcome, PerfError> {
+        let pm = PerfModel::default();
+        let em = EnergyModel::default();
+        let n = self.mode.servers();
+        let cost = self.spec.step_cost();
+
+        // Pre-validate fit and pre-compute isolated estimates.
+        let isolated: Vec<_> = match &self.mode {
+            SharingMode::Mig(resources) => resources
+                .iter()
+                .map(|r| pm.step(r, &cost))
+                .collect::<Result<Vec<_>, _>>()?,
+            SharingMode::Mps { gpu, n_clients, .. } => {
+                let est = pm.step(gpu, &cost)?;
+                vec![est; *n_clients as usize]
+            }
+        };
+
+        let mut rng = Prng::new(self.seed);
+        let mut arrival_rngs: Vec<Prng> = (0..n).map(|_| rng.split()).collect();
+        let mut interference_rng = rng.split();
+
+        let mut des: Des<Ev> = Des::new();
+        let mut servers: Vec<ServerState> = (0..n)
+            .map(|_| ServerState {
+                queue: std::collections::VecDeque::new(),
+                busy: false,
+                issued: 0,
+                in_service_since: 0.0,
+            })
+            .collect();
+        let mut collectors: Vec<MetricsCollector> = (0..n)
+            .map(|i| MetricsCollector::new(format!("{}#{}", self.spec.label(), i)))
+            .collect();
+
+        let per_server_target = |s: usize| match &self.load {
+            LoadMode::Closed { requests_per_server } => *requests_per_server,
+            LoadMode::OpenPoisson { requests_per_server, .. } => *requests_per_server,
+            LoadMode::Replay { traces } => {
+                traces[s.min(traces.len() - 1)].len() as u64
+            }
+        };
+
+        // Seed initial arrivals.
+        for s in 0..n {
+            match &self.load {
+                LoadMode::Closed { .. } => des.schedule_at(0.0, Ev::Arrival { server: s }),
+                LoadMode::OpenPoisson { rate, .. } => {
+                    let gap = arrival_rngs[s].exponential(*rate);
+                    des.schedule_at(gap, Ev::Arrival { server: s });
+                }
+                LoadMode::Replay { traces } => {
+                    assert!(!traces.is_empty(), "Replay mode needs at least one trace");
+                    // Replay is fully pre-determined: schedule everything.
+                    for &t in traces[s.min(traces.len() - 1)].timestamps() {
+                        des.schedule_at(t, Ev::Arrival { server: s });
+                    }
+                }
+            }
+        }
+
+        // Main event loop. (Manual loop rather than run_until: we need
+        // mutable access to the surrounding state.)
+        while let Some((t, ev)) = des.next() {
+            match ev {
+                Ev::Arrival { server } => {
+                    let target = per_server_target(server);
+                    let st = &mut servers[server];
+                    if st.issued >= target {
+                        continue;
+                    }
+                    st.issued += 1;
+                    st.queue.push_back(t);
+                    // Schedule the next arrival.
+                    match &self.load {
+                        LoadMode::Closed { .. } => {} // next issued on completion
+                        LoadMode::Replay { .. } => {} // all pre-scheduled
+                        LoadMode::OpenPoisson { rate, .. } => {
+                            if st.issued < target {
+                                let gap = arrival_rngs[server].exponential(*rate);
+                                des.schedule_in(gap, Ev::Arrival { server });
+                            }
+                        }
+                    }
+                    if !servers[server].busy {
+                        self.start_service(
+                            &mut des,
+                            &mut servers,
+                            server,
+                            t,
+                            &isolated,
+                            &cost,
+                            &mut interference_rng,
+                        );
+                    }
+                }
+                Ev::Done { server } => {
+                    let started_at = servers[server].queue.pop_front().expect("done without request");
+                    servers[server].busy = false;
+                    let latency_ms = (t - started_at) * 1e3;
+                    collectors[server].record_completion(t, latency_ms, self.spec.batch as u64);
+                    let service_s = t - servers[server].in_service_since;
+                    let res_for_energy = self.resource_of(server);
+                    collectors[server]
+                        .record_energy(em.power_w(res_for_energy, isolated[server].gract) * service_s);
+                    collectors[server].record_gract(isolated[server].gract);
+                    collectors[server].record_fb(isolated[server].fb_bytes);
+                    // Closed loop: immediately issue the next request.
+                    if matches!(self.load, LoadMode::Closed { .. })
+                        && servers[server].issued < per_server_target(server)
+                    {
+                        des.schedule_in(0.0, Ev::Arrival { server });
+                    }
+                    // Serve the next queued request, if any.
+                    if !servers[server].queue.is_empty() {
+                        self.start_service(
+                            &mut des,
+                            &mut servers,
+                            server,
+                            t,
+                            &isolated,
+                            &cost,
+                            &mut interference_rng,
+                        );
+                    }
+                }
+            }
+        }
+
+        let per_server: Vec<RunSummary> = collectors.iter().map(|c| c.summarize()).collect();
+        // Pool all latencies: re-aggregate from per-server summaries via a
+        // pooled collector run (cheap second pass over summaries is not
+        // possible; instead merge with weighted stats).
+        let pooled = pool_summaries(&self.spec.label(), &per_server);
+        Ok(ServingOutcome { pooled, per_server })
+    }
+
+    fn resource_of(&self, server: usize) -> &ExecResource {
+        match &self.mode {
+            SharingMode::Mig(v) => &v[server],
+            SharingMode::Mps { gpu, .. } => gpu,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_service(
+        &self,
+        des: &mut Des<Ev>,
+        servers: &mut [ServerState],
+        server: usize,
+        now: f64,
+        isolated: &[crate::simgpu::perfmodel::StepEstimate],
+        cost: &StepCost,
+        rng: &mut Prng,
+    ) {
+        let busy_others = servers.iter().enumerate().filter(|(i, s)| *i != server && s.busy).count() as u32;
+        let service_s = match &self.mode {
+            SharingMode::Mig(_) => isolated[server].seconds,
+            SharingMode::Mps { gpu, model, .. } => {
+                model.request_time(&isolated[server], cost, gpu, busy_others, rng)
+            }
+        };
+        servers[server].busy = true;
+        servers[server].in_service_since = now;
+        des.schedule_in(service_s, Ev::Done { server });
+    }
+}
+
+/// Merge per-server summaries into one pooled summary (weighted means;
+/// p99 approximated by the max of per-server p99s, which is exact when
+/// servers are statistically identical and conservative otherwise).
+pub fn pool_summaries(label: &str, parts: &[RunSummary]) -> RunSummary {
+    let total: u64 = parts.iter().map(|p| p.completed).sum();
+    let w = |f: fn(&RunSummary) -> f64| -> f64 {
+        if total == 0 {
+            return 0.0;
+        }
+        parts.iter().map(|p| f(p) * p.completed as f64).sum::<f64>() / total as f64
+    };
+    RunSummary {
+        label: label.to_string(),
+        completed: total,
+        avg_latency_ms: w(|p| p.avg_latency_ms),
+        std_latency_ms: w(|p| p.std_latency_ms),
+        p50_latency_ms: w(|p| p.p50_latency_ms),
+        p99_latency_ms: parts.iter().map(|p| p.p99_latency_ms).fold(0.0, f64::max),
+        max_latency_ms: parts.iter().map(|p| p.max_latency_ms).fold(0.0, f64::max),
+        throughput: parts.iter().map(|p| p.throughput).sum(),
+        mean_gract: w(|p| p.mean_gract),
+        peak_fb_mib: parts.iter().map(|p| p.peak_fb_mib).fold(0.0, f64::max),
+        energy_j: parts.iter().map(|p| p.energy_j).sum(),
+        duration_s: parts.iter().map(|p| p.duration_s).fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::GpuModel;
+    use crate::mig::profile::lookup as gi_lookup;
+    use crate::models::zoo::lookup;
+
+    fn mig_mode(n: usize) -> SharingMode {
+        let p = gi_lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
+        SharingMode::Mig(
+            (0..n).map(|_| ExecResource::from_gi(GpuModel::A30_24GB, p)).collect(),
+        )
+    }
+
+    fn mps_mode(n: u32) -> SharingMode {
+        SharingMode::Mps {
+            gpu: ExecResource::whole_gpu(GpuModel::A30_24GB),
+            n_clients: n,
+            model: MpsModel::default(),
+        }
+    }
+
+    fn sim(mode: SharingMode, load: LoadMode, batch: u32) -> ServingOutcome {
+        ServingSim {
+            mode,
+            load,
+            spec: WorkloadSpec::inference(lookup("resnet50").unwrap(), batch, 224),
+            seed: 2024,
+        }
+        .run()
+        .unwrap()
+    }
+
+    #[test]
+    fn closed_loop_completes_all_requests() {
+        let out = sim(mig_mode(4), LoadMode::Closed { requests_per_server: 200 }, 8);
+        assert_eq!(out.pooled.completed, 800);
+        for s in &out.per_server {
+            assert_eq!(s.completed, 200);
+        }
+    }
+
+    #[test]
+    fn fig5_mig_tail_beats_mps_at_batch8() {
+        // Paper Fig 5: at batch 8, MIG p99 well below MPS p99, and MIG is
+        // more stable.
+        let mig = sim(mig_mode(2), LoadMode::Closed { requests_per_server: 1500 }, 8);
+        let mps = sim(mps_mode(2), LoadMode::Closed { requests_per_server: 1500 }, 8);
+        assert!(
+            mps.pooled.p99_latency_ms > mig.pooled.p99_latency_ms * 1.3,
+            "MPS p99 {} must exceed MIG p99 {}",
+            mps.pooled.p99_latency_ms,
+            mig.pooled.p99_latency_ms
+        );
+        assert!(mps.pooled.std_latency_ms > mig.pooled.std_latency_ms);
+    }
+
+    #[test]
+    fn fig4_mps_avg_close_to_mig_small_batch() {
+        // Paper Fig 4: average latency almost the same at batch 1.
+        let mig = sim(mig_mode(2), LoadMode::Closed { requests_per_server: 1000 }, 1);
+        let mps = sim(mps_mode(2), LoadMode::Closed { requests_per_server: 1000 }, 1);
+        let ratio = mps.pooled.avg_latency_ms / mig.pooled.avg_latency_ms;
+        assert!(ratio < 1.6, "small-batch MPS/MIG avg ratio {ratio}");
+    }
+
+    #[test]
+    fn mig_isolation_is_deterministic() {
+        let a = sim(mig_mode(4), LoadMode::Closed { requests_per_server: 100 }, 8);
+        // All requests identical and isolated → p99 == p50.
+        let spread = a.pooled.p99_latency_ms / a.pooled.p50_latency_ms;
+        assert!(spread < 1.05, "MIG closed-loop spread {spread}");
+    }
+
+    #[test]
+    fn open_loop_low_rate_latency_near_service_time() {
+        let out = sim(
+            mig_mode(4),
+            LoadMode::OpenPoisson { rate: 5.0, requests_per_server: 500 },
+            1,
+        );
+        // At low utilization, queueing is negligible: avg ≈ p50.
+        let r = out.pooled.avg_latency_ms / out.pooled.p50_latency_ms;
+        assert!(r < 1.5, "low-rate ratio {r}");
+    }
+
+    #[test]
+    fn open_loop_saturation_explodes_latency() {
+        let lo = sim(
+            mig_mode(4),
+            LoadMode::OpenPoisson { rate: 2.0, requests_per_server: 400 },
+            1,
+        );
+        let hi = sim(
+            mig_mode(4),
+            LoadMode::OpenPoisson { rate: 2000.0, requests_per_server: 400 },
+            1,
+        );
+        assert!(
+            hi.pooled.p99_latency_ms > lo.pooled.p99_latency_ms * 3.0,
+            "saturated p99 {} vs unloaded {}",
+            hi.pooled.p99_latency_ms,
+            lo.pooled.p99_latency_ms
+        );
+    }
+
+    #[test]
+    fn pooled_throughput_is_sum() {
+        let out = sim(mig_mode(4), LoadMode::Closed { requests_per_server: 100 }, 4);
+        let sum: f64 = out.per_server.iter().map(|s| s.throughput).sum();
+        assert!((out.pooled.throughput - sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sim(mps_mode(4), LoadMode::Closed { requests_per_server: 300 }, 8);
+        let b = sim(mps_mode(4), LoadMode::Closed { requests_per_server: 300 }, 8);
+        assert_eq!(a.pooled.p99_latency_ms, b.pooled.p99_latency_ms);
+        assert_eq!(a.pooled.avg_latency_ms, b.pooled.avg_latency_ms);
+    }
+
+    #[test]
+    fn replay_drives_identical_arrivals_across_modes() {
+        // The point of trace replay: a MIG run and an MPS run see the
+        // exact same request sequence, so differences are purely the
+        // sharing technology.
+        use crate::workload::arrival::PoissonArrival;
+        use crate::workload::trace::Trace;
+        let traces: Vec<Trace> = (0..2)
+            .map(|i| Trace::capture(&mut PoissonArrival::new(50.0, 900 + i), 300))
+            .collect();
+        let spec = WorkloadSpec::inference(lookup("resnet50").unwrap(), 2, 224);
+        let mig = ServingSim {
+            mode: mig_mode(2),
+            load: LoadMode::Replay { traces: traces.clone() },
+            spec: spec.clone(),
+            seed: 1,
+        }
+        .run()
+        .unwrap();
+        let mps = ServingSim {
+            mode: mps_mode(2),
+            load: LoadMode::Replay { traces: traces.clone() },
+            spec,
+            seed: 1,
+        }
+        .run()
+        .unwrap();
+        assert_eq!(mig.pooled.completed, 600);
+        assert_eq!(mps.pooled.completed, 600);
+        // Same duration window (same arrivals), different tails.
+        assert!(mps.pooled.p99_latency_ms != mig.pooled.p99_latency_ms);
+    }
+
+    #[test]
+    fn replay_reuses_last_trace_for_extra_servers() {
+        use crate::workload::arrival::PoissonArrival;
+        use crate::workload::trace::Trace;
+        let trace = Trace::capture(&mut PoissonArrival::new(30.0, 5), 100);
+        let out = ServingSim {
+            mode: mig_mode(4),
+            load: LoadMode::Replay { traces: vec![trace] },
+            spec: WorkloadSpec::inference(lookup("resnet18").unwrap(), 1, 224),
+            seed: 1,
+        }
+        .run()
+        .unwrap();
+        assert_eq!(out.pooled.completed, 400, "each of 4 servers replays the trace");
+    }
+
+    #[test]
+    fn oom_rejected_upfront() {
+        let p = gi_lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
+        let mode = SharingMode::Mig(vec![ExecResource::from_gi(GpuModel::A30_24GB, p)]);
+        let r = ServingSim {
+            mode,
+            load: LoadMode::Closed { requests_per_server: 1 },
+            spec: WorkloadSpec::inference(lookup("bert-large").unwrap(), 256, 512),
+            seed: 1,
+        }
+        .run();
+        assert!(r.is_err());
+    }
+}

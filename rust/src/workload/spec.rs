@@ -1,0 +1,77 @@
+//! Benchmark workload specification.
+
+use crate::models::cost::{infer_cost, train_cost, Precision, StepCost};
+use crate::models::zoo::ModelDesc;
+
+/// Training or inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Forward + backward + optimizer step.
+    Training,
+    /// Forward only.
+    Inference,
+}
+
+/// A fully specified benchmark workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Model under test.
+    pub model: &'static ModelDesc,
+    /// Batch size per step/request.
+    pub batch: u32,
+    /// Sequence length (transformers) or input side (CNNs, informational).
+    pub seq: u32,
+    /// Numeric precision.
+    pub precision: Precision,
+    /// Training or inference.
+    pub kind: WorkloadKind,
+}
+
+impl WorkloadSpec {
+    /// Inference workload with the paper's defaults (fp16).
+    pub fn inference(model: &'static ModelDesc, batch: u32, seq: u32) -> Self {
+        WorkloadSpec { model, batch, seq, precision: Precision::Half, kind: WorkloadKind::Inference }
+    }
+
+    /// Training workload with the paper's defaults (fp16).
+    pub fn training(model: &'static ModelDesc, batch: u32, seq: u32) -> Self {
+        WorkloadSpec { model, batch, seq, precision: Precision::Half, kind: WorkloadKind::Training }
+    }
+
+    /// Analytic cost of one step of this workload.
+    pub fn step_cost(&self) -> StepCost {
+        match self.kind {
+            WorkloadKind::Training => train_cost(self.model, self.batch, self.seq, self.precision),
+            WorkloadKind::Inference => infer_cost(self.model, self.batch, self.seq, self.precision),
+        }
+    }
+
+    /// Report label, e.g. `bert-base/train/b32/s128`.
+    pub fn label(&self) -> String {
+        let kind = match self.kind {
+            WorkloadKind::Training => "train",
+            WorkloadKind::Inference => "infer",
+        };
+        format!("{}/{}/b{}/s{}", self.model.name, kind, self.batch, self.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::lookup;
+
+    #[test]
+    fn label_format() {
+        let s = WorkloadSpec::inference(lookup("bert-base").unwrap(), 8, 128);
+        assert_eq!(s.label(), "bert-base/infer/b8/s128");
+    }
+
+    #[test]
+    fn kind_routes_cost() {
+        let m = lookup("resnet50").unwrap();
+        let i = WorkloadSpec::inference(m, 8, 224).step_cost();
+        let t = WorkloadSpec::training(m, 8, 224).step_cost();
+        assert!(t.flops > i.flops * 2.5);
+    }
+}

@@ -1,0 +1,207 @@
+//! Arrival-trace recording and replay.
+//!
+//! Production serving studies replay recorded request traces rather than
+//! synthetic arrivals. This module closes that loop for MIGPerf: capture
+//! the timestamps an [`Arrival`] process generates (or load a trace from
+//! a file), then replay it as an arrival process — so an MPS run and a
+//! MIG run can be driven by the *identical* request sequence, removing
+//! arrival noise from A/B comparisons.
+//!
+//! Trace file format: one ASCII float (seconds since trace start) per
+//! line; `#` lines are comments.
+
+use std::path::Path;
+
+use super::arrival::Arrival;
+
+/// A recorded arrival trace: absolute timestamps, strictly increasing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    timestamps: Vec<f64>,
+}
+
+/// Trace errors.
+#[derive(Debug, thiserror::Error)]
+pub enum TraceError {
+    /// IO failure.
+    #[error("trace IO: {0}")]
+    Io(#[from] std::io::Error),
+    /// Malformed line.
+    #[error("trace line {0}: '{1}' is not a timestamp")]
+    BadLine(usize, String),
+    /// Timestamps must strictly increase.
+    #[error("trace not strictly increasing at line {0}")]
+    NotMonotone(usize),
+}
+
+impl Trace {
+    /// Build from raw timestamps (must be strictly increasing).
+    pub fn new(timestamps: Vec<f64>) -> Result<Trace, TraceError> {
+        for (i, w) in timestamps.windows(2).enumerate() {
+            if w[1] <= w[0] {
+                return Err(TraceError::NotMonotone(i + 2));
+            }
+        }
+        Ok(Trace { timestamps })
+    }
+
+    /// Capture the first `n` arrivals of a process.
+    pub fn capture(process: &mut dyn Arrival, n: usize) -> Trace {
+        let mut t = 0.0;
+        let timestamps = (0..n)
+            .map(|_| {
+                t += process.next_gap();
+                t
+            })
+            .collect();
+        Trace { timestamps }
+    }
+
+    /// Parse the line-per-timestamp file format.
+    pub fn parse(text: &str) -> Result<Trace, TraceError> {
+        let mut timestamps = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let t: f64 =
+                line.parse().map_err(|_| TraceError::BadLine(i + 1, line.to_string()))?;
+            timestamps.push(t);
+        }
+        Trace::new(timestamps)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Trace, TraceError> {
+        Trace::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Serialize to the file format.
+    pub fn render(&self) -> String {
+        let mut s = String::from("# migperf arrival trace: one timestamp (s) per line\n");
+        for t in &self.timestamps {
+            s.push_str(&format!("{t:.9}\n"));
+        }
+        s
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+
+    /// Number of requests.
+    pub fn len(&self) -> usize {
+        self.timestamps.len()
+    }
+
+    /// True when the trace holds no arrivals.
+    pub fn is_empty(&self) -> bool {
+        self.timestamps.is_empty()
+    }
+
+    /// All timestamps.
+    pub fn timestamps(&self) -> &[f64] {
+        &self.timestamps
+    }
+
+    /// Mean arrival rate over the trace span (req/s).
+    pub fn mean_rate(&self) -> f64 {
+        match self.timestamps.last() {
+            Some(&last) if last > 0.0 => self.len() as f64 / last,
+            _ => 0.0,
+        }
+    }
+
+    /// Replay as an [`Arrival`] process. When the trace is exhausted the
+    /// replayer keeps returning `f64::INFINITY` gaps (no more arrivals).
+    pub fn replay(&self) -> TraceReplay<'_> {
+        TraceReplay { trace: self, pos: 0, last: 0.0 }
+    }
+}
+
+/// Iterator-style arrival process over a recorded trace.
+#[derive(Debug)]
+pub struct TraceReplay<'a> {
+    trace: &'a Trace,
+    pos: usize,
+    last: f64,
+}
+
+impl Arrival for TraceReplay<'_> {
+    fn next_gap(&mut self) -> f64 {
+        match self.trace.timestamps.get(self.pos) {
+            Some(&t) => {
+                self.pos += 1;
+                let gap = t - self.last;
+                self.last = t;
+                gap
+            }
+            None => f64::INFINITY,
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        self.trace.mean_rate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrival::{arrival_times, PoissonArrival};
+
+    #[test]
+    fn capture_and_replay_identical() {
+        let mut p = PoissonArrival::new(20.0, 5);
+        let trace = Trace::capture(&mut p, 200);
+        let mut replay = trace.replay();
+        let times = arrival_times(&mut replay, 200);
+        for (a, b) in times.iter().zip(trace.timestamps()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn exhausted_replay_returns_infinity() {
+        let trace = Trace::new(vec![1.0, 2.0]).unwrap();
+        let mut r = trace.replay();
+        r.next_gap();
+        r.next_gap();
+        assert!(r.next_gap().is_infinite());
+    }
+
+    #[test]
+    fn file_format_roundtrip() {
+        let mut p = PoissonArrival::new(5.0, 9);
+        let trace = Trace::capture(&mut p, 50);
+        let parsed = Trace::parse(&trace.render()).unwrap();
+        assert_eq!(parsed.len(), 50);
+        for (a, b) in parsed.timestamps().iter().zip(trace.timestamps()) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blank_lines() {
+        let t = Trace::parse("# header\n\n0.5\n1.5\n# mid\n2.5\n").unwrap();
+        assert_eq!(t.len(), 3);
+        assert!((t.mean_rate() - 3.0 / 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_non_monotone() {
+        assert!(matches!(Trace::parse("abc\n"), Err(TraceError::BadLine(1, _))));
+        assert!(matches!(Trace::parse("2.0\n1.0\n"), Err(TraceError::NotMonotone(2))));
+        assert!(matches!(Trace::new(vec![1.0, 1.0]), Err(TraceError::NotMonotone(_))));
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = Trace::new(vec![]).unwrap();
+        assert!(t.is_empty());
+        assert_eq!(t.mean_rate(), 0.0);
+        assert!(t.replay().next_gap().is_infinite());
+    }
+}

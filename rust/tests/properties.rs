@@ -1,0 +1,469 @@
+//! Property-based tests over system invariants, using the first-party
+//! mini-framework in `util::proptest`.
+//!
+//! Each property draws random MIG layouts, workloads and loads from a
+//! seeded generator and asserts an invariant the paper's system relies
+//! on: placement-rule soundness, roofline monotonicity, histogram
+//! accuracy, DES ordering, batcher conservation, JSON round-tripping.
+
+use migperf::mig::controller::MigController;
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::placement::{Placement, PlacementEngine};
+use migperf::mig::profile::profiles_for;
+use migperf::models::cost::{infer_cost, train_cost, Precision};
+use migperf::models::zoo::ZOO;
+use migperf::prop_assert;
+use migperf::simgpu::desim::Des;
+use migperf::simgpu::energy::EnergyModel;
+use migperf::simgpu::perfmodel::PerfModel;
+use migperf::simgpu::resource::ExecResource;
+use migperf::util::json;
+use migperf::util::proptest::{check, check_with, Config, Gen};
+use migperf::util::stats::{percentile_sorted, LatencyHistogram};
+use migperf::workload::batcher::DynamicBatcher;
+
+/// Any sequence of accepted GI creations leaves the controller in a state
+/// where memory intervals are disjoint and compute slices within budget.
+#[test]
+fn prop_controller_accepted_layouts_are_sound() {
+    check(|g: &mut Gen| {
+        let gpu = *g.pick(&[GpuModel::A100_80GB, GpuModel::A30_24GB]);
+        let mut ctl = MigController::new(gpu);
+        ctl.enable_mig().unwrap();
+        let profiles = profiles_for(gpu);
+        // Try a random stream of creations/destructions.
+        let mut live = Vec::new();
+        for _ in 0..g.size {
+            if g.bool() || live.is_empty() {
+                let p = g.pick(profiles);
+                if let Ok(id) = ctl.create_instance(p.name) {
+                    live.push(id);
+                }
+            } else {
+                let idx = g.below(live.len() as u64) as usize;
+                let id = live.swap_remove(idx);
+                ctl.destroy_instance(id).unwrap();
+            }
+            // Invariants over the live set.
+            let instances = ctl.list_instances();
+            let total_compute: u32 = instances.iter().map(|i| i.profile.compute_slices).sum();
+            prop_assert!(
+                total_compute <= gpu.spec().compute_slices,
+                "compute overcommit: {total_compute}"
+            );
+            let mut intervals: Vec<(u32, u32)> = instances
+                .iter()
+                .map(|i| (i.start, i.start + i.profile.memory_slices))
+                .collect();
+            intervals.sort();
+            for w in intervals.windows(2) {
+                prop_assert!(w[0].1 <= w[1].0, "memory overlap: {intervals:?}");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The placement engine's find_slot always returns a slot that check()
+/// accepts, and never returns a slot when none is valid.
+#[test]
+fn prop_find_slot_consistent_with_check() {
+    check(|g: &mut Gen| {
+        let gpu = *g.pick(&[GpuModel::A100_80GB, GpuModel::A30_24GB]);
+        let eng = PlacementEngine::new(gpu);
+        let profiles = profiles_for(gpu);
+        let mut placed = Vec::new();
+        for _ in 0..g.size.min(8) {
+            let p = g.pick(profiles);
+            match eng.find_slot(&placed, p) {
+                Some(start) => {
+                    let c = Placement { profile: p, start };
+                    prop_assert!(
+                        eng.check(&placed, &c).is_ok(),
+                        "find_slot returned invalid slot {start} for {}",
+                        p.name
+                    );
+                    placed.push(c);
+                }
+                None => {
+                    // Exhaustively confirm no published placement works.
+                    for &start in p.placements {
+                        let c = Placement { profile: p, start };
+                        prop_assert!(
+                            eng.check(&placed, &c).is_err(),
+                            "find_slot missed valid slot {start} for {}",
+                            p.name
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Roofline monotonicity: more FLOPs never gets faster; a bigger GI never
+/// gets slower; OOM is monotone in batch.
+#[test]
+fn prop_roofline_monotonic() {
+    check(|g: &mut Gen| {
+        let pm = PerfModel::default();
+        let model = g.pick(ZOO);
+        let seq = *g.pick(&[32u32, 128, 512]);
+        let b1 = 1 + g.below(64) as u32;
+        let b2 = b1 + 1 + g.below(64) as u32;
+        let gpu = GpuModel::A100_80GB;
+        let profiles = profiles_for(gpu);
+        let gi_small = &profiles[0]; // 1g.10gb
+        let gi_big = profiles.last().unwrap(); // 7g.80gb
+        let r_small = ExecResource::from_gi(gpu, gi_small);
+        let r_big = ExecResource::from_gi(gpu, gi_big);
+        let c1 = infer_cost(model, b1, seq, Precision::Half);
+        let c2 = infer_cost(model, b2, seq, Precision::Half);
+        // Latency monotone in batch on every resource that fits both.
+        if let (Ok(e1), Ok(e2)) = (pm.step(&r_small, &c1), pm.step(&r_small, &c2)) {
+            prop_assert!(
+                e2.seconds >= e1.seconds,
+                "latency not monotone in batch: {} vs {}",
+                e1.seconds,
+                e2.seconds
+            );
+        }
+        // Bigger GI at least as fast.
+        if let Ok(es) = pm.step(&r_small, &c1) {
+            let eb = pm.step(&r_big, &c1).expect("big GI must fit what small fits");
+            prop_assert!(
+                eb.seconds <= es.seconds * 1.0001,
+                "7g slower than 1g: {} vs {}",
+                eb.seconds,
+                es.seconds
+            );
+        }
+        // OOM monotone: if b1 OOMs then b2 OOMs too.
+        if pm.step(&r_small, &c1).is_err() {
+            prop_assert!(pm.step(&r_small, &c2).is_err(), "OOM not monotone in batch");
+        }
+        Ok(())
+    });
+}
+
+/// Energy is positive and decreases (for fixed work) as GI size grows.
+#[test]
+fn prop_energy_ordering() {
+    check(|g: &mut Gen| {
+        let pm = PerfModel::default();
+        let em = EnergyModel::default();
+        let model = g.pick(ZOO);
+        let batch = 1 + g.below(32) as u32;
+        let gpu = GpuModel::A100_80GB;
+        let cost = train_cost(model, batch, 128, Precision::Half);
+        let mut last = f64::INFINITY;
+        for p in profiles_for(gpu).iter().filter(|p| p.name != "1g.20gb") {
+            let r = ExecResource::from_gi(gpu, p);
+            if let Ok(est) = pm.step(&r, &cost) {
+                let e = em.workload_energy_j(&r, &est, batch, 1024);
+                prop_assert!(e > 0.0, "non-positive energy");
+                prop_assert!(
+                    e <= last * 1.0001,
+                    "energy increased with GI size at {}: {e} > {last}",
+                    p.name
+                );
+                last = e;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Histogram percentiles stay within the configured relative error of the
+/// exact percentiles, for arbitrary latency distributions.
+#[test]
+fn prop_histogram_accuracy() {
+    check_with(Config { cases: 64, ..Default::default() }, |g: &mut Gen| {
+        let mut h = LatencyHistogram::for_latency_ms();
+        let n = 200 + g.below(5000) as usize;
+        let mu = g.f64(-1.0, 3.0);
+        let sigma = g.f64(0.1, 1.2);
+        let mut xs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = g.rng().lognormal(mu, sigma);
+            h.record(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [50.0, 90.0, 99.0] {
+            // Same nearest-rank convention as the histogram, so the error
+            // measured is purely bucket quantization (≤ ~2× precision).
+            let rank = ((q / 100.0 * xs.len() as f64).ceil() as usize).clamp(1, xs.len());
+            let exact = xs[rank - 1];
+            let approx = h.percentile(q);
+            let rel = (approx - exact).abs() / exact;
+            prop_assert!(rel < 0.03, "q={q}: exact {exact} approx {approx} rel {rel}");
+            // And the interpolated percentile stays in the same ballpark.
+            let interp = percentile_sorted(&xs, q);
+            prop_assert!(
+                (approx - interp).abs() / interp < 0.10,
+                "q={q}: interp {interp} approx {approx}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// DES pops events in timestamp order regardless of insertion order, and
+/// FIFO among ties.
+#[test]
+fn prop_des_ordering() {
+    check(|g: &mut Gen| {
+        let mut des: Des<(u64, usize)> = Des::new();
+        let n = 1 + g.small();
+        for i in 0..n {
+            // Coarse timestamps force ties.
+            let t = g.below(10) as f64;
+            des.schedule_at(t, (t as u64, i));
+        }
+        let mut last_t = f64::NEG_INFINITY;
+        let mut last_seq_at_t: Option<usize> = None;
+        let mut popped = 0;
+        while let Some((t, (orig_t, seq))) = des.next() {
+            popped += 1;
+            prop_assert!(t >= last_t, "time went backwards");
+            prop_assert!((t - orig_t as f64).abs() < 1e-12, "payload/timestamp mismatch");
+            if t > last_t {
+                last_seq_at_t = None;
+            }
+            if let Some(prev) = last_seq_at_t {
+                prop_assert!(seq > prev, "FIFO violated among ties: {prev} then {seq}");
+            }
+            last_seq_at_t = Some(seq);
+            last_t = t;
+        }
+        prop_assert!(popped == n, "lost events: {popped}/{n}");
+        Ok(())
+    });
+}
+
+/// The batcher never loses or duplicates requests, and every closed batch
+/// respects max_batch.
+#[test]
+fn prop_batcher_conservation() {
+    check(|g: &mut Gen| {
+        let max_batch = 1 + g.below(8) as usize;
+        let max_delay = g.f64(0.0, 0.1);
+        let mut b = DynamicBatcher::new(max_batch, max_delay);
+        let mut t = 0.0;
+        let mut in_batches = 0usize;
+        let mut offered = 0usize;
+        let mut seen_ids = std::collections::BTreeSet::new();
+        let take = |batch: migperf::workload::batcher::Batch,
+                        in_batches: &mut usize,
+                        seen: &mut std::collections::BTreeSet<u64>|
+         -> Result<(), String> {
+            prop_assert!(batch.len() <= max_batch, "oversized batch");
+            *in_batches += batch.len();
+            for r in &batch.requests {
+                prop_assert!(seen.insert(r.id), "duplicate id {}", r.id);
+            }
+            Ok(())
+        };
+        for _ in 0..g.size {
+            t += g.f64(0.0, 0.05);
+            if let Some(batch) = b.poll(t) {
+                take(batch, &mut in_batches, &mut seen_ids)?;
+            }
+            offered += 1;
+            if let Some(batch) = b.offer(t) {
+                take(batch, &mut in_batches, &mut seen_ids)?;
+            }
+        }
+        if let Some(batch) = b.flush(t + 1.0) {
+            take(batch, &mut in_batches, &mut seen_ids)?;
+        }
+        prop_assert!(in_batches == offered, "conservation violated: {in_batches}/{offered}");
+        Ok(())
+    });
+}
+
+/// JSON serializer/parser round-trip over random documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut Gen, depth: usize) -> json::Json {
+        if depth == 0 || g.below(4) == 0 {
+            match g.below(4) {
+                0 => json::Json::Null,
+                1 => json::Json::Bool(g.bool()),
+                2 => json::Json::Num((g.int(-1_000_000, 1_000_000) as f64) / 8.0),
+                _ => {
+                    let len = g.below(12);
+                    let s: String = (0..len)
+                        .map(|_| {
+                            let c = g.below(128) as u8;
+                            if c.is_ascii_graphic() || c == b' ' {
+                                c as char
+                            } else {
+                                '√' // exercise non-ASCII too
+                            }
+                        })
+                        .collect();
+                    json::Json::Str(s)
+                }
+            }
+        } else if g.bool() {
+            let n = g.below(5);
+            json::Json::Arr((0..n).map(|_| random_json(g, depth - 1)).collect())
+        } else {
+            let n = g.below(5);
+            json::Json::Obj(
+                (0..n)
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+    check(|g: &mut Gen| {
+        let doc = random_json(g, 3);
+        let text = doc.to_string();
+        let back = json::parse(&text).map_err(|e| format!("parse failed: {e} on {text}"))?;
+        prop_assert!(back == doc, "roundtrip mismatch: {text}");
+        let pretty = doc.to_pretty();
+        let back2 = json::parse(&pretty).map_err(|e| format!("pretty parse failed: {e}"))?;
+        prop_assert!(back2 == doc, "pretty roundtrip mismatch");
+        Ok(())
+    });
+}
+
+/// Scheduler soundness: any plan it returns uses a valid layout, assigns
+/// every workload exactly once to distinct instances, and meets all SLOs.
+#[test]
+fn prop_scheduler_plans_are_sound() {
+    use migperf::mig::enumerate::maximal_layouts;
+    use migperf::scheduler::{Objective, Scheduler, SloWorkload};
+    use migperf::workload::spec::WorkloadSpec;
+
+    check_with(Config { cases: 80, ..Default::default() }, |g: &mut Gen| {
+        let gpu = *g.pick(&[GpuModel::A100_80GB, GpuModel::A30_24GB]);
+        let sched = Scheduler::new(gpu);
+        let n = 1 + g.below(4) as usize;
+        let workloads: Vec<SloWorkload> = (0..n)
+            .map(|_| {
+                let model = g.pick(ZOO);
+                let batch = 1 + g.below(16) as u32;
+                if g.bool() {
+                    SloWorkload::best_effort(WorkloadSpec::training(model, batch, 128))
+                } else {
+                    SloWorkload::with_slo(
+                        WorkloadSpec::inference(model, batch, 128),
+                        g.f64(2.0, 200.0),
+                    )
+                }
+            })
+            .collect();
+        let objective =
+            if g.bool() { Objective::MaxThroughput } else { Objective::MinEnergy };
+        let Some(plan) = sched.plan(&workloads, objective) else {
+            return Ok(()); // infeasible is a legal outcome
+        };
+        // Every workload assigned exactly once.
+        let mut seen = vec![false; n];
+        for a in &plan.assignments {
+            prop_assert!(!seen[a.workload], "workload {} assigned twice", a.workload);
+            seen[a.workload] = true;
+        }
+        prop_assert!(seen.iter().all(|&s| s), "workload unassigned");
+        // SLOs met.
+        for a in &plan.assignments {
+            if let Some(slo) = workloads[a.workload].slo_ms {
+                prop_assert!(
+                    a.latency_ms <= slo + 1e-9,
+                    "SLO violated: {} > {slo}",
+                    a.latency_ms
+                );
+            }
+            prop_assert!(a.goodput <= a.throughput * 1.0001, "goodput exceeds throughput");
+        }
+        // The layout is one of the enumerated valid layouts.
+        let valid: Vec<Vec<&str>> =
+            maximal_layouts(gpu).iter().map(|l| l.profile_names()).collect();
+        prop_assert!(valid.contains(&plan.layout), "layout {:?} not valid", plan.layout);
+        Ok(())
+    });
+}
+
+/// Trace capture/replay is exact and composes with the serving arrival
+/// abstraction.
+#[test]
+fn prop_trace_replay_exact() {
+    use migperf::workload::arrival::{arrival_times, Arrival, PoissonArrival};
+    use migperf::workload::trace::Trace;
+
+    check_with(Config { cases: 60, ..Default::default() }, |g: &mut Gen| {
+        let rate = g.f64(0.5, 500.0);
+        let n = 1 + g.small();
+        let mut p = PoissonArrival::new(rate, g.below(u64::MAX));
+        let trace = Trace::capture(&mut p, n);
+        let mut replay = trace.replay();
+        let times = arrival_times(&mut replay, n);
+        for (a, b) in times.iter().zip(trace.timestamps()) {
+            prop_assert!((a - b).abs() < 1e-9, "replay diverged: {a} vs {b}");
+        }
+        prop_assert!(replay.next_gap().is_infinite(), "trace not exhausted");
+        // File round-trip preserves the trace within format precision.
+        let back = Trace::parse(&trace.render()).map_err(|e| e.to_string())?;
+        prop_assert!(back.len() == trace.len(), "length changed in roundtrip");
+        prop_assert!(back.mean_rate() >= 0.0, "rate sane");
+        Ok(())
+    });
+}
+
+/// Serving simulation conservation: every issued request completes
+/// exactly once, under random sharing modes and loads.
+#[test]
+fn prop_serving_conservation() {
+    use migperf::sharing::mps::MpsModel;
+    use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
+    use migperf::workload::spec::WorkloadSpec;
+
+    check_with(Config { cases: 40, ..Default::default() }, |g: &mut Gen| {
+        let gpu = GpuModel::A30_24GB;
+        let n = 1 + g.below(4) as u32;
+        let mig = g.bool();
+        let mode = if mig {
+            let p = migperf::mig::profile::lookup(gpu, "1g.6gb").unwrap();
+            SharingMode::Mig(vec![ExecResource::from_gi(gpu, p); n as usize])
+        } else {
+            SharingMode::Mps {
+                gpu: ExecResource::whole_gpu(gpu),
+                n_clients: n,
+                model: MpsModel::default(),
+            }
+        };
+        let requests = 10 + g.below(150);
+        let load = if g.bool() {
+            LoadMode::Closed { requests_per_server: requests }
+        } else {
+            LoadMode::OpenPoisson { rate: g.f64(1.0, 400.0), requests_per_server: requests }
+        };
+        let model = ["resnet18", "resnet50"][g.below(2) as usize];
+        let out = ServingSim {
+            mode,
+            load,
+            spec: WorkloadSpec::inference(
+                migperf::models::zoo::lookup(model).unwrap(),
+                1 + g.below(8) as u32,
+                224,
+            ),
+            seed: g.below(u64::MAX),
+        }
+        .run()
+        .map_err(|e| format!("sim failed: {e}"))?;
+        prop_assert!(
+            out.pooled.completed == requests * n as u64,
+            "lost requests: {} != {}",
+            out.pooled.completed,
+            requests * n as u64
+        );
+        prop_assert!(out.pooled.p99_latency_ms >= out.pooled.p50_latency_ms * 0.999, "p99 < p50");
+        prop_assert!(out.pooled.max_latency_ms >= out.pooled.p99_latency_ms * 0.96, "max < p99");
+        Ok(())
+    });
+}

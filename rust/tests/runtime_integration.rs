@@ -1,0 +1,167 @@
+//! Integration: AOT artifacts → PJRT CPU execution from rust.
+//!
+//! These tests prove the three-layer stack composes: the Pallas kernels
+//! (L1) lowered inside the JAX models (L2) execute from the rust runtime
+//! (L3) with correct numerics. They require `make artifacts` to have run;
+//! if the artifacts directory is absent they are skipped with a note.
+
+use migperf::runtime::executor::{load_params, Engine, HostTensor};
+use migperf::runtime::manifest::Manifest;
+use migperf::runtime::{artifacts_available, artifacts_dir};
+use migperf::util::prng::Prng;
+
+fn require_artifacts() -> Option<Manifest> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(artifacts_dir()).expect("manifest parses"))
+}
+
+fn random_tokens(rng: &mut Prng, batch: i64, seq: i64, vocab: u64) -> HostTensor {
+    let data: Vec<i32> = (0..batch * seq).map(|_| rng.below(vocab) as i32).collect();
+    HostTensor::I32(data, vec![batch, seq])
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    let Some(m) = require_artifacts() else { return };
+    for name in [
+        "bert_tiny_infer_b1",
+        "bert_tiny_infer_b4",
+        "bert_tiny_infer_b8",
+        "bert_tiny_train_b8",
+        "resnet_tiny_infer_b1",
+        "resnet_tiny_infer_b8",
+    ] {
+        assert!(m.entry(name).is_some(), "missing entry {name}");
+    }
+}
+
+#[test]
+fn bert_inference_executes_and_is_finite() {
+    let Some(m) = require_artifacts() else { return };
+    let mut engine = Engine::cpu().expect("PJRT CPU client");
+    let e = m.entry("bert_tiny_infer_b4").unwrap();
+    engine.load_hlo_text(&e.name, &m.hlo_path(e)).expect("compile");
+    let mut rng = Prng::new(42);
+    let tokens = random_tokens(&mut rng, 4, e.inputs[0].shape[1], 512);
+    let out = engine.execute(&e.name, &[tokens]).expect("execute");
+    assert_eq!(out.outputs.len(), 1);
+    let logits = out.outputs[0].as_f32().expect("f32 logits");
+    assert_eq!(out.outputs[0].shape(), &[4, 512]);
+    assert!(logits.iter().all(|x| x.is_finite()), "non-finite logits");
+    assert!(out.wall_s > 0.0);
+}
+
+#[test]
+fn bert_inference_batch_consistency() {
+    // The same token row must produce the same pooled logits whether it
+    // runs at batch 1 or inside a batch of 4 (the models are batch-
+    // independent; this catches artifact/shape mixups).
+    let Some(m) = require_artifacts() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let e1 = m.entry("bert_tiny_infer_b1").unwrap();
+    let e4 = m.entry("bert_tiny_infer_b4").unwrap();
+    engine.load_hlo_text(&e1.name, &m.hlo_path(e1)).unwrap();
+    engine.load_hlo_text(&e4.name, &m.hlo_path(e4)).unwrap();
+    let seq = e1.inputs[0].shape[1];
+    let mut rng = Prng::new(7);
+    let row: Vec<i32> = (0..seq).map(|_| rng.below(512) as i32).collect();
+    let mut four = row.clone();
+    for _ in 0..3 {
+        four.extend_from_slice(&row);
+    }
+    let out1 = engine
+        .execute(&e1.name, &[HostTensor::I32(row, vec![1, seq])])
+        .unwrap();
+    let out4 = engine
+        .execute(&e4.name, &[HostTensor::I32(four, vec![4, seq])])
+        .unwrap();
+    let a = out1.outputs[0].as_f32().unwrap();
+    let b = &out4.outputs[0].as_f32().unwrap()[..512];
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() < 1e-4, "batch inconsistency: {x} vs {y}");
+    }
+}
+
+#[test]
+fn resnet_inference_executes() {
+    let Some(m) = require_artifacts() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let e = m.entry("resnet_tiny_infer_b8").unwrap();
+    engine.load_hlo_text(&e.name, &m.hlo_path(e)).unwrap();
+    let n: usize = e.inputs[0].elements();
+    let mut rng = Prng::new(3);
+    let images: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let out = engine
+        .execute(&e.name, &[HostTensor::F32(images, e.inputs[0].shape.clone())])
+        .unwrap();
+    assert_eq!(out.outputs[0].shape(), &[8, 10]);
+    assert!(out.outputs[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn training_step_runs_and_loss_decreases() {
+    // The headline integration: rust drives the full fwd+bwd+SGD HLO for
+    // several steps on a fixed synthetic batch and the loss goes down.
+    let Some(m) = require_artifacts() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let e = m.entry("bert_tiny_train_b8").unwrap();
+    engine.load_hlo_text(&e.name, &m.hlo_path(e)).unwrap();
+    let mut params = load_params(&m, e).expect("initial params");
+    assert_eq!(params.len(), e.num_param_inputs);
+
+    let batch = e.inputs[e.num_param_inputs].shape[0];
+    let seq = e.inputs[e.num_param_inputs].shape[1];
+    let mut rng = Prng::new(2024);
+    let tokens = random_tokens(&mut rng, batch, seq, 512);
+    // Copy-task targets: tokens shifted by one (see model.synthetic_batch).
+    let targets = match &tokens {
+        HostTensor::I32(v, shape) => {
+            let s = seq as usize;
+            let mut t = Vec::with_capacity(v.len());
+            for row in v.chunks(s) {
+                t.push(row[s - 1]);
+                t.extend_from_slice(&row[..s - 1]);
+            }
+            HostTensor::I32(t, shape.clone())
+        }
+        _ => unreachable!(),
+    };
+
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let mut inputs = params.clone();
+        inputs.push(tokens.clone());
+        inputs.push(targets.clone());
+        let out = engine.execute(&e.name, &inputs).expect("train step");
+        assert_eq!(out.outputs.len(), e.num_outputs);
+        let loss = out.outputs[0].as_f32().unwrap()[0];
+        assert!(loss.is_finite());
+        losses.push(loss);
+        params = out.outputs[1..].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss must decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn engine_caches_executables() {
+    let Some(m) = require_artifacts() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let e = m.entry("bert_tiny_infer_b1").unwrap();
+    engine.load_hlo_text(&e.name, &m.hlo_path(e)).unwrap();
+    engine.load_hlo_text(&e.name, &m.hlo_path(e)).unwrap(); // idempotent
+    assert_eq!(engine.cached(), 1);
+    assert_eq!(engine.platform().to_lowercase(), "cpu");
+}
+
+#[test]
+fn unknown_executable_is_an_error() {
+    let Some(_m) = require_artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    assert!(engine.execute("nope", &[]).is_err());
+}

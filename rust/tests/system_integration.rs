@@ -1,0 +1,214 @@
+//! System-level integration tests: coordinator → profiler → simulator →
+//! metrics → export, exercised together as a user would.
+
+use migperf::coordinator::{Client, Coordinator};
+use migperf::frameworks::{run_serving_matrix, run_training_matrix};
+use migperf::metrics::export;
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::topology::Server;
+use migperf::profiler::session::ProfileSession;
+use migperf::profiler::task::{BenchTask, SweepAxis};
+use migperf::util::json;
+use migperf::workload::spec::WorkloadKind;
+
+fn small_task(name: &str) -> BenchTask {
+    BenchTask {
+        name: name.into(),
+        gpu: GpuModel::A30_24GB,
+        gi_profiles: vec!["1g.6gb".into(), "2g.12gb".into(), "4g.24gb".into()],
+        model: "resnet50".into(),
+        kind: WorkloadKind::Inference,
+        batch: 4,
+        seq: 224,
+        sweep: SweepAxis::Batch(vec![1, 4, 16]),
+        iterations: 50,
+        layout: Default::default(),
+    }
+}
+
+#[test]
+fn full_pipeline_task_to_csv() {
+    // Task → session → report → CSV → parse back and sanity-check values.
+    let report = ProfileSession::default().run(&small_task("pipeline")).unwrap();
+    assert_eq!(report.rows().len(), 9);
+    let rows: Vec<_> = report.rows().iter().map(|r| r.summary.clone()).collect();
+    let csv = export::summaries_to_csv(&rows);
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 10);
+    // Every data row has 12 comma-separated fields.
+    for line in &lines[1..] {
+        assert_eq!(line.split(',').count(), 12, "bad row: {line}");
+    }
+}
+
+#[test]
+fn full_pipeline_task_to_json_and_back() {
+    let report = ProfileSession::default().run(&small_task("jsonpipe")).unwrap();
+    let doc = report.to_json().to_pretty();
+    let v = json::parse(&doc).unwrap();
+    assert_eq!(v.get("task").unwrap().as_str(), Some("jsonpipe"));
+    let rows = v.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 9);
+    for r in rows {
+        let s = r.get("summary").unwrap();
+        assert!(s.get("throughput").unwrap().as_f64().unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn coordinator_runs_paper_suite() {
+    // A miniature of the paper's whole evaluation as one suite: training
+    // characterization, inference characterization, on both servers.
+    let mut coord = Coordinator::paper_testbed();
+    let mut client = Client::new(&mut coord);
+    let suite = r#"[
+        {"name": "train-a100", "gpu": "a100",
+         "gi_profiles": ["1g.10gb", "7g.80gb"],
+         "model": "bert-base", "kind": "training",
+         "batch_sweep": [8, 32], "seq": 128, "iterations": 20},
+        {"name": "infer-a100", "gpu": "a100",
+         "gi_profiles": ["1g.10gb", "7g.80gb"],
+         "model": "bert-base", "kind": "inference",
+         "batch_sweep": [1, 8], "seq": 128, "iterations": 20},
+        {"name": "infer-a30", "gpu": "a30",
+         "gi_profiles": ["1g.6gb"],
+         "model": "resnet50", "kind": "inference",
+         "batch_sweep": [1, 8], "seq": 224, "iterations": 20}
+    ]"#;
+    let ids = client.submit_suite_json(suite).unwrap();
+    assert_eq!(ids.len(), 3);
+    let out = client.collect_suite_json(&ids).unwrap();
+    let parsed = json::parse(&out).unwrap();
+    let reports = parsed.as_arr().unwrap();
+    assert_eq!(reports.len(), 3);
+    // Cross-report consistency: 7g must beat 1g on training throughput.
+    let train = reports[0].get("rows").unwrap().as_arr().unwrap();
+    let tput = |inst: &str, batch: i64| {
+        train
+            .iter()
+            .find(|r| {
+                r.get("instance").unwrap().as_str() == Some(inst)
+                    && r.get("batch").unwrap().as_i64() == Some(batch)
+            })
+            .and_then(|r| r.get("summary").unwrap().get("throughput").unwrap().as_f64())
+            .unwrap()
+    };
+    assert!(tput("7g.80gb", 32) > tput("1g.10gb", 32) * 2.0);
+}
+
+#[test]
+fn compat_matrices_match_paper_tables() {
+    let t1 = run_training_matrix();
+    let t2 = run_serving_matrix();
+    // Table 1 rows in paper order.
+    let names: Vec<&str> = t1.iter().map(|r| r.framework).collect();
+    assert_eq!(names, vec!["PyTorch", "TensorFlow", "MxNet", "PaddlePaddle"]);
+    assert!(t1.iter().all(|r| r.works_on_mig0 && !r.works_on_mig1));
+    let names2: Vec<&str> = t2.iter().map(|r| r.framework).collect();
+    assert_eq!(
+        names2,
+        vec!["TensorFlow Serving", "Triton Inference Server", "Ray Serve"]
+    );
+    assert!(t2.iter().all(|r| r.works_on_mig0 && !r.works_on_mig1));
+}
+
+#[test]
+fn paper_testbed_topology_boots() {
+    let mut servers = Server::paper_testbed();
+    // Partition every GPU of the A100 server into 7 small instances.
+    let a100 = &mut servers[0];
+    for i in 0..a100.spec.gpu_count as usize {
+        let ctl = a100.gpu(i).unwrap();
+        ctl.enable_mig().unwrap();
+        ctl.partition_uniform("1g.10gb", 7).unwrap();
+    }
+    assert_eq!(a100.total_instances(), 56); // 8 GPUs × 7 GIs
+}
+
+#[test]
+fn prometheus_export_from_training_series() {
+    use migperf::simgpu::energy::EnergyModel;
+    use migperf::simgpu::perfmodel::PerfModel;
+    use migperf::simgpu::resource::ExecResource;
+    use migperf::workload::spec::WorkloadSpec;
+    use migperf::workload::training::{run_training, TrainingConfig};
+
+    let gpu = GpuModel::A100_80GB;
+    let p = migperf::mig::profile::lookup(gpu, "2g.20gb").unwrap();
+    let res = ExecResource::from_gi(gpu, p);
+    let spec = WorkloadSpec::training(migperf::models::zoo::lookup("bert-base").unwrap(), 32, 128);
+    let _summary = run_training(
+        &res,
+        &spec,
+        &TrainingConfig { steps: 50, sample_interval_s: 0.25 },
+        &PerfModel::default(),
+        &EnergyModel::default(),
+    )
+    .unwrap();
+    // The collector's series live inside the summary path; rebuild a
+    // sampler-driven set through the same API to exercise export.
+    let mut sampler = migperf::metrics::dcgm::DcgmSampler::new("2g.20gb", 0.5);
+    sampler.report(
+        1.0,
+        migperf::metrics::dcgm::InstantState { gract: 0.8, fb_bytes: 2e9, power_w: 150.0 },
+    );
+    let set = sampler.finish(2.0);
+    let prom = export::series_to_prometheus(&set);
+    assert!(prom.contains("# TYPE migperf_gract gauge"));
+    assert!(prom.contains("instance=\"2g.20gb\""));
+    let csv = export::series_to_csv(&set);
+    assert!(csv.lines().count() > 3);
+}
+
+#[test]
+fn oom_rows_survive_the_whole_pipeline() {
+    // An OOM sweep point must surface as a skipped row all the way out to
+    // the JSON report, not crash the coordinator.
+    let mut coord = Coordinator::paper_testbed();
+    let mut client = Client::new(&mut coord);
+    let id = client
+        .submit_json(
+            r#"{"name": "oom", "gpu": "a100", "gi_profiles": ["1g.10gb"],
+                "model": "bert-large", "kind": "training",
+                "batch_sweep": [8, 256], "seq": 128, "iterations": 10}"#,
+        )
+        .unwrap();
+    let report = client.collect(id).unwrap();
+    assert_eq!(report.rows().len(), 2);
+    assert!(report.rows()[0].skipped.is_none(), "batch 8 fits");
+    assert!(report.rows()[1].skipped.is_some(), "batch 256 OOMs");
+    let doc = report.to_json().to_string();
+    assert!(doc.contains("out of memory"));
+}
+
+#[test]
+fn cli_binary_smoke() {
+    // Run the actual binary for the compat and profiles commands.
+    let bin = env!("CARGO_BIN_EXE_migperf");
+    let out = std::process::Command::new(bin).args(["compat"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table 1"));
+    assert!(text.contains("PyTorch"));
+    assert!(text.contains("Device not found"));
+
+    let out = std::process::Command::new(bin)
+        .args(["profiles", "--gpu", "a30"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("1g.6gb"));
+
+    let out = std::process::Command::new(bin)
+        .args(["partition", "--gpu", "a100", "--gi", "4g.40gb,3g.40gb"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "excluded combination must fail the CLI");
+
+    let out = std::process::Command::new(bin)
+        .args(["bench", "--gpu", "a30", "--model", "resnet18", "--gi", "1g.6gb", "--batch", "1,4", "--iters", "10", "--csv"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).starts_with("label,"));
+}
