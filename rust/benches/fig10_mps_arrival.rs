@@ -12,6 +12,7 @@ use migperf::mig::gpu::GpuModel;
 use migperf::models::zoo;
 use migperf::sharing::mps::MpsModel;
 use migperf::simgpu::resource::ExecResource;
+use migperf::sweep::{self, SweepEngine};
 use migperf::util::table::{fmt_num, sparkline, Table};
 use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
 use migperf::workload::spec::WorkloadSpec;
@@ -22,10 +23,10 @@ const REQUESTS: u64 = 1500;
 fn main() {
     banner("Figure 10", "4 MPS ResNet-50 servers on A30: p99 vs arrival rate");
     let spec = WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 1, 224);
-    let mut t = Table::new(&["rate/server req/s", "avg_ms", "p99_ms", "max_ms"]);
-    let mut p99s = Vec::new();
-    for &rate in RATES {
-        let out = ServingSim {
+    // Rate axis fanned across the sweep engine.
+    let sims: Vec<ServingSim> = RATES
+        .iter()
+        .map(|&rate| ServingSim {
             mode: SharingMode::Mps {
                 gpu: ExecResource::whole_gpu(GpuModel::A30_24GB),
                 n_clients: 4,
@@ -34,10 +35,13 @@ fn main() {
             load: LoadMode::OpenPoisson { rate, requests_per_server: REQUESTS },
             spec: spec.clone(),
             seed: 88,
-        }
-        .run()
-        .expect("fig10 sim")
-        .pooled;
+        })
+        .collect();
+    let outs = sweep::run_serving(&SweepEngine::from_env(), &sims).expect("fig10 sims");
+    let mut t = Table::new(&["rate/server req/s", "avg_ms", "p99_ms", "max_ms"]);
+    let mut p99s = Vec::new();
+    for (&rate, out) in RATES.iter().zip(&outs) {
+        let out = &out.pooled;
         p99s.push(out.p99_latency_ms);
         t.row(&[
             fmt_num(rate),

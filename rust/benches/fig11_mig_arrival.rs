@@ -13,6 +13,7 @@ use migperf::mig::gpu::GpuModel;
 use migperf::models::zoo;
 use migperf::sharing::mps::MpsModel;
 use migperf::simgpu::resource::ExecResource;
+use migperf::sweep::{self, SweepEngine};
 use migperf::util::table::{fmt_num, sparkline, Table};
 use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
 use migperf::workload::spec::WorkloadSpec;
@@ -33,18 +34,34 @@ fn main() {
         .collect();
 
     let spec = WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 1, 224);
-    let mut t = Table::new(&["rate/server req/s", "avg_ms", "p99_ms", "max_ms"]);
-    let mut p99s = Vec::new();
-    for &rate in RATES {
-        let out = ServingSim {
+    // One sweep-engine grid: the MIG rate axis plus the MPS cross-check
+    // point at the near-saturation rate (last grid entry).
+    let hi_rate = RATES[RATES.len() - 2];
+    let mut sims: Vec<ServingSim> = RATES
+        .iter()
+        .map(|&rate| ServingSim {
             mode: SharingMode::Mig(resources.clone()),
             load: LoadMode::OpenPoisson { rate, requests_per_server: REQUESTS },
             spec: spec.clone(),
             seed: 88,
-        }
-        .run()
-        .expect("fig11 sim")
-        .pooled;
+        })
+        .collect();
+    sims.push(ServingSim {
+        mode: SharingMode::Mps {
+            gpu: ExecResource::whole_gpu(GpuModel::A30_24GB),
+            n_clients: 4,
+            model: MpsModel::default(),
+        },
+        load: LoadMode::OpenPoisson { rate: hi_rate, requests_per_server: REQUESTS },
+        spec: spec.clone(),
+        seed: 88,
+    });
+    let outs = sweep::run_serving(&SweepEngine::from_env(), &sims).expect("fig11 sims");
+
+    let mut t = Table::new(&["rate/server req/s", "avg_ms", "p99_ms", "max_ms"]);
+    let mut p99s = Vec::new();
+    for (&rate, out) in RATES.iter().zip(&outs) {
+        let out = &out.pooled;
         p99s.push(out.p99_latency_ms);
         t.row(&[
             fmt_num(rate),
@@ -70,34 +87,9 @@ fn main() {
     // *low* rates MPS is absolutely faster — each request briefly gets
     // the whole GPU — which is the same effect the paper reports as "MPS
     // comparable to MIG for small workloads".
-    let hi_rate = RATES[RATES.len() - 2];
-    let mps_out = ServingSim {
-        mode: SharingMode::Mps {
-            gpu: ExecResource::whole_gpu(GpuModel::A30_24GB),
-            n_clients: 4,
-            model: MpsModel::default(),
-        },
-        load: LoadMode::OpenPoisson { rate: hi_rate, requests_per_server: REQUESTS },
-        spec,
-        seed: 88,
-    }
-    .run()
-    .unwrap()
-    .pooled;
-    let mig_spread = p99s[RATES.len() - 2] / {
-        // avg at the same rate, recomputed from the recorded table order
-        // (p99s index aligns with RATES).
-        let out = ServingSim {
-            mode: SharingMode::Mig(resources.clone()),
-            load: LoadMode::OpenPoisson { rate: hi_rate, requests_per_server: REQUESTS },
-            spec: WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 1, 224),
-            seed: 88,
-        }
-        .run()
-        .unwrap()
-        .pooled;
-        out.avg_latency_ms
-    };
+    let mps_out = &outs[RATES.len()].pooled;
+    let mig_hi = &outs[RATES.len() - 2].pooled;
+    let mig_spread = mig_hi.p99_latency_ms / mig_hi.avg_latency_ms;
     let mps_spread = mps_out.p99_latency_ms / mps_out.avg_latency_ms;
     shape_check(
         &format!(

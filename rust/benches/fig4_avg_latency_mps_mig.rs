@@ -12,6 +12,7 @@ use migperf::mig::profile::lookup as gi_lookup;
 use migperf::models::zoo;
 use migperf::sharing::mps::MpsModel;
 use migperf::simgpu::resource::ExecResource;
+use migperf::sweep::{self, SweepEngine};
 use migperf::util::table::{fmt_num, Table};
 use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
 use migperf::workload::spec::WorkloadSpec;
@@ -19,8 +20,9 @@ use migperf::workload::spec::WorkloadSpec;
 const BATCHES: &[u32] = &[1, 2, 4, 8, 16, 32];
 const TENANTS: u32 = 2;
 const REQUESTS: u64 = 1500;
+const MODELS: &[&str] = &["resnet18", "resnet50"];
 
-fn run(model: &str, batch: u32, mig: bool) -> migperf::metrics::collector::RunSummary {
+fn sim(model: &str, batch: u32, mig: bool) -> ServingSim {
     let gpu = GpuModel::A30_24GB;
     let spec = WorkloadSpec::inference(zoo::lookup(model).unwrap(), batch, 224);
     let mode = if mig {
@@ -34,20 +36,29 @@ fn run(model: &str, batch: u32, mig: bool) -> migperf::metrics::collector::RunSu
         }
     };
     ServingSim { mode, load: LoadMode::Closed { requests_per_server: REQUESTS }, spec, seed: 44 }
-        .run()
-        .expect("serving sim")
-        .pooled
 }
 
 fn main() {
     banner("Figure 4", "average latency MIG vs MPS (A30, 2 tenants)");
+    // Whole (model × batch × mode) grid in one parallel sweep; the row
+    // order below indexes back into the fixed grid order.
+    let mut sims = Vec::new();
+    for model in MODELS {
+        for &b in BATCHES {
+            sims.push(sim(model, b, true));
+            sims.push(sim(model, b, false));
+        }
+    }
+    let outs = sweep::run_serving(&SweepEngine::from_env(), &sims).expect("fig4 sims");
+
     let mut ratios_small = Vec::new();
     let mut ratios_large = Vec::new();
-    for model in ["resnet18", "resnet50"] {
+    for (mi, model) in MODELS.iter().enumerate() {
         let mut t = Table::new(&["batch", "MIG avg_ms", "MPS avg_ms", "MPS std_ms", "MPS/MIG"]);
-        for &b in BATCHES {
-            let mig = run(model, b, true);
-            let mps = run(model, b, false);
+        for (bi, &b) in BATCHES.iter().enumerate() {
+            let base = (mi * BATCHES.len() + bi) * 2;
+            let mig = &outs[base].pooled;
+            let mps = &outs[base + 1].pooled;
             let ratio = mps.avg_latency_ms / mig.avg_latency_ms;
             if b <= 2 {
                 ratios_small.push(ratio);
@@ -63,7 +74,7 @@ fn main() {
                 fmt_num(ratio),
             ]);
         }
-        println!("\n({}) {model}:\n{}", if model == "resnet18" { "a" } else { "b" }, t.render());
+        println!("\n({}) {model}:\n{}", if *model == "resnet18" { "a" } else { "b" }, t.render());
     }
     println!();
     shape_check(

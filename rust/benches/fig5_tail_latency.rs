@@ -12,6 +12,7 @@ use migperf::mig::profile::lookup as gi_lookup;
 use migperf::models::zoo;
 use migperf::sharing::mps::MpsModel;
 use migperf::simgpu::resource::ExecResource;
+use migperf::sweep::{self, SweepEngine};
 use migperf::util::table::{fmt_num, Table};
 use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
 use migperf::workload::spec::WorkloadSpec;
@@ -23,23 +24,19 @@ const REQUESTS: u64 = 4000;
 fn main() {
     banner("Figure 5", "tail latency MIG vs MPS at batch 8 (A30)");
     let gpu = GpuModel::A30_24GB;
-    let mut t = Table::new(&[
-        "model", "mode", "p50_ms", "p99_ms", "max_ms", "std_ms",
-    ]);
-    let mut checks = Vec::new();
-    for model in ["resnet18", "resnet50"] {
+    // Grid: (model × sharing mode), fanned across the sweep engine.
+    let models = ["resnet18", "resnet50"];
+    let p = gi_lookup(gpu, "2g.12gb").unwrap();
+    let mut sims = Vec::new();
+    for model in models {
         let spec = WorkloadSpec::inference(zoo::lookup(model).unwrap(), BATCH, 224);
-        let p = gi_lookup(gpu, "2g.12gb").unwrap();
-        let mig = ServingSim {
+        sims.push(ServingSim {
             mode: SharingMode::Mig(vec![ExecResource::from_gi(gpu, p); TENANTS as usize]),
             load: LoadMode::Closed { requests_per_server: REQUESTS },
             spec: spec.clone(),
             seed: 55,
-        }
-        .run()
-        .unwrap()
-        .pooled;
-        let mps = ServingSim {
+        });
+        sims.push(ServingSim {
             mode: SharingMode::Mps {
                 gpu: ExecResource::whole_gpu(gpu),
                 n_clients: TENANTS,
@@ -48,11 +45,18 @@ fn main() {
             load: LoadMode::Closed { requests_per_server: REQUESTS },
             spec,
             seed: 55,
-        }
-        .run()
-        .unwrap()
-        .pooled;
-        for (mode, s) in [("MIG", &mig), ("MPS", &mps)] {
+        });
+    }
+    let outs = sweep::run_serving(&SweepEngine::from_env(), &sims).expect("fig5 sims");
+
+    let mut t = Table::new(&[
+        "model", "mode", "p50_ms", "p99_ms", "max_ms", "std_ms",
+    ]);
+    let mut checks = Vec::new();
+    for (i, model) in models.iter().enumerate() {
+        let mig = &outs[2 * i].pooled;
+        let mps = &outs[2 * i + 1].pooled;
+        for (mode, s) in [("MIG", mig), ("MPS", mps)] {
             t.row(&[
                 model.to_string(),
                 mode.to_string(),
@@ -63,7 +67,7 @@ fn main() {
             ]);
         }
         checks.push((
-            model,
+            *model,
             mps.p99_latency_ms / mig.p99_latency_ms,
             mps.std_latency_ms,
             mig.std_latency_ms,

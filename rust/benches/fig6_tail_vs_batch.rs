@@ -12,6 +12,7 @@ use migperf::mig::profile::lookup as gi_lookup;
 use migperf::models::zoo;
 use migperf::sharing::mps::MpsModel;
 use migperf::simgpu::resource::ExecResource;
+use migperf::sweep::{self, SweepEngine};
 use migperf::util::table::{fmt_num, sparkline, Table};
 use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
 use migperf::workload::spec::WorkloadSpec;
@@ -19,8 +20,9 @@ use migperf::workload::spec::WorkloadSpec;
 const BATCHES: &[u32] = &[1, 2, 4, 8, 16, 32];
 const TENANTS: u32 = 2;
 const REQUESTS: u64 = 3000;
+const MODELS: &[&str] = &["resnet18", "resnet50"];
 
-fn p99(model: &str, batch: u32, mig: bool) -> f64 {
+fn sim(model: &str, batch: u32, mig: bool) -> ServingSim {
     let gpu = GpuModel::A30_24GB;
     let spec = WorkloadSpec::inference(zoo::lookup(model).unwrap(), batch, 224);
     let mode = if mig {
@@ -34,20 +36,26 @@ fn p99(model: &str, batch: u32, mig: bool) -> f64 {
         }
     };
     ServingSim { mode, load: LoadMode::Closed { requests_per_server: REQUESTS }, spec, seed: 66 }
-        .run()
-        .unwrap()
-        .pooled
-        .p99_latency_ms
 }
 
 fn main() {
     banner("Figure 6", "p99 latency vs batch size, MIG vs MPS (A30)");
-    for model in ["resnet18", "resnet50"] {
+    // One parallel sweep over the full (model × batch × mode) grid.
+    let mut sims = Vec::new();
+    for model in MODELS {
+        for &b in BATCHES {
+            sims.push(sim(model, b, true));
+            sims.push(sim(model, b, false));
+        }
+    }
+    let outs = sweep::run_serving(&SweepEngine::from_env(), &sims).expect("fig6 sims");
+    for (mi, model) in MODELS.iter().enumerate() {
         let mut t = Table::new(&["batch", "MIG p99_ms", "MPS p99_ms", "gap (MPS−MIG)"]);
         let mut gaps = Vec::new();
-        for &b in BATCHES {
-            let m = p99(model, b, true);
-            let s = p99(model, b, false);
+        for (bi, &b) in BATCHES.iter().enumerate() {
+            let base = (mi * BATCHES.len() + bi) * 2;
+            let m = outs[base].pooled.p99_latency_ms;
+            let s = outs[base + 1].pooled.p99_latency_ms;
             gaps.push(s - m);
             t.row(&[b.to_string(), fmt_num(m), fmt_num(s), fmt_num(s - m)]);
         }

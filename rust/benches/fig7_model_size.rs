@@ -13,6 +13,7 @@ use migperf::mig::profile::lookup as gi_lookup;
 use migperf::models::zoo;
 use migperf::sharing::mps::MpsModel;
 use migperf::simgpu::resource::ExecResource;
+use migperf::sweep::{self, SweepEngine};
 use migperf::util::table::{fmt_num, Table};
 use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
 use migperf::workload::spec::WorkloadSpec;
@@ -25,22 +26,18 @@ const REQUESTS: u64 = 3000;
 fn main() {
     banner("Figure 7", "p99 latency vs model size at batch 8, MIG vs MPS (A30)");
     let gpu = GpuModel::A30_24GB;
-    let mut t = Table::new(&["model", "params M", "MIG p99_ms", "MPS p99_ms", "MPS/MIG"]);
-    let mut ratios = Vec::new();
+    // (model × mode) grid through the parallel sweep engine.
+    let p = gi_lookup(gpu, "2g.12gb").unwrap();
+    let mut sims = Vec::new();
     for model in MODELS {
-        let desc = zoo::lookup(model).unwrap();
-        let spec = WorkloadSpec::inference(desc, BATCH, 224);
-        let p = gi_lookup(gpu, "2g.12gb").unwrap();
-        let mig = ServingSim {
+        let spec = WorkloadSpec::inference(zoo::lookup(model).unwrap(), BATCH, 224);
+        sims.push(ServingSim {
             mode: SharingMode::Mig(vec![ExecResource::from_gi(gpu, p); TENANTS as usize]),
             load: LoadMode::Closed { requests_per_server: REQUESTS },
             spec: spec.clone(),
             seed: 77,
-        }
-        .run()
-        .unwrap()
-        .pooled;
-        let mps = ServingSim {
+        });
+        sims.push(ServingSim {
             mode: SharingMode::Mps {
                 gpu: ExecResource::whole_gpu(gpu),
                 n_clients: TENANTS,
@@ -49,10 +46,16 @@ fn main() {
             load: LoadMode::Closed { requests_per_server: REQUESTS },
             spec,
             seed: 77,
-        }
-        .run()
-        .unwrap()
-        .pooled;
+        });
+    }
+    let outs = sweep::run_serving(&SweepEngine::from_env(), &sims).expect("fig7 sims");
+
+    let mut t = Table::new(&["model", "params M", "MIG p99_ms", "MPS p99_ms", "MPS/MIG"]);
+    let mut ratios = Vec::new();
+    for (i, model) in MODELS.iter().enumerate() {
+        let desc = zoo::lookup(model).unwrap();
+        let mig = &outs[2 * i].pooled;
+        let mps = &outs[2 * i + 1].pooled;
         let ratio = mps.p99_latency_ms / mig.p99_latency_ms;
         ratios.push(ratio);
         t.row(&[

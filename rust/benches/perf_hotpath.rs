@@ -3,9 +3,15 @@
 //!
 //! Covers the paths the profiler and serving simulator hammer: roofline
 //! pricing, DES event processing, latency-histogram recording, MPS
-//! request pricing, serving simulation end-to-end, and (when artifacts
-//! exist) real PJRT execution of the tiny models. Used by the §Perf pass
-//! in EXPERIMENTS.md.
+//! request pricing, serving simulation end-to-end, the parallel sweep
+//! engine (serial vs multi-worker wall clock on the fig5/fig11-shaped
+//! grids), and (when artifacts exist) real PJRT execution of the tiny
+//! models. Used by the §Perf pass in EXPERIMENTS.md.
+//!
+//! Machine-readable output: writes `BENCH_serving.json` (into
+//! `MIGPERF_BENCH_OUT` when set, else the working directory) so CI can
+//! track the perf trajectory. Set `MIGPERF_PERF_SMOKE=1` to shrink
+//! iteration counts for a quick CI smoke run.
 
 use std::time::Instant;
 
@@ -18,14 +24,27 @@ use migperf::sharing::mps::MpsModel;
 use migperf::simgpu::desim::Des;
 use migperf::simgpu::perfmodel::PerfModel;
 use migperf::simgpu::resource::ExecResource;
+use migperf::sweep::{self, SweepEngine};
+use migperf::util::json::Json;
 use migperf::util::prng::Prng;
 use migperf::util::stats::LatencyHistogram;
 use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
 use migperf::workload::spec::WorkloadSpec;
 
+/// Collected results, flushed to BENCH_serving.json at the end.
+struct Recorder {
+    rows: Vec<(String, f64)>,
+}
+
+impl Recorder {
+    fn push(&mut self, name: &str, ns_op: f64) {
+        self.rows.push((name.to_string(), ns_op));
+    }
+}
+
 /// Time `f` over `iters` iterations after `warmup` iterations; returns
 /// ns/op. A black-box consume of the result prevents dead-code deletion.
-fn bench<T>(name: &str, warmup: u64, iters: u64, mut f: impl FnMut(u64) -> T) -> f64 {
+fn bench<T>(rec: &mut Recorder, name: &str, warmup: u64, iters: u64, mut f: impl FnMut(u64) -> T) -> f64 {
     let mut sink = 0u64;
     for i in 0..warmup {
         sink = sink.wrapping_add(consume(&f(i)));
@@ -37,6 +56,7 @@ fn bench<T>(name: &str, warmup: u64, iters: u64, mut f: impl FnMut(u64) -> T) ->
     let elapsed = start.elapsed().as_nanos() as f64;
     let ns_op = elapsed / iters as f64;
     println!("{name:<44} {:>12.1} ns/op   ({iters} iters, sink {sink:x})", ns_op);
+    rec.push(name, ns_op);
     ns_op
 }
 
@@ -50,8 +70,69 @@ fn consume<T>(t: &T) -> u64 {
     }
 }
 
+/// fig11-shaped serving grid: 4×1g.6gb MIG ResNet-50 servers over the
+/// open-loop rate axis.
+fn fig11_grid(requests: u64) -> Vec<ServingSim> {
+    let p = gi_lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
+    let resources = vec![ExecResource::from_gi(GpuModel::A30_24GB, p); 4];
+    let spec = WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 1, 224);
+    [10.0, 20.0, 40.0, 80.0, 200.0, 480.0]
+        .iter()
+        .map(|&rate| ServingSim {
+            mode: SharingMode::Mig(resources.clone()),
+            load: LoadMode::OpenPoisson { rate, requests_per_server: requests },
+            spec: spec.clone(),
+            seed: 88,
+        })
+        .collect()
+}
+
+/// fig5-shaped serving grid: closed-loop MIG + MPS pairs over two models.
+fn fig5_grid(requests: u64) -> Vec<ServingSim> {
+    let gpu = GpuModel::A30_24GB;
+    let p = gi_lookup(gpu, "2g.12gb").unwrap();
+    let mut sims = Vec::new();
+    for model in ["resnet18", "resnet50"] {
+        let spec = WorkloadSpec::inference(zoo::lookup(model).unwrap(), 8, 224);
+        sims.push(ServingSim {
+            mode: SharingMode::Mig(vec![ExecResource::from_gi(gpu, p); 2]),
+            load: LoadMode::Closed { requests_per_server: requests },
+            spec: spec.clone(),
+            seed: 55,
+        });
+        sims.push(ServingSim {
+            mode: SharingMode::Mps {
+                gpu: ExecResource::whole_gpu(gpu),
+                n_clients: 2,
+                model: MpsModel::default(),
+            },
+            load: LoadMode::Closed { requests_per_server: requests },
+            spec,
+            seed: 55,
+        });
+    }
+    sims
+}
+
+/// Wall-clock seconds to run `sims` on `engine`, with a consistency probe.
+fn sweep_wall(engine: &SweepEngine, sims: &[ServingSim]) -> (f64, f64) {
+    let start = Instant::now();
+    let outs = sweep::run_serving(engine, sims).expect("sweep grid");
+    let wall = start.elapsed().as_secs_f64();
+    // Checksum over pooled p99s: any nondeterminism across engines shows
+    // up as a checksum mismatch in the emitted JSON.
+    let checksum: f64 = outs.iter().map(|o| o.pooled.p99_latency_ms).sum();
+    (wall, checksum)
+}
+
 fn main() {
-    println!("== perf_hotpath: L3 microbenchmarks ==\n");
+    let smoke = std::env::var_os("MIGPERF_PERF_SMOKE").is_some();
+    let scale = |n: u64| if smoke { (n / 50).max(1) } else { n };
+    println!(
+        "== perf_hotpath: L3 microbenchmarks{} ==\n",
+        if smoke { " (smoke mode)" } else { "" }
+    );
+    let mut rec = Recorder { rows: Vec::new() };
     let pm = PerfModel::default();
     let m = zoo::lookup("bert-base").unwrap();
     let res = ExecResource::from_gi(
@@ -60,9 +141,11 @@ fn main() {
     );
     let cost = infer_cost(m, 8, 128, Precision::Half);
 
-    bench("roofline step pricing", 1_000, 1_000_000, |_| pm.step(&res, &cost).unwrap());
+    bench(&mut rec, "roofline step pricing", 1_000, scale(1_000_000), |_| {
+        pm.step(&res, &cost).unwrap()
+    });
 
-    bench("analytic cost construction", 1_000, 1_000_000, |i| {
+    bench(&mut rec, "analytic cost construction", 1_000, scale(1_000_000), |i| {
         infer_cost(m, 1 + (i % 64) as u32, 128, Precision::Half)
     });
 
@@ -71,20 +154,20 @@ fn main() {
     // Pre-generate samples so the PRNG's transcendental calls don't mask
     // the histogram cost being measured.
     let samples: Vec<f64> = (0..65536).map(|_| rng.lognormal(1.0, 0.5)).collect();
-    bench("latency histogram record", 10_000, 5_000_000, |i| {
+    bench(&mut rec, "latency histogram record", 10_000, scale(5_000_000), |i| {
         hist.record(samples[(i & 0xffff) as usize]);
     });
-    bench("latency histogram p99", 100, 200_000, |_| hist.percentile(99.0));
+    bench(&mut rec, "latency histogram p99", 100, scale(200_000), |_| hist.percentile(99.0));
 
     let mps = MpsModel::default();
     let whole = ExecResource::whole_gpu(GpuModel::A30_24GB);
     let isolated = pm.step(&whole, &cost).unwrap();
     let mut rng2 = Prng::new(2);
-    bench("MPS request pricing (stochastic)", 10_000, 2_000_000, |_| {
+    bench(&mut rec, "MPS request pricing (stochastic)", 10_000, scale(2_000_000), |_| {
         mps.request_time(&isolated, &cost, &whole, 3, &mut rng2)
     });
 
-    bench("DES schedule+pop", 1_000, 200_000, |i| {
+    bench(&mut rec, "DES schedule+pop", 1_000, scale(200_000), |i| {
         let mut des: Des<u32> = Des::new();
         for k in 0..16u32 {
             des.schedule_at((i % 97) as f64 + k as f64, k);
@@ -96,7 +179,7 @@ fn main() {
         last
     });
 
-    bench("metrics collector record+summarize/1k", 10, 2_000, |i| {
+    bench(&mut rec, "metrics collector record+summarize/1k", 10, scale(2_000), |i| {
         let mut c = MetricsCollector::new("bench");
         for k in 0..1000u64 {
             c.record_completion((i + k) as f64 * 1e-3, 5.0, 1);
@@ -107,7 +190,7 @@ fn main() {
     // End-to-end serving sims (the figure benches' inner loop).
     let spec = WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 8, 224);
     let p = gi_lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
-    bench("serving sim MIG 4×500 reqs", 2, 50, |i| {
+    bench(&mut rec, "serving sim MIG 4×500 reqs", 2, scale(50), |i| {
         ServingSim {
             mode: SharingMode::Mig(vec![
                 ExecResource::from_gi(GpuModel::A30_24GB, p);
@@ -122,7 +205,7 @@ fn main() {
         .pooled
         .completed
     });
-    bench("serving sim MPS 4×500 reqs", 2, 50, |i| {
+    bench(&mut rec, "serving sim MPS 4×500 reqs", 2, scale(50), |i| {
         ServingSim {
             mode: SharingMode::Mps {
                 gpu: ExecResource::whole_gpu(GpuModel::A30_24GB),
@@ -139,23 +222,128 @@ fn main() {
         .completed
     });
 
+    // Replay-mode heap pressure: one long trace streamed lazily per
+    // server (the event heap stays O(servers), not O(total requests)).
+    {
+        use migperf::workload::arrival::PoissonArrival;
+        use migperf::workload::trace::Trace;
+        let reqs = if smoke { 2_000 } else { 50_000 };
+        let trace = Trace::capture(&mut PoissonArrival::new(200.0, 7), reqs);
+        let p_small = gi_lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
+        let spec1 = WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 1, 224);
+        bench(&mut rec, &format!("serving sim replay 4×{reqs} reqs"), 1, scale(10).min(5), |_| {
+            ServingSim {
+                mode: SharingMode::Mig(vec![
+                    ExecResource::from_gi(GpuModel::A30_24GB, p_small);
+                    4
+                ]),
+                load: LoadMode::Replay { traces: vec![trace.clone()] },
+                spec: spec1.clone(),
+                seed: 3,
+            }
+            .run()
+            .unwrap()
+            .pooled
+            .completed
+        });
+    }
+
+    // Sweep-engine throughput: the figure-bench grids, serial vs parallel.
+    let requests = if smoke { 200 } else { 1_500 };
+    let fig11 = fig11_grid(requests);
+    let fig5 = fig5_grid(if smoke { 400 } else { 4_000 });
+    let serial = SweepEngine::serial();
+    let parallel = SweepEngine::from_env();
+    println!();
+    let (fig11_serial_s, ck_a) = sweep_wall(&serial, &fig11);
+    let (fig11_parallel_s, ck_b) = sweep_wall(&parallel, &fig11);
+    assert_eq!(ck_a, ck_b, "sweep results must be identical at any worker count");
+    let (fig5_serial_s, ck_c) = sweep_wall(&serial, &fig5);
+    let (fig5_parallel_s, ck_d) = sweep_wall(&parallel, &fig5);
+    assert_eq!(ck_c, ck_d, "sweep results must be identical at any worker count");
+    let fig11_speedup = fig11_serial_s / fig11_parallel_s.max(1e-12);
+    let fig5_speedup = fig5_serial_s / fig5_parallel_s.max(1e-12);
+    println!(
+        "sweep fig11 grid ({} pts): serial {:.3}s, {} workers {:.3}s ({:.2}× speedup)",
+        fig11.len(),
+        fig11_serial_s,
+        parallel.workers(),
+        fig11_parallel_s,
+        fig11_speedup
+    );
+    println!(
+        "sweep fig5 grid ({} pts): serial {:.3}s, {} workers {:.3}s ({:.2}× speedup)",
+        fig5.len(),
+        fig5_serial_s,
+        parallel.workers(),
+        fig5_parallel_s,
+        fig5_speedup
+    );
+
     // Real PJRT execution, if artifacts are built.
     if migperf::runtime::artifacts_available() {
         use migperf::runtime::executor::{Engine, HostTensor};
         use migperf::runtime::Manifest;
         let manifest = Manifest::load(migperf::runtime::artifacts_dir()).unwrap();
         let e = manifest.entry("bert_tiny_infer_b4").unwrap();
-        let mut engine = Engine::cpu().unwrap();
-        engine.load_hlo_text(&e.name, &manifest.hlo_path(e)).unwrap();
-        let seq = e.inputs[0].shape[1];
-        let mut rng3 = Prng::new(3);
-        let tokens: Vec<i32> = (0..4 * seq).map(|_| rng3.below(512) as i32).collect();
-        let input = HostTensor::I32(tokens, vec![4, seq]);
-        bench("PJRT real exec bert_tiny_infer_b4", 3, 100, |_| {
-            engine.execute(&e.name, std::slice::from_ref(&input)).unwrap().outputs.len()
-        });
+        match Engine::cpu() {
+            Ok(mut engine) => {
+                engine.load_hlo_text(&e.name, &manifest.hlo_path(e)).unwrap();
+                let seq = e.inputs[0].shape[1];
+                let mut rng3 = Prng::new(3);
+                let tokens: Vec<i32> = (0..4 * seq).map(|_| rng3.below(512) as i32).collect();
+                let input = HostTensor::I32(tokens, vec![4, seq]);
+                bench(&mut rec, "PJRT real exec bert_tiny_infer_b4", 3, scale(100), |_| {
+                    engine.execute(&e.name, std::slice::from_ref(&input)).unwrap().outputs.len()
+                });
+            }
+            Err(e) => println!("(PJRT bench skipped: {e})"),
+        }
     } else {
         println!("(PJRT bench skipped: run `make artifacts` first)");
     }
-    println!("\ndone.");
+
+    // Machine-readable perf record.
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("migperf-bench-serving/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("workers", Json::Num(parallel.workers() as f64)),
+        (
+            "benches",
+            Json::Arr(
+                rec.rows
+                    .iter()
+                    .map(|(name, ns)| {
+                        Json::obj(vec![
+                            ("name", Json::Str(name.clone())),
+                            ("ns_per_op", Json::Num(*ns)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "sweep",
+            Json::obj(vec![
+                ("fig11_grid_points", Json::Num(fig11.len() as f64)),
+                ("fig11_serial_s", Json::Num(fig11_serial_s)),
+                ("fig11_parallel_s", Json::Num(fig11_parallel_s)),
+                ("fig11_speedup", Json::Num(fig11_speedup)),
+                ("fig5_grid_points", Json::Num(fig5.len() as f64)),
+                ("fig5_serial_s", Json::Num(fig5_serial_s)),
+                ("fig5_parallel_s", Json::Num(fig5_parallel_s)),
+                ("fig5_speedup", Json::Num(fig5_speedup)),
+            ]),
+        ),
+    ]);
+    let out_dir = std::env::var_os("MIGPERF_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let _ = std::fs::create_dir_all(&out_dir);
+    let out_path = out_dir.join("BENCH_serving.json");
+    match std::fs::write(&out_path, doc.to_pretty()) {
+        Ok(()) => println!("\nperf record written to {}", out_path.display()),
+        Err(e) => println!("\n(could not write {}: {e})", out_path.display()),
+    }
+    println!("done.");
 }

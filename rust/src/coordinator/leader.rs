@@ -9,6 +9,7 @@ use crate::mig::topology::ServerSpec;
 use crate::profiler::report::BenchReport;
 use crate::profiler::session::ProfileSession;
 use crate::profiler::task::BenchTask;
+use crate::sweep::SweepEngine;
 
 /// Task identifier assigned at submission.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -48,8 +49,19 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Coordinator over the given benchmark servers (one worker thread
-    /// per server).
+    /// per server). The machine's sweep-engine parallelism (see
+    /// [`SweepEngine::from_env`]) is divided evenly among the workers, so
+    /// each worker's `ProfileSession` fans its task's sweep grid across
+    /// its share of cores while tasks themselves run concurrently.
     pub fn new(servers: &[&'static ServerSpec]) -> Self {
+        let total = SweepEngine::from_env().workers();
+        let per_worker = (total / servers.len().max(1)).max(1);
+        Self::with_engine(servers, SweepEngine::new(per_worker))
+    }
+
+    /// Coordinator whose workers all use the given sweep engine for their
+    /// in-task grids (explicit control for tests and benchmarks).
+    pub fn with_engine(servers: &[&'static ServerSpec], engine: SweepEngine) -> Self {
         let (results_tx, results_rx) = channel();
         let workers = servers
             .iter()
@@ -57,9 +69,10 @@ impl Coordinator {
                 let (tx, rx) = channel::<WorkerMsg>();
                 let results = results_tx.clone();
                 let name = spec.name;
+                let engine = engine.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("migperf-worker-{name}"))
-                    .spawn(move || worker_loop(rx, results))
+                    .spawn(move || worker_loop(rx, results, engine))
                     .expect("spawn worker");
                 Worker { gpu: spec.gpu_model, tx, handle: Some(handle) }
             })
@@ -177,8 +190,9 @@ impl Drop for Coordinator {
 fn worker_loop(
     rx: Receiver<WorkerMsg>,
     results: Sender<(TaskHandle, Result<BenchReport, String>)>,
+    engine: SweepEngine,
 ) {
-    let session = ProfileSession::default();
+    let session = ProfileSession::default().with_engine(engine);
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Shutdown => break,
@@ -258,6 +272,29 @@ mod tests {
         let _ = c.wait(id);
         assert!(matches!(c.status(id), TaskStatus::Done(_)));
         assert!(matches!(c.status(TaskHandle(999)), TaskStatus::Failed(_)));
+    }
+
+    #[test]
+    fn worker_engine_size_does_not_change_reports() {
+        let mut t = task(GpuModel::A30_24GB, "det");
+        t.sweep = SweepAxis::Batch(vec![1, 4, 8]);
+        let mut serial = Coordinator::with_engine(
+            &[&crate::mig::topology::A30_SERVER],
+            SweepEngine::serial(),
+        );
+        let mut wide = Coordinator::with_engine(
+            &[&crate::mig::topology::A30_SERVER],
+            SweepEngine::new(4),
+        );
+        let ia = serial.submit(t.clone()).unwrap();
+        let ra = serial.wait(ia).unwrap();
+        let ib = wide.submit(t).unwrap();
+        let rb = wide.wait(ib).unwrap();
+        assert_eq!(ra.rows().len(), rb.rows().len());
+        for (x, y) in ra.rows().iter().zip(rb.rows()) {
+            assert_eq!(x.summary.throughput, y.summary.throughput);
+            assert_eq!(x.summary.p99_latency_ms, y.summary.p99_latency_ms);
+        }
     }
 
     #[test]

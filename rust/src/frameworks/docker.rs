@@ -27,20 +27,45 @@ pub struct Container {
 }
 
 /// Errors from the container binding model.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DockerError {
     /// Name already used.
-    #[error("container '{0}' already exists")]
     Duplicate(String),
     /// Unknown container.
-    #[error("no such container '{0}'")]
     NotFound(String),
     /// The GI is still bound by a running container.
-    #[error("GPU instance {0:?} is bound by running container '{1}'")]
     GiBusy(GiId, String),
     /// Underlying MIG operation failed.
-    #[error(transparent)]
-    Mig(#[from] MigError),
+    Mig(MigError),
+}
+
+impl std::fmt::Display for DockerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DockerError::Duplicate(name) => write!(f, "container '{name}' already exists"),
+            DockerError::NotFound(name) => write!(f, "no such container '{name}'"),
+            DockerError::GiBusy(gi, name) => {
+                write!(f, "GPU instance {gi:?} is bound by running container '{name}'")
+            }
+            // Transparent: MIG failures surface with their own text.
+            DockerError::Mig(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for DockerError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DockerError::Mig(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<MigError> for DockerError {
+    fn from(e: MigError) -> Self {
+        DockerError::Mig(e)
+    }
 }
 
 /// Host-level orchestration of containers over one MIG GPU.

@@ -42,6 +42,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sharing;
 pub mod simgpu;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

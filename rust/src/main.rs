@@ -28,6 +28,7 @@ fn main() -> ExitCode {
     let result = match args.command.as_deref() {
         Some("partition") => cmd_partition(&args),
         Some("bench") => cmd_bench(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("compat") => cmd_compat(&args),
         Some("profiles") => cmd_profiles(&args),
         Some("suite") => cmd_suite(&args),
@@ -59,6 +60,7 @@ fn print_usage() {
          partition   validate and show a MIG partition layout\n  \
          profiles    list GI profiles for a GPU model\n  \
          bench       run a training/inference benchmark sweep\n  \
+         sweep       parallel serving-config sweep (model × batch × mode × rate × seed)\n  \
          compat      framework compatibility matrix (paper Tables 1–2)\n  \
          suite       run a JSON task suite through the coordinator\n  \
          layouts     enumerate all valid maximal MIG layouts\n  \
@@ -154,6 +156,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                 OptSpec { name: "batch", value: "B1,B2", help: "batch-size sweep", default: Some("1,8,32") },
                 OptSpec { name: "seq", value: "S", help: "sequence length", default: Some("128") },
                 OptSpec { name: "iters", value: "N", help: "steps/requests per point", default: Some("100") },
+                OptSpec { name: "workers", value: "N", help: "sweep worker threads (0 = auto)", default: Some("0") },
                 OptSpec { name: "json", value: "", help: "emit JSON instead of a table", default: None },
                 OptSpec { name: "csv", value: "", help: "emit CSV instead of a table", default: None },
                 OptSpec { name: "leaderboard", value: "FILE", help: "append results to a leaderboard JSON and print rankings", default: None },
@@ -191,7 +194,12 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         iterations: args.parse_or("iters", 100u64).map_err(|e| e.to_string())?,
         layout: Default::default(),
     };
-    let report = ProfileSession::default().run(&task).map_err(|e| e.to_string())?;
+    let workers: usize = args.parse_or("workers", 0usize).map_err(|e| e.to_string())?;
+    let mut session = ProfileSession::default();
+    if workers > 0 {
+        session = session.with_engine(migperf::sweep::SweepEngine::new(workers));
+    }
+    let report = session.run(&task).map_err(|e| e.to_string())?;
     if let Some(board_path) = args.get("leaderboard") {
         use migperf::leaderboard::{Entry, Leaderboard, Rank};
         let path = std::path::Path::new(board_path);
@@ -224,6 +232,191 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         print!("{}", export::summaries_to_csv(&rows));
     } else {
         println!("{}", report.render_table());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help(
+                "migperf",
+                "sweep",
+                "Fan a serving-configuration grid across the parallel sweep engine",
+                &[
+                    OptSpec { name: "gpu", value: "MODEL", help: "GPU model (a100 | a30)", default: Some("a30") },
+                    OptSpec { name: "model", value: "M1,M2", help: "models from the zoo", default: Some("resnet50") },
+                    OptSpec { name: "batch", value: "B1,B2", help: "batch sizes", default: Some("1,8") },
+                    OptSpec { name: "mode", value: "mig,mps", help: "sharing modes", default: Some("mig,mps") },
+                    OptSpec { name: "rate", value: "R1,R2", help: "req/s per server (0 = closed loop)", default: Some("0") },
+                    OptSpec { name: "tenants", value: "N", help: "co-located servers", default: Some("2") },
+                    OptSpec { name: "gi", value: "P", help: "MIG profile per tenant", default: None },
+                    OptSpec { name: "requests", value: "N", help: "requests per server per point", default: Some("500") },
+                    OptSpec { name: "seeds", value: "N", help: "replication seeds per point", default: Some("1") },
+                    OptSpec { name: "seed", value: "S", help: "base seed", default: Some("2024") },
+                    OptSpec { name: "seq", value: "S", help: "sequence length / image size", default: Some("224") },
+                    OptSpec { name: "workers", value: "N", help: "worker threads (0 = auto)", default: Some("0") },
+                    OptSpec { name: "json", value: "", help: "emit JSON instead of a table", default: None },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    use migperf::sharing::mps::MpsModel;
+    use migperf::simgpu::resource::ExecResource;
+    use migperf::sweep::SweepEngine;
+    use migperf::workload::serving::{LoadMode, ServingSim, SharingMode};
+    use migperf::workload::spec::WorkloadSpec;
+
+    let gpu = {
+        let name = args.str_or("gpu", "a30");
+        GpuModel::parse(&name).ok_or_else(|| format!("unknown GPU '{name}' (use a100 or a30)"))?
+    };
+    let models: Vec<String> = args
+        .str_or("model", "resnet50")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    for m in &models {
+        if zoo::lookup(m).is_none() {
+            let names: Vec<&str> = zoo::ZOO.iter().map(|d| d.name).collect();
+            return Err(format!("unknown model '{m}'; available: {names:?}"));
+        }
+    }
+    let batches: Vec<u32> = args.list_or("batch", &[1u32, 8]).map_err(|e| e.to_string())?;
+    let modes: Vec<String> = args
+        .str_or("mode", "mig,mps")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let rates: Vec<f64> = args.list_or("rate", &[0.0f64]).map_err(|e| e.to_string())?;
+    let tenants: u32 = args.parse_or("tenants", 2u32).map_err(|e| e.to_string())?;
+    let requests: u64 = args.parse_or("requests", 500u64).map_err(|e| e.to_string())?;
+    let nseeds: usize = args.parse_or("seeds", 1usize).map_err(|e| e.to_string())?;
+    let base_seed: u64 = args.parse_or("seed", 2024u64).map_err(|e| e.to_string())?;
+    let seq: u32 = args.parse_or("seq", 224u32).map_err(|e| e.to_string())?;
+    let workers: usize = args.parse_or("workers", 0usize).map_err(|e| e.to_string())?;
+
+    // Build (and rule-check) the MIG partition once, if any point needs it.
+    let mig_resources: Vec<ExecResource> = if modes.iter().any(|m| m == "mig") {
+        let default_gi = match gpu {
+            GpuModel::A100_80GB => "1g.10gb",
+            GpuModel::A30_24GB => {
+                if tenants <= 2 {
+                    "2g.12gb"
+                } else {
+                    "1g.6gb"
+                }
+            }
+        };
+        let profile = args.str_or("gi", default_gi);
+        let mut ctl = MigController::new(gpu);
+        ctl.enable_mig().map_err(|e| e.to_string())?;
+        let gis = ctl.partition_uniform(&profile, tenants).map_err(|e| e.to_string())?;
+        gis.iter()
+            .map(|id| ExecResource::from_gi(gpu, ctl.instance(*id).unwrap().profile))
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    // Materialize the grid in row-major order: the fixed point order is
+    // what makes the sweep deterministic at any worker count.
+    let seed_list = migperf::sweep::seeds(base_seed, nseeds.max(1));
+    let mut sims: Vec<ServingSim> = Vec::new();
+    let mut meta: Vec<(String, u32, String, f64, u64)> = Vec::new();
+    for model in &models {
+        let desc = zoo::lookup(model).unwrap();
+        for &batch in &batches {
+            for mode in &modes {
+                let sharing = match mode.as_str() {
+                    "mig" => SharingMode::Mig(mig_resources.clone()),
+                    "mps" => SharingMode::Mps {
+                        gpu: ExecResource::whole_gpu(gpu),
+                        n_clients: tenants,
+                        model: MpsModel::default(),
+                    },
+                    other => return Err(format!("unknown sharing mode '{other}' (mig|mps)")),
+                };
+                for &rate in &rates {
+                    let load = if rate > 0.0 {
+                        LoadMode::OpenPoisson { rate, requests_per_server: requests }
+                    } else {
+                        LoadMode::Closed { requests_per_server: requests }
+                    };
+                    for &seed in &seed_list {
+                        sims.push(ServingSim {
+                            mode: sharing.clone(),
+                            load: load.clone(),
+                            spec: WorkloadSpec::inference(desc, batch, seq),
+                            seed,
+                        });
+                        meta.push((model.clone(), batch, mode.clone(), rate, seed));
+                    }
+                }
+            }
+        }
+    }
+
+    let engine =
+        if workers > 0 { SweepEngine::new(workers) } else { SweepEngine::from_env() };
+    let started = std::time::Instant::now();
+    let outs = migperf::sweep::run_serving(&engine, &sims).map_err(|e| e.to_string())?;
+    let wall_s = started.elapsed().as_secs_f64();
+
+    if args.flag("json") {
+        use migperf::util::json::Json;
+        let rows: Vec<Json> = meta
+            .iter()
+            .zip(&outs)
+            .map(|((model, batch, mode, rate, seed), out)| {
+                Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("batch", Json::Num(*batch as f64)),
+                    ("mode", Json::Str(mode.clone())),
+                    ("rate", Json::Num(*rate)),
+                    ("seed", Json::Num(*seed as f64)),
+                    ("completed", Json::Num(out.pooled.completed as f64)),
+                    ("avg_latency_ms", Json::Num(out.pooled.avg_latency_ms)),
+                    ("p50_latency_ms", Json::Num(out.pooled.p50_latency_ms)),
+                    ("p99_latency_ms", Json::Num(out.pooled.p99_latency_ms)),
+                    ("throughput", Json::Num(out.pooled.throughput)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("grid_points", Json::Num(sims.len() as f64)),
+            ("workers", Json::Num(engine.workers() as f64)),
+            ("wall_s", Json::Num(wall_s)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        println!("{}", doc.to_pretty());
+    } else {
+        let mut t = Table::new(&[
+            "model", "batch", "mode", "rate", "seed", "p50_ms", "p99_ms", "tput",
+        ]);
+        for ((model, batch, mode, rate, seed), out) in meta.iter().zip(&outs) {
+            t.row(&[
+                model.clone(),
+                batch.to_string(),
+                mode.clone(),
+                if *rate > 0.0 { format!("{rate}") } else { "closed".into() },
+                seed.to_string(),
+                format!("{:.2}", out.pooled.p50_latency_ms),
+                format!("{:.2}", out.pooled.p99_latency_ms),
+                format!("{:.1}", out.pooled.throughput),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "{} grid points on {} workers in {:.2}s",
+            sims.len(),
+            engine.workers(),
+            wall_s
+        );
     }
     Ok(())
 }

@@ -103,6 +103,29 @@ impl MetricsCollector {
         self.series.extend(set);
     }
 
+    /// Merge another collector into this one: an order-independent
+    /// reduction over every underlying accumulator (latency histogram,
+    /// Welford moments, energy, GRACT, FB peak, time window). This is what
+    /// makes pooled summaries *exact* — percentiles come from the merged
+    /// histogram rather than an approximation over per-part summaries —
+    /// and what the parallel sweep engine reduces per-worker results with.
+    pub fn merge(&mut self, other: &MetricsCollector) {
+        self.latency.merge(&other.latency);
+        self.latency_moments.merge(&other.latency_moments);
+        self.samples_done += other.samples_done;
+        self.start_t = self.start_t.min(other.start_t);
+        self.end_t = self.end_t.max(other.end_t);
+        self.energy_j += other.energy_j;
+        self.gract.merge(&other.gract);
+        self.peak_fb_bytes = self.peak_fb_bytes.max(other.peak_fb_bytes);
+        self.series.extend(other.series.clone());
+    }
+
+    /// The underlying latency histogram (exact-pooling and oracle tests).
+    pub fn latency_histogram(&self) -> &LatencyHistogram {
+        &self.latency
+    }
+
     /// Collected time series (DCGM samples etc.).
     pub fn series(&self) -> &SeriesSet {
         &self.series
@@ -180,6 +203,43 @@ mod tests {
         assert_eq!(s.energy_j, 75.0);
         assert!((s.mean_gract - 0.6).abs() < 1e-12);
         assert!((s.peak_fb_mib - 2048.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one_collector() {
+        let mut whole = MetricsCollector::new("whole");
+        let mut a = MetricsCollector::new("a");
+        let mut b = MetricsCollector::new("b");
+        for i in 0..500u64 {
+            let t = (i + 1) as f64 * 0.01;
+            let lat = 5.0 + (i % 7) as f64;
+            whole.record_completion(t, lat, 1);
+            if i % 2 == 0 { a.record_completion(t, lat, 1) } else { b.record_completion(t, lat, 1) }
+        }
+        a.record_energy(10.0);
+        b.record_energy(5.0);
+        a.merge(&b);
+        let m = a.summarize();
+        let w = whole.summarize();
+        assert_eq!(m.completed, w.completed);
+        assert_eq!(m.p99_latency_ms, w.p99_latency_ms, "merged p99 is exact");
+        assert_eq!(m.p50_latency_ms, w.p50_latency_ms);
+        assert!((m.avg_latency_ms - w.avg_latency_ms).abs() < 1e-9);
+        assert!((m.std_latency_ms - w.std_latency_ms).abs() < 1e-9);
+        assert_eq!(m.energy_j, 15.0);
+        assert_eq!(m.duration_s, w.duration_s);
+    }
+
+    #[test]
+    fn merge_with_empty_collector_is_identity() {
+        let mut a = MetricsCollector::new("a");
+        a.record_completion(1.0, 10.0, 1);
+        let before = a.summarize();
+        a.merge(&MetricsCollector::new("empty"));
+        let after = a.summarize();
+        assert_eq!(before.completed, after.completed);
+        assert_eq!(before.p99_latency_ms, after.p99_latency_ms);
+        assert_eq!(before.duration_s, after.duration_s);
     }
 
     #[test]

@@ -58,43 +58,77 @@ impl GpuInstance {
 }
 
 /// Controller errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MigError {
     /// Operation requires MIG mode on.
-    #[error("MIG mode is not enabled on this GPU")]
     MigDisabled,
     /// MIG mode already in the requested state.
-    #[error("MIG mode is already {0}")]
     AlreadyInState(&'static str),
     /// Cannot disable MIG while instances exist.
-    #[error("cannot disable MIG: {0} GPU instance(s) still exist")]
     InstancesExist(usize),
     /// Unknown profile name for this GPU.
-    #[error("unknown GI profile '{0}' for this GPU model")]
     UnknownProfile(String),
     /// Placement rules rejected the request.
-    #[error(transparent)]
-    Placement(#[from] PlacementError),
+    Placement(PlacementError),
     /// No free slot for the profile.
-    #[error("no valid placement available for profile '{0}'")]
     NoSlot(String),
     /// GI id not found.
-    #[error("no such GPU instance: {0:?}")]
     NoSuchGi(GiId),
     /// CI id not found in the GI.
-    #[error("no such compute instance {1:?} in {0:?}")]
     NoSuchCi(GiId, CiId),
     /// GI still holds CIs.
-    #[error("GPU instance {0:?} still has {1} compute instance(s)")]
     CisExist(GiId, usize),
     /// CI slice request exceeds what the GI has free.
-    #[error("compute-instance request of {need} slice(s) exceeds {free} free in the GI")]
     CiSlicesExhausted {
         /// Requested slices.
         need: u32,
         /// Free slices in the GI.
         free: u32,
     },
+}
+
+impl std::fmt::Display for MigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MigError::MigDisabled => write!(f, "MIG mode is not enabled on this GPU"),
+            MigError::AlreadyInState(state) => write!(f, "MIG mode is already {state}"),
+            MigError::InstancesExist(n) => {
+                write!(f, "cannot disable MIG: {n} GPU instance(s) still exist")
+            }
+            MigError::UnknownProfile(name) => {
+                write!(f, "unknown GI profile '{name}' for this GPU model")
+            }
+            // Transparent: placement failures surface with their own text.
+            MigError::Placement(e) => write!(f, "{e}"),
+            MigError::NoSlot(name) => {
+                write!(f, "no valid placement available for profile '{name}'")
+            }
+            MigError::NoSuchGi(gi) => write!(f, "no such GPU instance: {gi:?}"),
+            MigError::NoSuchCi(gi, ci) => write!(f, "no such compute instance {ci:?} in {gi:?}"),
+            MigError::CisExist(gi, n) => {
+                write!(f, "GPU instance {gi:?} still has {n} compute instance(s)")
+            }
+            MigError::CiSlicesExhausted { need, free } => write!(
+                f,
+                "compute-instance request of {need} slice(s) exceeds {free} free in the GI"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MigError::Placement(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<PlacementError> for MigError {
+    fn from(e: PlacementError) -> Self {
+        MigError::Placement(e)
+    }
 }
 
 /// MIG controller for one physical GPU.

@@ -38,10 +38,9 @@ impl Placement {
 }
 
 /// Why a placement or layout was rejected.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PlacementError {
     /// Offset not in the profile's published placement list.
-    #[error("profile {profile} cannot be placed at memory-slice {start}")]
     InvalidOffset {
         /// Profile name.
         profile: String,
@@ -49,7 +48,6 @@ pub enum PlacementError {
         start: u32,
     },
     /// Memory-slice interval collides with an existing GI.
-    #[error("memory slices [{start}, {end}) already occupied")]
     MemoryOverlap {
         /// Requested interval start.
         start: u32,
@@ -57,7 +55,6 @@ pub enum PlacementError {
         end: u32,
     },
     /// Device compute-slice budget exhausted.
-    #[error("compute slices exhausted: need {need}, only {avail} free")]
     ComputeExhausted {
         /// Slices required by the new GI.
         need: u32,
@@ -65,7 +62,6 @@ pub enum PlacementError {
         avail: u32,
     },
     /// NVIDIA forbids this profile combination outright.
-    #[error("profiles {a} and {b} cannot coexist (NVIDIA hard-coded rule)")]
     ExcludedCombination {
         /// First profile.
         a: String,
@@ -73,6 +69,27 @@ pub enum PlacementError {
         b: String,
     },
 }
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementError::InvalidOffset { profile, start } => {
+                write!(f, "profile {profile} cannot be placed at memory-slice {start}")
+            }
+            PlacementError::MemoryOverlap { start, end } => {
+                write!(f, "memory slices [{start}, {end}) already occupied")
+            }
+            PlacementError::ComputeExhausted { need, avail } => {
+                write!(f, "compute slices exhausted: need {need}, only {avail} free")
+            }
+            PlacementError::ExcludedCombination { a, b } => {
+                write!(f, "profiles {a} and {b} cannot coexist (NVIDIA hard-coded rule)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 /// Placement validator bound to one GPU model.
 #[derive(Debug, Clone)]

@@ -10,6 +10,7 @@ use crate::mig::controller::MigController;
 use crate::simgpu::energy::EnergyModel;
 use crate::simgpu::perfmodel::{PerfError, PerfModel};
 use crate::simgpu::resource::ExecResource;
+use crate::sweep::SweepEngine;
 use crate::workload::serving::{LoadMode, ServingSim, SharingMode};
 use crate::workload::spec::{WorkloadKind, WorkloadSpec};
 use crate::workload::training::{run_training, TrainingConfig};
@@ -18,23 +19,47 @@ use super::report::{BenchReport, ReportRow};
 use super::task::BenchTask;
 
 /// Session errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SessionError {
     /// Task referenced an unknown model.
-    #[error("unknown model '{0}'")]
     UnknownModel(String),
     /// MIG partitioning failed.
-    #[error("partitioning failed: {0}")]
-    Mig(#[from] crate::mig::controller::MigError),
+    Mig(crate::mig::controller::MigError),
     /// A sweep point failed to run.
-    #[error("workload failed at {label}: {source}")]
     Workload {
         /// Sweep-point label.
         label: String,
         /// Underlying perf error.
-        #[source]
         source: PerfError,
     },
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            SessionError::Mig(e) => write!(f, "partitioning failed: {e}"),
+            SessionError::Workload { label, source } => {
+                write!(f, "workload failed at {label}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SessionError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SessionError::Mig(e) => Some(e),
+            SessionError::Workload { source, .. } => Some(source),
+            SessionError::UnknownModel(_) => None,
+        }
+    }
+}
+
+impl From<crate::mig::controller::MigError> for SessionError {
+    fn from(e: crate::mig::controller::MigError) -> Self {
+        SessionError::Mig(e)
+    }
 }
 
 /// Executes benchmark tasks against simulated GPUs.
@@ -47,11 +72,21 @@ pub struct ProfileSession {
     /// If true, OOM points are recorded as skipped rows instead of
     /// failing the session (the paper reports such points as absent).
     pub skip_oom: bool,
+    /// Worker pool the sweep grid fans across. Every grid point carries
+    /// its own seed and results reduce in input order, so reports are
+    /// identical at any worker count.
+    pub engine: SweepEngine,
 }
 
 impl Default for ProfileSession {
     fn default() -> Self {
-        ProfileSession { perf: PerfModel::default(), energy: EnergyModel::default(), seed: 0xA100, skip_oom: true }
+        ProfileSession {
+            perf: PerfModel::default(),
+            energy: EnergyModel::default(),
+            seed: 0xA100,
+            skip_oom: true,
+            engine: SweepEngine::from_env(),
+        }
     }
 }
 
@@ -59,6 +94,13 @@ impl ProfileSession {
     /// Session with explicit models (used by calibration paths).
     pub fn with_models(perf: PerfModel, energy: EnergyModel) -> Self {
         ProfileSession { perf, energy, ..Default::default() }
+    }
+
+    /// Replace the sweep engine (worker count) this session fans grid
+    /// points across.
+    pub fn with_engine(mut self, engine: SweepEngine) -> Self {
+        self.engine = engine;
+        self
     }
 
     /// Run a full task, returning its report.
@@ -83,47 +125,69 @@ impl ProfileSession {
             resources.push(ExecResource::from_gi(task.gpu, inst.profile));
         }
 
+        // Fan the (sweep point × instance) grid across the engine. Each
+        // point is an independent deterministic simulation; rows come
+        // back in grid order and the first error in grid order wins, so
+        // the report is bit-identical at any worker count.
+        let points: Vec<(u32, u32, usize)> = task
+            .sweep_points()
+            .into_iter()
+            .flat_map(|(batch, seq)| (0..resources.len()).map(move |ri| (batch, seq, ri)))
+            .collect();
+        let rows = self.engine.run(&points, |&(batch, seq, ri)| {
+            self.run_point(task, model, &resources[ri], batch, seq)
+        });
         let mut report = BenchReport::new(&task.name);
-        for (batch, seq) in task.sweep_points() {
-            for res in &resources {
-                let spec = match task.kind {
-                    WorkloadKind::Training => WorkloadSpec::training(model, batch, seq),
-                    WorkloadKind::Inference => WorkloadSpec::inference(model, batch, seq),
-                };
-                let label = format!("{}@{}", spec.label(), res.label);
-                let outcome = match task.kind {
-                    WorkloadKind::Training => run_training(
-                        res,
-                        &spec,
-                        &TrainingConfig { steps: task.iterations, sample_interval_s: 0.5 },
-                        &self.perf,
-                        &self.energy,
-                    ),
-                    WorkloadKind::Inference => ServingSim {
-                        mode: SharingMode::Mig(vec![res.clone()]),
-                        load: LoadMode::Closed { requests_per_server: task.iterations },
-                        spec: spec.clone(),
-                        seed: self.seed,
-                    }
-                    .run()
-                    .map(|o| o.pooled),
-                };
-                match outcome {
-                    Ok(summary) => report.push(ReportRow {
-                        instance: res.label.clone(),
-                        batch,
-                        seq,
-                        summary,
-                        skipped: None,
-                    }),
-                    Err(e @ PerfError::OutOfMemory { .. }) if self.skip_oom => {
-                        report.push(ReportRow::skipped(res.label.clone(), batch, seq, e.to_string()));
-                    }
-                    Err(e) => return Err(SessionError::Workload { label, source: e }),
-                }
-            }
+        for row in rows {
+            report.push(row?);
         }
         Ok(report)
+    }
+
+    /// Run one (batch, seq, instance) grid point.
+    fn run_point(
+        &self,
+        task: &BenchTask,
+        model: &'static crate::models::zoo::ModelDesc,
+        res: &ExecResource,
+        batch: u32,
+        seq: u32,
+    ) -> Result<ReportRow, SessionError> {
+        let spec = match task.kind {
+            WorkloadKind::Training => WorkloadSpec::training(model, batch, seq),
+            WorkloadKind::Inference => WorkloadSpec::inference(model, batch, seq),
+        };
+        let label = format!("{}@{}", spec.label(), res.label);
+        let outcome = match task.kind {
+            WorkloadKind::Training => run_training(
+                res,
+                &spec,
+                &TrainingConfig { steps: task.iterations, sample_interval_s: 0.5 },
+                &self.perf,
+                &self.energy,
+            ),
+            WorkloadKind::Inference => ServingSim {
+                mode: SharingMode::Mig(vec![res.clone()]),
+                load: LoadMode::Closed { requests_per_server: task.iterations },
+                spec: spec.clone(),
+                seed: self.seed,
+            }
+            .run()
+            .map(|o| o.pooled),
+        };
+        match outcome {
+            Ok(summary) => Ok(ReportRow {
+                instance: res.label.clone(),
+                batch,
+                seq,
+                summary,
+                skipped: None,
+            }),
+            Err(e @ PerfError::OutOfMemory { .. }) if self.skip_oom => {
+                Ok(ReportRow::skipped(res.label.clone(), batch, seq, e.to_string()))
+            }
+            Err(e) => Err(SessionError::Workload { label, source: e }),
+        }
     }
 }
 
@@ -205,6 +269,27 @@ mod tests {
         assert_eq!(report.rows().len(), 6);
         for r in report.rows() {
             assert_eq!(r.summary.completed, 30);
+        }
+    }
+
+    #[test]
+    fn report_identical_at_any_worker_count() {
+        let task = fig2_task();
+        let serial =
+            ProfileSession::default().with_engine(SweepEngine::serial()).run(&task).unwrap();
+        for workers in [2, 8] {
+            let par = ProfileSession::default()
+                .with_engine(SweepEngine::new(workers))
+                .run(&task)
+                .unwrap();
+            assert_eq!(serial.rows().len(), par.rows().len());
+            for (a, b) in serial.rows().iter().zip(par.rows()) {
+                assert_eq!(a.instance, b.instance);
+                assert_eq!(a.batch, b.batch);
+                assert_eq!(a.summary.throughput, b.summary.throughput, "bit-identical tput");
+                assert_eq!(a.summary.p99_latency_ms, b.summary.p99_latency_ms);
+                assert_eq!(a.summary.energy_j, b.summary.energy_j);
+            }
         }
     }
 

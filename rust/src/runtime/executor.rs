@@ -3,20 +3,42 @@
 //! The heart of the rust-side request path: `Engine` wraps one PJRT CPU
 //! client, compiles each artifact the first time it is requested, and
 //! caches the loaded executable. Inputs/outputs cross the boundary as
-//! `xla::Literal`s built from plain `f32`/`i32` slices.
+//! literals built from plain `f32`/`i32` slices.
 //!
 //! HLO *text* is the interchange format — see `/opt/xla-example/README.md`
 //! and `python/compile/aot.py`: jax ≥ 0.5 serialized protos use 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects, while the text parser
 //! reassigns ids.
+//!
+//! The PJRT client needs the `xla` bindings, which the offline toolchain
+//! does not carry; the real engine is therefore gated behind the `pjrt`
+//! cargo feature. The default build ships a stub `Engine` with the same
+//! API that errors at construction, so everything guarded by
+//! `runtime::artifacts_available()` degrades gracefully.
 
-use std::collections::HashMap;
 use std::path::Path;
-use std::time::Instant;
-
-use anyhow::{anyhow, Context, Result};
 
 use super::manifest::{read_f32_blob, DType, EntryPoint, Manifest};
+
+/// Runtime execution error (replaces the old `anyhow` chains with a plain
+/// message type; context is folded into the message).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecError(pub String);
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Executor result alias.
+pub type Result<T> = std::result::Result<T, ExecError>;
+
+fn err(msg: impl Into<String>) -> ExecError {
+    ExecError(msg.into())
+}
 
 /// A host-side tensor crossing into/out of an executable.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,24 +72,6 @@ impl HostTensor {
             _ => None,
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            HostTensor::F32(v, shape) => xla::Literal::vec1(v).reshape(shape)?,
-            HostTensor::I32(v, shape) => xla::Literal::vec1(v).reshape(shape)?,
-        };
-        Ok(lit)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<i64> = shape.dims().to_vec();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
-            xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
-            other => Err(anyhow!("unsupported output element type {other:?}")),
-        }
-    }
 }
 
 /// Outcome of one execution: outputs plus the measured wall time.
@@ -79,65 +83,153 @@ pub struct ExecOutcome {
     pub wall_s: f64,
 }
 
-/// PJRT execution engine with an executable cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+        let lit = match t {
+            HostTensor::F32(v, shape) => xla::Literal::vec1(v)
+                .reshape(shape)
+                .map_err(|e| err(format!("reshaping f32 input: {e:?}")))?,
+            HostTensor::I32(v, shape) => xla::Literal::vec1(v)
+                .reshape(shape)
+                .map_err(|e| err(format!("reshaping i32 input: {e:?}")))?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().map_err(|e| err(format!("output shape: {e:?}")))?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(
+                lit.to_vec::<f32>().map_err(|e| err(format!("reading f32 output: {e:?}")))?,
+                dims,
+            )),
+            xla::ElementType::S32 => Ok(HostTensor::I32(
+                lit.to_vec::<i32>().map_err(|e| err(format!("reading i32 output: {e:?}")))?,
+                dims,
+            )),
+            other => Err(err(format!("unsupported output element type {other:?}"))),
+        }
+    }
+
+    /// PJRT execution engine with an executable cache.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Engine {
+        /// Create an engine on the PJRT CPU client.
+        pub fn cpu() -> Result<Engine> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| err(format!("creating PJRT CPU client: {e:?}")))?;
+            Ok(Engine { client, cache: HashMap::new() })
+        }
+
+        /// Platform name of the underlying client (e.g. "cpu").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Number of executables currently cached.
+        pub fn cached(&self) -> usize {
+            self.cache.len()
+        }
+
+        /// Load and compile an HLO text file under a cache key.
+        pub fn load_hlo_text(&mut self, key: &str, path: &Path) -> Result<()> {
+            if self.cache.contains_key(key) {
+                return Ok(());
+            }
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| err(format!("parsing HLO text {path:?}: {e:?}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| err(format!("compiling {key}: {e:?}")))?;
+            self.cache.insert(key.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute a cached executable with host tensors; returns outputs
+        /// and wall time. The executable must have been lowered with
+        /// `return_tuple=True` (aot.py always does).
+        pub fn execute(&self, key: &str, inputs: &[HostTensor]) -> Result<ExecOutcome> {
+            let exe =
+                self.cache.get(key).ok_or_else(|| err(format!("executable '{key}' not loaded")))?;
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(to_literal).collect::<Result<_>>()?;
+            let start = Instant::now();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| err(format!("executing {key}: {e:?}")))?;
+            let wall_s = start.elapsed().as_secs_f64();
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| err(format!("syncing {key} output: {e:?}")))?;
+            let parts = tuple.to_tuple().map_err(|e| err(format!("untupling {key}: {e:?}")))?;
+            let outputs = parts.iter().map(from_literal).collect::<Result<Vec<_>>>()?;
+            Ok(ExecOutcome { outputs, wall_s })
+        }
+
+        /// Load every entry of a manifest (compiling all artifacts up
+        /// front).
+        pub fn load_manifest(&mut self, manifest: &Manifest) -> Result<()> {
+            for e in &manifest.entries {
+                self.load_hlo_text(&e.name, &manifest.hlo_path(e))?;
+            }
+            Ok(())
+        }
+    }
 }
 
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Engine;
+
+/// Stub engine used when the crate is built without the `pjrt` feature:
+/// same API, but construction fails, so callers gated on
+/// [`crate::runtime::artifacts_available`] skip real execution.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
 impl Engine {
-    /// Create an engine on the PJRT CPU client.
+    /// Always errors: the PJRT backend was not built.
     pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, cache: HashMap::new() })
+        Err(err("PJRT backend not built (enable the `pjrt` cargo feature)"))
     }
 
-    /// Platform name of the underlying client (e.g. "cpu").
+    /// Platform name (stub).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "stub".to_string()
     }
 
-    /// Number of executables currently cached.
+    /// Number of executables currently cached (stub: always 0).
     pub fn cached(&self) -> usize {
-        self.cache.len()
+        0
     }
 
-    /// Load and compile an HLO text file under a cache key.
-    pub fn load_hlo_text(&mut self, key: &str, path: &Path) -> Result<()> {
-        if self.cache.contains_key(key) {
-            return Ok(());
-        }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {key}"))?;
-        self.cache.insert(key.to_string(), exe);
-        Ok(())
+    /// Always errors on the stub engine.
+    pub fn load_hlo_text(&mut self, _key: &str, _path: &Path) -> Result<()> {
+        Err(err("PJRT backend not built (enable the `pjrt` cargo feature)"))
     }
 
-    /// Execute a cached executable with host tensors; returns outputs and
-    /// wall time. The executable must have been lowered with
-    /// `return_tuple=True` (aot.py always does).
-    pub fn execute(&self, key: &str, inputs: &[HostTensor]) -> Result<ExecOutcome> {
-        let exe = self.cache.get(key).ok_or_else(|| anyhow!("executable '{key}' not loaded"))?;
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(HostTensor::to_literal).collect::<Result<_>>()?;
-        let start = Instant::now();
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let wall_s = start.elapsed().as_secs_f64();
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        let outputs =
-            parts.iter().map(HostTensor::from_literal).collect::<Result<Vec<_>>>()?;
-        Ok(ExecOutcome { outputs, wall_s })
+    /// Always errors on the stub engine.
+    pub fn execute(&self, _key: &str, _inputs: &[HostTensor]) -> Result<ExecOutcome> {
+        Err(err("PJRT backend not built (enable the `pjrt` cargo feature)"))
     }
 
-    /// Load every entry of a manifest (compiling all artifacts up front).
-    pub fn load_manifest(&mut self, manifest: &Manifest) -> Result<()> {
-        for e in &manifest.entries {
-            self.load_hlo_text(&e.name, &manifest.hlo_path(e))?;
-        }
-        Ok(())
+    /// Always errors on the stub engine.
+    pub fn load_manifest(&mut self, _manifest: &Manifest) -> Result<()> {
+        Err(err("PJRT backend not built (enable the `pjrt` cargo feature)"))
     }
 }
 
@@ -148,21 +240,21 @@ pub fn unflatten_params(entry: &EntryPoint, flat: &[f32]) -> Result<Vec<HostTens
     let mut offset = 0usize;
     for spec in entry.inputs.iter().take(entry.num_param_inputs) {
         if spec.dtype != DType::F32 {
-            return Err(anyhow!("parameter input '{}' must be f32", spec.name));
+            return Err(err(format!("parameter input '{}' must be f32", spec.name)));
         }
         let n = spec.elements();
         if offset + n > flat.len() {
-            return Err(anyhow!(
+            return Err(err(format!(
                 "params blob too short: need {} elements at offset {offset}, have {}",
                 n,
                 flat.len()
-            ));
+            )));
         }
         out.push(HostTensor::F32(flat[offset..offset + n].to_vec(), spec.shape.clone()));
         offset += n;
     }
     if offset != flat.len() {
-        return Err(anyhow!("params blob has {} trailing elements", flat.len() - offset));
+        return Err(err(format!("params blob has {} trailing elements", flat.len() - offset)));
     }
     Ok(out)
 }
@@ -171,8 +263,9 @@ pub fn unflatten_params(entry: &EntryPoint, flat: &[f32]) -> Result<Vec<HostTens
 pub fn load_params(manifest: &Manifest, entry: &EntryPoint) -> Result<Vec<HostTensor>> {
     let path = manifest
         .params_path(entry)
-        .ok_or_else(|| anyhow!("entry '{}' has no params file", entry.name))?;
-    let flat = read_f32_blob(&path).with_context(|| format!("reading {path:?}"))?;
+        .ok_or_else(|| err(format!("entry '{}' has no params file", entry.name)))?;
+    let flat =
+        read_f32_blob(&path).map_err(|e| err(format!("reading {path:?}: {e}")))?;
     unflatten_params(entry, &flat)
 }
 
@@ -224,6 +317,13 @@ mod tests {
         let i = HostTensor::I32(vec![1, 2, 3], vec![3]);
         assert!(i.as_f32().is_none());
         assert_eq!(i.elements(), 3);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_missing_backend() {
+        let e = Engine::cpu().unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 
     // PJRT-dependent tests live in rust/tests/runtime_integration.rs and

@@ -83,17 +83,40 @@ pub struct Manifest {
 }
 
 /// Manifest errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
     /// File could not be read.
-    #[error("cannot read manifest at {0}: {1}")]
     Io(PathBuf, std::io::Error),
     /// JSON was malformed.
-    #[error("manifest JSON invalid: {0}")]
-    Json(#[from] json::ParseError),
+    Json(json::ParseError),
     /// Schema violation.
-    #[error("manifest schema error: {0}")]
     Schema(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(path, e) => write!(f, "cannot read manifest at {}: {e}", path.display()),
+            ManifestError::Json(e) => write!(f, "manifest JSON invalid: {e}"),
+            ManifestError::Schema(msg) => write!(f, "manifest schema error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(_, e) => Some(e),
+            ManifestError::Json(e) => Some(e),
+            ManifestError::Schema(_) => None,
+        }
+    }
+}
+
+impl From<json::ParseError> for ManifestError {
+    fn from(e: json::ParseError) -> Self {
+        ManifestError::Json(e)
+    }
 }
 
 impl Manifest {

@@ -103,7 +103,14 @@ impl<E> Des<E> {
             let (at, payload) = self.next().unwrap();
             handler(self, at, payload);
         }
-        self.now = self.now.max(horizon.min(self.now + f64::INFINITY));
+        // Advance the clock to the horizon only when it is finite. With
+        // `horizon = f64::INFINITY` the old expression set `now` to
+        // infinity, which poisoned every later `schedule_in` (now + delay
+        // = inf); an exhausted-queue run leaves the clock at the last
+        // processed event instead.
+        if horizon.is_finite() {
+            self.now = self.now.max(horizon);
+        }
     }
 }
 
@@ -170,6 +177,25 @@ mod tests {
         des.schedule_at(5.0, ());
         des.next();
         des.schedule_at(1.0, ());
+    }
+
+    #[test]
+    fn infinite_horizon_leaves_clock_usable() {
+        let mut des: Des<u8> = Des::new();
+        des.schedule_at(2.0, 1);
+        des.run_until(f64::INFINITY, |_, _, _| {});
+        assert_eq!(des.now(), 2.0, "clock stays at the last processed event");
+        // Regression: this used to panic-or-poison because `now` was +inf.
+        des.schedule_in(1.0, 2);
+        assert_eq!(des.next(), Some((3.0, 2)));
+    }
+
+    #[test]
+    fn finite_horizon_still_advances_clock() {
+        let mut des: Des<u8> = Des::new();
+        des.schedule_at(1.0, 1);
+        des.run_until(10.0, |_, _, _| {});
+        assert_eq!(des.now(), 10.0);
     }
 
     #[test]

@@ -32,10 +32,9 @@ pub struct StepEstimate {
 }
 
 /// Why a step could not run.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PerfError {
     /// Workload does not fit in the resource's frame buffer.
-    #[error("out of memory: workload needs {need_gib:.2} GiB, instance has {have_gib:.2} GiB")]
     OutOfMemory {
         /// Required GiB.
         need_gib: f64,
@@ -43,6 +42,19 @@ pub enum PerfError {
         have_gib: f64,
     },
 }
+
+impl std::fmt::Display for PerfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PerfError::OutOfMemory { need_gib, have_gib } => write!(
+                f,
+                "out of memory: workload needs {need_gib:.2} GiB, instance has {have_gib:.2} GiB"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PerfError {}
 
 /// Tunable constants of the model. Defaults are calibrated so whole-GPU
 /// numbers land in the envelope of published A100 benchmarks; `runtime`

@@ -1,0 +1,200 @@
+//! Scoped-thread worker pool with deterministic result ordering.
+//!
+//! The engine is a work-stealing-free pool: workers pull the next grid
+//! point off a shared atomic cursor, run it, and stash `(index, result)`
+//! locally; after the scope joins, results are sorted back into input
+//! order. Scheduling therefore affects only *which thread* runs a point,
+//! never the value or order of the returned vector — the determinism
+//! guarantee the figure benches rely on (same seed ⇒ same figures at any
+//! thread count).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Environment variable pinning the worker count (`0`/unset = auto).
+pub const WORKERS_ENV: &str = "MIGPERF_SWEEP_WORKERS";
+
+/// Parallel map over sweep grid points.
+#[derive(Debug, Clone)]
+pub struct SweepEngine {
+    workers: usize,
+}
+
+impl SweepEngine {
+    /// Engine with an explicit worker count (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Self {
+        SweepEngine { workers: workers.max(1) }
+    }
+
+    /// Strictly serial engine (useful as a baseline and in tests).
+    pub fn serial() -> Self {
+        SweepEngine::new(1)
+    }
+
+    /// Engine sized from the environment: `MIGPERF_SWEEP_WORKERS` when set
+    /// to a positive integer, otherwise the machine's available
+    /// parallelism.
+    pub fn from_env() -> Self {
+        let from_var = std::env::var(WORKERS_ENV)
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&w| w > 0);
+        let workers = from_var.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        SweepEngine::new(workers)
+    }
+
+    /// Configured worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Map `f` over `points` on the worker pool; results come back in
+    /// input order regardless of which thread ran which point.
+    pub fn run<P, R, F>(&self, points: &[P], f: F) -> Vec<R>
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(&P) -> R + Sync,
+    {
+        self.run_indexed(points, |_, p| f(p))
+    }
+
+    /// Like [`SweepEngine::run`], passing the grid-point index alongside
+    /// the point.
+    pub fn run_indexed<P, R, F>(&self, points: &[P], f: F) -> Vec<R>
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(usize, &P) -> R + Sync,
+    {
+        let n = points.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.workers.min(n);
+        if workers == 1 {
+            return points.iter().enumerate().map(|(i, p)| f(i, p)).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let cursor = &cursor;
+        let f = &f;
+        let mut indexed: Vec<(usize, R)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut local: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(i, &points[i])));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("sweep worker panicked"))
+                .collect()
+        });
+        indexed.sort_unstable_by_key(|&(i, _)| i);
+        indexed.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Map fallibly; every point runs to completion, then the first error
+    /// *in input order* (not completion order) is returned, keeping the
+    /// outcome deterministic at any worker count.
+    pub fn try_run<P, R, E, F>(&self, points: &[P], f: F) -> Result<Vec<R>, E>
+    where
+        P: Sync,
+        R: Send,
+        E: Send,
+        F: Fn(&P) -> Result<R, E> + Sync,
+    {
+        self.run(points, f).into_iter().collect()
+    }
+
+    /// Map then fold. The fold always visits results in input order, so an
+    /// associative-but-not-exactly-commutative reduction (floating-point
+    /// merges) still produces bit-identical output at any worker count.
+    pub fn run_reduce<P, R, A, F, G>(&self, points: &[P], map: F, init: A, fold: G) -> A
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(&P) -> R + Sync,
+        G: FnMut(A, R) -> A,
+    {
+        self.run(points, map).into_iter().fold(init, fold)
+    }
+}
+
+impl Default for SweepEngine {
+    fn default() -> Self {
+        SweepEngine::from_env()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order() {
+        let points: Vec<u64> = (0..257).collect();
+        let engine = SweepEngine::new(4);
+        let out = engine.run(&points, |&p| p * p);
+        let expect: Vec<u64> = points.iter().map(|&p| p * p).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn indexed_variant_sees_indices() {
+        let points = vec!["a", "b", "c"];
+        let out = SweepEngine::new(3).run_indexed(&points, |i, p| format!("{i}{p}"));
+        assert_eq!(out, vec!["0a", "1b", "2c"]);
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let out: Vec<u32> = SweepEngine::new(8).run(&Vec::<u32>::new(), |&p| p);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let points: Vec<u64> = (0..100).collect();
+        let serial = SweepEngine::serial().run(&points, |&p| (p * 2654435761) % 97);
+        for workers in [2, 3, 8, 64] {
+            let par = SweepEngine::new(workers).run(&points, |&p| (p * 2654435761) % 97);
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn try_run_reports_first_error_in_input_order() {
+        let points: Vec<u32> = (0..64).collect();
+        let r: Result<Vec<u32>, String> = SweepEngine::new(4)
+            .try_run(&points, |&p| if p % 10 == 7 { Err(format!("bad {p}")) } else { Ok(p) });
+        assert_eq!(r.unwrap_err(), "bad 7");
+    }
+
+    #[test]
+    fn run_reduce_folds_in_order() {
+        let points: Vec<u64> = (1..=10).collect();
+        let concat = SweepEngine::new(4).run_reduce(
+            &points,
+            |&p| p.to_string(),
+            String::new(),
+            |acc, s| acc + &s,
+        );
+        assert_eq!(concat, "12345678910");
+    }
+
+    #[test]
+    fn workers_clamped_to_one() {
+        assert_eq!(SweepEngine::new(0).workers(), 1);
+    }
+}

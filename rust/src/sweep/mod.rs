@@ -1,0 +1,42 @@
+//! Parallel, deterministic experiment-sweep engine.
+//!
+//! MIGPerf's value proposition is sweeping large grids of
+//! (model × batch × MIG profile × sharing mode × arrival rate × seed)
+//! configurations. Every grid point is an independent deterministic
+//! simulation, so the sweep is embarrassingly parallel — this module fans
+//! grid points across a scoped-thread worker pool while keeping the
+//! results *bit-identical at any worker count*:
+//!
+//! * each point carries its own PRNG seed, so no randomness is shared
+//!   across workers;
+//! * results are reassembled in input order before any reduction, so
+//!   downstream folds (e.g. [`crate::util::stats::Moments::merge`] /
+//!   [`crate::util::stats::LatencyHistogram::merge`]) always see the same
+//!   sequence regardless of which thread finished first.
+//!
+//! The CLI (`migperf sweep`, `migperf bench --workers`), the profiler
+//! session, the coordinator leader and the figure benches all route their
+//! grids through [`SweepEngine`]. Worker count defaults to the machine's
+//! available parallelism and can be pinned with `MIGPERF_SWEEP_WORKERS`.
+
+pub mod engine;
+pub mod grid;
+
+pub use engine::SweepEngine;
+pub use grid::{grid2, seeds};
+
+use crate::simgpu::perfmodel::PerfError;
+use crate::workload::serving::{ServingOutcome, ServingSim};
+
+/// Run a batch of serving simulations across the engine's worker pool.
+///
+/// Returns outcomes in the same order as `sims`. If any point fails, the
+/// error of the *first failing point in input order* is returned (all
+/// points still run to completion first), so the outcome is deterministic
+/// at any worker count.
+pub fn run_serving(
+    engine: &SweepEngine,
+    sims: &[ServingSim],
+) -> Result<Vec<ServingOutcome>, PerfError> {
+    engine.try_run(sims, |sim| sim.run())
+}

@@ -32,13 +32,11 @@ pub struct Args {
 }
 
 /// Errors from argument parsing or typed access.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
     /// An option that expects a value appeared last without one.
-    #[error("option --{0} expects a value")]
     MissingValue(String),
     /// Typed accessor failed to parse the value.
-    #[error("invalid value for --{name}: '{value}' ({expected})")]
     BadValue {
         /// Option name.
         name: String,
@@ -48,9 +46,22 @@ pub enum ArgError {
         expected: &'static str,
     },
     /// A required option was absent.
-    #[error("missing required option --{0}")]
     Missing(String),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::MissingValue(name) => write!(f, "option --{name} expects a value"),
+            ArgError::BadValue { name, value, expected } => {
+                write!(f, "invalid value for --{name}: '{value}' ({expected})")
+            }
+            ArgError::Missing(name) => write!(f, "missing required option --{name}"),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     /// Parse a raw token stream (usually `std::env::args().skip(1)`).

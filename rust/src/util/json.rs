@@ -208,14 +208,21 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 /// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("JSON parse error at byte {offset}: {message}")]
+#[derive(Debug)]
 pub struct ParseError {
     /// Byte offset in the input where the error occurred.
     pub offset: usize,
     /// Human-readable cause.
     pub message: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a JSON document. Trailing whitespace is allowed; trailing garbage
 /// is an error.

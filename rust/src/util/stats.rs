@@ -288,9 +288,28 @@ impl LatencyHistogram {
         self.max
     }
 
+    /// True when `other` shares this histogram's bucket configuration, so
+    /// the two can be merged bucket-for-bucket. Array length alone is not
+    /// enough: two differently-ranged histograms can coincidentally have
+    /// equally many buckets yet map the same value to different indices.
+    pub fn compatible(&self, other: &LatencyHistogram) -> bool {
+        self.sub_bits == other.sub_bits
+            && self.floor == other.floor
+            && self.counts.len() == other.counts.len()
+    }
+
     /// Merge another histogram with identical configuration.
     pub fn merge(&mut self, other: &LatencyHistogram) {
-        assert_eq!(self.counts.len(), other.counts.len(), "histogram configs differ");
+        assert!(
+            self.compatible(other),
+            "histogram configs differ: {} sub-bits / floor {} / {} buckets vs {} sub-bits / floor {} / {} buckets",
+            self.sub_bits,
+            self.floor,
+            self.counts.len(),
+            other.sub_bits,
+            other.floor,
+            other.counts.len()
+        );
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
@@ -407,6 +426,26 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.max(), 100.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "histogram configs differ")]
+    fn histogram_merge_rejects_mismatched_configs() {
+        // Same precision and octave count → identical bucket-array length,
+        // but different floors: a silent merge would map values to the
+        // wrong buckets. Must panic, not corrupt.
+        let mut a = LatencyHistogram::new(1.0, 10.0, 0.5);
+        let b = LatencyHistogram::new(2.0, 20.0, 0.5);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn histogram_compatible_detects_config() {
+        let a = LatencyHistogram::for_latency_ms();
+        let b = LatencyHistogram::for_latency_ms();
+        assert!(a.compatible(&b));
+        let c = LatencyHistogram::new(1.0, 10.0, 0.1);
+        assert!(!a.compatible(&c));
     }
 
     #[test]

@@ -77,7 +77,8 @@ pub enum LoadMode {
     },
 }
 
-/// One serving simulation.
+/// One serving simulation (plain data: clone freely to build sweep grids).
+#[derive(Debug, Clone)]
 pub struct ServingSim {
     /// Sharing configuration.
     pub mode: SharingMode,
@@ -149,13 +150,23 @@ impl ServingSim {
             .map(|i| MetricsCollector::new(format!("{}#{}", self.spec.label(), i)))
             .collect();
 
-        let per_server_target = |s: usize| match &self.load {
-            LoadMode::Closed { requests_per_server } => *requests_per_server,
-            LoadMode::OpenPoisson { requests_per_server, .. } => *requests_per_server,
-            LoadMode::Replay { traces } => {
-                traces[s.min(traces.len() - 1)].len() as u64
-            }
-        };
+        // §Perf: per-server request targets resolved once up front — the
+        // hot loop used to re-match the LoadMode enum on every event.
+        let targets: Vec<u64> = (0..n)
+            .map(|s| match &self.load {
+                LoadMode::Closed { requests_per_server } => *requests_per_server,
+                LoadMode::OpenPoisson { requests_per_server, .. } => *requests_per_server,
+                LoadMode::Replay { traces } => traces[s.min(traces.len() - 1)].len() as u64,
+            })
+            .collect();
+        // §Perf: count of currently-busy servers, maintained O(1) at
+        // service start/end — `start_service` used to scan all servers per
+        // request to price MPS interference.
+        let mut busy_count: u32 = 0;
+        // §Perf: Replay streams arrivals lazily through these per-server
+        // cursors, keeping the event heap at O(servers) entries instead of
+        // preloading all O(total requests) trace timestamps.
+        let mut replay_next: Vec<usize> = vec![0; n];
 
         // Seed initial arrivals.
         for s in 0..n {
@@ -167,9 +178,10 @@ impl ServingSim {
                 }
                 LoadMode::Replay { traces } => {
                     assert!(!traces.is_empty(), "Replay mode needs at least one trace");
-                    // Replay is fully pre-determined: schedule everything.
-                    for &t in traces[s.min(traces.len() - 1)].timestamps() {
-                        des.schedule_at(t, Ev::Arrival { server: s });
+                    let trace = &traces[s.min(traces.len() - 1)];
+                    if let Some(&t0) = trace.timestamps().first() {
+                        des.schedule_at(t0, Ev::Arrival { server: s });
+                        replay_next[s] = 1;
                     }
                 }
             }
@@ -180,7 +192,7 @@ impl ServingSim {
         while let Some((t, ev)) = des.next() {
             match ev {
                 Ev::Arrival { server } => {
-                    let target = per_server_target(server);
+                    let target = targets[server];
                     let st = &mut servers[server];
                     if st.issued >= target {
                         continue;
@@ -190,11 +202,17 @@ impl ServingSim {
                     // Schedule the next arrival.
                     match &self.load {
                         LoadMode::Closed { .. } => {} // next issued on completion
-                        LoadMode::Replay { .. } => {} // all pre-scheduled
                         LoadMode::OpenPoisson { rate, .. } => {
                             if st.issued < target {
                                 let gap = arrival_rngs[server].exponential(*rate);
                                 des.schedule_in(gap, Ev::Arrival { server });
+                            }
+                        }
+                        LoadMode::Replay { traces } => {
+                            let trace = &traces[server.min(traces.len() - 1)];
+                            if let Some(&tn) = trace.timestamps().get(replay_next[server]) {
+                                replay_next[server] += 1;
+                                des.schedule_at(tn, Ev::Arrival { server });
                             }
                         }
                     }
@@ -206,13 +224,16 @@ impl ServingSim {
                             t,
                             &isolated,
                             &cost,
+                            busy_count,
                             &mut interference_rng,
                         );
+                        busy_count += 1;
                     }
                 }
                 Ev::Done { server } => {
                     let started_at = servers[server].queue.pop_front().expect("done without request");
                     servers[server].busy = false;
+                    busy_count -= 1;
                     let latency_ms = (t - started_at) * 1e3;
                     collectors[server].record_completion(t, latency_ms, self.spec.batch as u64);
                     let service_s = t - servers[server].in_service_since;
@@ -223,7 +244,7 @@ impl ServingSim {
                     collectors[server].record_fb(isolated[server].fb_bytes);
                     // Closed loop: immediately issue the next request.
                     if matches!(self.load, LoadMode::Closed { .. })
-                        && servers[server].issued < per_server_target(server)
+                        && servers[server].issued < targets[server]
                     {
                         des.schedule_in(0.0, Ev::Arrival { server });
                     }
@@ -236,18 +257,19 @@ impl ServingSim {
                             t,
                             &isolated,
                             &cost,
+                            busy_count,
                             &mut interference_rng,
                         );
+                        busy_count += 1;
                     }
                 }
             }
         }
 
         let per_server: Vec<RunSummary> = collectors.iter().map(|c| c.summarize()).collect();
-        // Pool all latencies: re-aggregate from per-server summaries via a
-        // pooled collector run (cheap second pass over summaries is not
-        // possible; instead merge with weighted stats).
-        let pooled = pool_summaries(&self.spec.label(), &per_server);
+        // Exact pooling: merge the per-server latency histograms/moments
+        // so pooled p50/p99 are true pooled percentiles.
+        let pooled = pool_collectors(&self.spec.label(), &collectors, &per_server);
         Ok(ServingOutcome { pooled, per_server })
     }
 
@@ -258,6 +280,10 @@ impl ServingSim {
         }
     }
 
+    /// Start serving `server`'s head-of-queue request. `busy_others` is
+    /// the caller-maintained count of *other* currently-busy servers
+    /// (`server` itself must not be busy yet) — an O(1) counter replacing
+    /// the per-request O(n) scan over all servers.
     #[allow(clippy::too_many_arguments)]
     fn start_service(
         &self,
@@ -267,9 +293,10 @@ impl ServingSim {
         now: f64,
         isolated: &[crate::simgpu::perfmodel::StepEstimate],
         cost: &StepCost,
+        busy_others: u32,
         rng: &mut Prng,
     ) {
-        let busy_others = servers.iter().enumerate().filter(|(i, s)| *i != server && s.busy).count() as u32;
+        debug_assert!(!servers[server].busy);
         let service_s = match &self.mode {
             SharingMode::Mig(_) => isolated[server].seconds,
             SharingMode::Mps { gpu, model, .. } => {
@@ -282,9 +309,36 @@ impl ServingSim {
     }
 }
 
+/// Exact pooled summary from the per-server collectors: the latency
+/// histograms and Welford moments are merged, so pooled p50/p99/std are
+/// true pooled statistics (within histogram precision) rather than the
+/// max-of-p99 approximation [`pool_summaries`] falls back to when only
+/// summaries survive. Aggregate throughput stays the sum of per-server
+/// rates and energy the sum of per-server energy, matching what the
+/// paper's figures report.
+pub fn pool_collectors(
+    label: &str,
+    collectors: &[MetricsCollector],
+    per_server: &[RunSummary],
+) -> RunSummary {
+    let mut merged = MetricsCollector::new(label);
+    for c in collectors {
+        merged.merge(c);
+    }
+    let mut pooled = merged.summarize();
+    // Each server is its own serving instance with its own measurement
+    // window: the figures' aggregate throughput is the sum of per-server
+    // rates, and the experiment duration is the longest server window.
+    pooled.throughput = per_server.iter().map(|s| s.throughput).sum();
+    pooled.duration_s = per_server.iter().map(|s| s.duration_s).fold(0.0, f64::max);
+    pooled
+}
+
 /// Merge per-server summaries into one pooled summary (weighted means;
 /// p99 approximated by the max of per-server p99s, which is exact when
 /// servers are statistically identical and conservative otherwise).
+/// Prefer [`pool_collectors`] when the collectors are still available —
+/// it produces exact pooled percentiles.
 pub fn pool_summaries(label: &str, parts: &[RunSummary]) -> RunSummary {
     let total: u64 = parts.iter().map(|p| p.completed).sum();
     let w = |f: fn(&RunSummary) -> f64| -> f64 {
@@ -413,6 +467,36 @@ mod tests {
             hi.pooled.p99_latency_ms,
             lo.pooled.p99_latency_ms
         );
+    }
+
+    #[test]
+    fn pooled_percentiles_are_exact_across_heterogeneous_servers() {
+        // Two fast 2g.12gb servers + two slow 1g.6gb servers, closed loop:
+        // each MIG server's latency is a constant, so the pooled
+        // distribution is bimodal with equal mass. The exact pooled p99
+        // must sit at the slow servers' level, and the pooled max must be
+        // the true max — properties the old weighted-mean/max-of-p99
+        // pooling only approximated.
+        let p_small = gi_lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
+        let p_big = gi_lookup(GpuModel::A30_24GB, "2g.12gb").unwrap();
+        let mode = SharingMode::Mig(vec![
+            ExecResource::from_gi(GpuModel::A30_24GB, p_big),
+            ExecResource::from_gi(GpuModel::A30_24GB, p_big),
+            ExecResource::from_gi(GpuModel::A30_24GB, p_small),
+            ExecResource::from_gi(GpuModel::A30_24GB, p_small),
+        ]);
+        let out = sim(mode, LoadMode::Closed { requests_per_server: 200 }, 8);
+        let slow_p99 = out.per_server[2].p99_latency_ms;
+        let rel = (out.pooled.p99_latency_ms / slow_p99 - 1.0).abs();
+        assert!(rel < 0.03, "pooled p99 {} vs slow-server p99 {slow_p99}", out.pooled.p99_latency_ms);
+        let true_max =
+            out.per_server.iter().map(|s| s.max_latency_ms).fold(0.0, f64::max);
+        assert_eq!(out.pooled.max_latency_ms, true_max);
+        // p50 must land between the fast and slow modes, not at their
+        // count-weighted mean only by accident: with equal mass the median
+        // interpolation stays within the [fast, slow] envelope.
+        assert!(out.pooled.p50_latency_ms <= slow_p99 * 1.01);
+        assert!(out.pooled.p50_latency_ms >= out.per_server[0].p50_latency_ms * 0.99);
     }
 
     #[test]

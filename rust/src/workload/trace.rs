@@ -21,17 +21,43 @@ pub struct Trace {
 }
 
 /// Trace errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TraceError {
     /// IO failure.
-    #[error("trace IO: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// Malformed line.
-    #[error("trace line {0}: '{1}' is not a timestamp")]
     BadLine(usize, String),
     /// Timestamps must strictly increase.
-    #[error("trace not strictly increasing at line {0}")]
     NotMonotone(usize),
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Io(e) => write!(f, "trace IO: {e}"),
+            TraceError::BadLine(line, raw) => {
+                write!(f, "trace line {line}: '{raw}' is not a timestamp")
+            }
+            TraceError::NotMonotone(line) => {
+                write!(f, "trace not strictly increasing at line {line}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TraceError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TraceError {
+    fn from(e: std::io::Error) -> Self {
+        TraceError::Io(e)
+    }
 }
 
 impl Trace {

@@ -1,0 +1,226 @@
+//! Parallel-reduction correctness properties.
+//!
+//! The sweep engine's determinism contract is load-bearing: the figure
+//! benches and the CLI promise "same seed ⇒ same figures at any worker
+//! count". These tests pin the three layers of that contract: (1) the
+//! mergeable accumulators (`Moments`, `LatencyHistogram`) reduce
+//! chunk-wise to exactly what sequential recording produces, (2) sweeps
+//! return bit-identical results at 1 and N workers, and (3) the exact
+//! pooled percentiles agree with a sorted-sample oracle within histogram
+//! precision.
+
+use migperf::metrics::collector::MetricsCollector;
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::profile::lookup as gi_lookup;
+use migperf::models::zoo;
+use migperf::sharing::mps::MpsModel;
+use migperf::simgpu::resource::ExecResource;
+use migperf::sweep::{grid2, seeds, SweepEngine};
+use migperf::util::prng::Prng;
+use migperf::util::stats::{percentile_sorted, LatencyHistogram, Moments};
+use migperf::workload::serving::{pool_collectors, LoadMode, ServingSim, SharingMode};
+use migperf::workload::spec::WorkloadSpec;
+
+/// Split `xs` into `k` random contiguous chunks (at least 1 element each
+/// when possible) using the given PRNG.
+fn random_chunks(xs: &[f64], k: usize, rng: &mut Prng) -> Vec<Vec<f64>> {
+    let mut cuts: Vec<usize> = (0..k.saturating_sub(1))
+        .map(|_| rng.below(xs.len() as u64 + 1) as usize)
+        .collect();
+    cuts.sort_unstable();
+    let mut chunks = Vec::new();
+    let mut prev = 0;
+    for &c in &cuts {
+        chunks.push(xs[prev..c].to_vec());
+        prev = c;
+    }
+    chunks.push(xs[prev..].to_vec());
+    chunks
+}
+
+#[test]
+fn moments_chunked_merge_equals_sequential() {
+    let mut rng = Prng::new(0xC0FFEE);
+    for case in 0..50u64 {
+        let n = 1 + rng.below(2000) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.lognormal(1.0, 1.5)).collect();
+        let mut whole = Moments::new();
+        xs.iter().for_each(|&x| whole.record(x));
+        for k in [1usize, 2, 3, 7] {
+            let mut merged = Moments::new();
+            for chunk in random_chunks(&xs, k, &mut rng) {
+                let mut part = Moments::new();
+                chunk.iter().for_each(|&x| part.record(x));
+                merged.merge(&part);
+            }
+            assert_eq!(merged.count(), whole.count(), "case {case} k={k}");
+            assert!((merged.mean() - whole.mean()).abs() < 1e-9 * whole.mean().abs().max(1.0));
+            assert!(
+                (merged.variance() - whole.variance()).abs()
+                    < 1e-8 * whole.variance().abs().max(1.0),
+                "case {case} k={k}: {} vs {}",
+                merged.variance(),
+                whole.variance()
+            );
+            assert_eq!(merged.min(), whole.min());
+            assert_eq!(merged.max(), whole.max());
+        }
+    }
+}
+
+#[test]
+fn histogram_chunked_merge_is_bit_identical() {
+    let mut rng = Prng::new(0xBADA55);
+    for _case in 0..20u64 {
+        let n = 1 + rng.below(5000) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.lognormal(0.5, 1.0)).collect();
+        let mut whole = LatencyHistogram::for_latency_ms();
+        xs.iter().for_each(|&x| whole.record(x));
+        for k in [2usize, 5] {
+            let mut merged = LatencyHistogram::for_latency_ms();
+            for chunk in random_chunks(&xs, k, &mut rng) {
+                let mut part = LatencyHistogram::for_latency_ms();
+                chunk.iter().for_each(|&x| part.record(x));
+                merged.merge(&part);
+            }
+            assert_eq!(merged.count(), whole.count());
+            assert_eq!(merged.max(), whole.max());
+            // Bucket counts are integers, so percentiles must match
+            // *bitwise*, not approximately.
+            for q in [0.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+                assert_eq!(merged.percentile(q), whole.percentile(q), "q={q}");
+            }
+        }
+    }
+}
+
+fn mig_grid() -> Vec<ServingSim> {
+    let p = gi_lookup(GpuModel::A30_24GB, "1g.6gb").unwrap();
+    let resources = vec![ExecResource::from_gi(GpuModel::A30_24GB, p); 4];
+    let spec = WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 1, 224);
+    let rates = [20.0f64, 400.0];
+    let mut sims: Vec<ServingSim> = grid2(&rates, &seeds(7, 2))
+        .into_iter()
+        .map(|(rate, seed)| ServingSim {
+            mode: SharingMode::Mig(resources.clone()),
+            load: LoadMode::OpenPoisson { rate, requests_per_server: 300 },
+            spec: spec.clone(),
+            seed,
+        })
+        .collect();
+    // One stochastic MPS point so interference randomness is covered too.
+    sims.push(ServingSim {
+        mode: SharingMode::Mps {
+            gpu: ExecResource::whole_gpu(GpuModel::A30_24GB),
+            n_clients: 4,
+            model: MpsModel::default(),
+        },
+        load: LoadMode::Closed { requests_per_server: 300 },
+        spec,
+        seed: 7,
+    });
+    sims
+}
+
+#[test]
+fn sweep_results_bit_identical_at_any_worker_count() {
+    let sims = mig_grid();
+    let baseline = migperf::sweep::run_serving(&SweepEngine::serial(), &sims).unwrap();
+    for workers in [2usize, 4, 16] {
+        let outs =
+            migperf::sweep::run_serving(&SweepEngine::new(workers), &sims).unwrap();
+        assert_eq!(outs.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&outs) {
+            assert_eq!(a.pooled.completed, b.pooled.completed, "workers={workers}");
+            // Bitwise equality on every floating summary field.
+            assert_eq!(a.pooled.avg_latency_ms.to_bits(), b.pooled.avg_latency_ms.to_bits());
+            assert_eq!(a.pooled.std_latency_ms.to_bits(), b.pooled.std_latency_ms.to_bits());
+            assert_eq!(a.pooled.p50_latency_ms.to_bits(), b.pooled.p50_latency_ms.to_bits());
+            assert_eq!(a.pooled.p99_latency_ms.to_bits(), b.pooled.p99_latency_ms.to_bits());
+            assert_eq!(a.pooled.max_latency_ms.to_bits(), b.pooled.max_latency_ms.to_bits());
+            assert_eq!(a.pooled.throughput.to_bits(), b.pooled.throughput.to_bits());
+            assert_eq!(a.pooled.energy_j.to_bits(), b.pooled.energy_j.to_bits());
+            for (x, y) in a.per_server.iter().zip(&b.per_server) {
+                assert_eq!(x.p99_latency_ms.to_bits(), y.p99_latency_ms.to_bits());
+                assert_eq!(x.completed, y.completed);
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_pooled_percentiles_match_sorted_oracle() {
+    // Four "servers" with deliberately different latency distributions so
+    // pooling is non-trivial, checked against an exact sorted-sample
+    // percentile within the histogram's configured precision.
+    let mut rng = Prng::new(424242);
+    let mut collectors = Vec::new();
+    let mut all: Vec<f64> = Vec::new();
+    for s in 0..4usize {
+        let mut c = MetricsCollector::new(format!("srv{s}"));
+        let mu = 0.5 + s as f64 * 0.7;
+        for i in 0..20_000u64 {
+            let lat = rng.lognormal(mu, 0.6);
+            c.record_completion((i + 1) as f64 * 1e-3, lat, 1);
+            all.push(lat);
+        }
+        collectors.push(c);
+    }
+    let per_server: Vec<_> = collectors.iter().map(|c| c.summarize()).collect();
+    let pooled = pool_collectors("pooled", &collectors, &per_server);
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (q, got) in [(50.0, pooled.p50_latency_ms), (99.0, pooled.p99_latency_ms)] {
+        let exact = percentile_sorted(&all, q);
+        let rel = (got - exact).abs() / exact;
+        assert!(rel < 0.03, "q={q}: pooled {got} vs oracle {exact} (rel {rel})");
+    }
+    // Max and count are exact by construction.
+    assert_eq!(pooled.completed, all.len() as u64);
+    let true_max = all.last().copied().unwrap();
+    assert_eq!(pooled.max_latency_ms, true_max);
+}
+
+#[test]
+fn pooled_beats_old_max_of_p99_approximation() {
+    // Regression guard on *why* exact pooling matters: with heterogeneous
+    // servers the max-of-p99 approximation overstates the pooled tail.
+    let mut rng = Prng::new(99);
+    let mut collectors = Vec::new();
+    let mut all: Vec<f64> = Vec::new();
+    // One slow server among seven fast ones: the pooled p99 sits well
+    // below the slow server's p99.
+    for s in 0..8usize {
+        let mut c = MetricsCollector::new(format!("srv{s}"));
+        let mu = if s == 0 { 3.0 } else { 0.5 };
+        for i in 0..5_000u64 {
+            let lat = rng.lognormal(mu, 0.3);
+            c.record_completion((i + 1) as f64 * 1e-3, lat, 1);
+            all.push(lat);
+        }
+        collectors.push(c);
+    }
+    let per_server: Vec<_> = collectors.iter().map(|c| c.summarize()).collect();
+    let pooled = pool_collectors("pooled", &collectors, &per_server);
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let exact = percentile_sorted(&all, 99.0);
+    let max_of_p99 = per_server.iter().map(|s| s.p99_latency_ms).fold(0.0, f64::max);
+    assert!((pooled.p99_latency_ms - exact).abs() / exact < 0.03);
+    assert!(
+        max_of_p99 > exact * 1.1,
+        "scenario must actually distinguish the approximation: max {max_of_p99} vs exact {exact}"
+    );
+}
+
+#[test]
+fn engine_map_is_order_preserving_under_contention() {
+    // Many more points than workers with wildly uneven work per point.
+    let points: Vec<u64> = (0..500).collect();
+    let expect: Vec<u64> = points.iter().map(|&p| p % 13).collect();
+    let out = SweepEngine::new(8).run(&points, |&p| {
+        if p % 50 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        p % 13
+    });
+    assert_eq!(out, expect);
+}
