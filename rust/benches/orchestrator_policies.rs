@@ -1,0 +1,230 @@
+//! Orchestrator policy-comparison benchmark.
+//!
+//! Runs the §Orchestrator scenario — BERT-base training co-located with
+//! two SLO-bound BERT-base inference services on one A100 — under diurnal
+//! load, comparing the three repartitioning policies across a
+//! (policy × peak-rate × seed) grid fanned out through the parallel sweep
+//! engine. Asserts the engine's determinism contract (bit-identical
+//! results serial vs parallel) and the headline claim: at the overloading
+//! peak rate the reactive policy must beat the static whole-trace-average
+//! baseline on goodput or SLO-violation fraction.
+//!
+//! Machine-readable output: writes `BENCH_orchestrator.json` (into
+//! `MIGPERF_BENCH_OUT` when set, else the working directory). Set
+//! `MIGPERF_PERF_SMOKE=1` to shrink the simulated horizon for CI.
+
+use std::time::Instant;
+
+use migperf::mig::gpu::GpuModel;
+use migperf::models::zoo;
+use migperf::orchestrator::{
+    OrchestratorConfig, OrchestratorOutcome, PolicyKind, ReconfigCost, ServiceConfig,
+};
+use migperf::sweep::{self, SweepEngine};
+use migperf::util::json::Json;
+use migperf::util::stats;
+use migperf::workload::arrival::ArrivalSpec;
+use migperf::workload::spec::WorkloadSpec;
+
+fn scenario(
+    policy: PolicyKind,
+    peak_rate: f64,
+    seed: u64,
+    duration_s: f64,
+    period_s: f64,
+    window_s: f64,
+) -> OrchestratorConfig {
+    let bert = zoo::lookup("bert-base").unwrap();
+    let service = ServiceConfig {
+        spec: WorkloadSpec::inference(bert, 8, 128),
+        slo_ms: 40.0,
+        arrival: ArrivalSpec::Diurnal { base_rate: 6.0, peak_rate, period_s },
+    };
+    OrchestratorConfig {
+        gpu: GpuModel::A100_80GB,
+        train: Some(WorkloadSpec::training(bert, 32, 128)),
+        services: vec![service.clone(), service],
+        policy,
+        cost: ReconfigCost::default(),
+        duration_s,
+        window_s,
+        rho_max: 0.75,
+        seed,
+    }
+}
+
+/// Checksum that any cross-worker nondeterminism would perturb.
+fn checksum(outs: &[OrchestratorOutcome]) -> f64 {
+    outs.iter()
+        .map(|o| o.goodput_rps + o.pooled.p99_latency_ms + o.reconfig_downtime_s)
+        .sum()
+}
+
+fn main() {
+    let smoke = std::env::var_os("MIGPERF_PERF_SMOKE").is_some();
+    let (duration_s, period_s, window_s) =
+        if smoke { (360.0, 180.0, 10.0) } else { (1200.0, 600.0, 20.0) };
+    println!(
+        "== orchestrator_policies: policy comparison under diurnal load{} ==\n",
+        if smoke { " (smoke mode)" } else { "" }
+    );
+
+    let policies = [
+        PolicyKind::Static,
+        PolicyKind::parse("reactive").unwrap(),
+        PolicyKind::parse("predictive").unwrap(),
+    ];
+    // Peak rates per service: 30 req/s keeps the static layout feasible
+    // end-to-end; 60 req/s saturates its small serving slice at the crest.
+    let peaks = [30.0, 60.0];
+    let seeds = [2024u64, 2025u64];
+
+    let mut grid: Vec<OrchestratorConfig> = Vec::new();
+    for policy in &policies {
+        for &peak in &peaks {
+            for &seed in &seeds {
+                grid.push(scenario(policy.clone(), peak, seed, duration_s, period_s, window_s));
+            }
+        }
+    }
+
+    let serial = SweepEngine::serial();
+    let parallel = SweepEngine::from_env();
+    let started = Instant::now();
+    let outs_serial = sweep::run_orchestrator(&serial, &grid).expect("orchestrator grid");
+    let serial_s = started.elapsed().as_secs_f64();
+    let started = Instant::now();
+    let outs = sweep::run_orchestrator(&parallel, &grid).expect("orchestrator grid");
+    let parallel_s = started.elapsed().as_secs_f64();
+    assert_eq!(
+        checksum(&outs_serial).to_bits(),
+        checksum(&outs).to_bits(),
+        "orchestrator sweeps must be bit-identical at any worker count"
+    );
+    let speedup = serial_s / parallel_s.max(1e-12);
+
+    println!(
+        "{:<11} {:>5} {:>5} {:>12} {:>8} {:>9} {:>10} {:>7} {:>10}",
+        "policy", "peak", "seed", "goodput_rps", "viol_%", "p99_ms", "train_sps", "reconf", "downtime_s"
+    );
+    for (cfg, out) in grid.iter().zip(&outs) {
+        let peak = match &cfg.services[0].arrival {
+            ArrivalSpec::Diurnal { peak_rate, .. } => *peak_rate,
+            _ => 0.0,
+        };
+        println!(
+            "{:<11} {:>5.0} {:>5} {:>12.1} {:>8.2} {:>9.1} {:>10.1} {:>7} {:>10.1}",
+            out.policy,
+            peak,
+            cfg.seed,
+            out.goodput_rps,
+            out.slo_violation_frac * 100.0,
+            out.pooled.p99_latency_ms,
+            out.train_samples_per_s,
+            out.reconfigurations,
+            out.reconfig_downtime_s
+        );
+    }
+    println!(
+        "\n{} runs: serial {:.2}s, {} workers {:.2}s ({:.2}x speedup)",
+        grid.len(),
+        serial_s,
+        parallel.workers(),
+        parallel_s,
+        speedup
+    );
+
+    // Aggregate per (policy, peak) over seeds; the acceptance comparison
+    // is at the saturating peak.
+    let agg = |name: &str, peak: f64, f: &dyn Fn(&OrchestratorOutcome) -> f64| {
+        let vals: Vec<f64> = grid
+            .iter()
+            .zip(&outs)
+            .filter(|(cfg, out)| {
+                out.policy == name
+                    && matches!(&cfg.services[0].arrival,
+                                ArrivalSpec::Diurnal { peak_rate, .. } if *peak_rate == peak)
+            })
+            .map(|(_, out)| f(out))
+            .collect();
+        stats::mean(&vals)
+    };
+    let hot = peaks[1];
+    let static_goodput = agg("static", hot, &|o| o.goodput_rps);
+    let reactive_goodput = agg("reactive", hot, &|o| o.goodput_rps);
+    let predictive_goodput = agg("predictive", hot, &|o| o.goodput_rps);
+    let static_viol = agg("static", hot, &|o| o.slo_violation_frac);
+    let reactive_viol = agg("reactive", hot, &|o| o.slo_violation_frac);
+    let predictive_viol = agg("predictive", hot, &|o| o.slo_violation_frac);
+    println!(
+        "peak {hot} req/s: goodput static {static_goodput:.1} vs reactive {reactive_goodput:.1} \
+         vs predictive {predictive_goodput:.1} rps; \
+         violations static {:.2}% vs reactive {:.2}% vs predictive {:.2}%",
+        static_viol * 100.0,
+        reactive_viol * 100.0,
+        predictive_viol * 100.0
+    );
+    assert!(
+        reactive_goodput > static_goodput || reactive_viol < static_viol,
+        "reactive must beat the static baseline at the saturating peak \
+         (goodput {reactive_goodput} vs {static_goodput}, violations {reactive_viol} vs {static_viol})"
+    );
+
+    let rows: Vec<Json> = grid
+        .iter()
+        .zip(&outs)
+        .map(|(cfg, out)| {
+            let peak = match &cfg.services[0].arrival {
+                ArrivalSpec::Diurnal { peak_rate, .. } => *peak_rate,
+                _ => 0.0,
+            };
+            Json::obj(vec![
+                ("policy", Json::Str(out.policy.to_string())),
+                ("peak_rate", Json::Num(peak)),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("arrived", Json::Num(out.arrived as f64)),
+                ("completed", Json::Num(out.completed as f64)),
+                ("goodput_rps", Json::Num(out.goodput_rps)),
+                ("slo_violation_frac", Json::Num(out.slo_violation_frac)),
+                ("p99_latency_ms", Json::Num(out.pooled.p99_latency_ms)),
+                ("train_samples_per_s", Json::Num(out.train_samples_per_s)),
+                ("reconfigurations", Json::Num(out.reconfigurations as f64)),
+                ("reconfig_downtime_s", Json::Num(out.reconfig_downtime_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("migperf-bench-orchestrator/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("duration_s", Json::Num(duration_s)),
+        ("period_s", Json::Num(period_s)),
+        ("window_s", Json::Num(window_s)),
+        ("workers", Json::Num(parallel.workers() as f64)),
+        ("serial_s", Json::Num(serial_s)),
+        ("parallel_s", Json::Num(parallel_s)),
+        ("speedup", Json::Num(speedup)),
+        (
+            "comparison_at_peak",
+            Json::obj(vec![
+                ("peak_rate", Json::Num(hot)),
+                ("static_goodput_rps", Json::Num(static_goodput)),
+                ("reactive_goodput_rps", Json::Num(reactive_goodput)),
+                ("predictive_goodput_rps", Json::Num(predictive_goodput)),
+                ("static_violation_frac", Json::Num(static_viol)),
+                ("reactive_violation_frac", Json::Num(reactive_viol)),
+                ("predictive_violation_frac", Json::Num(predictive_viol)),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out_dir = std::env::var_os("MIGPERF_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let _ = std::fs::create_dir_all(&out_dir);
+    let out_path = out_dir.join("BENCH_orchestrator.json");
+    match std::fs::write(&out_path, doc.to_pretty()) {
+        Ok(()) => println!("\nbench record written to {}", out_path.display()),
+        Err(e) => println!("\n(could not write {}: {e})", out_path.display()),
+    }
+    println!("done.");
+}

@@ -37,6 +37,7 @@ pub mod leaderboard;
 pub mod metrics;
 pub mod mig;
 pub mod models;
+pub mod orchestrator;
 pub mod profiler;
 pub mod runtime;
 pub mod scheduler;

@@ -15,7 +15,7 @@ use migperf::util::argparse::{render_help, Args, OptSpec};
 use migperf::util::table::Table;
 use migperf::workload::spec::WorkloadKind;
 
-const BOOL_FLAGS: &[&str] = &["help", "json", "csv", "real"];
+const BOOL_FLAGS: &[&str] = &["help", "json", "csv", "real", "decisions"];
 
 fn main() -> ExitCode {
     let args = match Args::parse(std::env::args().skip(1), BOOL_FLAGS) {
@@ -33,6 +33,7 @@ fn main() -> ExitCode {
         Some("profiles") => cmd_profiles(&args),
         Some("suite") => cmd_suite(&args),
         Some("plan") => cmd_plan(&args),
+        Some("orchestrate") => cmd_orchestrate(&args),
         Some("layouts") => cmd_layouts(&args),
         Some("version") => {
             println!("migperf {}", migperf::version());
@@ -65,6 +66,7 @@ fn print_usage() {
          suite       run a JSON task suite through the coordinator\n  \
          layouts     enumerate all valid maximal MIG layouts\n  \
          plan        optimize a hybrid train+serve partition (paper §5)\n  \
+         orchestrate online repartitioning policies under diurnal load\n  \
          version     print the version\n\n\
          Run `migperf <COMMAND> --help` for command options.",
         migperf::version()
@@ -540,6 +542,232 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
             Ok(())
         }
     }
+}
+
+fn cmd_orchestrate(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help(
+                "migperf",
+                "orchestrate",
+                "Compare online MIG repartitioning policies under time-varying load",
+                &[
+                    OptSpec { name: "gpu", value: "MODEL", help: "GPU model (a100 | a30)", default: Some("a100") },
+                    OptSpec { name: "policy", value: "P1,P2", help: "static | reactive | predictive | all", default: Some("all") },
+                    OptSpec { name: "train", value: "MODEL:BATCH", help: "co-located training job (none to disable)", default: Some("bert-base:32") },
+                    OptSpec { name: "serve", value: "MODEL:BATCH:SLO_MS,...", help: "inference services", default: Some("bert-base:8:40,bert-base:8:40") },
+                    OptSpec { name: "base-rate", value: "R", help: "diurnal trough rate, req/s per service", default: Some("6") },
+                    OptSpec { name: "peak-rate", value: "R", help: "diurnal peak rate (== base for flat Poisson)", default: Some("60") },
+                    OptSpec { name: "period", value: "S", help: "diurnal period, seconds", default: Some("600") },
+                    OptSpec { name: "duration", value: "S", help: "simulated run length, seconds", default: Some("1200") },
+                    OptSpec { name: "window", value: "S", help: "observation window / policy tick, seconds", default: Some("20") },
+                    OptSpec { name: "rho", value: "F", help: "planner utilization bound in (0,1)", default: Some("0.75") },
+                    OptSpec { name: "churn", value: "S", help: "seconds per instance destroyed/created", default: Some("0.5") },
+                    OptSpec { name: "restore", value: "S", help: "training checkpoint-restore penalty, seconds", default: Some("5") },
+                    OptSpec { name: "seq", value: "S", help: "sequence length / image size for services", default: Some("128") },
+                    OptSpec { name: "seeds", value: "N", help: "replication seeds per policy", default: Some("1") },
+                    OptSpec { name: "seed", value: "S", help: "base seed", default: Some("2024") },
+                    OptSpec { name: "workers", value: "N", help: "sweep worker threads (0 = auto)", default: Some("0") },
+                    OptSpec { name: "json", value: "", help: "emit JSON (with decision logs)", default: None },
+                    OptSpec { name: "csv", value: "", help: "emit pooled summaries as CSV", default: None },
+                    OptSpec { name: "decisions", value: "", help: "also print per-run decision logs", default: None },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    use migperf::orchestrator::{OrchestratorConfig, PolicyKind, ReconfigCost, ServiceConfig};
+    use migperf::sweep::SweepEngine;
+    use migperf::util::json::Json;
+    use migperf::workload::arrival::ArrivalSpec;
+    use migperf::workload::spec::WorkloadSpec;
+
+    let gpu = parse_gpu(args)?;
+    let policy_arg = args.str_or("policy", "all");
+    let policies: Vec<PolicyKind> = if policy_arg == "all" {
+        vec![
+            PolicyKind::parse("static").unwrap(),
+            PolicyKind::parse("reactive").unwrap(),
+            PolicyKind::parse("predictive").unwrap(),
+        ]
+    } else {
+        policy_arg
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|name| {
+                PolicyKind::parse(name)
+                    .ok_or_else(|| format!("unknown policy '{name}' (static|reactive|predictive)"))
+            })
+            .collect::<Result<_, _>>()?
+    };
+    if policies.is_empty() {
+        return Err("no policy selected".into());
+    }
+    let parse_model =
+        |name: &str| zoo::lookup(name).ok_or_else(|| format!("unknown model '{name}'"));
+    let train = {
+        let t = args.str_or("train", "bert-base:32");
+        if t.is_empty() || t == "none" {
+            None
+        } else {
+            let (m, b) = t.split_once(':').ok_or("train format: MODEL:BATCH")?;
+            let batch: u32 = b.parse().map_err(|_| "bad train batch")?;
+            Some(WorkloadSpec::training(parse_model(m)?, batch, 128))
+        }
+    };
+    let base_rate: f64 = args.parse_or("base-rate", 6.0f64).map_err(|e| e.to_string())?;
+    let peak_rate: f64 = args.parse_or("peak-rate", 60.0f64).map_err(|e| e.to_string())?;
+    let period_s: f64 = args.parse_or("period", 600.0f64).map_err(|e| e.to_string())?;
+    let arrival = if peak_rate > base_rate {
+        ArrivalSpec::Diurnal { base_rate, peak_rate, period_s }
+    } else if peak_rate == base_rate {
+        ArrivalSpec::Poisson { rate: base_rate }
+    } else {
+        return Err(format!(
+            "--peak-rate {peak_rate} must be at least --base-rate {base_rate}"
+        ));
+    };
+    let seq: u32 = args.parse_or("seq", 128u32).map_err(|e| e.to_string())?;
+    let mut services = Vec::new();
+    for svc in args
+        .str_or("serve", "bert-base:8:40,bert-base:8:40")
+        .split(',')
+        .filter(|s| !s.is_empty())
+    {
+        let parts: Vec<&str> = svc.split(':').collect();
+        if parts.len() != 3 {
+            return Err("serve format: MODEL:BATCH:SLO_MS".into());
+        }
+        let batch: u32 = parts[1].parse().map_err(|_| "bad serve batch")?;
+        let slo_ms: f64 = parts[2].parse().map_err(|_| "bad SLO")?;
+        services.push(ServiceConfig {
+            spec: WorkloadSpec::inference(parse_model(parts[0])?, batch, seq),
+            slo_ms,
+            arrival: arrival.clone(),
+        });
+    }
+    let cost = ReconfigCost {
+        instance_churn_s: args.parse_or("churn", 0.5f64).map_err(|e| e.to_string())?,
+        train_restore_s: args.parse_or("restore", 5.0f64).map_err(|e| e.to_string())?,
+    };
+    let duration_s: f64 = args.parse_or("duration", 1200.0f64).map_err(|e| e.to_string())?;
+    let window_s: f64 = args.parse_or("window", 20.0f64).map_err(|e| e.to_string())?;
+    let rho_max: f64 = args.parse_or("rho", 0.75f64).map_err(|e| e.to_string())?;
+    let nseeds: usize = args.parse_or("seeds", 1usize).map_err(|e| e.to_string())?;
+    let base_seed: u64 = args.parse_or("seed", 2024u64).map_err(|e| e.to_string())?;
+    let workers: usize = args.parse_or("workers", 0usize).map_err(|e| e.to_string())?;
+
+    // Policy × seed grid in row-major order (the determinism anchor).
+    let seed_list = migperf::sweep::seeds(base_seed, nseeds.max(1));
+    let mut runs: Vec<OrchestratorConfig> = Vec::new();
+    for policy in &policies {
+        for &seed in &seed_list {
+            runs.push(OrchestratorConfig {
+                gpu,
+                train: train.clone(),
+                services: services.clone(),
+                policy: policy.clone(),
+                cost: cost.clone(),
+                duration_s,
+                window_s,
+                rho_max,
+                seed,
+            });
+        }
+    }
+    let engine =
+        if workers > 0 { SweepEngine::new(workers) } else { SweepEngine::from_env() };
+    let started = std::time::Instant::now();
+    let outs = migperf::sweep::run_orchestrator(&engine, &runs).map_err(|e| e.to_string())?;
+    let wall_s = started.elapsed().as_secs_f64();
+
+    if args.flag("json") {
+        let rows: Vec<Json> = runs
+            .iter()
+            .zip(&outs)
+            .map(|(cfg, out)| {
+                Json::obj(vec![
+                    ("policy", Json::Str(out.policy.to_string())),
+                    ("seed", Json::Num(cfg.seed as f64)),
+                    ("arrived", Json::Num(out.arrived as f64)),
+                    ("completed", Json::Num(out.completed as f64)),
+                    ("goodput_rps", Json::Num(out.goodput_rps)),
+                    ("slo_violation_frac", Json::Num(out.slo_violation_frac)),
+                    ("p99_latency_ms", Json::Num(out.pooled.p99_latency_ms)),
+                    ("train_samples_per_s", Json::Num(out.train_samples_per_s)),
+                    ("reconfigurations", Json::Num(out.reconfigurations as f64)),
+                    ("reconfig_downtime_s", Json::Num(out.reconfig_downtime_s)),
+                    ("decisions", export::decisions_to_json(&out.decisions)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("migperf-orchestrate/v1".into())),
+            ("gpu", Json::Str(format!("{gpu}"))),
+            ("duration_s", Json::Num(duration_s)),
+            ("window_s", Json::Num(window_s)),
+            ("workers", Json::Num(engine.workers() as f64)),
+            ("wall_s", Json::Num(wall_s)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        println!("{}", doc.to_pretty());
+    } else if args.flag("csv") {
+        let rows: Vec<_> = runs
+            .iter()
+            .zip(&outs)
+            .map(|(cfg, out)| {
+                let mut s = out.pooled.clone();
+                s.label = format!("{}/seed{}", out.policy, cfg.seed);
+                s
+            })
+            .collect();
+        print!("{}", export::summaries_to_csv(&rows));
+    } else {
+        let mut t = Table::new(&[
+            "policy",
+            "seed",
+            "arrived",
+            "completed",
+            "goodput_rps",
+            "viol_%",
+            "p99_ms",
+            "train_sps",
+            "reconf",
+            "downtime_s",
+        ]);
+        for (cfg, out) in runs.iter().zip(&outs) {
+            t.row(&[
+                out.policy.to_string(),
+                cfg.seed.to_string(),
+                out.arrived.to_string(),
+                out.completed.to_string(),
+                format!("{:.1}", out.goodput_rps),
+                format!("{:.2}", out.slo_violation_frac * 100.0),
+                format!("{:.1}", out.pooled.p99_latency_ms),
+                format!("{:.1}", out.train_samples_per_s),
+                out.reconfigurations.to_string(),
+                format!("{:.1}", out.reconfig_downtime_s),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "{} runs on {} workers in {:.2}s",
+            runs.len(),
+            engine.workers(),
+            wall_s
+        );
+        if args.flag("decisions") {
+            for (cfg, out) in runs.iter().zip(&outs) {
+                if out.decisions.is_empty() {
+                    continue;
+                }
+                println!("\ndecision log — {} (seed {}):", out.policy, cfg.seed);
+                print!("{}", export::decisions_to_csv(&out.decisions));
+            }
+        }
+    }
+    Ok(())
 }
 
 fn cmd_suite(args: &Args) -> Result<(), String> {

@@ -3,10 +3,13 @@
 //! The paper's exporter "can format the saved performance results so they
 //! can be demonstrated with different performance analysis tools" (§3.2) —
 //! specifically Prometheus and notebook tooling. Each exporter here
-//! serializes either run summaries or raw time series.
+//! serializes run summaries, raw time series, optimizer plans, or
+//! orchestrator decision logs.
 
 use std::fmt::Write as _;
 
+use crate::orchestrator::Decision;
+use crate::scheduler::{Assignment, Plan};
 use crate::util::json::Json;
 use crate::util::timeseries::{Series, SeriesSet};
 
@@ -74,6 +77,84 @@ pub fn summary_to_json(r: &RunSummary) -> Json {
         ("energy_j", r.energy_j.into()),
         ("duration_s", r.duration_s.into()),
     ])
+}
+
+/// CSV header used by [`assignments_to_csv`].
+pub const ASSIGNMENT_CSV_HEADER: &str =
+    "workload,profile,latency_ms,throughput,goodput,power_w";
+
+/// Serialize optimizer assignments as CSV (with header).
+pub fn assignments_to_csv(rows: &[Assignment]) -> String {
+    let mut out = String::from(ASSIGNMENT_CSV_HEADER);
+    out.push('\n');
+    for a in rows {
+        let _ = writeln!(
+            out,
+            "{},{},{:.6},{:.6},{:.6},{:.3}",
+            a.workload, a.profile, a.latency_ms, a.throughput, a.goodput, a.power_w,
+        );
+    }
+    out
+}
+
+/// An optimizer assignment as a JSON object.
+pub fn assignment_to_json(a: &Assignment) -> Json {
+    Json::obj(vec![
+        ("workload", (a.workload as i64).into()),
+        ("profile", a.profile.into()),
+        ("latency_ms", a.latency_ms.into()),
+        ("throughput", a.throughput.into()),
+        ("goodput", a.goodput.into()),
+        ("power_w", a.power_w.into()),
+    ])
+}
+
+/// A complete optimizer plan (layout + assignments + score) as JSON.
+pub fn plan_to_json(p: &Plan) -> Json {
+    Json::obj(vec![
+        ("layout", Json::Arr(p.layout.iter().map(|&n| n.into()).collect())),
+        ("score", p.score.into()),
+        ("assignments", Json::Arr(p.assignments.iter().map(assignment_to_json).collect())),
+    ])
+}
+
+/// CSV header used by [`decisions_to_csv`].
+pub const DECISION_CSV_HEADER: &str = "t,from,to,churn,downtime_s,reason";
+
+/// Serialize an orchestrator decision log as CSV (with header).
+pub fn decisions_to_csv(rows: &[Decision]) -> String {
+    let mut out = String::from(DECISION_CSV_HEADER);
+    out.push('\n');
+    for d in rows {
+        let _ = writeln!(
+            out,
+            "{:.6},{},{},{},{:.6},{}",
+            d.t,
+            csv_escape(&d.from),
+            csv_escape(&d.to),
+            d.churn,
+            d.downtime_s,
+            csv_escape(&d.reason),
+        );
+    }
+    out
+}
+
+/// One orchestrator decision as a JSON object.
+pub fn decision_to_json(d: &Decision) -> Json {
+    Json::obj(vec![
+        ("t", d.t.into()),
+        ("from", d.from.as_str().into()),
+        ("to", d.to.as_str().into()),
+        ("churn", (d.churn as i64).into()),
+        ("downtime_s", d.downtime_s.into()),
+        ("reason", d.reason.as_str().into()),
+    ])
+}
+
+/// A whole decision log as a JSON array.
+pub fn decisions_to_json(rows: &[Decision]) -> Json {
+    Json::Arr(rows.iter().map(decision_to_json).collect())
 }
 
 /// Serialize a time-series set in Prometheus exposition format, using the
@@ -187,6 +268,62 @@ mod tests {
         }
         let out = series_to_prometheus(&set);
         assert_eq!(out.matches("# TYPE migperf_gract").count(), 1);
+    }
+
+    #[test]
+    fn assignments_export_csv_and_json() {
+        use crate::mig::gpu::GpuModel;
+        use crate::models::zoo::lookup;
+        use crate::scheduler::{Objective, Scheduler, SloWorkload};
+        use crate::workload::spec::WorkloadSpec;
+        let sched = Scheduler::new(GpuModel::A30_24GB);
+        let w = [SloWorkload::with_slo(
+            WorkloadSpec::inference(lookup("resnet50").unwrap(), 4, 224),
+            1000.0,
+        )];
+        let plan = sched.plan(&w, Objective::MaxThroughput).unwrap();
+        let csv = assignments_to_csv(&plan.assignments);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], ASSIGNMENT_CSV_HEADER);
+        assert_eq!(lines.len(), 1 + plan.assignments.len());
+        assert!(lines[1].starts_with("0,"), "{csv}");
+        let doc = plan_to_json(&plan);
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("layout").unwrap().as_arr().unwrap().len(),
+            plan.layout.len()
+        );
+        let a0 = &parsed.get("assignments").unwrap().as_arr().unwrap()[0];
+        assert_eq!(a0.get("workload").unwrap().as_i64(), Some(0));
+        assert!(a0.get("goodput").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn decision_log_export_csv_and_json() {
+        use crate::orchestrator::Decision;
+        let d = Decision {
+            t: 120.0,
+            from: "4g.40gb+2g.20gb+1g.10gb".into(),
+            to: "2g.20gb+2g.20gb+3g.40gb".into(),
+            reason: "window rates [55.1, 54.2] req/s, p99 [61.0, 22.0] ms".into(),
+            churn: 6,
+            downtime_s: 3.25,
+        };
+        let csv = decisions_to_csv(std::slice::from_ref(&d));
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], DECISION_CSV_HEADER);
+        assert!(lines[1].contains("4g.40gb+2g.20gb+1g.10gb"));
+        assert!(lines[1].contains("\"window rates"), "comma-bearing reason must be quoted: {csv}");
+        let doc = decisions_to_json(std::slice::from_ref(&d));
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("churn").unwrap().as_i64(), Some(6));
+        assert_eq!(row.get("downtime_s").unwrap().as_f64(), Some(3.25));
+        assert_eq!(
+            row.get("to").unwrap().as_str(),
+            Some("2g.20gb+2g.20gb+3g.40gb")
+        );
+        assert!(decisions_to_csv(&[]).lines().count() == 1, "empty log is just the header");
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Reconfiguration cost model.
+//!
+//! Repartitioning a MIG GPU is not free: in-flight requests must drain,
+//! GPU instances are destroyed and recreated (driver churn plus serving
+//! process restart), and the training job checkpoints before the switch
+//! and restores after it. The orchestrator pays these costs explicitly in
+//! simulated time, so a policy that flaps loses goodput to its own
+//! downtime — the central tension the MISO / reconfigurable-scheduling
+//! literature studies.
+
+use crate::mig::enumerate::Layout;
+
+/// Tunable reconfiguration costs (seconds of simulated time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconfigCost {
+    /// Seconds per GPU instance destroyed or created (nvml GI/CI churn
+    /// plus the amortized serving-process restart).
+    pub instance_churn_s: f64,
+    /// Extra seconds before the training job resumes after a repartition
+    /// (checkpoint restore).
+    pub train_restore_s: f64,
+}
+
+impl Default for ReconfigCost {
+    fn default() -> Self {
+        ReconfigCost { instance_churn_s: 0.5, train_restore_s: 5.0 }
+    }
+}
+
+impl ReconfigCost {
+    /// Reject negative or non-finite cost parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("instance_churn_s", self.instance_churn_s),
+            ("train_restore_s", self.train_restore_s),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("reconfig cost {name} = {v} must be non-negative and finite"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Post-drain reconfiguration latency for switching `from` → `to`.
+    pub fn latency_s(&self, from: &Layout, to: &Layout) -> f64 {
+        self.instance_churn_s * churn(from, to) as f64
+    }
+}
+
+/// Number of instances destroyed plus created when switching `from` →
+/// `to`. Instances present in both layouts at the same (profile, offset)
+/// survive the switch untouched.
+pub fn churn(from: &Layout, to: &Layout) -> u32 {
+    let destroyed = from.placements.iter().filter(|p| !to.placements.contains(p)).count();
+    let created = to.placements.iter().filter(|p| !from.placements.contains(p)).count();
+    (destroyed + created) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::enumerate::maximal_layouts;
+    use crate::mig::gpu::GpuModel;
+
+    fn layouts() -> Vec<Layout> {
+        maximal_layouts(GpuModel::A30_24GB)
+    }
+
+    #[test]
+    fn identical_layouts_have_zero_churn() {
+        for l in layouts() {
+            assert_eq!(churn(&l, &l), 0);
+            assert_eq!(ReconfigCost::default().latency_s(&l, &l), 0.0);
+        }
+    }
+
+    #[test]
+    fn disjoint_layouts_churn_everything() {
+        let ls = layouts();
+        let whole = ls.iter().find(|l| l.profile_names() == vec!["4g.24gb"]).unwrap();
+        let quads = ls.iter().find(|l| l.profile_names() == vec!["1g.6gb"; 4]).unwrap();
+        assert_eq!(churn(whole, quads), 5, "1 destroyed + 4 created");
+        assert_eq!(churn(quads, whole), 5, "symmetric");
+        let cost = ReconfigCost { instance_churn_s: 2.0, train_restore_s: 0.0 };
+        assert_eq!(cost.latency_s(whole, quads), 10.0);
+    }
+
+    #[test]
+    fn shared_instances_survive() {
+        let ls = layouts();
+        // 2g@0 + 2g@2  →  2g@0 + 1g@2 + 1g@3: the 2g@0 instance is kept.
+        let two_two = ls.iter().find(|l| l.profile_names() == vec!["2g.12gb", "2g.12gb"]).unwrap();
+        let two_one_one = ls
+            .iter()
+            .find(|l| l.profile_names() == vec!["2g.12gb", "1g.6gb", "1g.6gb"])
+            .unwrap();
+        assert_eq!(churn(two_two, two_one_one), 3, "destroy 2g@2, create 1g@2 + 1g@3");
+    }
+
+    #[test]
+    fn validate_rejects_bad_costs() {
+        assert!(ReconfigCost::default().validate().is_ok());
+        let bad = ReconfigCost { instance_churn_s: -1.0, train_restore_s: 0.0 };
+        assert!(bad.validate().is_err());
+        let nan = ReconfigCost { instance_churn_s: 0.5, train_restore_s: f64::NAN };
+        assert!(nan.validate().is_err());
+    }
+}

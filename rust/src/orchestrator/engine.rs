@@ -1,0 +1,782 @@
+//! The online orchestration engine.
+//!
+//! Runs a hybrid training + inference workload mix inside the
+//! discrete-event simulator under time-varying load, consulting a
+//! [`Policy`](super::policy::Policy) at fixed observation windows and
+//! paying the explicit [`ReconfigCost`] whenever the policy repartitions
+//! the GPU:
+//!
+//! 1. **decide** — at a window tick the policy proposes a new
+//!    [`RatePlan`]; the engine validates its layout against the MIG
+//!    placement rules;
+//! 2. **drain** — no new requests or training steps start; in-flight work
+//!    completes under the old layout;
+//! 3. **churn** — destroyed + created instances each cost
+//!    `instance_churn_s` of downtime; queued arrivals keep accumulating;
+//! 4. **resume** — services restart on their new instances, training
+//!    resumes after an extra `train_restore_s` checkpoint-restore penalty.
+//!
+//! Everything is seeded and iteration-order deterministic, so orchestrator
+//! runs are bit-identical at any sweep worker count.
+
+use std::collections::VecDeque;
+
+use crate::metrics::collector::{MetricsCollector, RunSummary};
+use crate::mig::enumerate::Layout;
+use crate::mig::gpu::GpuModel;
+use crate::mig::placement::PlacementEngine;
+use crate::scheduler::{DemandWorkload, RatePlan, Scheduler};
+use crate::simgpu::desim::Des;
+use crate::simgpu::perfmodel::{PerfError, StepEstimate};
+use crate::simgpu::resource::ExecResource;
+use crate::util::prng::Prng;
+use crate::util::stats::percentile_sorted;
+use crate::workload::arrival::{Arrival, ArrivalError, ArrivalSpec};
+use crate::workload::serving::pool_collectors;
+use crate::workload::spec::WorkloadSpec;
+
+use super::cost::{churn, ReconfigCost};
+use super::policy::{Policy, PolicyCtx, PolicyKind, ServiceObs, WindowObs};
+
+/// One latency-bound inference service under orchestration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// The per-request workload.
+    pub spec: WorkloadSpec,
+    /// Latency SLO, milliseconds.
+    pub slo_ms: f64,
+    /// Arrival process driving the service.
+    pub arrival: ArrivalSpec,
+}
+
+/// A complete orchestrator simulation (plain data: clone freely into
+/// sweep grids).
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    /// GPU being orchestrated.
+    pub gpu: GpuModel,
+    /// Best-effort training job co-located with the services, if any.
+    pub train: Option<WorkloadSpec>,
+    /// The inference services.
+    pub services: Vec<ServiceConfig>,
+    /// Repartitioning policy.
+    pub policy: PolicyKind,
+    /// Reconfiguration cost model.
+    pub cost: ReconfigCost,
+    /// Simulated run length, seconds.
+    pub duration_s: f64,
+    /// Observation-window length (policy tick period), seconds.
+    pub window_s: f64,
+    /// Utilization bound the planner sizes services for (ρ_max).
+    pub rho_max: f64,
+    /// PRNG seed (arrival streams derive per-service seeds from it).
+    pub seed: u64,
+}
+
+/// Why an orchestrator run failed.
+#[derive(Debug)]
+pub enum OrchError {
+    /// Configuration rejected before the simulation started.
+    Invalid(String),
+    /// No valid layout can host the workloads.
+    Infeasible(String),
+    /// An arrival process could not be constructed.
+    Arrival(ArrivalError),
+    /// A workload failed to fit its assigned instance.
+    Perf(PerfError),
+}
+
+impl std::fmt::Display for OrchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OrchError::Invalid(m) => write!(f, "invalid orchestrator config: {m}"),
+            OrchError::Infeasible(m) => write!(f, "infeasible: {m}"),
+            OrchError::Arrival(e) => write!(f, "arrival process: {e}"),
+            OrchError::Perf(e) => write!(f, "performance model: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for OrchError {}
+
+impl From<ArrivalError> for OrchError {
+    fn from(e: ArrivalError) -> Self {
+        OrchError::Arrival(e)
+    }
+}
+
+impl From<PerfError> for OrchError {
+    fn from(e: PerfError) -> Self {
+        OrchError::Perf(e)
+    }
+}
+
+/// One repartitioning event in the decision log.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// Time the policy decided to repartition (simulated seconds).
+    pub t: f64,
+    /// Layout before the switch (`+`-joined profile names).
+    pub from: String,
+    /// Layout after the switch.
+    pub to: String,
+    /// Window observation that motivated the move.
+    pub reason: String,
+    /// Instances destroyed plus created by the switch.
+    pub churn: u32,
+    /// Seconds from decision to resume (drain + instance churn).
+    pub downtime_s: f64,
+}
+
+/// Aggregate result of one orchestrator run.
+#[derive(Debug, Clone)]
+pub struct OrchestratorOutcome {
+    /// Policy that produced the run.
+    pub policy: &'static str,
+    /// Simulated run length, seconds.
+    pub duration_s: f64,
+    /// Pooled serving summary (exact pooled percentiles).
+    pub pooled: RunSummary,
+    /// Per-service serving summaries.
+    pub per_service: Vec<RunSummary>,
+    /// Requests that arrived within the horizon.
+    pub arrived: u64,
+    /// Requests completed (including backlog served after the horizon).
+    pub completed: u64,
+    /// Completions that blew their SLO.
+    pub slo_violations: u64,
+    /// SLO-respecting completions per second over the run (requests/s).
+    pub goodput_rps: f64,
+    /// Fraction of completions that blew their SLO.
+    pub slo_violation_frac: f64,
+    /// Training steps completed.
+    pub train_steps: u64,
+    /// Training throughput over the run, samples/s.
+    pub train_samples_per_s: f64,
+    /// Number of repartitions executed.
+    pub reconfigurations: u64,
+    /// Total downtime paid to repartitions, seconds.
+    pub reconfig_downtime_s: f64,
+    /// Every layout adopted, in order (initial layout first).
+    pub layouts: Vec<Layout>,
+    /// Per-repartition decision log.
+    pub decisions: Vec<Decision>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive { svc: usize },
+    ServeDone { svc: usize },
+    TrainDone,
+    Tick,
+    ReconfigDone,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Running,
+    Draining,
+    Reconfiguring,
+}
+
+struct SvcState {
+    queue: VecDeque<f64>, // arrival timestamps
+    busy: bool,
+    busy_since: f64,
+    arrived: u64,
+    slo_met: u64,
+    violations: u64,
+    window_arrivals: u64,
+    window_completed: u64,
+    window_violations: u64,
+    window_busy_s: f64,
+    window_lat: Vec<f64>,
+}
+
+fn start_service(des: &mut Des<Ev>, st: &mut SvcState, svc: usize, now: f64, service_s: f64) {
+    debug_assert!(!st.busy, "server {svc} already busy");
+    st.busy = true;
+    st.busy_since = now;
+    des.schedule_in(service_s, Ev::ServeDone { svc });
+}
+
+/// Drain barrier: once every server and the training job are idle (and a
+/// repartition is pending), the instance churn begins and `ReconfigDone`
+/// is scheduled.
+fn maybe_begin_reconfig(
+    des: &mut Des<Ev>,
+    phase: &mut Phase,
+    svcs: &[SvcState],
+    train_busy: bool,
+    current: &Layout,
+    pending: &Option<(RatePlan, f64, String)>,
+    cost: &ReconfigCost,
+) {
+    let Some((target, _, _)) = pending else { return };
+    if *phase == Phase::Draining && !train_busy && svcs.iter().all(|s| !s.busy) {
+        *phase = Phase::Reconfiguring;
+        des.schedule_in(cost.latency_s(current, &target.layout), Ev::ReconfigDone);
+    }
+}
+
+impl OrchestratorConfig {
+    /// Reject configurations that would produce NaN clocks or degenerate
+    /// simulations.
+    pub fn validate(&self) -> Result<(), OrchError> {
+        if self.services.is_empty() {
+            return Err(OrchError::Invalid("at least one service is required".into()));
+        }
+        if !(self.duration_s.is_finite() && self.duration_s > 0.0) {
+            return Err(OrchError::Invalid(format!(
+                "duration_s = {} must be positive and finite",
+                self.duration_s
+            )));
+        }
+        if !(self.window_s.is_finite() && self.window_s > 0.0) {
+            return Err(OrchError::Invalid(format!(
+                "window_s = {} must be positive and finite",
+                self.window_s
+            )));
+        }
+        if self.window_s >= self.duration_s {
+            return Err(OrchError::Invalid(format!(
+                "window_s = {} must be smaller than duration_s = {}: no policy tick \
+                 would ever fire, so every policy would silently behave as static",
+                self.window_s, self.duration_s
+            )));
+        }
+        if !(self.rho_max.is_finite() && self.rho_max > 0.0 && self.rho_max < 1.0) {
+            return Err(OrchError::Invalid(format!(
+                "rho_max = {} must be in (0, 1)",
+                self.rho_max
+            )));
+        }
+        for (i, s) in self.services.iter().enumerate() {
+            if !(s.slo_ms.is_finite() && s.slo_ms > 0.0) {
+                return Err(OrchError::Invalid(format!(
+                    "service {i}: slo_ms = {} must be positive and finite",
+                    s.slo_ms
+                )));
+            }
+            s.arrival.validate()?;
+        }
+        self.cost.validate().map_err(OrchError::Invalid)
+    }
+
+    /// The demand-workload vector handed to the planner: training (if
+    /// any) first, then services with their whole-trace mean rates.
+    fn demand_workloads(&self) -> (Vec<DemandWorkload>, Vec<usize>) {
+        let mut ws = Vec::with_capacity(self.services.len() + 1);
+        if let Some(t) = &self.train {
+            ws.push(DemandWorkload::training(t.clone()));
+        }
+        let base = ws.len();
+        let service_workloads: Vec<usize> =
+            (0..self.services.len()).map(|i| base + i).collect();
+        for s in &self.services {
+            ws.push(DemandWorkload::service(s.spec.clone(), s.slo_ms, s.arrival.mean_rate()));
+        }
+        (ws, service_workloads)
+    }
+
+    /// Resolve a plan into per-service step estimates + power draws and
+    /// the training estimate.
+    fn materialize(
+        &self,
+        scheduler: &Scheduler,
+        plan: &RatePlan,
+        svc_base: usize,
+    ) -> Result<(Vec<StepEstimate>, Vec<f64>, Option<StepEstimate>), OrchError> {
+        let mut svc_est = Vec::with_capacity(self.services.len());
+        let mut svc_power = Vec::with_capacity(self.services.len());
+        for (i, s) in self.services.iter().enumerate() {
+            let inst = plan.instance_of(svc_base + i).ok_or_else(|| {
+                OrchError::Infeasible(format!("service {i} missing from the plan"))
+            })?;
+            let res = ExecResource::from_gi(self.gpu, plan.layout.placements[inst].profile);
+            let est = scheduler.perf.step(&res, &s.spec.step_cost())?;
+            svc_power.push(scheduler.energy.power_w(&res, est.gract));
+            svc_est.push(est);
+        }
+        let train_est = match &self.train {
+            Some(spec) => {
+                let inst = plan
+                    .instance_of(0)
+                    .ok_or_else(|| OrchError::Infeasible("training missing from the plan".into()))?;
+                let res = ExecResource::from_gi(self.gpu, plan.layout.placements[inst].profile);
+                Some(scheduler.perf.step(&res, &spec.step_cost())?)
+            }
+            None => None,
+        };
+        Ok((svc_est, svc_power, train_est))
+    }
+
+    /// Run the orchestrated simulation to completion.
+    pub fn run(&self) -> Result<OrchestratorOutcome, OrchError> {
+        self.validate()?;
+        let scheduler = Scheduler::new(self.gpu);
+        let placement = PlacementEngine::new(self.gpu);
+        let (workloads, service_workloads) = self.demand_workloads();
+        let svc_base = workloads.len() - self.services.len();
+
+        // Initial layout: what the offline optimizer picks for the
+        // whole-trace average rates — every policy starts from the same
+        // baseline plan.
+        let mut plan = scheduler.plan_for_demand(&workloads, self.rho_max).ok_or_else(|| {
+            OrchError::Infeasible(
+                "no maximal layout hosts every workload at whole-trace mean rates".into(),
+            )
+        })?;
+        placement
+            .check_layout(&plan.layout.placements)
+            .map_err(|e| OrchError::Infeasible(e.to_string()))?;
+        let (mut svc_est, mut svc_power, mut train_est) =
+            self.materialize(&scheduler, &plan, svc_base)?;
+
+        let n = self.services.len();
+        let mut seeder = Prng::new(self.seed);
+        let mut arrivals: Vec<Box<dyn Arrival>> = Vec::with_capacity(n);
+        for s in &self.services {
+            arrivals.push(s.arrival.build(seeder.next_u64())?);
+        }
+
+        let mut des: Des<Ev> = Des::new();
+        let mut svcs: Vec<SvcState> = (0..n)
+            .map(|_| SvcState {
+                queue: VecDeque::new(),
+                busy: false,
+                busy_since: 0.0,
+                arrived: 0,
+                slo_met: 0,
+                violations: 0,
+                window_arrivals: 0,
+                window_completed: 0,
+                window_violations: 0,
+                window_busy_s: 0.0,
+                window_lat: Vec::new(),
+            })
+            .collect();
+        let mut collectors: Vec<MetricsCollector> = self
+            .services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| MetricsCollector::new(format!("{}#{}", s.spec.label(), i)))
+            .collect();
+
+        let mut policy = self.policy.build();
+        let mut phase = Phase::Running;
+        // (target plan, decision time, reason) while draining/churning.
+        let mut pending: Option<(RatePlan, f64, String)> = None;
+        let mut train_busy = false;
+        let mut train_steps: u64 = 0;
+        let mut window_train_steps: u64 = 0;
+        let mut last_change_t = 0.0;
+        let mut reconfig_downtime = 0.0;
+        let mut decisions: Vec<Decision> = Vec::new();
+        let mut layouts: Vec<Layout> = vec![plan.layout.clone()];
+
+        // Seed the calendar.
+        for (i, a) in arrivals.iter_mut().enumerate() {
+            let t0 = a.next_gap();
+            if t0.is_finite() && t0 <= self.duration_s {
+                des.schedule_at(t0, Ev::Arrive { svc: i });
+            }
+        }
+        if let Some(est) = &train_est {
+            train_busy = true;
+            des.schedule_at(est.seconds, Ev::TrainDone);
+        }
+        if self.window_s < self.duration_s {
+            des.schedule_at(self.window_s, Ev::Tick);
+        }
+
+        while let Some((t, ev)) = des.next() {
+            match ev {
+                Ev::Arrive { svc } => {
+                    svcs[svc].arrived += 1;
+                    svcs[svc].window_arrivals += 1;
+                    svcs[svc].queue.push_back(t);
+                    let gap = arrivals[svc].next_gap();
+                    if gap.is_finite() && t + gap <= self.duration_s {
+                        des.schedule_at(t + gap, Ev::Arrive { svc });
+                    }
+                    if phase == Phase::Running && !svcs[svc].busy {
+                        start_service(&mut des, &mut svcs[svc], svc, t, svc_est[svc].seconds);
+                    }
+                }
+                Ev::ServeDone { svc } => {
+                    {
+                        let st = &mut svcs[svc];
+                        let arrived_at = st.queue.pop_front().expect("completion without request");
+                        st.busy = false;
+                        let busy_s = t - st.busy_since;
+                        st.window_busy_s += busy_s;
+                        let latency_ms = (t - arrived_at) * 1e3;
+                        collectors[svc].record_completion(
+                            t,
+                            latency_ms,
+                            self.services[svc].spec.batch as u64,
+                        );
+                        collectors[svc].record_energy(svc_power[svc] * busy_s);
+                        collectors[svc].record_gract(svc_est[svc].gract);
+                        collectors[svc].record_fb(svc_est[svc].fb_bytes);
+                        st.window_completed += 1;
+                        st.window_lat.push(latency_ms);
+                        if latency_ms > self.services[svc].slo_ms {
+                            st.violations += 1;
+                            st.window_violations += 1;
+                        } else {
+                            st.slo_met += 1;
+                        }
+                    }
+                    match phase {
+                        Phase::Running => {
+                            if !svcs[svc].queue.is_empty() {
+                                start_service(
+                                    &mut des,
+                                    &mut svcs[svc],
+                                    svc,
+                                    t,
+                                    svc_est[svc].seconds,
+                                );
+                            }
+                        }
+                        Phase::Draining => {
+                            maybe_begin_reconfig(
+                                &mut des,
+                                &mut phase,
+                                &svcs,
+                                train_busy,
+                                &plan.layout,
+                                &pending,
+                                &self.cost,
+                            );
+                        }
+                        Phase::Reconfiguring => {}
+                    }
+                }
+                Ev::TrainDone => {
+                    train_busy = false;
+                    train_steps += 1;
+                    window_train_steps += 1;
+                    match phase {
+                        Phase::Running => {
+                            if t < self.duration_s {
+                                if let Some(est) = &train_est {
+                                    train_busy = true;
+                                    des.schedule_in(est.seconds, Ev::TrainDone);
+                                }
+                            }
+                        }
+                        Phase::Draining => {
+                            maybe_begin_reconfig(
+                                &mut des,
+                                &mut phase,
+                                &svcs,
+                                train_busy,
+                                &plan.layout,
+                                &pending,
+                                &self.cost,
+                            );
+                        }
+                        Phase::Reconfiguring => {}
+                    }
+                }
+                Ev::Tick => {
+                    let mut services_obs = Vec::with_capacity(n);
+                    for st in svcs.iter_mut() {
+                        st.window_lat.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                        services_obs.push(ServiceObs {
+                            arrivals: st.window_arrivals,
+                            rate_rps: st.window_arrivals as f64 / self.window_s,
+                            completed: st.window_completed,
+                            violations: st.window_violations,
+                            p99_ms: percentile_sorted(&st.window_lat, 99.0),
+                            busy_frac: (st.window_busy_s / self.window_s).min(1.0),
+                            queue_depth: st.queue.len(),
+                        });
+                    }
+                    let obs = WindowObs {
+                        t,
+                        window_s: self.window_s,
+                        services: services_obs,
+                        train_steps: window_train_steps,
+                    };
+                    if phase == Phase::Running {
+                        let proposal = {
+                            let ctx = PolicyCtx {
+                                scheduler: &scheduler,
+                                workloads: &workloads,
+                                service_workloads: &service_workloads,
+                                current: &plan,
+                                now: t,
+                                last_change_t,
+                                rho_max: self.rho_max,
+                            };
+                            policy.decide(&obs, &ctx)
+                        };
+                        if let Some(target) = proposal {
+                            if target.layout != plan.layout {
+                                placement
+                                    .check_layout(&target.layout.placements)
+                                    .map_err(|e| OrchError::Infeasible(e.to_string()))?;
+                                let rates: Vec<String> = obs
+                                    .services
+                                    .iter()
+                                    .map(|s| format!("{:.1}", s.rate_rps))
+                                    .collect();
+                                let p99s: Vec<String> = obs
+                                    .services
+                                    .iter()
+                                    .map(|s| format!("{:.1}", s.p99_ms))
+                                    .collect();
+                                let reason = format!(
+                                    "window rates [{}] req/s, p99 [{}] ms",
+                                    rates.join(", "),
+                                    p99s.join(", ")
+                                );
+                                pending = Some((target, t, reason));
+                                phase = Phase::Draining;
+                                maybe_begin_reconfig(
+                                    &mut des,
+                                    &mut phase,
+                                    &svcs,
+                                    train_busy,
+                                    &plan.layout,
+                                    &pending,
+                                    &self.cost,
+                                );
+                            }
+                        }
+                    }
+                    for st in svcs.iter_mut() {
+                        st.window_arrivals = 0;
+                        st.window_completed = 0;
+                        st.window_violations = 0;
+                        st.window_busy_s = 0.0;
+                        st.window_lat.clear();
+                    }
+                    window_train_steps = 0;
+                    if t + self.window_s < self.duration_s {
+                        des.schedule_at(t + self.window_s, Ev::Tick);
+                    }
+                }
+                Ev::ReconfigDone => {
+                    let (target, decided_t, reason) =
+                        pending.take().expect("reconfiguration without a pending target");
+                    let from = plan.profile_names().join("+");
+                    let to = target.profile_names().join("+");
+                    let churn_n = churn(&plan.layout, &target.layout);
+                    plan = target;
+                    let bound = self.materialize(&scheduler, &plan, svc_base)?;
+                    svc_est = bound.0;
+                    svc_power = bound.1;
+                    train_est = bound.2;
+                    let downtime = t - decided_t;
+                    reconfig_downtime += downtime;
+                    decisions.push(Decision {
+                        t: decided_t,
+                        from,
+                        to,
+                        reason,
+                        churn: churn_n,
+                        downtime_s: downtime,
+                    });
+                    layouts.push(plan.layout.clone());
+                    last_change_t = t;
+                    phase = Phase::Running;
+                    for svc in 0..n {
+                        if !svcs[svc].queue.is_empty() && !svcs[svc].busy {
+                            start_service(&mut des, &mut svcs[svc], svc, t, svc_est[svc].seconds);
+                        }
+                    }
+                    if t < self.duration_s {
+                        if let Some(est) = &train_est {
+                            train_busy = true;
+                            des.schedule_in(self.cost.train_restore_s + est.seconds, Ev::TrainDone);
+                        }
+                    }
+                }
+            }
+        }
+
+        let per_service: Vec<RunSummary> = collectors.iter().map(|c| c.summarize()).collect();
+        let pooled = pool_collectors("orchestrated", &collectors, &per_service);
+        let arrived: u64 = svcs.iter().map(|s| s.arrived).sum();
+        let slo_met: u64 = svcs.iter().map(|s| s.slo_met).sum();
+        let violations: u64 = svcs.iter().map(|s| s.violations).sum();
+        let completed = slo_met + violations;
+        let train_batch = self.train.as_ref().map(|t| t.batch as f64).unwrap_or(0.0);
+        Ok(OrchestratorOutcome {
+            policy: self.policy.name(),
+            duration_s: self.duration_s,
+            pooled,
+            per_service,
+            arrived,
+            completed,
+            slo_violations: violations,
+            goodput_rps: slo_met as f64 / self.duration_s,
+            slo_violation_frac: if completed > 0 {
+                violations as f64 / completed as f64
+            } else {
+                0.0
+            },
+            train_steps,
+            train_samples_per_s: train_steps as f64 * train_batch / self.duration_s,
+            reconfigurations: decisions.len() as u64,
+            reconfig_downtime_s: reconfig_downtime,
+            layouts,
+            decisions,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::lookup;
+    use crate::orchestrator::policy::{PredictiveParams, ReactiveParams};
+
+    /// The §Orchestrator demo scenario, compressed for tests: BERT-base
+    /// training + two BERT-base inference services under diurnal load
+    /// whose peak overloads the statically sized layout.
+    fn demo(policy: PolicyKind, duration_s: f64, period_s: f64) -> OrchestratorConfig {
+        let bert = lookup("bert-base").unwrap();
+        let service = ServiceConfig {
+            spec: WorkloadSpec::inference(bert, 8, 128),
+            slo_ms: 40.0,
+            arrival: ArrivalSpec::Diurnal { base_rate: 6.0, peak_rate: 60.0, period_s },
+        };
+        OrchestratorConfig {
+            gpu: GpuModel::A100_80GB,
+            train: Some(WorkloadSpec::training(bert, 32, 128)),
+            services: vec![service.clone(), service],
+            policy,
+            cost: ReconfigCost::default(),
+            duration_s,
+            window_s: 10.0,
+            rho_max: 0.75,
+            seed: 2024,
+        }
+    }
+
+    #[test]
+    fn static_run_completes_and_never_repartitions() {
+        let out = demo(PolicyKind::Static, 240.0, 120.0).run().unwrap();
+        assert!(out.arrived > 1000, "arrived {}", out.arrived);
+        assert!(out.completed > 0 && out.completed <= out.arrived + 2);
+        assert_eq!(out.reconfigurations, 0);
+        assert!(out.decisions.is_empty());
+        assert_eq!(out.layouts.len(), 1);
+        assert_eq!(out.reconfig_downtime_s, 0.0);
+        assert!(out.train_steps > 0);
+        assert!(out.goodput_rps > 0.0);
+    }
+
+    #[test]
+    fn reactive_under_flat_load_matches_static() {
+        // Stable Poisson load at the mean: the hysteresis policy must not
+        // move, and the run must be indistinguishable from the baseline.
+        let flat = |policy: PolicyKind| {
+            let mut cfg = demo(policy, 240.0, 120.0);
+            for s in &mut cfg.services {
+                s.arrival = ArrivalSpec::Poisson { rate: 33.0 };
+            }
+            cfg.run().unwrap()
+        };
+        let st = flat(PolicyKind::Static);
+        let re = flat(PolicyKind::Reactive(ReactiveParams::default()));
+        assert_eq!(re.reconfigurations, 0, "no reason to move under flat feasible load");
+        assert_eq!(re.goodput_rps.to_bits(), st.goodput_rps.to_bits());
+        assert_eq!(re.pooled.p99_latency_ms.to_bits(), st.pooled.p99_latency_ms.to_bits());
+    }
+
+    #[test]
+    fn reactive_repartitions_under_diurnal_load() {
+        let out = demo(PolicyKind::Reactive(ReactiveParams::default()), 240.0, 120.0)
+            .run()
+            .unwrap();
+        assert!(out.reconfigurations >= 1, "diurnal peak must force a repartition");
+        assert_eq!(out.decisions.len() as u64, out.reconfigurations);
+        assert_eq!(out.layouts.len(), out.decisions.len() + 1);
+        let downtime: f64 = out.decisions.iter().map(|d| d.downtime_s).sum();
+        assert!((downtime - out.reconfig_downtime_s).abs() < 1e-9);
+        for d in &out.decisions {
+            assert!(d.churn > 0, "a layout switch must churn instances: {d:?}");
+            assert!(d.downtime_s > 0.0);
+            assert!(d.from != d.to, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn predictive_repartitions_under_diurnal_load() {
+        let out = demo(PolicyKind::Predictive(PredictiveParams::default()), 240.0, 120.0)
+            .run()
+            .unwrap();
+        assert!(out.reconfigurations >= 1);
+        assert!(out.train_steps > 0, "training must keep running across repartitions");
+    }
+
+    #[test]
+    fn runs_are_deterministic_per_seed() {
+        let a = demo(PolicyKind::Reactive(ReactiveParams::default()), 240.0, 120.0)
+            .run()
+            .unwrap();
+        let b = demo(PolicyKind::Reactive(ReactiveParams::default()), 240.0, 120.0)
+            .run()
+            .unwrap();
+        assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits());
+        assert_eq!(a.pooled.p99_latency_ms.to_bits(), b.pooled.p99_latency_ms.to_bits());
+        assert_eq!(a.reconfigurations, b.reconfigurations);
+        assert_eq!(a.reconfig_downtime_s.to_bits(), b.reconfig_downtime_s.to_bits());
+        assert_eq!(a.train_steps, b.train_steps);
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let mut cfg = demo(PolicyKind::Static, 240.0, 120.0);
+        cfg.services.clear();
+        assert!(matches!(cfg.run(), Err(OrchError::Invalid(_))));
+
+        let mut cfg = demo(PolicyKind::Static, 240.0, 120.0);
+        cfg.duration_s = f64::NAN;
+        assert!(matches!(cfg.run(), Err(OrchError::Invalid(_))));
+
+        let mut cfg = demo(PolicyKind::Static, 240.0, 120.0);
+        cfg.rho_max = 1.5;
+        assert!(matches!(cfg.run(), Err(OrchError::Invalid(_))));
+
+        let mut cfg = demo(PolicyKind::Static, 240.0, 120.0);
+        cfg.window_s = 240.0; // >= duration: no policy tick would ever fire
+        assert!(matches!(cfg.run(), Err(OrchError::Invalid(_))));
+
+        let mut cfg = demo(PolicyKind::Static, 240.0, 120.0);
+        cfg.services[0].slo_ms = -1.0;
+        assert!(matches!(cfg.run(), Err(OrchError::Invalid(_))));
+
+        let mut cfg = demo(PolicyKind::Static, 240.0, 120.0);
+        cfg.services[0].arrival = ArrivalSpec::Poisson { rate: f64::NAN };
+        assert!(matches!(cfg.run(), Err(OrchError::Arrival(_))));
+
+        let mut cfg = demo(PolicyKind::Static, 240.0, 120.0);
+        cfg.cost.instance_churn_s = f64::INFINITY;
+        assert!(matches!(cfg.run(), Err(OrchError::Invalid(_))));
+    }
+
+    #[test]
+    fn impossible_slo_is_infeasible() {
+        let mut cfg = demo(PolicyKind::Static, 240.0, 120.0);
+        cfg.services[0].slo_ms = 0.01; // below launch overhead
+        assert!(matches!(cfg.run(), Err(OrchError::Infeasible(_))));
+    }
+
+    #[test]
+    fn orchestration_without_training_job() {
+        let mut cfg = demo(PolicyKind::Reactive(ReactiveParams::default()), 240.0, 120.0);
+        cfg.train = None;
+        let out = cfg.run().unwrap();
+        assert_eq!(out.train_steps, 0);
+        assert_eq!(out.train_samples_per_s, 0.0);
+        assert!(out.completed > 0);
+    }
+}

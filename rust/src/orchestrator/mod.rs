@@ -1,0 +1,34 @@
+//! Online MIG orchestration: dynamic repartitioning under time-varying
+//! load.
+//!
+//! The paper's stated vision is to "lay the foundation for further
+//! research on the orchestration of hybrid training and inference
+//! workloads on MIGs"; the static optimizer ([`crate::scheduler`]) picks
+//! one layout for a fixed workload mix, but MISO (Li et al., 2022) and
+//! the reconfigurable-machine-scheduling line (Tan et al., 2021) show the
+//! real wins come from *re*-partitioning online as load shifts. This
+//! subsystem supplies that loop on top of the DES:
+//!
+//! * [`engine`] — runs the hybrid mix (training + SLO-bound inference
+//!   services) inside the simulator, observes windowed metrics, and
+//!   executes repartitions with an explicit drain → churn → resume cost
+//!   ([`cost`]);
+//! * [`policy`] — the pluggable decision layer: a static whole-trace
+//!   baseline, a reactive hysteresis policy, and a predictive policy
+//!   driven by short-horizon arrival forecasts;
+//! * sweeps of orchestrator runs fan out through
+//!   [`crate::sweep::run_orchestrator`] with the engine's bitwise
+//!   determinism guarantee intact.
+
+pub mod cost;
+pub mod engine;
+pub mod policy;
+
+pub use cost::{churn, ReconfigCost};
+pub use engine::{
+    Decision, OrchError, OrchestratorConfig, OrchestratorOutcome, ServiceConfig,
+};
+pub use policy::{
+    Policy, PolicyCtx, PolicyKind, Predictive, PredictiveParams, Reactive, ReactiveParams,
+    ServiceObs, StaticOracle, WindowObs,
+};

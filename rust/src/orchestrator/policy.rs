@@ -1,0 +1,405 @@
+//! Pluggable repartitioning policies.
+//!
+//! A [`Policy`] watches windowed metrics from the running workloads and
+//! decides when (and to what) the GPU should be repartitioned. Three
+//! reference policies ship behind the trait:
+//!
+//! * [`StaticOracle`] — the baseline: today's exhaustive optimizer
+//!   applied once to whole-trace average rates, never touched again;
+//! * [`Reactive`] — MISO-style hysteresis thresholds on observed SLO
+//!   pressure and utilization, candidate layouts re-planned from
+//!   [`crate::mig::enumerate::maximal_layouts`] and scored with the
+//!   roofline model at the observed window rates;
+//! * [`Predictive`] — the same machinery driven by a short-horizon
+//!   arrival forecast ([`RateForecaster`]), so the resize happens
+//!   *before* a diurnal ramp crests.
+
+use crate::scheduler::{DemandWorkload, RatePlan, Scheduler};
+use crate::workload::arrival::RateForecaster;
+
+/// Windowed observation of one inference service.
+#[derive(Debug, Clone)]
+pub struct ServiceObs {
+    /// Requests that arrived in the window.
+    pub arrivals: u64,
+    /// Arrival-rate estimate over the window, requests/s.
+    pub rate_rps: f64,
+    /// Requests completed in the window.
+    pub completed: u64,
+    /// Completions that exceeded the SLO in the window.
+    pub violations: u64,
+    /// p99 latency of the window's completions, ms (0 when none).
+    pub p99_ms: f64,
+    /// Fraction of the window the server was busy, in `[0, 1]`.
+    pub busy_frac: f64,
+    /// Requests still queued at the window boundary.
+    pub queue_depth: usize,
+}
+
+/// One observation window over every workload.
+#[derive(Debug, Clone)]
+pub struct WindowObs {
+    /// Window end time (simulated seconds).
+    pub t: f64,
+    /// Window length, seconds.
+    pub window_s: f64,
+    /// Per-service observations, in service order.
+    pub services: Vec<ServiceObs>,
+    /// Training steps completed in the window.
+    pub train_steps: u64,
+}
+
+/// Read-only planning context handed to a policy at each window tick.
+#[derive(Debug)]
+pub struct PolicyCtx<'a> {
+    /// Planner (layout enumeration + roofline scoring).
+    pub scheduler: &'a Scheduler,
+    /// Workload templates; service entries carry whole-trace mean rates
+    /// as their demand (what the static baseline was sized for).
+    pub workloads: &'a [DemandWorkload],
+    /// Workload index of each service, in service order.
+    pub service_workloads: &'a [usize],
+    /// The plan currently in force.
+    pub current: &'a RatePlan,
+    /// Current time (window end), simulated seconds.
+    pub now: f64,
+    /// Time the layout last changed (0 if never).
+    pub last_change_t: f64,
+    /// Utilization bound used for sizing (ρ_max).
+    pub rho_max: f64,
+}
+
+impl PolicyCtx<'_> {
+    /// Clone the workload templates with per-service demand rates
+    /// substituted in (rates in service order).
+    pub fn workloads_at_rates(&self, rates: &[f64]) -> Vec<DemandWorkload> {
+        let mut ws = self.workloads.to_vec();
+        for (si, &wi) in self.service_workloads.iter().enumerate() {
+            ws[wi].demand_rps = Some(rates.get(si).copied().unwrap_or(0.0).max(0.0));
+        }
+        ws
+    }
+}
+
+/// A repartitioning policy.
+pub trait Policy {
+    /// Short name used in reports ("static", "reactive", ...).
+    fn name(&self) -> &'static str;
+
+    /// Called at the end of each observation window while the system is
+    /// running normally. Return `Some(plan)` to repartition to `plan`
+    /// (the engine ignores proposals whose layout equals the current
+    /// one), or `None` to keep the current layout.
+    fn decide(&mut self, obs: &WindowObs, ctx: &PolicyCtx) -> Option<RatePlan>;
+}
+
+/// Tunables shared by the reactive and predictive policies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReactiveParams {
+    /// Minimum seconds between reconfigurations.
+    pub cooldown_s: f64,
+    /// Minimum relative score gain for a *voluntary* move (no observed
+    /// pressure); the hysteresis band that prevents flapping.
+    pub hysteresis: f64,
+    /// Busy fraction that flags a server as saturated.
+    pub busy_trigger: f64,
+}
+
+impl Default for ReactiveParams {
+    fn default() -> Self {
+        ReactiveParams { cooldown_s: 40.0, hysteresis: 0.10, busy_trigger: 0.9 }
+    }
+}
+
+/// Tunables of the predictive policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictiveParams {
+    /// Threshold/hysteresis machinery shared with [`Reactive`].
+    pub reactive: ReactiveParams,
+    /// Forecaster level gain.
+    pub alpha: f64,
+    /// Forecaster trend gain.
+    pub beta: f64,
+    /// How many windows ahead to size for.
+    pub horizon_windows: f64,
+}
+
+impl Default for PredictiveParams {
+    fn default() -> Self {
+        PredictiveParams {
+            reactive: ReactiveParams::default(),
+            alpha: 0.5,
+            beta: 0.3,
+            horizon_windows: 2.0,
+        }
+    }
+}
+
+/// Which policy to run — plain data, cloneable into sweep grids;
+/// [`PolicyKind::build`] constructs the stateful policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    /// Fixed layout from whole-trace average rates (the baseline).
+    Static,
+    /// Hysteresis thresholds on observed window metrics.
+    Reactive(ReactiveParams),
+    /// Proactive resize from a short-horizon arrival forecast.
+    Predictive(PredictiveParams),
+}
+
+impl PolicyKind {
+    /// Report name of the policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Static => "static",
+            PolicyKind::Reactive(_) => "reactive",
+            PolicyKind::Predictive(_) => "predictive",
+        }
+    }
+
+    /// Parse a policy name (default parameters).
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" | "oracle" => Some(PolicyKind::Static),
+            "reactive" => Some(PolicyKind::Reactive(ReactiveParams::default())),
+            "predictive" => Some(PolicyKind::Predictive(PredictiveParams::default())),
+            _ => None,
+        }
+    }
+
+    /// Construct the stateful policy.
+    pub fn build(&self) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Static => Box::new(StaticOracle),
+            PolicyKind::Reactive(p) => Box::new(Reactive { params: p.clone() }),
+            PolicyKind::Predictive(p) => {
+                Box::new(Predictive { params: p.clone(), forecasters: Vec::new() })
+            }
+        }
+    }
+}
+
+/// The baseline: never repartitions. Its initial layout (computed by the
+/// engine from whole-trace mean rates) is exactly what the offline
+/// exhaustive optimizer would pick for the averaged workload.
+#[derive(Debug)]
+pub struct StaticOracle;
+
+impl Policy for StaticOracle {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+    fn decide(&mut self, _obs: &WindowObs, _ctx: &PolicyCtx) -> Option<RatePlan> {
+        None
+    }
+}
+
+/// Shared decision core: size for `rates`, repartition when the current
+/// plan is predicted-infeasible at those rates, when observed pressure
+/// (SLO p99 blown or a saturated server) demands it, or when the best
+/// candidate clears the hysteresis band.
+fn decide_for_rates(
+    rates: &[f64],
+    obs: &WindowObs,
+    ctx: &PolicyCtx,
+    params: &ReactiveParams,
+) -> Option<RatePlan> {
+    if ctx.now - ctx.last_change_t < params.cooldown_s {
+        return None;
+    }
+    let ws = ctx.workloads_at_rates(rates);
+    let candidate = ctx.scheduler.plan_for_demand(&ws, ctx.rho_max)?;
+    if candidate.layout == ctx.current.layout {
+        return None;
+    }
+    let (cur_score, cur_feasible) = ctx.scheduler.evaluate_plan(ctx.current, &ws, ctx.rho_max);
+    let pressure = obs.services.iter().enumerate().any(|(si, s)| {
+        let slo = ctx.service_workloads.get(si).and_then(|&wi| ctx.workloads[wi].slo_ms);
+        let p99_blown = slo.map(|slo| s.completed > 0 && s.p99_ms > slo).unwrap_or(false);
+        p99_blown || s.busy_frac >= params.busy_trigger
+    });
+    let improvement = candidate.score > cur_score * (1.0 + params.hysteresis);
+    if !cur_feasible || pressure || improvement {
+        Some(candidate)
+    } else {
+        None
+    }
+}
+
+/// Reactive hysteresis policy: sizes for the rates observed in the last
+/// window.
+#[derive(Debug)]
+pub struct Reactive {
+    /// Thresholds and hysteresis band.
+    pub params: ReactiveParams,
+}
+
+impl Policy for Reactive {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+    fn decide(&mut self, obs: &WindowObs, ctx: &PolicyCtx) -> Option<RatePlan> {
+        let rates: Vec<f64> = obs.services.iter().map(|s| s.rate_rps).collect();
+        decide_for_rates(&rates, obs, ctx, &self.params)
+    }
+}
+
+/// Predictive policy: sizes for a short-horizon forecast of each
+/// service's arrival rate (never below the currently observed rate, so a
+/// falling forecast cannot shrink a service that is still loaded).
+#[derive(Debug)]
+pub struct Predictive {
+    /// Thresholds plus forecaster gains and horizon.
+    pub params: PredictiveParams,
+    forecasters: Vec<RateForecaster>,
+}
+
+impl Policy for Predictive {
+    fn name(&self) -> &'static str {
+        "predictive"
+    }
+    fn decide(&mut self, obs: &WindowObs, ctx: &PolicyCtx) -> Option<RatePlan> {
+        if self.forecasters.len() != obs.services.len() {
+            self.forecasters = vec![
+                RateForecaster::new(self.params.alpha, self.params.beta);
+                obs.services.len()
+            ];
+        }
+        for (f, s) in self.forecasters.iter_mut().zip(&obs.services) {
+            f.observe(s.rate_rps);
+        }
+        let rates: Vec<f64> = self
+            .forecasters
+            .iter()
+            .zip(&obs.services)
+            .map(|(f, s)| f.forecast(self.params.horizon_windows).max(s.rate_rps))
+            .collect();
+        decide_for_rates(&rates, obs, ctx, &self.params.reactive)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::GpuModel;
+    use crate::models::zoo::lookup;
+    use crate::workload::spec::WorkloadSpec;
+
+    fn workloads(mean_rate: f64) -> Vec<DemandWorkload> {
+        let bert = lookup("bert-base").unwrap();
+        vec![
+            DemandWorkload::training(WorkloadSpec::training(bert, 32, 128)),
+            DemandWorkload::service(WorkloadSpec::inference(bert, 8, 128), 40.0, mean_rate),
+            DemandWorkload::service(WorkloadSpec::inference(bert, 8, 128), 40.0, mean_rate),
+        ]
+    }
+
+    fn obs(rates: [f64; 2], p99_ms: f64, busy: f64) -> WindowObs {
+        WindowObs {
+            t: 100.0,
+            window_s: 20.0,
+            services: rates
+                .iter()
+                .map(|&r| ServiceObs {
+                    arrivals: (r * 20.0) as u64,
+                    rate_rps: r,
+                    completed: (r * 20.0) as u64,
+                    violations: 0,
+                    p99_ms,
+                    busy_frac: busy,
+                    queue_depth: 0,
+                })
+                .collect(),
+            train_steps: 100,
+        }
+    }
+
+    fn ctx_fixture<'a>(
+        sched: &'a Scheduler,
+        ws: &'a [DemandWorkload],
+        current: &'a RatePlan,
+        last_change_t: f64,
+    ) -> PolicyCtx<'a> {
+        PolicyCtx {
+            scheduler: sched,
+            workloads: ws,
+            service_workloads: &[1, 2],
+            current,
+            now: 100.0,
+            last_change_t,
+            rho_max: 0.75,
+        }
+    }
+
+    #[test]
+    fn static_policy_never_moves() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let ws = workloads(33.0);
+        let plan = sched.plan_for_demand(&ws, 0.75).unwrap();
+        let ctx = ctx_fixture(&sched, &ws, &plan, 0.0);
+        assert!(StaticOracle.decide(&obs([60.0, 60.0], 500.0, 1.0), &ctx).is_none());
+    }
+
+    #[test]
+    fn reactive_keeps_layout_at_mean_load() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let ws = workloads(33.0);
+        let plan = sched.plan_for_demand(&ws, 0.75).unwrap();
+        let ctx = ctx_fixture(&sched, &ws, &plan, 0.0);
+        let mut r = Reactive { params: ReactiveParams::default() };
+        assert!(r.decide(&obs([33.0, 33.0], 25.0, 0.5), &ctx).is_none());
+    }
+
+    #[test]
+    fn reactive_repartitions_under_overload() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let ws = workloads(33.0);
+        let plan = sched.plan_for_demand(&ws, 0.75).unwrap();
+        let ctx = ctx_fixture(&sched, &ws, &plan, 0.0);
+        let mut r = Reactive { params: ReactiveParams::default() };
+        let target = r.decide(&obs([60.0, 60.0], 120.0, 1.0), &ctx).expect("must repartition");
+        assert!(target.layout != plan.layout);
+        // Every service lands on an instance that sustains the peak rate.
+        for a in target.assignments.iter().filter(|a| a.workload > 0) {
+            assert!(a.utilization <= 0.75, "{a:?}");
+            assert!(a.latency_ms <= 40.0, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_moves() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let ws = workloads(33.0);
+        let plan = sched.plan_for_demand(&ws, 0.75).unwrap();
+        // Layout changed 10 s ago; cooldown is 40 s.
+        let ctx = ctx_fixture(&sched, &ws, &plan, 95.0);
+        let mut r = Reactive { params: ReactiveParams::default() };
+        assert!(r.decide(&obs([60.0, 60.0], 120.0, 1.0), &ctx).is_none());
+    }
+
+    #[test]
+    fn predictive_moves_on_forecast_before_overload_arrives() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let ws = workloads(33.0);
+        let plan = sched.plan_for_demand(&ws, 0.75).unwrap();
+        let mut p = Predictive {
+            params: PredictiveParams::default(),
+            forecasters: Vec::new(),
+        };
+        // Steep observed ramp, but the *current* rate (45) is still one
+        // the static layout can serve: only the forecast crosses the
+        // capacity bound, so a move now is proactive.
+        let mut moved = None;
+        for (i, r) in [15.0, 25.0, 35.0, 45.0].iter().enumerate() {
+            let mut o = obs([*r, *r], 20.0, 0.6);
+            o.t = 100.0 + i as f64 * 20.0;
+            let ctx = PolicyCtx { now: o.t, ..ctx_fixture(&sched, &ws, &plan, 0.0) };
+            if let Some(t) = p.decide(&o, &ctx) {
+                moved = Some((i, t));
+                break;
+            }
+        }
+        let (_, target) = moved.expect("predictive must act on the forecast");
+        assert!(target.layout != plan.layout);
+    }
+}

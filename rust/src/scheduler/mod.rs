@@ -16,4 +16,6 @@
 
 pub mod optimizer;
 
-pub use optimizer::{Objective, Plan, Scheduler, SloWorkload};
+pub use optimizer::{
+    Assignment, DemandWorkload, Objective, Plan, RateAssignment, RatePlan, Scheduler, SloWorkload,
+};

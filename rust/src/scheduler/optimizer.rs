@@ -2,8 +2,9 @@
 
 use crate::mig::enumerate::{maximal_layouts, Layout};
 use crate::mig::gpu::GpuModel;
+use crate::mig::profile::profiles_for;
 use crate::simgpu::energy::EnergyModel;
-use crate::simgpu::perfmodel::PerfModel;
+use crate::simgpu::perfmodel::{PerfModel, StepEstimate};
 use crate::simgpu::resource::ExecResource;
 use crate::workload::spec::WorkloadSpec;
 
@@ -72,6 +73,78 @@ pub struct Plan {
     pub assignments: Vec<Assignment>,
     /// Objective score (higher is better; energy objective is negated).
     pub score: f64,
+}
+
+/// A workload with an observed or forecast demand rate — the online
+/// orchestrator's planning input. SLO services carry `demand_rps`
+/// (requests/s); best-effort training jobs carry neither an SLO nor a
+/// demand and are valued by raw throughput.
+#[derive(Debug, Clone)]
+pub struct DemandWorkload {
+    /// The workload.
+    pub spec: WorkloadSpec,
+    /// Per-request latency budget, ms (None for best-effort jobs).
+    pub slo_ms: Option<f64>,
+    /// Demand rate to size for, requests/s (None for best-effort jobs).
+    pub demand_rps: Option<f64>,
+}
+
+impl DemandWorkload {
+    /// Latency-bound service with a demand rate.
+    pub fn service(spec: WorkloadSpec, slo_ms: f64, demand_rps: f64) -> Self {
+        DemandWorkload { spec, slo_ms: Some(slo_ms), demand_rps: Some(demand_rps) }
+    }
+
+    /// Best-effort workload (training): no SLO, no demand cap.
+    pub fn training(spec: WorkloadSpec) -> Self {
+        DemandWorkload { spec, slo_ms: None, demand_rps: None }
+    }
+}
+
+/// One workload → instance decision in a demand-aware plan.
+#[derive(Debug, Clone)]
+pub struct RateAssignment {
+    /// Index into the submitted workload list.
+    pub workload: usize,
+    /// Index into the plan layout's placements.
+    pub instance: usize,
+    /// GI profile name of that instance.
+    pub profile: &'static str,
+    /// Isolated per-request/step latency, ms.
+    pub service_ms: f64,
+    /// Predicted sojourn including M/D/1 queueing at the demand rate, ms.
+    pub latency_ms: f64,
+    /// Predicted utilization ρ = demand × service time (1.0 for
+    /// best-effort jobs, which run back-to-back).
+    pub utilization: f64,
+    /// Samples/s credited to the plan score (demand-capped goodput for
+    /// services, raw throughput for best-effort jobs).
+    pub value: f64,
+}
+
+/// A demand-aware plan over a concrete layout (with placements, so the
+/// orchestrator can validate it and diff instance churn against the
+/// previous layout).
+#[derive(Debug, Clone)]
+pub struct RatePlan {
+    /// Chosen layout.
+    pub layout: Layout,
+    /// Workload → instance assignments.
+    pub assignments: Vec<RateAssignment>,
+    /// Summed assignment value (samples/s).
+    pub score: f64,
+}
+
+impl RatePlan {
+    /// Profile names in offset order.
+    pub fn profile_names(&self) -> Vec<&'static str> {
+        self.layout.profile_names()
+    }
+
+    /// Instance index assigned to `workload`, if any.
+    pub fn instance_of(&self, workload: usize) -> Option<usize> {
+        self.assignments.iter().find(|a| a.workload == workload).map(|a| a.instance)
+    }
 }
 
 /// The optimizer.
@@ -182,6 +255,203 @@ impl Scheduler {
         match objective {
             Objective::MaxThroughput => a.goodput,
             Objective::MinEnergy => -a.power_w,
+        }
+    }
+
+    /// Queueing-aware candidate for one demand workload on one instance:
+    /// `None` when the workload does not fit (OOM) or — for SLO services —
+    /// when the instance cannot sustain `demand_rps` within the SLO.
+    ///
+    /// Feasibility uses an M/D/1 sojourn estimate: utilization
+    /// `ρ = demand × service_time` must stay at or below `rho_max`, and
+    /// the predicted latency `service × (1 + ρ / (2(1 − ρ)))` must stay
+    /// within the SLO. The assignment's value is demand-capped goodput
+    /// (samples/s) for services and raw throughput for best-effort jobs.
+    fn rate_candidate(
+        &self,
+        wi: usize,
+        w: &DemandWorkload,
+        ri: usize,
+        res: &ExecResource,
+        profile: &'static str,
+        rho_max: f64,
+    ) -> Option<RateAssignment> {
+        let est = self.perf.step(res, &w.spec.step_cost()).ok()?;
+        Self::rate_candidate_from_est(wi, w, ri, profile, est, rho_max)
+    }
+
+    fn rate_candidate_from_est(
+        wi: usize,
+        w: &DemandWorkload,
+        ri: usize,
+        profile: &'static str,
+        est: StepEstimate,
+        rho_max: f64,
+    ) -> Option<RateAssignment> {
+        let service_ms = est.seconds * 1e3;
+        match w.slo_ms {
+            Some(slo) => {
+                let demand = w.demand_rps.unwrap_or(0.0).max(0.0);
+                let rho = demand * est.seconds;
+                if rho > rho_max {
+                    return None;
+                }
+                let latency_ms = service_ms * (1.0 + rho / (2.0 * (1.0 - rho)));
+                if latency_ms > slo {
+                    return None;
+                }
+                Some(RateAssignment {
+                    workload: wi,
+                    instance: ri,
+                    profile,
+                    service_ms,
+                    latency_ms,
+                    utilization: rho,
+                    // rho <= rho_max already caps demand at the instance's
+                    // sustainable rate, so the full demand is creditable.
+                    value: demand * w.spec.batch as f64,
+                })
+            }
+            None => Some(RateAssignment {
+                workload: wi,
+                instance: ri,
+                profile,
+                service_ms,
+                latency_ms: service_ms,
+                utilization: 1.0, // best-effort jobs run back-to-back
+                value: w.spec.batch as f64 / est.seconds,
+            }),
+        }
+    }
+
+    /// Find the best layout + assignment for demand-rated workloads —
+    /// the online orchestrator's planning primitive (MISO-style: candidate
+    /// layouts come from [`maximal_layouts`], each scored with the
+    /// roofline performance model under the supplied demand rates).
+    ///
+    /// Returns `None` when no maximal layout can host every workload
+    /// within memory, SLO and the `rho_max` utilization bound.
+    pub fn plan_for_demand(
+        &self,
+        workloads: &[DemandWorkload],
+        rho_max: f64,
+    ) -> Option<RatePlan> {
+        if workloads.is_empty() || !(0.0..1.0).contains(&rho_max) || rho_max <= 0.0 {
+            return None;
+        }
+        // Memoize the roofline estimate per (workload, GI profile): it
+        // depends only on the profile, not on where the instance sits in a
+        // layout, and the online policies re-run this whole search every
+        // observation window.
+        let profiles = profiles_for(self.gpu);
+        let est_memo: Vec<Vec<Option<StepEstimate>>> = workloads
+            .iter()
+            .map(|w| {
+                let cost = w.spec.step_cost();
+                profiles
+                    .iter()
+                    .map(|p| self.perf.step(&ExecResource::from_gi(self.gpu, p), &cost).ok())
+                    .collect()
+            })
+            .collect();
+        let profile_index = |name: &'static str| {
+            profiles.iter().position(|p| p.name == name).expect("profile from this GPU's table")
+        };
+        let mut best: Option<RatePlan> = None;
+        for layout in maximal_layouts(self.gpu) {
+            if layout.len() < workloads.len() {
+                continue;
+            }
+            let candidates: Vec<Vec<Option<RateAssignment>>> = workloads
+                .iter()
+                .enumerate()
+                .map(|(wi, w)| {
+                    layout
+                        .placements
+                        .iter()
+                        .enumerate()
+                        .map(|(ri, pl)| {
+                            let est = est_memo[wi][profile_index(pl.profile.name)]?;
+                            Self::rate_candidate_from_est(wi, w, ri, pl.profile.name, est, rho_max)
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut used = vec![false; layout.len()];
+            let mut chosen: Vec<RateAssignment> = Vec::new();
+            let mut found: Option<(f64, Vec<RateAssignment>)> = None;
+            Self::search_rate(&candidates, 0, &mut used, &mut chosen, &mut found);
+            if let Some((score, assignments)) = found {
+                let better = best.as_ref().map(|b| score > b.score).unwrap_or(true);
+                if better {
+                    best = Some(RatePlan { layout, assignments, score });
+                }
+            }
+        }
+        best
+    }
+
+    /// Re-score an existing plan's assignments under (new) demand rates.
+    ///
+    /// Returns `(score, feasible)`: `feasible` is false when some SLO
+    /// service no longer meets its latency/utilization bound on its
+    /// current instance — the orchestrator's repartition trigger. The
+    /// score stays finite in that case by crediting the instance's
+    /// sustainable goodput instead of the full demand.
+    pub fn evaluate_plan(
+        &self,
+        plan: &RatePlan,
+        workloads: &[DemandWorkload],
+        rho_max: f64,
+    ) -> (f64, bool) {
+        let mut score = 0.0;
+        let mut feasible = true;
+        for a in &plan.assignments {
+            let Some(w) = workloads.get(a.workload) else {
+                feasible = false;
+                continue;
+            };
+            let res = ExecResource::from_gi(self.gpu, plan.layout.placements[a.instance].profile);
+            match self.rate_candidate(a.workload, w, a.instance, &res, a.profile, rho_max) {
+                Some(c) => score += c.value,
+                None => {
+                    feasible = false;
+                    if let Ok(est) = self.perf.step(&res, &w.spec.step_cost()) {
+                        let capacity_rps = rho_max / est.seconds;
+                        let demand = w.demand_rps.unwrap_or(0.0).max(0.0);
+                        score += demand.min(capacity_rps) * w.spec.batch as f64;
+                    }
+                }
+            }
+        }
+        (score, feasible)
+    }
+
+    fn search_rate(
+        candidates: &[Vec<Option<RateAssignment>>],
+        w: usize,
+        used: &mut [bool],
+        chosen: &mut Vec<RateAssignment>,
+        best: &mut Option<(f64, Vec<RateAssignment>)>,
+    ) {
+        if w == candidates.len() {
+            let score: f64 = chosen.iter().map(|a| a.value).sum();
+            if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+                *best = Some((score, chosen.clone()));
+            }
+            return;
+        }
+        for (ri, cand) in candidates[w].iter().enumerate() {
+            if used[ri] {
+                continue;
+            }
+            if let Some(a) = cand {
+                used[ri] = true;
+                chosen.push(a.clone());
+                Self::search_rate(candidates, w + 1, used, chosen, best);
+                chosen.pop();
+                used[ri] = false;
+            }
         }
     }
 
@@ -298,6 +568,78 @@ mod tests {
     fn empty_workloads_rejected() {
         let sched = Scheduler::new(GpuModel::A30_24GB);
         assert!(sched.plan(&[], Objective::MaxThroughput).is_none());
+    }
+
+    fn demand_set(rate: f64) -> Vec<DemandWorkload> {
+        let bert = lookup("bert-base").unwrap();
+        vec![
+            DemandWorkload::training(WorkloadSpec::training(bert, 32, 128)),
+            DemandWorkload::service(WorkloadSpec::inference(bert, 8, 128), 40.0, rate),
+            DemandWorkload::service(WorkloadSpec::inference(bert, 8, 128), 40.0, rate),
+        ]
+    }
+
+    #[test]
+    fn demand_plan_gives_training_the_big_slice_at_low_demand() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let plan = sched.plan_for_demand(&demand_set(10.0), 0.75).expect("feasible");
+        assert_eq!(plan.assignments.len(), 3);
+        let train_inst = plan.instance_of(0).unwrap();
+        let train_slices = plan.layout.placements[train_inst].profile.compute_slices;
+        for a in &plan.assignments {
+            let slices = plan.layout.placements[a.instance].profile.compute_slices;
+            assert!(train_slices >= slices, "training must own the biggest slice: {plan:?}");
+        }
+        for a in plan.assignments.iter().filter(|a| a.workload > 0) {
+            assert!(a.latency_ms <= 40.0, "SLO respected: {a:?}");
+            assert!(a.utilization <= 0.75);
+        }
+    }
+
+    #[test]
+    fn demand_plan_upsizes_services_under_load() {
+        // At high demand the small slice can no longer sustain the rate:
+        // every service must land on a bigger instance, and training (the
+        // only best-effort job) is the one that shrinks.
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let calm = sched.plan_for_demand(&demand_set(10.0), 0.75).unwrap();
+        let peak = sched.plan_for_demand(&demand_set(60.0), 0.75).unwrap();
+        assert!(peak.layout != calm.layout, "peak demand must force a different layout");
+        let min_service_slices = |p: &RatePlan| {
+            p.assignments
+                .iter()
+                .filter(|a| a.workload > 0)
+                .map(|a| p.layout.placements[a.instance].profile.compute_slices)
+                .min()
+                .unwrap()
+        };
+        assert!(min_service_slices(&peak) > min_service_slices(&calm));
+        let train_slices = |p: &RatePlan| {
+            p.layout.placements[p.instance_of(0).unwrap()].profile.compute_slices
+        };
+        assert!(train_slices(&peak) < train_slices(&calm));
+    }
+
+    #[test]
+    fn demand_plan_infeasible_when_rate_exceeds_any_instance() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        assert!(sched.plan_for_demand(&demand_set(100_000.0), 0.75).is_none());
+        assert!(sched.plan_for_demand(&[], 0.75).is_none());
+        assert!(sched.plan_for_demand(&demand_set(10.0), 0.0).is_none(), "degenerate rho_max");
+        assert!(sched.plan_for_demand(&demand_set(10.0), 1.5).is_none(), "rho_max must be < 1");
+    }
+
+    #[test]
+    fn evaluate_plan_flags_overload_without_changing_layout() {
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        let calm_ws = demand_set(10.0);
+        let plan = sched.plan_for_demand(&calm_ws, 0.75).unwrap();
+        let (calm_score, calm_ok) = sched.evaluate_plan(&plan, &calm_ws, 0.75);
+        assert!(calm_ok, "plan must be feasible at the demand it was built for");
+        assert!((calm_score - plan.score).abs() < 1e-9, "evaluate matches plan score");
+        let (peak_score, peak_ok) = sched.evaluate_plan(&plan, &demand_set(60.0), 0.75);
+        assert!(!peak_ok, "calm layout must be flagged infeasible at peak demand");
+        assert!(peak_score.is_finite());
     }
 
     #[test]

@@ -3,10 +3,43 @@
 //! The appendix experiments (Figs 10–11) "send asynchronous requests to
 //! each server simultaneously with different request workloads (i.e.,
 //! request arrival rate)". This module generates those streams: Poisson
-//! (exponential gaps), uniform (fixed gaps) and bursty (Markov-modulated
-//! on/off) arrivals, all on the deterministic PRNG.
+//! (exponential gaps), uniform (fixed gaps), bursty (Markov-modulated
+//! on/off) and diurnal (sinusoidally rate-modulated, for the online
+//! orchestrator) arrivals, all on the deterministic PRNG. It also holds
+//! the short-horizon [`RateForecaster`] the predictive repartitioning
+//! policy drives proactive resizes with.
 
 use crate::util::prng::Prng;
+
+/// Why an arrival process could not be constructed: a rate or dwell
+/// parameter that would produce NaN/degenerate inter-arrival times (and
+/// choke any downstream rate estimator) is rejected up front.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalError {
+    /// Parameter at fault (e.g. `"poisson rate"`).
+    pub param: &'static str,
+    /// Offending value.
+    pub value: f64,
+    /// What the parameter must satisfy.
+    pub requirement: &'static str,
+}
+
+impl std::fmt::Display for ArrivalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid {} {}: {}", self.param, self.value, self.requirement)
+    }
+}
+
+impl std::error::Error for ArrivalError {}
+
+/// Require a strictly positive, finite parameter.
+fn positive_finite(param: &'static str, value: f64) -> Result<(), ArrivalError> {
+    if value.is_finite() && value > 0.0 {
+        Ok(())
+    } else {
+        Err(ArrivalError { param, value, requirement: "must be positive and finite" })
+    }
+}
 
 /// An arrival process that yields inter-arrival gaps (seconds).
 pub trait Arrival {
@@ -24,10 +57,19 @@ pub struct PoissonArrival {
 }
 
 impl PoissonArrival {
+    /// Poisson process with `rate` requests/second; rejects non-positive
+    /// or non-finite rates.
+    pub fn try_new(rate: f64, seed: u64) -> Result<Self, ArrivalError> {
+        positive_finite("poisson rate", rate)?;
+        Ok(PoissonArrival { rate, rng: Prng::new(seed) })
+    }
+
     /// Poisson process with `rate` requests/second.
+    ///
+    /// # Panics
+    /// On a non-positive or non-finite rate (see [`PoissonArrival::try_new`]).
     pub fn new(rate: f64, seed: u64) -> Self {
-        assert!(rate > 0.0);
-        PoissonArrival { rate, rng: Prng::new(seed) }
+        Self::try_new(rate, seed).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -47,10 +89,19 @@ pub struct UniformArrival {
 }
 
 impl UniformArrival {
+    /// Uniform arrivals at `rate` requests/second; rejects non-positive
+    /// or non-finite rates.
+    pub fn try_new(rate: f64) -> Result<Self, ArrivalError> {
+        positive_finite("uniform rate", rate)?;
+        Ok(UniformArrival { gap: 1.0 / rate })
+    }
+
     /// Uniform arrivals at `rate` requests/second.
+    ///
+    /// # Panics
+    /// On a non-positive or non-finite rate (see [`UniformArrival::try_new`]).
     pub fn new(rate: f64) -> Self {
-        assert!(rate > 0.0);
-        UniformArrival { gap: 1.0 / rate }
+        Self::try_new(rate).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -78,19 +129,42 @@ pub struct BurstyArrival {
 
 impl BurstyArrival {
     /// Bursty process alternating between `high_rate` and `low_rate`
-    /// (requests/s), with exponential state dwell of mean `mean_dwell_s`.
-    pub fn new(high_rate: f64, low_rate: f64, mean_dwell_s: f64, seed: u64) -> Self {
-        assert!(high_rate > low_rate && low_rate > 0.0 && mean_dwell_s > 0.0);
+    /// (requests/s), with exponential state dwell of mean `mean_dwell_s`;
+    /// rejects non-positive / non-finite rates, `high_rate <= low_rate`,
+    /// and `mean_dwell_s <= 0`.
+    pub fn try_new(
+        high_rate: f64,
+        low_rate: f64,
+        mean_dwell_s: f64,
+        seed: u64,
+    ) -> Result<Self, ArrivalError> {
+        positive_finite("bursty low_rate", low_rate)?;
+        if !high_rate.is_finite() || high_rate <= low_rate {
+            return Err(ArrivalError {
+                param: "bursty high_rate",
+                value: high_rate,
+                requirement: "must be finite and exceed low_rate",
+            });
+        }
+        positive_finite("bursty mean_dwell_s", mean_dwell_s)?;
         let mut rng = Prng::new(seed);
         let dwell = rng.exponential(1.0 / mean_dwell_s);
-        BurstyArrival {
+        Ok(BurstyArrival {
             high_rate,
             low_rate,
             mean_dwell_s,
             in_burst: true,
             state_left_s: dwell,
             rng,
-        }
+        })
+    }
+
+    /// Bursty process alternating between `high_rate` and `low_rate`.
+    ///
+    /// # Panics
+    /// On invalid parameters (see [`BurstyArrival::try_new`]).
+    pub fn new(high_rate: f64, low_rate: f64, mean_dwell_s: f64, seed: u64) -> Self {
+        Self::try_new(high_rate, low_rate, mean_dwell_s, seed).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -108,6 +182,207 @@ impl Arrival for BurstyArrival {
     fn rate(&self) -> f64 {
         // Long-run average with symmetric dwell times.
         (self.high_rate + self.low_rate) / 2.0
+    }
+}
+
+/// Diurnal non-homogeneous Poisson process: the instantaneous rate follows
+/// a sinusoid between `base_rate` (at t = 0 and every full period) and
+/// `peak_rate` (at half period), generated by thinning against the peak
+/// rate. This is the time-varying load the online MIG orchestrator
+/// repartitions under: calm troughs, a ramp, a peak that overloads a
+/// statically sized layout.
+#[derive(Debug)]
+pub struct DiurnalArrival {
+    base_rate: f64,
+    peak_rate: f64,
+    period_s: f64,
+    t: f64,
+    rng: Prng,
+}
+
+impl DiurnalArrival {
+    /// Diurnal process cycling between `base_rate` and `peak_rate`
+    /// (requests/s) with period `period_s`; rejects non-positive /
+    /// non-finite parameters and `peak_rate < base_rate`.
+    pub fn try_new(
+        base_rate: f64,
+        peak_rate: f64,
+        period_s: f64,
+        seed: u64,
+    ) -> Result<Self, ArrivalError> {
+        positive_finite("diurnal base_rate", base_rate)?;
+        if !peak_rate.is_finite() || peak_rate < base_rate {
+            return Err(ArrivalError {
+                param: "diurnal peak_rate",
+                value: peak_rate,
+                requirement: "must be finite and at least base_rate",
+            });
+        }
+        positive_finite("diurnal period_s", period_s)?;
+        Ok(DiurnalArrival { base_rate, peak_rate, period_s, t: 0.0, rng: Prng::new(seed) })
+    }
+
+    /// Diurnal process cycling between `base_rate` and `peak_rate`.
+    ///
+    /// # Panics
+    /// On invalid parameters (see [`DiurnalArrival::try_new`]).
+    pub fn new(base_rate: f64, peak_rate: f64, period_s: f64, seed: u64) -> Self {
+        Self::try_new(base_rate, peak_rate, period_s, seed).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Instantaneous arrival rate at absolute time `t` (requests/s).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mid = (self.base_rate + self.peak_rate) / 2.0;
+        let amp = (self.peak_rate - self.base_rate) / 2.0;
+        let phase = 2.0 * std::f64::consts::PI * t / self.period_s - std::f64::consts::FRAC_PI_2;
+        mid + amp * phase.sin()
+    }
+}
+
+impl Arrival for DiurnalArrival {
+    fn next_gap(&mut self) -> f64 {
+        // Lewis–Shedler thinning: candidate gaps at the peak rate,
+        // accepted with probability rate(t)/peak. Acceptance probability
+        // is bounded below by base/peak > 0, so the loop terminates.
+        let start = self.t;
+        loop {
+            self.t += self.rng.exponential(self.peak_rate);
+            if self.rng.chance(self.rate_at(self.t) / self.peak_rate) {
+                return self.t - start;
+            }
+        }
+    }
+    fn rate(&self) -> f64 {
+        // Long-run average of the sinusoid.
+        (self.base_rate + self.peak_rate) / 2.0
+    }
+}
+
+/// Plain-data description of an arrival process, cloneable into sweep
+/// grids; [`ArrivalSpec::build`] materializes the seeded process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Homogeneous Poisson at `rate` requests/s.
+    Poisson {
+        /// Mean arrival rate, requests/s.
+        rate: f64,
+    },
+    /// Fixed-gap arrivals at `rate` requests/s.
+    Uniform {
+        /// Arrival rate, requests/s.
+        rate: f64,
+    },
+    /// Markov-modulated on/off bursts.
+    Bursty {
+        /// Burst-state rate, requests/s.
+        high_rate: f64,
+        /// Idle-state rate, requests/s.
+        low_rate: f64,
+        /// Mean exponential dwell per state, seconds.
+        mean_dwell_s: f64,
+    },
+    /// Sinusoidal diurnal load between `base_rate` and `peak_rate`.
+    Diurnal {
+        /// Trough rate, requests/s.
+        base_rate: f64,
+        /// Peak rate, requests/s.
+        peak_rate: f64,
+        /// Cycle length, seconds.
+        period_s: f64,
+    },
+}
+
+impl ArrivalSpec {
+    /// Validate the parameters without building the process.
+    pub fn validate(&self) -> Result<(), ArrivalError> {
+        self.build(0).map(|_| ())
+    }
+
+    /// Whole-trace mean rate (requests/s) — what a static, offline
+    /// optimizer sizes for.
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalSpec::Poisson { rate } | ArrivalSpec::Uniform { rate } => *rate,
+            ArrivalSpec::Bursty { high_rate, low_rate, .. } => (high_rate + low_rate) / 2.0,
+            ArrivalSpec::Diurnal { base_rate, peak_rate, .. } => (base_rate + peak_rate) / 2.0,
+        }
+    }
+
+    /// Build the seeded process.
+    pub fn build(&self, seed: u64) -> Result<Box<dyn Arrival>, ArrivalError> {
+        Ok(match self {
+            ArrivalSpec::Poisson { rate } => Box::new(PoissonArrival::try_new(*rate, seed)?),
+            ArrivalSpec::Uniform { rate } => Box::new(UniformArrival::try_new(*rate)?),
+            ArrivalSpec::Bursty { high_rate, low_rate, mean_dwell_s } => {
+                Box::new(BurstyArrival::try_new(*high_rate, *low_rate, *mean_dwell_s, seed)?)
+            }
+            ArrivalSpec::Diurnal { base_rate, peak_rate, period_s } => {
+                Box::new(DiurnalArrival::try_new(*base_rate, *peak_rate, *period_s, seed)?)
+            }
+        })
+    }
+}
+
+/// Short-horizon arrival-rate forecaster: Holt's linear (double)
+/// exponential smoothing over windowed rate observations. The predictive
+/// orchestration policy feeds it one rate estimate per observation window
+/// and asks for the rate `h` windows ahead, so it can resize *before* a
+/// diurnal ramp crests rather than after the SLO is already blown.
+#[derive(Debug, Clone)]
+pub struct RateForecaster {
+    alpha: f64,
+    beta: f64,
+    level: f64,
+    trend: f64,
+    observations: u64,
+}
+
+impl RateForecaster {
+    /// Forecaster with level gain `alpha` in `(0, 1]` and trend gain
+    /// `beta` in `[0, 1]`.
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        assert!(
+            alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+            "forecaster alpha {alpha} must be in (0, 1]"
+        );
+        assert!(
+            beta.is_finite() && (0.0..=1.0).contains(&beta),
+            "forecaster beta {beta} must be in [0, 1]"
+        );
+        RateForecaster { alpha, beta, level: 0.0, trend: 0.0, observations: 0 }
+    }
+
+    /// Feed one windowed rate observation (requests/s). Non-finite or
+    /// negative observations are ignored rather than poisoning the state.
+    pub fn observe(&mut self, rate: f64) {
+        if !rate.is_finite() || rate < 0.0 {
+            return;
+        }
+        if self.observations == 0 {
+            self.level = rate;
+            self.trend = 0.0;
+        } else {
+            let prev_level = self.level;
+            self.level = self.alpha * rate + (1.0 - self.alpha) * (self.level + self.trend);
+            self.trend = self.beta * (self.level - prev_level) + (1.0 - self.beta) * self.trend;
+        }
+        self.observations += 1;
+    }
+
+    /// Forecast the rate `horizon` observation windows ahead (clamped to
+    /// be non-negative). With no observations yet, returns 0.
+    pub fn forecast(&self, horizon: f64) -> f64 {
+        (self.level + self.trend * horizon).max(0.0)
+    }
+
+    /// Current smoothed level (requests/s).
+    pub fn level(&self) -> f64 {
+        self.level
+    }
+
+    /// Number of observations absorbed.
+    pub fn observations(&self) -> u64 {
+        self.observations
     }
 }
 
@@ -173,5 +448,95 @@ mod tests {
         let a = arrival_times(&mut PoissonArrival::new(5.0, 9), 100);
         let b = arrival_times(&mut PoissonArrival::new(5.0, 9), 100);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn constructors_reject_degenerate_rates() {
+        assert!(PoissonArrival::try_new(0.0, 1).is_err());
+        assert!(PoissonArrival::try_new(-3.0, 1).is_err());
+        assert!(PoissonArrival::try_new(f64::NAN, 1).is_err());
+        assert!(PoissonArrival::try_new(f64::INFINITY, 1).is_err());
+        assert!(UniformArrival::try_new(f64::NEG_INFINITY).is_err());
+        assert!(BurstyArrival::try_new(10.0, 0.0, 1.0, 1).is_err(), "low_rate must be positive");
+        assert!(BurstyArrival::try_new(1.0, 2.0, 1.0, 1).is_err(), "high must exceed low");
+        assert!(BurstyArrival::try_new(10.0, 1.0, 0.0, 1).is_err(), "mean_dwell_s <= 0");
+        assert!(BurstyArrival::try_new(10.0, 1.0, f64::NAN, 1).is_err());
+        assert!(DiurnalArrival::try_new(0.0, 10.0, 60.0, 1).is_err());
+        assert!(DiurnalArrival::try_new(10.0, 5.0, 60.0, 1).is_err(), "peak below base");
+        assert!(DiurnalArrival::try_new(5.0, 10.0, 0.0, 1).is_err(), "period must be positive");
+        let e = PoissonArrival::try_new(f64::NAN, 1).unwrap_err();
+        assert!(e.to_string().contains("poisson rate"), "{e}");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid poisson rate")]
+    fn panicking_constructor_names_the_parameter() {
+        let _ = PoissonArrival::new(0.0, 7);
+    }
+
+    #[test]
+    fn diurnal_rate_profile_and_mean() {
+        let d = DiurnalArrival::new(10.0, 90.0, 600.0, 5);
+        assert!((d.rate_at(0.0) - 10.0).abs() < 1e-9, "trough at t=0");
+        assert!((d.rate_at(300.0) - 90.0).abs() < 1e-9, "peak at half period");
+        assert!((d.rate_at(600.0) - 10.0).abs() < 1e-6, "back to trough");
+        assert_eq!(d.rate(), 50.0);
+        // Measured long-run rate over many periods approaches the mean.
+        let mut d = DiurnalArrival::new(10.0, 90.0, 10.0, 5);
+        let times = arrival_times(&mut d, 30_000);
+        let measured = times.len() as f64 / times.last().unwrap();
+        assert!((measured - 50.0).abs() / 50.0 < 0.05, "measured rate {measured}");
+        assert!(times.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn diurnal_is_deterministic_per_seed() {
+        let a = arrival_times(&mut DiurnalArrival::new(5.0, 50.0, 60.0, 11), 500);
+        let b = arrival_times(&mut DiurnalArrival::new(5.0, 50.0, 60.0, 11), 500);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spec_builds_and_reports_means() {
+        let specs = [
+            (ArrivalSpec::Poisson { rate: 8.0 }, 8.0),
+            (ArrivalSpec::Uniform { rate: 4.0 }, 4.0),
+            (ArrivalSpec::Bursty { high_rate: 30.0, low_rate: 10.0, mean_dwell_s: 1.0 }, 20.0),
+            (ArrivalSpec::Diurnal { base_rate: 6.0, peak_rate: 60.0, period_s: 600.0 }, 33.0),
+        ];
+        for (spec, mean) in specs {
+            spec.validate().unwrap();
+            assert_eq!(spec.mean_rate(), mean, "{spec:?}");
+            let mut p = spec.build(3).unwrap();
+            assert!(p.next_gap() > 0.0);
+        }
+        assert!(ArrivalSpec::Poisson { rate: f64::NAN }.validate().is_err());
+        assert!(ArrivalSpec::Diurnal { base_rate: 1.0, peak_rate: 0.5, period_s: 60.0 }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn forecaster_tracks_constant_and_ramp() {
+        let mut f = RateForecaster::new(0.5, 0.3);
+        assert_eq!(f.forecast(2.0), 0.0, "no observations yet");
+        for _ in 0..30 {
+            f.observe(42.0);
+        }
+        assert!((f.level() - 42.0).abs() < 1e-6);
+        assert!((f.forecast(3.0) - 42.0).abs() < 1e-3, "constant series has no trend");
+        // Linear ramp: the forecast must lead the latest observation.
+        let mut f = RateForecaster::new(0.5, 0.3);
+        let mut last = 0.0;
+        for i in 0..60 {
+            last = 10.0 + 2.0 * i as f64;
+            f.observe(last);
+        }
+        assert!(f.forecast(2.0) > last, "forecast {} must lead ramp {last}", f.forecast(2.0));
+        assert_eq!(f.observations(), 60);
+        // Garbage observations are ignored.
+        f.observe(f64::NAN);
+        f.observe(-5.0);
+        assert_eq!(f.observations(), 60);
     }
 }

@@ -1,0 +1,230 @@
+//! Orchestrator-level properties.
+//!
+//! Three contracts from the orchestrator work: (a) every plan the
+//! exhaustive optimizer emits respects each workload's SLO, (b) every
+//! layout any repartitioning policy proposes passes the MIG placement
+//! rules, and (c) orchestrator sweeps are bitwise-deterministic at any
+//! worker count. Plus the headline benchmark claim: under a saturating
+//! diurnal peak the reactive policy beats the static whole-trace-average
+//! baseline.
+
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::placement::PlacementEngine;
+use migperf::models::zoo;
+use migperf::orchestrator::{
+    OrchestratorConfig, PolicyKind, ReconfigCost, ServiceConfig,
+};
+use migperf::prop_assert;
+use migperf::scheduler::{DemandWorkload, Objective, Scheduler, SloWorkload};
+use migperf::sweep::{self, SweepEngine};
+use migperf::util::proptest::{check_with, Config, Gen};
+use migperf::workload::arrival::ArrivalSpec;
+use migperf::workload::spec::WorkloadSpec;
+
+fn random_gpu(g: &mut Gen) -> GpuModel {
+    *g.pick(&[GpuModel::A100_80GB, GpuModel::A30_24GB])
+}
+
+fn random_model(g: &mut Gen) -> &'static migperf::models::zoo::ModelDesc {
+    let names = ["resnet18", "resnet50", "distilbert", "bert-base"];
+    zoo::lookup(g.pick(&names)).unwrap()
+}
+
+/// (a) Every optimizer plan honours each workload's SLO.
+#[test]
+fn prop_optimizer_plans_respect_slos() {
+    check_with(Config { cases: 60, ..Default::default() }, |g: &mut Gen| {
+        let gpu = random_gpu(g);
+        let sched = Scheduler::new(gpu);
+        let mut ws: Vec<SloWorkload> = Vec::new();
+        if g.bool() {
+            let batch = 1 << g.below(6);
+            ws.push(SloWorkload::best_effort(WorkloadSpec::training(
+                random_model(g),
+                batch as u32,
+                128,
+            )));
+        }
+        let services = 1 + g.below(3) as usize;
+        for _ in 0..services {
+            let batch = 1 << g.below(5);
+            let slo_ms = g.f64(2.0, 120.0);
+            ws.push(SloWorkload::with_slo(
+                WorkloadSpec::inference(random_model(g), batch as u32, 128),
+                slo_ms,
+            ));
+        }
+        let objective = if g.bool() { Objective::MaxThroughput } else { Objective::MinEnergy };
+        if let Some(plan) = sched.plan(&ws, objective) {
+            for a in &plan.assignments {
+                if let Some(slo) = ws[a.workload].slo_ms {
+                    prop_assert!(
+                        a.latency_ms <= slo,
+                        "assignment blows its SLO: {a:?} vs slo {slo} (plan {:?})",
+                        plan.layout
+                    );
+                }
+            }
+            prop_assert!(
+                plan.assignments.len() == ws.len(),
+                "every workload must be placed: {} of {}",
+                plan.assignments.len(),
+                ws.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// (b-1) Every layout the demand planner (the core of every orchestrator
+/// policy) proposes passes the placement rules.
+#[test]
+fn prop_demand_plans_pass_placement_rules() {
+    check_with(Config { cases: 60, ..Default::default() }, |g: &mut Gen| {
+        let gpu = random_gpu(g);
+        let sched = Scheduler::new(gpu);
+        let engine = PlacementEngine::new(gpu);
+        let mut ws: Vec<DemandWorkload> = Vec::new();
+        if g.bool() {
+            ws.push(DemandWorkload::training(WorkloadSpec::training(
+                random_model(g),
+                16,
+                128,
+            )));
+        }
+        let services = 1 + g.below(3) as usize;
+        for _ in 0..services {
+            let batch = 1 << g.below(5);
+            ws.push(DemandWorkload::service(
+                WorkloadSpec::inference(random_model(g), batch as u32, 128),
+                g.f64(5.0, 150.0),
+                g.f64(0.0, 400.0),
+            ));
+        }
+        let rho_max = g.f64(0.3, 0.95);
+        if let Some(plan) = sched.plan_for_demand(&ws, rho_max) {
+            if let Err(e) = engine.check_layout(&plan.layout.placements) {
+                return Err(format!("invalid layout {:?}: {e}", plan.layout.profile_names()));
+            }
+            // Assignments are injective over instances.
+            let mut seen = vec![false; plan.layout.len()];
+            for a in &plan.assignments {
+                prop_assert!(!seen[a.instance], "instance double-booked: {:?}", plan.assignments);
+                seen[a.instance] = true;
+            }
+        }
+        Ok(())
+    });
+}
+
+fn diurnal_scenario(policy: PolicyKind, peak_rate: f64, seed: u64) -> OrchestratorConfig {
+    let bert = zoo::lookup("bert-base").unwrap();
+    let service = ServiceConfig {
+        spec: WorkloadSpec::inference(bert, 8, 128),
+        slo_ms: 40.0,
+        arrival: ArrivalSpec::Diurnal { base_rate: 6.0, peak_rate, period_s: 240.0 },
+    };
+    OrchestratorConfig {
+        gpu: GpuModel::A100_80GB,
+        train: Some(WorkloadSpec::training(bert, 32, 128)),
+        services: vec![service.clone(), service],
+        policy,
+        cost: ReconfigCost::default(),
+        duration_s: 480.0,
+        window_s: 10.0,
+        rho_max: 0.75,
+        seed,
+    }
+}
+
+fn all_policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::parse("static").unwrap(),
+        PolicyKind::parse("reactive").unwrap(),
+        PolicyKind::parse("predictive").unwrap(),
+    ]
+}
+
+/// (b-2) End to end: every layout adopted by any policy over a full
+/// diurnal run passes the placement rules.
+#[test]
+fn orchestrator_adopted_layouts_are_valid_for_every_policy() {
+    let engine = PlacementEngine::new(GpuModel::A100_80GB);
+    for policy in all_policies() {
+        let out = diurnal_scenario(policy.clone(), 60.0, 7).run().unwrap();
+        assert!(!out.layouts.is_empty());
+        for layout in &out.layouts {
+            engine.check_layout(&layout.placements).unwrap_or_else(|e| {
+                panic!("{}: invalid adopted layout {:?}: {e}", policy.name(), layout.profile_names())
+            });
+        }
+    }
+}
+
+/// (c) Orchestrator sweeps are bitwise-deterministic at 1/2/4/16 workers.
+#[test]
+fn orchestrator_sweep_bitwise_deterministic_across_worker_counts() {
+    let mut grid: Vec<OrchestratorConfig> = Vec::new();
+    for policy in all_policies() {
+        for seed in [2024u64, 2025u64] {
+            grid.push(diurnal_scenario(policy.clone(), 60.0, seed));
+        }
+    }
+    let baseline = sweep::run_orchestrator(&SweepEngine::new(1), &grid).unwrap();
+    for workers in [2usize, 4, 16] {
+        let outs = sweep::run_orchestrator(&SweepEngine::new(workers), &grid).unwrap();
+        assert_eq!(outs.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&outs) {
+            assert_eq!(a.policy, b.policy, "workers={workers}");
+            assert_eq!(a.arrived, b.arrived, "workers={workers}");
+            assert_eq!(a.completed, b.completed, "workers={workers}");
+            assert_eq!(a.train_steps, b.train_steps, "workers={workers}");
+            assert_eq!(a.reconfigurations, b.reconfigurations, "workers={workers}");
+            assert_eq!(
+                a.goodput_rps.to_bits(),
+                b.goodput_rps.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(
+                a.slo_violation_frac.to_bits(),
+                b.slo_violation_frac.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(
+                a.pooled.p99_latency_ms.to_bits(),
+                b.pooled.p99_latency_ms.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(
+                a.reconfig_downtime_s.to_bits(),
+                b.reconfig_downtime_s.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(a.decisions.len(), b.decisions.len(), "workers={workers}");
+            for (da, db) in a.decisions.iter().zip(&b.decisions) {
+                assert_eq!(da.t.to_bits(), db.t.to_bits(), "workers={workers}");
+                assert_eq!(da.downtime_s.to_bits(), db.downtime_s.to_bits());
+                assert_eq!(da.to, db.to);
+            }
+        }
+    }
+}
+
+/// The acceptance comparison: at a saturating diurnal peak the reactive
+/// policy must achieve strictly higher goodput or a strictly lower
+/// SLO-violation fraction than the static whole-trace-average baseline.
+#[test]
+fn reactive_beats_static_baseline_at_saturating_peak() {
+    let st = diurnal_scenario(PolicyKind::parse("static").unwrap(), 60.0, 2024).run().unwrap();
+    let re = diurnal_scenario(PolicyKind::parse("reactive").unwrap(), 60.0, 2024).run().unwrap();
+    assert_eq!(st.reconfigurations, 0);
+    assert!(re.reconfigurations > 0, "the diurnal peak must force repartitions");
+    assert!(
+        re.goodput_rps > st.goodput_rps || re.slo_violation_frac < st.slo_violation_frac,
+        "reactive (goodput {:.1} rps, viol {:.3}) must beat static (goodput {:.1} rps, viol {:.3})",
+        re.goodput_rps,
+        re.slo_violation_frac,
+        st.goodput_rps,
+        st.slo_violation_frac
+    );
+}
