@@ -40,10 +40,12 @@ fn static_plan_train_tput(train_profile: &str, infer_profile: &str) -> Option<f6
 fn main() {
     banner("Ablation", "partition optimizer vs static layouts (train + 2×serve on A100)");
     let sched = Scheduler::new(GpuModel::A100_80GB);
+    let bert = zoo::lookup("bert-base").unwrap();
+    let resnet = zoo::lookup("resnet50").unwrap();
     let workloads = [
-        SloWorkload::best_effort(WorkloadSpec::training(zoo::lookup("bert-base").unwrap(), 32, 128)),
-        SloWorkload::with_slo(WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 4, 224), SLO_MS),
-        SloWorkload::with_slo(WorkloadSpec::inference(zoo::lookup("resnet50").unwrap(), 4, 224), SLO_MS),
+        SloWorkload::best_effort(WorkloadSpec::training(bert, 32, 128)),
+        SloWorkload::with_slo(WorkloadSpec::inference(resnet, 4, 224), SLO_MS),
+        SloWorkload::with_slo(WorkloadSpec::inference(resnet, 4, 224), SLO_MS),
     ];
     let plan = sched.plan(&workloads, Objective::MaxThroughput).expect("feasible plan");
     let train_tput_opt =

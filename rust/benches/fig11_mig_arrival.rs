@@ -93,8 +93,8 @@ fn main() {
     let mps_spread = mps_out.p99_latency_ms / mps_out.avg_latency_ms;
     shape_check(
         &format!(
-            "near saturation MIG tail spread (p99/avg {:.2}) below MPS spread ({:.2}) (Figs 10 vs 11)",
-            mig_spread, mps_spread
+            "near saturation MIG tail spread (p99/avg {mig_spread:.2}) below MPS spread \
+             ({mps_spread:.2}) (Figs 10 vs 11)"
         ),
         mig_spread < mps_spread,
     );

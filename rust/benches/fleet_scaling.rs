@@ -1,0 +1,325 @@
+//! Fleet-scaling benchmark.
+//!
+//! Lifts the §Orchestrator scenario to a multi-GPU fleet and measures the
+//! two fleet-level claims:
+//!
+//! 1. **scaling** — goodput grows with fleet size (1 → 16 GPUs, each
+//!    carrying the same per-GPU diurnal load) while the pooled p99 stays
+//!    bounded;
+//! 2. **rolling vs in-place** — executing a repartition by migrating the
+//!    chosen GPU's traffic to siblings (rolling) strictly lowers the
+//!    SLO-violation fraction at the diurnal peak compared to letting the
+//!    queued requests wait out the churn (in-place).
+//!
+//! The whole grid runs serial and parallel through the sweep engine and
+//! asserts bit-identical checksums (the determinism contract).
+//!
+//! Machine-readable output: writes `BENCH_fleet.json` (into
+//! `MIGPERF_BENCH_OUT` when set, else the working directory). Set
+//! `MIGPERF_PERF_SMOKE=1` to shrink the simulated horizon for CI.
+
+use std::time::Instant;
+
+use migperf::cluster::{
+    FleetConfig, FleetOutcome, FleetPolicyKind, RepartitionMode, RequestClass, RouterKind,
+};
+use migperf::mig::gpu::GpuModel;
+use migperf::models::zoo;
+use migperf::orchestrator::ReconfigCost;
+use migperf::sweep::{self, SweepEngine};
+use migperf::util::json::Json;
+use migperf::util::stats;
+use migperf::workload::arrival::ArrivalSpec;
+use migperf::workload::spec::WorkloadSpec;
+
+#[allow(clippy::too_many_arguments)] // grid axes, not an API
+fn scenario(
+    n: usize,
+    policy: FleetPolicyKind,
+    router: RouterKind,
+    mode: RepartitionMode,
+    seed: u64,
+    duration_s: f64,
+    period_s: f64,
+    window_s: f64,
+) -> FleetConfig {
+    let bert = zoo::lookup("bert-base").unwrap();
+    // Per-GPU load matches the orchestrator bench (two bert-base services
+    // ramping 6 → 60 req/s each); fleet-wide streams scale with n so every
+    // fleet size is comparably loaded per GPU.
+    let class = RequestClass {
+        spec: WorkloadSpec::inference(bert, 8, 128),
+        slo_ms: 40.0,
+        arrival: ArrivalSpec::Diurnal {
+            base_rate: 6.0 * n as f64,
+            peak_rate: 60.0 * n as f64,
+            period_s,
+        },
+    };
+    FleetConfig {
+        gpus: vec![GpuModel::A100_80GB; n],
+        train: Some(WorkloadSpec::training(bert, 32, 128)),
+        classes: vec![class.clone(), class],
+        router,
+        policy,
+        mode,
+        cost: ReconfigCost::default(),
+        duration_s,
+        window_s,
+        rho_max: 0.75,
+        seed,
+    }
+}
+
+/// Checksum that any cross-worker nondeterminism would perturb.
+fn checksum(outs: &[FleetOutcome]) -> f64 {
+    outs.iter()
+        .map(|o| {
+            o.goodput_rps
+                + o.pooled.p99_latency_ms
+                + o.reconfig_downtime_s
+                + o.migrated_requests as f64
+        })
+        .sum()
+}
+
+fn main() {
+    let smoke = std::env::var_os("MIGPERF_PERF_SMOKE").is_some();
+    let (duration_s, period_s, window_s) = if smoke {
+        (360.0, 180.0, 10.0)
+    } else {
+        (600.0, 300.0, 10.0)
+    };
+    let sizes: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
+    let versus_size = if smoke { 2 } else { 4 };
+    let seeds = [2024u64, 2025u64];
+    println!(
+        "== fleet_scaling: multi-GPU goodput scaling + rolling vs in-place repartition{} ==\n",
+        if smoke { " (smoke mode)" } else { "" }
+    );
+
+    let reactive = FleetPolicyKind::parse("reactive").unwrap();
+    // One combined grid: scaling rows (reactive, least-loaded, rolling,
+    // size sweep) then the rolling-vs-in-place pair at `versus_size`.
+    let mut grid: Vec<FleetConfig> = Vec::new();
+    for &n in sizes {
+        for &seed in &seeds {
+            grid.push(scenario(
+                n,
+                reactive.clone(),
+                RouterKind::LeastLoaded,
+                RepartitionMode::Rolling,
+                seed,
+                duration_s,
+                period_s,
+                window_s,
+            ));
+        }
+    }
+    let versus_start = grid.len();
+    for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+        for &seed in &seeds {
+            grid.push(scenario(
+                versus_size,
+                reactive.clone(),
+                RouterKind::LeastLoaded,
+                mode,
+                seed,
+                duration_s,
+                period_s,
+                window_s,
+            ));
+        }
+    }
+
+    let serial = SweepEngine::serial();
+    let parallel = SweepEngine::from_env();
+    let started = Instant::now();
+    let outs_serial = sweep::run_fleet(&serial, &grid).expect("fleet grid");
+    let serial_s = started.elapsed().as_secs_f64();
+    let started = Instant::now();
+    let outs = sweep::run_fleet(&parallel, &grid).expect("fleet grid");
+    let parallel_s = started.elapsed().as_secs_f64();
+    assert_eq!(
+        checksum(&outs_serial).to_bits(),
+        checksum(&outs).to_bits(),
+        "fleet sweeps must be bit-identical at any worker count"
+    );
+    let speedup = serial_s / parallel_s.max(1e-12);
+
+    println!(
+        "{:<9} {:>5} {:>5} {:>5} {:>12} {:>8} {:>9} {:>7} {:>10} {:>9}",
+        "mode", "gpus", "seed", "reconf", "goodput_rps", "viol_%", "p99_ms", "migr",
+        "downtime_s", "stranded"
+    );
+    for (cfg, out) in grid.iter().zip(&outs) {
+        println!(
+            "{:<9} {:>5} {:>5} {:>5} {:>12.1} {:>8.2} {:>9.1} {:>7} {:>10.1} {:>9}",
+            out.mode.name(),
+            out.fleet_size,
+            cfg.seed,
+            out.reconfigurations,
+            out.goodput_rps,
+            out.slo_violation_frac * 100.0,
+            out.pooled.p99_latency_ms,
+            out.migrated_requests,
+            out.reconfig_downtime_s,
+            out.stranded_requests
+        );
+    }
+    println!(
+        "\n{} runs: serial {:.2}s, {} workers {:.2}s ({:.2}x speedup)",
+        grid.len(),
+        serial_s,
+        parallel.workers(),
+        parallel_s,
+        speedup
+    );
+
+    // Scaling claim: mean goodput per fleet size, over seeds.
+    let scaling_rows: Vec<(usize, f64, f64)> = sizes
+        .iter()
+        .map(|&n| {
+            let vals: Vec<&FleetOutcome> = grid[..versus_start]
+                .iter()
+                .zip(&outs[..versus_start])
+                .filter(|(cfg, _)| cfg.gpus.len() == n)
+                .map(|(_, o)| o)
+                .collect();
+            let goodput = stats::mean(&vals.iter().map(|o| o.goodput_rps).collect::<Vec<_>>());
+            let p99 =
+                stats::mean(&vals.iter().map(|o| o.pooled.p99_latency_ms).collect::<Vec<_>>());
+            (n, goodput, p99)
+        })
+        .collect();
+    for (n, goodput, p99) in &scaling_rows {
+        println!("fleet size {n:>2}: goodput {goodput:.1} rps, p99 {p99:.1} ms");
+    }
+    let first = scaling_rows.first().expect("sizes non-empty");
+    let last = scaling_rows.last().expect("sizes non-empty");
+    assert!(
+        last.1 > first.1 * 1.5,
+        "goodput must scale with fleet size: {} GPUs {:.1} rps vs 1 GPU {:.1} rps",
+        last.0,
+        last.1,
+        first.1
+    );
+
+    // Rolling-vs-in-place claim at the diurnal peak.
+    let versus = &outs[versus_start..];
+    let versus_cfg = &grid[versus_start..];
+    let agg = |mode: RepartitionMode, f: &dyn Fn(&FleetOutcome) -> f64| {
+        let vals: Vec<f64> = versus_cfg
+            .iter()
+            .zip(versus)
+            .filter(|(cfg, _)| cfg.mode == mode)
+            .map(|(_, o)| f(o))
+            .collect();
+        stats::mean(&vals)
+    };
+    let rolling_viol = agg(RepartitionMode::Rolling, &|o| o.slo_violation_frac);
+    let inplace_viol = agg(RepartitionMode::InPlace, &|o| o.slo_violation_frac);
+    let rolling_goodput = agg(RepartitionMode::Rolling, &|o| o.goodput_rps);
+    let inplace_goodput = agg(RepartitionMode::InPlace, &|o| o.goodput_rps);
+    let rolling_downtime = agg(RepartitionMode::Rolling, &|o| o.reconfig_downtime_s);
+    let inplace_downtime = agg(RepartitionMode::InPlace, &|o| o.reconfig_downtime_s);
+    let rolling_reconf = agg(RepartitionMode::Rolling, &|o| o.reconfigurations as f64);
+    let inplace_reconf = agg(RepartitionMode::InPlace, &|o| o.reconfigurations as f64);
+    println!(
+        "\nfleet size {versus_size}: violations rolling {:.2}% vs in-place {:.2}%; \
+         goodput rolling {rolling_goodput:.1} vs in-place {inplace_goodput:.1} rps; \
+         downtime rolling {rolling_downtime:.1}s vs in-place {inplace_downtime:.1}s",
+        rolling_viol * 100.0,
+        inplace_viol * 100.0
+    );
+    assert!(
+        rolling_reconf >= 1.0 && inplace_reconf >= 1.0,
+        "the diurnal peak must force repartitions in both modes \
+         (rolling {rolling_reconf}, in-place {inplace_reconf})"
+    );
+    assert!(
+        rolling_viol < inplace_viol,
+        "rolling repartition must strictly lower the SLO-violation fraction at the peak \
+         (rolling {rolling_viol:.4} vs in-place {inplace_viol:.4})"
+    );
+    // Rolling mode must never route to a draining/reconfiguring GPU.
+    for (cfg, out) in grid.iter().zip(&outs) {
+        if cfg.mode == RepartitionMode::Rolling {
+            assert_eq!(
+                out.unavailable_routes, 0,
+                "rolling run routed to an unavailable GPU (n={})",
+                out.fleet_size
+            );
+        }
+    }
+
+    let rows: Vec<Json> = grid
+        .iter()
+        .zip(&outs)
+        .map(|(cfg, out)| {
+            Json::obj(vec![
+                ("mode", Json::Str(out.mode.name().to_string())),
+                ("policy", Json::Str(out.policy.to_string())),
+                ("router", Json::Str(out.router.to_string())),
+                ("fleet_size", Json::Num(out.fleet_size as f64)),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("arrived", Json::Num(out.arrived as f64)),
+                ("completed", Json::Num(out.completed as f64)),
+                ("goodput_rps", Json::Num(out.goodput_rps)),
+                ("slo_violation_frac", Json::Num(out.slo_violation_frac)),
+                ("p99_latency_ms", Json::Num(out.pooled.p99_latency_ms)),
+                ("train_samples_per_s", Json::Num(out.train_samples_per_s)),
+                ("reconfigurations", Json::Num(out.reconfigurations as f64)),
+                ("reconfig_downtime_s", Json::Num(out.reconfig_downtime_s)),
+                ("migrated_requests", Json::Num(out.migrated_requests as f64)),
+                ("stranded_requests", Json::Num(out.stranded_requests as f64)),
+                ("unavailable_routes", Json::Num(out.unavailable_routes as f64)),
+            ])
+        })
+        .collect();
+    let scaling_json: Vec<Json> = scaling_rows
+        .iter()
+        .map(|(n, goodput, p99)| {
+            Json::obj(vec![
+                ("fleet_size", Json::Num(*n as f64)),
+                ("goodput_rps", Json::Num(*goodput)),
+                ("p99_latency_ms", Json::Num(*p99)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("migperf-bench-fleet/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("duration_s", Json::Num(duration_s)),
+        ("period_s", Json::Num(period_s)),
+        ("window_s", Json::Num(window_s)),
+        ("workers", Json::Num(parallel.workers() as f64)),
+        ("serial_s", Json::Num(serial_s)),
+        ("parallel_s", Json::Num(parallel_s)),
+        ("speedup", Json::Num(speedup)),
+        ("scaling", Json::Arr(scaling_json)),
+        (
+            "rolling_vs_inplace",
+            Json::obj(vec![
+                ("fleet_size", Json::Num(versus_size as f64)),
+                ("rolling_violation_frac", Json::Num(rolling_viol)),
+                ("inplace_violation_frac", Json::Num(inplace_viol)),
+                ("rolling_goodput_rps", Json::Num(rolling_goodput)),
+                ("inplace_goodput_rps", Json::Num(inplace_goodput)),
+                ("rolling_downtime_s", Json::Num(rolling_downtime)),
+                ("inplace_downtime_s", Json::Num(inplace_downtime)),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out_dir = std::env::var_os("MIGPERF_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let _ = std::fs::create_dir_all(&out_dir);
+    let out_path = out_dir.join("BENCH_fleet.json");
+    match std::fs::write(&out_path, doc.to_pretty()) {
+        Ok(()) => println!("\nbench record written to {}", out_path.display()),
+        Err(e) => println!("\n(could not write {}: {e})", out_path.display()),
+    }
+    println!("done.");
+}

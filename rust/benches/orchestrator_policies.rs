@@ -62,8 +62,11 @@ fn checksum(outs: &[OrchestratorOutcome]) -> f64 {
 
 fn main() {
     let smoke = std::env::var_os("MIGPERF_PERF_SMOKE").is_some();
-    let (duration_s, period_s, window_s) =
-        if smoke { (360.0, 180.0, 10.0) } else { (1200.0, 600.0, 20.0) };
+    let (duration_s, period_s, window_s) = if smoke {
+        (360.0, 180.0, 10.0)
+    } else {
+        (1200.0, 600.0, 20.0)
+    };
     println!(
         "== orchestrator_policies: policy comparison under diurnal load{} ==\n",
         if smoke { " (smoke mode)" } else { "" }
@@ -105,7 +108,8 @@ fn main() {
 
     println!(
         "{:<11} {:>5} {:>5} {:>12} {:>8} {:>9} {:>10} {:>7} {:>10}",
-        "policy", "peak", "seed", "goodput_rps", "viol_%", "p99_ms", "train_sps", "reconf", "downtime_s"
+        "policy", "peak", "seed", "goodput_rps", "viol_%", "p99_ms", "train_sps", "reconf",
+        "downtime_s"
     );
     for (cfg, out) in grid.iter().zip(&outs) {
         let peak = match &cfg.services[0].arrival {
@@ -166,8 +170,8 @@ fn main() {
     );
     assert!(
         reactive_goodput > static_goodput || reactive_viol < static_viol,
-        "reactive must beat the static baseline at the saturating peak \
-         (goodput {reactive_goodput} vs {static_goodput}, violations {reactive_viol} vs {static_viol})"
+        "reactive must beat the static baseline at the saturating peak (goodput \
+         {reactive_goodput} vs {static_goodput}, violations {reactive_viol} vs {static_viol})"
     );
 
     let rows: Vec<Json> = grid

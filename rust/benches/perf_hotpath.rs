@@ -44,7 +44,13 @@ impl Recorder {
 
 /// Time `f` over `iters` iterations after `warmup` iterations; returns
 /// ns/op. A black-box consume of the result prevents dead-code deletion.
-fn bench<T>(rec: &mut Recorder, name: &str, warmup: u64, iters: u64, mut f: impl FnMut(u64) -> T) -> f64 {
+fn bench<T>(
+    rec: &mut Recorder,
+    name: &str,
+    warmup: u64,
+    iters: u64,
+    mut f: impl FnMut(u64) -> T,
+) -> f64 {
     let mut sink = 0u64;
     for i in 0..warmup {
         sink = sink.wrapping_add(consume(&f(i)));

@@ -17,7 +17,8 @@ use migperf::util::table::Table;
 fn main() {
     banner("Table 2", "Serving framework compatibility with MIG (2-GI A30)");
     let rows = run_serving_matrix();
-    let mut t = Table::new(&["Serving framework", "Version", "Serving on MIG 0", "Serving on MIG 1"]);
+    let mut t =
+        Table::new(&["Serving framework", "Version", "Serving on MIG 0", "Serving on MIG 1"]);
     for r in &rows {
         t.row(&[
             r.framework.to_string(),

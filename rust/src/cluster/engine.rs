@@ -1,0 +1,1193 @@
+//! The fleet simulation engine.
+//!
+//! Runs N MIG-partitioned GPUs inside one discrete-event simulation:
+//! fleet-wide request classes arrive on aggregate streams, a
+//! [`RoutePolicy`] dispatches each request to one GPU's replica, and a
+//! [`FleetPolicy`] decides per observation window *which GPU* to
+//! repartition. Two reconfiguration disciplines are modelled:
+//!
+//! * **rolling** — the chosen GPU stops taking traffic, its queued
+//!   requests migrate to sibling GPUs, and only in-flight work drains
+//!   before the instance churn; the fleet keeps serving while one member
+//!   reconfigures (zero-downtime from the requests' point of view);
+//! * **in-place** — the single-GPU discipline applied blindly at fleet
+//!   scale: the router keeps dispatching to the reconfiguring GPU and
+//!   every queued request waits out drain → churn → resume.
+//!
+//! The difference is the bench headline: at a diurnal peak, rolling
+//! repartition strictly lowers the SLO-violation fraction because the
+//! downtime is amortized across siblings instead of being paid by queued
+//! requests. Everything is seeded and iteration-order deterministic, so
+//! fleet runs are bit-identical at any sweep worker count.
+
+use std::collections::VecDeque;
+
+use crate::metrics::collector::{MetricsCollector, RunSummary};
+use crate::mig::enumerate::Layout;
+use crate::mig::gpu::GpuModel;
+use crate::mig::placement::PlacementEngine;
+use crate::orchestrator::{churn, ReconfigCost, ServiceObs};
+use crate::scheduler::{plan_fleet_for_demand, DemandWorkload, RatePlan, Scheduler};
+use crate::simgpu::desim::Des;
+use crate::simgpu::perfmodel::{PerfError, StepEstimate};
+use crate::simgpu::resource::ExecResource;
+use crate::util::prng::Prng;
+use crate::util::stats::percentile_sorted;
+use crate::workload::arrival::{Arrival, ArrivalError, ArrivalSpec};
+use crate::workload::spec::WorkloadSpec;
+
+use super::policy::{FleetCtx, FleetObs, FleetPolicyKind, GpuObs};
+use super::router::{RoutePolicy, RouterKind};
+
+/// One fleet-wide request class: a workload, its SLO, and the aggregate
+/// arrival stream the router spreads across the fleet.
+#[derive(Debug, Clone)]
+pub struct RequestClass {
+    /// The per-request workload.
+    pub spec: WorkloadSpec,
+    /// Latency SLO, milliseconds.
+    pub slo_ms: f64,
+    /// Fleet-wide arrival process driving the class.
+    pub arrival: ArrivalSpec,
+}
+
+/// How a GPU repartition is executed at fleet level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepartitionMode {
+    /// Drain one GPU while its traffic migrates to siblings.
+    Rolling,
+    /// Keep routing to the GPU; queued requests wait out the churn.
+    InPlace,
+}
+
+impl RepartitionMode {
+    /// Report name of the mode.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RepartitionMode::Rolling => "rolling",
+            RepartitionMode::InPlace => "in-place",
+        }
+    }
+
+    /// Parse a mode name.
+    pub fn parse(s: &str) -> Option<RepartitionMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "rolling" | "roll" => Some(RepartitionMode::Rolling),
+            "inplace" | "in-place" => Some(RepartitionMode::InPlace),
+            _ => None,
+        }
+    }
+}
+
+/// A complete fleet simulation (plain data: clone freely into sweep
+/// grids).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// The fleet, possibly heterogeneous, in fleet order.
+    pub gpus: Vec<GpuModel>,
+    /// Best-effort training job replicated onto every GPU, if any.
+    pub train: Option<WorkloadSpec>,
+    /// The request classes served fleet-wide.
+    pub classes: Vec<RequestClass>,
+    /// Request routing policy.
+    pub router: RouterKind,
+    /// Fleet repartitioning policy.
+    pub policy: FleetPolicyKind,
+    /// Reconfiguration discipline.
+    pub mode: RepartitionMode,
+    /// Reconfiguration cost model.
+    pub cost: ReconfigCost,
+    /// Simulated run length, seconds.
+    pub duration_s: f64,
+    /// Observation-window length (policy tick period), seconds.
+    pub window_s: f64,
+    /// Utilization bound the planner sizes replicas for (ρ_max).
+    pub rho_max: f64,
+    /// PRNG seed (class arrival streams derive per-class seeds from it).
+    pub seed: u64,
+}
+
+/// Why a fleet run failed.
+#[derive(Debug)]
+pub enum FleetError {
+    /// Configuration rejected before the simulation started.
+    Invalid(String),
+    /// No valid per-GPU layouts can host the workloads.
+    Infeasible(String),
+    /// An arrival process could not be constructed.
+    Arrival(ArrivalError),
+    /// A workload failed to fit its assigned instance.
+    Perf(PerfError),
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Invalid(m) => write!(f, "invalid fleet config: {m}"),
+            FleetError::Infeasible(m) => write!(f, "infeasible: {m}"),
+            FleetError::Arrival(e) => write!(f, "arrival process: {e}"),
+            FleetError::Perf(e) => write!(f, "performance model: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+impl From<ArrivalError> for FleetError {
+    fn from(e: ArrivalError) -> Self {
+        FleetError::Arrival(e)
+    }
+}
+
+impl From<PerfError> for FleetError {
+    fn from(e: PerfError) -> Self {
+        FleetError::Perf(e)
+    }
+}
+
+/// One fleet repartitioning event in the decision log.
+#[derive(Debug, Clone)]
+pub struct FleetDecision {
+    /// Time the policy decided to repartition (simulated seconds).
+    pub t: f64,
+    /// Fleet index of the repartitioned GPU.
+    pub gpu: usize,
+    /// Layout before the switch (`+`-joined profile names).
+    pub from: String,
+    /// Layout after the switch.
+    pub to: String,
+    /// Window observation that motivated the move.
+    pub reason: String,
+    /// Instances destroyed plus created by the switch.
+    pub churn: u32,
+    /// Seconds from decision to resume (drain + instance churn).
+    pub downtime_s: f64,
+    /// Queued requests migrated to sibling GPUs at drain start (rolling).
+    pub migrated: u64,
+}
+
+/// Aggregate result of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    /// Policy that produced the run.
+    pub policy: &'static str,
+    /// Router that spread the traffic.
+    pub router: &'static str,
+    /// Reconfiguration discipline.
+    pub mode: RepartitionMode,
+    /// Number of GPUs in the fleet.
+    pub fleet_size: usize,
+    /// Simulated run length, seconds.
+    pub duration_s: f64,
+    /// Fleet-pooled serving summary (exact pooled percentiles).
+    pub pooled: RunSummary,
+    /// Per-class summaries pooled across GPUs.
+    pub per_class: Vec<RunSummary>,
+    /// Per-GPU summaries pooled across classes.
+    pub per_gpu: Vec<RunSummary>,
+    /// Requests that arrived within the horizon.
+    pub arrived: u64,
+    /// Per-class arrivals, in class order.
+    pub arrived_per_class: Vec<u64>,
+    /// Requests the router placed directly on arrival (each counted
+    /// once; the rest waited at the fleet ingress until a GPU resumed,
+    /// and queued requests displaced by a rolling drain keep their
+    /// original count).
+    pub routed: u64,
+    /// Requests completed (including backlog served after the horizon).
+    pub completed: u64,
+    /// Completions that blew their SLO.
+    pub slo_violations: u64,
+    /// SLO-respecting completions per second over the run (requests/s).
+    pub goodput_rps: f64,
+    /// Fraction of completions that blew their SLO.
+    pub slo_violation_frac: f64,
+    /// Training steps completed across the fleet.
+    pub train_steps: u64,
+    /// Training throughput across the fleet, samples/s.
+    pub train_samples_per_s: f64,
+    /// Number of repartitions executed.
+    pub reconfigurations: u64,
+    /// Total per-GPU downtime paid to repartitions, seconds.
+    pub reconfig_downtime_s: f64,
+    /// Queued requests migrated to siblings at drain starts (rolling).
+    pub migrated_requests: u64,
+    /// Requests that waited at the fleet ingress because no GPU could
+    /// accept them (only possible in rolling mode with every GPU down).
+    pub stranded_requests: u64,
+    /// Requests enqueued on a GPU that was draining or reconfiguring
+    /// (only possible in in-place mode; zero under rolling).
+    pub unavailable_routes: u64,
+    /// Every layout each GPU adopted, in order (initial layout first).
+    pub layouts: Vec<Vec<Layout>>,
+    /// Per-repartition decision log.
+    pub decisions: Vec<FleetDecision>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive { class: usize },
+    ServeDone { gpu: usize, class: usize },
+    TrainDone { gpu: usize },
+    Tick,
+    ReconfigDone { gpu: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Running,
+    Draining,
+    Reconfiguring,
+}
+
+#[derive(Debug)]
+struct Replica {
+    queue: VecDeque<f64>, // arrival timestamps; front = in service when busy
+    busy: bool,
+    busy_since: f64,
+    window_arrivals: u64,
+    window_completed: u64,
+    window_violations: u64,
+    window_busy_s: f64,
+    window_lat: Vec<f64>,
+}
+
+impl Replica {
+    fn new() -> Replica {
+        Replica {
+            queue: VecDeque::new(),
+            busy: false,
+            busy_since: 0.0,
+            window_arrivals: 0,
+            window_completed: 0,
+            window_violations: 0,
+            window_busy_s: 0.0,
+            window_lat: Vec::new(),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct PendingReconfig {
+    plan: RatePlan,
+    decided_t: f64,
+    reason: String,
+    migrated: u64,
+}
+
+#[derive(Debug)]
+struct GpuState {
+    phase: Phase,
+    replicas: Vec<Replica>, // class order
+    train_busy: bool,
+    window_train_steps: u64,
+    svc_est: Vec<StepEstimate>,
+    svc_power: Vec<f64>,
+    train_est: Option<StepEstimate>,
+    pending: Option<PendingReconfig>,
+}
+
+fn start_replica(
+    des: &mut Des<Ev>,
+    r: &mut Replica,
+    gpu: usize,
+    class: usize,
+    now: f64,
+    service_s: f64,
+) {
+    debug_assert!(!r.busy, "replica g{gpu}c{class} already busy");
+    r.busy = true;
+    r.busy_since = now;
+    des.schedule_in(service_s, Ev::ServeDone { gpu, class });
+}
+
+/// Drain barrier for one GPU: once every replica and the training job are
+/// idle (and a repartition is pending), the instance churn begins and
+/// `ReconfigDone` is scheduled.
+fn maybe_begin_reconfig(
+    des: &mut Des<Ev>,
+    gs: &mut GpuState,
+    gpu: usize,
+    current: &Layout,
+    cost: &ReconfigCost,
+) {
+    let Some(pend) = &gs.pending else { return };
+    if gs.phase == Phase::Draining && !gs.train_busy && gs.replicas.iter().all(|r| !r.busy) {
+        gs.phase = Phase::Reconfiguring;
+        des.schedule_in(cost.latency_s(current, &pend.plan.layout), Ev::ReconfigDone { gpu });
+    }
+}
+
+/// Ask the router for a destination GPU under the configured discipline.
+/// `available`/`depth` are caller-owned scratch buffers (refilled here),
+/// so the DES hot path performs no per-event heap allocation.
+fn route_request(
+    router: &mut dyn RoutePolicy,
+    gpus_state: &[GpuState],
+    mode: RepartitionMode,
+    class: usize,
+    available: &mut Vec<bool>,
+    depth: &mut Vec<usize>,
+) -> Option<usize> {
+    available.clear();
+    depth.clear();
+    for gs in gpus_state {
+        available.push(match mode {
+            RepartitionMode::Rolling => gs.phase == Phase::Running,
+            RepartitionMode::InPlace => true,
+        });
+        depth.push(gs.replicas[class].queue.len());
+    }
+    router.route(class, available, depth)
+}
+
+impl FleetConfig {
+    /// Reject configurations that would produce NaN clocks or degenerate
+    /// simulations.
+    pub fn validate(&self) -> Result<(), FleetError> {
+        if self.gpus.is_empty() {
+            return Err(FleetError::Invalid("at least one GPU is required".into()));
+        }
+        if self.classes.is_empty() {
+            return Err(FleetError::Invalid("at least one request class is required".into()));
+        }
+        if !(self.duration_s.is_finite() && self.duration_s > 0.0) {
+            return Err(FleetError::Invalid(format!(
+                "duration_s = {} must be positive and finite",
+                self.duration_s
+            )));
+        }
+        if !(self.window_s.is_finite() && self.window_s > 0.0) {
+            return Err(FleetError::Invalid(format!(
+                "window_s = {} must be positive and finite",
+                self.window_s
+            )));
+        }
+        if self.window_s >= self.duration_s {
+            return Err(FleetError::Invalid(format!(
+                "window_s = {} must be smaller than duration_s = {}: no policy tick \
+                 would ever fire, so every policy would silently behave as static",
+                self.window_s, self.duration_s
+            )));
+        }
+        if !(self.rho_max.is_finite() && self.rho_max > 0.0 && self.rho_max < 1.0) {
+            return Err(FleetError::Invalid(format!(
+                "rho_max = {} must be in (0, 1)",
+                self.rho_max
+            )));
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            if !(c.slo_ms.is_finite() && c.slo_ms > 0.0) {
+                return Err(FleetError::Invalid(format!(
+                    "class {i}: slo_ms = {} must be positive and finite",
+                    c.slo_ms
+                )));
+            }
+            c.arrival.validate()?;
+        }
+        self.cost.validate().map_err(FleetError::Invalid)
+    }
+
+    /// The demand-workload template handed to the planners: training (if
+    /// any) first, then classes with their fleet-wide mean rates.
+    fn demand_workloads(&self) -> (Vec<DemandWorkload>, Vec<usize>) {
+        let mut ws = Vec::with_capacity(self.classes.len() + 1);
+        if let Some(t) = &self.train {
+            ws.push(DemandWorkload::training(t.clone()));
+        }
+        let base = ws.len();
+        let class_workloads: Vec<usize> = (0..self.classes.len()).map(|i| base + i).collect();
+        for c in &self.classes {
+            ws.push(DemandWorkload::service(c.spec.clone(), c.slo_ms, c.arrival.mean_rate()));
+        }
+        (ws, class_workloads)
+    }
+
+    /// Resolve one GPU's plan into per-class step estimates + power draws
+    /// and the training estimate.
+    fn materialize_gpu(
+        &self,
+        sched: &Scheduler,
+        plan: &RatePlan,
+        class_base: usize,
+    ) -> Result<(Vec<StepEstimate>, Vec<f64>, Option<StepEstimate>), FleetError> {
+        let gpu = sched.gpu;
+        let mut svc_est = Vec::with_capacity(self.classes.len());
+        let mut svc_power = Vec::with_capacity(self.classes.len());
+        for (ci, c) in self.classes.iter().enumerate() {
+            let inst = plan.instance_of(class_base + ci).ok_or_else(|| {
+                FleetError::Infeasible(format!("class {ci} missing from the plan"))
+            })?;
+            let res = ExecResource::from_gi(gpu, plan.layout.placements[inst].profile);
+            let est = sched.perf.step(&res, &c.spec.step_cost())?;
+            svc_power.push(sched.energy.power_w(&res, est.gract));
+            svc_est.push(est);
+        }
+        let train_est = match &self.train {
+            Some(spec) => {
+                let inst = plan.instance_of(0).ok_or_else(|| {
+                    FleetError::Infeasible("training missing from the plan".into())
+                })?;
+                let res = ExecResource::from_gi(gpu, plan.layout.placements[inst].profile);
+                Some(sched.perf.step(&res, &spec.step_cost())?)
+            }
+            None => None,
+        };
+        Ok((svc_est, svc_power, train_est))
+    }
+
+    /// Run the fleet simulation to completion.
+    pub fn run(&self) -> Result<FleetOutcome, FleetError> {
+        self.validate()?;
+        let n_gpus = self.gpus.len();
+        let n_classes = self.classes.len();
+        let schedulers: Vec<Scheduler> = self.gpus.iter().map(|&g| Scheduler::new(g)).collect();
+        let placement_engines: Vec<PlacementEngine> =
+            self.gpus.iter().map(|&g| PlacementEngine::new(g)).collect();
+        let (workloads, class_workloads) = self.demand_workloads();
+        let class_base = workloads.len() - n_classes;
+
+        // Initial per-GPU layouts: the fleet demand packer at whole-trace
+        // mean rates — every policy starts from the same baseline.
+        let fleet_plan =
+            plan_fleet_for_demand(&schedulers, &workloads, self.rho_max).ok_or_else(|| {
+                FleetError::Infeasible(
+                    "no per-GPU layouts host every class at whole-trace mean rates".into(),
+                )
+            })?;
+        let weights = fleet_plan.weights;
+        let mut plans = fleet_plan.plans;
+        let mut gpus_state: Vec<GpuState> = Vec::with_capacity(n_gpus);
+        for (g, plan) in plans.iter().enumerate() {
+            placement_engines[g]
+                .check_layout(&plan.layout.placements)
+                .map_err(|e| FleetError::Infeasible(e.to_string()))?;
+            let (svc_est, svc_power, train_est) =
+                self.materialize_gpu(&schedulers[g], plan, class_base)?;
+            gpus_state.push(GpuState {
+                phase: Phase::Running,
+                replicas: (0..n_classes).map(|_| Replica::new()).collect(),
+                train_busy: false,
+                window_train_steps: 0,
+                svc_est,
+                svc_power,
+                train_est,
+                pending: None,
+            });
+        }
+
+        let mut seeder = Prng::new(self.seed);
+        let mut arrivals: Vec<Box<dyn Arrival>> = Vec::with_capacity(n_classes);
+        for c in &self.classes {
+            arrivals.push(c.arrival.build(seeder.next_u64())?);
+        }
+        let mut router = self.router.build(n_classes);
+        let mut policy = self.policy.build();
+
+        let mut collectors: Vec<Vec<MetricsCollector>> = (0..n_gpus)
+            .map(|g| {
+                self.classes
+                    .iter()
+                    .enumerate()
+                    .map(|(c, cl)| MetricsCollector::new(format!("{}#g{g}c{c}", cl.spec.label())))
+                    .collect()
+            })
+            .collect();
+
+        let mut arrived_per_class: Vec<u64> = vec![0; n_classes];
+        let mut slo_met: Vec<u64> = vec![0; n_classes];
+        let mut violations: Vec<u64> = vec![0; n_classes];
+        let mut stranded: Vec<VecDeque<f64>> = vec![VecDeque::new(); n_classes];
+        let mut last_change: Vec<f64> = vec![0.0; n_gpus];
+        let mut layouts: Vec<Vec<Layout>> =
+            plans.iter().map(|p| vec![p.layout.clone()]).collect();
+        let mut decisions: Vec<FleetDecision> = Vec::new();
+        let mut routed: u64 = 0;
+        let mut migrated_requests: u64 = 0;
+        let mut stranded_requests: u64 = 0;
+        let mut unavailable_routes: u64 = 0;
+        let mut train_steps: u64 = 0;
+        let mut reconfig_downtime = 0.0;
+
+        // Router scratch buffers, reused across every routing decision.
+        let mut avail_scratch: Vec<bool> = Vec::with_capacity(n_gpus);
+        let mut depth_scratch: Vec<usize> = Vec::with_capacity(n_gpus);
+
+        let mut des: Des<Ev> = Des::new();
+        // Seed the calendar: one stream per class, training on every GPU,
+        // the first policy tick.
+        for (c, a) in arrivals.iter_mut().enumerate() {
+            let t0 = a.next_gap();
+            if t0.is_finite() && t0 <= self.duration_s {
+                des.schedule_at(t0, Ev::Arrive { class: c });
+            }
+        }
+        for (g, gs) in gpus_state.iter_mut().enumerate() {
+            if let Some(est) = &gs.train_est {
+                gs.train_busy = true;
+                des.schedule_at(est.seconds, Ev::TrainDone { gpu: g });
+            }
+        }
+        if self.window_s < self.duration_s {
+            des.schedule_at(self.window_s, Ev::Tick);
+        }
+
+        while let Some((t, ev)) = des.next() {
+            match ev {
+                Ev::Arrive { class } => {
+                    arrived_per_class[class] += 1;
+                    let gap = arrivals[class].next_gap();
+                    if gap.is_finite() && t + gap <= self.duration_s {
+                        des.schedule_at(t + gap, Ev::Arrive { class });
+                    }
+                    match route_request(
+                        router.as_mut(),
+                        &gpus_state,
+                        self.mode,
+                        class,
+                        &mut avail_scratch,
+                        &mut depth_scratch,
+                    ) {
+                        Some(g) => {
+                            routed += 1;
+                            if gpus_state[g].phase != Phase::Running {
+                                unavailable_routes += 1;
+                            }
+                            let gs = &mut gpus_state[g];
+                            gs.replicas[class].window_arrivals += 1;
+                            gs.replicas[class].queue.push_back(t);
+                            if gs.phase == Phase::Running && !gs.replicas[class].busy {
+                                let service_s = gs.svc_est[class].seconds;
+                                let r = &mut gs.replicas[class];
+                                start_replica(&mut des, r, g, class, t, service_s);
+                            }
+                        }
+                        None => {
+                            stranded[class].push_back(t);
+                            stranded_requests += 1;
+                        }
+                    }
+                }
+                Ev::ServeDone { gpu, class } => {
+                    {
+                        let gs = &mut gpus_state[gpu];
+                        let arrived_at = gs.replicas[class]
+                            .queue
+                            .pop_front()
+                            .expect("completion without request");
+                        gs.replicas[class].busy = false;
+                        let busy_s = t - gs.replicas[class].busy_since;
+                        gs.replicas[class].window_busy_s += busy_s;
+                        let latency_ms = (t - arrived_at) * 1e3;
+                        collectors[gpu][class].record_completion(
+                            t,
+                            latency_ms,
+                            self.classes[class].spec.batch as u64,
+                        );
+                        collectors[gpu][class].record_energy(gs.svc_power[class] * busy_s);
+                        collectors[gpu][class].record_gract(gs.svc_est[class].gract);
+                        collectors[gpu][class].record_fb(gs.svc_est[class].fb_bytes);
+                        gs.replicas[class].window_completed += 1;
+                        gs.replicas[class].window_lat.push(latency_ms);
+                        if latency_ms > self.classes[class].slo_ms {
+                            violations[class] += 1;
+                            gs.replicas[class].window_violations += 1;
+                        } else {
+                            slo_met[class] += 1;
+                        }
+                    }
+                    match gpus_state[gpu].phase {
+                        Phase::Running => {
+                            let gs = &mut gpus_state[gpu];
+                            if !gs.replicas[class].queue.is_empty() {
+                                let service_s = gs.svc_est[class].seconds;
+                                let r = &mut gs.replicas[class];
+                                start_replica(&mut des, r, gpu, class, t, service_s);
+                            }
+                        }
+                        Phase::Draining => maybe_begin_reconfig(
+                            &mut des,
+                            &mut gpus_state[gpu],
+                            gpu,
+                            &plans[gpu].layout,
+                            &self.cost,
+                        ),
+                        Phase::Reconfiguring => {}
+                    }
+                }
+                Ev::TrainDone { gpu } => {
+                    gpus_state[gpu].train_busy = false;
+                    train_steps += 1;
+                    gpus_state[gpu].window_train_steps += 1;
+                    match gpus_state[gpu].phase {
+                        Phase::Running => {
+                            if t < self.duration_s {
+                                let gs = &mut gpus_state[gpu];
+                                if let Some(est) = &gs.train_est {
+                                    gs.train_busy = true;
+                                    des.schedule_in(est.seconds, Ev::TrainDone { gpu });
+                                }
+                            }
+                        }
+                        Phase::Draining => maybe_begin_reconfig(
+                            &mut des,
+                            &mut gpus_state[gpu],
+                            gpu,
+                            &plans[gpu].layout,
+                            &self.cost,
+                        ),
+                        Phase::Reconfiguring => {}
+                    }
+                }
+                Ev::Tick => {
+                    let mut gpu_obs = Vec::with_capacity(n_gpus);
+                    for gs in gpus_state.iter_mut() {
+                        let mut services = Vec::with_capacity(n_classes);
+                        for r in gs.replicas.iter_mut() {
+                            r.window_lat.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                            services.push(ServiceObs {
+                                arrivals: r.window_arrivals,
+                                rate_rps: r.window_arrivals as f64 / self.window_s,
+                                completed: r.window_completed,
+                                violations: r.window_violations,
+                                p99_ms: percentile_sorted(&r.window_lat, 99.0),
+                                busy_frac: (r.window_busy_s / self.window_s).min(1.0),
+                                queue_depth: r.queue.len(),
+                            });
+                        }
+                        gpu_obs.push(GpuObs {
+                            services,
+                            train_steps: gs.window_train_steps,
+                            running: gs.phase == Phase::Running,
+                        });
+                    }
+                    let obs = FleetObs { t, window_s: self.window_s, gpus: gpu_obs };
+                    // Proposals only while the whole fleet is serving, so
+                    // reconfigurations roll through one GPU at a time.
+                    let all_running = gpus_state.iter().all(|gs| gs.phase == Phase::Running);
+                    if all_running {
+                        let action = {
+                            let ctx = FleetCtx {
+                                schedulers: &schedulers,
+                                workloads: &workloads,
+                                class_workloads: &class_workloads,
+                                current: &plans,
+                                weights: &weights,
+                                now: t,
+                                last_change_t: &last_change,
+                                rho_max: self.rho_max,
+                            };
+                            policy.decide(&obs, &ctx)
+                        };
+                        if let Some(action) = action {
+                            let g = action.gpu;
+                            if g < n_gpus && action.plan.layout != plans[g].layout {
+                                placement_engines[g]
+                                    .check_layout(&action.plan.layout.placements)
+                                    .map_err(|e| FleetError::Infeasible(e.to_string()))?;
+                                gpus_state[g].phase = Phase::Draining;
+                                gpus_state[g].pending = Some(PendingReconfig {
+                                    plan: action.plan,
+                                    decided_t: t,
+                                    reason: action.reason,
+                                    migrated: 0,
+                                });
+                                if self.mode == RepartitionMode::Rolling {
+                                    // Migrate queued-but-not-started
+                                    // requests to sibling GPUs; the
+                                    // in-service head (if any) finishes
+                                    // under the old layout.
+                                    let mut migrated_here: u64 = 0;
+                                    for c in 0..n_classes {
+                                        let keep = usize::from(gpus_state[g].replicas[c].busy);
+                                        let keep =
+                                            keep.min(gpus_state[g].replicas[c].queue.len());
+                                        let moved =
+                                            gpus_state[g].replicas[c].queue.split_off(keep);
+                                        for ts in moved {
+                                            migrated_here += 1;
+                                            match route_request(
+                                                router.as_mut(),
+                                                &gpus_state,
+                                                RepartitionMode::Rolling,
+                                                c,
+                                                &mut avail_scratch,
+                                                &mut depth_scratch,
+                                            ) {
+                                                Some(h) => {
+                                                    let hs = &mut gpus_state[h];
+                                                    hs.replicas[c].queue.push_back(ts);
+                                                    if !hs.replicas[c].busy {
+                                                        let service_s = hs.svc_est[c].seconds;
+                                                        start_replica(
+                                                            &mut des,
+                                                            &mut hs.replicas[c],
+                                                            h,
+                                                            c,
+                                                            t,
+                                                            service_s,
+                                                        );
+                                                    }
+                                                }
+                                                None => {
+                                                    stranded[c].push_back(ts);
+                                                    stranded_requests += 1;
+                                                }
+                                            }
+                                        }
+                                    }
+                                    migrated_requests += migrated_here;
+                                    if let Some(p) = gpus_state[g].pending.as_mut() {
+                                        p.migrated = migrated_here;
+                                    }
+                                }
+                                maybe_begin_reconfig(
+                                    &mut des,
+                                    &mut gpus_state[g],
+                                    g,
+                                    &plans[g].layout,
+                                    &self.cost,
+                                );
+                            }
+                        }
+                    }
+                    for gs in gpus_state.iter_mut() {
+                        for r in gs.replicas.iter_mut() {
+                            r.window_arrivals = 0;
+                            r.window_completed = 0;
+                            r.window_violations = 0;
+                            r.window_busy_s = 0.0;
+                            r.window_lat.clear();
+                        }
+                        gs.window_train_steps = 0;
+                    }
+                    if t + self.window_s < self.duration_s {
+                        des.schedule_at(t + self.window_s, Ev::Tick);
+                    }
+                }
+                Ev::ReconfigDone { gpu } => {
+                    let pend = gpus_state[gpu]
+                        .pending
+                        .take()
+                        .expect("reconfiguration without a pending target");
+                    let from = plans[gpu].profile_names().join("+");
+                    let to = pend.plan.profile_names().join("+");
+                    let churn_n = churn(&plans[gpu].layout, &pend.plan.layout);
+                    plans[gpu] = pend.plan;
+                    let bound = self.materialize_gpu(&schedulers[gpu], &plans[gpu], class_base)?;
+                    {
+                        let gs = &mut gpus_state[gpu];
+                        gs.svc_est = bound.0;
+                        gs.svc_power = bound.1;
+                        gs.train_est = bound.2;
+                        gs.phase = Phase::Running;
+                    }
+                    let downtime = t - pend.decided_t;
+                    reconfig_downtime += downtime;
+                    decisions.push(FleetDecision {
+                        t: pend.decided_t,
+                        gpu,
+                        from,
+                        to,
+                        reason: pend.reason,
+                        churn: churn_n,
+                        downtime_s: downtime,
+                        migrated: pend.migrated,
+                    });
+                    layouts[gpu].push(plans[gpu].layout.clone());
+                    last_change[gpu] = t;
+                    // Re-dispatch requests stranded while every GPU was
+                    // down (fleets of one under rolling repartition).
+                    for (c, q) in stranded.iter_mut().enumerate() {
+                        while let Some(&ts) = q.front() {
+                            match route_request(
+                                router.as_mut(),
+                                &gpus_state,
+                                self.mode,
+                                c,
+                                &mut avail_scratch,
+                                &mut depth_scratch,
+                            ) {
+                                Some(h) => {
+                                    q.pop_front();
+                                    let hs = &mut gpus_state[h];
+                                    hs.replicas[c].queue.push_back(ts);
+                                    if hs.phase == Phase::Running && !hs.replicas[c].busy {
+                                        let service_s = hs.svc_est[c].seconds;
+                                        start_replica(
+                                            &mut des,
+                                            &mut hs.replicas[c],
+                                            h,
+                                            c,
+                                            t,
+                                            service_s,
+                                        );
+                                    }
+                                }
+                                None => break,
+                            }
+                        }
+                    }
+                    // Put the resumed GPU back to work.
+                    {
+                        let gs = &mut gpus_state[gpu];
+                        for c in 0..n_classes {
+                            if !gs.replicas[c].queue.is_empty() && !gs.replicas[c].busy {
+                                let service_s = gs.svc_est[c].seconds;
+                                start_replica(&mut des, &mut gs.replicas[c], gpu, c, t, service_s);
+                            }
+                        }
+                        if t < self.duration_s {
+                            if let Some(est) = &gs.train_est {
+                                gs.train_busy = true;
+                                des.schedule_in(
+                                    self.cost.train_restore_s + est.seconds,
+                                    Ev::TrainDone { gpu },
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Pool metrics: per class across GPUs, per GPU across classes, and
+        // fleet-wide. Conventions match the serving pooler: throughput is
+        // the sum of per-part rates, the window is the longest part window.
+        let part_summaries: Vec<Vec<RunSummary>> =
+            collectors.iter().map(|row| row.iter().map(|c| c.summarize()).collect()).collect();
+        let finish = |mut s: RunSummary, parts: &[&RunSummary]| -> RunSummary {
+            s.throughput = parts.iter().map(|p| p.throughput).sum();
+            s.duration_s = parts.iter().map(|p| p.duration_s).fold(0.0, f64::max);
+            s
+        };
+        let per_class: Vec<RunSummary> = (0..n_classes)
+            .map(|c| {
+                let merged = MetricsCollector::pooled(
+                    format!("class{c}:{}", self.classes[c].spec.label()),
+                    (0..n_gpus).map(|g| &collectors[g][c]),
+                );
+                let parts: Vec<&RunSummary> = (0..n_gpus).map(|g| &part_summaries[g][c]).collect();
+                finish(merged.summarize(), &parts)
+            })
+            .collect();
+        let per_gpu: Vec<RunSummary> = (0..n_gpus)
+            .map(|g| {
+                let merged = MetricsCollector::pooled(format!("gpu{g}"), collectors[g].iter());
+                let parts: Vec<&RunSummary> = part_summaries[g].iter().collect();
+                finish(merged.summarize(), &parts)
+            })
+            .collect();
+        let pooled = {
+            let merged = MetricsCollector::pooled("fleet", collectors.iter().flatten());
+            let parts: Vec<&RunSummary> = part_summaries.iter().flatten().collect();
+            finish(merged.summarize(), &parts)
+        };
+
+        let arrived: u64 = arrived_per_class.iter().sum();
+        let met_total: u64 = slo_met.iter().sum();
+        let viol_total: u64 = violations.iter().sum();
+        let completed = met_total + viol_total;
+        let train_batch = self.train.as_ref().map(|t| t.batch as f64).unwrap_or(0.0);
+        Ok(FleetOutcome {
+            policy: self.policy.name(),
+            router: self.router.name(),
+            mode: self.mode,
+            fleet_size: n_gpus,
+            duration_s: self.duration_s,
+            pooled,
+            per_class,
+            per_gpu,
+            arrived,
+            arrived_per_class,
+            routed,
+            completed,
+            slo_violations: viol_total,
+            goodput_rps: met_total as f64 / self.duration_s,
+            slo_violation_frac: if completed > 0 {
+                viol_total as f64 / completed as f64
+            } else {
+                0.0
+            },
+            train_steps,
+            train_samples_per_s: train_steps as f64 * train_batch / self.duration_s,
+            reconfigurations: decisions.len() as u64,
+            reconfig_downtime_s: reconfig_downtime,
+            migrated_requests,
+            stranded_requests,
+            unavailable_routes,
+            layouts,
+            decisions,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::lookup;
+    use crate::orchestrator::ReactiveParams;
+
+    /// The §Fleet demo scenario, compressed for tests: per-GPU load equal
+    /// to the orchestrator demo (two bert-base services ramping 6 → 60
+    /// req/s each, bert-base training co-located), scaled to `n` GPUs via
+    /// fleet-wide arrival rates.
+    fn demo(
+        n: usize,
+        policy: FleetPolicyKind,
+        router: RouterKind,
+        mode: RepartitionMode,
+        duration_s: f64,
+        period_s: f64,
+    ) -> FleetConfig {
+        let bert = lookup("bert-base").unwrap();
+        let class = RequestClass {
+            spec: WorkloadSpec::inference(bert, 8, 128),
+            slo_ms: 40.0,
+            arrival: ArrivalSpec::Diurnal {
+                base_rate: 6.0 * n as f64,
+                peak_rate: 60.0 * n as f64,
+                period_s,
+            },
+        };
+        FleetConfig {
+            gpus: vec![GpuModel::A100_80GB; n],
+            train: Some(WorkloadSpec::training(bert, 32, 128)),
+            classes: vec![class.clone(), class],
+            router,
+            policy,
+            mode,
+            cost: ReconfigCost::default(),
+            duration_s,
+            window_s: 10.0,
+            rho_max: 0.75,
+            seed: 2024,
+        }
+    }
+
+    fn reactive() -> FleetPolicyKind {
+        FleetPolicyKind::Reactive(ReactiveParams::default())
+    }
+
+    #[test]
+    fn static_run_completes_and_conserves_requests() {
+        let out = demo(
+            2,
+            FleetPolicyKind::Static,
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        )
+        .run()
+        .unwrap();
+        assert!(out.arrived > 1000, "arrived {}", out.arrived);
+        assert_eq!(out.completed, out.arrived, "every admitted request completes");
+        assert_eq!(out.routed, out.arrived, "static fleets never strand requests");
+        assert_eq!(out.reconfigurations, 0);
+        assert!(out.decisions.is_empty());
+        assert_eq!(out.unavailable_routes, 0);
+        assert_eq!(out.migrated_requests, 0);
+        assert_eq!(out.stranded_requests, 0);
+        assert!(out.goodput_rps > 0.0);
+        assert!(out.train_steps > 0);
+        assert_eq!(out.fleet_size, 2);
+        assert_eq!(out.per_gpu.len(), 2);
+        assert_eq!(out.per_class.len(), 2);
+        for (c, s) in out.per_class.iter().enumerate() {
+            assert_eq!(
+                s.completed, out.arrived_per_class[c],
+                "class {c} completions must equal its arrivals"
+            );
+        }
+        for l in &out.layouts {
+            assert_eq!(l.len(), 1, "static never adopts a second layout");
+        }
+    }
+
+    #[test]
+    fn reactive_rolling_repartitions_without_unavailable_routes() {
+        let out = demo(
+            2,
+            reactive(),
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        )
+        .run()
+        .unwrap();
+        assert!(out.reconfigurations >= 1, "diurnal peak must force a repartition");
+        assert_eq!(out.unavailable_routes, 0, "rolling never routes to a draining GPU");
+        assert_eq!(out.completed, out.arrived);
+        assert_eq!(out.decisions.len() as u64, out.reconfigurations);
+        let downtime: f64 = out.decisions.iter().map(|d| d.downtime_s).sum();
+        assert!((downtime - out.reconfig_downtime_s).abs() < 1e-9);
+        for d in &out.decisions {
+            assert!(d.gpu < 2, "{d:?}");
+            assert!(d.churn > 0, "a layout switch must churn instances: {d:?}");
+            assert!(d.downtime_s > 0.0, "{d:?}");
+            assert!(d.from != d.to, "{d:?}");
+        }
+        let adopted: usize = out.layouts.iter().map(|l| l.len() - 1).sum();
+        assert_eq!(adopted as u64, out.reconfigurations);
+    }
+
+    #[test]
+    fn inplace_keeps_routing_to_the_churning_gpu() {
+        let out = demo(
+            2,
+            reactive(),
+            RouterKind::RoundRobin,
+            RepartitionMode::InPlace,
+            240.0,
+            120.0,
+        )
+        .run()
+        .unwrap();
+        assert!(out.reconfigurations >= 1);
+        assert_eq!(out.migrated_requests, 0, "in-place never migrates queues");
+        assert_eq!(out.stranded_requests, 0, "in-place always finds a destination");
+        assert!(
+            out.unavailable_routes > 0,
+            "round-robin must hit the reconfiguring GPU during its downtime"
+        );
+        assert_eq!(out.completed, out.arrived);
+    }
+
+    #[test]
+    fn rolling_no_worse_than_inplace_at_the_peak() {
+        let run = |mode| {
+            demo(2, reactive(), RouterKind::LeastLoaded, mode, 240.0, 120.0).run().unwrap()
+        };
+        let rolling = run(RepartitionMode::Rolling);
+        let inplace = run(RepartitionMode::InPlace);
+        assert!(rolling.reconfigurations >= 1);
+        assert!(inplace.reconfigurations >= 1);
+        assert!(
+            rolling.slo_violation_frac <= inplace.slo_violation_frac,
+            "rolling {:.4} must not violate more than in-place {:.4}",
+            rolling.slo_violation_frac,
+            inplace.slo_violation_frac
+        );
+    }
+
+    #[test]
+    fn fleet_of_one_strands_and_recovers_under_rolling() {
+        let out = demo(
+            1,
+            reactive(),
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        )
+        .run()
+        .unwrap();
+        assert!(out.reconfigurations >= 1, "the single GPU must still repartition");
+        assert!(
+            out.stranded_requests > 0,
+            "with no sibling, rolling must strand requests during churn"
+        );
+        assert_eq!(out.unavailable_routes, 0);
+        assert!(out.routed <= out.arrived, "each request is router-counted at most once");
+        assert_eq!(out.completed, out.arrived, "stranded requests are served after resume");
+    }
+
+    #[test]
+    fn runs_are_bitwise_deterministic_per_seed() {
+        let mk = || {
+            let router = RouterKind::Affinity { spill: 4 };
+            demo(2, reactive(), router, RepartitionMode::Rolling, 240.0, 120.0).run().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits());
+        assert_eq!(a.pooled.p99_latency_ms.to_bits(), b.pooled.p99_latency_ms.to_bits());
+        assert_eq!(a.reconfig_downtime_s.to_bits(), b.reconfig_downtime_s.to_bits());
+        assert_eq!(a.arrived, b.arrived);
+        assert_eq!(a.decisions.len(), b.decisions.len());
+        assert_eq!(a.train_steps, b.train_steps);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_serves_within_capacity_weights() {
+        let resnet = lookup("resnet50").unwrap();
+        let class = RequestClass {
+            spec: WorkloadSpec::inference(resnet, 4, 224),
+            slo_ms: 200.0,
+            arrival: ArrivalSpec::Poisson { rate: 20.0 },
+        };
+        let cfg = FleetConfig {
+            gpus: vec![GpuModel::A100_80GB, GpuModel::A30_24GB],
+            train: None,
+            classes: vec![class.clone(), class],
+            router: RouterKind::LeastLoaded,
+            policy: FleetPolicyKind::Static,
+            mode: RepartitionMode::Rolling,
+            cost: ReconfigCost::default(),
+            duration_s: 120.0,
+            window_s: 10.0,
+            rho_max: 0.75,
+            seed: 7,
+        };
+        let out = cfg.run().unwrap();
+        assert_eq!(out.fleet_size, 2);
+        assert_eq!(out.completed, out.arrived);
+        assert_eq!(out.train_steps, 0);
+        assert!(out.per_gpu.iter().all(|s| s.completed > 0), "both GPUs serve traffic");
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let base = || {
+            let (policy, router) = (FleetPolicyKind::Static, RouterKind::LeastLoaded);
+            demo(2, policy, router, RepartitionMode::Rolling, 240.0, 120.0)
+        };
+        let mut cfg = base();
+        cfg.gpus.clear();
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.classes.clear();
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.duration_s = f64::NAN;
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.window_s = 240.0; // >= duration: no policy tick would ever fire
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.rho_max = 1.5;
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.classes[0].slo_ms = -1.0;
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.classes[0].arrival = ArrivalSpec::Poisson { rate: f64::NAN };
+        assert!(matches!(cfg.run(), Err(FleetError::Arrival(_))));
+
+        let mut cfg = base();
+        cfg.cost.instance_churn_s = f64::INFINITY;
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.classes[0].slo_ms = 0.01; // below launch overhead
+        assert!(matches!(cfg.run(), Err(FleetError::Infeasible(_))));
+    }
+
+    #[test]
+    fn mode_names_parse_and_render() {
+        assert_eq!(RepartitionMode::parse("rolling"), Some(RepartitionMode::Rolling));
+        assert_eq!(RepartitionMode::parse("in-place"), Some(RepartitionMode::InPlace));
+        assert_eq!(RepartitionMode::parse("inplace"), Some(RepartitionMode::InPlace));
+        assert_eq!(RepartitionMode::parse("nope"), None);
+        assert_eq!(RepartitionMode::Rolling.name(), "rolling");
+        assert_eq!(RepartitionMode::InPlace.name(), "in-place");
+    }
+}

@@ -1,0 +1,39 @@
+//! Multi-GPU fleet simulation: MIG orchestration at cluster scale.
+//!
+//! MIGPerf characterizes workloads on a *single* partitioned GPU; the
+//! paper's stated goal — orchestrating hybrid training and inference at
+//! production scale — plays out across a fleet of MIG-capable GPUs,
+//! where serving DNNs becomes a reconfigurable machine scheduling problem
+//! (Tan et al., 2021) and MISO-style layout search (Li et al., 2022) is
+//! lifted from one device to many. This subsystem supplies that scale
+//! jump on top of the existing DES, serving simulation and single-GPU
+//! orchestrator:
+//!
+//! * [`engine`] — N GPUs in one simulation: fleet-wide request classes,
+//!   per-GPU MIG layouts from [`crate::mig::enumerate`] via the fleet
+//!   demand packer ([`crate::scheduler::plan_fleet_for_demand`]), and
+//!   rolling vs in-place reconfiguration disciplines with an explicit
+//!   drain → churn → resume cost;
+//! * [`router`] — deterministic fleet-level request routing
+//!   (round-robin, least-loaded, locality/affinity) behind the
+//!   [`RoutePolicy`] trait;
+//! * [`policy`] — fleet repartitioning policies behind [`FleetPolicy`],
+//!   extending the single-GPU [`Policy`](crate::orchestrator::Policy)
+//!   idea with the *which GPU* dimension;
+//! * fleet sweeps fan out through [`crate::sweep::run_fleet`] with the
+//!   engine's bitwise-determinism guarantee intact.
+
+pub mod engine;
+pub mod policy;
+pub mod router;
+
+pub use engine::{
+    FleetConfig, FleetDecision, FleetError, FleetOutcome, RepartitionMode, RequestClass,
+};
+pub use policy::{
+    FleetAction, FleetCtx, FleetObs, FleetPolicy, FleetPolicyKind, FleetReactive, FleetStatic,
+    GpuObs,
+};
+pub use router::{
+    Affinity, LeastLoaded, RoundRobin, RoutePolicy, RouterKind, DEFAULT_AFFINITY_SPILL,
+};

@@ -1,0 +1,336 @@
+//! Fleet-level repartitioning policies.
+//!
+//! The single-GPU orchestrator's [`Policy`](crate::orchestrator::Policy)
+//! answers *when and to what* one GPU should be repartitioned. At fleet
+//! scale the decision gains a dimension: *which GPU* — MISO-style layout
+//! search (Li et al., 2022) lifted from one device to many. A
+//! [`FleetPolicy`] watches windowed per-GPU metrics and proposes at most
+//! one repartition per observation window, so reconfigurations roll
+//! through the fleet one GPU at a time and the router can migrate that
+//! GPU's traffic to its siblings while it churns.
+
+use crate::orchestrator::{ReactiveParams, ServiceObs};
+use crate::scheduler::{DemandWorkload, RatePlan, Scheduler};
+
+/// Windowed observation of one fleet GPU.
+#[derive(Debug, Clone)]
+pub struct GpuObs {
+    /// Per-class replica observations, in class order.
+    pub services: Vec<ServiceObs>,
+    /// Training steps this GPU completed in the window.
+    pub train_steps: u64,
+    /// True while the GPU serves traffic (not draining or reconfiguring).
+    pub running: bool,
+}
+
+/// One observation window over the whole fleet.
+#[derive(Debug, Clone)]
+pub struct FleetObs {
+    /// Window end time (simulated seconds).
+    pub t: f64,
+    /// Window length, seconds.
+    pub window_s: f64,
+    /// Per-GPU observations, in fleet order.
+    pub gpus: Vec<GpuObs>,
+}
+
+/// Read-only planning context handed to a fleet policy at each window
+/// tick.
+#[derive(Debug)]
+pub struct FleetCtx<'a> {
+    /// One planner per fleet GPU, in fleet order.
+    pub schedulers: &'a [Scheduler],
+    /// Workload templates (training first if present, then classes);
+    /// class entries carry fleet-wide mean rates as their demand.
+    pub workloads: &'a [DemandWorkload],
+    /// Workload index of each request class, in class order.
+    pub class_workloads: &'a [usize],
+    /// The per-GPU plans currently in force, in fleet order.
+    pub current: &'a [RatePlan],
+    /// Capacity weight of each GPU (sums to 1).
+    pub weights: &'a [f64],
+    /// Current time (window end), simulated seconds.
+    pub now: f64,
+    /// Per-GPU time of the last layout change (0 if never).
+    pub last_change_t: &'a [f64],
+    /// Utilization bound used for sizing (ρ_max).
+    pub rho_max: f64,
+}
+
+impl FleetCtx<'_> {
+    /// Clone the workload templates with one GPU's observed per-class
+    /// rates substituted in (rates in class order).
+    pub fn workloads_at_rates(&self, rates: &[f64]) -> Vec<DemandWorkload> {
+        let mut ws = self.workloads.to_vec();
+        for (ci, &wi) in self.class_workloads.iter().enumerate() {
+            ws[wi].demand_rps = Some(rates.get(ci).copied().unwrap_or(0.0).max(0.0));
+        }
+        ws
+    }
+}
+
+/// A proposed repartition: which GPU, to what plan, and why.
+#[derive(Debug, Clone)]
+pub struct FleetAction {
+    /// Fleet index of the GPU to repartition.
+    pub gpu: usize,
+    /// The plan the GPU should adopt.
+    pub plan: RatePlan,
+    /// Window observation that motivated the move.
+    pub reason: String,
+}
+
+/// A fleet repartitioning policy.
+pub trait FleetPolicy {
+    /// Short name used in reports ("static", "reactive").
+    fn name(&self) -> &'static str;
+
+    /// Called at the end of each observation window while every GPU is
+    /// running. Return `Some(action)` to repartition one GPU (the engine
+    /// ignores proposals whose layout equals that GPU's current one), or
+    /// `None` to keep every layout.
+    fn decide(&mut self, obs: &FleetObs, ctx: &FleetCtx) -> Option<FleetAction>;
+}
+
+/// Which fleet policy to run — plain data, cloneable into sweep grids;
+/// [`FleetPolicyKind::build`] constructs the stateful policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetPolicyKind {
+    /// Fixed per-GPU layouts from whole-trace mean rates (the baseline).
+    Static,
+    /// Per-GPU hysteresis on observed pressure, one GPU per window.
+    Reactive(ReactiveParams),
+}
+
+impl FleetPolicyKind {
+    /// Report name of the policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetPolicyKind::Static => "static",
+            FleetPolicyKind::Reactive(_) => "reactive",
+        }
+    }
+
+    /// Parse a policy name (default parameters).
+    pub fn parse(s: &str) -> Option<FleetPolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" | "oracle" => Some(FleetPolicyKind::Static),
+            "reactive" => Some(FleetPolicyKind::Reactive(ReactiveParams::default())),
+            _ => None,
+        }
+    }
+
+    /// Construct the stateful policy.
+    pub fn build(&self) -> Box<dyn FleetPolicy> {
+        match self {
+            FleetPolicyKind::Static => Box::new(FleetStatic),
+            FleetPolicyKind::Reactive(p) => Box::new(FleetReactive { params: p.clone() }),
+        }
+    }
+}
+
+/// The baseline: every GPU keeps the layout the fleet demand packer
+/// picked for whole-trace mean rates.
+#[derive(Debug)]
+pub struct FleetStatic;
+
+impl FleetPolicy for FleetStatic {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+    fn decide(&mut self, _obs: &FleetObs, _ctx: &FleetCtx) -> Option<FleetAction> {
+        None
+    }
+}
+
+/// Reactive fleet policy: scan GPUs in fleet order and repartition the
+/// first one whose cooldown has expired and whose window shows pressure —
+/// a blown p99, a saturated replica, or a current plan that is no longer
+/// feasible at the rates the router actually sent it. The target plan
+/// comes from the per-GPU exhaustive planner sized for those observed
+/// per-GPU rates.
+#[derive(Debug)]
+pub struct FleetReactive {
+    /// Thresholds shared with the single-GPU reactive policy.
+    pub params: ReactiveParams,
+}
+
+impl FleetPolicy for FleetReactive {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+    fn decide(&mut self, obs: &FleetObs, ctx: &FleetCtx) -> Option<FleetAction> {
+        for (g, go) in obs.gpus.iter().enumerate() {
+            if !go.running {
+                continue;
+            }
+            if ctx.now - ctx.last_change_t.get(g).copied().unwrap_or(0.0) < self.params.cooldown_s
+            {
+                continue;
+            }
+            let rates: Vec<f64> = go.services.iter().map(|s| s.rate_rps).collect();
+            let ws = ctx.workloads_at_rates(&rates);
+            let sched = &ctx.schedulers[g];
+            let (_score, feasible) = sched.evaluate_plan(&ctx.current[g], &ws, ctx.rho_max);
+            let pressure = go.services.iter().enumerate().any(|(ci, s)| {
+                let slo = ctx.class_workloads.get(ci).and_then(|&wi| ctx.workloads[wi].slo_ms);
+                let p99_blown = slo.map(|slo| s.completed > 0 && s.p99_ms > slo).unwrap_or(false);
+                p99_blown || s.busy_frac >= self.params.busy_trigger
+            });
+            if feasible && !pressure {
+                continue;
+            }
+            let Some(candidate) = sched.plan_for_demand(&ws, ctx.rho_max) else {
+                continue; // even the best layout cannot host these rates
+            };
+            if candidate.layout == ctx.current[g].layout {
+                continue;
+            }
+            let fmt = |f: &dyn Fn(&ServiceObs) -> f64| -> String {
+                go.services.iter().map(|s| format!("{:.1}", f(s))).collect::<Vec<_>>().join(", ")
+            };
+            let reason = format!(
+                "gpu {g}: window rates [{}] req/s, p99 [{}] ms",
+                fmt(&|s| s.rate_rps),
+                fmt(&|s| s.p99_ms)
+            );
+            return Some(FleetAction { gpu: g, plan: candidate, reason });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::GpuModel;
+    use crate::models::zoo::lookup;
+    use crate::scheduler::plan_fleet_for_demand;
+    use crate::workload::spec::WorkloadSpec;
+
+    fn workloads(mean_rate: f64) -> Vec<DemandWorkload> {
+        let bert = lookup("bert-base").unwrap();
+        vec![
+            DemandWorkload::training(WorkloadSpec::training(bert, 32, 128)),
+            DemandWorkload::service(WorkloadSpec::inference(bert, 8, 128), 40.0, mean_rate),
+            DemandWorkload::service(WorkloadSpec::inference(bert, 8, 128), 40.0, mean_rate),
+        ]
+    }
+
+    fn obs_gpu(rates: [f64; 2], p99_ms: f64, busy: f64) -> GpuObs {
+        GpuObs {
+            services: rates
+                .iter()
+                .map(|&r| ServiceObs {
+                    arrivals: (r * 20.0) as u64,
+                    rate_rps: r,
+                    completed: (r * 20.0) as u64,
+                    violations: 0,
+                    p99_ms,
+                    busy_frac: busy,
+                    queue_depth: 0,
+                })
+                .collect(),
+            train_steps: 100,
+            running: true,
+        }
+    }
+
+    struct Fixture {
+        schedulers: Vec<Scheduler>,
+        workloads: Vec<DemandWorkload>,
+        plans: Vec<RatePlan>,
+        weights: Vec<f64>,
+        last_change: Vec<f64>,
+    }
+
+    fn fixture(n: usize, fleet_rate: f64) -> Fixture {
+        let schedulers: Vec<Scheduler> =
+            (0..n).map(|_| Scheduler::new(GpuModel::A100_80GB)).collect();
+        let workloads = workloads(fleet_rate);
+        let fp = plan_fleet_for_demand(&schedulers, &workloads, 0.75).expect("feasible fixture");
+        Fixture {
+            schedulers,
+            workloads,
+            plans: fp.plans,
+            weights: fp.weights,
+            last_change: vec![0.0; n],
+        }
+    }
+
+    fn ctx<'a>(f: &'a Fixture, now: f64) -> FleetCtx<'a> {
+        FleetCtx {
+            schedulers: &f.schedulers,
+            workloads: &f.workloads,
+            class_workloads: &[1, 2],
+            current: &f.plans,
+            weights: &f.weights,
+            now,
+            last_change_t: &f.last_change,
+            rho_max: 0.75,
+        }
+    }
+
+    #[test]
+    fn static_policy_never_moves() {
+        let f = fixture(2, 66.0);
+        let obs = FleetObs {
+            t: 100.0,
+            window_s: 20.0,
+            gpus: vec![obs_gpu([60.0, 60.0], 500.0, 1.0), obs_gpu([60.0, 60.0], 500.0, 1.0)],
+        };
+        assert!(FleetStatic.decide(&obs, &ctx(&f, 100.0)).is_none());
+    }
+
+    #[test]
+    fn reactive_keeps_layouts_at_mean_load() {
+        let f = fixture(2, 66.0); // 33 req/s per GPU per class
+        let obs = FleetObs {
+            t: 100.0,
+            window_s: 20.0,
+            gpus: vec![obs_gpu([33.0, 33.0], 25.0, 0.5), obs_gpu([33.0, 33.0], 25.0, 0.5)],
+        };
+        let mut p = FleetReactive { params: ReactiveParams::default() };
+        assert!(p.decide(&obs, &ctx(&f, 100.0)).is_none());
+    }
+
+    #[test]
+    fn reactive_targets_the_pressured_gpu() {
+        let f = fixture(2, 66.0);
+        // GPU 0 calm, GPU 1 overloaded: the proposal must name GPU 1 and
+        // its plan must serve the peak within SLO and utilization bounds.
+        let obs = FleetObs {
+            t: 100.0,
+            window_s: 20.0,
+            gpus: vec![obs_gpu([33.0, 33.0], 25.0, 0.5), obs_gpu([60.0, 60.0], 120.0, 1.0)],
+        };
+        let mut p = FleetReactive { params: ReactiveParams::default() };
+        let action = p.decide(&obs, &ctx(&f, 100.0)).expect("must repartition");
+        assert_eq!(action.gpu, 1);
+        assert!(action.plan.layout != f.plans[1].layout);
+        assert!(action.reason.contains("gpu 1"), "{}", action.reason);
+        for a in action.plan.assignments.iter().filter(|a| a.workload > 0) {
+            assert!(a.utilization <= 0.75, "{a:?}");
+            assert!(a.latency_ms <= 40.0, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn cooldown_and_non_running_gpus_are_skipped() {
+        let mut f = fixture(2, 66.0);
+        f.last_change = vec![95.0, 95.0]; // changed 5 s ago, cooldown 40 s
+        let hot = FleetObs {
+            t: 100.0,
+            window_s: 20.0,
+            gpus: vec![obs_gpu([60.0, 60.0], 120.0, 1.0), obs_gpu([60.0, 60.0], 120.0, 1.0)],
+        };
+        let mut p = FleetReactive { params: ReactiveParams::default() };
+        assert!(p.decide(&hot, &ctx(&f, 100.0)).is_none(), "cooldown blocks both GPUs");
+
+        f.last_change = vec![0.0, 0.0];
+        let mut draining = hot.clone();
+        draining.gpus[0].running = false;
+        let action = p.decide(&draining, &ctx(&f, 100.0)).expect("gpu 1 still movable");
+        assert_eq!(action.gpu, 1, "non-running gpu 0 must be skipped");
+    }
+}

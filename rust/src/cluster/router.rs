@@ -1,0 +1,232 @@
+//! Fleet-level request routing.
+//!
+//! Serving a request class on a MIG fleet means choosing, per request,
+//! *which GPU's* replica takes it — the serving half of the
+//! reconfigurable-machine-scheduling problem (Tan et al., 2021). Routers
+//! are deterministic (no randomness, ties broken by lowest GPU index), so
+//! fleet sweeps inherit the engine's bit-identical-at-any-worker-count
+//! guarantee. Three reference policies ship behind [`RoutePolicy`]:
+//!
+//! * [`RoundRobin`] — per-class rotating cursor over available GPUs;
+//! * [`LeastLoaded`] — the available replica with the shallowest queue;
+//! * [`Affinity`] — a sticky home GPU per class (locality: warm caches,
+//!   resident weights), spilling to the least-loaded sibling only when
+//!   the home replica is unavailable or its backlog exceeds the best
+//!   alternative by more than `spill`.
+
+/// A fleet routing policy. `available[g]` marks GPUs that may accept new
+/// work (during a rolling repartition the draining GPU is excluded);
+/// `depth[g]` is the queued-plus-in-service count on GPU `g`'s replica of
+/// the class being routed.
+pub trait RoutePolicy {
+    /// Short name used in reports ("round-robin", ...).
+    fn name(&self) -> &'static str;
+
+    /// Pick a GPU for the next request of `class`, or `None` when no GPU
+    /// is available.
+    fn route(&mut self, class: usize, available: &[bool], depth: &[usize]) -> Option<usize>;
+}
+
+/// Which router to run — plain data, cloneable into sweep grids;
+/// [`RouterKind::build`] constructs the stateful router.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouterKind {
+    /// Per-class rotating cursor.
+    RoundRobin,
+    /// Shallowest available queue, ties to the lowest GPU index.
+    LeastLoaded,
+    /// Sticky per-class home GPU with a spill threshold.
+    Affinity {
+        /// Extra backlog (requests) the home replica may carry over the
+        /// best alternative before the class spills.
+        spill: usize,
+    },
+}
+
+/// Default spill threshold for [`RouterKind::Affinity`].
+pub const DEFAULT_AFFINITY_SPILL: usize = 4;
+
+impl RouterKind {
+    /// Report name of the router.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::Affinity { .. } => "affinity",
+        }
+    }
+
+    /// Parse a router name (default parameters).
+    pub fn parse(s: &str) -> Option<RouterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(RouterKind::RoundRobin),
+            "least" | "least-loaded" | "leastloaded" => Some(RouterKind::LeastLoaded),
+            "affinity" | "local" | "locality" => {
+                Some(RouterKind::Affinity { spill: DEFAULT_AFFINITY_SPILL })
+            }
+            _ => None,
+        }
+    }
+
+    /// Construct the stateful router for `classes` request classes.
+    pub fn build(&self, classes: usize) -> Box<dyn RoutePolicy> {
+        match self {
+            RouterKind::RoundRobin => Box::new(RoundRobin { cursors: vec![0; classes] }),
+            RouterKind::LeastLoaded => Box::new(LeastLoaded),
+            RouterKind::Affinity { spill } => Box::new(Affinity { spill: *spill }),
+        }
+    }
+}
+
+/// Per-class rotating cursor over available GPUs.
+#[derive(Debug)]
+pub struct RoundRobin {
+    cursors: Vec<usize>,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+    fn route(&mut self, class: usize, available: &[bool], _depth: &[usize]) -> Option<usize> {
+        let n = available.len();
+        if n == 0 {
+            return None;
+        }
+        let cursor = self.cursors.get(class).copied().unwrap_or(0) % n;
+        for i in 0..n {
+            let g = (cursor + i) % n;
+            if available[g] {
+                if let Some(c) = self.cursors.get_mut(class) {
+                    *c = (g + 1) % n;
+                }
+                return Some(g);
+            }
+        }
+        None
+    }
+}
+
+/// Shallowest available replica queue; ties break to the lowest index.
+#[derive(Debug)]
+pub struct LeastLoaded;
+
+/// Least-loaded choice over `(available, depth)` — shared by
+/// [`LeastLoaded`] and [`Affinity`]'s spill path.
+fn least_loaded(available: &[bool], depth: &[usize]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (g, (&a, &d)) in available.iter().zip(depth).enumerate() {
+        if !a {
+            continue;
+        }
+        match best {
+            Some(b) if depth[b] <= d => {}
+            _ => best = Some(g),
+        }
+    }
+    best
+}
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+    fn route(&mut self, _class: usize, available: &[bool], depth: &[usize]) -> Option<usize> {
+        least_loaded(available, depth)
+    }
+}
+
+/// Sticky per-class home GPU (`class % fleet size`) with spill to the
+/// least-loaded sibling when the home replica is unavailable or its
+/// backlog exceeds the best alternative by more than `spill` requests.
+#[derive(Debug)]
+pub struct Affinity {
+    spill: usize,
+}
+
+impl RoutePolicy for Affinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+    fn route(&mut self, class: usize, available: &[bool], depth: &[usize]) -> Option<usize> {
+        let n = available.len();
+        if n == 0 {
+            return None;
+        }
+        let home = class % n;
+        let best = least_loaded(available, depth)?;
+        if available[home] && depth[home] <= depth[best] + self.spill {
+            Some(home)
+        } else {
+            Some(best)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_and_skips_unavailable() {
+        let mut r = RouterKind::RoundRobin.build(1);
+        let depth = [0usize; 4];
+        let all = [true; 4];
+        let picks: Vec<usize> =
+            (0..6).map(|_| r.route(0, &all, &depth).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1]);
+        let partial = [true, false, true, false];
+        let picks: Vec<usize> =
+            (0..4).map(|_| r.route(0, &partial, &depth).unwrap()).collect();
+        assert_eq!(picks, vec![2, 0, 2, 0]);
+        assert_eq!(r.route(0, &[false; 4], &depth), None);
+    }
+
+    #[test]
+    fn round_robin_keeps_per_class_cursors() {
+        let mut r = RouterKind::RoundRobin.build(2);
+        let depth = [0usize; 3];
+        let all = [true; 3];
+        assert_eq!(r.route(0, &all, &depth), Some(0));
+        assert_eq!(r.route(1, &all, &depth), Some(0), "class 1 has its own cursor");
+        assert_eq!(r.route(0, &all, &depth), Some(1));
+    }
+
+    #[test]
+    fn least_loaded_picks_shallowest_with_deterministic_ties() {
+        let mut r = RouterKind::LeastLoaded.build(1);
+        assert_eq!(r.route(0, &[true; 3], &[5, 2, 2]), Some(1), "tie breaks to lowest index");
+        assert_eq!(r.route(0, &[true, false, true], &[5, 0, 3]), Some(2));
+        assert_eq!(r.route(0, &[false; 3], &[0, 0, 0]), None);
+    }
+
+    #[test]
+    fn affinity_sticks_home_then_spills() {
+        let mut r = RouterKind::Affinity { spill: 2 }.build(2);
+        // Home for class 1 of a 3-GPU fleet is GPU 1.
+        assert_eq!(r.route(1, &[true; 3], &[0, 2, 0]), Some(1), "within spill: stay home");
+        assert_eq!(r.route(1, &[true; 3], &[0, 9, 0]), Some(0), "overloaded home spills");
+        let partial = [true, false, true];
+        assert_eq!(r.route(1, &partial, &[4, 0, 1]), Some(2), "unavailable home spills");
+        assert_eq!(r.route(1, &[false; 3], &[0, 0, 0]), None);
+    }
+
+    #[test]
+    fn kinds_parse_and_name() {
+        assert_eq!(RouterKind::parse("rr"), Some(RouterKind::RoundRobin));
+        assert_eq!(RouterKind::parse("Least-Loaded"), Some(RouterKind::LeastLoaded));
+        assert_eq!(
+            RouterKind::parse("affinity"),
+            Some(RouterKind::Affinity { spill: DEFAULT_AFFINITY_SPILL })
+        );
+        assert_eq!(RouterKind::parse("nope"), None);
+        for (kind, name) in [
+            (RouterKind::RoundRobin, "round-robin"),
+            (RouterKind::LeastLoaded, "least-loaded"),
+            (RouterKind::Affinity { spill: 1 }, "affinity"),
+        ] {
+            assert_eq!(kind.name(), name);
+            assert_eq!(kind.build(2).name(), name);
+        }
+    }
+}

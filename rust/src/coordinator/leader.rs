@@ -216,7 +216,12 @@ mod tests {
         BenchTask {
             name: name.into(),
             gpu,
-            gi_profiles: vec![if gpu == GpuModel::A100_80GB { "1g.10gb" } else { "1g.6gb" }.into()],
+            gi_profiles: vec![if gpu == GpuModel::A100_80GB {
+                "1g.10gb"
+            } else {
+                "1g.6gb"
+            }
+            .into()],
             model: "resnet18".into(),
             kind: WorkloadKind::Inference,
             batch: 4,

@@ -35,6 +35,7 @@ pub struct Framework {
 }
 
 /// The paper's Table 1 frameworks.
+#[rustfmt::skip]
 pub static TRAINING_FRAMEWORKS: &[Framework] = &[
     Framework { name: "PyTorch", version: "1.13.0", kind: FrameworkKind::Training, counts_mig_devices: false },
     Framework { name: "TensorFlow", version: "2.11.0", kind: FrameworkKind::Training, counts_mig_devices: true },
@@ -43,6 +44,7 @@ pub static TRAINING_FRAMEWORKS: &[Framework] = &[
 ];
 
 /// The paper's Table 2 frameworks.
+#[rustfmt::skip]
 pub static SERVING_FRAMEWORKS: &[Framework] = &[
     Framework { name: "TensorFlow Serving", version: "2.8.4", kind: FrameworkKind::Serving, counts_mig_devices: true },
     Framework { name: "Triton Inference Server", version: "21.09", kind: FrameworkKind::Serving, counts_mig_devices: true },
@@ -161,7 +163,9 @@ mod tests {
     #[test]
     fn versions_match_paper() {
         assert!(TRAINING_FRAMEWORKS.iter().any(|f| f.name == "PyTorch" && f.version == "1.13.0"));
-        assert!(SERVING_FRAMEWORKS.iter().any(|f| f.name == "Triton Inference Server" && f.version == "21.09"));
+        assert!(SERVING_FRAMEWORKS
+            .iter()
+            .any(|f| f.name == "Triton Inference Server" && f.version == "21.09"));
     }
 
     #[test]

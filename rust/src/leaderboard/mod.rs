@@ -98,7 +98,8 @@ impl Leaderboard {
 
     /// Render one board as a markdown table.
     pub fn render_markdown(&self, model: &str, workload: &str, rank: Rank) -> String {
-        let mut t = Table::new(&["#", "device", "batch", "tput", "p99_ms", "energy_j", "submitter"]);
+        let mut t =
+            Table::new(&["#", "device", "batch", "tput", "p99_ms", "energy_j", "submitter"]);
         for (i, e) in self.ranking(model, workload, rank).iter().enumerate() {
             t.row(&[
                 (i + 1).to_string(),
@@ -148,7 +149,11 @@ impl Leaderboard {
             lb.submit(Entry {
                 submitter: e.get("submitter").and_then(Json::as_str).unwrap_or("?").into(),
                 model: e.get("model").and_then(Json::as_str).ok_or("missing model")?.into(),
-                workload: e.get("workload").and_then(Json::as_str).ok_or("missing workload")?.into(),
+                workload: e
+                    .get("workload")
+                    .and_then(Json::as_str)
+                    .ok_or("missing workload")?
+                    .into(),
                 device: e.get("device").and_then(Json::as_str).unwrap_or("?").into(),
                 batch: e.get("batch").and_then(Json::as_i64).unwrap_or(0) as u32,
                 summary: RunSummary {

@@ -31,6 +31,7 @@
 //! println!("created GI {gi:?}");
 //! ```
 
+pub mod cluster;
 pub mod coordinator;
 pub mod frameworks;
 pub mod leaderboard;

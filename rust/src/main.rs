@@ -15,7 +15,7 @@ use migperf::util::argparse::{render_help, Args, OptSpec};
 use migperf::util::table::Table;
 use migperf::workload::spec::WorkloadKind;
 
-const BOOL_FLAGS: &[&str] = &["help", "json", "csv", "real", "decisions"];
+const BOOL_FLAGS: &[&str] = &["help", "json", "csv", "real", "decisions", "bless"];
 
 fn main() -> ExitCode {
     let args = match Args::parse(std::env::args().skip(1), BOOL_FLAGS) {
@@ -34,6 +34,8 @@ fn main() -> ExitCode {
         Some("suite") => cmd_suite(&args),
         Some("plan") => cmd_plan(&args),
         Some("orchestrate") => cmd_orchestrate(&args),
+        Some("fleet") => cmd_fleet(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         Some("layouts") => cmd_layouts(&args),
         Some("version") => {
             println!("migperf {}", migperf::version());
@@ -67,6 +69,8 @@ fn print_usage() {
          layouts     enumerate all valid maximal MIG layouts\n  \
          plan        optimize a hybrid train+serve partition (paper §5)\n  \
          orchestrate online repartitioning policies under diurnal load\n  \
+         fleet       multi-GPU fleet simulation (policy × router × fleet-size grids)\n  \
+         bench-check compare a bench record against its checked-in baseline\n  \
          version     print the version\n\n\
          Run `migperf <COMMAND> --help` for command options.",
         migperf::version()
@@ -80,6 +84,7 @@ fn parse_gpu(args: &Args) -> Result<GpuModel, String> {
 
 fn cmd_profiles(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!(
             "{}",
             render_help("migperf", "profiles", "List GI profiles for a GPU model", &[OptSpec {
@@ -108,6 +113,7 @@ fn cmd_profiles(args: &Args) -> Result<(), String> {
 
 fn cmd_partition(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!(
             "{}",
             render_help("migperf", "partition", "Validate and show a MIG partition", &[
@@ -148,6 +154,7 @@ fn cmd_partition(args: &Args) -> Result<(), String> {
 
 fn cmd_bench(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!(
             "{}",
             render_help("migperf", "bench", "Run a benchmark sweep on MIG instances", &[
@@ -240,6 +247,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!(
             "{}",
             render_help(
@@ -363,8 +371,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         }
     }
 
-    let engine =
-        if workers > 0 { SweepEngine::new(workers) } else { SweepEngine::from_env() };
+    let engine = if workers > 0 {
+        SweepEngine::new(workers)
+    } else {
+        SweepEngine::from_env()
+    };
     let started = std::time::Instant::now();
     let outs = migperf::sweep::run_serving(&engine, &sims).map_err(|e| e.to_string())?;
     let wall_s = started.elapsed().as_secs_f64();
@@ -405,7 +416,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                 model.clone(),
                 batch.to_string(),
                 mode.clone(),
-                if *rate > 0.0 { format!("{rate}") } else { "closed".into() },
+                if *rate > 0.0 {
+                    format!("{rate}")
+                } else {
+                    "closed".into()
+                },
                 seed.to_string(),
                 format!("{:.2}", out.pooled.p50_latency_ms),
                 format!("{:.2}", out.pooled.p99_latency_ms),
@@ -425,27 +440,37 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
 
 fn cmd_compat(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!("Reproduce the paper's framework-compatibility matrix (Tables 1–2).");
         return Ok(());
     }
-    let mut t1 = Table::new(&["Training framework", "Version", "Visible device count", "Training on MIG 0", "Training on MIG 1"]);
+    let mut t1 = Table::new(&[
+        "Training framework",
+        "Version",
+        "Visible device count",
+        "Training on MIG 0",
+        "Training on MIG 1",
+    ]);
     for r in run_training_matrix() {
         t1.row(&[
             r.framework.to_string(),
             r.version.to_string(),
             r.visible_device_count.to_string(),
             if r.works_on_mig0 { "Yes" } else { "No" }.to_string(),
-            if r.works_on_mig1 { "Yes" } else { "No device" }.to_string(),
+            if r.works_on_mig1 { "Yes" } else { "No device" }
+                .to_string(),
         ]);
     }
     println!("Table 1. Training framework compatibility with MIG.\n{}", t1.render());
-    let mut t2 = Table::new(&["Serving framework", "Version", "Serving on MIG 0", "Serving on MIG 1"]);
+    let mut t2 =
+        Table::new(&["Serving framework", "Version", "Serving on MIG 0", "Serving on MIG 1"]);
     for r in run_serving_matrix() {
         t2.row(&[
             r.framework.to_string(),
             r.version.to_string(),
             if r.works_on_mig0 { "Yes" } else { "No" }.to_string(),
-            if r.works_on_mig1 { "Yes" } else { "Device not found" }.to_string(),
+            if r.works_on_mig1 { "Yes" } else { "Device not found" }
+                .to_string(),
         ]);
     }
     println!("Table 2. Serving framework compatibility with MIG.\n{}", t2.render());
@@ -454,6 +479,7 @@ fn cmd_compat(args: &Args) -> Result<(), String> {
 
 fn cmd_layouts(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!("Enumerate every valid maximal MIG layout for --gpu (a100|a30).");
         return Ok(());
     }
@@ -475,6 +501,7 @@ fn cmd_layouts(args: &Args) -> Result<(), String> {
 
 fn cmd_plan(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!(
             "{}",
             render_help("migperf", "plan", "Optimize a hybrid train+serve MIG partition", &[
@@ -497,9 +524,11 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
     if !train.is_empty() && train != "none" {
         let (m, b) = train.split_once(':').ok_or("train format: MODEL:BATCH")?;
         let batch: u32 = b.parse().map_err(|_| "bad train batch")?;
-        workloads.push(SloWorkload::best_effort(WorkloadSpec::training(parse_model(m)?, batch, 128)));
+        let spec = WorkloadSpec::training(parse_model(m)?, batch, 128);
+        workloads.push(SloWorkload::best_effort(spec));
     }
-    for svc in args.str_or("serve", "resnet50:4:15,resnet50:4:15").split(',').filter(|s| !s.is_empty()) {
+    let serve = args.str_or("serve", "resnet50:4:15,resnet50:4:15");
+    for svc in serve.split(',').filter(|s| !s.is_empty()) {
         let parts: Vec<&str> = svc.split(':').collect();
         if parts.len() != 3 {
             return Err("serve format: MODEL:BATCH:SLO_MS".into());
@@ -546,6 +575,7 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
 
 fn cmd_orchestrate(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!(
             "{}",
             render_help(
@@ -676,8 +706,11 @@ fn cmd_orchestrate(args: &Args) -> Result<(), String> {
             });
         }
     }
-    let engine =
-        if workers > 0 { SweepEngine::new(workers) } else { SweepEngine::from_env() };
+    let engine = if workers > 0 {
+        SweepEngine::new(workers)
+    } else {
+        SweepEngine::from_env()
+    };
     let started = std::time::Instant::now();
     let outs = migperf::sweep::run_orchestrator(&engine, &runs).map_err(|e| e.to_string())?;
     let wall_s = started.elapsed().as_secs_f64();
@@ -770,8 +803,389 @@ fn cmd_orchestrate(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        #[rustfmt::skip]
+        println!(
+            "{}",
+            render_help(
+                "migperf",
+                "fleet",
+                "Simulate a multi-GPU MIG fleet: routing, fleet-wide demand packing, \
+                 rolling vs in-place repartitioning",
+                &[
+                    OptSpec { name: "gpu", value: "MODEL", help: "GPU model for homogeneous fleets (a100 | a30)", default: Some("a100") },
+                    OptSpec { name: "fleet", value: "N1,N2", help: "fleet sizes to sweep (homogeneous)", default: Some("4") },
+                    OptSpec { name: "gpus", value: "M1,M2", help: "explicit heterogeneous fleet (overrides --gpu/--fleet)", default: None },
+                    OptSpec { name: "policy", value: "P1,P2", help: "static | reactive | all", default: Some("all") },
+                    OptSpec { name: "router", value: "R1,R2", help: "rr | least | affinity | all", default: Some("least") },
+                    OptSpec { name: "mode", value: "M1,M2", help: "rolling | inplace | both", default: Some("rolling") },
+                    OptSpec { name: "train", value: "MODEL:BATCH", help: "training job replicated per GPU (none to disable)", default: Some("bert-base:32") },
+                    OptSpec { name: "classes", value: "MODEL:BATCH:SLO_MS,...", help: "fleet-wide request classes", default: Some("bert-base:8:40,bert-base:8:40") },
+                    OptSpec { name: "base-rate", value: "R", help: "diurnal trough rate per GPU per class, req/s (fleet stream = rate × fleet size)", default: Some("6") },
+                    OptSpec { name: "peak-rate", value: "R", help: "diurnal peak rate per GPU per class (== base for flat Poisson)", default: Some("60") },
+                    OptSpec { name: "period", value: "S", help: "diurnal period, seconds", default: Some("600") },
+                    OptSpec { name: "duration", value: "S", help: "simulated run length, seconds", default: Some("600") },
+                    OptSpec { name: "window", value: "S", help: "observation window / policy tick, seconds", default: Some("10") },
+                    OptSpec { name: "rho", value: "F", help: "planner utilization bound in (0,1)", default: Some("0.75") },
+                    OptSpec { name: "churn", value: "S", help: "seconds per instance destroyed/created", default: Some("0.5") },
+                    OptSpec { name: "restore", value: "S", help: "training checkpoint-restore penalty, seconds", default: Some("5") },
+                    OptSpec { name: "seq", value: "S", help: "sequence length / image size for classes", default: Some("128") },
+                    OptSpec { name: "seeds", value: "N", help: "replication seeds per grid point", default: Some("1") },
+                    OptSpec { name: "seed", value: "S", help: "base seed", default: Some("2024") },
+                    OptSpec { name: "workers", value: "N", help: "sweep worker threads (0 = auto)", default: Some("0") },
+                    OptSpec { name: "json", value: "", help: "emit JSON (with decision logs)", default: None },
+                    OptSpec { name: "csv", value: "", help: "emit pooled summaries as CSV", default: None },
+                    OptSpec { name: "decisions", value: "", help: "also print per-run decision logs", default: None },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    use migperf::cluster::{
+        FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass, RouterKind,
+    };
+    use migperf::orchestrator::ReconfigCost;
+    use migperf::sweep::SweepEngine;
+    use migperf::util::json::Json;
+    use migperf::workload::arrival::ArrivalSpec;
+    use migperf::workload::spec::WorkloadSpec;
+
+    let gpu = parse_gpu(args)?;
+    let fleets: Vec<Vec<GpuModel>> = match args.get("gpus") {
+        Some(list) => {
+            let models = list
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|name| {
+                    GpuModel::parse(name)
+                        .ok_or_else(|| format!("unknown GPU '{name}' (use a100 or a30)"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            if models.is_empty() {
+                return Err("--gpus needs at least one model".into());
+            }
+            vec![models]
+        }
+        None => {
+            let sizes: Vec<usize> = args.list_or("fleet", &[4usize]).map_err(|e| e.to_string())?;
+            if sizes.is_empty() || sizes.contains(&0) {
+                return Err("--fleet sizes must be positive".into());
+            }
+            sizes.iter().map(|&n| vec![gpu; n]).collect()
+        }
+    };
+    let policy_arg = args.str_or("policy", "all");
+    let policies: Vec<FleetPolicyKind> = if policy_arg == "all" {
+        vec![FleetPolicyKind::parse("static").unwrap(), FleetPolicyKind::parse("reactive").unwrap()]
+    } else {
+        policy_arg
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|name| {
+                FleetPolicyKind::parse(name)
+                    .ok_or_else(|| format!("unknown policy '{name}' (static|reactive)"))
+            })
+            .collect::<Result<_, _>>()?
+    };
+    let router_arg = args.str_or("router", "least");
+    let routers: Vec<RouterKind> = if router_arg == "all" {
+        vec![
+            RouterKind::parse("rr").unwrap(),
+            RouterKind::parse("least").unwrap(),
+            RouterKind::parse("affinity").unwrap(),
+        ]
+    } else {
+        router_arg
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|name| {
+                RouterKind::parse(name)
+                    .ok_or_else(|| format!("unknown router '{name}' (rr|least|affinity)"))
+            })
+            .collect::<Result<_, _>>()?
+    };
+    let mode_arg = args.str_or("mode", "rolling");
+    let modes: Vec<RepartitionMode> = if mode_arg == "both" {
+        vec![RepartitionMode::Rolling, RepartitionMode::InPlace]
+    } else {
+        mode_arg
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|name| {
+                RepartitionMode::parse(name)
+                    .ok_or_else(|| format!("unknown mode '{name}' (rolling|inplace)"))
+            })
+            .collect::<Result<_, _>>()?
+    };
+    if policies.is_empty() || routers.is_empty() || modes.is_empty() {
+        return Err("empty policy/router/mode selection".into());
+    }
+    let parse_model =
+        |name: &str| zoo::lookup(name).ok_or_else(|| format!("unknown model '{name}'"));
+    let train = {
+        let t = args.str_or("train", "bert-base:32");
+        if t.is_empty() || t == "none" {
+            None
+        } else {
+            let (m, b) = t.split_once(':').ok_or("train format: MODEL:BATCH")?;
+            let batch: u32 = b.parse().map_err(|_| "bad train batch")?;
+            Some(WorkloadSpec::training(parse_model(m)?, batch, 128))
+        }
+    };
+    let base_rate: f64 = args.parse_or("base-rate", 6.0f64).map_err(|e| e.to_string())?;
+    let peak_rate: f64 = args.parse_or("peak-rate", 60.0f64).map_err(|e| e.to_string())?;
+    let period_s: f64 = args.parse_or("period", 600.0f64).map_err(|e| e.to_string())?;
+    if peak_rate < base_rate {
+        return Err(format!("--peak-rate {peak_rate} must be at least --base-rate {base_rate}"));
+    }
+    let seq: u32 = args.parse_or("seq", 128u32).map_err(|e| e.to_string())?;
+    let mut class_specs = Vec::new();
+    for cls in args
+        .str_or("classes", "bert-base:8:40,bert-base:8:40")
+        .split(',')
+        .filter(|s| !s.is_empty())
+    {
+        let parts: Vec<&str> = cls.split(':').collect();
+        if parts.len() != 3 {
+            return Err("classes format: MODEL:BATCH:SLO_MS".into());
+        }
+        let batch: u32 = parts[1].parse().map_err(|_| "bad class batch")?;
+        let slo_ms: f64 = parts[2].parse().map_err(|_| "bad SLO")?;
+        class_specs.push((WorkloadSpec::inference(parse_model(parts[0])?, batch, seq), slo_ms));
+    }
+    let cost = ReconfigCost {
+        instance_churn_s: args.parse_or("churn", 0.5f64).map_err(|e| e.to_string())?,
+        train_restore_s: args.parse_or("restore", 5.0f64).map_err(|e| e.to_string())?,
+    };
+    let duration_s: f64 = args.parse_or("duration", 600.0f64).map_err(|e| e.to_string())?;
+    let window_s: f64 = args.parse_or("window", 10.0f64).map_err(|e| e.to_string())?;
+    let rho_max: f64 = args.parse_or("rho", 0.75f64).map_err(|e| e.to_string())?;
+    let nseeds: usize = args.parse_or("seeds", 1usize).map_err(|e| e.to_string())?;
+    let base_seed: u64 = args.parse_or("seed", 2024u64).map_err(|e| e.to_string())?;
+    let workers: usize = args.parse_or("workers", 0usize).map_err(|e| e.to_string())?;
+
+    // mode × policy × router × fleet × seed grid in row-major order (the
+    // determinism anchor). Per-GPU rates scale to fleet-wide streams so
+    // every fleet size carries a comparable per-GPU load.
+    let seed_list = migperf::sweep::seeds(base_seed, nseeds.max(1));
+    let mut runs: Vec<FleetConfig> = Vec::new();
+    for mode in &modes {
+        for policy in &policies {
+            for router in &routers {
+                for fleet in &fleets {
+                    let n = fleet.len() as f64;
+                    let arrival = if peak_rate > base_rate {
+                        ArrivalSpec::Diurnal {
+                            base_rate: base_rate * n,
+                            peak_rate: peak_rate * n,
+                            period_s,
+                        }
+                    } else {
+                        ArrivalSpec::Poisson { rate: base_rate * n }
+                    };
+                    let classes: Vec<RequestClass> = class_specs
+                        .iter()
+                        .map(|(spec, slo_ms)| RequestClass {
+                            spec: spec.clone(),
+                            slo_ms: *slo_ms,
+                            arrival: arrival.clone(),
+                        })
+                        .collect();
+                    for &seed in &seed_list {
+                        runs.push(FleetConfig {
+                            gpus: fleet.clone(),
+                            train: train.clone(),
+                            classes: classes.clone(),
+                            router: router.clone(),
+                            policy: policy.clone(),
+                            mode: *mode,
+                            cost: cost.clone(),
+                            duration_s,
+                            window_s,
+                            rho_max,
+                            seed,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let engine = if workers > 0 {
+        SweepEngine::new(workers)
+    } else {
+        SweepEngine::from_env()
+    };
+    let started = std::time::Instant::now();
+    let outs = migperf::sweep::run_fleet(&engine, &runs).map_err(|e| e.to_string())?;
+    let wall_s = started.elapsed().as_secs_f64();
+
+    if args.flag("json") {
+        let rows: Vec<Json> = runs
+            .iter()
+            .zip(&outs)
+            .map(|(cfg, out)| {
+                Json::obj(vec![
+                    ("mode", Json::Str(out.mode.name().to_string())),
+                    ("policy", Json::Str(out.policy.to_string())),
+                    ("router", Json::Str(out.router.to_string())),
+                    ("fleet_size", Json::Num(out.fleet_size as f64)),
+                    ("seed", Json::Num(cfg.seed as f64)),
+                    ("arrived", Json::Num(out.arrived as f64)),
+                    ("completed", Json::Num(out.completed as f64)),
+                    ("goodput_rps", Json::Num(out.goodput_rps)),
+                    ("slo_violation_frac", Json::Num(out.slo_violation_frac)),
+                    ("p99_latency_ms", Json::Num(out.pooled.p99_latency_ms)),
+                    ("train_samples_per_s", Json::Num(out.train_samples_per_s)),
+                    ("reconfigurations", Json::Num(out.reconfigurations as f64)),
+                    ("reconfig_downtime_s", Json::Num(out.reconfig_downtime_s)),
+                    ("migrated_requests", Json::Num(out.migrated_requests as f64)),
+                    ("unavailable_routes", Json::Num(out.unavailable_routes as f64)),
+                    ("decisions", export::fleet_decisions_to_json(&out.decisions)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("migperf-fleet/v1".into())),
+            ("duration_s", Json::Num(duration_s)),
+            ("window_s", Json::Num(window_s)),
+            ("workers", Json::Num(engine.workers() as f64)),
+            ("wall_s", Json::Num(wall_s)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        println!("{}", doc.to_pretty());
+    } else if args.flag("csv") {
+        let rows: Vec<_> = runs
+            .iter()
+            .zip(&outs)
+            .map(|(cfg, out)| {
+                let mut s = out.pooled.clone();
+                s.label = format!(
+                    "{}/{}/{}/n{}/seed{}",
+                    out.mode.name(),
+                    out.policy,
+                    out.router,
+                    out.fleet_size,
+                    cfg.seed
+                );
+                s
+            })
+            .collect();
+        print!("{}", export::summaries_to_csv(&rows));
+    } else {
+        let mut t = Table::new(&[
+            "mode",
+            "policy",
+            "router",
+            "gpus",
+            "seed",
+            "arrived",
+            "goodput_rps",
+            "viol_%",
+            "p99_ms",
+            "reconf",
+            "downtime_s",
+            "migrated",
+        ]);
+        for (cfg, out) in runs.iter().zip(&outs) {
+            t.row(&[
+                out.mode.name().to_string(),
+                out.policy.to_string(),
+                out.router.to_string(),
+                out.fleet_size.to_string(),
+                cfg.seed.to_string(),
+                out.arrived.to_string(),
+                format!("{:.1}", out.goodput_rps),
+                format!("{:.2}", out.slo_violation_frac * 100.0),
+                format!("{:.1}", out.pooled.p99_latency_ms),
+                out.reconfigurations.to_string(),
+                format!("{:.1}", out.reconfig_downtime_s),
+                out.migrated_requests.to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        println!("{} runs on {} workers in {:.2}s", runs.len(), engine.workers(), wall_s);
+        if args.flag("decisions") {
+            for (cfg, out) in runs.iter().zip(&outs) {
+                if out.decisions.is_empty() {
+                    continue;
+                }
+                println!(
+                    "\ndecision log — {}/{}/{} n{} (seed {}):",
+                    out.mode.name(),
+                    out.policy,
+                    out.router,
+                    out.fleet_size,
+                    cfg.seed
+                );
+                print!("{}", export::fleet_decisions_to_csv(&out.decisions));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench_check(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        #[rustfmt::skip]
+        println!(
+            "{}",
+            render_help(
+                "migperf",
+                "bench-check",
+                "Compare a bench record against its checked-in baseline (the CI \
+                 regression gate): wall-clock keys may regress at most --tolerance, \
+                 every other pinned number must match bit-for-bit (determinism)",
+                &[
+                    OptSpec { name: "baseline", value: "FILE", help: "checked-in baseline JSON", default: None },
+                    OptSpec { name: "current", value: "FILE", help: "freshly produced bench JSON", default: None },
+                    OptSpec { name: "tolerance", value: "F", help: "max relative wall-clock regression", default: Some("0.25") },
+                    OptSpec { name: "bless", value: "", help: "overwrite the baseline with the current record", default: None },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    use migperf::metrics::regression::{compare, render, Tolerance};
+    use migperf::util::json;
+
+    let baseline_path = args.required("baseline").map_err(|e| e.to_string())?;
+    let current_path = args.required("current").map_err(|e| e.to_string())?;
+    let current_doc = std::fs::read_to_string(&current_path)
+        .map_err(|e| format!("reading {current_path}: {e}"))?;
+    let current = json::parse(&current_doc).map_err(|e| format!("parsing {current_path}: {e}"))?;
+    if args.flag("bless") {
+        std::fs::write(&baseline_path, &current_doc)
+            .map_err(|e| format!("writing {baseline_path}: {e}"))?;
+        println!(
+            "blessed: {baseline_path} now pins the current record from {current_path} \
+             (commit it to tighten the gate)"
+        );
+        return Ok(());
+    }
+    let baseline_doc = std::fs::read_to_string(&baseline_path)
+        .map_err(|e| format!("reading {baseline_path}: {e}"))?;
+    let baseline =
+        json::parse(&baseline_doc).map_err(|e| format!("parsing {baseline_path}: {e}"))?;
+    let wall: f64 = args.parse_or("tolerance", 0.25f64).map_err(|e| e.to_string())?;
+    if !(wall.is_finite() && wall >= 0.0) {
+        return Err(format!("--tolerance {wall} must be non-negative and finite"));
+    }
+    let cmp = compare(&baseline, &current, &Tolerance { wall, ..Tolerance::default() });
+    print!("{}", render(&baseline_path, &cmp));
+    if cmp.passed() {
+        Ok(())
+    } else {
+        Err(format!(
+            "{} bench metric(s) regressed or drifted against {baseline_path}",
+            cmp.failures.len()
+        ))
+    }
+}
+
 fn cmd_suite(args: &Args) -> Result<(), String> {
     if args.flag("help") {
+        #[rustfmt::skip]
         println!(
             "{}",
             render_help("migperf", "suite", "Run a JSON task suite through the coordinator", &[

@@ -121,6 +121,27 @@ impl MetricsCollector {
         self.series.extend(other.series.clone());
     }
 
+    /// Merge any number of collectors into one — the fleet-pooling path.
+    ///
+    /// Per-GPU collectors pooled this way are exactly equivalent to one
+    /// global collector that saw the interleaved event stream: every
+    /// underlying accumulator ([`LatencyHistogram`], Welford moments,
+    /// energy, GRACT, FB peak, time window) merges losslessly, so pooled
+    /// percentiles stay exact whether the fleet recorded into 1 or N
+    /// collectors. The order of `parts` does not affect any summary
+    /// statistic (counts, sums, mins/maxes and bucket counts are
+    /// commutative).
+    pub fn pooled<'a>(
+        label: impl Into<String>,
+        parts: impl IntoIterator<Item = &'a MetricsCollector>,
+    ) -> MetricsCollector {
+        let mut merged = MetricsCollector::new(label);
+        for part in parts {
+            merged.merge(part);
+        }
+        merged
+    }
+
     /// The underlying latency histogram (exact-pooling and oracle tests).
     pub fn latency_histogram(&self) -> &LatencyHistogram {
         &self.latency
@@ -147,7 +168,11 @@ impl MetricsCollector {
             p50_latency_ms: self.latency.percentile(50.0),
             p99_latency_ms: self.latency.percentile(99.0),
             max_latency_ms: self.latency.max(),
-            throughput: if duration > 0.0 { self.samples_done as f64 / duration } else { 0.0 },
+            throughput: if duration > 0.0 {
+                self.samples_done as f64 / duration
+            } else {
+                0.0
+            },
             mean_gract: self.gract.mean(),
             peak_fb_mib: self.peak_fb_bytes / (1u64 << 20) as f64,
             energy_j: self.energy_j,
@@ -214,7 +239,11 @@ mod tests {
             let t = (i + 1) as f64 * 0.01;
             let lat = 5.0 + (i % 7) as f64;
             whole.record_completion(t, lat, 1);
-            if i % 2 == 0 { a.record_completion(t, lat, 1) } else { b.record_completion(t, lat, 1) }
+            if i % 2 == 0 {
+                a.record_completion(t, lat, 1)
+            } else {
+                b.record_completion(t, lat, 1)
+            }
         }
         a.record_energy(10.0);
         b.record_energy(5.0);
@@ -240,6 +269,53 @@ mod tests {
         assert_eq!(before.completed, after.completed);
         assert_eq!(before.p99_latency_ms, after.p99_latency_ms);
         assert_eq!(before.duration_s, after.duration_s);
+    }
+
+    #[test]
+    fn pooling_per_gpu_collectors_equals_one_global_collector() {
+        // Fleet-pooling regression: recording an interleaved event stream
+        // round-robin into N per-GPU collectors and pooling must be
+        // bit-identical (within the histogram's exact merge) to recording
+        // everything into one global collector.
+        let n_gpus = 4;
+        let mut global = MetricsCollector::new("global");
+        let mut per_gpu: Vec<MetricsCollector> =
+            (0..n_gpus).map(|g| MetricsCollector::new(format!("gpu{g}"))).collect();
+        for i in 0..2000u64 {
+            let t = (i + 1) as f64 * 0.005;
+            let lat = 2.0 + ((i * 37) % 113) as f64 * 0.25; // varied, deterministic
+            let g = (i % n_gpus as u64) as usize;
+            global.record_completion(t, lat, 2);
+            per_gpu[g].record_completion(t, lat, 2);
+            if i % 5 == 0 {
+                global.record_energy(1.5);
+                per_gpu[g].record_energy(1.5);
+                global.record_gract(0.5 + (g as f64) * 0.1);
+                per_gpu[g].record_gract(0.5 + (g as f64) * 0.1);
+                global.record_fb((i + 1) as f64 * 1e6);
+                per_gpu[g].record_fb((i + 1) as f64 * 1e6);
+            }
+        }
+        let pooled = MetricsCollector::pooled("global", per_gpu.iter()).summarize();
+        let whole = global.summarize();
+        assert_eq!(pooled.completed, whole.completed);
+        assert_eq!(pooled.p50_latency_ms.to_bits(), whole.p50_latency_ms.to_bits());
+        assert_eq!(pooled.p99_latency_ms.to_bits(), whole.p99_latency_ms.to_bits());
+        assert_eq!(pooled.max_latency_ms.to_bits(), whole.max_latency_ms.to_bits());
+        assert!((pooled.avg_latency_ms - whole.avg_latency_ms).abs() < 1e-9);
+        assert!((pooled.std_latency_ms - whole.std_latency_ms).abs() < 1e-9);
+        assert!((pooled.energy_j - whole.energy_j).abs() < 1e-9);
+        assert!((pooled.mean_gract - whole.mean_gract).abs() < 1e-9);
+        assert_eq!(pooled.peak_fb_mib.to_bits(), whole.peak_fb_mib.to_bits());
+        assert_eq!(pooled.duration_s.to_bits(), whole.duration_s.to_bits());
+        assert_eq!(pooled.throughput.to_bits(), whole.throughput.to_bits());
+    }
+
+    #[test]
+    fn pooled_of_nothing_is_empty() {
+        let s = MetricsCollector::pooled("empty", std::iter::empty()).summarize();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.throughput, 0.0);
     }
 
     #[test]

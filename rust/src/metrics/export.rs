@@ -8,6 +8,7 @@
 
 use std::fmt::Write as _;
 
+use crate::cluster::FleetDecision;
 use crate::orchestrator::Decision;
 use crate::scheduler::{Assignment, Plan};
 use crate::util::json::Json;
@@ -157,6 +158,49 @@ pub fn decisions_to_json(rows: &[Decision]) -> Json {
     Json::Arr(rows.iter().map(decision_to_json).collect())
 }
 
+/// CSV header used by [`fleet_decisions_to_csv`].
+pub const FLEET_DECISION_CSV_HEADER: &str = "t,gpu,from,to,churn,downtime_s,migrated,reason";
+
+/// Serialize a fleet decision log as CSV (with header).
+pub fn fleet_decisions_to_csv(rows: &[FleetDecision]) -> String {
+    let mut out = String::from(FLEET_DECISION_CSV_HEADER);
+    out.push('\n');
+    for d in rows {
+        let _ = writeln!(
+            out,
+            "{:.6},{},{},{},{},{:.6},{},{}",
+            d.t,
+            d.gpu,
+            csv_escape(&d.from),
+            csv_escape(&d.to),
+            d.churn,
+            d.downtime_s,
+            d.migrated,
+            csv_escape(&d.reason),
+        );
+    }
+    out
+}
+
+/// One fleet decision as a JSON object.
+pub fn fleet_decision_to_json(d: &FleetDecision) -> Json {
+    Json::obj(vec![
+        ("t", d.t.into()),
+        ("gpu", (d.gpu as i64).into()),
+        ("from", d.from.as_str().into()),
+        ("to", d.to.as_str().into()),
+        ("churn", (d.churn as i64).into()),
+        ("downtime_s", d.downtime_s.into()),
+        ("migrated", (d.migrated as i64).into()),
+        ("reason", d.reason.as_str().into()),
+    ])
+}
+
+/// A whole fleet decision log as a JSON array.
+pub fn fleet_decisions_to_json(rows: &[FleetDecision]) -> Json {
+    Json::Arr(rows.iter().map(fleet_decision_to_json).collect())
+}
+
 /// Serialize a time-series set in Prometheus exposition format, using the
 /// series' tags as labels and timestamps in milliseconds.
 pub fn series_to_prometheus(set: &SeriesSet) -> String {
@@ -169,7 +213,8 @@ pub fn series_to_prometheus(set: &SeriesSet) -> String {
         }
         let labels = render_labels(s);
         for p in s.points() {
-            let _ = writeln!(out, "migperf_{}{} {} {}", s.name, labels, p.value, (p.t * 1e3) as i64);
+            let _ =
+                writeln!(out, "migperf_{}{} {} {}", s.name, labels, p.value, (p.t * 1e3) as i64);
         }
     }
     out
@@ -324,6 +369,33 @@ mod tests {
             Some("2g.20gb+2g.20gb+3g.40gb")
         );
         assert!(decisions_to_csv(&[]).lines().count() == 1, "empty log is just the header");
+    }
+
+    #[test]
+    fn fleet_decision_log_export_csv_and_json() {
+        use crate::cluster::FleetDecision;
+        let d = FleetDecision {
+            t: 88.0,
+            gpu: 3,
+            from: "4g.40gb+2g.20gb+1g.10gb".into(),
+            to: "3g.40gb+3g.40gb+1g.10gb".into(),
+            reason: "gpu 3: window rates [57.2, 58.9] req/s, p99 [61.0, 59.4] ms".into(),
+            churn: 4,
+            downtime_s: 2.75,
+            migrated: 17,
+        };
+        let csv = fleet_decisions_to_csv(std::slice::from_ref(&d));
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], FLEET_DECISION_CSV_HEADER);
+        assert!(lines[1].starts_with("88.000000,3,"), "{csv}");
+        assert!(lines[1].contains("\"gpu 3: window rates"), "reason must be quoted: {csv}");
+        let doc = fleet_decisions_to_json(std::slice::from_ref(&d));
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("gpu").unwrap().as_i64(), Some(3));
+        assert_eq!(row.get("migrated").unwrap().as_i64(), Some(17));
+        assert_eq!(row.get("downtime_s").unwrap().as_f64(), Some(2.75));
+        assert!(fleet_decisions_to_csv(&[]).lines().count() == 1, "empty log is just the header");
     }
 
     #[test]

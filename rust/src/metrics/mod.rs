@@ -10,6 +10,8 @@
 pub mod collector;
 pub mod dcgm;
 pub mod export;
+pub mod regression;
 
 pub use collector::{MetricsCollector, RunSummary};
 pub use dcgm::{DcgmCounter, DcgmSampler};
+pub use regression::{compare, Comparison, Tolerance};

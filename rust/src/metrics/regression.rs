@@ -1,0 +1,330 @@
+//! Bench-regression comparison: the CI gate behind `migperf bench-check`.
+//!
+//! CI's bench smoke steps emit machine-readable records
+//! (`BENCH_serving.json`, `BENCH_orchestrator.json`, `BENCH_fleet.json`).
+//! Before this gate they were write-only — nothing stopped a perf or
+//! goodput regression from merging. [`compare`] walks a checked-in
+//! baseline document against the current run and fails on:
+//!
+//! * **wall-clock regressions** — keys that measure wall time
+//!   (`wall_s`, `*_serial_s`, `*_parallel_s`, `ns_per_op`) may not exceed
+//!   the baseline by more than the relative tolerance (default 25%);
+//!   getting *faster* never fails;
+//! * **deterministic drift** — every other pinned number (goodput,
+//!   SLO-violation fractions, checksums, grid sizes, config constants) is
+//!   simulation output that is bit-reproducible across machines, so any
+//!   drift beyond float-noise means behavior changed and must be either
+//!   fixed or consciously re-blessed (`migperf bench-check --bless`);
+//! * **shape changes** — a pinned key missing from the current run, a
+//!   type mismatch, or a pinned array that shrank.
+//!
+//! Baselines pin exactly what they contain: keys present only in the
+//! current run are ignored, so a partial baseline (e.g. wall budgets +
+//! structural fields) is valid and can be tightened incrementally.
+//! Machine-dependent keys (`workers`, `*speedup`) and `null` baseline
+//! values (placeholders awaiting a bless) are always skipped.
+
+use crate::util::json::Json;
+
+/// Comparison tolerances.
+#[derive(Debug, Clone)]
+pub struct Tolerance {
+    /// Maximum relative wall-clock regression before failing (0.25 = 25%).
+    pub wall: f64,
+    /// Maximum relative drift on deterministic metrics (float noise).
+    pub drift: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        Tolerance { wall: 0.25, drift: 1e-9 }
+    }
+}
+
+/// One comparison failure, anchored to a JSON path.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// JSON path of the offending value (e.g. `$.sweep.fig5_serial_s`).
+    pub path: String,
+    /// What went wrong.
+    pub message: String,
+}
+
+/// Result of comparing a current bench record against its baseline.
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    /// Leaf values checked.
+    pub checked: usize,
+    /// Leaf values skipped (machine-dependent keys, null placeholders).
+    pub skipped: usize,
+    /// Failures, in document order.
+    pub failures: Vec<Finding>,
+}
+
+impl Comparison {
+    /// True when no pinned value regressed or drifted.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Keys that are machine- or environment-dependent and never compared.
+const SKIP_KEYS: &[&str] = &["workers", "note"];
+
+fn is_skipped(key: &str) -> bool {
+    SKIP_KEYS.contains(&key) || key == "speedup" || key.ends_with("_speedup")
+}
+
+/// Keys measuring wall time: compared with the relative wall tolerance,
+/// one-sided (only slower fails).
+fn is_wall_clock(key: &str) -> bool {
+    matches!(key, "wall_s" | "serial_s" | "parallel_s" | "ns_per_op")
+        || key.ends_with("_wall_s")
+        || key.ends_with("_serial_s")
+        || key.ends_with("_parallel_s")
+}
+
+/// Compare `current` against `baseline` under `tol`. Only values pinned
+/// by the baseline are checked; see the module docs for the rules.
+pub fn compare(baseline: &Json, current: &Json, tol: &Tolerance) -> Comparison {
+    let mut out = Comparison::default();
+    walk(baseline, current, "$", "", tol, &mut out);
+    out
+}
+
+fn walk(base: &Json, cur: &Json, path: &str, key: &str, tol: &Tolerance, out: &mut Comparison) {
+    if is_skipped(key) {
+        out.skipped += 1;
+        return;
+    }
+    match (base, cur) {
+        // A null baseline value is an explicit "not pinned yet".
+        (Json::Null, _) => out.skipped += 1,
+        (Json::Obj(bm), Json::Obj(cm)) => {
+            for (k, bv) in bm {
+                let p = format!("{path}.{k}");
+                match cm.get(k) {
+                    Some(cv) => walk(bv, cv, &p, k, tol, out),
+                    None => out.failures.push(Finding {
+                        path: p,
+                        message: "pinned metric missing from the current run".into(),
+                    }),
+                }
+            }
+        }
+        (Json::Arr(ba), Json::Arr(ca)) => {
+            if ba.len() > ca.len() {
+                out.failures.push(Finding {
+                    path: path.to_string(),
+                    message: format!(
+                        "baseline pins {} entries, current run has only {}",
+                        ba.len(),
+                        ca.len()
+                    ),
+                });
+                return;
+            }
+            for (i, bv) in ba.iter().enumerate() {
+                walk(bv, &ca[i], &format!("{path}[{i}]"), key, tol, out);
+            }
+        }
+        (Json::Num(b), Json::Num(c)) => {
+            out.checked += 1;
+            if is_wall_clock(key) {
+                if *b > 0.0 && *c > *b * (1.0 + tol.wall) {
+                    out.failures.push(Finding {
+                        path: path.to_string(),
+                        message: format!(
+                            "wall-clock regression: {c:.4} vs baseline {b:.4} \
+                             (more than +{:.0}% slower)",
+                            tol.wall * 100.0
+                        ),
+                    });
+                }
+            } else {
+                let rel = (c - b).abs() / b.abs().max(1e-12);
+                if rel > tol.drift {
+                    out.failures.push(Finding {
+                        path: path.to_string(),
+                        message: format!(
+                            "deterministic metric drifted: {c} vs baseline {b} \
+                             (relative {rel:.3e})"
+                        ),
+                    });
+                }
+            }
+        }
+        (Json::Bool(b), Json::Bool(c)) => {
+            out.checked += 1;
+            if b != c {
+                out.failures.push(Finding {
+                    path: path.to_string(),
+                    message: format!("expected {b}, got {c}"),
+                });
+            }
+        }
+        (Json::Str(b), Json::Str(c)) => {
+            out.checked += 1;
+            if b != c {
+                out.failures.push(Finding {
+                    path: path.to_string(),
+                    message: format!("expected {b:?}, got {c:?}"),
+                });
+            }
+        }
+        (b, c) => out.failures.push(Finding {
+            path: path.to_string(),
+            message: format!("type mismatch: baseline {}, current {}", kind(b), kind(c)),
+        }),
+    }
+}
+
+fn kind(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "bool",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+/// Render a comparison as a human-readable report.
+pub fn render(label: &str, cmp: &Comparison) -> String {
+    let mut out = String::new();
+    if cmp.passed() {
+        out.push_str(&format!(
+            "bench-check {label}: OK ({} values checked, {} skipped)\n",
+            cmp.checked, cmp.skipped
+        ));
+    } else {
+        out.push_str(&format!(
+            "bench-check {label}: FAILED ({} regressions; {} values checked, {} skipped)\n",
+            cmp.failures.len(),
+            cmp.checked,
+            cmp.skipped
+        ));
+        for f in &cmp.failures {
+            out.push_str(&format!("  {}: {}\n", f.path, f.message));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn cmp(base: &str, cur: &str) -> Comparison {
+        compare(&parse(base).unwrap(), &parse(cur).unwrap(), &Tolerance::default())
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let doc = r#"{"schema": "v1", "smoke": true, "goodput_rps": 42.5, "wall_s": 3.0}"#;
+        let c = cmp(doc, doc);
+        assert!(c.passed(), "{:?}", c.failures);
+        assert_eq!(c.checked, 4);
+    }
+
+    #[test]
+    fn injected_wall_clock_regression_fails_beyond_tolerance() {
+        let base = r#"{"serial_s": 10.0}"#;
+        assert!(cmp(base, r#"{"serial_s": 12.0}"#).passed(), "+20% is within 25%");
+        let c = cmp(base, r#"{"serial_s": 12.6}"#);
+        assert!(!c.passed(), "+26% must fail");
+        assert!(c.failures[0].message.contains("wall-clock regression"));
+        assert_eq!(c.failures[0].path, "$.serial_s");
+    }
+
+    #[test]
+    fn wall_clock_speedups_never_fail() {
+        assert!(cmp(r#"{"wall_s": 10.0}"#, r#"{"wall_s": 0.5}"#).passed());
+        assert!(cmp(r#"{"fig5_parallel_s": 8.0}"#, r#"{"fig5_parallel_s": 2.0}"#).passed());
+    }
+
+    #[test]
+    fn prefixed_wall_keys_use_wall_tolerance() {
+        let c = cmp(r#"{"fig11_serial_s": 4.0}"#, r#"{"fig11_serial_s": 6.0}"#);
+        assert!(!c.passed(), "+50% on a prefixed wall key must fail");
+    }
+
+    #[test]
+    fn deterministic_drift_fails_even_when_tiny() {
+        let base = r#"{"goodput_rps": 100.0}"#;
+        assert!(cmp(base, r#"{"goodput_rps": 100.0}"#).passed());
+        let c = cmp(base, r#"{"goodput_rps": 100.001}"#);
+        assert!(!c.passed(), "1e-5 relative drift is behavior change, not float noise");
+        assert!(c.failures[0].message.contains("drifted"));
+        // Improvements drift too: the baseline must be re-blessed, not
+        // silently outgrown.
+        assert!(!cmp(base, r#"{"goodput_rps": 120.0}"#).passed());
+    }
+
+    #[test]
+    fn nested_paths_are_reported() {
+        let base = r#"{"comparison_at_peak": {"static_goodput_rps": 50.0}}"#;
+        let cur = r#"{"comparison_at_peak": {"static_goodput_rps": 49.0}}"#;
+        let c = cmp(base, cur);
+        assert_eq!(c.failures[0].path, "$.comparison_at_peak.static_goodput_rps");
+    }
+
+    #[test]
+    fn rows_compare_by_index() {
+        let base = r#"{"rows": [{"goodput_rps": 10.0}, {"goodput_rps": 20.0}]}"#;
+        let ok =
+            r#"{"rows": [{"goodput_rps": 10.0}, {"goodput_rps": 20.0}, {"goodput_rps": 9.9}]}"#;
+        assert!(cmp(base, ok).passed(), "extra current rows are unpinned");
+        let drifted = r#"{"rows": [{"goodput_rps": 10.0}, {"goodput_rps": 21.0}]}"#;
+        assert_eq!(cmp(base, drifted).failures[0].path, "$.rows[1].goodput_rps");
+        let shrunk = r#"{"rows": [{"goodput_rps": 10.0}]}"#;
+        assert!(cmp(base, shrunk).failures[0].message.contains("pins 2 entries"));
+    }
+
+    #[test]
+    fn missing_pinned_key_fails_and_extra_keys_pass() {
+        let c = cmp(r#"{"schema": "v1"}"#, r#"{"other": 1}"#);
+        assert!(!c.passed());
+        assert!(c.failures[0].message.contains("missing"));
+        assert!(cmp(r#"{"a": 1.0}"#, r#"{"a": 1.0, "b": 99.0}"#).passed());
+    }
+
+    #[test]
+    fn machine_dependent_and_null_values_are_skipped() {
+        let base = r#"{"workers": 64, "speedup": 9.0, "fig5_speedup": 3.0,
+                       "goodput_rps": null, "note": "human text"}"#;
+        let cur = r#"{"workers": 2, "speedup": 1.1, "fig5_speedup": 0.9,
+                      "goodput_rps": 55.0, "note": "different"}"#;
+        let c = cmp(base, cur);
+        assert!(c.passed(), "{:?}", c.failures);
+        assert_eq!(c.skipped, 5);
+        assert_eq!(c.checked, 0);
+    }
+
+    #[test]
+    fn schema_and_smoke_flags_are_pinned_exactly() {
+        assert!(!cmp(r#"{"schema": "v1"}"#, r#"{"schema": "v2"}"#).passed());
+        assert!(!cmp(r#"{"smoke": true}"#, r#"{"smoke": false}"#).passed());
+        assert!(!cmp(r#"{"smoke": true}"#, r#"{"smoke": 1}"#).passed(), "type mismatch");
+    }
+
+    #[test]
+    fn custom_tolerance_is_respected() {
+        let t = Tolerance { wall: 1.0, drift: 1e-9 };
+        let base = parse(r#"{"wall_s": 10.0}"#).unwrap();
+        assert!(compare(&base, &parse(r#"{"wall_s": 19.0}"#).unwrap(), &t).passed());
+        assert!(!compare(&base, &parse(r#"{"wall_s": 21.0}"#).unwrap(), &t).passed());
+    }
+
+    #[test]
+    fn render_reports_pass_and_fail() {
+        let ok = cmp(r#"{"a": 1.0}"#, r#"{"a": 1.0}"#);
+        assert!(render("BENCH_x", &ok).contains("OK"));
+        let bad = cmp(r#"{"a": 1.0}"#, r#"{"a": 2.0}"#);
+        let report = render("BENCH_x", &bad);
+        assert!(report.contains("FAILED"));
+        assert!(report.contains("$.a"));
+    }
+}

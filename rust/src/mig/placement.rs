@@ -207,7 +207,8 @@ mod tests {
         let eng = PlacementEngine::new(GpuModel::A100_80GB);
         let four = Placement { profile: prof("4g.40gb"), start: 0 };
         eng.check(&[], &four).unwrap();
-        let err = eng.check(std::slice::from_ref(&four), &Placement { profile: prof("3g.40gb"), start: 4 });
+        let three = Placement { profile: prof("3g.40gb"), start: 4 };
+        let err = eng.check(std::slice::from_ref(&four), &three);
         assert!(
             matches!(err, Err(PlacementError::ExcludedCombination { .. })),
             "expected exclusion, got {err:?}"

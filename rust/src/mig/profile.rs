@@ -29,6 +29,7 @@ pub struct GiProfile {
 }
 
 /// A100-80GB GI profiles (NVIDIA MIG user guide, GA100 80GB table).
+#[rustfmt::skip]
 pub static A100_PROFILES: &[GiProfile] = &[
     GiProfile { name: "1g.10gb", compute_slices: 1, memory_slices: 1, memory_gib: 9.75, max_count: 7, placements: &[0, 1, 2, 3, 4, 5, 6] },
     GiProfile { name: "1g.20gb", compute_slices: 1, memory_slices: 2, memory_gib: 19.5, max_count: 4, placements: &[0, 2, 4, 6] },
@@ -39,6 +40,7 @@ pub static A100_PROFILES: &[GiProfile] = &[
 ];
 
 /// A30 GI profiles (NVIDIA MIG user guide, GA100 24GB/A30 table).
+#[rustfmt::skip]
 pub static A30_PROFILES: &[GiProfile] = &[
     GiProfile { name: "1g.6gb", compute_slices: 1, memory_slices: 1, memory_gib: 5.81, max_count: 4, placements: &[0, 1, 2, 3] },
     GiProfile { name: "2g.12gb", compute_slices: 2, memory_slices: 2, memory_gib: 11.75, max_count: 2, placements: &[0, 2] },

@@ -158,9 +158,11 @@ mod tests {
 
     #[test]
     fn zoo_covers_paper_table4() {
-        for name in
-            ["resnet18", "resnet34", "resnet50", "resnet101", "distilbert", "bert-base", "bert-large"]
-        {
+        let names = [
+            "resnet18", "resnet34", "resnet50", "resnet101", "distilbert", "bert-base",
+            "bert-large",
+        ];
+        for name in names {
             assert!(lookup(name).is_some(), "missing {name}");
         }
     }

@@ -88,7 +88,11 @@ impl BenchReport {
 
     /// Extract one metric as a series per instance: `(instance, [(x, y)])`
     /// with `x` = batch (or seq when sweeping seq).
-    pub fn series(&self, metric: impl Fn(&RunSummary) -> f64, x_is_seq: bool) -> Vec<(String, Vec<(u32, f64)>)> {
+    pub fn series(
+        &self,
+        metric: impl Fn(&RunSummary) -> f64,
+        x_is_seq: bool,
+    ) -> Vec<(String, Vec<(u32, f64)>)> {
         self.instances()
             .into_iter()
             .map(|inst| {
@@ -106,7 +110,8 @@ impl BenchReport {
     /// Render as an aligned text table.
     pub fn render_table(&self) -> String {
         let mut t = Table::new(&[
-            "instance", "batch", "seq", "avg_ms", "p99_ms", "tput", "gract", "fb_mib", "energy_j", "note",
+            "instance", "batch", "seq", "avg_ms", "p99_ms", "tput", "gract", "fb_mib",
+            "energy_j", "note",
         ]);
         for r in &self.rows {
             if let Some(reason) = &r.skipped {

@@ -232,8 +232,13 @@ mod tests {
     fn sequential_layout_allows_full_gpu_sweep() {
         // The paper's Fig 2 methodology: 1g…7g benchmarked one at a time.
         let mut t = fig2_task();
-        t.gi_profiles =
-            vec!["1g.10gb".into(), "2g.20gb".into(), "3g.40gb".into(), "4g.40gb".into(), "7g.80gb".into()];
+        t.gi_profiles = vec![
+            "1g.10gb".into(),
+            "2g.20gb".into(),
+            "3g.40gb".into(),
+            "4g.40gb".into(),
+            "7g.80gb".into(),
+        ];
         let report = ProfileSession::default().run(&t).unwrap();
         assert_eq!(report.rows().len(), 2 * 5);
     }

@@ -96,7 +96,9 @@ impl BenchTask {
             .map(|j| j.as_str().map(str::to_string).ok_or("non-string gi profile".to_string()))
             .collect::<Result<Vec<_>, _>>()?;
         let u32s = |key: &str| -> Option<Vec<u32>> {
-            v.get(key)?.as_arr().map(|a| a.iter().filter_map(|j| j.as_i64()).map(|x| x as u32).collect())
+            v.get(key)?
+                .as_arr()
+                .map(|a| a.iter().filter_map(|j| j.as_i64()).map(|x| x as u32).collect())
         };
         let sweep = if let Some(bs) = u32s("batch_sweep") {
             SweepAxis::Batch(bs)
@@ -134,7 +136,10 @@ impl BenchTask {
                 GpuModel::A100_80GB => "a100".into(),
                 GpuModel::A30_24GB => "a30".into(),
             }),
-            ("gi_profiles", Json::Arr(self.gi_profiles.iter().map(|s| s.as_str().into()).collect())),
+            (
+                "gi_profiles",
+                Json::Arr(self.gi_profiles.iter().map(|s| s.as_str().into()).collect()),
+            ),
             ("model", self.model.as_str().into()),
             ("kind", match self.kind {
                 WorkloadKind::Training => "training".into(),
@@ -150,10 +155,12 @@ impl BenchTask {
         ];
         match &self.sweep {
             SweepAxis::Batch(bs) => {
-                fields.push(("batch_sweep", Json::Arr(bs.iter().map(|&b| (b as i64).into()).collect())))
+                let arr = Json::Arr(bs.iter().map(|&b| (b as i64).into()).collect());
+                fields.push(("batch_sweep", arr))
             }
             SweepAxis::SeqLen(ss) => {
-                fields.push(("seq_sweep", Json::Arr(ss.iter().map(|&s| (s as i64).into()).collect())))
+                let arr = Json::Arr(ss.iter().map(|&s| (s as i64).into()).collect());
+                fields.push(("seq_sweep", arr))
             }
             SweepAxis::None => {}
         }

@@ -96,7 +96,9 @@ pub enum ManifestError {
 impl std::fmt::Display for ManifestError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ManifestError::Io(path, e) => write!(f, "cannot read manifest at {}: {e}", path.display()),
+            ManifestError::Io(path, e) => {
+                write!(f, "cannot read manifest at {}: {e}", path.display())
+            }
             ManifestError::Json(e) => write!(f, "manifest JSON invalid: {e}"),
             ManifestError::Schema(msg) => write!(f, "manifest schema error: {msg}"),
         }

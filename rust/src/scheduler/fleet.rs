@@ -1,0 +1,167 @@
+//! Fleet-wide demand packing: the per-GPU demand planner lifted to N GPUs.
+//!
+//! [`Scheduler::plan_for_demand`] picks the best layout + assignment for a
+//! *single* GPU. At fleet scale (the ROADMAP's "heavy traffic from
+//! millions of users") the same question becomes a packing problem over a
+//! heterogeneous pool: each fleet-wide request class must be split across
+//! the GPUs that replicate it, and each GPU planned for its share. This
+//! module implements the capacity-proportional split the fleet simulator
+//! ([`crate::cluster`]) and its policies plan with:
+//!
+//! * [`capacity_weights`] — each GPU's share of the fleet's compute
+//!   slices (the natural weight for a roofline-modelled fleet: a 7-slice
+//!   A100 absorbs 7/11 of the demand next to a 4-slice A30);
+//! * [`scale_demand`] — clone the fleet-wide demand vector with every
+//!   SLO service's rate scaled to one GPU's share (best-effort training
+//!   jobs replicate whole: every GPU runs its own copy);
+//! * [`plan_fleet_for_demand`] — one [`RatePlan`] per GPU, each produced
+//!   by the exhaustive per-GPU planner at that GPU's demand share.
+
+use crate::mig::gpu::GpuModel;
+use crate::scheduler::{DemandWorkload, RatePlan, Scheduler};
+
+/// A fleet-wide demand plan: one per-GPU [`RatePlan`], index-aligned with
+/// the fleet's GPU list, plus the demand weights the split used.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Per-GPU plans, in fleet order.
+    pub plans: Vec<RatePlan>,
+    /// Demand share of each GPU (sums to 1).
+    pub weights: Vec<f64>,
+    /// Summed per-GPU plan scores (samples/s).
+    pub score: f64,
+}
+
+/// Relative capacity weight of each GPU in the fleet: its compute slices
+/// over the fleet total. Returns an empty vector for an empty fleet.
+pub fn capacity_weights(gpus: &[GpuModel]) -> Vec<f64> {
+    let total: u32 = gpus.iter().map(|g| g.spec().compute_slices).sum();
+    gpus.iter().map(|g| g.spec().compute_slices as f64 / total as f64).collect()
+}
+
+/// Clone the fleet-wide demand vector with every SLO service's demand
+/// rate scaled by `weight` (one GPU's capacity share). Best-effort
+/// workloads (no demand rate) pass through unchanged — training
+/// replicates whole onto every GPU rather than splitting.
+pub fn scale_demand(workloads: &[DemandWorkload], weight: f64) -> Vec<DemandWorkload> {
+    let mut ws = workloads.to_vec();
+    for w in &mut ws {
+        if let Some(d) = w.demand_rps.as_mut() {
+            *d *= weight;
+        }
+    }
+    ws
+}
+
+/// [`Scheduler::plan_for_demand`] generalized to a fleet: split each SLO
+/// service's fleet-wide demand across the GPUs by capacity weight, then
+/// plan every GPU for its share with the exhaustive per-GPU planner.
+///
+/// `schedulers` carries one (cheap) [`Scheduler`] per fleet GPU, in fleet
+/// order. Returns `None` when the fleet is empty, the workload vector is
+/// empty, or any GPU cannot host its demand share within memory, SLO and
+/// the `rho_max` utilization bound.
+pub fn plan_fleet_for_demand(
+    schedulers: &[Scheduler],
+    workloads: &[DemandWorkload],
+    rho_max: f64,
+) -> Option<FleetPlan> {
+    if schedulers.is_empty() || workloads.is_empty() {
+        return None;
+    }
+    let gpus: Vec<GpuModel> = schedulers.iter().map(|s| s.gpu).collect();
+    let weights = capacity_weights(&gpus);
+    let mut plans = Vec::with_capacity(schedulers.len());
+    let mut score = 0.0;
+    for (sched, &w) in schedulers.iter().zip(&weights) {
+        let ws = scale_demand(workloads, w);
+        let plan = sched.plan_for_demand(&ws, rho_max)?;
+        score += plan.score;
+        plans.push(plan);
+    }
+    Some(FleetPlan { plans, weights, score })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::lookup;
+    use crate::workload::spec::WorkloadSpec;
+
+    fn demand_set(rate: f64) -> Vec<DemandWorkload> {
+        let bert = lookup("bert-base").unwrap();
+        vec![
+            DemandWorkload::training(WorkloadSpec::training(bert, 32, 128)),
+            DemandWorkload::service(WorkloadSpec::inference(bert, 8, 128), 40.0, rate),
+            DemandWorkload::service(WorkloadSpec::inference(bert, 8, 128), 40.0, rate),
+        ]
+    }
+
+    fn schedulers(gpus: &[GpuModel]) -> Vec<Scheduler> {
+        gpus.iter().map(|&g| Scheduler::new(g)).collect()
+    }
+
+    #[test]
+    fn homogeneous_weights_are_equal_and_sum_to_one() {
+        let w = capacity_weights(&[GpuModel::A100_80GB; 4]);
+        assert_eq!(w.len(), 4);
+        for x in &w {
+            assert!((x - 0.25).abs() < 1e-12, "{w:?}");
+        }
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(capacity_weights(&[]).is_empty());
+    }
+
+    #[test]
+    fn heterogeneous_weights_follow_compute_slices() {
+        // A100 has 7 compute slices, A30 has 4 → 7/11 vs 4/11.
+        let w = capacity_weights(&[GpuModel::A100_80GB, GpuModel::A30_24GB]);
+        assert!((w[0] - 7.0 / 11.0).abs() < 1e-12, "{w:?}");
+        assert!((w[1] - 4.0 / 11.0).abs() < 1e-12, "{w:?}");
+    }
+
+    #[test]
+    fn scale_demand_touches_only_services() {
+        let ws = scale_demand(&demand_set(60.0), 0.5);
+        assert!(ws[0].demand_rps.is_none(), "training keeps no demand rate");
+        assert_eq!(ws[1].demand_rps, Some(30.0));
+        assert_eq!(ws[2].demand_rps, Some(30.0));
+    }
+
+    #[test]
+    fn fleet_plan_splits_demand_across_the_pair() {
+        // Fleet-wide 120 req/s per service = the known-feasible 60 req/s
+        // per GPU (see the optimizer's peak-demand test) once split
+        // across two A100s.
+        let pair = schedulers(&[GpuModel::A100_80GB, GpuModel::A100_80GB]);
+        let ws = demand_set(120.0);
+        let fp = plan_fleet_for_demand(&pair, &ws, 0.75).expect("two GPUs host the split");
+        assert_eq!(fp.plans.len(), 2);
+        assert_eq!(fp.weights, vec![0.5, 0.5]);
+        assert!(fp.score > 0.0);
+        // Homogeneous fleet, identical shares → identical per-GPU layouts,
+        // each exactly what the single-GPU planner picks for half the load.
+        assert_eq!(fp.plans[0].layout, fp.plans[1].layout);
+        let half = pair[0].plan_for_demand(&scale_demand(&ws, 0.5), 0.75).unwrap();
+        assert_eq!(fp.plans[0].layout, half.layout);
+        assert_eq!(fp.plans[0].score.to_bits(), half.score.to_bits());
+    }
+
+    #[test]
+    fn fleet_plan_matches_single_gpu_planner_for_fleet_of_one() {
+        let scheds = schedulers(&[GpuModel::A100_80GB]);
+        let ws = demand_set(40.0);
+        let fleet = plan_fleet_for_demand(&scheds, &ws, 0.75).unwrap();
+        let solo = scheds[0].plan_for_demand(&ws, 0.75).unwrap();
+        assert_eq!(fleet.plans[0].layout, solo.layout);
+        assert_eq!(fleet.score.to_bits(), solo.score.to_bits());
+    }
+
+    #[test]
+    fn degenerate_inputs_are_rejected() {
+        let scheds = schedulers(&[GpuModel::A100_80GB]);
+        assert!(plan_fleet_for_demand(&[], &demand_set(10.0), 0.75).is_none());
+        assert!(plan_fleet_for_demand(&scheds, &[], 0.75).is_none());
+        assert!(plan_fleet_for_demand(&scheds, &demand_set(1e9), 0.75).is_none());
+    }
+}

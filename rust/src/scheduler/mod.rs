@@ -14,8 +14,10 @@
 //! (and fast); the same interface would admit a heuristic for bigger
 //! spaces.
 
+pub mod fleet;
 pub mod optimizer;
 
+pub use fleet::{capacity_weights, plan_fleet_for_demand, scale_demand, FleetPlan};
 pub use optimizer::{
     Assignment, DemandWorkload, Objective, Plan, RateAssignment, RatePlan, Scheduler, SloWorkload,
 };

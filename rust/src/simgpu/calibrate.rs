@@ -50,7 +50,12 @@ impl Calibration {
     /// `flops / eff_flops(resource)` — with `eff_flops` taken from the
     /// roofline estimate, which already includes saturation and memory
     /// effects.
-    pub fn predict_on(&self, pm: &PerfModel, res: &ExecResource, cost: &StepCost) -> Option<StepEstimate> {
+    pub fn predict_on(
+        &self,
+        pm: &PerfModel,
+        res: &ExecResource,
+        cost: &StepCost,
+    ) -> Option<StepEstimate> {
         pm.step(res, cost).ok()
     }
 

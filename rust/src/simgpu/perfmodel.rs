@@ -162,7 +162,10 @@ mod tests {
             pm.throughput(&est, b)
         };
         let gain_32_128 = tp(128) / tp(32);
-        assert!(gain_32_128 < 1.15, "1g throughput gain 32→128 = {gain_32_128}, expected ≈flat");
+        assert!(
+            gain_32_128 < 1.15,
+            "1g throughput gain 32→128 = {gain_32_128}, expected ≈flat"
+        );
         let gain_8_32 = tp(32) / tp(8);
         assert!(gain_8_32 > 1.15, "1g should still gain from 8→32, got {gain_8_32}");
     }
@@ -251,7 +254,11 @@ mod tests {
         let pm = PerfModel::default();
         let m = zoo::lookup("bert-base").unwrap();
         let est = pm.step(&gi("7g.80gb"), &infer_cost(m, 1, 128, Precision::Half)).unwrap();
-        assert!(est.gract < 0.3, "batch-1 on 7g should be badly underutilized, gract={}", est.gract);
+        assert!(
+            est.gract < 0.3,
+            "batch-1 on 7g should be badly underutilized, gract={}",
+            est.gract
+        );
         let est1g = pm.step(&gi("1g.10gb"), &infer_cost(m, 1, 128, Precision::Half)).unwrap();
         assert!(est1g.gract > est.gract, "1g must be better utilized than 7g at batch 1");
     }

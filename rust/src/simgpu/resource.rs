@@ -117,7 +117,11 @@ impl ExecResource {
     /// Peak tensor FLOP/s available to this resource.
     pub fn peak_flops(&self, half_precision: bool) -> f64 {
         let s = self.spec();
-        let whole = if half_precision { s.peak_tf16 } else { s.peak_tf32 };
+        let whole = if half_precision {
+            s.peak_tf16
+        } else {
+            s.peak_tf32
+        };
         whole * 1e12 * self.compute_fraction
     }
 

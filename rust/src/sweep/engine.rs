@@ -177,7 +177,10 @@ mod tests {
     fn try_run_reports_first_error_in_input_order() {
         let points: Vec<u32> = (0..64).collect();
         let r: Result<Vec<u32>, String> = SweepEngine::new(4)
-            .try_run(&points, |&p| if p % 10 == 7 { Err(format!("bad {p}")) } else { Ok(p) });
+            .try_run(
+                &points,
+                |&p| if p % 10 == 7 { Err(format!("bad {p}")) } else { Ok(p) },
+            );
         assert_eq!(r.unwrap_err(), "bad 7");
     }
 

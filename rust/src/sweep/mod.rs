@@ -25,6 +25,7 @@ pub mod grid;
 pub use engine::SweepEngine;
 pub use grid::{grid2, seeds};
 
+use crate::cluster::{FleetConfig, FleetError, FleetOutcome};
 use crate::orchestrator::{OrchError, OrchestratorConfig, OrchestratorOutcome};
 use crate::simgpu::perfmodel::PerfError;
 use crate::workload::serving::{ServingOutcome, ServingSim};
@@ -49,5 +50,15 @@ pub fn run_orchestrator(
     engine: &SweepEngine,
     runs: &[OrchestratorConfig],
 ) -> Result<Vec<OrchestratorOutcome>, OrchError> {
+    engine.try_run(runs, |cfg| cfg.run())
+}
+
+/// Run a batch of fleet simulations across the worker pool, with the same
+/// ordering and determinism contract as [`run_serving`]: results come
+/// back in input order and are bit-identical at any worker count.
+pub fn run_fleet(
+    engine: &SweepEngine,
+    runs: &[FleetConfig],
+) -> Result<Vec<FleetOutcome>, FleetError> {
     engine.try_run(runs, |cfg| cfg.run())
 }

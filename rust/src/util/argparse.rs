@@ -251,7 +251,12 @@ mod tests {
             "migperf",
             "bench",
             "Run a benchmark",
-            &[OptSpec { name: "model", value: "NAME", help: "model to run", default: Some("bert-base") }],
+            &[OptSpec {
+                name: "model",
+                value: "NAME",
+                help: "model to run",
+                default: Some("bert-base"),
+            }],
         );
         assert!(h.contains("--model <NAME>"));
         assert!(h.contains("[default: bert-base]"));

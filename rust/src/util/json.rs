@@ -76,13 +76,6 @@ impl Json {
         self.as_obj().and_then(|m| m.get(key))
     }
 
-    /// Compact serialization.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
-    }
-
     /// Pretty serialization with 2-space indentation.
     pub fn to_pretty(&self) -> String {
         let mut out = String::new();
@@ -445,9 +438,13 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Compact serialization; `Json::to_string()` (via [`ToString`]) is the
+/// canonical way to serialize a document on one line.
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.to_string())
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
     }
 }
 

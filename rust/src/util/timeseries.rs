@@ -112,7 +112,8 @@ impl Series {
     /// window. Used by the visualizer/exporter to bound output size.
     pub fn downsample(&self, dt: f64) -> Series {
         assert!(dt > 0.0);
-        let mut out = Series { name: self.name.clone(), tags: self.tags.clone(), points: Vec::new() };
+        let mut out =
+            Series { name: self.name.clone(), tags: self.tags.clone(), points: Vec::new() };
         if self.points.is_empty() {
             return out;
         }

@@ -170,7 +170,11 @@ impl BurstyArrival {
 
 impl Arrival for BurstyArrival {
     fn next_gap(&mut self) -> f64 {
-        let rate = if self.in_burst { self.high_rate } else { self.low_rate };
+        let rate = if self.in_burst {
+            self.high_rate
+        } else {
+            self.low_rate
+        };
         let gap = self.rng.exponential(rate);
         self.state_left_s -= gap;
         if self.state_left_s <= 0.0 {

@@ -231,15 +231,16 @@ impl ServingSim {
                     }
                 }
                 Ev::Done { server } => {
-                    let started_at = servers[server].queue.pop_front().expect("done without request");
+                    let started_at =
+                        servers[server].queue.pop_front().expect("done without request");
                     servers[server].busy = false;
                     busy_count -= 1;
                     let latency_ms = (t - started_at) * 1e3;
                     collectors[server].record_completion(t, latency_ms, self.spec.batch as u64);
                     let service_s = t - servers[server].in_service_since;
                     let res_for_energy = self.resource_of(server);
-                    collectors[server]
-                        .record_energy(em.power_w(res_for_energy, isolated[server].gract) * service_s);
+                    let energy = em.power_w(res_for_energy, isolated[server].gract) * service_s;
+                    collectors[server].record_energy(energy);
                     collectors[server].record_gract(isolated[server].gract);
                     collectors[server].record_fb(isolated[server].fb_bytes);
                     // Closed loop: immediately issue the next request.
@@ -321,11 +322,7 @@ pub fn pool_collectors(
     collectors: &[MetricsCollector],
     per_server: &[RunSummary],
 ) -> RunSummary {
-    let mut merged = MetricsCollector::new(label);
-    for c in collectors {
-        merged.merge(c);
-    }
-    let mut pooled = merged.summarize();
+    let mut pooled = MetricsCollector::pooled(label, collectors).summarize();
     // Each server is its own serving instance with its own measurement
     // window: the figures' aggregate throughput is the sum of per-server
     // rates, and the experiment duration is the longest server window.
@@ -488,7 +485,11 @@ mod tests {
         let out = sim(mode, LoadMode::Closed { requests_per_server: 200 }, 8);
         let slow_p99 = out.per_server[2].p99_latency_ms;
         let rel = (out.pooled.p99_latency_ms / slow_p99 - 1.0).abs();
-        assert!(rel < 0.03, "pooled p99 {} vs slow-server p99 {slow_p99}", out.pooled.p99_latency_ms);
+        assert!(
+            rel < 0.03,
+            "pooled p99 {} vs slow-server p99 {slow_p99}",
+            out.pooled.p99_latency_ms
+        );
         let true_max =
             out.per_server.iter().map(|s| s.max_latency_ms).fold(0.0, f64::max);
         assert_eq!(out.pooled.max_latency_ms, true_max);

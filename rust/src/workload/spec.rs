@@ -30,7 +30,13 @@ pub struct WorkloadSpec {
 impl WorkloadSpec {
     /// Inference workload with the paper's defaults (fp16).
     pub fn inference(model: &'static ModelDesc, batch: u32, seq: u32) -> Self {
-        WorkloadSpec { model, batch, seq, precision: Precision::Half, kind: WorkloadKind::Inference }
+        WorkloadSpec {
+            model,
+            batch,
+            seq,
+            precision: Precision::Half,
+            kind: WorkloadKind::Inference,
+        }
     }
 
     /// Training workload with the paper's defaults (fp16).

@@ -54,7 +54,8 @@ pub fn run_training(
         collector.record_energy(em.step_energy_j(res, &est));
         collector.record_gract(est.gract);
         collector.record_fb(est.fb_bytes);
-        sampler.report(t, InstantState { gract: est.gract, fb_bytes: est.fb_bytes, power_w: power });
+        let state = InstantState { gract: est.gract, fb_bytes: est.fb_bytes, power_w: power };
+        sampler.report(t, state);
     }
     collector.attach_series(sampler.finish(t));
     Ok(collector.summarize())

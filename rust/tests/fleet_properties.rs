@@ -1,0 +1,229 @@
+//! Fleet-level properties.
+//!
+//! Contracts from the fleet work: (a) conservation — every admitted
+//! request lands on exactly one replica and is served exactly once, for
+//! every router × mode combination; (b) rolling repartition never routes
+//! to a draining or reconfiguring GPU; (c) fleet sweeps are
+//! bitwise-deterministic at 1/2/4/16 workers; (d) every layout any fleet
+//! policy adopts passes the MIG placement rules; (e) the fleet demand
+//! packer splits demand by capacity and each per-GPU plan passes the
+//! placement rules.
+
+use migperf::cluster::{FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass, RouterKind};
+use migperf::mig::gpu::GpuModel;
+use migperf::mig::placement::PlacementEngine;
+use migperf::models::zoo;
+use migperf::orchestrator::{ReactiveParams, ReconfigCost};
+use migperf::scheduler::{plan_fleet_for_demand, DemandWorkload, Scheduler};
+use migperf::sweep::{self, SweepEngine};
+use migperf::workload::arrival::ArrivalSpec;
+use migperf::workload::spec::WorkloadSpec;
+
+fn diurnal_fleet(
+    n: usize,
+    policy: FleetPolicyKind,
+    router: RouterKind,
+    mode: RepartitionMode,
+    seed: u64,
+) -> FleetConfig {
+    let bert = zoo::lookup("bert-base").unwrap();
+    let class = RequestClass {
+        spec: WorkloadSpec::inference(bert, 8, 128),
+        slo_ms: 40.0,
+        arrival: ArrivalSpec::Diurnal {
+            base_rate: 6.0 * n as f64,
+            peak_rate: 60.0 * n as f64,
+            period_s: 120.0,
+        },
+    };
+    FleetConfig {
+        gpus: vec![GpuModel::A100_80GB; n],
+        train: Some(WorkloadSpec::training(bert, 32, 128)),
+        classes: vec![class.clone(), class],
+        router,
+        policy,
+        mode,
+        cost: ReconfigCost::default(),
+        duration_s: 240.0,
+        window_s: 10.0,
+        rho_max: 0.75,
+        seed,
+    }
+}
+
+fn reactive() -> FleetPolicyKind {
+    FleetPolicyKind::Reactive(ReactiveParams::default())
+}
+
+fn all_routers() -> Vec<RouterKind> {
+    vec![
+        RouterKind::parse("rr").unwrap(),
+        RouterKind::parse("least").unwrap(),
+        RouterKind::parse("affinity").unwrap(),
+    ]
+}
+
+/// (a) Conservation: across routers and modes, every admitted request is
+/// routed (or stranded-then-routed) exactly once and completes exactly
+/// once — per class and in aggregate.
+#[test]
+fn every_admitted_request_lands_on_exactly_one_instance() {
+    for router in all_routers() {
+        for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+            let out = diurnal_fleet(2, reactive(), router.clone(), mode, 11).run().unwrap();
+            let tag = format!("{}/{}", router.name(), mode.name());
+            assert!(out.arrived > 500, "{tag}: arrived {}", out.arrived);
+            assert_eq!(
+                out.completed, out.arrived,
+                "{}/{}: every admitted request must complete exactly once",
+                router.name(),
+                mode.name()
+            );
+            assert_eq!(
+                out.routed, out.arrived,
+                "{}/{}: with a sibling always available, every request routes on arrival",
+                router.name(),
+                mode.name()
+            );
+            let per_class_completed: u64 = out.per_class.iter().map(|s| s.completed).sum();
+            assert_eq!(per_class_completed, out.arrived);
+            for (c, s) in out.per_class.iter().enumerate() {
+                assert_eq!(
+                    s.completed, out.arrived_per_class[c],
+                    "{}/{}: class {c} served exactly its own arrivals",
+                    router.name(),
+                    mode.name()
+                );
+            }
+            // The per-GPU view double-counts nothing either.
+            let per_gpu_completed: u64 = out.per_gpu.iter().map(|s| s.completed).sum();
+            assert_eq!(per_gpu_completed, out.arrived);
+        }
+    }
+}
+
+/// (b) Rolling repartition must never enqueue a request on a GPU that is
+/// draining or reconfiguring — and the property is non-vacuous: the
+/// diurnal peak forces at least one repartition.
+#[test]
+fn rolling_never_routes_to_unavailable_gpus() {
+    for router in all_routers() {
+        let out = diurnal_fleet(2, reactive(), router.clone(), RepartitionMode::Rolling, 5)
+            .run()
+            .unwrap();
+        assert!(
+            out.reconfigurations >= 1,
+            "{}: scenario must actually repartition",
+            router.name()
+        );
+        assert_eq!(
+            out.unavailable_routes, 0,
+            "{}: rolling routed to a draining/reconfiguring GPU",
+            router.name()
+        );
+    }
+}
+
+/// (c) Fleet sweeps are bitwise-deterministic at 1/2/4/16 workers.
+#[test]
+fn fleet_sweep_bitwise_deterministic_across_worker_counts() {
+    let mut grid: Vec<FleetConfig> = Vec::new();
+    for policy in [FleetPolicyKind::Static, reactive()] {
+        for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+            for seed in [2024u64, 2025u64] {
+                grid.push(diurnal_fleet(2, policy.clone(), RouterKind::LeastLoaded, mode, seed));
+            }
+        }
+    }
+    let baseline = sweep::run_fleet(&SweepEngine::new(1), &grid).unwrap();
+    for workers in [2usize, 4, 16] {
+        let outs = sweep::run_fleet(&SweepEngine::new(workers), &grid).unwrap();
+        assert_eq!(outs.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&outs) {
+            assert_eq!(a.policy, b.policy, "workers={workers}");
+            assert_eq!(a.arrived, b.arrived, "workers={workers}");
+            assert_eq!(a.completed, b.completed, "workers={workers}");
+            assert_eq!(a.routed, b.routed, "workers={workers}");
+            assert_eq!(a.train_steps, b.train_steps, "workers={workers}");
+            assert_eq!(a.reconfigurations, b.reconfigurations, "workers={workers}");
+            assert_eq!(a.migrated_requests, b.migrated_requests, "workers={workers}");
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "workers={workers}");
+            assert_eq!(
+                a.slo_violation_frac.to_bits(),
+                b.slo_violation_frac.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(
+                a.pooled.p99_latency_ms.to_bits(),
+                b.pooled.p99_latency_ms.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(
+                a.reconfig_downtime_s.to_bits(),
+                b.reconfig_downtime_s.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(a.decisions.len(), b.decisions.len(), "workers={workers}");
+            for (da, db) in a.decisions.iter().zip(&b.decisions) {
+                assert_eq!(da.t.to_bits(), db.t.to_bits(), "workers={workers}");
+                assert_eq!(da.gpu, db.gpu, "workers={workers}");
+                assert_eq!(da.to, db.to, "workers={workers}");
+                assert_eq!(da.migrated, db.migrated, "workers={workers}");
+            }
+        }
+    }
+}
+
+/// (d) Every layout any policy adopts on any fleet GPU passes the MIG
+/// placement rules.
+#[test]
+fn fleet_adopted_layouts_are_valid() {
+    let engine = PlacementEngine::new(GpuModel::A100_80GB);
+    for policy in [FleetPolicyKind::Static, reactive()] {
+        let router = RouterKind::LeastLoaded;
+        let out = diurnal_fleet(2, policy.clone(), router, RepartitionMode::Rolling, 7)
+            .run()
+            .unwrap();
+        for (g, adopted) in out.layouts.iter().enumerate() {
+            assert!(!adopted.is_empty());
+            for layout in adopted {
+                engine.check_layout(&layout.placements).unwrap_or_else(|e| {
+                    panic!(
+                        "{}: gpu {g} adopted invalid layout {:?}: {e}",
+                        policy.name(),
+                        layout.profile_names()
+                    )
+                });
+            }
+        }
+    }
+}
+
+/// (e) The fleet demand packer splits by capacity weight and every
+/// per-GPU plan passes that GPU's placement rules.
+#[test]
+fn fleet_demand_plans_pass_placement_rules() {
+    let resnet = zoo::lookup("resnet50").unwrap();
+    let workloads = vec![
+        DemandWorkload::service(WorkloadSpec::inference(resnet, 4, 224), 200.0, 40.0),
+        DemandWorkload::service(WorkloadSpec::inference(resnet, 4, 224), 200.0, 40.0),
+    ];
+    let gpus = [GpuModel::A100_80GB, GpuModel::A100_80GB, GpuModel::A30_24GB];
+    let schedulers: Vec<Scheduler> = gpus.iter().map(|&g| Scheduler::new(g)).collect();
+    let fp = plan_fleet_for_demand(&schedulers, &workloads, 0.75).expect("feasible fleet");
+    assert_eq!(fp.plans.len(), 3);
+    assert!((fp.weights.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    assert!(fp.weights[0] > fp.weights[2], "A100 takes a larger share than A30");
+    for (g, plan) in fp.plans.iter().enumerate() {
+        let engine = PlacementEngine::new(gpus[g]);
+        engine.check_layout(&plan.layout.placements).unwrap_or_else(|e| {
+            panic!("gpu {g} plan layout {:?} invalid: {e}", plan.profile_names())
+        });
+        // Injective assignment over that GPU's instances.
+        let mut seen = vec![false; plan.layout.len()];
+        for a in &plan.assignments {
+            assert!(!seen[a.instance], "instance double-booked on gpu {g}: {:?}", plan.assignments);
+            seen[a.instance] = true;
+        }
+    }
+}

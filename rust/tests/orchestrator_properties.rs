@@ -54,7 +54,11 @@ fn prop_optimizer_plans_respect_slos() {
                 slo_ms,
             ));
         }
-        let objective = if g.bool() { Objective::MaxThroughput } else { Objective::MinEnergy };
+        let objective = if g.bool() {
+            Objective::MaxThroughput
+        } else {
+            Objective::MinEnergy
+        };
         if let Some(plan) = sched.plan(&ws, objective) {
             for a in &plan.assignments {
                 if let Some(slo) = ws[a.workload].slo_ms {
@@ -155,7 +159,8 @@ fn orchestrator_adopted_layouts_are_valid_for_every_policy() {
         assert!(!out.layouts.is_empty());
         for layout in &out.layouts {
             engine.check_layout(&layout.placements).unwrap_or_else(|e| {
-                panic!("{}: invalid adopted layout {:?}: {e}", policy.name(), layout.profile_names())
+                let names = layout.profile_names();
+                panic!("{}: invalid adopted layout {names:?}: {e}", policy.name())
             });
         }
     }

@@ -359,7 +359,11 @@ fn prop_scheduler_plans_are_sound() {
             })
             .collect();
         let objective =
-            if g.bool() { Objective::MaxThroughput } else { Objective::MinEnergy };
+            if g.bool() {
+                Objective::MaxThroughput
+            } else {
+                Objective::MinEnergy
+            };
         let Some(plan) = sched.plan(&workloads, objective) else {
             return Ok(()); // infeasible is a legal outcome
         };

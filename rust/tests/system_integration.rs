@@ -206,7 +206,10 @@ fn cli_binary_smoke() {
     assert!(!out.status.success(), "excluded combination must fail the CLI");
 
     let out = std::process::Command::new(bin)
-        .args(["bench", "--gpu", "a30", "--model", "resnet18", "--gi", "1g.6gb", "--batch", "1,4", "--iters", "10", "--csv"])
+        .args([
+            "bench", "--gpu", "a30", "--model", "resnet18", "--gi", "1g.6gb", "--batch", "1,4",
+            "--iters", "10", "--csv",
+        ])
         .output()
         .unwrap();
     assert!(out.status.success());
