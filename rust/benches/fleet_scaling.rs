@@ -9,7 +9,11 @@
 //! 2. **rolling vs in-place** — executing a repartition by migrating the
 //!    chosen GPU's traffic to siblings (rolling) strictly lowers the
 //!    SLO-violation fraction at the diurnal peak compared to letting the
-//!    queued requests wait out the churn (in-place).
+//!    queued requests wait out the churn (in-place);
+//! 3. **goodput under partial outages** — the same scenario rerun at
+//!    three availability levels (no faults, light and heavy seeded
+//!    MTBF/MTTR crash schedules), asserting request conservation
+//!    (completed + failed + lost = arrived) at every level.
 //!
 //! The whole grid runs serial and parallel through the sweep engine and
 //! asserts bit-identical checksums (the determinism contract).
@@ -21,7 +25,8 @@
 use std::time::Instant;
 
 use migperf::cluster::{
-    FleetConfig, FleetOutcome, FleetPolicyKind, RepartitionMode, RequestClass, RouterKind,
+    FaultPlan, FleetConfig, FleetOutcome, FleetPolicyKind, RepartitionMode, RequestClass,
+    RouterKind,
 };
 use migperf::mig::gpu::GpuModel;
 use migperf::models::zoo;
@@ -67,6 +72,7 @@ fn scenario(
         duration_s,
         window_s,
         rho_max: 0.75,
+        faults: FaultPlan::none(),
         seed,
     }
 }
@@ -253,6 +259,84 @@ fn main() {
         }
     }
 
+    // Goodput under partial outages: the versus-size scenario at three
+    // availability levels. Crash schedules derive from the run seed, so
+    // the outage grid inherits the bitwise-determinism contract.
+    let mttr_s = 20.0;
+    let outage_levels: &[(&str, Option<f64>)] = &[
+        ("none", None),
+        ("light", Some(duration_s / 2.0)),
+        ("heavy", Some(duration_s / 8.0)),
+    ];
+    let mut outage_grid: Vec<FleetConfig> = Vec::new();
+    for (_, mtbf) in outage_levels {
+        for &seed in &seeds {
+            let mut cfg = scenario(
+                versus_size,
+                reactive.clone(),
+                RouterKind::LeastLoaded,
+                RepartitionMode::Rolling,
+                seed,
+                duration_s,
+                period_s,
+                window_s,
+            );
+            if let Some(mtbf_s) = mtbf {
+                cfg.faults =
+                    FaultPlan::from_mtbf(versus_size, duration_s, *mtbf_s, mttr_s, seed ^ 0xFA17);
+            }
+            outage_grid.push(cfg);
+        }
+    }
+    let outage_serial = sweep::run_fleet(&serial, &outage_grid).expect("outage grid");
+    let outage_outs = sweep::run_fleet(&parallel, &outage_grid).expect("outage grid");
+    assert_eq!(
+        checksum(&outage_serial).to_bits(),
+        checksum(&outage_outs).to_bits(),
+        "faulted fleet sweeps must be bit-identical at any worker count"
+    );
+    println!("\ngoodput under partial outages (fleet size {versus_size}, mttr {mttr_s}s):");
+    let mut outage_rows: Vec<(&str, f64, f64, f64, u64, u64, u64, u64)> = Vec::new();
+    for (li, &(level, mtbf)) in outage_levels.iter().enumerate() {
+        let runs: Vec<&FleetOutcome> =
+            outage_outs[li * seeds.len()..(li + 1) * seeds.len()].iter().collect();
+        for out in &runs {
+            assert_eq!(
+                out.completed + out.failed_requests + out.lost_in_crash,
+                out.arrived,
+                "{level}: conservation must hold under faults"
+            );
+        }
+        let goodput = stats::mean(&runs.iter().map(|o| o.goodput_rps).collect::<Vec<_>>());
+        let avail = stats::mean(&runs.iter().map(|o| o.availability).collect::<Vec<_>>());
+        let viol = stats::mean(&runs.iter().map(|o| o.slo_violation_frac).collect::<Vec<_>>());
+        let crashes: u64 = runs.iter().map(|o| o.gpu_crashes).sum();
+        let failed: u64 = runs.iter().map(|o| o.failed_requests).sum();
+        let lost: u64 = runs.iter().map(|o| o.lost_in_crash).sum();
+        let retried: u64 = runs.iter().map(|o| o.retried_requests).sum();
+        match mtbf {
+            None => {
+                assert_eq!(avail, 1.0, "fault-free level must report full availability");
+                assert_eq!(crashes + failed + lost + retried, 0);
+            }
+            Some(_) => assert!(avail <= 1.0, "{level}: availability {avail} cannot exceed 1"),
+        }
+        println!(
+            "  {level:>5}: goodput {goodput:.1} rps, availability {:.2}%, viol {:.2}%, \
+             {crashes} crashes, {retried} retried, {lost} lost, {failed} failed",
+            avail * 100.0,
+            viol * 100.0
+        );
+        outage_rows.push((level, goodput, avail, viol, crashes, retried, lost, failed));
+    }
+    let heavy = outage_rows.last().expect("levels non-empty");
+    assert!(
+        heavy.4 >= 1,
+        "the heavy outage level must actually crash GPUs (mtbf {} over {duration_s}s)",
+        duration_s / 8.0
+    );
+    assert!(heavy.2 < 1.0, "heavy crashes must dent availability, got {}", heavy.2);
+
     let rows: Vec<Json> = grid
         .iter()
         .zip(&outs)
@@ -309,6 +393,30 @@ fn main() {
                 ("rolling_downtime_s", Json::Num(rolling_downtime)),
                 ("inplace_downtime_s", Json::Num(inplace_downtime)),
             ]),
+        ),
+        (
+            "outage",
+            Json::Arr(
+                outage_levels
+                    .iter()
+                    .zip(&outage_rows)
+                    .map(|(&(level, mtbf), row)| {
+                        Json::obj(vec![
+                            ("level", Json::Str(level.to_string())),
+                            ("mtbf_s", mtbf.map(Json::Num).unwrap_or(Json::Null)),
+                            ("mttr_s", Json::Num(mttr_s)),
+                            ("goodput_rps", Json::Num(row.1)),
+                            ("availability", Json::Num(row.2)),
+                            ("slo_violation_frac", Json::Num(row.3)),
+                            ("gpu_crashes", Json::Num(row.4 as f64)),
+                            ("retried_requests", Json::Num(row.5 as f64)),
+                            ("lost_in_crash", Json::Num(row.6 as f64)),
+                            ("failed_requests", Json::Num(row.7 as f64)),
+                            ("conservation_ok", Json::Bool(true)),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
         ("rows", Json::Arr(rows)),
     ]);

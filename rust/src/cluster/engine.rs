@@ -19,6 +19,21 @@
 //! downtime is amortized across siblings instead of being paid by queued
 //! requests. Everything is seeded and iteration-order deterministic, so
 //! fleet runs are bit-identical at any sweep worker count.
+//!
+//! On top of reconfiguration the engine injects *failures* from the
+//! [`FaultPlan`](super::faults::FaultPlan) in the config: whole-GPU and
+//! per-replica crashes dump their queued and in-flight requests, which
+//! are retried through the router within a per-request budget (keeping
+//! their original arrival timestamps, so latency spans the outage),
+//! shed by the retry-storm guard, or lost outright. The router's health
+//! check ([`GpuHealth`]) excludes crashed GPUs in both repartition
+//! disciplines, crashes abort any repartition in progress on the victim,
+//! and policy proposals pause while any GPU is down (reconfigurations
+//! only roll through a fully-serving fleet). Request conservation
+//! extends across the crash paths: `completed + failed_requests +
+//! lost_in_crash = arrived`, pinned by `tests/fleet_properties.rs`.
+//! Because the crash schedule is part of the config, faulted sweeps stay
+//! bit-identical at any worker count.
 
 use std::collections::VecDeque;
 
@@ -36,8 +51,9 @@ use crate::util::stats::percentile_sorted;
 use crate::workload::arrival::{Arrival, ArrivalError, ArrivalSpec};
 use crate::workload::spec::WorkloadSpec;
 
+use super::faults::{FaultPlan, FaultRecord};
 use super::policy::{FleetCtx, FleetObs, FleetPolicyKind, GpuObs};
-use super::router::{RoutePolicy, RouterKind};
+use super::router::{GpuHealth, RoutePolicy, RouterKind};
 
 /// One fleet-wide request class: a workload, its SLO, and the aggregate
 /// arrival stream the router spreads across the fleet.
@@ -103,6 +119,9 @@ pub struct FleetConfig {
     pub window_s: f64,
     /// Utilization bound the planner sizes replicas for (ρ_max).
     pub rho_max: f64,
+    /// Failure-injection schedule and ingress retry policy
+    /// ([`FaultPlan::none`] for a fault-free run).
+    pub faults: FaultPlan,
     /// PRNG seed (class arrival streams derive per-class seeds from it).
     pub seed: u64,
 }
@@ -218,19 +237,46 @@ pub struct FleetOutcome {
     /// Requests enqueued on a GPU that was draining or reconfiguring
     /// (only possible in in-place mode; zero under rolling).
     pub unavailable_routes: u64,
+    /// Requests that terminally failed: shed by the retry-storm guard or
+    /// still stranded at the fleet ingress when the run ended (possible
+    /// only under permanent failures).
+    pub failed_requests: u64,
+    /// Crash-dumped requests re-admitted at the ingress (each re-admission
+    /// counts once; a request crashed twice counts twice).
+    pub retried_requests: u64,
+    /// Requests dumped by a crash with their retry budget exhausted.
+    pub lost_in_crash: u64,
+    /// Whole-GPU crashes executed.
+    pub gpu_crashes: u64,
+    /// Instance-level (single-replica) crashes executed.
+    pub instance_crashes: u64,
+    /// Per-GPU seconds spent crashed within the nominal horizon
+    /// `[0, duration_s]` (whole-GPU crashes only; instance crashes do not
+    /// count as GPU downtime), in fleet order.
+    pub downtime_s_per_gpu: Vec<f64>,
+    /// Fleet availability over the horizon:
+    /// `1 − Σ downtime / (fleet size × duration)`.
+    pub availability: f64,
+    /// Executed fault timeline, in crash order.
+    pub fault_log: Vec<FaultRecord>,
     /// Every layout each GPU adopted, in order (initial layout first).
     pub layouts: Vec<Vec<Layout>>,
     /// Per-repartition decision log.
     pub decisions: Vec<FleetDecision>,
 }
 
+/// Completion and reconfiguration events carry the epoch they were
+/// scheduled under; a crash bumps the victim's epoch, so in-flight events
+/// for work the crash destroyed arrive stale and are ignored.
 #[derive(Debug, Clone, Copy)]
 enum Ev {
     Arrive { class: usize },
-    ServeDone { gpu: usize, class: usize },
-    TrainDone { gpu: usize },
+    ServeDone { gpu: usize, class: usize, epoch: u64 },
+    TrainDone { gpu: usize, epoch: u64 },
     Tick,
-    ReconfigDone { gpu: usize },
+    ReconfigDone { gpu: usize, epoch: u64 },
+    Crash { fault: usize },
+    Recover { fault: usize },
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -238,13 +284,29 @@ enum Phase {
     Running,
     Draining,
     Reconfiguring,
+    Down,
+}
+
+/// One queued request: its original arrival time (never re-stamped, so
+/// queueing latency spans outages) and how many crash retries it has
+/// already consumed.
+#[derive(Debug, Clone, Copy)]
+struct Req {
+    arrived: f64,
+    tries: u32,
 }
 
 #[derive(Debug)]
 struct Replica {
-    queue: VecDeque<f64>, // arrival timestamps; front = in service when busy
+    queue: VecDeque<Req>, // front = in service when busy
     busy: bool,
     busy_since: f64,
+    /// Crashed by an instance-level fault; excluded from routing until
+    /// the fault recovers.
+    down: bool,
+    /// Bumped when a crash aborts the in-flight request, staling its
+    /// pending `ServeDone`.
+    epoch: u64,
     window_arrivals: u64,
     window_completed: u64,
     window_violations: u64,
@@ -258,6 +320,8 @@ impl Replica {
             queue: VecDeque::new(),
             busy: false,
             busy_since: 0.0,
+            down: false,
+            epoch: 0,
             window_arrivals: 0,
             window_completed: 0,
             window_violations: 0,
@@ -280,11 +344,27 @@ struct GpuState {
     phase: Phase,
     replicas: Vec<Replica>, // class order
     train_busy: bool,
+    /// Bumped when a crash aborts the in-flight training step.
+    train_epoch: u64,
+    /// Bumped when a crash aborts an in-flight reconfiguration.
+    reconfig_epoch: u64,
     window_train_steps: u64,
     svc_est: Vec<StepEstimate>,
     svc_power: Vec<f64>,
     train_est: Option<StepEstimate>,
     pending: Option<PendingReconfig>,
+}
+
+impl GpuState {
+    /// Project the internal lifecycle onto the router's health view.
+    fn health(&self) -> GpuHealth {
+        match self.phase {
+            Phase::Running => GpuHealth::Serving,
+            Phase::Draining => GpuHealth::Draining,
+            Phase::Reconfiguring => GpuHealth::Reconfiguring,
+            Phase::Down => GpuHealth::Down,
+        }
+    }
 }
 
 fn start_replica(
@@ -296,9 +376,10 @@ fn start_replica(
     service_s: f64,
 ) {
     debug_assert!(!r.busy, "replica g{gpu}c{class} already busy");
+    debug_assert!(!r.down, "replica g{gpu}c{class} is crashed");
     r.busy = true;
     r.busy_since = now;
-    des.schedule_in(service_s, Ev::ServeDone { gpu, class });
+    des.schedule_in(service_s, Ev::ServeDone { gpu, class, epoch: r.epoch });
 }
 
 /// Drain barrier for one GPU: once every replica and the training job are
@@ -314,13 +395,18 @@ fn maybe_begin_reconfig(
     let Some(pend) = &gs.pending else { return };
     if gs.phase == Phase::Draining && !gs.train_busy && gs.replicas.iter().all(|r| !r.busy) {
         gs.phase = Phase::Reconfiguring;
-        des.schedule_in(cost.latency_s(current, &pend.plan.layout), Ev::ReconfigDone { gpu });
+        des.schedule_in(
+            cost.latency_s(current, &pend.plan.layout),
+            Ev::ReconfigDone { gpu, epoch: gs.reconfig_epoch },
+        );
     }
 }
 
 /// Ask the router for a destination GPU under the configured discipline.
-/// `available`/`depth` are caller-owned scratch buffers (refilled here),
-/// so the DES hot path performs no per-event heap allocation.
+/// Availability runs through the [`GpuHealth`] check, so crashed GPUs and
+/// crashed replicas are excluded in both disciplines. `available`/`depth`
+/// are caller-owned scratch buffers (refilled here), so the DES hot path
+/// performs no per-event heap allocation.
 fn route_request(
     router: &mut dyn RoutePolicy,
     gpus_state: &[GpuState],
@@ -331,14 +417,79 @@ fn route_request(
 ) -> Option<usize> {
     available.clear();
     depth.clear();
+    let inplace = mode == RepartitionMode::InPlace;
     for gs in gpus_state {
-        available.push(match mode {
-            RepartitionMode::Rolling => gs.phase == Phase::Running,
-            RepartitionMode::InPlace => true,
-        });
+        available.push(gs.health().may_route(inplace, gs.replicas[class].down));
         depth.push(gs.replicas[class].queue.len());
     }
     router.route(class, available, depth)
+}
+
+/// Dump one replica's queued and in-flight requests at a crash, staling
+/// any pending `ServeDone` and crediting the partial busy time to the
+/// window counters.
+fn flush_replica(r: &mut Replica, class: usize, now: f64, dumped: &mut Vec<(usize, Req)>) {
+    if r.busy {
+        r.window_busy_s += now - r.busy_since;
+        r.busy = false;
+        r.epoch += 1;
+    }
+    for req in r.queue.drain(..) {
+        dumped.push((class, req));
+    }
+}
+
+/// Route one request and enqueue it on the chosen GPU, starting the
+/// replica when it is idle and serving. Returns the destination, or
+/// `None` when no replica may take the class (the caller strands the
+/// request). This is the single dispatch rule shared by arrivals, drain
+/// migration, crash retries and stranded re-dispatch.
+#[allow(clippy::too_many_arguments)] // DES plumbing, not an API
+fn dispatch_req(
+    des: &mut Des<Ev>,
+    router: &mut dyn RoutePolicy,
+    gpus_state: &mut [GpuState],
+    mode: RepartitionMode,
+    class: usize,
+    req: Req,
+    now: f64,
+    available: &mut Vec<bool>,
+    depth: &mut Vec<usize>,
+) -> Option<usize> {
+    let g = route_request(router, gpus_state, mode, class, available, depth)?;
+    let gs = &mut gpus_state[g];
+    gs.replicas[class].queue.push_back(req);
+    if gs.phase == Phase::Running && !gs.replicas[class].busy {
+        let service_s = gs.svc_est[class].seconds;
+        start_replica(des, &mut gs.replicas[class], g, class, now, service_s);
+    }
+    Some(g)
+}
+
+/// Re-dispatch requests stranded at the fleet ingress, oldest first per
+/// class, stopping as soon as the router finds no destination. Called
+/// whenever capacity returns (a reconfiguration completes or a crash
+/// recovers).
+#[allow(clippy::too_many_arguments)] // DES plumbing, not an API
+fn drain_stranded(
+    des: &mut Des<Ev>,
+    router: &mut dyn RoutePolicy,
+    gpus_state: &mut [GpuState],
+    mode: RepartitionMode,
+    stranded: &mut [VecDeque<Req>],
+    t: f64,
+    available: &mut Vec<bool>,
+    depth: &mut Vec<usize>,
+) {
+    for (c, q) in stranded.iter_mut().enumerate() {
+        while let Some(&req) = q.front() {
+            let sent = dispatch_req(des, router, gpus_state, mode, c, req, t, available, depth);
+            if sent.is_none() {
+                break;
+            }
+            q.pop_front();
+        }
+    }
 }
 
 impl FleetConfig {
@@ -385,6 +536,9 @@ impl FleetConfig {
             }
             c.arrival.validate()?;
         }
+        self.faults
+            .validate(self.gpus.len(), self.classes.len(), self.duration_s)
+            .map_err(FleetError::Invalid)?;
         self.cost.validate().map_err(FleetError::Invalid)
     }
 
@@ -468,6 +622,8 @@ impl FleetConfig {
                 phase: Phase::Running,
                 replicas: (0..n_classes).map(|_| Replica::new()).collect(),
                 train_busy: false,
+                train_epoch: 0,
+                reconfig_epoch: 0,
                 window_train_steps: 0,
                 svc_est,
                 svc_power,
@@ -497,7 +653,7 @@ impl FleetConfig {
         let mut arrived_per_class: Vec<u64> = vec![0; n_classes];
         let mut slo_met: Vec<u64> = vec![0; n_classes];
         let mut violations: Vec<u64> = vec![0; n_classes];
-        let mut stranded: Vec<VecDeque<f64>> = vec![VecDeque::new(); n_classes];
+        let mut stranded: Vec<VecDeque<Req>> = vec![VecDeque::new(); n_classes];
         let mut last_change: Vec<f64> = vec![0.0; n_gpus];
         let mut layouts: Vec<Vec<Layout>> =
             plans.iter().map(|p| vec![p.layout.clone()]).collect();
@@ -508,6 +664,14 @@ impl FleetConfig {
         let mut unavailable_routes: u64 = 0;
         let mut train_steps: u64 = 0;
         let mut reconfig_downtime = 0.0;
+        let mut failed_requests: u64 = 0;
+        let mut retried_requests: u64 = 0;
+        let mut lost_in_crash: u64 = 0;
+        let mut gpu_crashes: u64 = 0;
+        let mut instance_crashes: u64 = 0;
+        let mut downtime_per_gpu: Vec<f64> = vec![0.0; n_gpus];
+        let mut down_since: Vec<f64> = vec![0.0; n_gpus];
+        let mut fault_log: Vec<FaultRecord> = Vec::new();
 
         // Router scratch buffers, reused across every routing decision.
         let mut avail_scratch: Vec<bool> = Vec::with_capacity(n_gpus);
@@ -515,7 +679,7 @@ impl FleetConfig {
 
         let mut des: Des<Ev> = Des::new();
         // Seed the calendar: one stream per class, training on every GPU,
-        // the first policy tick.
+        // the first policy tick, the crash schedule.
         for (c, a) in arrivals.iter_mut().enumerate() {
             let t0 = a.next_gap();
             if t0.is_finite() && t0 <= self.duration_s {
@@ -525,11 +689,14 @@ impl FleetConfig {
         for (g, gs) in gpus_state.iter_mut().enumerate() {
             if let Some(est) = &gs.train_est {
                 gs.train_busy = true;
-                des.schedule_at(est.seconds, Ev::TrainDone { gpu: g });
+                des.schedule_at(est.seconds, Ev::TrainDone { gpu: g, epoch: 0 });
             }
         }
         if self.window_s < self.duration_s {
             des.schedule_at(self.window_s, Ev::Tick);
+        }
+        for (i, inj) in self.faults.injections.iter().enumerate() {
+            des.schedule_at(inj.t, Ev::Crash { fault: i });
         }
 
         while let Some((t, ev)) = des.next() {
@@ -540,11 +707,15 @@ impl FleetConfig {
                     if gap.is_finite() && t + gap <= self.duration_s {
                         des.schedule_at(t + gap, Ev::Arrive { class });
                     }
-                    match route_request(
+                    let req = Req { arrived: t, tries: 0 };
+                    match dispatch_req(
+                        &mut des,
                         router.as_mut(),
-                        &gpus_state,
+                        &mut gpus_state,
                         self.mode,
                         class,
+                        req,
+                        t,
                         &mut avail_scratch,
                         &mut depth_scratch,
                     ) {
@@ -553,28 +724,25 @@ impl FleetConfig {
                             if gpus_state[g].phase != Phase::Running {
                                 unavailable_routes += 1;
                             }
-                            let gs = &mut gpus_state[g];
-                            gs.replicas[class].window_arrivals += 1;
-                            gs.replicas[class].queue.push_back(t);
-                            if gs.phase == Phase::Running && !gs.replicas[class].busy {
-                                let service_s = gs.svc_est[class].seconds;
-                                let r = &mut gs.replicas[class];
-                                start_replica(&mut des, r, g, class, t, service_s);
-                            }
+                            gpus_state[g].replicas[class].window_arrivals += 1;
                         }
                         None => {
-                            stranded[class].push_back(t);
+                            stranded[class].push_back(req);
                             stranded_requests += 1;
                         }
                     }
                 }
-                Ev::ServeDone { gpu, class } => {
+                Ev::ServeDone { gpu, class, epoch } => {
+                    if gpus_state[gpu].replicas[class].epoch != epoch {
+                        continue; // stale: the in-flight request was lost to a crash
+                    }
                     {
                         let gs = &mut gpus_state[gpu];
                         let arrived_at = gs.replicas[class]
                             .queue
                             .pop_front()
-                            .expect("completion without request");
+                            .expect("completion without request")
+                            .arrived;
                         gs.replicas[class].busy = false;
                         let busy_s = t - gs.replicas[class].busy_since;
                         gs.replicas[class].window_busy_s += busy_s;
@@ -612,10 +780,13 @@ impl FleetConfig {
                             &plans[gpu].layout,
                             &self.cost,
                         ),
-                        Phase::Reconfiguring => {}
+                        Phase::Reconfiguring | Phase::Down => {}
                     }
                 }
-                Ev::TrainDone { gpu } => {
+                Ev::TrainDone { gpu, epoch } => {
+                    if gpus_state[gpu].train_epoch != epoch {
+                        continue; // stale: the in-flight step was lost to a crash
+                    }
                     gpus_state[gpu].train_busy = false;
                     train_steps += 1;
                     gpus_state[gpu].window_train_steps += 1;
@@ -625,7 +796,8 @@ impl FleetConfig {
                                 let gs = &mut gpus_state[gpu];
                                 if let Some(est) = &gs.train_est {
                                     gs.train_busy = true;
-                                    des.schedule_in(est.seconds, Ev::TrainDone { gpu });
+                                    let epoch = gs.train_epoch;
+                                    des.schedule_in(est.seconds, Ev::TrainDone { gpu, epoch });
                                 }
                             }
                         }
@@ -636,7 +808,7 @@ impl FleetConfig {
                             &plans[gpu].layout,
                             &self.cost,
                         ),
-                        Phase::Reconfiguring => {}
+                        Phase::Reconfiguring | Phase::Down => {}
                     }
                 }
                 Ev::Tick => {
@@ -704,35 +876,22 @@ impl FleetConfig {
                                             keep.min(gpus_state[g].replicas[c].queue.len());
                                         let moved =
                                             gpus_state[g].replicas[c].queue.split_off(keep);
-                                        for ts in moved {
+                                        for req in moved {
                                             migrated_here += 1;
-                                            match route_request(
+                                            let sent = dispatch_req(
+                                                &mut des,
                                                 router.as_mut(),
-                                                &gpus_state,
+                                                &mut gpus_state,
                                                 RepartitionMode::Rolling,
                                                 c,
+                                                req,
+                                                t,
                                                 &mut avail_scratch,
                                                 &mut depth_scratch,
-                                            ) {
-                                                Some(h) => {
-                                                    let hs = &mut gpus_state[h];
-                                                    hs.replicas[c].queue.push_back(ts);
-                                                    if !hs.replicas[c].busy {
-                                                        let service_s = hs.svc_est[c].seconds;
-                                                        start_replica(
-                                                            &mut des,
-                                                            &mut hs.replicas[c],
-                                                            h,
-                                                            c,
-                                                            t,
-                                                            service_s,
-                                                        );
-                                                    }
-                                                }
-                                                None => {
-                                                    stranded[c].push_back(ts);
-                                                    stranded_requests += 1;
-                                                }
+                                            );
+                                            if sent.is_none() {
+                                                stranded[c].push_back(req);
+                                                stranded_requests += 1;
                                             }
                                         }
                                     }
@@ -765,7 +924,10 @@ impl FleetConfig {
                         des.schedule_at(t + self.window_s, Ev::Tick);
                     }
                 }
-                Ev::ReconfigDone { gpu } => {
+                Ev::ReconfigDone { gpu, epoch } => {
+                    if gpus_state[gpu].reconfig_epoch != epoch {
+                        continue; // stale: a crash aborted this reconfiguration
+                    }
                     let pend = gpus_state[gpu]
                         .pending
                         .take()
@@ -796,43 +958,28 @@ impl FleetConfig {
                     });
                     layouts[gpu].push(plans[gpu].layout.clone());
                     last_change[gpu] = t;
-                    // Re-dispatch requests stranded while every GPU was
-                    // down (fleets of one under rolling repartition).
-                    for (c, q) in stranded.iter_mut().enumerate() {
-                        while let Some(&ts) = q.front() {
-                            match route_request(
-                                router.as_mut(),
-                                &gpus_state,
-                                self.mode,
-                                c,
-                                &mut avail_scratch,
-                                &mut depth_scratch,
-                            ) {
-                                Some(h) => {
-                                    q.pop_front();
-                                    let hs = &mut gpus_state[h];
-                                    hs.replicas[c].queue.push_back(ts);
-                                    if hs.phase == Phase::Running && !hs.replicas[c].busy {
-                                        let service_s = hs.svc_est[c].seconds;
-                                        start_replica(
-                                            &mut des,
-                                            &mut hs.replicas[c],
-                                            h,
-                                            c,
-                                            t,
-                                            service_s,
-                                        );
-                                    }
-                                }
-                                None => break,
-                            }
-                        }
-                    }
-                    // Put the resumed GPU back to work.
+                    // Re-dispatch requests stranded while no replica could
+                    // take them (fleets of one under rolling repartition,
+                    // or crashes that downed every destination).
+                    drain_stranded(
+                        &mut des,
+                        router.as_mut(),
+                        &mut gpus_state,
+                        self.mode,
+                        &mut stranded,
+                        t,
+                        &mut avail_scratch,
+                        &mut depth_scratch,
+                    );
+                    // Put the resumed GPU back to work (crashed replicas
+                    // stay idle until their fault recovers).
                     {
                         let gs = &mut gpus_state[gpu];
                         for c in 0..n_classes {
-                            if !gs.replicas[c].queue.is_empty() && !gs.replicas[c].busy {
+                            if !gs.replicas[c].down
+                                && !gs.replicas[c].queue.is_empty()
+                                && !gs.replicas[c].busy
+                            {
                                 let service_s = gs.svc_est[c].seconds;
                                 start_replica(&mut des, &mut gs.replicas[c], gpu, c, t, service_s);
                             }
@@ -840,16 +987,172 @@ impl FleetConfig {
                         if t < self.duration_s {
                             if let Some(est) = &gs.train_est {
                                 gs.train_busy = true;
+                                let epoch = gs.train_epoch;
                                 des.schedule_in(
                                     self.cost.train_restore_s + est.seconds,
-                                    Ev::TrainDone { gpu },
+                                    Ev::TrainDone { gpu, epoch },
                                 );
+                            }
+                        }
+                    }
+                }
+                Ev::Crash { fault } => {
+                    let inj = self.faults.injections[fault];
+                    let g = inj.gpu;
+                    // Dump every affected queue first, then decide retry /
+                    // shed / lose — retries must never land back on a
+                    // replica this crash is taking down.
+                    let mut dumped: Vec<(usize, Req)> = Vec::new();
+                    match inj.class {
+                        None => {
+                            gpu_crashes += 1;
+                            down_since[g] = t;
+                            let gs = &mut gpus_state[g];
+                            if gs.phase == Phase::Reconfiguring {
+                                // Abort the in-flight churn; the pending
+                                // plan is discarded and the GPU recovers
+                                // on its old layout.
+                                gs.reconfig_epoch += 1;
+                            }
+                            gs.pending = None;
+                            gs.phase = Phase::Down;
+                            if gs.train_busy {
+                                gs.train_busy = false;
+                                gs.train_epoch += 1;
+                            }
+                            for c in 0..n_classes {
+                                flush_replica(&mut gs.replicas[c], c, t, &mut dumped);
+                            }
+                        }
+                        Some(c) => {
+                            instance_crashes += 1;
+                            let gs = &mut gpus_state[g];
+                            gs.replicas[c].down = true;
+                            flush_replica(&mut gs.replicas[c], c, t, &mut dumped);
+                            if gs.phase == Phase::Draining {
+                                // Losing the in-flight request may
+                                // complete the drain barrier.
+                                maybe_begin_reconfig(&mut des, gs, g, &plans[g].layout, &self.cost);
+                            }
+                        }
+                    }
+                    let mut lost_here: u64 = 0;
+                    let mut retried_here: u64 = 0;
+                    let mut shed_here: u64 = 0;
+                    for (c, req) in dumped {
+                        if req.tries >= self.faults.retry_budget {
+                            lost_here += 1;
+                        } else if retried_here >= self.faults.storm_guard {
+                            shed_here += 1;
+                        } else {
+                            retried_here += 1;
+                            let req = Req { arrived: req.arrived, tries: req.tries + 1 };
+                            let sent = dispatch_req(
+                                &mut des,
+                                router.as_mut(),
+                                &mut gpus_state,
+                                self.mode,
+                                c,
+                                req,
+                                t,
+                                &mut avail_scratch,
+                                &mut depth_scratch,
+                            );
+                            if sent.is_none() {
+                                stranded[c].push_back(req);
+                                stranded_requests += 1;
+                            }
+                        }
+                    }
+                    lost_in_crash += lost_here;
+                    retried_requests += retried_here;
+                    failed_requests += shed_here;
+                    fault_log.push(FaultRecord {
+                        t,
+                        gpu: g,
+                        class: inj.class,
+                        down_s: inj.down_s,
+                        lost: lost_here,
+                        retried: retried_here,
+                        shed: shed_here,
+                    });
+                    if inj.down_s.is_finite() {
+                        des.schedule_in(inj.down_s, Ev::Recover { fault });
+                    }
+                }
+                Ev::Recover { fault } => {
+                    let inj = self.faults.injections[fault];
+                    let g = inj.gpu;
+                    match inj.class {
+                        None => {
+                            // Downtime is measured against the nominal
+                            // horizon, so availability stays in [0, 1]
+                            // even when recovery lands in the backlog
+                            // tail past `duration_s`.
+                            downtime_per_gpu[g] +=
+                                (t.min(self.duration_s) - down_since[g]).max(0.0);
+                            let gs = &mut gpus_state[g];
+                            gs.phase = Phase::Running;
+                            if t < self.duration_s {
+                                if let Some(est) = &gs.train_est {
+                                    gs.train_busy = true;
+                                    let epoch = gs.train_epoch;
+                                    des.schedule_in(
+                                        self.cost.train_restore_s + est.seconds,
+                                        Ev::TrainDone { gpu: g, epoch },
+                                    );
+                                }
+                            }
+                        }
+                        Some(c) => {
+                            gpus_state[g].replicas[c].down = false;
+                        }
+                    }
+                    drain_stranded(
+                        &mut des,
+                        router.as_mut(),
+                        &mut gpus_state,
+                        self.mode,
+                        &mut stranded,
+                        t,
+                        &mut avail_scratch,
+                        &mut depth_scratch,
+                    );
+                    // Defensive restart: queues on the recovered GPU are
+                    // normally empty (the crash flushed them and routing
+                    // excluded it while down).
+                    let gs = &mut gpus_state[g];
+                    if gs.phase == Phase::Running {
+                        for c in 0..n_classes {
+                            if !gs.replicas[c].down
+                                && !gs.replicas[c].queue.is_empty()
+                                && !gs.replicas[c].busy
+                            {
+                                let service_s = gs.svc_est[c].seconds;
+                                start_replica(&mut des, &mut gs.replicas[c], g, c, t, service_s);
                             }
                         }
                     }
                 }
             }
         }
+
+        // A permanently-failed fleet can leave requests stranded with
+        // nothing left to recover: they fail, they are not silently
+        // dropped (conservation: completed + failed + lost = arrived).
+        for q in stranded.iter_mut() {
+            failed_requests += q.len() as u64;
+            q.clear();
+        }
+        // GPUs still down at the end pay downtime up to the nominal
+        // horizon.
+        for (g, gs) in gpus_state.iter().enumerate() {
+            if gs.phase == Phase::Down {
+                downtime_per_gpu[g] += (self.duration_s - down_since[g]).max(0.0);
+            }
+        }
+        let availability =
+            1.0 - downtime_per_gpu.iter().sum::<f64>() / (n_gpus as f64 * self.duration_s);
 
         // Pool metrics: per class across GPUs, per GPU across classes, and
         // fleet-wide. Conventions match the serving pooler: throughput is
@@ -916,6 +1219,14 @@ impl FleetConfig {
             migrated_requests,
             stranded_requests,
             unavailable_routes,
+            failed_requests,
+            retried_requests,
+            lost_in_crash,
+            gpu_crashes,
+            instance_crashes,
+            downtime_s_per_gpu: downtime_per_gpu,
+            availability,
+            fault_log,
             layouts,
             decisions,
         })
@@ -961,6 +1272,7 @@ mod tests {
             duration_s,
             window_s: 10.0,
             rho_max: 0.75,
+            faults: FaultPlan::none(),
             seed: 2024,
         }
     }
@@ -1129,6 +1441,7 @@ mod tests {
             duration_s: 120.0,
             window_s: 10.0,
             rho_max: 0.75,
+            faults: FaultPlan::none(),
             seed: 7,
         };
         let out = cfg.run().unwrap();
@@ -1179,6 +1492,165 @@ mod tests {
         let mut cfg = base();
         cfg.classes[0].slo_ms = 0.01; // below launch overhead
         assert!(matches!(cfg.run(), Err(FleetError::Infeasible(_))));
+
+        let mut cfg = base();
+        cfg.faults.injections.push(crate::cluster::faults::FaultInjection {
+            t: 500.0, // beyond duration_s = 240
+            gpu: 0,
+            class: None,
+            down_s: 5.0,
+        });
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.faults.injections.push(crate::cluster::faults::FaultInjection {
+            t: 50.0,
+            gpu: 9, // out of range
+            class: None,
+            down_s: 5.0,
+        });
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+    }
+
+    #[test]
+    fn fault_free_runs_report_full_availability() {
+        let out = demo(
+            2,
+            FleetPolicyKind::Static,
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(out.failed_requests, 0);
+        assert_eq!(out.retried_requests, 0);
+        assert_eq!(out.lost_in_crash, 0);
+        assert_eq!(out.gpu_crashes, 0);
+        assert_eq!(out.instance_crashes, 0);
+        assert!(out.fault_log.is_empty());
+        assert_eq!(out.downtime_s_per_gpu, vec![0.0, 0.0]);
+        assert_eq!(out.availability, 1.0);
+    }
+
+    #[test]
+    fn gpu_crash_sheds_to_the_sibling_and_conserves_requests() {
+        let mut cfg = demo(
+            2,
+            FleetPolicyKind::Static,
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        );
+        cfg.faults = FaultPlan {
+            injections: vec![crate::cluster::faults::FaultInjection {
+                t: 100.0,
+                gpu: 0,
+                class: None,
+                down_s: 30.0,
+            }],
+            ..FaultPlan::none()
+        };
+        let out = cfg.run().unwrap();
+        assert_eq!(out.gpu_crashes, 1);
+        assert_eq!(out.fault_log.len(), 1);
+        assert_eq!(out.fault_log[0].gpu, 0);
+        assert_eq!(out.fault_log[0].t, 100.0);
+        assert_eq!(
+            out.completed + out.failed_requests + out.lost_in_crash,
+            out.arrived,
+            "conservation must hold across the crash"
+        );
+        assert!((out.downtime_s_per_gpu[0] - 30.0).abs() < 1e-9);
+        assert_eq!(out.downtime_s_per_gpu[1], 0.0);
+        let expected = 1.0 - 30.0 / (2.0 * 240.0);
+        assert!((out.availability - expected).abs() < 1e-12, "{}", out.availability);
+        // With a sibling up and the default retry budget, dumped requests
+        // are retried rather than lost.
+        assert_eq!(out.lost_in_crash, 0);
+        assert_eq!(out.failed_requests, 0);
+        assert_eq!(out.completed, out.arrived);
+    }
+
+    #[test]
+    fn permanent_crash_on_a_fleet_of_one_fails_the_tail() {
+        let bert = lookup("bert-base").unwrap();
+        let class = RequestClass {
+            spec: WorkloadSpec::inference(bert, 8, 128),
+            slo_ms: 40.0,
+            arrival: ArrivalSpec::Poisson { rate: 20.0 },
+        };
+        let mut cfg = FleetConfig {
+            gpus: vec![GpuModel::A100_80GB],
+            train: Some(WorkloadSpec::training(bert, 32, 128)),
+            classes: vec![class.clone(), class],
+            router: RouterKind::LeastLoaded,
+            policy: FleetPolicyKind::Static,
+            mode: RepartitionMode::Rolling,
+            cost: ReconfigCost::default(),
+            duration_s: 240.0,
+            window_s: 10.0,
+            rho_max: 0.75,
+            faults: FaultPlan::none(),
+            seed: 11,
+        };
+        cfg.faults = FaultPlan {
+            injections: vec![crate::cluster::faults::FaultInjection {
+                t: 60.0,
+                gpu: 0,
+                class: None,
+                down_s: f64::INFINITY,
+            }],
+            retry_budget: 0,
+            ..FaultPlan::none()
+        };
+        let out = cfg.run().unwrap();
+        assert_eq!(out.gpu_crashes, 1);
+        assert_eq!(
+            out.completed + out.failed_requests + out.lost_in_crash,
+            out.arrived,
+            "conservation must hold under a permanent failure"
+        );
+        assert!(
+            out.failed_requests > 0,
+            "arrivals after the permanent crash must fail, not vanish"
+        );
+        assert_eq!(out.retried_requests, 0, "retry budget 0 never re-admits");
+        assert!((out.downtime_s_per_gpu[0] - 180.0).abs() < 1e-9, "60 → 240 is down");
+        assert!((out.availability - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faulted_runs_are_bitwise_deterministic_per_seed() {
+        let mk = || {
+            let mut cfg = demo(
+                2,
+                reactive(),
+                RouterKind::LeastLoaded,
+                RepartitionMode::Rolling,
+                240.0,
+                120.0,
+            );
+            cfg.faults = FaultPlan::from_mtbf(2, 240.0, 80.0, 15.0, 99);
+            cfg.run().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits());
+        assert_eq!(a.pooled.p99_latency_ms.to_bits(), b.pooled.p99_latency_ms.to_bits());
+        assert_eq!(a.availability.to_bits(), b.availability.to_bits());
+        assert_eq!(a.arrived, b.arrived);
+        assert_eq!(a.retried_requests, b.retried_requests);
+        assert_eq!(a.lost_in_crash, b.lost_in_crash);
+        assert_eq!(a.failed_requests, b.failed_requests);
+        assert_eq!(a.fault_log.len(), b.fault_log.len());
+        assert_eq!(
+            a.completed + a.failed_requests + a.lost_in_crash,
+            a.arrived,
+            "conservation must hold under the stochastic schedule"
+        );
     }
 
     #[test]

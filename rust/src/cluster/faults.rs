@@ -1,0 +1,324 @@
+//! Deterministic failure injection for the fleet simulator.
+//!
+//! The ROADMAP's post-fleet item: "GPU/instance crashes mid-run, router
+//! health checks, request retries with budgets — measure goodput under
+//! partial outages." A [`FaultPlan`] is a *schedule*, not a live random
+//! process: every crash and recovery time is fixed before the simulation
+//! starts (either written out explicitly or drawn once from the seeded
+//! MTBF/MTTR generator), so a fault plan is plain config data and fleet
+//! sweeps keep the bit-identical-at-any-worker-count contract — the crash
+//! schedule travels with the [`FleetConfig`](super::FleetConfig) into the
+//! sweep grid exactly like an arrival spec does.
+//!
+//! Two crash granularities are modelled:
+//!
+//! * **GPU crash** (`class: None`) — the whole GPU goes dark: every
+//!   replica's queued and in-flight requests are dumped, the training
+//!   step in flight is lost, and the router health check excludes the GPU
+//!   until recovery (in *both* repartition modes — a crashed GPU is not a
+//!   reconfiguring one);
+//! * **instance crash** (`class: Some(c)`) — only class `c`'s replica on
+//!   that GPU dies; the GPU keeps serving its other classes and training.
+//!
+//! Dumped requests carry a per-request retry budget: within budget they
+//! are re-dispatched through the router (keeping their original arrival
+//! timestamps, so latency spans the outage), beyond it they are lost
+//! (`lost_in_crash`). A retry-storm guard caps how many requests a single
+//! crash may re-admit; the overflow is shed (`failed_requests`). The
+//! engine extends its conservation invariant across all of it:
+//! `completed + failed + lost_in_crash = admitted`.
+
+use crate::util::prng::Prng;
+
+/// Default per-request retry budget after a crash.
+pub const DEFAULT_RETRY_BUDGET: u32 = 1;
+
+/// One scheduled fault: a GPU- or instance-level crash at `t` lasting
+/// `down_s` simulated seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultInjection {
+    /// Crash time, simulated seconds (must land inside the run horizon).
+    pub t: f64,
+    /// Fleet index of the affected GPU.
+    pub gpu: usize,
+    /// `None` crashes the whole GPU; `Some(c)` crashes only class `c`'s
+    /// replica on that GPU.
+    pub class: Option<usize>,
+    /// Seconds until recovery. `f64::INFINITY` models a permanent
+    /// failure: the GPU (or replica) never comes back within the run.
+    pub down_s: f64,
+}
+
+impl FaultInjection {
+    /// Recovery time of this fault (`+inf` for permanent failures).
+    pub fn end(&self) -> f64 {
+        self.t + self.down_s
+    }
+}
+
+/// A deterministic crash/recovery schedule plus the ingress retry policy.
+///
+/// Plain data: clone freely into sweep grids. The default plan is empty
+/// (no faults), which leaves the engine's behavior bit-identical to a
+/// build without failure injection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// The crash schedule, in injection order (sorted by time).
+    pub injections: Vec<FaultInjection>,
+    /// How many times a request dumped by a crash may be re-dispatched
+    /// before it is counted `lost_in_crash`.
+    pub retry_budget: u32,
+    /// Retry-storm guard: the maximum number of requests a single crash
+    /// event may re-admit at the ingress; overflow is shed and counted
+    /// `failed_requests`. `u64::MAX` disables the guard.
+    pub storm_guard: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            injections: Vec::new(),
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            storm_guard: u64::MAX,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults injected.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when no fault is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.injections.is_empty()
+    }
+
+    /// Builder-style retry budget override.
+    pub fn with_retries(mut self, retry_budget: u32) -> Self {
+        self.retry_budget = retry_budget;
+        self
+    }
+
+    /// Builder-style storm-guard override (`u64::MAX` = unbounded).
+    pub fn with_storm_guard(mut self, storm_guard: u64) -> Self {
+        self.storm_guard = storm_guard;
+        self
+    }
+
+    /// Stochastic whole-GPU crash schedule: per GPU, alternating
+    /// exponential up-times (mean `mtbf_s`) and down-times (mean
+    /// `mttr_s`) drawn once from the seeded PRNG. The same
+    /// `(n_gpus, duration_s, mtbf_s, mttr_s, seed)` tuple always yields
+    /// the same schedule, and successive faults on a GPU never overlap by
+    /// construction, so the result validates and sweeps deterministically.
+    pub fn from_mtbf(
+        n_gpus: usize,
+        duration_s: f64,
+        mtbf_s: f64,
+        mttr_s: f64,
+        seed: u64,
+    ) -> FaultPlan {
+        assert!(
+            mtbf_s.is_finite() && mtbf_s > 0.0,
+            "mtbf_s {mtbf_s} must be positive and finite"
+        );
+        assert!(
+            mttr_s.is_finite() && mttr_s > 0.0,
+            "mttr_s {mttr_s} must be positive and finite"
+        );
+        assert!(
+            duration_s.is_finite() && duration_s > 0.0,
+            "duration_s {duration_s} must be positive and finite"
+        );
+        let mut injections = Vec::new();
+        let mut seeder = Prng::new(seed);
+        for gpu in 0..n_gpus {
+            let mut rng = seeder.split();
+            let mut t = rng.exponential(1.0 / mtbf_s);
+            while t < duration_s {
+                // Strictly positive repair times keep per-GPU faults
+                // non-overlapping (validate() enforces the same).
+                let down_s = rng.exponential(1.0 / mttr_s).max(1e-9);
+                injections.push(FaultInjection { t, gpu, class: None, down_s });
+                t += down_s + rng.exponential(1.0 / mtbf_s);
+            }
+        }
+        // Total order independent of generation order: by time, then GPU.
+        injections.sort_by(|a, b| {
+            a.t.partial_cmp(&b.t).expect("finite fault times").then(a.gpu.cmp(&b.gpu))
+        });
+        FaultPlan { injections, ..FaultPlan::default() }
+    }
+
+    /// Reject schedules the engine cannot execute: out-of-range targets,
+    /// crash times outside the arrival horizon, non-positive repair
+    /// times, and overlapping faults on the same GPU (the engine's
+    /// crash/recovery bookkeeping assumes at most one open fault per
+    /// GPU at a time, regardless of granularity).
+    pub fn validate(
+        &self,
+        n_gpus: usize,
+        n_classes: usize,
+        duration_s: f64,
+    ) -> Result<(), String> {
+        for (i, inj) in self.injections.iter().enumerate() {
+            if !(inj.t.is_finite() && inj.t >= 0.0 && inj.t < duration_s) {
+                return Err(format!(
+                    "fault {i}: t = {} must lie in [0, duration_s = {duration_s})",
+                    inj.t
+                ));
+            }
+            if inj.down_s <= 0.0 || inj.down_s.is_nan() {
+                return Err(format!(
+                    "fault {i}: down_s = {} must be positive (infinity = permanent)",
+                    inj.down_s
+                ));
+            }
+            if inj.gpu >= n_gpus {
+                return Err(format!(
+                    "fault {i}: gpu {} out of range (fleet size {n_gpus})",
+                    inj.gpu
+                ));
+            }
+            if let Some(c) = inj.class {
+                if c >= n_classes {
+                    return Err(format!(
+                        "fault {i}: class {c} out of range ({n_classes} classes)"
+                    ));
+                }
+            }
+        }
+        for gpu in 0..n_gpus {
+            let mut per: Vec<&FaultInjection> =
+                self.injections.iter().filter(|f| f.gpu == gpu).collect();
+            per.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("finite fault times"));
+            for w in per.windows(2) {
+                if w[0].end() > w[1].t {
+                    return Err(format!(
+                        "faults on gpu {gpu} overlap: [{}, {}) and [{}, {})",
+                        w[0].t,
+                        w[0].end(),
+                        w[1].t,
+                        w[1].end()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One *executed* fault, as recorded by the engine — the fault timeline
+/// exported alongside the decision log.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    /// Crash time, simulated seconds.
+    pub t: f64,
+    /// Fleet index of the affected GPU.
+    pub gpu: usize,
+    /// `None` for a whole-GPU crash, `Some(c)` for an instance crash.
+    pub class: Option<usize>,
+    /// Scheduled outage length (`+inf` = permanent).
+    pub down_s: f64,
+    /// Requests dumped by this crash whose retry budget was exhausted.
+    pub lost: u64,
+    /// Requests dumped by this crash and re-admitted at the ingress.
+    pub retried: u64,
+    /// Requests shed by the retry-storm guard at this crash.
+    pub shed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mtbf_schedules_are_deterministic_per_seed() {
+        let a = FaultPlan::from_mtbf(4, 1000.0, 100.0, 10.0, 7);
+        let b = FaultPlan::from_mtbf(4, 1000.0, 100.0, 10.0, 7);
+        assert_eq!(a, b, "same seed must yield the same schedule");
+        assert!(!a.is_empty(), "mtbf << duration must schedule crashes");
+        let c = FaultPlan::from_mtbf(4, 1000.0, 100.0, 10.0, 8);
+        assert_ne!(a, c, "different seeds must diverge");
+    }
+
+    #[test]
+    fn mtbf_schedules_validate_and_sort() {
+        let p = FaultPlan::from_mtbf(3, 500.0, 60.0, 15.0, 42);
+        p.validate(3, 2, 500.0).expect("generated schedules are valid");
+        assert!(
+            p.injections.windows(2).all(|w| w[0].t <= w[1].t),
+            "injections sorted by time"
+        );
+        assert!(p.injections.iter().all(|f| f.class.is_none()));
+        assert!(p.injections.iter().all(|f| f.t < 500.0 && f.down_s > 0.0));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_schedules() {
+        let ok = FaultInjection { t: 10.0, gpu: 0, class: None, down_s: 5.0 };
+        let plan = |inj: Vec<FaultInjection>| FaultPlan { injections: inj, ..FaultPlan::default() };
+        assert!(plan(vec![ok]).validate(2, 2, 100.0).is_ok());
+        // Out-of-range GPU and class.
+        assert!(plan(vec![FaultInjection { gpu: 2, ..ok }]).validate(2, 2, 100.0).is_err());
+        assert!(plan(vec![FaultInjection { class: Some(2), ..ok }]).validate(2, 2, 100.0).is_err());
+        // Crash outside the horizon, negative time, NaN.
+        assert!(plan(vec![FaultInjection { t: 100.0, ..ok }]).validate(2, 2, 100.0).is_err());
+        assert!(plan(vec![FaultInjection { t: -1.0, ..ok }]).validate(2, 2, 100.0).is_err());
+        assert!(plan(vec![FaultInjection { t: f64::NAN, ..ok }]).validate(2, 2, 100.0).is_err());
+        // Zero / NaN repair times.
+        assert!(plan(vec![FaultInjection { down_s: 0.0, ..ok }]).validate(2, 2, 100.0).is_err());
+        assert!(
+            plan(vec![FaultInjection { down_s: f64::NAN, ..ok }]).validate(2, 2, 100.0).is_err()
+        );
+        // Permanent failures are fine.
+        assert!(plan(vec![FaultInjection { down_s: f64::INFINITY, ..ok }])
+            .validate(2, 2, 100.0)
+            .is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_overlapping_faults_on_one_gpu() {
+        let plan = FaultPlan {
+            injections: vec![
+                FaultInjection { t: 10.0, gpu: 0, class: None, down_s: 20.0 },
+                FaultInjection { t: 15.0, gpu: 0, class: Some(0), down_s: 1.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate(2, 2, 100.0).is_err(), "overlap on gpu 0");
+        // The same two faults on different GPUs are fine.
+        let plan = FaultPlan {
+            injections: vec![
+                FaultInjection { t: 10.0, gpu: 0, class: None, down_s: 20.0 },
+                FaultInjection { t: 15.0, gpu: 1, class: Some(0), down_s: 1.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate(2, 2, 100.0).is_ok());
+        // A permanent failure blocks any later fault on that GPU.
+        let plan = FaultPlan {
+            injections: vec![
+                FaultInjection { t: 10.0, gpu: 0, class: None, down_s: f64::INFINITY },
+                FaultInjection { t: 90.0, gpu: 0, class: None, down_s: 1.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate(1, 2, 100.0).is_err());
+    }
+
+    #[test]
+    fn builders_and_defaults() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert_eq!(p.retry_budget, DEFAULT_RETRY_BUDGET);
+        assert_eq!(p.storm_guard, u64::MAX);
+        let p = p.with_retries(3).with_storm_guard(100);
+        assert_eq!(p.retry_budget, 3);
+        assert_eq!(p.storm_guard, 100);
+        let inj = FaultInjection { t: 5.0, gpu: 1, class: None, down_s: f64::INFINITY };
+        assert_eq!(inj.end(), f64::INFINITY);
+    }
+}

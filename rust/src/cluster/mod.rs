@@ -20,20 +20,27 @@
 //! * [`policy`] — fleet repartitioning policies behind [`FleetPolicy`],
 //!   extending the single-GPU [`Policy`](crate::orchestrator::Policy)
 //!   idea with the *which GPU* dimension;
+//! * [`faults`] — deterministic failure injection: seed-driven GPU and
+//!   instance crash schedules ([`FaultPlan`]), ingress retry budgets and
+//!   the retry-storm guard, measured as goodput under partial outages;
 //! * fleet sweeps fan out through [`crate::sweep::run_fleet`] with the
-//!   engine's bitwise-determinism guarantee intact.
+//!   engine's bitwise-determinism guarantee intact (a crash schedule is
+//!   config data, so faulted grids stay bit-identical too).
 
 pub mod engine;
+pub mod faults;
 pub mod policy;
 pub mod router;
 
 pub use engine::{
     FleetConfig, FleetDecision, FleetError, FleetOutcome, RepartitionMode, RequestClass,
 };
+pub use faults::{FaultInjection, FaultPlan, FaultRecord, DEFAULT_RETRY_BUDGET};
 pub use policy::{
     FleetAction, FleetCtx, FleetObs, FleetPolicy, FleetPolicyKind, FleetReactive, FleetStatic,
     GpuObs,
 };
 pub use router::{
-    Affinity, LeastLoaded, RoundRobin, RoutePolicy, RouterKind, DEFAULT_AFFINITY_SPILL,
+    Affinity, GpuHealth, LeastLoaded, RoundRobin, RoutePolicy, RouterKind,
+    DEFAULT_AFFINITY_SPILL,
 };

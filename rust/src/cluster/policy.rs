@@ -19,7 +19,8 @@ pub struct GpuObs {
     pub services: Vec<ServiceObs>,
     /// Training steps this GPU completed in the window.
     pub train_steps: u64,
-    /// True while the GPU serves traffic (not draining or reconfiguring).
+    /// True while the GPU serves traffic (not draining, reconfiguring,
+    /// or crashed by an injected fault).
     pub running: bool,
 }
 

@@ -13,11 +13,54 @@
 //!   resident weights), spilling to the least-loaded sibling only when
 //!   the home replica is unavailable or its backlog exceeds the best
 //!   alternative by more than `spill`.
+//!
+//! Routers never see raw GPU phases: the ingress health check
+//! ([`GpuHealth::may_route`]) projects each GPU's state down to the
+//! boolean `available` slice, so every `RoutePolicy` excludes crashed
+//! GPUs and replicas the same way it already excludes draining ones.
+
+/// Health of one fleet GPU as seen by the ingress health check.
+///
+/// The fleet engine maps its internal lifecycle onto this view before
+/// every routing decision; [`GpuHealth::may_route`] is the single place
+/// the "may this GPU take new work?" rule lives, so the arrival path,
+/// queue migration, crash retries and stranded re-dispatch all agree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuHealth {
+    /// Serving normally.
+    Serving,
+    /// Draining ahead of a repartition (in-flight work finishing).
+    Draining,
+    /// Mid instance-churn.
+    Reconfiguring,
+    /// Crashed (failure injection); nothing runs until recovery.
+    Down,
+}
+
+impl GpuHealth {
+    /// Whether the ingress may route new work of a class to this GPU.
+    ///
+    /// `inplace` selects the in-place repartition discipline, which —
+    /// as the modelled anti-pattern — keeps dispatching to draining and
+    /// reconfiguring GPUs. A crashed GPU never takes traffic in either
+    /// discipline, and `replica_down` additionally excludes a GPU whose
+    /// replica of *this class* was taken out by an instance-level crash
+    /// even while the GPU itself keeps serving its other classes.
+    pub fn may_route(&self, inplace: bool, replica_down: bool) -> bool {
+        !replica_down
+            && match self {
+                GpuHealth::Serving => true,
+                GpuHealth::Draining | GpuHealth::Reconfiguring => inplace,
+                GpuHealth::Down => false,
+            }
+    }
+}
 
 /// A fleet routing policy. `available[g]` marks GPUs that may accept new
-/// work (during a rolling repartition the draining GPU is excluded);
-/// `depth[g]` is the queued-plus-in-service count on GPU `g`'s replica of
-/// the class being routed.
+/// work per the [`GpuHealth`] check (during a rolling repartition the
+/// draining GPU is excluded; crashed GPUs and crashed replicas always
+/// are); `depth[g]` is the queued-plus-in-service count on GPU `g`'s
+/// replica of the class being routed.
 pub trait RoutePolicy {
     /// Short name used in reports ("round-robin", ...).
     fn name(&self) -> &'static str;
@@ -209,6 +252,44 @@ mod tests {
         let partial = [true, false, true];
         assert_eq!(r.route(1, &partial, &[4, 0, 1]), Some(2), "unavailable home spills");
         assert_eq!(r.route(1, &[false; 3], &[0, 0, 0]), None);
+    }
+
+    #[test]
+    fn health_check_excludes_down_gpus_in_both_disciplines() {
+        for inplace in [false, true] {
+            assert!(GpuHealth::Serving.may_route(inplace, false));
+            assert!(!GpuHealth::Down.may_route(inplace, false), "crashed GPUs never take work");
+            assert!(
+                !GpuHealth::Serving.may_route(inplace, true),
+                "a crashed replica excludes its GPU for that class"
+            );
+        }
+        // Draining/reconfiguring GPUs take traffic only under in-place.
+        for h in [GpuHealth::Draining, GpuHealth::Reconfiguring] {
+            assert!(!h.may_route(false, false), "{h:?} must be excluded under rolling");
+            assert!(h.may_route(true, false), "{h:?} still routed under in-place");
+            assert!(!h.may_route(true, true));
+        }
+    }
+
+    #[test]
+    fn routers_skip_gpus_the_health_check_marked_down() {
+        // A Down GPU projected to available = false is invisible to every
+        // router, exactly like a draining one.
+        let health = [GpuHealth::Serving, GpuHealth::Down, GpuHealth::Serving];
+        let avail: Vec<bool> = health.iter().map(|h| h.may_route(false, false)).collect();
+        let depth = [9usize, 0, 5];
+        for kind in [
+            RouterKind::RoundRobin,
+            RouterKind::LeastLoaded,
+            RouterKind::Affinity { spill: 2 },
+        ] {
+            let mut r = kind.build(2);
+            for _ in 0..4 {
+                let g = r.route(1, &avail, &depth).expect("siblings stay available");
+                assert_ne!(g, 1, "{}: routed to the crashed GPU", r.name());
+            }
+        }
     }
 
     #[test]

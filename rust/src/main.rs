@@ -15,7 +15,7 @@ use migperf::util::argparse::{render_help, Args, OptSpec};
 use migperf::util::table::Table;
 use migperf::workload::spec::WorkloadKind;
 
-const BOOL_FLAGS: &[&str] = &["help", "json", "csv", "real", "decisions", "bless"];
+const BOOL_FLAGS: &[&str] = &["help", "json", "csv", "real", "decisions", "bless", "faults"];
 
 fn main() -> ExitCode {
     let args = match Args::parse(std::env::args().skip(1), BOOL_FLAGS) {
@@ -803,6 +803,34 @@ fn cmd_orchestrate(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse `--crash` entries: `GPU[.CLASS]@T+DOWN`, comma-separated.
+/// `DOWN` is seconds until recovery, or `inf` for a permanent failure.
+fn parse_crash_list(spec: &str) -> Result<Vec<migperf::cluster::FaultInjection>, String> {
+    let mut out = Vec::new();
+    for item in spec.split(',').filter(|s| !s.is_empty()) {
+        let err = || format!("crash '{item}': expected GPU[.CLASS]@T+DOWN");
+        let (target, rest) = item.split_once('@').ok_or_else(err)?;
+        let (t, down) = rest.split_once('+').ok_or_else(err)?;
+        let (gpu, class) = match target.split_once('.') {
+            Some((g, c)) => {
+                (g.parse().map_err(|_| err())?, Some(c.parse().map_err(|_| err())?))
+            }
+            None => (target.parse().map_err(|_| err())?, None),
+        };
+        let t: f64 = t.parse().map_err(|_| err())?;
+        let down_s: f64 = if down == "inf" {
+            f64::INFINITY
+        } else {
+            down.parse().map_err(|_| err())?
+        };
+        out.push(migperf::cluster::FaultInjection { t, gpu, class, down_s });
+    }
+    if out.is_empty() {
+        return Err("--crash needs at least one entry".into());
+    }
+    Ok(out)
+}
+
 fn cmd_fleet(args: &Args) -> Result<(), String> {
     if args.flag("help") {
         #[rustfmt::skip]
@@ -831,19 +859,25 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     OptSpec { name: "churn", value: "S", help: "seconds per instance destroyed/created", default: Some("0.5") },
                     OptSpec { name: "restore", value: "S", help: "training checkpoint-restore penalty, seconds", default: Some("5") },
                     OptSpec { name: "seq", value: "S", help: "sequence length / image size for classes", default: Some("128") },
+                    OptSpec { name: "faults", value: "", help: "sweep failure-injection levels: no-faults plus one level per --mtbf value", default: None },
+                    OptSpec { name: "mtbf", value: "S1,S2", help: "per-GPU mean time between failures, seconds (each value = one availability level)", default: Some("240,120") },
+                    OptSpec { name: "mttr", value: "S", help: "mean time to repair per crash, seconds", default: Some("30") },
+                    OptSpec { name: "crash", value: "LIST", help: "explicit crash schedule GPU[.CLASS]@T+DOWN[,...] (DOWN in seconds, inf = permanent); overrides --faults/--mtbf", default: None },
+                    OptSpec { name: "retries", value: "N", help: "per-request retry budget after a crash", default: Some("1") },
+                    OptSpec { name: "storm-cap", value: "N", help: "max requests re-admitted per crash (0 = unlimited)", default: Some("0") },
                     OptSpec { name: "seeds", value: "N", help: "replication seeds per grid point", default: Some("1") },
                     OptSpec { name: "seed", value: "S", help: "base seed", default: Some("2024") },
                     OptSpec { name: "workers", value: "N", help: "sweep worker threads (0 = auto)", default: Some("0") },
-                    OptSpec { name: "json", value: "", help: "emit JSON (with decision logs)", default: None },
+                    OptSpec { name: "json", value: "", help: "emit JSON (with decision logs and fault timelines)", default: None },
                     OptSpec { name: "csv", value: "", help: "emit pooled summaries as CSV", default: None },
-                    OptSpec { name: "decisions", value: "", help: "also print per-run decision logs", default: None },
+                    OptSpec { name: "decisions", value: "", help: "also print per-run decision logs and fault timelines", default: None },
                 ]
             )
         );
         return Ok(());
     }
     use migperf::cluster::{
-        FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass, RouterKind,
+        FaultPlan, FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass, RouterKind,
     };
     use migperf::orchestrator::ReconfigCost;
     use migperf::sweep::SweepEngine;
@@ -965,11 +999,63 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
     let base_seed: u64 = args.parse_or("seed", 2024u64).map_err(|e| e.to_string())?;
     let workers: usize = args.parse_or("workers", 0usize).map_err(|e| e.to_string())?;
 
-    // mode × policy × router × fleet × seed grid in row-major order (the
-    // determinism anchor). Per-GPU rates scale to fleet-wide streams so
-    // every fleet size carries a comparable per-GPU load.
+    // Failure-injection axis: no faults by default; `--crash` pins one
+    // explicit schedule; `--faults` sweeps no-faults plus one stochastic
+    // MTBF/MTTR level per `--mtbf` value (per-seed schedules derive from
+    // the run seed, so the grid stays bitwise deterministic).
+    enum FaultAxis {
+        None,
+        Mtbf(f64),
+        Explicit(FaultPlan),
+    }
+    impl FaultAxis {
+        fn label(&self) -> String {
+            match self {
+                FaultAxis::None => "none".into(),
+                FaultAxis::Mtbf(m) => format!("mtbf{m:.0}"),
+                FaultAxis::Explicit(_) => "plan".into(),
+            }
+        }
+    }
+    let mttr_s: f64 = args.parse_or("mttr", 30.0f64).map_err(|e| e.to_string())?;
+    let retries: u32 = args.parse_or("retries", 1u32).map_err(|e| e.to_string())?;
+    let storm_cap: u64 = args.parse_or("storm-cap", 0u64).map_err(|e| e.to_string())?;
+    let storm_guard = if storm_cap == 0 { u64::MAX } else { storm_cap };
+    let fault_axis: Vec<FaultAxis> = if let Some(spec) = args.get("crash") {
+        let plan = FaultPlan {
+            injections: parse_crash_list(spec)?,
+            retry_budget: retries,
+            storm_guard,
+        };
+        vec![FaultAxis::Explicit(plan)]
+    } else if args.flag("faults") {
+        if !(duration_s.is_finite() && duration_s > 0.0) {
+            return Err(format!("--duration {duration_s} must be positive and finite"));
+        }
+        if !(mttr_s.is_finite() && mttr_s > 0.0) {
+            return Err(format!("--mttr {mttr_s} must be positive and finite"));
+        }
+        let mtbf_list: Vec<f64> =
+            args.list_or("mtbf", &[240.0f64, 120.0]).map_err(|e| e.to_string())?;
+        let mut axis = vec![FaultAxis::None];
+        for &m in &mtbf_list {
+            if !(m.is_finite() && m > 0.0) {
+                return Err(format!("--mtbf {m} must be positive and finite"));
+            }
+            axis.push(FaultAxis::Mtbf(m));
+        }
+        axis
+    } else {
+        vec![FaultAxis::None]
+    };
+
+    // mode × policy × router × fleet × fault-level × seed grid in
+    // row-major order (the determinism anchor). Per-GPU rates scale to
+    // fleet-wide streams so every fleet size carries a comparable per-GPU
+    // load.
     let seed_list = migperf::sweep::seeds(base_seed, nseeds.max(1));
     let mut runs: Vec<FleetConfig> = Vec::new();
+    let mut fault_labels: Vec<String> = Vec::new();
     for mode in &modes {
         for policy in &policies {
             for router in &routers {
@@ -992,20 +1078,37 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                             arrival: arrival.clone(),
                         })
                         .collect();
-                    for &seed in &seed_list {
-                        runs.push(FleetConfig {
-                            gpus: fleet.clone(),
-                            train: train.clone(),
-                            classes: classes.clone(),
-                            router: router.clone(),
-                            policy: policy.clone(),
-                            mode: *mode,
-                            cost: cost.clone(),
-                            duration_s,
-                            window_s,
-                            rho_max,
-                            seed,
-                        });
+                    for fp in &fault_axis {
+                        for &seed in &seed_list {
+                            let faults = match fp {
+                                FaultAxis::None => FaultPlan::none(),
+                                FaultAxis::Mtbf(m) => FaultPlan::from_mtbf(
+                                    fleet.len(),
+                                    duration_s,
+                                    *m,
+                                    mttr_s,
+                                    seed ^ 0xFA17,
+                                )
+                                .with_retries(retries)
+                                .with_storm_guard(storm_guard),
+                                FaultAxis::Explicit(p) => p.clone(),
+                            };
+                            fault_labels.push(fp.label());
+                            runs.push(FleetConfig {
+                                gpus: fleet.clone(),
+                                train: train.clone(),
+                                classes: classes.clone(),
+                                router: router.clone(),
+                                policy: policy.clone(),
+                                mode: *mode,
+                                cost: cost.clone(),
+                                duration_s,
+                                window_s,
+                                rho_max,
+                                faults,
+                                seed,
+                            });
+                        }
                     }
                 }
             }
@@ -1024,12 +1127,14 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         let rows: Vec<Json> = runs
             .iter()
             .zip(&outs)
-            .map(|(cfg, out)| {
+            .zip(&fault_labels)
+            .map(|((cfg, out), flabel)| {
                 Json::obj(vec![
                     ("mode", Json::Str(out.mode.name().to_string())),
                     ("policy", Json::Str(out.policy.to_string())),
                     ("router", Json::Str(out.router.to_string())),
                     ("fleet_size", Json::Num(out.fleet_size as f64)),
+                    ("faults", Json::Str(flabel.clone())),
                     ("seed", Json::Num(cfg.seed as f64)),
                     ("arrived", Json::Num(out.arrived as f64)),
                     ("completed", Json::Num(out.completed as f64)),
@@ -1041,6 +1146,13 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     ("reconfig_downtime_s", Json::Num(out.reconfig_downtime_s)),
                     ("migrated_requests", Json::Num(out.migrated_requests as f64)),
                     ("unavailable_routes", Json::Num(out.unavailable_routes as f64)),
+                    ("failed_requests", Json::Num(out.failed_requests as f64)),
+                    ("retried_requests", Json::Num(out.retried_requests as f64)),
+                    ("lost_in_crash", Json::Num(out.lost_in_crash as f64)),
+                    ("gpu_crashes", Json::Num(out.gpu_crashes as f64)),
+                    ("instance_crashes", Json::Num(out.instance_crashes as f64)),
+                    ("availability", Json::Num(out.availability)),
+                    ("fault_log", export::fault_records_to_json(&out.fault_log)),
                     ("decisions", export::fleet_decisions_to_json(&out.decisions)),
                 ])
             })
@@ -1058,14 +1170,16 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         let rows: Vec<_> = runs
             .iter()
             .zip(&outs)
-            .map(|(cfg, out)| {
+            .zip(&fault_labels)
+            .map(|((cfg, out), flabel)| {
                 let mut s = out.pooled.clone();
                 s.label = format!(
-                    "{}/{}/{}/n{}/seed{}",
+                    "{}/{}/{}/n{}/{}/seed{}",
                     out.mode.name(),
                     out.policy,
                     out.router,
                     out.fleet_size,
+                    flabel,
                     cfg.seed
                 );
                 s
@@ -1078,47 +1192,60 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             "policy",
             "router",
             "gpus",
+            "faults",
             "seed",
             "arrived",
             "goodput_rps",
             "viol_%",
             "p99_ms",
             "reconf",
-            "downtime_s",
             "migrated",
+            "failed",
+            "lost",
+            "retried",
+            "avail_%",
         ]);
-        for (cfg, out) in runs.iter().zip(&outs) {
+        for ((cfg, out), flabel) in runs.iter().zip(&outs).zip(&fault_labels) {
             t.row(&[
                 out.mode.name().to_string(),
                 out.policy.to_string(),
                 out.router.to_string(),
                 out.fleet_size.to_string(),
+                flabel.clone(),
                 cfg.seed.to_string(),
                 out.arrived.to_string(),
                 format!("{:.1}", out.goodput_rps),
                 format!("{:.2}", out.slo_violation_frac * 100.0),
                 format!("{:.1}", out.pooled.p99_latency_ms),
                 out.reconfigurations.to_string(),
-                format!("{:.1}", out.reconfig_downtime_s),
                 out.migrated_requests.to_string(),
+                out.failed_requests.to_string(),
+                out.lost_in_crash.to_string(),
+                out.retried_requests.to_string(),
+                format!("{:.2}", out.availability * 100.0),
             ]);
         }
         println!("{}", t.render());
         println!("{} runs on {} workers in {:.2}s", runs.len(), engine.workers(), wall_s);
         if args.flag("decisions") {
-            for (cfg, out) in runs.iter().zip(&outs) {
-                if out.decisions.is_empty() {
-                    continue;
-                }
-                println!(
-                    "\ndecision log — {}/{}/{} n{} (seed {}):",
+            for ((cfg, out), flabel) in runs.iter().zip(&outs).zip(&fault_labels) {
+                let tag = format!(
+                    "{}/{}/{} n{} {} (seed {})",
                     out.mode.name(),
                     out.policy,
                     out.router,
                     out.fleet_size,
+                    flabel,
                     cfg.seed
                 );
-                print!("{}", export::fleet_decisions_to_csv(&out.decisions));
+                if !out.decisions.is_empty() {
+                    println!("\ndecision log — {tag}:");
+                    print!("{}", export::fleet_decisions_to_csv(&out.decisions));
+                }
+                if !out.fault_log.is_empty() {
+                    println!("\nfault timeline — {tag}:");
+                    print!("{}", export::fault_records_to_csv(&out.fault_log));
+                }
             }
         }
     }

@@ -39,7 +39,7 @@ pub struct RunSummary {
 }
 
 /// Streaming collector for one run.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct MetricsCollector {
     label: String,
     latency: LatencyHistogram,
@@ -68,6 +68,15 @@ impl MetricsCollector {
             peak_fb_bytes: 0.0,
             series: SeriesSet::new(),
         }
+    }
+
+    /// Collector with a custom latency-histogram configuration (latency
+    /// ranges outside the serving default). Merging or pooling collectors
+    /// whose histogram configurations differ panics — a silent merge
+    /// would map values into the wrong buckets and skew every pooled
+    /// percentile (see `LatencyHistogram::merge`).
+    pub fn with_histogram(label: impl Into<String>, latency: LatencyHistogram) -> Self {
+        MetricsCollector { latency, ..MetricsCollector::new(label) }
     }
 
     /// Record one completed request/step.
@@ -131,12 +140,25 @@ impl MetricsCollector {
     /// collectors. The order of `parts` does not affect any summary
     /// statistic (counts, sums, mins/maxes and bucket counts are
     /// commutative).
+    ///
+    /// The pool adopts the first part's histogram configuration; parts
+    /// with *mismatched* configurations panic (via
+    /// [`LatencyHistogram::merge`]) rather than silently skewing the
+    /// pooled percentiles.
     pub fn pooled<'a>(
         label: impl Into<String>,
         parts: impl IntoIterator<Item = &'a MetricsCollector>,
     ) -> MetricsCollector {
-        let mut merged = MetricsCollector::new(label);
-        for part in parts {
+        let mut iter = parts.into_iter();
+        let mut merged = match iter.next() {
+            Some(first) => {
+                let mut m = first.clone();
+                m.label = label.into();
+                m
+            }
+            None => return MetricsCollector::new(label),
+        };
+        for part in iter {
             merged.merge(part);
         }
         merged
@@ -309,6 +331,38 @@ mod tests {
         assert_eq!(pooled.peak_fb_mib.to_bits(), whole.peak_fb_mib.to_bits());
         assert_eq!(pooled.duration_s.to_bits(), whole.duration_s.to_bits());
         assert_eq!(pooled.throughput.to_bits(), whole.throughput.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "histogram configs differ")]
+    fn pooled_rejects_mismatched_histogram_configs() {
+        // Same precision and bucket count, different floors: the same
+        // value maps to different bucket indices in the two collectors,
+        // so a silent pool would skew percentiles. The hardening in
+        // LatencyHistogram::merge must surface as a panic, not skew.
+        let mut a = MetricsCollector::with_histogram("a", LatencyHistogram::new(1.0, 10.0, 0.5));
+        let mut b = MetricsCollector::with_histogram("b", LatencyHistogram::new(2.0, 20.0, 0.5));
+        a.record_completion(1.0, 5.0, 1);
+        b.record_completion(2.0, 5.0, 1);
+        let _ = MetricsCollector::pooled("mismatch", [&a, &b]);
+    }
+
+    #[test]
+    fn pooled_custom_histograms_with_matching_configs_merge_exactly() {
+        let mk = || MetricsCollector::with_histogram("part", LatencyHistogram::new(0.1, 1e4, 0.01));
+        let mut whole = mk();
+        let mut parts = [mk(), mk()];
+        for i in 0..1000u64 {
+            let t = (i + 1) as f64 * 0.01;
+            let lat = 1.0 + ((i * 13) % 97) as f64;
+            whole.record_completion(t, lat, 1);
+            parts[(i % 2) as usize].record_completion(t, lat, 1);
+        }
+        let pooled = MetricsCollector::pooled("whole", parts.iter()).summarize();
+        let w = whole.summarize();
+        assert_eq!(pooled.completed, w.completed);
+        assert_eq!(pooled.p99_latency_ms.to_bits(), w.p99_latency_ms.to_bits());
+        assert_eq!(pooled.p50_latency_ms.to_bits(), w.p50_latency_ms.to_bits());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use std::fmt::Write as _;
 
-use crate::cluster::FleetDecision;
+use crate::cluster::{FaultRecord, FleetDecision};
 use crate::orchestrator::Decision;
 use crate::scheduler::{Assignment, Plan};
 use crate::util::json::Json;
@@ -199,6 +199,58 @@ pub fn fleet_decision_to_json(d: &FleetDecision) -> Json {
 /// A whole fleet decision log as a JSON array.
 pub fn fleet_decisions_to_json(rows: &[FleetDecision]) -> Json {
     Json::Arr(rows.iter().map(fleet_decision_to_json).collect())
+}
+
+/// CSV header used by [`fault_records_to_csv`]. `class` is `gpu` for a
+/// whole-GPU crash, the class index for an instance crash; `down_s` is
+/// `inf` for permanent failures.
+pub const FAULT_CSV_HEADER: &str = "t,gpu,class,down_s,lost,retried,shed";
+
+/// Serialize an executed fault timeline as CSV (with header).
+pub fn fault_records_to_csv(rows: &[FaultRecord]) -> String {
+    let mut out = String::from(FAULT_CSV_HEADER);
+    out.push('\n');
+    for r in rows {
+        let class = r.class.map(|c| c.to_string()).unwrap_or_else(|| "gpu".into());
+        let down = if r.down_s.is_finite() {
+            format!("{:.6}", r.down_s)
+        } else {
+            "inf".into()
+        };
+        let _ = writeln!(
+            out,
+            "{:.6},{},{},{},{},{},{}",
+            r.t, r.gpu, class, down, r.lost, r.retried, r.shed,
+        );
+    }
+    out
+}
+
+/// One executed fault as a JSON object (`class` is `null` for a
+/// whole-GPU crash; `down_s` is `null` for permanent failures, which
+/// JSON numbers cannot represent).
+pub fn fault_record_to_json(r: &FaultRecord) -> Json {
+    Json::obj(vec![
+        ("t", r.t.into()),
+        ("gpu", (r.gpu as i64).into()),
+        ("class", r.class.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null)),
+        (
+            "down_s",
+            if r.down_s.is_finite() {
+                r.down_s.into()
+            } else {
+                Json::Null
+            },
+        ),
+        ("lost", (r.lost as i64).into()),
+        ("retried", (r.retried as i64).into()),
+        ("shed", (r.shed as i64).into()),
+    ])
+}
+
+/// A whole fault timeline as a JSON array.
+pub fn fault_records_to_json(rows: &[FaultRecord]) -> Json {
+    Json::Arr(rows.iter().map(fault_record_to_json).collect())
 }
 
 /// Serialize a time-series set in Prometheus exposition format, using the
@@ -396,6 +448,54 @@ mod tests {
         assert_eq!(row.get("migrated").unwrap().as_i64(), Some(17));
         assert_eq!(row.get("downtime_s").unwrap().as_f64(), Some(2.75));
         assert!(fleet_decisions_to_csv(&[]).lines().count() == 1, "empty log is just the header");
+    }
+
+    #[test]
+    fn fault_timeline_export_csv_and_json() {
+        use crate::cluster::FaultRecord;
+        let rows = [
+            FaultRecord {
+                t: 42.5,
+                gpu: 1,
+                class: None,
+                down_s: 30.0,
+                lost: 3,
+                retried: 17,
+                shed: 2,
+            },
+            FaultRecord {
+                t: 80.0,
+                gpu: 0,
+                class: Some(1),
+                down_s: f64::INFINITY,
+                lost: 0,
+                retried: 5,
+                shed: 0,
+            },
+        ];
+        let csv = fault_records_to_csv(&rows);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], FAULT_CSV_HEADER);
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("42.500000,1,gpu,30.000000,3,17,2"), "{csv}");
+        assert!(lines[2].starts_with("80.000000,0,1,inf,0,5,0"), "{csv}");
+        let doc = fault_records_to_json(&rows);
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("gpu").unwrap().as_i64(), Some(1));
+        assert!(
+            matches!(arr[0].get("class"), Some(Json::Null)),
+            "whole-GPU crash has null class"
+        );
+        assert_eq!(arr[0].get("down_s").unwrap().as_f64(), Some(30.0));
+        assert_eq!(arr[0].get("retried").unwrap().as_i64(), Some(17));
+        assert_eq!(arr[1].get("class").unwrap().as_f64(), Some(1.0));
+        assert!(
+            matches!(arr[1].get("down_s"), Some(Json::Null)),
+            "permanent outage is null in JSON"
+        );
+        assert_eq!(fault_records_to_csv(&[]).lines().count(), 1, "empty log is just the header");
     }
 
     #[test]

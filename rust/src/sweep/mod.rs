@@ -55,7 +55,10 @@ pub fn run_orchestrator(
 
 /// Run a batch of fleet simulations across the worker pool, with the same
 /// ordering and determinism contract as [`run_serving`]: results come
-/// back in input order and are bit-identical at any worker count.
+/// back in input order and are bit-identical at any worker count. This
+/// covers failure injection too — a [`crate::cluster::FaultPlan`] is part
+/// of the [`FleetConfig`], so crash schedules are fixed before any worker
+/// starts and faulted grids reduce deterministically.
 pub fn run_fleet(
     engine: &SweepEngine,
     runs: &[FleetConfig],

@@ -16,10 +16,29 @@ pub struct Point {
     pub value: f64,
 }
 
+/// Why a sample was rejected by [`Series::try_push`]: its timestamp
+/// precedes the last recorded point (or is NaN).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutOfOrder {
+    /// Timestamp of the last recorded point.
+    pub last_t: f64,
+    /// Offending timestamp.
+    pub t: f64,
+}
+
+impl std::fmt::Display for OutOfOrder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "out-of-order sample: t = {} precedes last timestamp {}", self.t, self.last_t)
+    }
+}
+
+impl std::error::Error for OutOfOrder {}
+
 /// A named, tag-annotated series of points, kept in insertion order.
 ///
-/// Timestamps are expected to be non-decreasing (the DES clock only moves
-/// forward); `push` enforces this in debug builds.
+/// Timestamps must be non-decreasing (the DES clock only moves forward):
+/// [`Series::push`] saturates out-of-order timestamps to the last point's
+/// and [`Series::try_push`] rejects them.
 #[derive(Debug, Clone, Default)]
 pub struct Series {
     /// Metric name, e.g. `gract`, `fb_used_mib`, `power_w`.
@@ -41,15 +60,36 @@ impl Series {
         self
     }
 
-    /// Append a sample. Timestamps must be non-decreasing.
+    /// Append a sample. Timestamps must be non-decreasing; an
+    /// out-of-order (or NaN) `t` is *saturated* to the last point's
+    /// timestamp instead of being stored as-is.
+    ///
+    /// This used to be a `debug_assert!` only, so release builds silently
+    /// accepted out-of-order points and `time_weighted_mean` / `integral`
+    /// accumulated negative areas. Saturation keeps those reductions
+    /// correct in every build; use [`Series::try_push`] to surface the
+    /// violation as an error instead.
     pub fn push(&mut self, t: f64, value: f64) {
-        debug_assert!(
-            self.points.last().map_or(true, |p| t >= p.t),
-            "timestamps must be non-decreasing: {} after {}",
-            t,
-            self.points.last().unwrap().t
-        );
+        let t = match self.points.last() {
+            Some(p) if t < p.t || t.is_nan() => p.t,
+            // A NaN *first* sample would poison every later comparison
+            // (nothing is < NaN), so it saturates to the clock origin.
+            None if t.is_nan() => 0.0,
+            _ => t,
+        };
         self.points.push(Point { t, value });
+    }
+
+    /// Append a sample, rejecting out-of-order (or NaN) timestamps
+    /// instead of saturating them. A NaN on an empty series reports the
+    /// clock origin (0) as `last_t`.
+    pub fn try_push(&mut self, t: f64, value: f64) -> Result<(), OutOfOrder> {
+        let last_t = self.points.last().map_or(0.0, |p| p.t);
+        if t < last_t || t.is_nan() {
+            return Err(OutOfOrder { last_t, t });
+        }
+        self.points.push(Point { t, value });
+        Ok(())
     }
 
     /// All points, in time order.
@@ -251,6 +291,48 @@ mod tests {
         assert!(set.get_tagged("gract", "gi", "7g.80gb").is_some());
         assert!(set.get_tagged("gract", "gi", "3g.40gb").is_none());
         assert!(set.get("nope").is_none());
+    }
+
+    #[test]
+    fn out_of_order_push_saturates_instead_of_corrupting() {
+        // Release builds used to store the out-of-order point as-is,
+        // silently producing negative areas in the reductions.
+        let mut s = Series::new("oops");
+        s.push(0.0, 1.0);
+        s.push(10.0, 2.0);
+        s.push(5.0, 3.0); // out of order: saturated to t = 10
+        assert_eq!(s.points()[2].t, 10.0);
+        assert!(s.points().windows(2).all(|w| w[1].t >= w[0].t));
+        assert!(s.time_weighted_mean() >= 0.0);
+        assert!(s.integral() >= 0.0, "no negative areas after saturation");
+        s.push(f64::NAN, 4.0); // NaN timestamps saturate too
+        assert_eq!(s.points()[3].t, 10.0);
+        // A NaN *first* sample saturates to the clock origin instead of
+        // poisoning every later comparison (nothing is < NaN).
+        let mut s = Series::new("nan-first");
+        s.push(f64::NAN, 1.0);
+        assert_eq!(s.points()[0].t, 0.0);
+        s.push(2.0, 3.0);
+        assert!(s.points().windows(2).all(|w| w[1].t >= w[0].t));
+        assert!(s.integral().is_finite());
+    }
+
+    #[test]
+    fn try_push_rejects_out_of_order_timestamps() {
+        let mut s = Series::new("strict");
+        assert!(s.try_push(1.0, 10.0).is_ok());
+        assert!(s.try_push(1.0, 11.0).is_ok(), "equal timestamps are fine");
+        let err = s.try_push(0.5, 12.0).unwrap_err();
+        assert_eq!(err, OutOfOrder { last_t: 1.0, t: 0.5 });
+        assert!(err.to_string().contains("out-of-order"), "{err}");
+        assert!(s.try_push(f64::NAN, 13.0).is_err());
+        assert_eq!(s.len(), 2, "rejected samples are not stored");
+        assert!(s.try_push(2.0, 14.0).is_ok());
+        // NaN is rejected even as the first sample.
+        let mut empty = Series::new("e");
+        let err = empty.try_push(f64::NAN, 1.0).unwrap_err();
+        assert_eq!(err.last_t, 0.0, "empty series reports the clock origin");
+        assert!(empty.is_empty());
     }
 
     #[test]

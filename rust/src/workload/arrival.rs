@@ -358,6 +358,13 @@ impl RateForecaster {
 
     /// Feed one windowed rate observation (requests/s). Non-finite or
     /// negative observations are ignored rather than poisoning the state.
+    ///
+    /// The smoothed level is clamped at zero: on a steep decaying ramp
+    /// Holt's recursion (`level + trend` with a deeply negative trend)
+    /// can otherwise push the internal level below zero, and a negative
+    /// level leaks out of [`RateForecaster::level`] into demand inputs
+    /// that must be non-negative — `plan_for_demand` sizes for the rate
+    /// and the arrival constructors reject non-positive rates outright.
     pub fn observe(&mut self, rate: f64) {
         if !rate.is_finite() || rate < 0.0 {
             return;
@@ -367,14 +374,19 @@ impl RateForecaster {
             self.trend = 0.0;
         } else {
             let prev_level = self.level;
-            self.level = self.alpha * rate + (1.0 - self.alpha) * (self.level + self.trend);
+            self.level =
+                (self.alpha * rate + (1.0 - self.alpha) * (self.level + self.trend)).max(0.0);
             self.trend = self.beta * (self.level - prev_level) + (1.0 - self.beta) * self.trend;
         }
         self.observations += 1;
     }
 
-    /// Forecast the rate `horizon` observation windows ahead (clamped to
-    /// be non-negative). With no observations yet, returns 0.
+    /// Forecast the rate `horizon` observation windows ahead, clamped to
+    /// be non-negative: Holt's linear trend extrapolates *negative* rates
+    /// on a downward ramp, and a negative rate fed into
+    /// `plan_for_demand` / `DemandWorkload` would hit the arrival
+    /// validation that rejects non-positive rates. With no observations
+    /// yet, returns 0.
     pub fn forecast(&self, horizon: f64) -> f64 {
         (self.level + self.trend * horizon).max(0.0)
     }
@@ -542,5 +554,39 @@ mod tests {
         f.observe(f64::NAN);
         f.observe(-5.0);
         assert_eq!(f.observations(), 60);
+    }
+
+    #[test]
+    fn decaying_ramp_never_forecasts_negative_rates() {
+        // Regression: Holt's raw extrapolation of a steep downward ramp
+        // is deeply negative (trend ≈ −10/window once the series bottoms
+        // out at 0), and a negative rate fed into plan_for_demand /
+        // DemandWorkload hits the non-positive-rate rejection paths.
+        let mut f = RateForecaster::new(0.5, 0.3);
+        for i in 0..40 {
+            f.observe((200.0 - 10.0 * i as f64).max(0.0));
+            assert!(f.level() >= 0.0, "level went negative at step {i}: {}", f.level());
+        }
+        for h in [0.5, 1.0, 2.0, 10.0, 1e3] {
+            let fc = f.forecast(h);
+            assert!(fc >= 0.0, "horizon {h}: forecast {fc} must clamp at zero");
+            assert!(fc.is_finite());
+        }
+        // The clamped forecast stays a valid planner demand: sizing for
+        // it must not trip the validation panic path.
+        use crate::mig::gpu::GpuModel;
+        use crate::scheduler::{DemandWorkload, Scheduler};
+        use crate::workload::spec::WorkloadSpec;
+        let bert = crate::models::zoo::lookup("bert-base").unwrap();
+        let ws = vec![DemandWorkload::service(
+            WorkloadSpec::inference(bert, 8, 128),
+            40.0,
+            f.forecast(2.0),
+        )];
+        let sched = Scheduler::new(GpuModel::A100_80GB);
+        assert!(
+            sched.plan_for_demand(&ws, 0.75).is_some(),
+            "a zero-demand service must still be plannable"
+        );
     }
 }

@@ -7,9 +7,16 @@
 //! bitwise-deterministic at 1/2/4/16 workers; (d) every layout any fleet
 //! policy adopts passes the MIG placement rules; (e) the fleet demand
 //! packer splits demand by capacity and each per-GPU plan passes the
-//! placement rules.
+//! placement rules; (f) failure injection conserves requests
+//! (completed + failed + lost_in_crash = arrived) across the crash grid,
+//! faulted sweeps stay bitwise-deterministic, and stranded/crashed
+//! requests keep their original arrival timestamps so queueing latency
+//! spans the outage.
 
-use migperf::cluster::{FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass, RouterKind};
+use migperf::cluster::{
+    FaultInjection, FaultPlan, FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass,
+    RouterKind,
+};
 use migperf::mig::gpu::GpuModel;
 use migperf::mig::placement::PlacementEngine;
 use migperf::models::zoo;
@@ -47,6 +54,32 @@ fn diurnal_fleet(
         duration_s: 240.0,
         window_s: 10.0,
         rho_max: 0.75,
+        faults: FaultPlan::none(),
+        seed,
+    }
+}
+
+/// A flat-Poisson fleet (no diurnal ramp), so latency differences between
+/// two runs are attributable to injected faults rather than load shape.
+fn poisson_fleet(n: usize, rate_per_class: f64, seed: u64) -> FleetConfig {
+    let bert = zoo::lookup("bert-base").unwrap();
+    let class = RequestClass {
+        spec: WorkloadSpec::inference(bert, 8, 128),
+        slo_ms: 40.0,
+        arrival: ArrivalSpec::Poisson { rate: rate_per_class },
+    };
+    FleetConfig {
+        gpus: vec![GpuModel::A100_80GB; n],
+        train: Some(WorkloadSpec::training(bert, 32, 128)),
+        classes: vec![class.clone(), class],
+        router: RouterKind::LeastLoaded,
+        policy: FleetPolicyKind::Static,
+        mode: RepartitionMode::Rolling,
+        cost: ReconfigCost::default(),
+        duration_s: 240.0,
+        window_s: 10.0,
+        rho_max: 0.75,
+        faults: FaultPlan::none(),
         seed,
     }
 }
@@ -197,6 +230,220 @@ fn fleet_adopted_layouts_are_valid() {
             }
         }
     }
+}
+
+/// (f1) Conservation under crash/recovery: for every router × mode and
+/// both fault granularities, every admitted request ends in exactly one
+/// of {completed, failed, lost_in_crash}.
+#[test]
+fn request_conservation_holds_across_the_fault_grid() {
+    let plans: Vec<(&str, FaultPlan)> = vec![
+        ("mtbf", FaultPlan::from_mtbf(2, 240.0, 60.0, 15.0, 3)),
+        (
+            "explicit",
+            FaultPlan {
+                injections: vec![
+                    FaultInjection { t: 50.0, gpu: 0, class: None, down_s: 25.0 },
+                    FaultInjection { t: 120.0, gpu: 1, class: Some(0), down_s: 30.0 },
+                    FaultInjection { t: 200.0, gpu: 0, class: None, down_s: f64::INFINITY },
+                ],
+                retry_budget: 1,
+                storm_guard: u64::MAX,
+            },
+        ),
+        ("no-retries", FaultPlan::from_mtbf(2, 240.0, 80.0, 20.0, 9).with_retries(0)),
+    ];
+    for router in all_routers() {
+        for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+            for (name, plan) in &plans {
+                let mut cfg = diurnal_fleet(2, reactive(), router.clone(), mode, 11);
+                cfg.faults = plan.clone();
+                let out = cfg.run().unwrap();
+                let tag = format!("{}/{}/{name}", router.name(), mode.name());
+                assert!(out.arrived > 500, "{tag}: arrived {}", out.arrived);
+                assert_eq!(
+                    out.completed + out.failed_requests + out.lost_in_crash,
+                    out.arrived,
+                    "{tag}: completed + failed + lost_in_crash must equal admitted"
+                );
+                assert_eq!(
+                    out.fault_log.len(),
+                    plan.injections.len(),
+                    "{tag}: every scheduled fault executes exactly once"
+                );
+                assert!(out.availability <= 1.0 && out.availability >= 0.0, "{tag}");
+                let logged: u64 = out.fault_log.iter().map(|f| f.lost).sum();
+                assert_eq!(logged, out.lost_in_crash, "{tag}: fault log accounts every loss");
+                let retried: u64 = out.fault_log.iter().map(|f| f.retried).sum();
+                assert_eq!(retried, out.retried_requests, "{tag}");
+            }
+        }
+    }
+}
+
+/// (f2) Faulted fleet sweeps are bitwise-deterministic at 1/2/4/16
+/// workers — the crash schedule is config data, not runtime randomness.
+#[test]
+fn faulted_fleet_sweep_bitwise_deterministic_across_worker_counts() {
+    let mut grid: Vec<FleetConfig> = Vec::new();
+    for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+        for seed in [2024u64, 2025u64] {
+            let mut cfg = diurnal_fleet(2, reactive(), RouterKind::LeastLoaded, mode, seed);
+            cfg.faults = FaultPlan::from_mtbf(2, 240.0, 70.0, 15.0, seed ^ 0xFA17);
+            grid.push(cfg);
+        }
+    }
+    let baseline = sweep::run_fleet(&SweepEngine::new(1), &grid).unwrap();
+    for workers in [2usize, 4, 16] {
+        let outs = sweep::run_fleet(&SweepEngine::new(workers), &grid).unwrap();
+        assert_eq!(outs.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&outs) {
+            assert_eq!(a.arrived, b.arrived, "workers={workers}");
+            assert_eq!(a.completed, b.completed, "workers={workers}");
+            assert_eq!(a.failed_requests, b.failed_requests, "workers={workers}");
+            assert_eq!(a.retried_requests, b.retried_requests, "workers={workers}");
+            assert_eq!(a.lost_in_crash, b.lost_in_crash, "workers={workers}");
+            assert_eq!(a.gpu_crashes, b.gpu_crashes, "workers={workers}");
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "workers={workers}");
+            assert_eq!(a.availability.to_bits(), b.availability.to_bits(), "workers={workers}");
+            assert_eq!(
+                a.pooled.p99_latency_ms.to_bits(),
+                b.pooled.p99_latency_ms.to_bits(),
+                "workers={workers}"
+            );
+            for (da, db) in a.downtime_s_per_gpu.iter().zip(&b.downtime_s_per_gpu) {
+                assert_eq!(da.to_bits(), db.to_bits(), "workers={workers}");
+            }
+            assert_eq!(a.fault_log.len(), b.fault_log.len(), "workers={workers}");
+            for (fa, fb) in a.fault_log.iter().zip(&b.fault_log) {
+                assert_eq!(fa.t.to_bits(), fb.t.to_bits(), "workers={workers}");
+                assert_eq!(fa.gpu, fb.gpu, "workers={workers}");
+                assert_eq!(fa.lost, fb.lost, "workers={workers}");
+                assert_eq!(fa.retried, fb.retried, "workers={workers}");
+            }
+        }
+    }
+}
+
+/// (f3) Stranded-request accounting: requests held at the ingress over a
+/// full-fleet outage keep their original arrival timestamps, so the p99
+/// (and max) latency of an outage run strictly exceeds the fault-free
+/// run of the *same* seed and load — if latencies were re-stamped at
+/// re-dispatch, the outage would be invisible in the tail.
+#[test]
+fn p99_under_full_fleet_outage_strictly_exceeds_no_outage_p99() {
+    let down_s = 40.0;
+    let clean = poisson_fleet(1, 20.0, 17).run().unwrap();
+    let mut cfg = poisson_fleet(1, 20.0, 17);
+    cfg.faults = FaultPlan {
+        injections: vec![FaultInjection { t: 100.0, gpu: 0, class: None, down_s }],
+        retry_budget: 3,
+        storm_guard: u64::MAX,
+    };
+    let outage = cfg.run().unwrap();
+    assert_eq!(clean.arrived, outage.arrived, "same seed ⇒ same arrival stream");
+    assert_eq!(outage.gpu_crashes, 1);
+    assert!(outage.stranded_requests > 0, "arrivals during the outage must strand");
+    assert_eq!(outage.completed + outage.failed_requests + outage.lost_in_crash, outage.arrived);
+    assert_eq!(outage.completed, outage.arrived, "within budget, everything is served");
+    assert!(
+        outage.pooled.p99_latency_ms > clean.pooled.p99_latency_ms,
+        "outage p99 {} must strictly exceed fault-free p99 {}",
+        outage.pooled.p99_latency_ms,
+        clean.pooled.p99_latency_ms
+    );
+    // Requests stranded near the crash wait out (almost) the whole
+    // outage: the max latency must span it, which is only possible when
+    // original arrival timestamps survive the re-dispatch.
+    assert!(
+        outage.pooled.max_latency_ms >= 0.9 * down_s * 1e3,
+        "max latency {} ms must span the {down_s}s outage",
+        outage.pooled.max_latency_ms
+    );
+    assert!((outage.downtime_s_per_gpu[0] - down_s).abs() < 1e-9);
+}
+
+/// (f3b) The same span property for the *drain* stranding path on a
+/// fleet of one: queued requests displaced at drain start and stranded
+/// at the ingress must wait out the repartition downtime with their
+/// original timestamps.
+#[test]
+fn fleet_of_one_drain_latency_spans_the_reconfiguration() {
+    // Same scenario and seed as the engine's fleet-of-one stranding test,
+    // which pins that this run repartitions and strands.
+    let out = diurnal_fleet(1, reactive(), RouterKind::LeastLoaded, RepartitionMode::Rolling, 2024)
+        .run()
+        .unwrap();
+    assert!(out.reconfigurations >= 1, "the peak must force a repartition");
+    assert!(out.stranded_requests > 0, "a fleet of one must strand during its own drain");
+    assert_eq!(out.completed, out.arrived, "stranded requests are served after resume");
+    // With no sibling, every arrival between decision and resume strands
+    // at the ingress; served with its original timestamp, it carries most
+    // of the outage in its latency — so the tail must span the longest
+    // drain. (Re-stamping at re-dispatch would erase this.)
+    let max_down_ms: f64 = out.decisions.iter().map(|d| d.downtime_s * 1e3).fold(0.0, f64::max);
+    assert!(max_down_ms > 0.0);
+    assert!(
+        out.pooled.max_latency_ms >= 0.5 * max_down_ms,
+        "max latency {} ms must span the longest drain ({max_down_ms} ms)",
+        out.pooled.max_latency_ms
+    );
+    // Requests displaced from the queue at drain start arrived before the
+    // decision, so they wait out the *whole* downtime.
+    let displaced_span_ms: f64 = out
+        .decisions
+        .iter()
+        .filter(|d| d.migrated > 0)
+        .map(|d| d.downtime_s * 1e3)
+        .fold(0.0, f64::max);
+    if displaced_span_ms > 0.0 {
+        assert!(
+            out.pooled.max_latency_ms >= displaced_span_ms,
+            "max latency {} ms must cover the displaced-queue drain ({displaced_span_ms} ms)",
+            out.pooled.max_latency_ms
+        );
+    }
+}
+
+/// (f4) Instance-level crashes down one replica, not the GPU: the fleet
+/// keeps full GPU-level availability and the sibling replica absorbs the
+/// class.
+#[test]
+fn instance_crash_downs_one_replica_only() {
+    let mut cfg = poisson_fleet(2, 40.0, 23);
+    cfg.faults = FaultPlan {
+        injections: vec![FaultInjection { t: 80.0, gpu: 0, class: Some(0), down_s: 40.0 }],
+        retry_budget: 1,
+        storm_guard: u64::MAX,
+    };
+    let out = cfg.run().unwrap();
+    assert_eq!(out.instance_crashes, 1);
+    assert_eq!(out.gpu_crashes, 0);
+    assert_eq!(out.availability, 1.0, "instance crashes are not GPU downtime");
+    assert_eq!(out.downtime_s_per_gpu, vec![0.0, 0.0]);
+    assert_eq!(out.completed + out.failed_requests + out.lost_in_crash, out.arrived);
+    assert_eq!(out.lost_in_crash, 0, "budget 1 retries the dumped requests");
+    assert_eq!(out.failed_requests, 0, "the sibling replica absorbs the class");
+    assert_eq!(out.completed, out.arrived);
+}
+
+/// (f5) The retry-storm guard sheds instead of re-admitting: with the
+/// guard at zero nothing is ever retried, and the shed requests are
+/// accounted as failed — conservation still holds.
+#[test]
+fn storm_guard_zero_sheds_every_dumped_request() {
+    let mut cfg = poisson_fleet(2, 40.0, 29);
+    cfg.faults = FaultPlan {
+        injections: vec![FaultInjection { t: 100.0, gpu: 0, class: None, down_s: 30.0 }],
+        retry_budget: 5,
+        storm_guard: 0,
+    };
+    let out = cfg.run().unwrap();
+    assert_eq!(out.retried_requests, 0, "a zero guard never re-admits");
+    assert_eq!(out.lost_in_crash, 0, "budget 5 means no request exhausts its retries");
+    assert_eq!(out.completed + out.failed_requests + out.lost_in_crash, out.arrived);
+    let shed: u64 = out.fault_log.iter().map(|f| f.shed).sum();
+    assert_eq!(shed, out.failed_requests, "every failure here is a storm shed");
 }
 
 /// (e) The fleet demand packer splits by capacity weight and every
