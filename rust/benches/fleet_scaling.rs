@@ -13,7 +13,11 @@
 //! 3. **goodput under partial outages** — the same scenario rerun at
 //!    three availability levels (no faults, light and heavy seeded
 //!    MTBF/MTTR crash schedules), asserting request conservation
-//!    (completed + failed + lost = arrived) at every level.
+//!    (completed + failed + lost = arrived) at every level;
+//! 4. **multi-tenant fairness** — two tenants at weights 3:1 under
+//!    identical offered load: the weighted-fair (DRR) router's Jain's
+//!    index over weight-normalized goodput must exceed round-robin's at
+//!    the diurnal peak, with per-tenant conservation at every point.
 //!
 //! The whole grid runs serial and parallel through the sweep engine and
 //! asserts bit-identical checksums (the determinism contract).
@@ -26,7 +30,7 @@ use std::time::Instant;
 
 use migperf::cluster::{
     FaultPlan, FleetConfig, FleetOutcome, FleetPolicyKind, RepartitionMode, RequestClass,
-    RouterKind,
+    RouterKind, Tenant,
 };
 use migperf::mig::gpu::GpuModel;
 use migperf::models::zoo;
@@ -65,6 +69,7 @@ fn scenario(
         gpus: vec![GpuModel::A100_80GB; n],
         train: Some(WorkloadSpec::training(bert, 32, 128)),
         classes: vec![class.clone(), class],
+        tenants: Vec::new(),
         router,
         policy,
         mode,
@@ -85,6 +90,7 @@ fn checksum(outs: &[FleetOutcome]) -> f64 {
                 + o.pooled.p99_latency_ms
                 + o.reconfig_downtime_s
                 + o.migrated_requests as f64
+                + o.fairness_jain
         })
         .sum()
 }
@@ -337,6 +343,86 @@ fn main() {
     );
     assert!(heavy.2 < 1.0, "heavy crashes must dent availability, got {}", heavy.2);
 
+    // Multi-tenant fairness: two tenants at weights 3:1, identical
+    // offered load (each owns one of the two identical diurnal classes).
+    // Round-robin ignores the weights, so weight-normalized goodput is
+    // ~1 : 3 and Jain's index sits near 0.8; the weighted-fair router's
+    // DRR credit steers gold to the shallow queues at the peak, pushing
+    // the goodput ratio toward the 3:1 target and the index up. Tenant
+    // sets are config data, so the fairness grid inherits the
+    // bitwise-determinism contract.
+    let fair_tenants = vec![
+        Tenant::new("gold", 3.0, vec![0]),
+        Tenant::new("bronze", 1.0, vec![1]),
+    ];
+    let fair_routers = [RouterKind::RoundRobin, RouterKind::WeightedFair];
+    let mut fair_grid: Vec<FleetConfig> = Vec::new();
+    for router in &fair_routers {
+        for &seed in &seeds {
+            let mut cfg = scenario(
+                versus_size,
+                reactive.clone(),
+                router.clone(),
+                RepartitionMode::Rolling,
+                seed,
+                duration_s,
+                period_s,
+                window_s,
+            );
+            cfg.tenants = fair_tenants.clone();
+            fair_grid.push(cfg);
+        }
+    }
+    let fair_serial = sweep::run_fleet(&serial, &fair_grid).expect("fairness grid");
+    let fair_outs = sweep::run_fleet(&parallel, &fair_grid).expect("fairness grid");
+    assert_eq!(
+        checksum(&fair_serial).to_bits(),
+        checksum(&fair_outs).to_bits(),
+        "tenant fleet sweeps must be bit-identical at any worker count"
+    );
+    println!("\nmulti-tenant fairness (fleet size {versus_size}, weights gold:bronze = 3:1):");
+    let mut router_jain: Vec<(&str, f64)> = Vec::new();
+    for (ri, router) in fair_routers.iter().enumerate() {
+        let outs_r = &fair_outs[ri * seeds.len()..(ri + 1) * seeds.len()];
+        for out in outs_r {
+            for t in &out.tenants {
+                assert_eq!(
+                    t.completed + t.failed + t.lost_in_crash,
+                    t.arrived,
+                    "{}: per-tenant conservation must hold",
+                    t.name
+                );
+            }
+            assert_eq!(
+                out.tenants.iter().map(|t| t.arrived).sum::<u64>(),
+                out.arrived,
+                "tenants must partition the traffic exactly"
+            );
+        }
+        let jain = stats::mean(&outs_r.iter().map(|o| o.fairness_jain).collect::<Vec<_>>());
+        assert!((0.0..=1.0).contains(&jain), "{}: jain {jain} out of range", router.name());
+        for t in ["gold", "bronze"] {
+            let g = stats::mean(
+                &outs_r
+                    .iter()
+                    .map(|o| {
+                        o.tenants.iter().find(|r| r.name == t).expect("tenant present").goodput_rps
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            println!("  {:>13} {t:>6}: goodput {g:.1} rps", router.name());
+        }
+        println!("  {:>13} jain over goodput/weight: {jain:.4}", router.name());
+        router_jain.push((router.name(), jain));
+    }
+    let rr_jain = router_jain[0].1;
+    let wf_jain = router_jain[1].1;
+    assert!(
+        wf_jain > rr_jain,
+        "weighted-fair must beat round-robin on Jain's index under 3:1 weights at the peak \
+         (weighted-fair {wf_jain:.4} vs round-robin {rr_jain:.4})"
+    );
+
     let rows: Vec<Json> = grid
         .iter()
         .zip(&outs)
@@ -417,6 +503,68 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "fairness",
+            Json::obj(vec![
+                ("fleet_size", Json::Num(versus_size as f64)),
+                (
+                    "tenants",
+                    Json::Arr(
+                        fair_tenants
+                            .iter()
+                            .map(|t| {
+                                Json::obj(vec![
+                                    ("name", Json::Str(t.name.clone())),
+                                    ("weight", Json::Num(t.weight)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("round_robin_jain", Json::Num(rr_jain)),
+                ("weighted_fair_jain", Json::Num(wf_jain)),
+                ("weighted_fair_beats_round_robin", Json::Bool(wf_jain > rr_jain)),
+                ("conservation_ok", Json::Bool(true)),
+                (
+                    "rows",
+                    Json::Arr(
+                        fair_grid
+                            .iter()
+                            .zip(&fair_outs)
+                            .map(|(cfg, out)| {
+                                Json::obj(vec![
+                                    ("router", Json::Str(out.router.to_string())),
+                                    ("seed", Json::Num(cfg.seed as f64)),
+                                    ("fairness_jain", Json::Num(out.fairness_jain)),
+                                    (
+                                        "tenants",
+                                        Json::Arr(
+                                            out.tenants
+                                                .iter()
+                                                .map(|t| {
+                                                    Json::obj(vec![
+                                                        ("name", Json::Str(t.name.clone())),
+                                                        ("goodput_rps", Json::Num(t.goodput_rps)),
+                                                        (
+                                                            "norm_goodput_rps",
+                                                            Json::Num(t.norm_goodput_rps),
+                                                        ),
+                                                        (
+                                                            "slo_violation_frac",
+                                                            Json::Num(t.slo_violation_frac),
+                                                        ),
+                                                    ])
+                                                })
+                                                .collect(),
+                                        ),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
         ),
         ("rows", Json::Arr(rows)),
     ]);

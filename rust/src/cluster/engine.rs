@@ -42,7 +42,9 @@ use crate::mig::enumerate::Layout;
 use crate::mig::gpu::GpuModel;
 use crate::mig::placement::PlacementEngine;
 use crate::orchestrator::{churn, ReconfigCost, ServiceObs};
-use crate::scheduler::{plan_fleet_for_demand, DemandWorkload, RatePlan, Scheduler};
+use crate::scheduler::{
+    plan_fleet_for_demand, plan_fleet_for_demand_weighted, DemandWorkload, RatePlan, Scheduler,
+};
 use crate::simgpu::desim::Des;
 use crate::simgpu::perfmodel::{PerfError, StepEstimate};
 use crate::simgpu::resource::ExecResource;
@@ -54,6 +56,7 @@ use crate::workload::spec::WorkloadSpec;
 use super::faults::{FaultPlan, FaultRecord};
 use super::policy::{FleetCtx, FleetObs, FleetPolicyKind, GpuObs};
 use super::router::{GpuHealth, RoutePolicy, RouterKind};
+use super::tenancy::{jain_index, tenant_of_classes, validate_tenants, Tenant, TenantOutcome};
 
 /// One fleet-wide request class: a workload, its SLO, and the aggregate
 /// arrival stream the router spreads across the fleet.
@@ -105,6 +108,13 @@ pub struct FleetConfig {
     pub train: Option<WorkloadSpec>,
     /// The request classes served fleet-wide.
     pub classes: Vec<RequestClass>,
+    /// Tenants grouping the request classes under SLO weights. Empty
+    /// means the implicit default — one tenant per class at weight 1 —
+    /// which keeps demand splitting and planning exactly as before and
+    /// only adds per-tenant accounting to the outcome. A non-empty set
+    /// must partition the classes exactly (validated) and additionally
+    /// switches the demand planners to the tenant-weighted split.
+    pub tenants: Vec<Tenant>,
     /// Request routing policy.
     pub router: RouterKind,
     /// Fleet repartitioning policy.
@@ -221,6 +231,13 @@ pub struct FleetOutcome {
     pub goodput_rps: f64,
     /// Fraction of completions that blew their SLO.
     pub slo_violation_frac: f64,
+    /// Per-tenant accounting, in tenant order (when the config declares
+    /// no tenants, one implicit tenant per class at weight 1).
+    pub tenants: Vec<TenantOutcome>,
+    /// Jain's fairness index over weight-normalized tenant goodput
+    /// (`goodput_t / weight_t`): 1 is perfectly weighted-fair, `1/n` is
+    /// maximally unfair.
+    pub fairness_jain: f64,
     /// Training steps completed across the fleet.
     pub train_steps: u64,
     /// Training throughput across the fleet, samples/s.
@@ -466,10 +483,38 @@ fn dispatch_req(
     Some(g)
 }
 
-/// Re-dispatch requests stranded at the fleet ingress, oldest first per
-/// class, stopping as soon as the router finds no destination. Called
-/// whenever capacity returns (a reconfiguration completes or a crash
-/// recovers).
+/// Merge the per-class stranded queues into one globally oldest-first
+/// dispatch order, ties broken by the lowest class index. The queues are
+/// drained; callers re-enqueue whatever they cannot dispatch.
+///
+/// Ordering matters: re-dispatch used to run class by class in class
+/// index order, so after a recovery class 0's *whole* backlog jumped
+/// ahead of older class-1 requests — a low-index class could starve a
+/// higher-index one out of every capacity-return event. (A class queue
+/// is also not internally sorted: crash retries append old-timestamp
+/// requests behind younger stranded arrivals, so the sort is needed
+/// within classes too.)
+fn stranded_dispatch_order(stranded: &mut [VecDeque<Req>]) -> Vec<(usize, Req)> {
+    let total: usize = stranded.iter().map(|q| q.len()).sum();
+    let mut merged: Vec<(usize, Req)> = Vec::with_capacity(total);
+    for (c, q) in stranded.iter_mut().enumerate() {
+        merged.extend(q.drain(..).map(|req| (c, req)));
+    }
+    merged.sort_by(|a, b| {
+        a.1.arrived
+            .partial_cmp(&b.1.arrived)
+            .expect("finite arrival timestamps")
+            .then(a.0.cmp(&b.0))
+    });
+    merged
+}
+
+/// Re-dispatch requests stranded at the fleet ingress, globally oldest
+/// first across classes (ties to the lowest class index). A class whose
+/// dispatch fails is blocked for the rest of the pass — availability
+/// cannot change mid-drain, and requests behind the failure must not
+/// overtake it — while other classes keep draining. Called whenever
+/// capacity returns (a reconfiguration completes or a crash recovers).
 #[allow(clippy::too_many_arguments)] // DES plumbing, not an API
 fn drain_stranded(
     des: &mut Des<Ev>,
@@ -481,13 +526,17 @@ fn drain_stranded(
     available: &mut Vec<bool>,
     depth: &mut Vec<usize>,
 ) {
-    for (c, q) in stranded.iter_mut().enumerate() {
-        while let Some(&req) = q.front() {
-            let sent = dispatch_req(des, router, gpus_state, mode, c, req, t, available, depth);
-            if sent.is_none() {
-                break;
-            }
-            q.pop_front();
+    let merged = stranded_dispatch_order(stranded);
+    if merged.is_empty() {
+        return;
+    }
+    let mut blocked = vec![false; stranded.len()];
+    for (c, req) in merged {
+        if blocked[c]
+            || dispatch_req(des, router, gpus_state, mode, c, req, t, available, depth).is_none()
+        {
+            blocked[c] = true;
+            stranded[c].push_back(req);
         }
     }
 }
@@ -535,6 +584,9 @@ impl FleetConfig {
                 )));
             }
             c.arrival.validate()?;
+        }
+        if !self.tenants.is_empty() {
+            validate_tenants(&self.tenants, self.classes.len()).map_err(FleetError::Invalid)?;
         }
         self.faults
             .validate(self.gpus.len(), self.classes.len(), self.duration_s)
@@ -601,14 +653,36 @@ impl FleetConfig {
         let (workloads, class_workloads) = self.demand_workloads();
         let class_base = workloads.len() - n_classes;
 
+        // Effective tenancy: explicit tenants switch the demand planners
+        // to the tenant-weighted split; the synthesized per-class default
+        // only adds accounting and leaves planning byte-for-byte as
+        // before.
+        let tenants_eff: Vec<Tenant> = if self.tenants.is_empty() {
+            Tenant::per_class(n_classes)
+        } else {
+            self.tenants.clone()
+        };
+        let tenant_of: Vec<usize> = tenant_of_classes(&tenants_eff, n_classes);
+        let weighted_planning = !self.tenants.is_empty();
+
         // Initial per-GPU layouts: the fleet demand packer at whole-trace
         // mean rates — every policy starts from the same baseline.
-        let fleet_plan =
-            plan_fleet_for_demand(&schedulers, &workloads, self.rho_max).ok_or_else(|| {
-                FleetError::Infeasible(
-                    "no per-GPU layouts host every class at whole-trace mean rates".into(),
-                )
-            })?;
+        let fleet_plan = if weighted_planning {
+            plan_fleet_for_demand_weighted(
+                &schedulers,
+                &workloads,
+                &class_workloads,
+                &tenants_eff,
+                self.rho_max,
+            )
+        } else {
+            plan_fleet_for_demand(&schedulers, &workloads, self.rho_max)
+        }
+        .ok_or_else(|| {
+            FleetError::Infeasible(
+                "no per-GPU layouts host every class at whole-trace mean rates".into(),
+            )
+        })?;
         let weights = fleet_plan.weights;
         let mut plans = fleet_plan.plans;
         let mut gpus_state: Vec<GpuState> = Vec::with_capacity(n_gpus);
@@ -637,7 +711,11 @@ impl FleetConfig {
         for c in &self.classes {
             arrivals.push(c.arrival.build(seeder.next_u64())?);
         }
-        let mut router = self.router.build(n_classes);
+        // The router sees the *declared* tenant set: with none declared,
+        // WeightedFair collapses to a single all-classes tenant (plain
+        // least-loaded) rather than inheriting the per-class accounting
+        // synthesis, which would demote symmetric traffic to deep queues.
+        let mut router = self.router.build(n_classes, &self.tenants);
         let mut policy = self.policy.build();
 
         let mut collectors: Vec<Vec<MetricsCollector>> = (0..n_gpus)
@@ -664,9 +742,11 @@ impl FleetConfig {
         let mut unavailable_routes: u64 = 0;
         let mut train_steps: u64 = 0;
         let mut reconfig_downtime = 0.0;
-        let mut failed_requests: u64 = 0;
-        let mut retried_requests: u64 = 0;
-        let mut lost_in_crash: u64 = 0;
+        // Terminal-failure accounting is kept per class so it can be
+        // re-aggregated per tenant; the outcome totals are the sums.
+        let mut failed_per_class: Vec<u64> = vec![0; n_classes];
+        let mut retried_per_class: Vec<u64> = vec![0; n_classes];
+        let mut lost_per_class: Vec<u64> = vec![0; n_classes];
         let mut gpu_crashes: u64 = 0;
         let mut instance_crashes: u64 = 0;
         let mut downtime_per_gpu: Vec<f64> = vec![0.0; n_gpus];
@@ -843,6 +923,9 @@ impl FleetConfig {
                                 schedulers: &schedulers,
                                 workloads: &workloads,
                                 class_workloads: &class_workloads,
+                                tenants: &tenants_eff,
+                                tenant_of: &tenant_of,
+                                weighted_planning,
                                 current: &plans,
                                 weights: &weights,
                                 now: t,
@@ -1042,10 +1125,13 @@ impl FleetConfig {
                     for (c, req) in dumped {
                         if req.tries >= self.faults.retry_budget {
                             lost_here += 1;
+                            lost_per_class[c] += 1;
                         } else if retried_here >= self.faults.storm_guard {
                             shed_here += 1;
+                            failed_per_class[c] += 1;
                         } else {
                             retried_here += 1;
+                            retried_per_class[c] += 1;
                             let req = Req { arrived: req.arrived, tries: req.tries + 1 };
                             let sent = dispatch_req(
                                 &mut des,
@@ -1064,9 +1150,6 @@ impl FleetConfig {
                             }
                         }
                     }
-                    lost_in_crash += lost_here;
-                    retried_requests += retried_here;
-                    failed_requests += shed_here;
                     fault_log.push(FaultRecord {
                         t,
                         gpu: g,
@@ -1140,8 +1223,8 @@ impl FleetConfig {
         // A permanently-failed fleet can leave requests stranded with
         // nothing left to recover: they fail, they are not silently
         // dropped (conservation: completed + failed + lost = arrived).
-        for q in stranded.iter_mut() {
-            failed_requests += q.len() as u64;
+        for (c, q) in stranded.iter_mut().enumerate() {
+            failed_per_class[c] += q.len() as u64;
             q.clear();
         }
         // GPUs still down at the end pay downtime up to the nominal
@@ -1191,6 +1274,55 @@ impl FleetConfig {
         let met_total: u64 = slo_met.iter().sum();
         let viol_total: u64 = violations.iter().sum();
         let completed = met_total + viol_total;
+        let failed_requests: u64 = failed_per_class.iter().sum();
+        let retried_requests: u64 = retried_per_class.iter().sum();
+        let lost_in_crash: u64 = lost_per_class.iter().sum();
+
+        // Per-tenant accounting: re-aggregate the per-class counters over
+        // the tenant partition, then summarize fairness as Jain's index
+        // over weight-normalized goodput.
+        let mut tenant_rows: Vec<TenantOutcome> = tenants_eff
+            .iter()
+            .map(|tn| TenantOutcome {
+                name: tn.name.clone(),
+                weight: tn.weight,
+                classes: tn.classes.clone(),
+                arrived: 0,
+                completed: 0,
+                slo_violations: 0,
+                failed: 0,
+                lost_in_crash: 0,
+                retried: 0,
+                goodput_rps: 0.0,
+                slo_violation_frac: 0.0,
+                norm_goodput_rps: 0.0,
+            })
+            .collect();
+        for c in 0..n_classes {
+            let ti = tenant_of[c];
+            if ti == usize::MAX {
+                continue; // unreachable for a validated tenant set
+            }
+            let row = &mut tenant_rows[ti];
+            row.arrived += arrived_per_class[c];
+            row.completed += slo_met[c] + violations[c];
+            row.slo_violations += violations[c];
+            row.failed += failed_per_class[c];
+            row.lost_in_crash += lost_per_class[c];
+            row.retried += retried_per_class[c];
+        }
+        for row in &mut tenant_rows {
+            row.goodput_rps = (row.completed - row.slo_violations) as f64 / self.duration_s;
+            row.slo_violation_frac = if row.completed > 0 {
+                row.slo_violations as f64 / row.completed as f64
+            } else {
+                0.0
+            };
+            row.norm_goodput_rps = row.goodput_rps / row.weight;
+        }
+        let norm: Vec<f64> = tenant_rows.iter().map(|r| r.norm_goodput_rps).collect();
+        let fairness_jain = jain_index(&norm);
+
         let train_batch = self.train.as_ref().map(|t| t.batch as f64).unwrap_or(0.0);
         Ok(FleetOutcome {
             policy: self.policy.name(),
@@ -1212,6 +1344,8 @@ impl FleetConfig {
             } else {
                 0.0
             },
+            tenants: tenant_rows,
+            fairness_jain,
             train_steps,
             train_samples_per_s: train_steps as f64 * train_batch / self.duration_s,
             reconfigurations: decisions.len() as u64,
@@ -1265,6 +1399,7 @@ mod tests {
             gpus: vec![GpuModel::A100_80GB; n],
             train: Some(WorkloadSpec::training(bert, 32, 128)),
             classes: vec![class.clone(), class],
+            tenants: Vec::new(),
             router,
             policy,
             mode,
@@ -1434,6 +1569,7 @@ mod tests {
             gpus: vec![GpuModel::A100_80GB, GpuModel::A30_24GB],
             train: None,
             classes: vec![class.clone(), class],
+            tenants: Vec::new(),
             router: RouterKind::LeastLoaded,
             policy: FleetPolicyKind::Static,
             mode: RepartitionMode::Rolling,
@@ -1586,6 +1722,7 @@ mod tests {
             gpus: vec![GpuModel::A100_80GB],
             train: Some(WorkloadSpec::training(bert, 32, 128)),
             classes: vec![class.clone(), class],
+            tenants: Vec::new(),
             router: RouterKind::LeastLoaded,
             policy: FleetPolicyKind::Static,
             mode: RepartitionMode::Rolling,
@@ -1651,6 +1788,130 @@ mod tests {
             a.arrived,
             "conservation must hold under the stochastic schedule"
         );
+    }
+
+    #[test]
+    fn stranded_redispatch_is_globally_oldest_first() {
+        // Class 0 holds younger requests than class 1's oldest: the old
+        // per-class drain dispatched all of class 0 first, so after a
+        // recovery class 0's whole backlog jumped ahead of older class-1
+        // requests. The merged order is globally oldest-first with ties
+        // to the lowest class index, and it sorts *within* classes too
+        // (crash retries append old-timestamp requests behind younger
+        // stranded arrivals).
+        let mut stranded: Vec<VecDeque<Req>> = vec![VecDeque::new(), VecDeque::new()];
+        stranded[0].push_back(Req { arrived: 10.0, tries: 0 });
+        stranded[0].push_back(Req { arrived: 20.0, tries: 0 });
+        stranded[1].push_back(Req { arrived: 5.0, tries: 1 });
+        stranded[1].push_back(Req { arrived: 20.0, tries: 0 });
+        stranded[1].push_back(Req { arrived: 12.0, tries: 1 });
+        let order = stranded_dispatch_order(&mut stranded);
+        let key: Vec<(usize, f64)> = order.iter().map(|(c, r)| (*c, r.arrived)).collect();
+        assert_eq!(
+            key,
+            vec![(1, 5.0), (0, 10.0), (1, 12.0), (0, 20.0), (1, 20.0)],
+            "globally oldest first, ties to the lowest class index"
+        );
+        assert!(stranded.iter().all(|q| q.is_empty()), "the queues are drained");
+    }
+
+    #[test]
+    fn default_tenancy_reports_one_tenant_per_class() {
+        let out = demo(
+            2,
+            FleetPolicyKind::Static,
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(out.tenants.len(), 2, "one implicit tenant per class");
+        let mut arrived = 0;
+        for (c, row) in out.tenants.iter().enumerate() {
+            assert_eq!(row.name, format!("t{c}"));
+            assert_eq!(row.weight, 1.0);
+            assert_eq!(row.classes, vec![c]);
+            assert_eq!(row.arrived, out.arrived_per_class[c]);
+            assert_eq!(
+                row.completed + row.failed + row.lost_in_crash,
+                row.arrived,
+                "per-tenant conservation must hold fault-free"
+            );
+            assert_eq!(
+                row.norm_goodput_rps.to_bits(),
+                row.goodput_rps.to_bits(),
+                "weight 1 normalizes to itself"
+            );
+            arrived += row.arrived;
+        }
+        assert_eq!(arrived, out.arrived, "tenants partition the traffic exactly");
+        assert!(
+            out.fairness_jain > 0.0 && out.fairness_jain <= 1.0,
+            "jain {} out of range",
+            out.fairness_jain
+        );
+    }
+
+    #[test]
+    fn explicit_tenants_account_and_plan_by_weight() {
+        let mut cfg = demo(
+            2,
+            FleetPolicyKind::Static,
+            RouterKind::WeightedFair,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        );
+        cfg.tenants = vec![
+            Tenant::new("gold", 3.0, vec![0]),
+            Tenant::new("bronze", 1.0, vec![1]),
+        ];
+        let out = cfg.run().unwrap();
+        assert_eq!(out.router, "weighted-fair");
+        assert_eq!(out.tenants.len(), 2);
+        assert_eq!(out.tenants[0].name, "gold");
+        assert_eq!(out.tenants[0].weight, 3.0);
+        assert_eq!(out.tenants[1].classes, vec![1]);
+        for row in &out.tenants {
+            assert_eq!(row.completed + row.failed + row.lost_in_crash, row.arrived);
+            assert!(row.arrived > 100, "{}: arrived {}", row.name, row.arrived);
+            let norm = row.goodput_rps / row.weight;
+            assert_eq!(row.norm_goodput_rps.to_bits(), norm.to_bits());
+        }
+        assert_eq!(
+            out.tenants.iter().map(|r| r.arrived).sum::<u64>(),
+            out.arrived,
+            "tenants partition the traffic exactly"
+        );
+        assert!(out.fairness_jain > 0.0 && out.fairness_jain <= 1.0);
+        assert_eq!(out.completed, out.arrived, "fault-free runs serve everything");
+    }
+
+    #[test]
+    fn invalid_tenant_sets_are_rejected() {
+        let base = || {
+            demo(
+                2,
+                FleetPolicyKind::Static,
+                RouterKind::LeastLoaded,
+                RepartitionMode::Rolling,
+                240.0,
+                120.0,
+            )
+        };
+        let mut cfg = base();
+        cfg.tenants = vec![Tenant::new("a", 1.0, vec![0])]; // class 1 unowned
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))));
+
+        let mut cfg = base();
+        cfg.tenants = vec![Tenant::new("a", 0.0, vec![0]), Tenant::new("b", 1.0, vec![1])];
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))), "zero weight");
+
+        let mut cfg = base();
+        cfg.tenants = vec![Tenant::new("a", 1.0, vec![0, 1]), Tenant::new("b", 1.0, vec![1])];
+        assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))), "class owned twice");
     }
 
     #[test]

@@ -23,14 +23,22 @@
 //! * [`faults`] — deterministic failure injection: seed-driven GPU and
 //!   instance crash schedules ([`FaultPlan`]), ingress retry budgets and
 //!   the retry-storm guard, measured as goodput under partial outages;
+//! * [`tenancy`] — multi-tenant fairness: [`Tenant`]s group request
+//!   classes under SLO weights, the [`WeightedFair`] router enforces
+//!   them at the ingress via deficit round-robin, the demand planners
+//!   provision tenant weight × capacity weight, and `FleetOutcome`
+//!   reports per-tenant accounting plus Jain's fairness index over
+//!   weight-normalized goodput;
 //! * fleet sweeps fan out through [`crate::sweep::run_fleet`] with the
 //!   engine's bitwise-determinism guarantee intact (a crash schedule is
-//!   config data, so faulted grids stay bit-identical too).
+//!   config data, so faulted grids stay bit-identical too — and so is a
+//!   tenant set).
 
 pub mod engine;
 pub mod faults;
 pub mod policy;
 pub mod router;
+pub mod tenancy;
 
 pub use engine::{
     FleetConfig, FleetDecision, FleetError, FleetOutcome, RepartitionMode, RequestClass,
@@ -41,6 +49,9 @@ pub use policy::{
     GpuObs,
 };
 pub use router::{
-    Affinity, GpuHealth, LeastLoaded, RoundRobin, RoutePolicy, RouterKind,
-    DEFAULT_AFFINITY_SPILL,
+    Affinity, GpuHealth, LeastLoaded, RoundRobin, RoutePolicy, RouterKind, WeightedFair,
+    DEFAULT_AFFINITY_SPILL, DRR_CREDIT_CAP,
+};
+pub use tenancy::{
+    jain_index, parse_tenants, tenant_of_classes, validate_tenants, Tenant, TenantOutcome,
 };

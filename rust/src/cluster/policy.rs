@@ -10,7 +10,9 @@
 //! GPU's traffic to its siblings while it churns.
 
 use crate::orchestrator::{ReactiveParams, ServiceObs};
-use crate::scheduler::{DemandWorkload, RatePlan, Scheduler};
+use crate::scheduler::{tenant_scaled_demand, DemandWorkload, RatePlan, Scheduler};
+
+use super::tenancy::Tenant;
 
 /// Windowed observation of one fleet GPU.
 #[derive(Debug, Clone)]
@@ -46,6 +48,15 @@ pub struct FleetCtx<'a> {
     pub workloads: &'a [DemandWorkload],
     /// Workload index of each request class, in class order.
     pub class_workloads: &'a [usize],
+    /// Tenants in force (the engine synthesizes one tenant per class
+    /// when the config declares none), in tenant order.
+    pub tenants: &'a [Tenant],
+    /// Tenant index of each request class, in class order.
+    pub tenant_of: &'a [usize],
+    /// True when the config declared explicit tenants: per-GPU
+    /// replanning then applies the tenant-weighted demand split
+    /// ([`tenant_scaled_demand`]) on top of observed rates.
+    pub weighted_planning: bool,
     /// The per-GPU plans currently in force, in fleet order.
     pub current: &'a [RatePlan],
     /// Capacity weight of each GPU (sums to 1).
@@ -67,6 +78,18 @@ impl FleetCtx<'_> {
             ws[wi].demand_rps = Some(rates.get(ci).copied().unwrap_or(0.0).max(0.0));
         }
         ws
+    }
+
+    /// [`Self::workloads_at_rates`] as the planners should see it: under
+    /// explicit tenancy the observed rates are re-split by tenant weight
+    /// before sizing, so repartitions provision weighted shares.
+    pub fn planning_workloads(&self, rates: &[f64]) -> Vec<DemandWorkload> {
+        let ws = self.workloads_at_rates(rates);
+        if self.weighted_planning {
+            tenant_scaled_demand(&ws, self.class_workloads, self.tenants)
+        } else {
+            ws
+        }
     }
 }
 
@@ -144,12 +167,17 @@ impl FleetPolicy for FleetStatic {
     }
 }
 
-/// Reactive fleet policy: scan GPUs in fleet order and repartition the
-/// first one whose cooldown has expired and whose window shows pressure —
-/// a blown p99, a saturated replica, or a current plan that is no longer
-/// feasible at the rates the router actually sent it. The target plan
-/// comes from the per-GPU exhaustive planner sized for those observed
-/// per-GPU rates.
+/// Reactive fleet policy: repartition the GPU whose cooldown has expired
+/// and whose window shows pressure — a blown p99, a saturated replica,
+/// or a current plan that is no longer feasible at the rates the router
+/// actually sent it. Under explicit tenancy, when several GPUs qualify
+/// the policy sides with the *most-starved tenant* — the one with the
+/// lowest weight-normalized window goodput — and repartitions the GPU
+/// carrying the largest share of that tenant's window traffic (ties to
+/// the lowest fleet index); without configured tenants the legacy
+/// fleet-order scan is preserved exactly. The target plan comes from
+/// the per-GPU exhaustive planner sized for the observed per-GPU rates,
+/// tenant-weight-split under explicit tenancy.
 #[derive(Debug)]
 pub struct FleetReactive {
     /// Thresholds shared with the single-GPU reactive policy.
@@ -161,6 +189,52 @@ impl FleetPolicy for FleetReactive {
         "reactive"
     }
     fn decide(&mut self, obs: &FleetObs, ctx: &FleetCtx) -> Option<FleetAction> {
+        // Most-starved tenant (lowest weight-normalized window goodput).
+        // Only computed under explicit tenancy: with the synthesized
+        // per-class default the legacy fleet-order scan must stay
+        // byte-for-byte identical.
+        let n_tenants = ctx.tenants.len();
+        let starved: Option<usize> = if ctx.weighted_planning {
+            let mut tenant_good = vec![0.0f64; n_tenants];
+            let mut tenant_arrived = vec![0u64; n_tenants];
+            for go in &obs.gpus {
+                for (ci, s) in go.services.iter().enumerate() {
+                    let Some(&t) = ctx.tenant_of.get(ci) else { continue };
+                    if t < n_tenants {
+                        tenant_good[t] += (s.completed - s.violations) as f64;
+                        tenant_arrived[t] += s.arrivals;
+                    }
+                }
+            }
+            // Only tenants that actually offered traffic this window can
+            // be starved: an idle tenant has zero goodput by choice, and
+            // letting it win the argmin would both disable the steering
+            // (its per-GPU share is zero everywhere) and mislabel every
+            // repartition reason with a tenant that played no role.
+            let mut best: Option<(usize, f64)> = None;
+            for (t, tn) in ctx.tenants.iter().enumerate() {
+                if tenant_arrived[t] == 0 || !(tn.weight.is_finite() && tn.weight > 0.0) {
+                    continue;
+                }
+                let x = tenant_good[t] / tn.weight;
+                match best {
+                    Some((_, bx)) if bx <= x => {}
+                    _ => best = Some((t, x)),
+                }
+            }
+            best.map(|(t, _)| t)
+        } else {
+            None
+        };
+
+        // Candidate GPUs: running, out of cooldown, and showing pressure
+        // or an infeasible current plan at the observed rates. Each
+        // candidate caches its planning workload vector (for the planner
+        // pass below) and its share of the starved tenant's window
+        // arrivals (the sort key — 0 for everyone without explicit
+        // tenancy, so the sort below preserves the legacy fleet-order
+        // scan exactly).
+        let mut candidates: Vec<(u64, usize, Vec<DemandWorkload>)> = Vec::new();
         for (g, go) in obs.gpus.iter().enumerate() {
             if !go.running {
                 continue;
@@ -170,7 +244,7 @@ impl FleetPolicy for FleetReactive {
                 continue;
             }
             let rates: Vec<f64> = go.services.iter().map(|s| s.rate_rps).collect();
-            let ws = ctx.workloads_at_rates(&rates);
+            let ws = ctx.planning_workloads(&rates);
             let sched = &ctx.schedulers[g];
             let (_score, feasible) = sched.evaluate_plan(&ctx.current[g], &ws, ctx.rho_max);
             let pressure = go.services.iter().enumerate().any(|(ci, s)| {
@@ -181,6 +255,23 @@ impl FleetPolicy for FleetReactive {
             if feasible && !pressure {
                 continue;
             }
+            let starved_share: u64 = starved.map_or(0, |st| {
+                go.services
+                    .iter()
+                    .enumerate()
+                    .filter(|(ci, _)| ctx.tenant_of.get(*ci) == Some(&st))
+                    .map(|(_, s)| s.arrivals)
+                    .sum()
+            });
+            candidates.push((starved_share, g, ws));
+        }
+        // Repartition the GPU carrying the most of the starved tenant's
+        // window traffic; ties (and the no-tenant case, where every key
+        // is 0) fall back to the lowest fleet index.
+        candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        for (_, g, ws) in candidates {
+            let go = &obs.gpus[g];
+            let sched = &ctx.schedulers[g];
             let Some(candidate) = sched.plan_for_demand(&ws, ctx.rho_max) else {
                 continue; // even the best layout cannot host these rates
             };
@@ -190,8 +281,14 @@ impl FleetPolicy for FleetReactive {
             let fmt = |f: &dyn Fn(&ServiceObs) -> f64| -> String {
                 go.services.iter().map(|s| format!("{:.1}", f(s))).collect::<Vec<_>>().join(", ")
             };
+            let starved_note = match starved {
+                Some(st) if n_tenants > 1 => {
+                    format!(", starved tenant {}", ctx.tenants[st].name)
+                }
+                _ => String::new(),
+            };
             let reason = format!(
-                "gpu {g}: window rates [{}] req/s, p99 [{}] ms",
+                "gpu {g}: window rates [{}] req/s, p99 [{}] ms{starved_note}",
                 fmt(&|s| s.rate_rps),
                 fmt(&|s| s.p99_ms)
             );
@@ -240,6 +337,8 @@ mod tests {
     struct Fixture {
         schedulers: Vec<Scheduler>,
         workloads: Vec<DemandWorkload>,
+        tenants: Vec<Tenant>,
+        tenant_of: Vec<usize>,
         plans: Vec<RatePlan>,
         weights: Vec<f64>,
         last_change: Vec<f64>,
@@ -253,6 +352,8 @@ mod tests {
         Fixture {
             schedulers,
             workloads,
+            tenants: Tenant::per_class(2),
+            tenant_of: vec![0, 1],
             plans: fp.plans,
             weights: fp.weights,
             last_change: vec![0.0; n],
@@ -264,6 +365,9 @@ mod tests {
             schedulers: &f.schedulers,
             workloads: &f.workloads,
             class_workloads: &[1, 2],
+            tenants: &f.tenants,
+            tenant_of: &f.tenant_of,
+            weighted_planning: false,
             current: &f.plans,
             weights: &f.weights,
             now,
@@ -333,5 +437,90 @@ mod tests {
         draining.gpus[0].running = false;
         let action = p.decide(&draining, &ctx(&f, 100.0)).expect("gpu 1 still movable");
         assert_eq!(action.gpu, 1, "non-running gpu 0 must be skipped");
+    }
+
+    /// Per-class asymmetric observation: `(rate, completed)` per class.
+    fn obs_asym(per_class: [(f64, u64); 2], p99_ms: f64, busy: f64) -> GpuObs {
+        GpuObs {
+            services: per_class
+                .iter()
+                .map(|&(r, completed)| ServiceObs {
+                    arrivals: (r * 20.0) as u64,
+                    rate_rps: r,
+                    completed,
+                    violations: 0,
+                    p99_ms,
+                    busy_frac: busy,
+                    queue_depth: 0,
+                })
+                .collect(),
+            train_steps: 100,
+            running: true,
+        }
+    }
+
+    #[test]
+    fn starved_tenant_steers_the_gpu_choice() {
+        let mut f = fixture(2, 66.0);
+        f.tenants = vec![
+            Tenant::new("gold", 3.0, vec![0]),
+            Tenant::new("bronze", 1.0, vec![1]),
+        ];
+        f.tenant_of = vec![0, 1];
+        // Both GPUs are pressured. Gold's normalized window goodput is
+        // (1200 + 200) / 3 ≈ 467; bronze's is (100 + 300) / 1 = 400 —
+        // bronze is the most-starved tenant, and its window traffic
+        // concentrates on GPU 1 (60 req/s vs 10 on GPU 0). The old
+        // fleet-order scan would have repartitioned GPU 0.
+        let obs = FleetObs {
+            t: 100.0,
+            window_s: 20.0,
+            gpus: vec![
+                obs_asym([(60.0, 1200), (10.0, 100)], 120.0, 1.0),
+                obs_asym([(10.0, 200), (60.0, 300)], 120.0, 1.0),
+            ],
+        };
+        let mut c = ctx(&f, 100.0);
+        c.weighted_planning = true;
+        let mut p = FleetReactive { params: ReactiveParams::default() };
+        let action = p.decide(&obs, &c).expect("pressure must force a repartition");
+        assert_eq!(action.gpu, 1, "must target the GPU carrying the starved tenant's traffic");
+        assert!(
+            action.reason.contains("starved tenant bronze"),
+            "reason must name the starved tenant: {}",
+            action.reason
+        );
+    }
+
+    #[test]
+    fn idle_tenants_are_never_the_starved_tenant() {
+        let mut f = fixture(2, 66.0);
+        f.tenants = vec![
+            Tenant::new("gold", 3.0, vec![0]),
+            Tenant::new("idle", 1.0, vec![1]),
+        ];
+        f.tenant_of = vec![0, 1];
+        // Tenant "idle" offers no traffic this window: its zero goodput
+        // is by choice, so starvation steering must follow gold — the
+        // only tenant with arrivals — whose traffic concentrates on
+        // GPU 1.
+        let obs = FleetObs {
+            t: 100.0,
+            window_s: 20.0,
+            gpus: vec![
+                obs_asym([(20.0, 400), (0.0, 0)], 120.0, 1.0),
+                obs_asym([(60.0, 600), (0.0, 0)], 120.0, 1.0),
+            ],
+        };
+        let mut c = ctx(&f, 100.0);
+        c.weighted_planning = true;
+        let mut p = FleetReactive { params: ReactiveParams::default() };
+        let action = p.decide(&obs, &c).expect("pressure must force a repartition");
+        assert_eq!(action.gpu, 1, "steering follows the traffic-bearing tenant");
+        assert!(
+            action.reason.contains("starved tenant gold"),
+            "an idle tenant must never be labeled starved: {}",
+            action.reason
+        );
     }
 }

@@ -5,19 +5,26 @@
 //! reconfigurable-machine-scheduling problem (Tan et al., 2021). Routers
 //! are deterministic (no randomness, ties broken by lowest GPU index), so
 //! fleet sweeps inherit the engine's bit-identical-at-any-worker-count
-//! guarantee. Three reference policies ship behind [`RoutePolicy`]:
+//! guarantee. Four reference policies ship behind [`RoutePolicy`]:
 //!
 //! * [`RoundRobin`] — per-class rotating cursor over available GPUs;
 //! * [`LeastLoaded`] — the available replica with the shallowest queue;
 //! * [`Affinity`] — a sticky home GPU per class (locality: warm caches,
 //!   resident weights), spilling to the least-loaded sibling only when
 //!   the home replica is unavailable or its backlog exceeds the best
-//!   alternative by more than `spill`.
+//!   alternative by more than `spill`;
+//! * [`WeightedFair`] — deficit round-robin over per-tenant ingress
+//!   credit ([`Tenant`] weights): in-credit requests take the shallowest
+//!   available queue, out-of-credit requests yield it and join the
+//!   deepest, so tenant throughput shares track SLO weights under
+//!   contention.
 //!
 //! Routers never see raw GPU phases: the ingress health check
 //! ([`GpuHealth::may_route`]) projects each GPU's state down to the
 //! boolean `available` slice, so every `RoutePolicy` excludes crashed
 //! GPUs and replicas the same way it already excludes draining ones.
+
+use super::tenancy::Tenant;
 
 /// Health of one fleet GPU as seen by the ingress health check.
 ///
@@ -84,6 +91,8 @@ pub enum RouterKind {
         /// best alternative before the class spills.
         spill: usize,
     },
+    /// Deficit round-robin over per-tenant ingress credit.
+    WeightedFair,
 }
 
 /// Default spill threshold for [`RouterKind::Affinity`].
@@ -96,6 +105,7 @@ impl RouterKind {
             RouterKind::RoundRobin => "round-robin",
             RouterKind::LeastLoaded => "least-loaded",
             RouterKind::Affinity { .. } => "affinity",
+            RouterKind::WeightedFair => "weighted-fair",
         }
     }
 
@@ -107,16 +117,21 @@ impl RouterKind {
             "affinity" | "local" | "locality" => {
                 Some(RouterKind::Affinity { spill: DEFAULT_AFFINITY_SPILL })
             }
+            "wf" | "weighted-fair" | "weightedfair" | "drr" => Some(RouterKind::WeightedFair),
             _ => None,
         }
     }
 
     /// Construct the stateful router for `classes` request classes.
-    pub fn build(&self, classes: usize) -> Box<dyn RoutePolicy> {
+    /// `tenants` feeds [`WeightedFair`]'s credit table (an empty slice
+    /// means a single all-classes tenant, i.e. plain least-loaded); the
+    /// other routers ignore it.
+    pub fn build(&self, classes: usize, tenants: &[Tenant]) -> Box<dyn RoutePolicy> {
         match self {
             RouterKind::RoundRobin => Box::new(RoundRobin { cursors: vec![0; classes] }),
             RouterKind::LeastLoaded => Box::new(LeastLoaded),
             RouterKind::Affinity { spill } => Box::new(Affinity { spill: *spill }),
+            RouterKind::WeightedFair => Box::new(WeightedFair::new(classes, tenants)),
         }
     }
 }
@@ -136,13 +151,26 @@ impl RoutePolicy for RoundRobin {
         if n == 0 {
             return None;
         }
-        let cursor = self.cursors.get(class).copied().unwrap_or(0) % n;
+        if class >= self.cursors.len() {
+            // The engine always builds the router for its class count, so
+            // an out-of-range class is a caller bug. The old
+            // `get(..).unwrap_or(0)` fallback degraded *silently*: every
+            // such class restarted from cursor 0 on every call and never
+            // persisted its cursor, biasing the class onto GPU 0. Degrade
+            // loudly instead and grow a real cursor on demand.
+            #[cfg(debug_assertions)]
+            eprintln!(
+                "round-robin: class {class} exceeds the {} classes the router was built \
+                 with; growing the cursor table",
+                self.cursors.len()
+            );
+            self.cursors.resize(class + 1, 0);
+        }
+        let cursor = self.cursors[class] % n;
         for i in 0..n {
             let g = (cursor + i) % n;
             if available[g] {
-                if let Some(c) = self.cursors.get_mut(class) {
-                    *c = (g + 1) % n;
-                }
+                self.cursors[class] = (g + 1) % n;
                 return Some(g);
             }
         }
@@ -206,13 +234,121 @@ impl RoutePolicy for Affinity {
     }
 }
 
+/// Deepest available replica queue; ties break to the lowest index.
+/// The [`WeightedFair`] penalty path: out-of-credit requests join the
+/// longest backlog, leaving the shallow queues to in-credit tenants.
+fn deepest_loaded(available: &[bool], depth: &[usize]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (g, (&a, &d)) in available.iter().zip(depth).enumerate() {
+        if !a {
+            continue;
+        }
+        match best {
+            Some(b) if depth[b] >= d => {}
+            _ => best = Some(g),
+        }
+    }
+    best
+}
+
+/// Upper bound on banked DRR credit, in quanta: how much fast-path
+/// budget a tenant may accumulate while its traffic rides the slow path
+/// (or while the fleet idles) and then spend in a burst.
+pub const DRR_CREDIT_CAP: f64 = 4.0;
+
+/// Weighted-fair ingress: deficit round-robin over per-tenant credit.
+///
+/// Every routed request earns its tenant `weight / Σ weights` credit
+/// (capped at [`DRR_CREDIT_CAP`]); spending one whole credit buys the
+/// shallowest available queue ([`least_loaded`]), while an out-of-credit
+/// request is demoted to the deepest available queue
+/// ([`deepest_loaded`]). Under contention the queueing latency — and
+/// through the SLO, the *goodput* — of each tenant therefore tracks its
+/// weight: a weight-3 tenant fast-paths 3 of every 4 requests, a
+/// weight-1 tenant 1 of 4. With a single tenant the quantum is 1 and
+/// the router degenerates to least-loaded. Purely arithmetic on `f64`
+/// credit, ties to the lowest GPU index: bitwise-deterministic at any
+/// sweep worker count.
+///
+/// The discipline is deliberately *not* work-conserving: the fast-path
+/// share is a fixed fraction of a tenant's own traffic, so out-of-credit
+/// requests take the penalty path even while other tenants idle —
+/// strict ingress share enforcement (like non-work-conserving rate
+/// limiting), traded for simplicity and determinism. The penalty is
+/// proportional to queue divergence: on a balanced or idle fleet the
+/// deepest and shallowest queues coincide (both tie to the lowest
+/// index) and the slow path costs nothing.
+#[derive(Debug)]
+pub struct WeightedFair {
+    /// Tenant index of each class (`usize::MAX` = unmapped).
+    tenant_of: Vec<usize>,
+    /// Credit earned per routed request, per tenant: `weight / Σ weights`.
+    quantum: Vec<f64>,
+    /// Banked credit (deficit counter), per tenant.
+    credit: Vec<f64>,
+}
+
+impl WeightedFair {
+    /// Build for `classes` request classes grouped by `tenants`. An
+    /// empty set means one tenant spanning every class at weight 1 —
+    /// quantum 1, i.e. plain least-loaded — so selecting `--router wf`
+    /// without configuring tenants never *worsens* placement by
+    /// demoting symmetric traffic to deep queues.
+    pub fn new(classes: usize, tenants: &[Tenant]) -> WeightedFair {
+        let default_set;
+        let tset: &[Tenant] = if tenants.is_empty() {
+            default_set = vec![Tenant::new("all", 1.0, (0..classes).collect())];
+            &default_set
+        } else {
+            tenants
+        };
+        let total: f64 = tset.iter().map(|t| t.weight).sum();
+        let mut tenant_of = vec![usize::MAX; classes];
+        for (ti, t) in tset.iter().enumerate() {
+            for &c in &t.classes {
+                if c < classes {
+                    tenant_of[c] = ti;
+                }
+            }
+        }
+        let quantum = tset
+            .iter()
+            .map(|t| if total > 0.0 { t.weight / total } else { 0.0 })
+            .collect();
+        WeightedFair { tenant_of, quantum, credit: vec![0.0; tset.len()] }
+    }
+}
+
+impl RoutePolicy for WeightedFair {
+    fn name(&self) -> &'static str {
+        "weighted-fair"
+    }
+    fn route(&mut self, class: usize, available: &[bool], depth: &[usize]) -> Option<usize> {
+        let best = least_loaded(available, depth)?;
+        let tenant = self.tenant_of.get(class).copied().unwrap_or(usize::MAX);
+        if tenant == usize::MAX {
+            #[cfg(debug_assertions)]
+            eprintln!("weighted-fair: class {class} has no tenant; routing least-loaded");
+            return Some(best);
+        }
+        let credit = &mut self.credit[tenant];
+        *credit = (*credit + self.quantum[tenant]).min(DRR_CREDIT_CAP);
+        if *credit >= 1.0 {
+            *credit -= 1.0;
+            Some(best)
+        } else {
+            Some(deepest_loaded(available, depth).unwrap_or(best))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn round_robin_cycles_and_skips_unavailable() {
-        let mut r = RouterKind::RoundRobin.build(1);
+        let mut r = RouterKind::RoundRobin.build(1, &[]);
         let depth = [0usize; 4];
         let all = [true; 4];
         let picks: Vec<usize> =
@@ -227,7 +363,7 @@ mod tests {
 
     #[test]
     fn round_robin_keeps_per_class_cursors() {
-        let mut r = RouterKind::RoundRobin.build(2);
+        let mut r = RouterKind::RoundRobin.build(2, &[]);
         let depth = [0usize; 3];
         let all = [true; 3];
         assert_eq!(r.route(0, &all, &depth), Some(0));
@@ -236,8 +372,25 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_cursors_survive_out_of_range_growth() {
+        // Routing a class the router was not built for used to fall back
+        // to cursor 0 on *every* call and never persist — biasing the
+        // class onto GPU 0 forever. The cursor table now grows on demand
+        // and the new class cycles like any other.
+        let mut r = RouterKind::RoundRobin.build(1, &[]);
+        let depth = [0usize; 3];
+        let all = [true; 3];
+        assert_eq!(r.route(0, &all, &depth), Some(0), "prime class 0's cursor");
+        let picks: Vec<usize> =
+            (0..4).map(|_| r.route(2, &all, &depth).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0], "the grown class must rotate, not stick to 0");
+        // Growth must not disturb pre-existing cursors.
+        assert_eq!(r.route(0, &all, &depth), Some(1), "class 0 continues where it left off");
+    }
+
+    #[test]
     fn least_loaded_picks_shallowest_with_deterministic_ties() {
-        let mut r = RouterKind::LeastLoaded.build(1);
+        let mut r = RouterKind::LeastLoaded.build(1, &[]);
         assert_eq!(r.route(0, &[true; 3], &[5, 2, 2]), Some(1), "tie breaks to lowest index");
         assert_eq!(r.route(0, &[true, false, true], &[5, 0, 3]), Some(2));
         assert_eq!(r.route(0, &[false; 3], &[0, 0, 0]), None);
@@ -245,13 +398,64 @@ mod tests {
 
     #[test]
     fn affinity_sticks_home_then_spills() {
-        let mut r = RouterKind::Affinity { spill: 2 }.build(2);
+        let mut r = RouterKind::Affinity { spill: 2 }.build(2, &[]);
         // Home for class 1 of a 3-GPU fleet is GPU 1.
         assert_eq!(r.route(1, &[true; 3], &[0, 2, 0]), Some(1), "within spill: stay home");
         assert_eq!(r.route(1, &[true; 3], &[0, 9, 0]), Some(0), "overloaded home spills");
         let partial = [true, false, true];
         assert_eq!(r.route(1, &partial, &[4, 0, 1]), Some(2), "unavailable home spills");
         assert_eq!(r.route(1, &[false; 3], &[0, 0, 0]), None);
+    }
+
+    #[test]
+    fn weighted_fair_credit_gates_the_fast_path() {
+        // Gold (weight 3) earns 0.75 credit per request, bronze (weight
+        // 1) earns 0.25: over any 4 of its own requests gold fast-paths
+        // 3 and bronze 1. Shallowest queue is GPU 0, deepest is GPU 1.
+        let tenants = vec![
+            Tenant::new("gold", 3.0, vec![0]),
+            Tenant::new("bronze", 1.0, vec![1]),
+        ];
+        let all = [true, true];
+        let depth = [0usize, 5];
+        let mut r = RouterKind::WeightedFair.build(2, &tenants);
+        let gold: Vec<usize> = (0..4).map(|_| r.route(0, &all, &depth).unwrap()).collect();
+        assert_eq!(gold, vec![1, 0, 0, 0], "gold: one slow path, then three fast");
+        let mut r = RouterKind::WeightedFair.build(2, &tenants);
+        let bronze: Vec<usize> = (0..4).map(|_| r.route(1, &all, &depth).unwrap()).collect();
+        assert_eq!(bronze, vec![1, 1, 1, 0], "bronze: three slow paths, then one fast");
+    }
+
+    #[test]
+    fn weighted_fair_single_tenant_degenerates_to_least_loaded() {
+        // A single tenant — explicit or the empty-set default — has
+        // quantum 1: every request is in credit and takes the shallowest
+        // queue, exactly like least-loaded (ties to the lowest index).
+        let solo = vec![Tenant::new("solo", 2.0, vec![0, 1])];
+        for tenants in [&solo[..], &[]] {
+            let mut r = RouterKind::WeightedFair.build(2, tenants);
+            for _ in 0..8 {
+                assert_eq!(r.route(0, &[true; 3], &[5, 2, 2]), Some(1));
+                assert_eq!(r.route(1, &[true; 3], &[0, 2, 0]), Some(0));
+            }
+            assert_eq!(r.route(0, &[false; 3], &[0, 0, 0]), None);
+        }
+    }
+
+    #[test]
+    fn weighted_fair_slow_path_takes_the_deepest_available_queue() {
+        let tenants = vec![
+            Tenant::new("gold", 3.0, vec![0]),
+            Tenant::new("bronze", 1.0, vec![1]),
+        ];
+        let mut r = RouterKind::WeightedFair.build(2, &tenants);
+        // Bronze's first request is out of credit; the deepest queue is
+        // GPU 0 (depth 9) but it is unavailable, so it joins the deepest
+        // *available* queue — GPUs 2 and 3 tie at depth 5 and the tie
+        // breaks to the lowest index.
+        let avail = [false, true, true, true];
+        let depth = [9usize, 0, 5, 5];
+        assert_eq!(r.route(1, &avail, &depth), Some(2), "deepest available, tie to lowest");
     }
 
     #[test]
@@ -283,8 +487,9 @@ mod tests {
             RouterKind::RoundRobin,
             RouterKind::LeastLoaded,
             RouterKind::Affinity { spill: 2 },
+            RouterKind::WeightedFair,
         ] {
-            let mut r = kind.build(2);
+            let mut r = kind.build(2, &[]);
             for _ in 0..4 {
                 let g = r.route(1, &avail, &depth).expect("siblings stay available");
                 assert_ne!(g, 1, "{}: routed to the crashed GPU", r.name());
@@ -300,14 +505,17 @@ mod tests {
             RouterKind::parse("affinity"),
             Some(RouterKind::Affinity { spill: DEFAULT_AFFINITY_SPILL })
         );
+        assert_eq!(RouterKind::parse("wf"), Some(RouterKind::WeightedFair));
+        assert_eq!(RouterKind::parse("DRR"), Some(RouterKind::WeightedFair));
         assert_eq!(RouterKind::parse("nope"), None);
         for (kind, name) in [
             (RouterKind::RoundRobin, "round-robin"),
             (RouterKind::LeastLoaded, "least-loaded"),
             (RouterKind::Affinity { spill: 1 }, "affinity"),
+            (RouterKind::WeightedFair, "weighted-fair"),
         ] {
             assert_eq!(kind.name(), name);
-            assert_eq!(kind.build(2).name(), name);
+            assert_eq!(kind.build(2, &[]).name(), name);
         }
     }
 }

@@ -1,0 +1,285 @@
+//! Multi-tenant grouping of fleet request classes.
+//!
+//! MISO (Li et al., 2022) observes that multi-tenant MIG systems need
+//! explicit per-tenant resource weighting, and Tan et al. (2021) frame
+//! MIG serving as reconfigurable machine scheduling where the *router*
+//! is the fairness lever. A [`Tenant`] groups one or more fleet request
+//! classes under a name and an SLO weight. The weight drives three
+//! things:
+//!
+//! * the [`WeightedFair`](super::router::WeightedFair) router's
+//!   deficit-round-robin ingress credit, so tenant throughput shares
+//!   track weights;
+//! * the tenant-weighted fleet demand split
+//!   ([`crate::scheduler::tenant_scaled_demand`]): capacity is
+//!   provisioned per tenant weight, not per offered load;
+//! * per-tenant accounting in
+//!   [`FleetOutcome`](super::engine::FleetOutcome), summarized by Jain's
+//!   fairness index over weight-normalized goodput ([`jain_index`]).
+//!
+//! Tenancy is plain config data (clone freely into sweep grids) and
+//! strictly additive: a config that declares no tenants behaves exactly
+//! as before — the engine synthesizes one tenant per class
+//! ([`Tenant::per_class`]) for accounting only, and both the demand
+//! split and the reactive policy's replanning stay capacity-based.
+
+/// One tenant: a named group of request classes with an SLO weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tenant {
+    /// Report name ("gold", "bronze", ...).
+    pub name: String,
+    /// SLO weight: the tenant's relative claim on fleet capacity.
+    /// Must be positive and finite.
+    pub weight: f64,
+    /// Indices of the request classes this tenant owns. Every class of
+    /// the fleet must belong to exactly one tenant.
+    pub classes: Vec<usize>,
+}
+
+impl Tenant {
+    /// Construct a tenant.
+    pub fn new(name: impl Into<String>, weight: f64, classes: Vec<usize>) -> Tenant {
+        Tenant { name: name.into(), weight, classes }
+    }
+
+    /// The implicit default tenancy: one tenant per class (`t0`, `t1`,
+    /// ...), each with weight 1. This is what the engine synthesizes for
+    /// accounting when the config declares no tenants.
+    pub fn per_class(n_classes: usize) -> Vec<Tenant> {
+        (0..n_classes).map(|c| Tenant::new(format!("t{c}"), 1.0, vec![c])).collect()
+    }
+}
+
+/// Reject tenant sets the engine cannot account for: empty sets, empty
+/// or duplicate names, non-positive/non-finite weights, tenants with no
+/// classes, out-of-range classes, and classes owned by zero or more
+/// than one tenant (the partition must be exact for per-tenant
+/// conservation to mean anything).
+pub fn validate_tenants(tenants: &[Tenant], n_classes: usize) -> Result<(), String> {
+    if tenants.is_empty() {
+        return Err("at least one tenant is required".into());
+    }
+    let mut owner: Vec<Option<usize>> = vec![None; n_classes];
+    for (ti, t) in tenants.iter().enumerate() {
+        if t.name.is_empty() {
+            return Err(format!("tenant {ti}: name must be non-empty"));
+        }
+        if tenants[..ti].iter().any(|o| o.name == t.name) {
+            return Err(format!("tenant name '{}' appears twice", t.name));
+        }
+        if !(t.weight.is_finite() && t.weight > 0.0) {
+            return Err(format!(
+                "tenant '{}': weight {} must be positive and finite",
+                t.name, t.weight
+            ));
+        }
+        if t.classes.is_empty() {
+            return Err(format!("tenant '{}': must own at least one class", t.name));
+        }
+        for &c in &t.classes {
+            if c >= n_classes {
+                return Err(format!(
+                    "tenant '{}': class {c} out of range ({n_classes} classes)",
+                    t.name
+                ));
+            }
+            if let Some(prev) = owner[c] {
+                return Err(format!(
+                    "class {c} assigned to both '{}' and '{}'",
+                    tenants[prev].name, t.name
+                ));
+            }
+            owner[c] = Some(ti);
+        }
+    }
+    for (c, o) in owner.iter().enumerate() {
+        if o.is_none() {
+            return Err(format!("class {c} belongs to no tenant (every class must be assigned)"));
+        }
+    }
+    Ok(())
+}
+
+/// Class → tenant index map (length `n_classes`; unmapped classes, which
+/// a validated set cannot produce, are `usize::MAX`).
+pub fn tenant_of_classes(tenants: &[Tenant], n_classes: usize) -> Vec<usize> {
+    let mut map = vec![usize::MAX; n_classes];
+    for (ti, t) in tenants.iter().enumerate() {
+        for &c in &t.classes {
+            if c < n_classes {
+                map[c] = ti;
+            }
+        }
+    }
+    map
+}
+
+/// Parse a `--tenants` spec: `NAME:WEIGHT:CLASS[,CLASS...]` entries
+/// joined by `;` (quote the whole value in a shell), e.g.
+/// `gold:3:0;bronze:1:1` or `batch:1:2,3`.
+pub fn parse_tenants(spec: &str) -> Result<Vec<Tenant>, String> {
+    let mut out = Vec::new();
+    for raw in spec.split(';').filter(|s| !s.trim().is_empty()) {
+        let item = raw.trim();
+        let err = || format!("tenant '{item}': expected NAME:WEIGHT:CLASS[,CLASS...]");
+        let mut parts = item.splitn(3, ':');
+        let name = parts.next().filter(|s| !s.is_empty()).ok_or_else(err)?;
+        let weight: f64 = parts.next().ok_or_else(err)?.parse().map_err(|_| err())?;
+        let classes_s = parts.next().ok_or_else(err)?;
+        let mut classes = Vec::new();
+        for c in classes_s.split(',').filter(|s| !s.is_empty()) {
+            classes.push(c.trim().parse::<usize>().map_err(|_| err())?);
+        }
+        if classes.is_empty() {
+            return Err(err());
+        }
+        out.push(Tenant::new(name, weight, classes));
+    }
+    if out.is_empty() {
+        return Err("--tenants needs at least one NAME:WEIGHT:CLASS entry".into());
+    }
+    Ok(out)
+}
+
+/// Jain's fairness index over an allocation vector:
+/// `(Σx)² / (n · Σx²)`, in `[1/n, 1]`; 1 means perfectly fair. Empty or
+/// all-zero allocations are vacuously fair (1.0). Fed with
+/// weight-normalized tenant goodputs (`goodput_t / weight_t`) it
+/// measures how well throughput shares track SLO weights.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    (s * s) / (xs.len() as f64 * s2)
+}
+
+/// Per-tenant slice of a fleet run's accounting, reported in
+/// [`FleetOutcome`](super::engine::FleetOutcome) (tenant order).
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    /// Tenant name.
+    pub name: String,
+    /// SLO weight the run used.
+    pub weight: f64,
+    /// Classes the tenant owned, in class order.
+    pub classes: Vec<usize>,
+    /// Requests of this tenant's classes that arrived within the horizon.
+    pub arrived: u64,
+    /// Requests completed (including backlog served after the horizon).
+    pub completed: u64,
+    /// Completions that blew their SLO.
+    pub slo_violations: u64,
+    /// Requests that terminally failed (storm shed or stranded at end).
+    pub failed: u64,
+    /// Requests dumped by a crash with their retry budget exhausted.
+    pub lost_in_crash: u64,
+    /// Crash-dumped requests re-admitted at the ingress.
+    pub retried: u64,
+    /// SLO-respecting completions per second over the run.
+    pub goodput_rps: f64,
+    /// Fraction of completions that blew their SLO.
+    pub slo_violation_frac: f64,
+    /// Weight-normalized goodput (`goodput_rps / weight`): the quantity
+    /// Jain's index is computed over.
+    pub norm_goodput_rps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gold_bronze() -> Vec<Tenant> {
+        vec![Tenant::new("gold", 3.0, vec![0]), Tenant::new("bronze", 1.0, vec![1])]
+    }
+
+    #[test]
+    fn per_class_default_covers_every_class_with_weight_one() {
+        let ts = Tenant::per_class(3);
+        assert_eq!(ts.len(), 3);
+        validate_tenants(&ts, 3).unwrap();
+        for (c, t) in ts.iter().enumerate() {
+            assert_eq!(t.classes, vec![c]);
+            assert_eq!(t.weight, 1.0);
+            assert_eq!(t.name, format!("t{c}"));
+        }
+        assert_eq!(tenant_of_classes(&ts, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn validate_accepts_an_exact_partition() {
+        validate_tenants(&gold_bronze(), 2).unwrap();
+        let multi = vec![
+            Tenant::new("gold", 2.5, vec![0, 2]),
+            Tenant::new("bronze", 0.5, vec![1]),
+        ];
+        validate_tenants(&multi, 3).unwrap();
+        assert_eq!(tenant_of_classes(&multi, 3), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_sets() {
+        assert!(validate_tenants(&[], 2).is_err(), "empty set");
+        let t = |w: f64, cs: Vec<usize>| vec![Tenant::new("a", w, cs)];
+        assert!(validate_tenants(&t(0.0, vec![0]), 1).is_err(), "zero weight");
+        assert!(validate_tenants(&t(-1.0, vec![0]), 1).is_err(), "negative weight");
+        assert!(validate_tenants(&t(f64::NAN, vec![0]), 1).is_err(), "NaN weight");
+        assert!(validate_tenants(&t(f64::INFINITY, vec![0]), 1).is_err(), "inf weight");
+        assert!(validate_tenants(&t(1.0, vec![]), 1).is_err(), "no classes");
+        assert!(validate_tenants(&t(1.0, vec![1]), 1).is_err(), "class out of range");
+        assert!(
+            validate_tenants(&[Tenant::new("", 1.0, vec![0])], 1).is_err(),
+            "empty name"
+        );
+        let dup_name = vec![Tenant::new("a", 1.0, vec![0]), Tenant::new("a", 1.0, vec![1])];
+        assert!(validate_tenants(&dup_name, 2).is_err(), "duplicate name");
+        let dup_class = vec![Tenant::new("a", 1.0, vec![0]), Tenant::new("b", 1.0, vec![0])];
+        assert!(validate_tenants(&dup_class, 2).is_err(), "class owned twice");
+        let uncovered = vec![Tenant::new("a", 1.0, vec![0])];
+        assert!(validate_tenants(&uncovered, 2).is_err(), "class 1 unowned");
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_format() {
+        let ts = parse_tenants("gold:3:0;bronze:1:1").unwrap();
+        assert_eq!(ts, gold_bronze());
+        let ts = parse_tenants("a:2.5:0,2; b:0.5:1").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].classes, vec![0, 2]);
+        assert_eq!(ts[0].weight, 2.5);
+        assert_eq!(ts[1].name, "b");
+        validate_tenants(&ts, 3).unwrap();
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(parse_tenants("").is_err());
+        assert!(parse_tenants(";;").is_err());
+        assert!(parse_tenants("gold").is_err(), "missing weight and classes");
+        assert!(parse_tenants("gold:3").is_err(), "missing classes");
+        assert!(parse_tenants("gold:3:").is_err(), "empty class list");
+        assert!(parse_tenants(":3:0").is_err(), "empty name");
+        assert!(parse_tenants("gold:x:0").is_err(), "bad weight");
+        assert!(parse_tenants("gold:3:x").is_err(), "bad class");
+    }
+
+    #[test]
+    fn jain_index_behaves() {
+        assert_eq!(jain_index(&[]), 1.0, "empty allocation is vacuously fair");
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0, "all-zero allocation is vacuously fair");
+        assert_eq!(jain_index(&[5.0, 5.0, 5.0]), 1.0, "equal shares are perfectly fair");
+        let one_hot = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((one_hot - 0.25).abs() < 1e-12, "one-hot over n is 1/n, got {one_hot}");
+        let skewed = jain_index(&[3.0, 1.0]);
+        assert!((skewed - 0.8).abs() < 1e-12, "3:1 over two is 0.8, got {skewed}");
+        // Scale invariance.
+        assert_eq!(
+            jain_index(&[3.0, 1.0]).to_bits(),
+            jain_index(&[30.0, 10.0]).to_bits()
+        );
+    }
+}

@@ -846,10 +846,11 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     OptSpec { name: "fleet", value: "N1,N2", help: "fleet sizes to sweep (homogeneous)", default: Some("4") },
                     OptSpec { name: "gpus", value: "M1,M2", help: "explicit heterogeneous fleet (overrides --gpu/--fleet)", default: None },
                     OptSpec { name: "policy", value: "P1,P2", help: "static | reactive | all", default: Some("all") },
-                    OptSpec { name: "router", value: "R1,R2", help: "rr | least | affinity | all", default: Some("least") },
+                    OptSpec { name: "router", value: "R1,R2", help: "rr | least | affinity | wf | all", default: Some("least") },
                     OptSpec { name: "mode", value: "M1,M2", help: "rolling | inplace | both", default: Some("rolling") },
                     OptSpec { name: "train", value: "MODEL:BATCH", help: "training job replicated per GPU (none to disable)", default: Some("bert-base:32") },
                     OptSpec { name: "classes", value: "MODEL:BATCH:SLO_MS,...", help: "fleet-wide request classes", default: Some("bert-base:8:40,bert-base:8:40") },
+                    OptSpec { name: "tenants", value: "N:W:C[;...]", help: "weighted tenants over class indices, NAME:WEIGHT:CLASS[,CLASS...] joined by ';' (quote it); enables the tenant-weighted demand split and per-tenant reporting (in --csv mode the per-tenant document is emitted under --decisions)", default: None },
                     OptSpec { name: "base-rate", value: "R", help: "diurnal trough rate per GPU per class, req/s (fleet stream = rate × fleet size)", default: Some("6") },
                     OptSpec { name: "peak-rate", value: "R", help: "diurnal peak rate per GPU per class (== base for flat Poisson)", default: Some("60") },
                     OptSpec { name: "period", value: "S", help: "diurnal period, seconds", default: Some("600") },
@@ -928,6 +929,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             RouterKind::parse("rr").unwrap(),
             RouterKind::parse("least").unwrap(),
             RouterKind::parse("affinity").unwrap(),
+            RouterKind::parse("wf").unwrap(),
         ]
     } else {
         router_arg
@@ -935,7 +937,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             .filter(|s| !s.is_empty())
             .map(|name| {
                 RouterKind::parse(name)
-                    .ok_or_else(|| format!("unknown router '{name}' (rr|least|affinity)"))
+                    .ok_or_else(|| format!("unknown router '{name}' (rr|least|affinity|wf)"))
             })
             .collect::<Result<_, _>>()?
     };
@@ -988,6 +990,15 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         let slo_ms: f64 = parts[2].parse().map_err(|_| "bad SLO")?;
         class_specs.push((WorkloadSpec::inference(parse_model(parts[0])?, batch, seq), slo_ms));
     }
+    let tenants = match args.get("tenants") {
+        Some(spec) => {
+            let ts = migperf::cluster::parse_tenants(spec)?;
+            migperf::cluster::validate_tenants(&ts, class_specs.len())
+                .map_err(|e| format!("--tenants: {e}"))?;
+            ts
+        }
+        None => Vec::new(),
+    };
     let cost = ReconfigCost {
         instance_churn_s: args.parse_or("churn", 0.5f64).map_err(|e| e.to_string())?,
         train_restore_s: args.parse_or("restore", 5.0f64).map_err(|e| e.to_string())?,
@@ -1098,6 +1109,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                                 gpus: fleet.clone(),
                                 train: train.clone(),
                                 classes: classes.clone(),
+                                tenants: tenants.clone(),
                                 router: router.clone(),
                                 policy: policy.clone(),
                                 mode: *mode,
@@ -1122,6 +1134,18 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
     let started = std::time::Instant::now();
     let outs = migperf::sweep::run_fleet(&engine, &runs).map_err(|e| e.to_string())?;
     let wall_s = started.elapsed().as_secs_f64();
+
+    let run_label = |out: &migperf::cluster::FleetOutcome, flabel: &str, seed: u64| {
+        format!(
+            "{}/{}/{}/n{}/{}/seed{}",
+            out.mode.name(),
+            out.policy,
+            out.router,
+            out.fleet_size,
+            flabel,
+            seed
+        )
+    };
 
     if args.flag("json") {
         let rows: Vec<Json> = runs
@@ -1152,6 +1176,8 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     ("gpu_crashes", Json::Num(out.gpu_crashes as f64)),
                     ("instance_crashes", Json::Num(out.instance_crashes as f64)),
                     ("availability", Json::Num(out.availability)),
+                    ("fairness_jain", Json::Num(out.fairness_jain)),
+                    ("tenants", export::tenant_outcomes_to_json(&out.tenants)),
                     ("fault_log", export::fault_records_to_json(&out.fault_log)),
                     ("decisions", export::fleet_decisions_to_json(&out.decisions)),
                 ])
@@ -1173,19 +1199,27 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             .zip(&fault_labels)
             .map(|((cfg, out), flabel)| {
                 let mut s = out.pooled.clone();
-                s.label = format!(
-                    "{}/{}/{}/n{}/{}/seed{}",
-                    out.mode.name(),
-                    out.policy,
-                    out.router,
-                    out.fleet_size,
-                    flabel,
-                    cfg.seed
-                );
+                s.label = run_label(out, flabel, cfg.seed);
                 s
             })
             .collect();
         print!("{}", export::summaries_to_csv(&rows));
+        // Keep plain `--csv` a single parseable document; the per-tenant
+        // accounting follows as a second CSV document (own header) only
+        // when --decisions asks for the auxiliary logs.
+        if !tenants.is_empty() && args.flag("decisions") {
+            let trows: Vec<(String, migperf::cluster::TenantOutcome)> = runs
+                .iter()
+                .zip(&outs)
+                .zip(&fault_labels)
+                .flat_map(|((cfg, out), flabel)| {
+                    let label = run_label(out, flabel, cfg.seed);
+                    out.tenants.iter().map(move |t| (label.clone(), t.clone()))
+                })
+                .collect();
+            println!();
+            print!("{}", export::tenant_outcomes_to_csv(&trows));
+        }
     } else {
         let mut t = Table::new(&[
             "mode",
@@ -1198,6 +1232,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             "goodput_rps",
             "viol_%",
             "p99_ms",
+            "jain",
             "reconf",
             "migrated",
             "failed",
@@ -1217,6 +1252,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                 format!("{:.1}", out.goodput_rps),
                 format!("{:.2}", out.slo_violation_frac * 100.0),
                 format!("{:.1}", out.pooled.p99_latency_ms),
+                format!("{:.3}", out.fairness_jain),
                 out.reconfigurations.to_string(),
                 out.migrated_requests.to_string(),
                 out.failed_requests.to_string(),
@@ -1227,6 +1263,38 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         }
         println!("{}", t.render());
         println!("{} runs on {} workers in {:.2}s", runs.len(), engine.workers(), wall_s);
+        if !tenants.is_empty() {
+            let mut tt = Table::new(&[
+                "run",
+                "tenant",
+                "weight",
+                "arrived",
+                "completed",
+                "viol",
+                "failed",
+                "lost",
+                "goodput_rps",
+                "norm_rps",
+            ]);
+            for ((cfg, out), flabel) in runs.iter().zip(&outs).zip(&fault_labels) {
+                let run = run_label(out, flabel, cfg.seed);
+                for row in &out.tenants {
+                    tt.row(&[
+                        run.clone(),
+                        row.name.clone(),
+                        format!("{}", row.weight),
+                        row.arrived.to_string(),
+                        row.completed.to_string(),
+                        row.slo_violations.to_string(),
+                        row.failed.to_string(),
+                        row.lost_in_crash.to_string(),
+                        format!("{:.1}", row.goodput_rps),
+                        format!("{:.2}", row.norm_goodput_rps),
+                    ]);
+                }
+            }
+            println!("\nper-tenant accounting (jain = fairness over norm_rps):\n{}", tt.render());
+        }
         if args.flag("decisions") {
             for ((cfg, out), flabel) in runs.iter().zip(&outs).zip(&fault_labels) {
                 let tag = format!(

@@ -8,7 +8,7 @@
 
 use std::fmt::Write as _;
 
-use crate::cluster::{FaultRecord, FleetDecision};
+use crate::cluster::{FaultRecord, FleetDecision, TenantOutcome};
 use crate::orchestrator::Decision;
 use crate::scheduler::{Assignment, Plan};
 use crate::util::json::Json;
@@ -251,6 +251,62 @@ pub fn fault_record_to_json(r: &FaultRecord) -> Json {
 /// A whole fault timeline as a JSON array.
 pub fn fault_records_to_json(rows: &[FaultRecord]) -> Json {
     Json::Arr(rows.iter().map(fault_record_to_json).collect())
+}
+
+/// CSV header used by [`tenant_outcomes_to_csv`].
+pub const TENANT_CSV_HEADER: &str = "run,tenant,weight,arrived,completed,slo_violations,\
+failed,lost_in_crash,retried,goodput_rps,norm_goodput_rps";
+
+/// Serialize per-tenant fleet accounting as CSV (with header). Each row
+/// carries its run label so a whole sweep's tenant tables can share one
+/// document.
+pub fn tenant_outcomes_to_csv(rows: &[(String, TenantOutcome)]) -> String {
+    let mut out = String::from(TENANT_CSV_HEADER);
+    out.push('\n');
+    for (run, t) in rows {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{:.6},{:.6}",
+            csv_escape(run),
+            csv_escape(&t.name),
+            t.weight,
+            t.arrived,
+            t.completed,
+            t.slo_violations,
+            t.failed,
+            t.lost_in_crash,
+            t.retried,
+            t.goodput_rps,
+            t.norm_goodput_rps,
+        );
+    }
+    out
+}
+
+/// One tenant's accounting as a JSON object.
+pub fn tenant_outcome_to_json(t: &TenantOutcome) -> Json {
+    Json::obj(vec![
+        ("name", t.name.as_str().into()),
+        ("weight", t.weight.into()),
+        (
+            "classes",
+            Json::Arr(t.classes.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        ("arrived", (t.arrived as i64).into()),
+        ("completed", (t.completed as i64).into()),
+        ("slo_violations", (t.slo_violations as i64).into()),
+        ("failed", (t.failed as i64).into()),
+        ("lost_in_crash", (t.lost_in_crash as i64).into()),
+        ("retried", (t.retried as i64).into()),
+        ("goodput_rps", t.goodput_rps.into()),
+        ("slo_violation_frac", t.slo_violation_frac.into()),
+        ("norm_goodput_rps", t.norm_goodput_rps.into()),
+    ])
+}
+
+/// A run's per-tenant accounting as a JSON array (tenant order).
+pub fn tenant_outcomes_to_json(rows: &[TenantOutcome]) -> Json {
+    Json::Arr(rows.iter().map(tenant_outcome_to_json).collect())
 }
 
 /// Serialize a time-series set in Prometheus exposition format, using the
@@ -496,6 +552,43 @@ mod tests {
             "permanent outage is null in JSON"
         );
         assert_eq!(fault_records_to_csv(&[]).lines().count(), 1, "empty log is just the header");
+    }
+
+    #[test]
+    fn tenant_accounting_export_csv_and_json() {
+        use crate::cluster::TenantOutcome;
+        let t = TenantOutcome {
+            name: "gold".into(),
+            weight: 3.0,
+            classes: vec![0, 2],
+            arrived: 1000,
+            completed: 990,
+            slo_violations: 40,
+            failed: 6,
+            lost_in_crash: 4,
+            retried: 12,
+            goodput_rps: 9.5,
+            slo_violation_frac: 40.0 / 990.0,
+            norm_goodput_rps: 9.5 / 3.0,
+        };
+        let csv = tenant_outcomes_to_csv(&[("rolling/seed2024".to_string(), t.clone())]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], TENANT_CSV_HEADER);
+        assert!(lines[1].starts_with("rolling/seed2024,gold,3,1000,990,40,6,4,12,"), "{csv}");
+        let doc = tenant_outcomes_to_json(std::slice::from_ref(&t));
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("name").unwrap().as_str(), Some("gold"));
+        assert_eq!(row.get("weight").unwrap().as_f64(), Some(3.0));
+        assert_eq!(row.get("classes").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(row.get("arrived").unwrap().as_i64(), Some(1000));
+        assert_eq!(row.get("lost_in_crash").unwrap().as_i64(), Some(4));
+        assert_eq!(row.get("goodput_rps").unwrap().as_f64(), Some(9.5));
+        assert_eq!(
+            tenant_outcomes_to_csv(&[]).lines().count(),
+            1,
+            "empty accounting is just the header"
+        );
     }
 
     #[test]

@@ -15,8 +15,16 @@
 //!   SLO service's rate scaled to one GPU's share (best-effort training
 //!   jobs replicate whole: every GPU runs its own copy);
 //! * [`plan_fleet_for_demand`] — one [`RatePlan`] per GPU, each produced
-//!   by the exhaustive per-GPU planner at that GPU's demand share.
+//!   by the exhaustive per-GPU planner at that GPU's demand share;
+//! * [`tenant_scaled_demand`] / [`plan_fleet_for_demand_weighted`] — the
+//!   multi-tenant variant: before the per-GPU capacity split, each SLO
+//!   class's fleet-wide demand is reweighted so *tenant* capacity shares
+//!   track tenant SLO weights instead of offered load (a weight-3 tenant
+//!   is provisioned three times the capacity of a weight-1 tenant at
+//!   equal offered demand), so the per-GPU share becomes
+//!   tenant weight × capacity weight rather than capacity alone.
 
+use crate::cluster::tenancy::Tenant;
 use crate::mig::gpu::GpuModel;
 use crate::scheduler::{DemandWorkload, RatePlan, Scheduler};
 
@@ -32,11 +40,25 @@ pub struct FleetPlan {
     pub score: f64,
 }
 
+/// Normalized weights from raw compute-slice counts. Returns an empty
+/// vector when the total is zero: dividing by a zero fleet capacity
+/// would yield NaN weights that flow silently through [`scale_demand`]
+/// into the planner, so the degenerate case is reported as "no weights"
+/// and [`plan_fleet_for_demand`] rejects it.
+pub fn weights_from_slices(slices: &[u32]) -> Vec<f64> {
+    let total: u32 = slices.iter().sum();
+    if total == 0 {
+        return Vec::new();
+    }
+    slices.iter().map(|&s| s as f64 / total as f64).collect()
+}
+
 /// Relative capacity weight of each GPU in the fleet: its compute slices
-/// over the fleet total. Returns an empty vector for an empty fleet.
+/// over the fleet total. Returns an empty vector for an empty fleet or
+/// a fleet whose GPUs report zero total compute slices (never NaN).
 pub fn capacity_weights(gpus: &[GpuModel]) -> Vec<f64> {
-    let total: u32 = gpus.iter().map(|g| g.spec().compute_slices).sum();
-    gpus.iter().map(|g| g.spec().compute_slices as f64 / total as f64).collect()
+    let slices: Vec<u32> = gpus.iter().map(|g| g.spec().compute_slices).collect();
+    weights_from_slices(&slices)
 }
 
 /// Clone the fleet-wide demand vector with every SLO service's demand
@@ -71,6 +93,11 @@ pub fn plan_fleet_for_demand(
     }
     let gpus: Vec<GpuModel> = schedulers.iter().map(|s| s.gpu).collect();
     let weights = capacity_weights(&gpus);
+    if weights.len() != schedulers.len() {
+        // Zero total fleet capacity: no weight vector exists, so no
+        // demand split does either — reject instead of planning on NaN.
+        return None;
+    }
     let mut plans = Vec::with_capacity(schedulers.len());
     let mut score = 0.0;
     for (sched, &w) in schedulers.iter().zip(&weights) {
@@ -80,6 +107,74 @@ pub fn plan_fleet_for_demand(
         plans.push(plan);
     }
     Some(FleetPlan { plans, weights, score })
+}
+
+/// Reweight each SLO class's fleet-wide demand so *tenant* capacity
+/// shares track tenant weights instead of offered load.
+///
+/// `class_workloads[c]` is the workload index of request class `c`
+/// (training entries are untouched, exactly like [`scale_demand`]).
+/// The total planned rate is conserved: tenant `t` is provisioned
+/// `Σ rates × weight_t / Σ weights`, split across its classes in
+/// proportion to their offered rates (equally when the tenant offers
+/// nothing, so idle tenants still get their reserved share). With no
+/// tenants — or a degenerate weight sum or zero offered demand — the
+/// demand vector passes through unchanged.
+pub fn tenant_scaled_demand(
+    workloads: &[DemandWorkload],
+    class_workloads: &[usize],
+    tenants: &[Tenant],
+) -> Vec<DemandWorkload> {
+    let mut ws = workloads.to_vec();
+    if tenants.is_empty() {
+        return ws;
+    }
+    let weight_sum: f64 = tenants.iter().map(|t| t.weight).sum();
+    if !(weight_sum.is_finite() && weight_sum > 0.0) {
+        return ws;
+    }
+    let mut tenant_rate = vec![0.0f64; tenants.len()];
+    for (ti, t) in tenants.iter().enumerate() {
+        for &c in &t.classes {
+            if let Some(&wi) = class_workloads.get(c) {
+                tenant_rate[ti] += ws[wi].demand_rps.unwrap_or(0.0).max(0.0);
+            }
+        }
+    }
+    let total: f64 = tenant_rate.iter().sum();
+    if total <= 0.0 {
+        return ws;
+    }
+    for (ti, t) in tenants.iter().enumerate() {
+        let target = total * (t.weight / weight_sum);
+        for &c in &t.classes {
+            let Some(&wi) = class_workloads.get(c) else { continue };
+            let offered = ws[wi].demand_rps.unwrap_or(0.0).max(0.0);
+            let planned = if tenant_rate[ti] > 0.0 {
+                target * (offered / tenant_rate[ti])
+            } else {
+                target / t.classes.len() as f64
+            };
+            if let Some(d) = ws[wi].demand_rps.as_mut() {
+                *d = planned;
+            }
+        }
+    }
+    ws
+}
+
+/// [`plan_fleet_for_demand`] with the tenant-weighted demand split
+/// applied first: the per-GPU share of each class becomes
+/// tenant weight × capacity weight instead of capacity weight alone.
+pub fn plan_fleet_for_demand_weighted(
+    schedulers: &[Scheduler],
+    workloads: &[DemandWorkload],
+    class_workloads: &[usize],
+    tenants: &[Tenant],
+    rho_max: f64,
+) -> Option<FleetPlan> {
+    let ws = tenant_scaled_demand(workloads, class_workloads, tenants);
+    plan_fleet_for_demand(schedulers, &ws, rho_max)
 }
 
 #[cfg(test)]
@@ -118,6 +213,23 @@ mod tests {
         let w = capacity_weights(&[GpuModel::A100_80GB, GpuModel::A30_24GB]);
         assert!((w[0] - 7.0 / 11.0).abs() < 1e-12, "{w:?}");
         assert!((w[1] - 4.0 / 11.0).abs() < 1e-12, "{w:?}");
+    }
+
+    #[test]
+    fn zero_total_capacity_yields_no_weights_not_nan() {
+        // A fleet reporting zero total compute slices used to divide by
+        // zero: every weight came out NaN and flowed through
+        // scale_demand into the planner. The degenerate case now reports
+        // "no weights" (and plan_fleet_for_demand rejects the mismatch).
+        assert!(weights_from_slices(&[0, 0, 0]).is_empty());
+        assert!(weights_from_slices(&[]).is_empty());
+        let w = weights_from_slices(&[7, 4]);
+        assert!(w.iter().all(|x| x.is_finite()), "{w:?}");
+        assert!((w[0] - 7.0 / 11.0).abs() < 1e-12, "{w:?}");
+        // scale_demand with a NaN weight is what the old code produced;
+        // the guard keeps NaN out of the pipeline entirely.
+        let scaled = scale_demand(&demand_set(60.0), f64::NAN);
+        assert!(scaled[1].demand_rps.unwrap().is_nan(), "NaN would have propagated silently");
     }
 
     #[test]
@@ -163,5 +275,55 @@ mod tests {
         assert!(plan_fleet_for_demand(&[], &demand_set(10.0), 0.75).is_none());
         assert!(plan_fleet_for_demand(&scheds, &[], 0.75).is_none());
         assert!(plan_fleet_for_demand(&scheds, &demand_set(1e9), 0.75).is_none());
+    }
+
+    fn gold_bronze() -> Vec<Tenant> {
+        vec![Tenant::new("gold", 3.0, vec![0]), Tenant::new("bronze", 1.0, vec![1])]
+    }
+
+    #[test]
+    fn tenant_split_provisions_by_weight_and_conserves_total() {
+        // Two classes at 60 req/s each under 3:1 tenants: the planned
+        // rates become 90/30 — same 120 total, tenant shares now track
+        // weights instead of offered load. Training is untouched.
+        let ws = tenant_scaled_demand(&demand_set(60.0), &[1, 2], &gold_bronze());
+        assert!(ws[0].demand_rps.is_none(), "training keeps no demand rate");
+        assert_eq!(ws[1].demand_rps, Some(90.0));
+        assert_eq!(ws[2].demand_rps, Some(30.0));
+    }
+
+    #[test]
+    fn tenant_split_reserves_share_for_idle_tenants() {
+        // Bronze offers nothing; its weight share is still reserved
+        // (split equally over its classes), and the total is conserved.
+        let mut set = demand_set(60.0);
+        set[2].demand_rps = Some(0.0);
+        let ws = tenant_scaled_demand(&set, &[1, 2], &gold_bronze());
+        assert_eq!(ws[1].demand_rps, Some(45.0), "gold: 60 × 3/4");
+        assert_eq!(ws[2].demand_rps, Some(15.0), "bronze: reserved 60 × 1/4");
+    }
+
+    #[test]
+    fn tenant_split_passes_through_without_tenants() {
+        let set = demand_set(60.0);
+        let ws = tenant_scaled_demand(&set, &[1, 2], &[]);
+        assert_eq!(ws[1].demand_rps, set[1].demand_rps);
+        assert_eq!(ws[2].demand_rps, set[2].demand_rps);
+    }
+
+    #[test]
+    fn weighted_fleet_plan_equals_plain_plan_on_rescaled_demand() {
+        let pair = schedulers(&[GpuModel::A100_80GB, GpuModel::A100_80GB]);
+        let ws = demand_set(60.0);
+        let tenants = gold_bronze();
+        let weighted = plan_fleet_for_demand_weighted(&pair, &ws, &[1, 2], &tenants, 0.75)
+            .expect("3:1 split of 120 req/s fits two A100s");
+        let rescaled = tenant_scaled_demand(&ws, &[1, 2], &tenants);
+        let plain = plan_fleet_for_demand(&pair, &rescaled, 0.75).unwrap();
+        assert_eq!(weighted.plans.len(), plain.plans.len());
+        assert_eq!(weighted.score.to_bits(), plain.score.to_bits());
+        for (a, b) in weighted.plans.iter().zip(&plain.plans) {
+            assert_eq!(a.layout, b.layout);
+        }
     }
 }

@@ -17,7 +17,10 @@
 pub mod fleet;
 pub mod optimizer;
 
-pub use fleet::{capacity_weights, plan_fleet_for_demand, scale_demand, FleetPlan};
+pub use fleet::{
+    capacity_weights, plan_fleet_for_demand, plan_fleet_for_demand_weighted, scale_demand,
+    tenant_scaled_demand, weights_from_slices, FleetPlan,
+};
 pub use optimizer::{
     Assignment, DemandWorkload, Objective, Plan, RateAssignment, RatePlan, Scheduler, SloWorkload,
 };

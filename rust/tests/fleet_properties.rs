@@ -11,11 +11,14 @@
 //! (completed + failed + lost_in_crash = arrived) across the crash grid,
 //! faulted sweeps stay bitwise-deterministic, and stranded/crashed
 //! requests keep their original arrival timestamps so queueing latency
-//! spans the outage.
+//! spans the outage; (g) multi-tenant accounting conserves per tenant
+//! (`Σ_tenant completed + failed + lost = arrived`, per tenant and in
+//! total) across the router × mode × fault grid, and `--tenants` sweeps
+//! are bitwise-deterministic at 1/2/4/16 workers.
 
 use migperf::cluster::{
     FaultInjection, FaultPlan, FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass,
-    RouterKind,
+    RouterKind, Tenant,
 };
 use migperf::mig::gpu::GpuModel;
 use migperf::mig::placement::PlacementEngine;
@@ -47,6 +50,7 @@ fn diurnal_fleet(
         gpus: vec![GpuModel::A100_80GB; n],
         train: Some(WorkloadSpec::training(bert, 32, 128)),
         classes: vec![class.clone(), class],
+        tenants: Vec::new(),
         router,
         policy,
         mode,
@@ -72,6 +76,7 @@ fn poisson_fleet(n: usize, rate_per_class: f64, seed: u64) -> FleetConfig {
         gpus: vec![GpuModel::A100_80GB; n],
         train: Some(WorkloadSpec::training(bert, 32, 128)),
         classes: vec![class.clone(), class],
+        tenants: Vec::new(),
         router: RouterKind::LeastLoaded,
         policy: FleetPolicyKind::Static,
         mode: RepartitionMode::Rolling,
@@ -93,7 +98,12 @@ fn all_routers() -> Vec<RouterKind> {
         RouterKind::parse("rr").unwrap(),
         RouterKind::parse("least").unwrap(),
         RouterKind::parse("affinity").unwrap(),
+        RouterKind::parse("wf").unwrap(),
     ]
+}
+
+fn gold_bronze() -> Vec<Tenant> {
+    vec![Tenant::new("gold", 3.0, vec![0]), Tenant::new("bronze", 1.0, vec![1])]
 }
 
 /// (a) Conservation: across routers and modes, every admitted request is
@@ -444,6 +454,125 @@ fn storm_guard_zero_sheds_every_dumped_request() {
     assert_eq!(out.completed + out.failed_requests + out.lost_in_crash, out.arrived);
     let shed: u64 = out.fault_log.iter().map(|f| f.shed).sum();
     assert_eq!(shed, out.failed_requests, "every failure here is a storm shed");
+}
+
+/// (g1) Per-tenant conservation across the router × mode × fault grid:
+/// every tenant's admitted requests end in exactly one of
+/// {completed, failed, lost_in_crash}, the tenants partition the fleet
+/// totals exactly, and Jain's index stays in range.
+#[test]
+fn per_tenant_conservation_holds_across_the_router_mode_fault_grid() {
+    let plans: Vec<(&str, FaultPlan)> = vec![
+        ("none", FaultPlan::none()),
+        ("mtbf", FaultPlan::from_mtbf(2, 240.0, 60.0, 15.0, 3)),
+        (
+            "explicit",
+            FaultPlan {
+                injections: vec![
+                    FaultInjection { t: 50.0, gpu: 0, class: None, down_s: 25.0 },
+                    FaultInjection { t: 120.0, gpu: 1, class: Some(0), down_s: 30.0 },
+                    FaultInjection { t: 200.0, gpu: 0, class: None, down_s: f64::INFINITY },
+                ],
+                retry_budget: 1,
+                storm_guard: u64::MAX,
+            },
+        ),
+    ];
+    for router in all_routers() {
+        for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+            for (name, plan) in &plans {
+                let mut cfg = diurnal_fleet(2, reactive(), router.clone(), mode, 11);
+                cfg.tenants = gold_bronze();
+                cfg.faults = plan.clone();
+                let out = cfg.run().unwrap();
+                let tag = format!("{}/{}/{name}", router.name(), mode.name());
+                assert!(out.arrived > 500, "{tag}: arrived {}", out.arrived);
+                assert_eq!(out.tenants.len(), 2, "{tag}");
+                let (mut arr, mut comp, mut fail, mut lost, mut retr) = (0, 0, 0, 0, 0);
+                for t in &out.tenants {
+                    assert_eq!(
+                        t.completed + t.failed + t.lost_in_crash,
+                        t.arrived,
+                        "{tag}/{}: per-tenant conservation must hold",
+                        t.name
+                    );
+                    arr += t.arrived;
+                    comp += t.completed;
+                    fail += t.failed;
+                    lost += t.lost_in_crash;
+                    retr += t.retried;
+                }
+                assert_eq!(arr, out.arrived, "{tag}: tenant arrivals partition the total");
+                assert_eq!(comp, out.completed, "{tag}: tenant completions partition the total");
+                assert_eq!(fail, out.failed_requests, "{tag}");
+                assert_eq!(lost, out.lost_in_crash, "{tag}");
+                assert_eq!(retr, out.retried_requests, "{tag}");
+                assert_eq!(
+                    out.completed + out.failed_requests + out.lost_in_crash,
+                    out.arrived,
+                    "{tag}: fleet-level conservation must hold"
+                );
+                assert!(
+                    out.fairness_jain > 0.0 && out.fairness_jain <= 1.0,
+                    "{tag}: jain {} out of range",
+                    out.fairness_jain
+                );
+            }
+        }
+    }
+}
+
+/// (g2) `--tenants` sweeps are bitwise-deterministic at 1/2/4/16
+/// workers: a tenant set is config data exactly like a crash schedule,
+/// so the weighted-fair credit arithmetic and all per-tenant counters
+/// reduce identically at any worker count.
+#[test]
+fn tenant_sweep_bitwise_deterministic_across_worker_counts() {
+    let mut grid: Vec<FleetConfig> = Vec::new();
+    for router in [RouterKind::RoundRobin, RouterKind::WeightedFair] {
+        for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+            for seed in [2024u64, 2025u64] {
+                let mut cfg = diurnal_fleet(2, reactive(), router.clone(), mode, seed);
+                cfg.tenants = gold_bronze();
+                grid.push(cfg);
+            }
+        }
+    }
+    let baseline = sweep::run_fleet(&SweepEngine::new(1), &grid).unwrap();
+    for workers in [2usize, 4, 16] {
+        let outs = sweep::run_fleet(&SweepEngine::new(workers), &grid).unwrap();
+        assert_eq!(outs.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&outs) {
+            assert_eq!(a.arrived, b.arrived, "workers={workers}");
+            assert_eq!(a.completed, b.completed, "workers={workers}");
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "workers={workers}");
+            assert_eq!(
+                a.fairness_jain.to_bits(),
+                b.fairness_jain.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(a.tenants.len(), b.tenants.len(), "workers={workers}");
+            for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+                assert_eq!(ta.name, tb.name, "workers={workers}");
+                assert_eq!(ta.arrived, tb.arrived, "workers={workers}");
+                assert_eq!(ta.completed, tb.completed, "workers={workers}");
+                assert_eq!(ta.slo_violations, tb.slo_violations, "workers={workers}");
+                assert_eq!(ta.failed, tb.failed, "workers={workers}");
+                assert_eq!(ta.lost_in_crash, tb.lost_in_crash, "workers={workers}");
+                assert_eq!(ta.retried, tb.retried, "workers={workers}");
+                assert_eq!(
+                    ta.goodput_rps.to_bits(),
+                    tb.goodput_rps.to_bits(),
+                    "workers={workers}"
+                );
+                assert_eq!(
+                    ta.norm_goodput_rps.to_bits(),
+                    tb.norm_goodput_rps.to_bits(),
+                    "workers={workers}"
+                );
+            }
+        }
+    }
 }
 
 /// (e) The fleet demand packer splits by capacity weight and every
