@@ -18,9 +18,16 @@
 //!    identical offered load: the weighted-fair (DRR) router's Jain's
 //!    index over weight-normalized goodput must exceed round-robin's at
 //!    the diurnal peak, with per-tenant conservation at every point.
+//! 5. **overload protection** — half the fleet permanently crashed just
+//!    after start, so the survivor carries ~2× the diurnal peak:
+//!    deadline shedding must strictly beat the unbounded-queue baseline
+//!    on SLO-attaining goodput while strictly lowering the p99 tail,
+//!    with the extended conservation invariant
+//!    (completed + failed + lost + shed = arrived) at every level.
 //!
 //! The whole grid runs serial and parallel through the sweep engine and
-//! asserts bit-identical checksums (the determinism contract).
+//! asserts bit-identical checksums (the determinism contract; the
+//! checksum includes the overload shed counters).
 //!
 //! Machine-readable output: writes `BENCH_fleet.json` (into
 //! `MIGPERF_BENCH_OUT` when set, else the working directory). Set
@@ -29,8 +36,8 @@
 use std::time::Instant;
 
 use migperf::cluster::{
-    FaultPlan, FleetConfig, FleetOutcome, FleetPolicyKind, RepartitionMode, RequestClass,
-    RouterKind, Tenant,
+    FaultInjection, FaultPlan, FleetConfig, FleetOutcome, FleetPolicyKind, OverloadPolicy,
+    RepartitionMode, RequestClass, RouterKind, ShedDiscipline, Tenant,
 };
 use migperf::mig::gpu::GpuModel;
 use migperf::models::zoo;
@@ -78,11 +85,14 @@ fn scenario(
         window_s,
         rho_max: 0.75,
         faults: FaultPlan::none(),
+        overload: OverloadPolicy::none(),
         seed,
     }
 }
 
-/// Checksum that any cross-worker nondeterminism would perturb.
+/// Checksum that any cross-worker nondeterminism would perturb. The shed
+/// counters contribute exactly 0.0 on runs with overload protection
+/// disabled, so pre-overload checksums are unchanged.
 fn checksum(outs: &[FleetOutcome]) -> f64 {
     outs.iter()
         .map(|o| {
@@ -91,6 +101,8 @@ fn checksum(outs: &[FleetOutcome]) -> f64 {
                 + o.reconfig_downtime_s
                 + o.migrated_requests as f64
                 + o.fairness_jain
+                + o.shed_overload as f64
+                + o.breaker_trips as f64
         })
         .sum()
 }
@@ -423,6 +435,105 @@ fn main() {
          (weighted-fair {wf_jain:.4} vs round-robin {rr_jain:.4})"
     );
 
+    // Overload protection: permanently crash GPU 1 of a 2-GPU fleet just
+    // after start, so the survivor carries ~2× the diurnal peak for the
+    // rest of the horizon. The static policy keeps the planner out of
+    // the picture (no repartition resurrects a dead GPU), isolating the
+    // shed discipline as the only variable. Baseline = no protection:
+    // the unbounded queue eventually serves every request far past its
+    // SLO, so SLO-attaining goodput collapses and the tail explodes.
+    // Deadline shedding (deadline = arrival + 1×SLO) refuses to spend
+    // service time on requests that already missed their deadline, so
+    // goodput must be strictly higher and p99 strictly lower; a bounded
+    // drop-oldest queue composes with it.
+    let half_down = FaultPlan {
+        injections: vec![FaultInjection {
+            t: 30.0,
+            gpu: 1,
+            class: None,
+            down_s: f64::INFINITY,
+        }],
+        ..FaultPlan::none()
+    };
+    let overload_policies: Vec<(&str, OverloadPolicy)> = vec![
+        ("baseline", OverloadPolicy::none()),
+        ("deadline", OverloadPolicy { deadline_mult: 1.0, ..OverloadPolicy::none() }),
+        (
+            "deadline+drop",
+            OverloadPolicy {
+                queue_cap: 8,
+                shed: ShedDiscipline::DropOldest,
+                deadline_mult: 1.0,
+                ..OverloadPolicy::none()
+            },
+        ),
+    ];
+    let mut ov_grid: Vec<FleetConfig> = Vec::new();
+    for (_, policy) in &overload_policies {
+        for &seed in &seeds {
+            let mut cfg = scenario(
+                2,
+                FleetPolicyKind::Static,
+                RouterKind::LeastLoaded,
+                RepartitionMode::Rolling,
+                seed,
+                duration_s,
+                period_s,
+                window_s,
+            );
+            cfg.faults = half_down.clone();
+            cfg.overload = *policy;
+            ov_grid.push(cfg);
+        }
+    }
+    let ov_serial = sweep::run_fleet(&serial, &ov_grid).expect("overload grid");
+    let ov_outs = sweep::run_fleet(&parallel, &ov_grid).expect("overload grid");
+    assert_eq!(
+        checksum(&ov_serial).to_bits(),
+        checksum(&ov_outs).to_bits(),
+        "overload sweeps (shed counters included) must be bit-identical at any worker count"
+    );
+    println!(
+        "\noverload protection (2 GPUs, GPU 1 down for good at t=30s — ~2x peak on the survivor):"
+    );
+    let mut ov_stats: Vec<(&str, f64, f64, u64)> = Vec::new();
+    for (pi, (name, _)) in overload_policies.iter().enumerate() {
+        let outs_p = &ov_outs[pi * seeds.len()..(pi + 1) * seeds.len()];
+        for out in outs_p {
+            assert_eq!(
+                out.shed_overload,
+                out.shed_deadline + out.shed_capacity + out.shed_brownout,
+                "{name}: the shed split must sum to the total"
+            );
+            assert_eq!(
+                out.completed + out.failed_requests + out.lost_in_crash + out.shed_overload,
+                out.arrived,
+                "{name}: extended conservation must hold under overload"
+            );
+            assert_eq!(out.gpu_crashes, 1, "{name}: exactly one GPU goes down");
+        }
+        let goodput = stats::mean(&outs_p.iter().map(|o| o.goodput_rps).collect::<Vec<_>>());
+        let p99 =
+            stats::mean(&outs_p.iter().map(|o| o.pooled.p99_latency_ms).collect::<Vec<_>>());
+        let shed: u64 = outs_p.iter().map(|o| o.shed_overload).sum();
+        println!("  {name:>13}: goodput {goodput:.1} rps, p99 {p99:.1} ms, shed {shed}");
+        ov_stats.push((*name, goodput, p99, shed));
+    }
+    let (_, base_goodput, base_p99, base_shed) = ov_stats[0];
+    let (_, dl_goodput, dl_p99, dl_shed) = ov_stats[1];
+    assert_eq!(base_shed, 0, "the unprotected baseline must not shed anything");
+    assert!(dl_shed > 0, "deadline shedding must actually shed at 2x peak");
+    assert!(
+        dl_goodput > base_goodput,
+        "deadline shedding must strictly beat no-shedding on SLO-attaining goodput at 2x peak \
+         (deadline {dl_goodput:.1} rps vs baseline {base_goodput:.1} rps)"
+    );
+    assert!(
+        dl_p99 < base_p99,
+        "deadline shedding must strictly bound the p99 tail at 2x peak \
+         (deadline {dl_p99:.1} ms vs baseline {base_p99:.1} ms)"
+    );
+
     let rows: Vec<Json> = grid
         .iter()
         .zip(&outs)
@@ -444,6 +555,8 @@ fn main() {
                 ("migrated_requests", Json::Num(out.migrated_requests as f64)),
                 ("stranded_requests", Json::Num(out.stranded_requests as f64)),
                 ("unavailable_routes", Json::Num(out.unavailable_routes as f64)),
+                ("shed_overload", Json::Num(out.shed_overload as f64)),
+                ("breaker_trips", Json::Num(out.breaker_trips as f64)),
             ])
         })
         .collect();
@@ -559,6 +672,58 @@ fn main() {
                                                 .collect(),
                                         ),
                                     ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "overload",
+            Json::obj(vec![
+                ("fleet_size", Json::Num(2.0)),
+                ("crash_t_s", Json::Num(30.0)),
+                ("deadline_beats_baseline_goodput", Json::Bool(dl_goodput > base_goodput)),
+                ("deadline_bounds_p99", Json::Bool(dl_p99 < base_p99)),
+                ("conservation_ok", Json::Bool(true)),
+                (
+                    "policies",
+                    Json::Arr(
+                        ov_stats
+                            .iter()
+                            .map(|(name, goodput, p99, shed)| {
+                                Json::obj(vec![
+                                    ("name", Json::Str(name.to_string())),
+                                    ("goodput_rps", Json::Num(*goodput)),
+                                    ("p99_latency_ms", Json::Num(*p99)),
+                                    ("shed_overload", Json::Num(*shed as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "rows",
+                    Json::Arr(
+                        overload_policies
+                            .iter()
+                            .flat_map(|(name, _)| seeds.iter().map(move |&seed| (name, seed)))
+                            .zip(&ov_outs)
+                            .map(|((name, seed), out)| {
+                                Json::obj(vec![
+                                    ("policy", Json::Str(name.to_string())),
+                                    ("seed", Json::Num(seed as f64)),
+                                    ("arrived", Json::Num(out.arrived as f64)),
+                                    ("completed", Json::Num(out.completed as f64)),
+                                    ("failed_requests", Json::Num(out.failed_requests as f64)),
+                                    ("lost_in_crash", Json::Num(out.lost_in_crash as f64)),
+                                    ("shed_deadline", Json::Num(out.shed_deadline as f64)),
+                                    ("shed_capacity", Json::Num(out.shed_capacity as f64)),
+                                    ("shed_brownout", Json::Num(out.shed_brownout as f64)),
+                                    ("breaker_trips", Json::Num(out.breaker_trips as f64)),
+                                    ("goodput_rps", Json::Num(out.goodput_rps)),
+                                    ("p99_latency_ms", Json::Num(out.pooled.p99_latency_ms)),
                                 ])
                             })
                             .collect(),

@@ -29,11 +29,19 @@
 //! check ([`GpuHealth`]) excludes crashed GPUs in both repartition
 //! disciplines, crashes abort any repartition in progress on the victim,
 //! and policy proposals pause while any GPU is down (reconfigurations
-//! only roll through a fully-serving fleet). Request conservation
-//! extends across the crash paths: `completed + failed_requests +
-//! lost_in_crash = arrived`, pinned by `tests/fleet_properties.rs`.
-//! Because the crash schedule is part of the config, faulted sweeps stay
-//! bit-identical at any worker count.
+//! only roll through a fully-serving fleet).
+//!
+//! The ingress is additionally protected by the overload layer
+//! ([`OverloadPolicy`](super::overload::OverloadPolicy)): per-request
+//! deadlines derived from each class's SLO, bounded per-replica queues
+//! with reject-newest/drop-oldest shedding, tenant-weighted brownout
+//! under fleet-wide pressure, and per-GPU ingress circuit breakers that
+//! compose with the crash health states. Request conservation extends
+//! across the crash and shed paths: `completed + failed_requests +
+//! lost_in_crash + shed_overload = arrived`, pinned by
+//! `tests/fleet_properties.rs`. Because the crash schedule and the
+//! overload policy are part of the config, faulted and shedding sweeps
+//! stay bit-identical at any worker count.
 
 use std::collections::VecDeque;
 
@@ -54,6 +62,7 @@ use crate::workload::arrival::{Arrival, ArrivalError, ArrivalSpec};
 use crate::workload::spec::WorkloadSpec;
 
 use super::faults::{FaultPlan, FaultRecord};
+use super::overload::{OverloadGuard, OverloadPolicy, ShedCause, ShedDiscipline};
 use super::policy::{FleetCtx, FleetObs, FleetPolicyKind, GpuObs};
 use super::router::{GpuHealth, RoutePolicy, RouterKind};
 use super::tenancy::{jain_index, tenant_of_classes, validate_tenants, Tenant, TenantOutcome};
@@ -132,6 +141,11 @@ pub struct FleetConfig {
     /// Failure-injection schedule and ingress retry policy
     /// ([`FaultPlan::none`] for a fault-free run).
     pub faults: FaultPlan,
+    /// SLO-aware overload protection: deadlines, bounded queues,
+    /// brownout and ingress breakers ([`OverloadPolicy::none`] disables
+    /// everything and keeps the engine byte-identical to the
+    /// unprotected path).
+    pub overload: OverloadPolicy,
     /// PRNG seed (class arrival streams derive per-class seeds from it).
     pub seed: u64,
 }
@@ -263,6 +277,24 @@ pub struct FleetOutcome {
     pub retried_requests: u64,
     /// Requests dumped by a crash with their retry budget exhausted.
     pub lost_in_crash: u64,
+    /// Requests shed by the overload layer, total
+    /// (`shed_deadline + shed_capacity + shed_brownout`); the fourth
+    /// term of the conservation invariant.
+    pub shed_overload: u64,
+    /// Requests shed at dispatch because their deadline had expired
+    /// (expired requests are never served).
+    pub shed_deadline: u64,
+    /// Requests shed by the bounded-queue discipline (reject-newest or
+    /// drop-oldest).
+    pub shed_capacity: u64,
+    /// Requests shed at the fleet ingress while their tenant was
+    /// browned out.
+    pub shed_brownout: u64,
+    /// Ingress circuit-breaker trips (transitions into open).
+    pub breaker_trips: u64,
+    /// Total seconds ingress breakers spent open, summed over GPUs and
+    /// clamped to the horizon.
+    pub breaker_open_s: f64,
     /// Whole-GPU crashes executed.
     pub gpu_crashes: u64,
     /// Instance-level (single-replica) crashes executed.
@@ -305,12 +337,15 @@ enum Phase {
 }
 
 /// One queued request: its original arrival time (never re-stamped, so
-/// queueing latency spans outages) and how many crash retries it has
-/// already consumed.
+/// queueing latency spans outages), how many crash retries it has
+/// already consumed, and its SLO-derived deadline (`INFINITY` when
+/// deadlines are disabled; stamped once at arrival, so it survives
+/// migration, stranding and crash retries).
 #[derive(Debug, Clone, Copy)]
 struct Req {
     arrived: f64,
     tries: u32,
+    deadline: f64,
 }
 
 #[derive(Debug)]
@@ -421,22 +456,25 @@ fn maybe_begin_reconfig(
 
 /// Ask the router for a destination GPU under the configured discipline.
 /// Availability runs through the [`GpuHealth`] check, so crashed GPUs and
-/// crashed replicas are excluded in both disciplines. `available`/`depth`
-/// are caller-owned scratch buffers (refilled here), so the DES hot path
+/// crashed replicas are excluded in both disciplines, AND-ed with the
+/// overload guard's per-GPU ingress breakers. `available`/`depth` are
+/// caller-owned scratch buffers (refilled here), so the DES hot path
 /// performs no per-event heap allocation.
 fn route_request(
     router: &mut dyn RoutePolicy,
     gpus_state: &[GpuState],
     mode: RepartitionMode,
     class: usize,
+    guard: &OverloadGuard,
     available: &mut Vec<bool>,
     depth: &mut Vec<usize>,
 ) -> Option<usize> {
     available.clear();
     depth.clear();
     let inplace = mode == RepartitionMode::InPlace;
-    for gs in gpus_state {
-        available.push(gs.health().may_route(inplace, gs.replicas[class].down));
+    for (g, gs) in gpus_state.iter().enumerate() {
+        available
+            .push(gs.health().may_route(inplace, gs.replicas[class].down) && guard.gpu_admits(g));
         depth.push(gs.replicas[class].queue.len());
     }
     router.route(class, available, depth)
@@ -456,31 +494,92 @@ fn flush_replica(r: &mut Replica, class: usize, now: f64, dumped: &mut Vec<(usiz
     }
 }
 
+/// How one dispatch attempt ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dispatch {
+    /// Enqueued on the given GPU (it may still be deadline-shed later,
+    /// at the moment it would enter service).
+    Placed(usize),
+    /// No replica may take the class; the caller strands the request.
+    Stranded,
+    /// Shed by the bounded-queue discipline; already counted by the
+    /// guard, the request leaves the system here.
+    Shed,
+}
+
+/// Deadline expiry at dispatch: pop expired requests off the front of an
+/// *idle* replica's queue — they are shed, never served. The in-service
+/// head is exempt by construction (callers only filter idle replicas,
+/// right before starting service).
+fn shed_expired(guard: &mut OverloadGuard, r: &mut Replica, gpu: usize, class: usize, now: f64) {
+    if !guard.deadlines_enabled() {
+        return;
+    }
+    debug_assert!(!r.busy, "deadline filter on a busy replica g{gpu}c{class}");
+    while let Some(front) = r.queue.front() {
+        if front.deadline < now {
+            r.queue.pop_front();
+            guard.note_shed(Some(gpu), class, ShedCause::Deadline);
+        } else {
+            break;
+        }
+    }
+}
+
 /// Route one request and enqueue it on the chosen GPU, starting the
-/// replica when it is idle and serving. Returns the destination, or
-/// `None` when no replica may take the class (the caller strands the
-/// request). This is the single dispatch rule shared by arrivals, drain
-/// migration, crash retries and stranded re-dispatch.
+/// replica when it is idle and serving. This is the single dispatch rule
+/// shared by arrivals, drain migration, crash retries and stranded
+/// re-dispatch, and the overload guard's capacity bound and deadline
+/// expiry apply on every one of those paths.
 #[allow(clippy::too_many_arguments)] // DES plumbing, not an API
 fn dispatch_req(
     des: &mut Des<Ev>,
     router: &mut dyn RoutePolicy,
     gpus_state: &mut [GpuState],
     mode: RepartitionMode,
+    guard: &mut OverloadGuard,
     class: usize,
     req: Req,
     now: f64,
     available: &mut Vec<bool>,
     depth: &mut Vec<usize>,
-) -> Option<usize> {
-    let g = route_request(router, gpus_state, mode, class, available, depth)?;
+) -> Dispatch {
+    let Some(g) = route_request(router, gpus_state, mode, class, guard, available, depth) else {
+        return Dispatch::Stranded;
+    };
+    guard.note_route(g);
     let gs = &mut gpus_state[g];
+    let cap = guard.queue_cap();
+    if cap > 0 && gs.replicas[class].queue.len() >= cap {
+        guard.note_shed(Some(g), class, ShedCause::Capacity);
+        match guard.discipline() {
+            ShedDiscipline::RejectNewest => return Dispatch::Shed,
+            ShedDiscipline::DropOldest => {
+                // front = in service when busy: drop the oldest *waiting*
+                // request. A cap-1 queue whose head is in service has
+                // nothing waiting, so the newcomer is rejected instead.
+                let drop_at = usize::from(gs.replicas[class].busy);
+                if drop_at < gs.replicas[class].queue.len() {
+                    gs.replicas[class].queue.remove(drop_at);
+                } else {
+                    return Dispatch::Shed;
+                }
+            }
+        }
+    }
     gs.replicas[class].queue.push_back(req);
     if gs.phase == Phase::Running && !gs.replicas[class].busy {
-        let service_s = gs.svc_est[class].seconds;
-        start_replica(des, &mut gs.replicas[class], g, class, now, service_s);
+        // The queue may hold work that waited out a drain or an outage;
+        // expired entries are shed before anything enters service. The
+        // newcomer cannot be older than its own deadline at arrival, but
+        // re-dispatched (migrated/retried/stranded) requests can.
+        shed_expired(guard, &mut gs.replicas[class], g, class, now);
+        if !gs.replicas[class].queue.is_empty() {
+            let service_s = gs.svc_est[class].seconds;
+            start_replica(des, &mut gs.replicas[class], g, class, now, service_s);
+        }
     }
-    Some(g)
+    Dispatch::Placed(g)
 }
 
 /// Merge the per-class stranded queues into one globally oldest-first
@@ -521,6 +620,7 @@ fn drain_stranded(
     router: &mut dyn RoutePolicy,
     gpus_state: &mut [GpuState],
     mode: RepartitionMode,
+    guard: &mut OverloadGuard,
     stranded: &mut [VecDeque<Req>],
     t: f64,
     available: &mut Vec<bool>,
@@ -532,11 +632,18 @@ fn drain_stranded(
     }
     let mut blocked = vec![false; stranded.len()];
     for (c, req) in merged {
-        if blocked[c]
-            || dispatch_req(des, router, gpus_state, mode, c, req, t, available, depth).is_none()
-        {
-            blocked[c] = true;
+        if blocked[c] {
             stranded[c].push_back(req);
+            continue;
+        }
+        match dispatch_req(des, router, gpus_state, mode, guard, c, req, t, available, depth) {
+            // A capacity shed is terminal (already counted), not a block:
+            // requests behind it may still find room.
+            Dispatch::Placed(_) | Dispatch::Shed => {}
+            Dispatch::Stranded => {
+                blocked[c] = true;
+                stranded[c].push_back(req);
+            }
         }
     }
 }
@@ -591,6 +698,7 @@ impl FleetConfig {
         self.faults
             .validate(self.gpus.len(), self.classes.len(), self.duration_s)
             .map_err(FleetError::Invalid)?;
+        self.overload.validate().map_err(FleetError::Invalid)?;
         self.cost.validate().map_err(FleetError::Invalid)
     }
 
@@ -717,6 +825,11 @@ impl FleetConfig {
         // synthesis, which would demote symmetric traffic to deep queues.
         let mut router = self.router.build(n_classes, &self.tenants);
         let mut policy = self.policy.build();
+        // Overload guard: deadlines, bounded queues, brownout ladder and
+        // per-GPU ingress breakers. Disabled policies leave every check
+        // vacuous, so the run is byte-identical to the unprotected path.
+        let slo_ms: Vec<f64> = self.classes.iter().map(|c| c.slo_ms).collect();
+        let mut guard = OverloadGuard::new(self.overload, &slo_ms, &tenants_eff, n_gpus);
 
         let mut collectors: Vec<Vec<MetricsCollector>> = (0..n_gpus)
             .map(|g| {
@@ -783,30 +896,44 @@ impl FleetConfig {
             match ev {
                 Ev::Arrive { class } => {
                     arrived_per_class[class] += 1;
+                    guard.note_arrival();
                     let gap = arrivals[class].next_gap();
                     if gap.is_finite() && t + gap <= self.duration_s {
                         des.schedule_at(t + gap, Ev::Arrive { class });
                     }
-                    let req = Req { arrived: t, tries: 0 };
+                    // Brownout gates admission before routing: a browned-out
+                    // tenant's request is shed at the fleet edge and never
+                    // touches a replica queue or the router state.
+                    if !guard.admits_class(class) {
+                        guard.note_shed(None, class, ShedCause::Brownout);
+                        continue;
+                    }
+                    let req = Req {
+                        arrived: t,
+                        tries: 0,
+                        deadline: guard.deadline(class, t),
+                    };
                     match dispatch_req(
                         &mut des,
                         router.as_mut(),
                         &mut gpus_state,
                         self.mode,
+                        &mut guard,
                         class,
                         req,
                         t,
                         &mut avail_scratch,
                         &mut depth_scratch,
                     ) {
-                        Some(g) => {
+                        Dispatch::Placed(g) => {
                             routed += 1;
                             if gpus_state[g].phase != Phase::Running {
                                 unavailable_routes += 1;
                             }
                             gpus_state[g].replicas[class].window_arrivals += 1;
                         }
-                        None => {
+                        Dispatch::Shed => {}
+                        Dispatch::Stranded => {
                             stranded[class].push_back(req);
                             stranded_requests += 1;
                         }
@@ -847,6 +974,7 @@ impl FleetConfig {
                     match gpus_state[gpu].phase {
                         Phase::Running => {
                             let gs = &mut gpus_state[gpu];
+                            shed_expired(&mut guard, &mut gs.replicas[class], gpu, class, t);
                             if !gs.replicas[class].queue.is_empty() {
                                 let service_s = gs.svc_est[class].seconds;
                                 let r = &mut gs.replicas[class];
@@ -892,6 +1020,10 @@ impl FleetConfig {
                     }
                 }
                 Ev::Tick => {
+                    // Window boundary: breaker state machines and the
+                    // brownout ladder advance on the shed/route counts of
+                    // the window that just closed.
+                    guard.on_tick(t);
                     let mut gpu_obs = Vec::with_capacity(n_gpus);
                     for gs in gpus_state.iter_mut() {
                         let mut services = Vec::with_capacity(n_classes);
@@ -961,20 +1093,23 @@ impl FleetConfig {
                                             gpus_state[g].replicas[c].queue.split_off(keep);
                                         for req in moved {
                                             migrated_here += 1;
-                                            let sent = dispatch_req(
+                                            match dispatch_req(
                                                 &mut des,
                                                 router.as_mut(),
                                                 &mut gpus_state,
                                                 RepartitionMode::Rolling,
+                                                &mut guard,
                                                 c,
                                                 req,
                                                 t,
                                                 &mut avail_scratch,
                                                 &mut depth_scratch,
-                                            );
-                                            if sent.is_none() {
-                                                stranded[c].push_back(req);
-                                                stranded_requests += 1;
+                                            ) {
+                                                Dispatch::Placed(_) | Dispatch::Shed => {}
+                                                Dispatch::Stranded => {
+                                                    stranded[c].push_back(req);
+                                                    stranded_requests += 1;
+                                                }
                                             }
                                         }
                                     }
@@ -1005,6 +1140,25 @@ impl FleetConfig {
                     }
                     if t + self.window_s < self.duration_s {
                         des.schedule_at(t + self.window_s, Ev::Tick);
+                    }
+                    // A breaker re-closing is the only capacity-return
+                    // transition with no Recover/ReconfigDone event, so
+                    // stranded work must be re-offered here. Gated on the
+                    // breaker being enabled: router.route can mutate cursor
+                    // and credit state even on failed routes, and the
+                    // disabled path must stay byte-identical to PR 5.
+                    if guard.breaker_enabled() {
+                        drain_stranded(
+                            &mut des,
+                            router.as_mut(),
+                            &mut gpus_state,
+                            self.mode,
+                            &mut guard,
+                            &mut stranded,
+                            t,
+                            &mut avail_scratch,
+                            &mut depth_scratch,
+                        );
                     }
                 }
                 Ev::ReconfigDone { gpu, epoch } => {
@@ -1049,22 +1203,31 @@ impl FleetConfig {
                         router.as_mut(),
                         &mut gpus_state,
                         self.mode,
+                        &mut guard,
                         &mut stranded,
                         t,
                         &mut avail_scratch,
                         &mut depth_scratch,
                     );
                     // Put the resumed GPU back to work (crashed replicas
-                    // stay idle until their fault recovers).
+                    // stay idle until their fault recovers). Requests whose
+                    // deadline lapsed during the outage are shed, not served.
                     {
                         let gs = &mut gpus_state[gpu];
                         for c in 0..n_classes {
-                            if !gs.replicas[c].down
-                                && !gs.replicas[c].queue.is_empty()
-                                && !gs.replicas[c].busy
-                            {
-                                let service_s = gs.svc_est[c].seconds;
-                                start_replica(&mut des, &mut gs.replicas[c], gpu, c, t, service_s);
+                            if !gs.replicas[c].down && !gs.replicas[c].busy {
+                                shed_expired(&mut guard, &mut gs.replicas[c], gpu, c, t);
+                                if !gs.replicas[c].queue.is_empty() {
+                                    let service_s = gs.svc_est[c].seconds;
+                                    start_replica(
+                                        &mut des,
+                                        &mut gs.replicas[c],
+                                        gpu,
+                                        c,
+                                        t,
+                                        service_s,
+                                    );
+                                }
                             }
                         }
                         if t < self.duration_s {
@@ -1132,21 +1295,30 @@ impl FleetConfig {
                         } else {
                             retried_here += 1;
                             retried_per_class[c] += 1;
-                            let req = Req { arrived: req.arrived, tries: req.tries + 1 };
-                            let sent = dispatch_req(
+                            // The retry keeps the original arrival stamp and
+                            // deadline: a crash does not buy extra SLO time.
+                            let req = Req {
+                                arrived: req.arrived,
+                                tries: req.tries + 1,
+                                deadline: req.deadline,
+                            };
+                            match dispatch_req(
                                 &mut des,
                                 router.as_mut(),
                                 &mut gpus_state,
                                 self.mode,
+                                &mut guard,
                                 c,
                                 req,
                                 t,
                                 &mut avail_scratch,
                                 &mut depth_scratch,
-                            );
-                            if sent.is_none() {
-                                stranded[c].push_back(req);
-                                stranded_requests += 1;
+                            ) {
+                                Dispatch::Placed(_) | Dispatch::Shed => {}
+                                Dispatch::Stranded => {
+                                    stranded[c].push_back(req);
+                                    stranded_requests += 1;
+                                }
                             }
                         }
                     }
@@ -1196,6 +1368,7 @@ impl FleetConfig {
                         router.as_mut(),
                         &mut gpus_state,
                         self.mode,
+                        &mut guard,
                         &mut stranded,
                         t,
                         &mut avail_scratch,
@@ -1203,16 +1376,26 @@ impl FleetConfig {
                     );
                     // Defensive restart: queues on the recovered GPU are
                     // normally empty (the crash flushed them and routing
-                    // excluded it while down).
+                    // excluded it while down), but a crash that lands
+                    // mid-drain can leave migrated-in work behind; it is
+                    // dispatched exactly once here. Expired requests are
+                    // shed, never served.
                     let gs = &mut gpus_state[g];
                     if gs.phase == Phase::Running {
                         for c in 0..n_classes {
-                            if !gs.replicas[c].down
-                                && !gs.replicas[c].queue.is_empty()
-                                && !gs.replicas[c].busy
-                            {
-                                let service_s = gs.svc_est[c].seconds;
-                                start_replica(&mut des, &mut gs.replicas[c], g, c, t, service_s);
+                            if !gs.replicas[c].down && !gs.replicas[c].busy {
+                                shed_expired(&mut guard, &mut gs.replicas[c], g, c, t);
+                                if !gs.replicas[c].queue.is_empty() {
+                                    let service_s = gs.svc_est[c].seconds;
+                                    start_replica(
+                                        &mut des,
+                                        &mut gs.replicas[c],
+                                        g,
+                                        c,
+                                        t,
+                                        service_s,
+                                    );
+                                }
                             }
                         }
                     }
@@ -1220,9 +1403,13 @@ impl FleetConfig {
             }
         }
 
+        // Breakers still open when the horizon closes pay open-time up to
+        // the nominal horizon, mirroring the downtime convention below.
+        guard.finish(self.duration_s);
+
         // A permanently-failed fleet can leave requests stranded with
         // nothing left to recover: they fail, they are not silently
-        // dropped (conservation: completed + failed + lost = arrived).
+        // dropped (conservation: completed + failed + lost + shed = arrived).
         for (c, q) in stranded.iter_mut().enumerate() {
             failed_per_class[c] += q.len() as u64;
             q.clear();
@@ -1277,6 +1464,10 @@ impl FleetConfig {
         let failed_requests: u64 = failed_per_class.iter().sum();
         let retried_requests: u64 = retried_per_class.iter().sum();
         let lost_in_crash: u64 = lost_per_class.iter().sum();
+        let shed_deadline: u64 = guard.shed_deadline_per_class().iter().sum();
+        let shed_capacity: u64 = guard.shed_capacity_per_class().iter().sum();
+        let shed_brownout: u64 = guard.shed_brownout_per_class().iter().sum();
+        let shed_overload = shed_deadline + shed_capacity + shed_brownout;
 
         // Per-tenant accounting: re-aggregate the per-class counters over
         // the tenant partition, then summarize fairness as Jain's index
@@ -1293,6 +1484,9 @@ impl FleetConfig {
                 failed: 0,
                 lost_in_crash: 0,
                 retried: 0,
+                shed_deadline: 0,
+                shed_capacity: 0,
+                shed_brownout: 0,
                 goodput_rps: 0.0,
                 slo_violation_frac: 0.0,
                 norm_goodput_rps: 0.0,
@@ -1310,6 +1504,9 @@ impl FleetConfig {
             row.failed += failed_per_class[c];
             row.lost_in_crash += lost_per_class[c];
             row.retried += retried_per_class[c];
+            row.shed_deadline += guard.shed_deadline_per_class()[c];
+            row.shed_capacity += guard.shed_capacity_per_class()[c];
+            row.shed_brownout += guard.shed_brownout_per_class()[c];
         }
         for row in &mut tenant_rows {
             row.goodput_rps = (row.completed - row.slo_violations) as f64 / self.duration_s;
@@ -1356,6 +1553,12 @@ impl FleetConfig {
             failed_requests,
             retried_requests,
             lost_in_crash,
+            shed_overload,
+            shed_deadline,
+            shed_capacity,
+            shed_brownout,
+            breaker_trips: guard.breaker_trips(),
+            breaker_open_s: guard.breaker_open_s(),
             gpu_crashes,
             instance_crashes,
             downtime_s_per_gpu: downtime_per_gpu,
@@ -1408,6 +1611,7 @@ mod tests {
             window_s: 10.0,
             rho_max: 0.75,
             faults: FaultPlan::none(),
+            overload: OverloadPolicy::none(),
             seed: 2024,
         }
     }
@@ -1578,6 +1782,7 @@ mod tests {
             window_s: 10.0,
             rho_max: 0.75,
             faults: FaultPlan::none(),
+            overload: OverloadPolicy::none(),
             seed: 7,
         };
         let out = cfg.run().unwrap();
@@ -1731,6 +1936,7 @@ mod tests {
             window_s: 10.0,
             rho_max: 0.75,
             faults: FaultPlan::none(),
+            overload: OverloadPolicy::none(),
             seed: 11,
         };
         cfg.faults = FaultPlan {
@@ -1799,12 +2005,13 @@ mod tests {
         // to the lowest class index, and it sorts *within* classes too
         // (crash retries append old-timestamp requests behind younger
         // stranded arrivals).
+        let rq = |arrived: f64, tries: u32| Req { arrived, tries, deadline: f64::INFINITY };
         let mut stranded: Vec<VecDeque<Req>> = vec![VecDeque::new(), VecDeque::new()];
-        stranded[0].push_back(Req { arrived: 10.0, tries: 0 });
-        stranded[0].push_back(Req { arrived: 20.0, tries: 0 });
-        stranded[1].push_back(Req { arrived: 5.0, tries: 1 });
-        stranded[1].push_back(Req { arrived: 20.0, tries: 0 });
-        stranded[1].push_back(Req { arrived: 12.0, tries: 1 });
+        stranded[0].push_back(rq(10.0, 0));
+        stranded[0].push_back(rq(20.0, 0));
+        stranded[1].push_back(rq(5.0, 1));
+        stranded[1].push_back(rq(20.0, 0));
+        stranded[1].push_back(rq(12.0, 1));
         let order = stranded_dispatch_order(&mut stranded);
         let key: Vec<(usize, f64)> = order.iter().map(|(c, r)| (*c, r.arrived)).collect();
         assert_eq!(
@@ -1922,5 +2129,159 @@ mod tests {
         assert_eq!(RepartitionMode::parse("nope"), None);
         assert_eq!(RepartitionMode::Rolling.name(), "rolling");
         assert_eq!(RepartitionMode::InPlace.name(), "in-place");
+    }
+
+    /// `completed + failed + lost_in_crash + shed_overload = arrived`, at
+    /// the fleet level and per tenant, with the shed total splitting
+    /// exactly into its three causes.
+    fn assert_conserved(out: &FleetOutcome) {
+        assert_eq!(
+            out.shed_overload,
+            out.shed_deadline + out.shed_capacity + out.shed_brownout,
+            "shed total must split exactly by cause"
+        );
+        assert_eq!(
+            out.completed + out.failed_requests + out.lost_in_crash + out.shed_overload,
+            out.arrived,
+            "extended conservation"
+        );
+        for row in &out.tenants {
+            assert_eq!(
+                row.completed
+                    + row.failed
+                    + row.lost_in_crash
+                    + row.shed_deadline
+                    + row.shed_capacity
+                    + row.shed_brownout,
+                row.arrived,
+                "extended conservation for tenant {}",
+                row.name
+            );
+        }
+    }
+
+    /// One A100 carrying the two-class demo load: peak demand far
+    /// exceeds capacity, so every shed mechanism has pressure to act on.
+    fn overloaded(policy: OverloadPolicy) -> FleetConfig {
+        let mut cfg = demo(
+            1,
+            FleetPolicyKind::Static,
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        );
+        cfg.overload = policy;
+        cfg
+    }
+
+    #[test]
+    fn capacity_shedding_bounds_queues_and_conserves() {
+        for shed in [ShedDiscipline::RejectNewest, ShedDiscipline::DropOldest] {
+            let out = overloaded(OverloadPolicy { queue_cap: 1, shed, ..OverloadPolicy::none() })
+                .run()
+                .unwrap();
+            assert!(out.shed_capacity > 0, "{}: cap 1 under 2x load must shed", shed.name());
+            assert_eq!(out.shed_deadline, 0, "{}: deadlines disabled", shed.name());
+            assert_eq!(out.shed_brownout, 0, "{}: brownout disabled", shed.name());
+            assert_conserved(&out);
+        }
+    }
+
+    #[test]
+    fn deadline_shedding_sheds_expired_and_conserves() {
+        let out =
+            overloaded(OverloadPolicy { deadline_mult: 1.0, ..OverloadPolicy::none() })
+                .run()
+                .unwrap();
+        assert!(out.shed_deadline > 0, "40 ms deadlines at 2x load must expire requests");
+        assert_eq!(out.shed_capacity, 0, "queues unbounded");
+        assert_conserved(&out);
+        // Every served request cleared its deadline, so none of the
+        // completions can be slower than the deadline multiple of the SLO.
+        assert!(out.goodput_rps > 0.0, "the fleet still serves in-deadline work");
+    }
+
+    #[test]
+    fn brownout_sheds_the_lowest_weight_tenant_first() {
+        let mut cfg = overloaded(OverloadPolicy {
+            queue_cap: 1,
+            brownout_threshold: 0.05,
+            ..OverloadPolicy::none()
+        });
+        cfg.tenants = vec![
+            Tenant::new("gold", 3.0, vec![0]),
+            Tenant::new("bronze", 1.0, vec![1]),
+        ];
+        let out = cfg.run().unwrap();
+        assert!(out.shed_brownout > 0, "sustained capacity pressure must trip the brownout");
+        assert_eq!(
+            out.tenants[0].shed_brownout, 0,
+            "gold outweighs bronze and is never browned out in a two-tenant fleet"
+        );
+        assert!(out.tenants[1].shed_brownout > 0, "bronze is browned out first");
+        assert_conserved(&out);
+    }
+
+    #[test]
+    fn breaker_trips_under_sustained_shedding() {
+        let out = overloaded(OverloadPolicy {
+            queue_cap: 1,
+            breaker_threshold: 0.5,
+            ..OverloadPolicy::none()
+        })
+        .run()
+        .unwrap();
+        assert!(out.breaker_trips > 0, "cap-1 overload must trip the per-GPU breaker");
+        assert!(out.breaker_open_s > 0.0, "a tripped breaker accumulates open time");
+        assert_conserved(&out);
+    }
+
+    #[test]
+    fn invalid_overload_policies_are_rejected() {
+        let bad = |p: OverloadPolicy| {
+            let cfg = overloaded(p);
+            assert!(matches!(cfg.run(), Err(FleetError::Invalid(_))), "{p:?}");
+        };
+        bad(OverloadPolicy { deadline_mult: -1.0, ..OverloadPolicy::none() });
+        bad(OverloadPolicy { deadline_mult: f64::NAN, ..OverloadPolicy::none() });
+        bad(OverloadPolicy { brownout_threshold: 0.0, ..OverloadPolicy::none() });
+        bad(OverloadPolicy { brownout_threshold: 1.5, ..OverloadPolicy::none() });
+        bad(OverloadPolicy { breaker_threshold: -0.2, ..OverloadPolicy::none() });
+        bad(OverloadPolicy {
+            breaker_threshold: 0.5,
+            breaker_probes: 0,
+            ..OverloadPolicy::none()
+        });
+    }
+
+    #[test]
+    fn shedding_is_deterministic_and_composes_with_faults() {
+        let cfg = || {
+            let mut cfg = overloaded(OverloadPolicy {
+                queue_cap: 2,
+                shed: ShedDiscipline::DropOldest,
+                deadline_mult: 2.0,
+                breaker_threshold: 0.5,
+                ..OverloadPolicy::none()
+            });
+            cfg.faults.injections.push(crate::cluster::faults::FaultInjection {
+                t: 60.0,
+                gpu: 0,
+                class: Some(0),
+                down_s: 30.0,
+            });
+            cfg
+        };
+        let a = cfg().run().unwrap();
+        let b = cfg().run().unwrap();
+        assert_eq!(a.shed_deadline, b.shed_deadline);
+        assert_eq!(a.shed_capacity, b.shed_capacity);
+        assert_eq!(a.shed_brownout, b.shed_brownout);
+        assert_eq!(a.breaker_trips, b.breaker_trips);
+        assert_eq!(a.breaker_open_s.to_bits(), b.breaker_open_s.to_bits());
+        assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits());
+        assert!(a.shed_overload > 0, "the composed policy sheds under crash pressure");
+        assert_conserved(&a);
     }
 }

@@ -29,13 +29,20 @@
 //!   provision tenant weight × capacity weight, and `FleetOutcome`
 //!   reports per-tenant accounting plus Jain's fairness index over
 //!   weight-normalized goodput;
+//! * [`overload`] — SLO-aware overload protection: per-request deadlines
+//!   derived from each class's SLO, bounded per-replica queues with
+//!   pluggable shed disciplines ([`ShedDiscipline`]), tenant-weighted
+//!   brownout under fleet-wide pressure, and a per-GPU ingress circuit
+//!   breaker with half-open probing — extending conservation to
+//!   `completed + failed + lost_in_crash + shed_overload = arrived`;
 //! * fleet sweeps fan out through [`crate::sweep::run_fleet`] with the
 //!   engine's bitwise-determinism guarantee intact (a crash schedule is
-//!   config data, so faulted grids stay bit-identical too — and so is a
-//!   tenant set).
+//!   config data, so faulted grids stay bit-identical too — and so are a
+//!   tenant set and an overload policy).
 
 pub mod engine;
 pub mod faults;
+pub mod overload;
 pub mod policy;
 pub mod router;
 pub mod tenancy;
@@ -44,6 +51,10 @@ pub use engine::{
     FleetConfig, FleetDecision, FleetError, FleetOutcome, RepartitionMode, RequestClass,
 };
 pub use faults::{FaultInjection, FaultPlan, FaultRecord, DEFAULT_RETRY_BUDGET};
+pub use overload::{
+    BreakerState, OverloadGuard, OverloadPolicy, ShedCause, ShedDiscipline,
+    DEFAULT_BREAKER_PROBES,
+};
 pub use policy::{
     FleetAction, FleetCtx, FleetObs, FleetPolicy, FleetPolicyKind, FleetReactive, FleetStatic,
     GpuObs,

@@ -1,0 +1,684 @@
+//! SLO-aware overload protection and graceful degradation.
+//!
+//! MIGPerf's serving characterization is about meeting tail-latency SLOs
+//! on partitioned GPUs, but an unbounded ingress admits every request
+//! under sustained overload (diurnal peaks above capacity, crash-shrunk
+//! fleets) and p99 grows without bound. Real MIG serving stacks degrade
+//! gracefully instead: Tan et al. (2021) treat SLO feasibility as a hard
+//! admission constraint and MISO (Li et al., 2022) motivates protecting
+//! high-weight tenants when multi-tenant capacity is contended. This
+//! module supplies the fleet engine's protection layer:
+//!
+//! * **per-request deadlines** derived from each class's SLO
+//!   (`deadline = arrival + deadline_mult × slo`); expired requests are
+//!   shed at dispatch, never served;
+//! * **bounded per-replica queues** with pluggable shedding disciplines
+//!   ([`ShedDiscipline`]): reject-newest at admission or drop-oldest on
+//!   enqueue;
+//! * **tenant-weighted brownout**: when the fleet-wide shed fraction in
+//!   an observation window crosses a threshold, the lowest-weight
+//!   tenants are shed at the ingress first (ties to the lowest tenant
+//!   index), so high-weight tenants keep their SLO; the highest-weight
+//!   tenant is never browned out;
+//! * **per-GPU ingress circuit breakers**: a GPU whose window shed
+//!   fraction exceeds a cap is removed from routing (open), then
+//!   re-admitted through a bounded half-open probe window; any probe
+//!   shed re-opens the breaker. Breakers compose with the crash/recover
+//!   health states — a crashed GPU is excluded by health regardless of
+//!   its breaker, and an open breaker keeps a freshly recovered GPU out
+//!   of the ingress until its probes succeed.
+//!
+//! Everything here is plain deterministic arithmetic over windowed
+//! counters — no clocks, no randomness — so shedding decisions preserve
+//! the engine's bitwise-determinism contract at any sweep worker count.
+//! [`OverloadPolicy::none`] disables every mechanism and leaves the
+//! engine byte-identical to the unprotected path.
+
+use super::tenancy::{tenant_of_classes, Tenant};
+
+/// Half-open probe budget used when the CLI or a config does not choose
+/// one explicitly.
+pub const DEFAULT_BREAKER_PROBES: u64 = 8;
+
+/// What to do when a bounded replica queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedDiscipline {
+    /// The incoming request is rejected at admission; the queue keeps
+    /// its older work.
+    RejectNewest,
+    /// The oldest *waiting* request (the in-service head is exempt) is
+    /// dropped to make room for the newcomer. A cap-1 queue whose head
+    /// is in service has nothing waiting, so the newcomer is rejected
+    /// instead.
+    DropOldest,
+}
+
+impl ShedDiscipline {
+    /// Report name of the discipline.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedDiscipline::RejectNewest => "reject-newest",
+            ShedDiscipline::DropOldest => "drop-oldest",
+        }
+    }
+
+    /// Parse a discipline name.
+    pub fn parse(s: &str) -> Option<ShedDiscipline> {
+        match s.to_ascii_lowercase().as_str() {
+            "reject" | "reject-newest" => Some(ShedDiscipline::RejectNewest),
+            "drop" | "drop-oldest" => Some(ShedDiscipline::DropOldest),
+            _ => None,
+        }
+    }
+}
+
+/// Why the overload guard shed a request. Every shed increments exactly
+/// one per-class counter, so the conservation invariant extends to
+/// `completed + failed + lost_in_crash + shed_overload = arrived`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedCause {
+    /// The deadline expired while the request waited for dispatch.
+    Deadline,
+    /// A bounded replica queue was full.
+    Capacity,
+    /// The request's tenant was browned out at the fleet ingress.
+    Brownout,
+}
+
+/// Overload-protection policy (plain data: clone freely into sweep
+/// grids). [`OverloadPolicy::none`] disables everything.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadPolicy {
+    /// Per-replica queue bound, counting the in-service head; 0 means
+    /// unbounded (no capacity shedding).
+    pub queue_cap: usize,
+    /// Discipline applied when a bounded queue is full.
+    pub shed: ShedDiscipline,
+    /// Deadline multiplier: a request of a class with SLO `s` expires
+    /// `deadline_mult × s` after arrival. 0 disables deadlines.
+    pub deadline_mult: f64,
+    /// Fleet-wide shed fraction per observation window (pressure sheds /
+    /// arrivals) above which the brownout escalates by one tenant.
+    /// `f64::INFINITY` disables brownout.
+    pub brownout_threshold: f64,
+    /// Per-GPU shed fraction per observation window (sheds at the GPU /
+    /// requests routed to it) above which its ingress breaker trips.
+    /// `f64::INFINITY` disables breakers.
+    pub breaker_threshold: f64,
+    /// Requests admitted through a half-open breaker before it decides
+    /// to close (no probe shed) or re-open (any probe shed).
+    pub breaker_probes: u64,
+}
+
+impl OverloadPolicy {
+    /// No overload protection: the engine behaves byte-identically to
+    /// the unprotected path.
+    pub fn none() -> OverloadPolicy {
+        OverloadPolicy {
+            queue_cap: 0,
+            shed: ShedDiscipline::RejectNewest,
+            deadline_mult: 0.0,
+            brownout_threshold: f64::INFINITY,
+            breaker_threshold: f64::INFINITY,
+            breaker_probes: DEFAULT_BREAKER_PROBES,
+        }
+    }
+
+    /// True when every mechanism is disabled.
+    pub fn is_disabled(&self) -> bool {
+        self.queue_cap == 0
+            && self.deadline_mult == 0.0
+            && self.brownout_threshold.is_infinite()
+            && self.breaker_threshold.is_infinite()
+    }
+
+    /// Reject policies that would produce NaN deadlines or degenerate
+    /// thresholds.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.deadline_mult.is_finite() && self.deadline_mult >= 0.0) {
+            return Err(format!(
+                "deadline_mult = {} must be non-negative and finite (0 disables deadlines)",
+                self.deadline_mult
+            ));
+        }
+        let frac = |name: &str, v: f64| -> Result<(), String> {
+            // Finite thresholds are shed *fractions*; infinity disables.
+            if v.is_nan() || v <= 0.0 || (v.is_finite() && v > 1.0) {
+                return Err(format!(
+                    "{name} = {v} must be a shed fraction in (0, 1] or infinite to disable"
+                ));
+            }
+            Ok(())
+        };
+        frac("brownout_threshold", self.brownout_threshold)?;
+        frac("breaker_threshold", self.breaker_threshold)?;
+        if self.breaker_threshold.is_finite() && self.breaker_probes == 0 {
+            return Err(
+                "breaker_probes must be positive when the breaker is enabled: a breaker \
+                 with no probes could never close again"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Ingress circuit-breaker lifecycle for one GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal ingress.
+    Closed,
+    /// Excluded from routing until the next observation window.
+    Open,
+    /// Admitting up to `breaker_probes` requests; any shed re-opens.
+    HalfOpen,
+}
+
+#[derive(Debug, Clone)]
+struct GpuBreaker {
+    state: BreakerState,
+    /// When the breaker last opened (for open-time accounting).
+    opened_t: f64,
+    /// Remaining half-open probe budget.
+    probes_left: u64,
+    /// A request was shed at this GPU while half-open.
+    probe_shed: bool,
+    /// Requests the router placed on this GPU in the current window.
+    window_routed: u64,
+    /// Capacity/deadline sheds at this GPU in the current window.
+    window_shed: u64,
+}
+
+impl GpuBreaker {
+    fn new() -> GpuBreaker {
+        GpuBreaker {
+            state: BreakerState::Closed,
+            opened_t: 0.0,
+            probes_left: 0,
+            probe_shed: false,
+            window_routed: 0,
+            window_shed: 0,
+        }
+    }
+}
+
+/// Runtime overload state for one fleet run: deadline table, per-GPU
+/// breakers, the brownout ladder and the cumulative per-class shed
+/// counters (kept per class so they re-aggregate per tenant).
+#[derive(Debug)]
+pub struct OverloadGuard {
+    policy: OverloadPolicy,
+    /// Per-class deadline offsets, seconds (`INFINITY` when disabled).
+    deadline_s: Vec<f64>,
+    breakers: Vec<GpuBreaker>,
+    /// Class → tenant index (for the ingress brownout check).
+    tenant_of: Vec<usize>,
+    /// Tenant indices ordered lowest weight first, ties to the lowest
+    /// index — the deterministic brownout ladder.
+    brownout_order: Vec<usize>,
+    /// How many tenants off the ladder are currently browned out
+    /// (never all of them: the highest-weight tenant keeps serving).
+    brownout_level: usize,
+    /// Browned-out flag per tenant, recomputed from the ladder.
+    browned_out: Vec<bool>,
+    /// Fleet-wide arrivals in the current window.
+    window_arrived: u64,
+    /// Fleet-wide capacity/deadline sheds in the current window (the
+    /// pressure signal; brownout sheds are the response, not pressure).
+    window_pressure: u64,
+    shed_deadline: Vec<u64>,
+    shed_capacity: Vec<u64>,
+    shed_brownout: Vec<u64>,
+    breaker_trips: u64,
+    breaker_open_s: f64,
+}
+
+impl OverloadGuard {
+    /// Build the guard for a validated config. `tenants` is the
+    /// effective tenant set (the engine's per-class synthesis when the
+    /// config declares none).
+    pub fn new(
+        policy: OverloadPolicy,
+        slo_ms: &[f64],
+        tenants: &[Tenant],
+        n_gpus: usize,
+    ) -> OverloadGuard {
+        let deadline_s: Vec<f64> = slo_ms
+            .iter()
+            .map(|&s| {
+                if policy.deadline_mult > 0.0 {
+                    policy.deadline_mult * s / 1e3
+                } else {
+                    f64::INFINITY
+                }
+            })
+            .collect();
+        let mut brownout_order: Vec<usize> = (0..tenants.len()).collect();
+        brownout_order.sort_by(|&a, &b| {
+            tenants[a]
+                .weight
+                .partial_cmp(&tenants[b].weight)
+                .expect("finite tenant weights")
+                .then(a.cmp(&b))
+        });
+        OverloadGuard {
+            policy,
+            deadline_s,
+            breakers: (0..n_gpus).map(|_| GpuBreaker::new()).collect(),
+            tenant_of: tenant_of_classes(tenants, slo_ms.len()),
+            brownout_order,
+            brownout_level: 0,
+            browned_out: vec![false; tenants.len()],
+            window_arrived: 0,
+            window_pressure: 0,
+            shed_deadline: vec![0; slo_ms.len()],
+            shed_capacity: vec![0; slo_ms.len()],
+            shed_brownout: vec![0; slo_ms.len()],
+            breaker_trips: 0,
+            breaker_open_s: 0.0,
+        }
+    }
+
+    /// The per-replica queue bound (0 = unbounded).
+    pub fn queue_cap(&self) -> usize {
+        self.policy.queue_cap
+    }
+
+    /// The full-queue discipline.
+    pub fn discipline(&self) -> ShedDiscipline {
+        self.policy.shed
+    }
+
+    /// True when deadline expiry is in play.
+    pub fn deadlines_enabled(&self) -> bool {
+        self.policy.deadline_mult > 0.0
+    }
+
+    /// True when per-GPU breakers are in play (breaker transitions are
+    /// the one capacity-return event without a recovery event, so the
+    /// engine re-offers stranded requests on ticks only in this case).
+    pub fn breaker_enabled(&self) -> bool {
+        self.policy.breaker_threshold.is_finite()
+    }
+
+    /// Deadline for a request of `class` arriving at `arrived`
+    /// (`INFINITY` when deadlines are disabled).
+    pub fn deadline(&self, class: usize, arrived: f64) -> f64 {
+        arrived + self.deadline_s[class]
+    }
+
+    /// Count one fleet-ingress arrival into the brownout window.
+    pub fn note_arrival(&mut self) {
+        self.window_arrived += 1;
+    }
+
+    /// Brownout check at the fleet ingress: may this class's tenant be
+    /// admitted right now?
+    pub fn admits_class(&self, class: usize) -> bool {
+        match self.tenant_of.get(class) {
+            Some(&ti) if ti < self.browned_out.len() => !self.browned_out[ti],
+            _ => true,
+        }
+    }
+
+    /// Breaker check: may the router place requests on GPU `g`?
+    pub fn gpu_admits(&self, g: usize) -> bool {
+        match self.breakers[g].state {
+            BreakerState::Closed => true,
+            BreakerState::Open => false,
+            BreakerState::HalfOpen => self.breakers[g].probes_left > 0,
+        }
+    }
+
+    /// Breaker state of GPU `g` (for tests and reporting).
+    pub fn breaker_state(&self, g: usize) -> BreakerState {
+        self.breakers[g].state
+    }
+
+    /// Record that the router placed a request on GPU `g` (consumes a
+    /// half-open probe).
+    pub fn note_route(&mut self, g: usize) {
+        let b = &mut self.breakers[g];
+        b.window_routed += 1;
+        if b.state == BreakerState::HalfOpen {
+            b.probes_left = b.probes_left.saturating_sub(1);
+        }
+    }
+
+    /// Record one shed. `gpu` is the GPU the shed happened at
+    /// (capacity/deadline), or `None` for ingress brownout sheds.
+    pub fn note_shed(&mut self, gpu: Option<usize>, class: usize, cause: ShedCause) {
+        match cause {
+            ShedCause::Deadline => self.shed_deadline[class] += 1,
+            ShedCause::Capacity => self.shed_capacity[class] += 1,
+            ShedCause::Brownout => self.shed_brownout[class] += 1,
+        }
+        if cause != ShedCause::Brownout {
+            self.window_pressure += 1;
+        }
+        if let Some(g) = gpu {
+            let b = &mut self.breakers[g];
+            b.window_shed += 1;
+            if b.state == BreakerState::HalfOpen {
+                b.probe_shed = true;
+            }
+        }
+    }
+
+    /// Observation-window boundary at simulated time `t`: advance the
+    /// breaker state machines on the window that just ended, move the
+    /// brownout ladder, and reset the window counters.
+    pub fn on_tick(&mut self, t: f64) {
+        if self.policy.breaker_threshold.is_finite() {
+            for b in self.breakers.iter_mut() {
+                match b.state {
+                    BreakerState::Closed => {
+                        // Deadline sheds of earlier admissions can push
+                        // the fraction past 1; `>` keeps the check sane.
+                        if b.window_routed > 0
+                            && b.window_shed as f64
+                                > self.policy.breaker_threshold * b.window_routed as f64
+                        {
+                            b.state = BreakerState::Open;
+                            b.opened_t = t;
+                            self.breaker_trips += 1;
+                        }
+                    }
+                    BreakerState::Open => {
+                        self.breaker_open_s += t - b.opened_t;
+                        b.state = BreakerState::HalfOpen;
+                        b.probes_left = self.policy.breaker_probes;
+                        b.probe_shed = false;
+                    }
+                    BreakerState::HalfOpen => {
+                        if b.probe_shed {
+                            b.state = BreakerState::Open;
+                            b.opened_t = t;
+                            self.breaker_trips += 1;
+                        } else {
+                            b.state = BreakerState::Closed;
+                        }
+                    }
+                }
+                b.window_routed = 0;
+                b.window_shed = 0;
+            }
+        }
+        if self.policy.brownout_threshold.is_finite() && !self.browned_out.is_empty() {
+            let max_level = self.browned_out.len() - 1; // never all tenants
+            let pressure = self.window_pressure as f64;
+            let arrived = self.window_arrived as f64;
+            if arrived > 0.0 && pressure > self.policy.brownout_threshold * arrived {
+                self.brownout_level = (self.brownout_level + 1).min(max_level);
+            } else if pressure * 2.0 < self.policy.brownout_threshold * arrived
+                || self.window_arrived == 0
+            {
+                // Hysteresis: de-escalate at half the trigger fraction.
+                self.brownout_level = self.brownout_level.saturating_sub(1);
+            }
+            for f in self.browned_out.iter_mut() {
+                *f = false;
+            }
+            for &ti in &self.brownout_order[..self.brownout_level] {
+                self.browned_out[ti] = true;
+            }
+        }
+        self.window_arrived = 0;
+        self.window_pressure = 0;
+    }
+
+    /// Close out open-time accounting at the end of the run: breakers
+    /// still open pay up to the nominal horizon, mirroring the crash
+    /// downtime convention.
+    pub fn finish(&mut self, horizon_s: f64) {
+        for b in &self.breakers {
+            if b.state == BreakerState::Open {
+                self.breaker_open_s += (horizon_s - b.opened_t).max(0.0);
+            }
+        }
+    }
+
+    /// Per-class deadline sheds.
+    pub fn shed_deadline_per_class(&self) -> &[u64] {
+        &self.shed_deadline
+    }
+
+    /// Per-class capacity sheds.
+    pub fn shed_capacity_per_class(&self) -> &[u64] {
+        &self.shed_capacity
+    }
+
+    /// Per-class brownout sheds.
+    pub fn shed_brownout_per_class(&self) -> &[u64] {
+        &self.shed_brownout
+    }
+
+    /// Breaker trips (transitions into `Open`).
+    pub fn breaker_trips(&self) -> u64 {
+        self.breaker_trips
+    }
+
+    /// Total seconds breakers spent open (summed over GPUs, clamped to
+    /// the horizon by [`OverloadGuard::finish`]).
+    pub fn breaker_open_s(&self) -> f64 {
+        self.breaker_open_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tenants() -> Vec<Tenant> {
+        vec![
+            Tenant::new("gold", 3.0, vec![0]),
+            Tenant::new("bronze", 1.0, vec![1]),
+            Tenant::new("silver", 2.0, vec![2]),
+        ]
+    }
+
+    fn guard(policy: OverloadPolicy) -> OverloadGuard {
+        OverloadGuard::new(policy, &[40.0, 40.0, 40.0], &tenants(), 2)
+    }
+
+    #[test]
+    fn discipline_names_parse_and_render() {
+        assert_eq!(ShedDiscipline::parse("reject"), Some(ShedDiscipline::RejectNewest));
+        assert_eq!(ShedDiscipline::parse("reject-newest"), Some(ShedDiscipline::RejectNewest));
+        assert_eq!(ShedDiscipline::parse("drop"), Some(ShedDiscipline::DropOldest));
+        assert_eq!(ShedDiscipline::parse("DROP-OLDEST"), Some(ShedDiscipline::DropOldest));
+        assert_eq!(ShedDiscipline::parse("lifo"), None);
+        assert_eq!(ShedDiscipline::RejectNewest.name(), "reject-newest");
+        assert_eq!(ShedDiscipline::DropOldest.name(), "drop-oldest");
+    }
+
+    #[test]
+    fn none_policy_is_disabled_and_valid() {
+        let p = OverloadPolicy::none();
+        assert!(p.is_disabled());
+        p.validate().unwrap();
+        let g = guard(p);
+        assert!(g.deadline(0, 5.0).is_infinite(), "no deadline when disabled");
+        assert!(!g.deadlines_enabled());
+        assert!(!g.breaker_enabled());
+        assert!(g.admits_class(0) && g.admits_class(1) && g.admits_class(2));
+        assert!(g.gpu_admits(0) && g.gpu_admits(1));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_policies() {
+        let ok = OverloadPolicy { queue_cap: 4, deadline_mult: 2.0, ..OverloadPolicy::none() };
+        ok.validate().unwrap();
+
+        let mut p = OverloadPolicy::none();
+        p.deadline_mult = -1.0;
+        assert!(p.validate().is_err(), "negative multiplier");
+        p.deadline_mult = f64::NAN;
+        assert!(p.validate().is_err(), "NaN multiplier");
+        p.deadline_mult = f64::INFINITY;
+        assert!(p.validate().is_err(), "infinite multiplier");
+
+        let mut p = OverloadPolicy::none();
+        p.brownout_threshold = 0.0;
+        assert!(p.validate().is_err(), "zero brownout threshold");
+        p.brownout_threshold = 1.5;
+        assert!(p.validate().is_err(), "fraction above 1");
+        p.brownout_threshold = f64::NAN;
+        assert!(p.validate().is_err(), "NaN threshold");
+
+        let mut p = OverloadPolicy::none();
+        p.breaker_threshold = 0.5;
+        p.breaker_probes = 0;
+        assert!(p.validate().is_err(), "enabled breaker needs probes");
+        p.breaker_probes = 1;
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn deadlines_scale_with_the_class_slo() {
+        let p = OverloadPolicy { deadline_mult: 2.0, ..OverloadPolicy::none() };
+        let g = OverloadGuard::new(p, &[40.0, 100.0], &Tenant::per_class(2), 1);
+        assert!((g.deadline(0, 10.0) - 10.08).abs() < 1e-12, "10 + 2×40ms");
+        assert!((g.deadline(1, 10.0) - 10.2).abs() < 1e-12, "10 + 2×100ms");
+        assert!(g.deadlines_enabled());
+    }
+
+    #[test]
+    fn brownout_sheds_lowest_weight_tenants_first_with_hysteresis() {
+        let p = OverloadPolicy { brownout_threshold: 0.5, ..OverloadPolicy::none() };
+        let mut g = guard(p);
+        // Window 1: 10 arrivals, 6 pressure sheds → fraction 0.6 > 0.5.
+        for _ in 0..10 {
+            g.note_arrival();
+        }
+        for _ in 0..6 {
+            g.note_shed(Some(0), 0, ShedCause::Capacity);
+        }
+        g.on_tick(10.0);
+        // bronze (weight 1) is first on the ladder and owns class 1.
+        assert!(g.admits_class(0), "gold stays admitted");
+        assert!(!g.admits_class(1), "bronze is browned out first");
+        assert!(g.admits_class(2), "silver stays admitted");
+        // Window 2: still over threshold → silver (weight 2) joins; gold
+        // (highest weight) is never browned out.
+        for _ in 0..10 {
+            g.note_arrival();
+        }
+        for _ in 0..8 {
+            g.note_shed(Some(0), 0, ShedCause::Deadline);
+        }
+        g.on_tick(20.0);
+        assert!(g.admits_class(0), "gold is never browned out");
+        assert!(!g.admits_class(1));
+        assert!(!g.admits_class(2), "silver browned out at level 2");
+        // Window 3: pressure between half and full threshold → hold.
+        for _ in 0..10 {
+            g.note_arrival();
+        }
+        for _ in 0..4 {
+            g.note_shed(Some(0), 0, ShedCause::Capacity);
+        }
+        g.on_tick(30.0);
+        assert!(!g.admits_class(1) && !g.admits_class(2), "0.4 holds the level");
+        // Windows 4-5: pressure clear of half the threshold → step down.
+        for _ in 0..10 {
+            g.note_arrival();
+        }
+        g.on_tick(40.0);
+        assert!(g.admits_class(2), "silver re-admitted first");
+        assert!(!g.admits_class(1));
+        for _ in 0..10 {
+            g.note_arrival();
+        }
+        g.on_tick(50.0);
+        assert!(g.admits_class(1), "bronze re-admitted last");
+        assert_eq!(g.shed_brownout_per_class(), &[0, 0, 0], "the guard only gates");
+    }
+
+    #[test]
+    fn brownout_never_sheds_a_single_tenant_fleet() {
+        let p = OverloadPolicy { brownout_threshold: 0.1, ..OverloadPolicy::none() };
+        let mut g = OverloadGuard::new(p, &[40.0], &Tenant::per_class(1), 1);
+        for _ in 0..4 {
+            g.note_arrival();
+            g.note_shed(Some(0), 0, ShedCause::Capacity);
+        }
+        g.on_tick(10.0);
+        assert!(g.admits_class(0), "the only tenant always keeps serving");
+    }
+
+    #[test]
+    fn breaker_trips_half_opens_and_recloses() {
+        let p = OverloadPolicy {
+            breaker_threshold: 0.5,
+            breaker_probes: 2,
+            ..OverloadPolicy::none()
+        };
+        let mut g = guard(p);
+        assert!(g.breaker_enabled());
+        // GPU 0 sheds 3 of 4 routed → fraction 0.75 > 0.5: trips.
+        for _ in 0..4 {
+            g.note_route(0);
+        }
+        for _ in 0..3 {
+            g.note_shed(Some(0), 0, ShedCause::Capacity);
+        }
+        g.note_route(1); // GPU 1 is healthy
+        g.on_tick(10.0);
+        assert_eq!(g.breaker_state(0), BreakerState::Open);
+        assert!(!g.gpu_admits(0), "open breaker excludes the GPU");
+        assert!(g.gpu_admits(1));
+        assert_eq!(g.breaker_trips(), 1);
+        // Next tick: half-open with a 2-probe budget.
+        g.on_tick(20.0);
+        assert_eq!(g.breaker_state(0), BreakerState::HalfOpen);
+        assert!((g.breaker_open_s() - 10.0).abs() < 1e-12, "open 10 → 20");
+        assert!(g.gpu_admits(0));
+        g.note_route(0);
+        assert!(g.gpu_admits(0), "one probe left");
+        g.note_route(0);
+        assert!(!g.gpu_admits(0), "probe budget exhausted until the tick");
+        // Probes served cleanly → close.
+        g.on_tick(30.0);
+        assert_eq!(g.breaker_state(0), BreakerState::Closed);
+        assert!(g.gpu_admits(0));
+        assert_eq!(g.breaker_trips(), 1, "a clean half-open is not a trip");
+    }
+
+    #[test]
+    fn breaker_reopens_on_a_probe_shed_and_finish_clamps_open_time() {
+        let p = OverloadPolicy {
+            breaker_threshold: 0.5,
+            breaker_probes: 4,
+            ..OverloadPolicy::none()
+        };
+        let mut g = guard(p);
+        g.note_route(0);
+        g.note_shed(Some(0), 0, ShedCause::Deadline);
+        g.on_tick(10.0);
+        assert_eq!(g.breaker_state(0), BreakerState::Open);
+        g.on_tick(20.0);
+        assert_eq!(g.breaker_state(0), BreakerState::HalfOpen);
+        g.note_route(0);
+        g.note_shed(Some(0), 0, ShedCause::Capacity);
+        g.on_tick(30.0);
+        assert_eq!(g.breaker_state(0), BreakerState::Open, "probe shed re-opens");
+        assert_eq!(g.breaker_trips(), 2);
+        // Run ends at t = 35 with the breaker still open: 30 → 35 counts.
+        g.finish(35.0);
+        assert!((g.breaker_open_s() - 15.0).abs() < 1e-12, "10→20 plus 30→35");
+    }
+
+    #[test]
+    fn shed_counters_attribute_by_cause_and_class() {
+        let p = OverloadPolicy { queue_cap: 1, ..OverloadPolicy::none() };
+        let mut g = guard(p);
+        g.note_shed(Some(0), 0, ShedCause::Capacity);
+        g.note_shed(Some(1), 1, ShedCause::Deadline);
+        g.note_shed(None, 2, ShedCause::Brownout);
+        g.note_shed(None, 2, ShedCause::Brownout);
+        assert_eq!(g.shed_capacity_per_class(), &[1, 0, 0]);
+        assert_eq!(g.shed_deadline_per_class(), &[0, 1, 0]);
+        assert_eq!(g.shed_brownout_per_class(), &[0, 0, 2]);
+    }
+}

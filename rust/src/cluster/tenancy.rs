@@ -180,6 +180,13 @@ pub struct TenantOutcome {
     pub lost_in_crash: u64,
     /// Crash-dumped requests re-admitted at the ingress.
     pub retried: u64,
+    /// Requests shed at dispatch because their deadline had expired.
+    pub shed_deadline: u64,
+    /// Requests shed by the bounded-queue discipline.
+    pub shed_capacity: u64,
+    /// Requests shed at the ingress while this tenant was browned out
+    /// (lowest-weight tenants shed first under fleet-wide pressure).
+    pub shed_brownout: u64,
     /// SLO-respecting completions per second over the run.
     pub goodput_rps: f64,
     /// Fraction of completions that blew their SLO.

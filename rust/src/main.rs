@@ -818,17 +818,58 @@ fn parse_crash_list(spec: &str) -> Result<Vec<migperf::cluster::FaultInjection>,
             None => (target.parse().map_err(|_| err())?, None),
         };
         let t: f64 = t.parse().map_err(|_| err())?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("crash '{item}': time {t} must be finite and non-negative"));
+        }
         let down_s: f64 = if down == "inf" {
             f64::INFINITY
         } else {
             down.parse().map_err(|_| err())?
         };
+        if down_s.is_nan() || down_s <= 0.0 {
+            return Err(format!(
+                "crash '{item}': downtime must be positive seconds or 'inf'"
+            ));
+        }
         out.push(migperf::cluster::FaultInjection { t, gpu, class, down_s });
     }
     if out.is_empty() {
         return Err("--crash needs at least one entry".into());
     }
     Ok(out)
+}
+
+/// Assemble the overload-protection policy from `--queue-cap`,
+/// `--deadline-mult`, `--shed`, `--brownout`, `--breaker` and
+/// `--breaker-probes`. The CLI uses `0` as the "off" value for both
+/// thresholds; the engine encodes "off" as `+inf`.
+fn parse_overload_policy(args: &Args) -> Result<migperf::cluster::OverloadPolicy, String> {
+    use migperf::cluster::{OverloadPolicy, ShedDiscipline, DEFAULT_BREAKER_PROBES};
+    let queue_cap: usize = args.parse_or("queue-cap", 0usize).map_err(|e| e.to_string())?;
+    let deadline_mult: f64 = args.parse_or("deadline-mult", 0.0f64).map_err(|e| e.to_string())?;
+    let shed_arg = args.str_or("shed", "reject");
+    let shed = ShedDiscipline::parse(&shed_arg)
+        .ok_or_else(|| format!("unknown shed discipline '{shed_arg}' (reject|drop)"))?;
+    let threshold = |name: &str| -> Result<f64, String> {
+        let v: f64 = args.parse_or(name, 0.0f64).map_err(|e| e.to_string())?;
+        if v == 0.0 {
+            Ok(f64::INFINITY) // disabled
+        } else {
+            Ok(v)
+        }
+    };
+    let policy = OverloadPolicy {
+        queue_cap,
+        shed,
+        deadline_mult,
+        brownout_threshold: threshold("brownout")?,
+        breaker_threshold: threshold("breaker")?,
+        breaker_probes: args
+            .parse_or("breaker-probes", DEFAULT_BREAKER_PROBES)
+            .map_err(|e| e.to_string())?,
+    };
+    policy.validate()?;
+    Ok(policy)
 }
 
 fn cmd_fleet(args: &Args) -> Result<(), String> {
@@ -866,6 +907,12 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     OptSpec { name: "crash", value: "LIST", help: "explicit crash schedule GPU[.CLASS]@T+DOWN[,...] (DOWN in seconds, inf = permanent); overrides --faults/--mtbf", default: None },
                     OptSpec { name: "retries", value: "N", help: "per-request retry budget after a crash", default: Some("1") },
                     OptSpec { name: "storm-cap", value: "N", help: "max requests re-admitted per crash (0 = unlimited)", default: Some("0") },
+                    OptSpec { name: "queue-cap", value: "N", help: "bound each replica queue to N requests (0 = unbounded)", default: Some("0") },
+                    OptSpec { name: "deadline-mult", value: "F", help: "shed requests older than F x their class SLO (0 = no deadlines)", default: Some("0") },
+                    OptSpec { name: "shed", value: "D", help: "discipline for full queues: reject (newest at admission) | drop (oldest in queue)", default: Some("reject") },
+                    OptSpec { name: "brownout", value: "F", help: "brown out lowest-weight tenants when a window sheds > F of its arrivals (0 = off)", default: Some("0") },
+                    OptSpec { name: "breaker", value: "F", help: "trip a per-GPU ingress breaker when its window shed fraction exceeds F (0 = off)", default: Some("0") },
+                    OptSpec { name: "breaker-probes", value: "N", help: "requests admitted per half-open probe window", default: Some("8") },
                     OptSpec { name: "seeds", value: "N", help: "replication seeds per grid point", default: Some("1") },
                     OptSpec { name: "seed", value: "S", help: "base seed", default: Some("2024") },
                     OptSpec { name: "workers", value: "N", help: "sweep worker threads (0 = auto)", default: Some("0") },
@@ -1028,6 +1075,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             }
         }
     }
+    let overload = parse_overload_policy(args)?;
     let mttr_s: f64 = args.parse_or("mttr", 30.0f64).map_err(|e| e.to_string())?;
     let retries: u32 = args.parse_or("retries", 1u32).map_err(|e| e.to_string())?;
     let storm_cap: u64 = args.parse_or("storm-cap", 0u64).map_err(|e| e.to_string())?;
@@ -1118,6 +1166,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                                 window_s,
                                 rho_max,
                                 faults,
+                                overload,
                                 seed,
                             });
                         }
@@ -1173,6 +1222,12 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     ("failed_requests", Json::Num(out.failed_requests as f64)),
                     ("retried_requests", Json::Num(out.retried_requests as f64)),
                     ("lost_in_crash", Json::Num(out.lost_in_crash as f64)),
+                    ("shed_overload", Json::Num(out.shed_overload as f64)),
+                    ("shed_deadline", Json::Num(out.shed_deadline as f64)),
+                    ("shed_capacity", Json::Num(out.shed_capacity as f64)),
+                    ("shed_brownout", Json::Num(out.shed_brownout as f64)),
+                    ("breaker_trips", Json::Num(out.breaker_trips as f64)),
+                    ("breaker_open_s", Json::Num(out.breaker_open_s)),
                     ("gpu_crashes", Json::Num(out.gpu_crashes as f64)),
                     ("instance_crashes", Json::Num(out.instance_crashes as f64)),
                     ("availability", Json::Num(out.availability)),
@@ -1238,6 +1293,8 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             "failed",
             "lost",
             "retried",
+            "shed",
+            "trips",
             "avail_%",
         ]);
         for ((cfg, out), flabel) in runs.iter().zip(&outs).zip(&fault_labels) {
@@ -1258,6 +1315,8 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                 out.failed_requests.to_string(),
                 out.lost_in_crash.to_string(),
                 out.retried_requests.to_string(),
+                out.shed_overload.to_string(),
+                out.breaker_trips.to_string(),
                 format!("{:.2}", out.availability * 100.0),
             ]);
         }
@@ -1273,6 +1332,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                 "viol",
                 "failed",
                 "lost",
+                "shed",
                 "goodput_rps",
                 "norm_rps",
             ]);
@@ -1288,6 +1348,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                         row.slo_violations.to_string(),
                         row.failed.to_string(),
                         row.lost_in_crash.to_string(),
+                        (row.shed_deadline + row.shed_capacity + row.shed_brownout).to_string(),
                         format!("{:.1}", row.goodput_rps),
                         format!("{:.2}", row.norm_goodput_rps),
                     ]);
@@ -1403,4 +1464,107 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet_args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string), &[]).unwrap()
+    }
+
+    #[test]
+    fn crash_specs_parse_the_documented_grammar() {
+        let plan = parse_crash_list("1@30+20,0.1@45+inf").unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!((plan[0].gpu, plan[0].class), (1, None));
+        assert_eq!((plan[0].t, plan[0].down_s), (30.0, 20.0));
+        assert_eq!((plan[1].gpu, plan[1].class), (0, Some(1)));
+        assert!(plan[1].down_s.is_infinite());
+    }
+
+    #[test]
+    fn malformed_crash_specs_error_instead_of_panicking() {
+        for bad in [
+            "",            // no entries
+            "1@30",        // missing downtime
+            "1+20",        // missing @T
+            "x@30+20",     // non-numeric GPU
+            "1.z@30+20",   // non-numeric class
+            "-1@30+20",    // negative GPU index
+            "1@-5+20",     // negative crash time
+            "1@inf+20",    // non-finite crash time
+            "1@NaN+20",    // NaN crash time
+            "1@30+0",      // zero downtime
+            "1@30+-3",     // negative downtime
+            "1@30+NaN",    // NaN downtime
+            "1@30+forever" // non-numeric downtime
+        ] {
+            let res = parse_crash_list(bad);
+            assert!(res.is_err(), "'{bad}' must be rejected, got {res:?}");
+            assert!(!res.unwrap_err().is_empty(), "'{bad}' needs a message");
+        }
+    }
+
+    #[test]
+    fn malformed_tenant_specs_error_instead_of_panicking() {
+        for bad in ["", "gold", "gold:3", "gold:x:0", "gold:3:", "gold:3:x", ":3:0"] {
+            assert!(
+                migperf::cluster::parse_tenants(bad).is_err(),
+                "'{bad}' must be rejected"
+            );
+        }
+        // Weights that parse but are degenerate fall to validate_tenants,
+        // which cmd_fleet runs right after parsing.
+        let ts = migperf::cluster::parse_tenants("gold:NaN:0").unwrap();
+        assert!(migperf::cluster::validate_tenants(&ts, 1).is_err(), "NaN weight");
+    }
+
+    #[test]
+    fn overload_flags_default_to_disabled() {
+        let p = parse_overload_policy(&fleet_args("")).unwrap();
+        assert_eq!(p, migperf::cluster::OverloadPolicy::none());
+        assert!(p.is_disabled());
+    }
+
+    #[test]
+    fn overload_flags_parse_and_zero_disables_thresholds() {
+        let p = parse_overload_policy(&fleet_args(
+            "--queue-cap 8 --deadline-mult 2.5 --shed drop --brownout 0.2 \
+             --breaker 0.5 --breaker-probes 4",
+        ))
+        .unwrap();
+        assert_eq!(p.queue_cap, 8);
+        assert_eq!(p.deadline_mult, 2.5);
+        assert_eq!(p.shed, migperf::cluster::ShedDiscipline::DropOldest);
+        assert_eq!(p.brownout_threshold, 0.2);
+        assert_eq!(p.breaker_threshold, 0.5);
+        assert_eq!(p.breaker_probes, 4);
+        let off = parse_overload_policy(&fleet_args("--brownout 0 --breaker 0")).unwrap();
+        assert!(off.brownout_threshold.is_infinite(), "0 means off");
+        assert!(off.breaker_threshold.is_infinite(), "0 means off");
+    }
+
+    #[test]
+    fn malformed_overload_flags_error_instead_of_panicking() {
+        for bad in [
+            "--queue-cap -1",
+            "--queue-cap many",
+            "--deadline-mult -2",
+            "--deadline-mult inf",
+            "--deadline-mult soon",
+            "--shed everything",
+            "--brownout -0.5",
+            "--brownout 1.5",
+            "--brownout NaN",
+            "--breaker -1",
+            "--breaker 2",
+            "--breaker 0.5 --breaker-probes 0",
+            "--breaker-probes -3",
+        ] {
+            let res = parse_overload_policy(&fleet_args(bad));
+            assert!(res.is_err(), "'{bad}' must be rejected, got {res:?}");
+        }
+    }
 }

@@ -255,7 +255,8 @@ pub fn fault_records_to_json(rows: &[FaultRecord]) -> Json {
 
 /// CSV header used by [`tenant_outcomes_to_csv`].
 pub const TENANT_CSV_HEADER: &str = "run,tenant,weight,arrived,completed,slo_violations,\
-failed,lost_in_crash,retried,goodput_rps,norm_goodput_rps";
+failed,lost_in_crash,retried,shed_deadline,shed_capacity,shed_brownout,goodput_rps,\
+norm_goodput_rps";
 
 /// Serialize per-tenant fleet accounting as CSV (with header). Each row
 /// carries its run label so a whole sweep's tenant tables can share one
@@ -266,7 +267,7 @@ pub fn tenant_outcomes_to_csv(rows: &[(String, TenantOutcome)]) -> String {
     for (run, t) in rows {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{:.6},{:.6}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{:.6},{:.6}",
             csv_escape(run),
             csv_escape(&t.name),
             t.weight,
@@ -276,6 +277,9 @@ pub fn tenant_outcomes_to_csv(rows: &[(String, TenantOutcome)]) -> String {
             t.failed,
             t.lost_in_crash,
             t.retried,
+            t.shed_deadline,
+            t.shed_capacity,
+            t.shed_brownout,
             t.goodput_rps,
             t.norm_goodput_rps,
         );
@@ -298,6 +302,9 @@ pub fn tenant_outcome_to_json(t: &TenantOutcome) -> Json {
         ("failed", (t.failed as i64).into()),
         ("lost_in_crash", (t.lost_in_crash as i64).into()),
         ("retried", (t.retried as i64).into()),
+        ("shed_deadline", (t.shed_deadline as i64).into()),
+        ("shed_capacity", (t.shed_capacity as i64).into()),
+        ("shed_brownout", (t.shed_brownout as i64).into()),
         ("goodput_rps", t.goodput_rps.into()),
         ("slo_violation_frac", t.slo_violation_frac.into()),
         ("norm_goodput_rps", t.norm_goodput_rps.into()),
@@ -567,6 +574,9 @@ mod tests {
             failed: 6,
             lost_in_crash: 4,
             retried: 12,
+            shed_deadline: 7,
+            shed_capacity: 2,
+            shed_brownout: 1,
             goodput_rps: 9.5,
             slo_violation_frac: 40.0 / 990.0,
             norm_goodput_rps: 9.5 / 3.0,
@@ -574,7 +584,10 @@ mod tests {
         let csv = tenant_outcomes_to_csv(&[("rolling/seed2024".to_string(), t.clone())]);
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines[0], TENANT_CSV_HEADER);
-        assert!(lines[1].starts_with("rolling/seed2024,gold,3,1000,990,40,6,4,12,"), "{csv}");
+        assert!(
+            lines[1].starts_with("rolling/seed2024,gold,3,1000,990,40,6,4,12,7,2,1,"),
+            "{csv}"
+        );
         let doc = tenant_outcomes_to_json(std::slice::from_ref(&t));
         let parsed = json::parse(&doc.to_string()).unwrap();
         let row = &parsed.as_arr().unwrap()[0];
@@ -583,6 +596,9 @@ mod tests {
         assert_eq!(row.get("classes").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(row.get("arrived").unwrap().as_i64(), Some(1000));
         assert_eq!(row.get("lost_in_crash").unwrap().as_i64(), Some(4));
+        assert_eq!(row.get("shed_deadline").unwrap().as_i64(), Some(7));
+        assert_eq!(row.get("shed_capacity").unwrap().as_i64(), Some(2));
+        assert_eq!(row.get("shed_brownout").unwrap().as_i64(), Some(1));
         assert_eq!(row.get("goodput_rps").unwrap().as_f64(), Some(9.5));
         assert_eq!(
             tenant_outcomes_to_csv(&[]).lines().count(),

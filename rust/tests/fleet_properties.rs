@@ -14,11 +14,17 @@
 //! spans the outage; (g) multi-tenant accounting conserves per tenant
 //! (`Σ_tenant completed + failed + lost = arrived`, per tenant and in
 //! total) across the router × mode × fault grid, and `--tenants` sweeps
-//! are bitwise-deterministic at 1/2/4/16 workers.
+//! are bitwise-deterministic at 1/2/4/16 workers; (h) overload
+//! protection extends conservation to
+//! `completed + failed + lost_in_crash + shed_overload = arrived`
+//! across the shed-discipline × fault × tenant × router grid, shed
+//! sweeps stay bitwise-deterministic at 1/2/4/16 workers, and work
+//! queued on a GPU that crashes mid-drain and recovers is dispatched
+//! exactly once.
 
 use migperf::cluster::{
-    FaultInjection, FaultPlan, FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass,
-    RouterKind, Tenant,
+    FaultInjection, FaultPlan, FleetConfig, FleetPolicyKind, OverloadPolicy, RepartitionMode,
+    RequestClass, RouterKind, ShedDiscipline, Tenant,
 };
 use migperf::mig::gpu::GpuModel;
 use migperf::mig::placement::PlacementEngine;
@@ -59,6 +65,7 @@ fn diurnal_fleet(
         window_s: 10.0,
         rho_max: 0.75,
         faults: FaultPlan::none(),
+        overload: OverloadPolicy::none(),
         seed,
     }
 }
@@ -85,6 +92,7 @@ fn poisson_fleet(n: usize, rate_per_class: f64, seed: u64) -> FleetConfig {
         window_s: 10.0,
         rho_max: 0.75,
         faults: FaultPlan::none(),
+        overload: OverloadPolicy::none(),
         seed,
     }
 }
@@ -601,5 +609,204 @@ fn fleet_demand_plans_pass_placement_rules() {
             assert!(!seen[a.instance], "instance double-booked on gpu {g}: {:?}", plan.assignments);
             seen[a.instance] = true;
         }
+    }
+}
+
+/// The shed-policy axis for the overload grid: one entry per mechanism
+/// plus the composed disciplines, all aggressive enough to actually
+/// shed under the diurnal peak.
+fn shed_policies() -> Vec<(&'static str, OverloadPolicy)> {
+    vec![
+        (
+            "reject-cap2-deadline",
+            OverloadPolicy { queue_cap: 2, deadline_mult: 2.0, ..OverloadPolicy::none() },
+        ),
+        (
+            "drop-cap2",
+            OverloadPolicy {
+                queue_cap: 2,
+                shed: ShedDiscipline::DropOldest,
+                ..OverloadPolicy::none()
+            },
+        ),
+        ("deadline-only", OverloadPolicy { deadline_mult: 1.0, ..OverloadPolicy::none() }),
+        (
+            "brownout",
+            OverloadPolicy { queue_cap: 1, brownout_threshold: 0.05, ..OverloadPolicy::none() },
+        ),
+        (
+            "breaker",
+            OverloadPolicy { queue_cap: 1, breaker_threshold: 0.5, ..OverloadPolicy::none() },
+        ),
+    ]
+}
+
+/// (h1) Extended conservation across the shed-discipline × fault ×
+/// tenant × router grid: every admitted request ends in exactly one of
+/// {completed, failed, lost_in_crash, shed_overload}, per tenant and in
+/// aggregate, and the shed total splits exactly by cause.
+#[test]
+fn extended_conservation_holds_across_the_shed_fault_tenant_router_grid() {
+    let plans: Vec<(&str, FaultPlan)> = vec![
+        ("none", FaultPlan::none()),
+        (
+            "explicit",
+            FaultPlan {
+                injections: vec![
+                    FaultInjection { t: 50.0, gpu: 0, class: None, down_s: 25.0 },
+                    FaultInjection { t: 120.0, gpu: 1, class: Some(0), down_s: 30.0 },
+                ],
+                retry_budget: 1,
+                storm_guard: u64::MAX,
+            },
+        ),
+    ];
+    for router in all_routers() {
+        for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+            for (fname, plan) in &plans {
+                for (pname, policy) in shed_policies() {
+                    let mut cfg = diurnal_fleet(2, reactive(), router.clone(), mode, 11);
+                    cfg.tenants = gold_bronze();
+                    cfg.faults = plan.clone();
+                    cfg.overload = policy;
+                    let out = cfg.run().unwrap();
+                    let tag = format!("{}/{}/{fname}/{pname}", router.name(), mode.name());
+                    assert!(out.arrived > 500, "{tag}: arrived {}", out.arrived);
+                    assert_eq!(
+                        out.shed_overload,
+                        out.shed_deadline + out.shed_capacity + out.shed_brownout,
+                        "{tag}: the shed total must split exactly by cause"
+                    );
+                    assert_eq!(
+                        out.completed
+                            + out.failed_requests
+                            + out.lost_in_crash
+                            + out.shed_overload,
+                        out.arrived,
+                        "{tag}: extended conservation must hold"
+                    );
+                    assert!(out.routed <= out.arrived, "{tag}: routed {} > arrived", out.routed);
+                    let (mut arr, mut comp, mut shed) = (0u64, 0u64, 0u64);
+                    for t in &out.tenants {
+                        let t_shed = t.shed_deadline + t.shed_capacity + t.shed_brownout;
+                        assert_eq!(
+                            t.completed + t.failed + t.lost_in_crash + t_shed,
+                            t.arrived,
+                            "{tag}/{}: per-tenant extended conservation must hold",
+                            t.name
+                        );
+                        arr += t.arrived;
+                        comp += t.completed;
+                        shed += t_shed;
+                    }
+                    assert_eq!(arr, out.arrived, "{tag}: tenant arrivals partition the total");
+                    assert_eq!(comp, out.completed, "{tag}");
+                    assert_eq!(shed, out.shed_overload, "{tag}: tenant sheds partition the total");
+                }
+            }
+        }
+    }
+}
+
+/// (h2) `--shed` sweeps are bitwise-deterministic at 1/2/4/16 workers:
+/// an overload policy is config data exactly like a crash schedule, so
+/// shed counters, breaker state timings and the latency tail reduce
+/// identically at any worker count.
+#[test]
+fn shed_sweep_bitwise_deterministic_across_worker_counts() {
+    let crash = FaultPlan {
+        injections: vec![FaultInjection { t: 60.0, gpu: 0, class: None, down_s: 30.0 }],
+        retry_budget: 1,
+        storm_guard: u64::MAX,
+    };
+    let mut grid: Vec<FleetConfig> = Vec::new();
+    for (_, policy) in shed_policies() {
+        for seed in [2024u64, 2025u64] {
+            let router = RouterKind::WeightedFair;
+            let mut cfg = diurnal_fleet(2, reactive(), router, RepartitionMode::Rolling, seed);
+            cfg.tenants = gold_bronze();
+            cfg.faults = crash.clone();
+            cfg.overload = policy;
+            grid.push(cfg);
+        }
+    }
+    let baseline = sweep::run_fleet(&SweepEngine::new(1), &grid).unwrap();
+    for workers in [2usize, 4, 16] {
+        let outs = sweep::run_fleet(&SweepEngine::new(workers), &grid).unwrap();
+        assert_eq!(outs.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&outs) {
+            assert_eq!(a.arrived, b.arrived, "workers={workers}");
+            assert_eq!(a.completed, b.completed, "workers={workers}");
+            assert_eq!(a.shed_overload, b.shed_overload, "workers={workers}");
+            assert_eq!(a.shed_deadline, b.shed_deadline, "workers={workers}");
+            assert_eq!(a.shed_capacity, b.shed_capacity, "workers={workers}");
+            assert_eq!(a.shed_brownout, b.shed_brownout, "workers={workers}");
+            assert_eq!(a.breaker_trips, b.breaker_trips, "workers={workers}");
+            assert_eq!(
+                a.breaker_open_s.to_bits(),
+                b.breaker_open_s.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "workers={workers}");
+            assert_eq!(
+                a.pooled.p99_latency_ms.to_bits(),
+                b.pooled.p99_latency_ms.to_bits(),
+                "workers={workers}"
+            );
+            for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+                assert_eq!(ta.shed_deadline, tb.shed_deadline, "workers={workers}");
+                assert_eq!(ta.shed_capacity, tb.shed_capacity, "workers={workers}");
+                assert_eq!(ta.shed_brownout, tb.shed_brownout, "workers={workers}");
+            }
+        }
+    }
+    let shed_total: u64 = baseline.iter().map(|o| o.shed_overload).sum();
+    assert!(shed_total > 0, "the sweep must actually shed for (h2) to be non-vacuous");
+}
+
+/// (h3 / defensive-restart audit) A GPU that crashes *during its own
+/// drain* and then recovers must dispatch the surviving queued work
+/// exactly once — no double service, no vanish. The crash time is
+/// derived from the fault-free run's first repartition decision, so the
+/// fault provably lands mid-drain (events before the crash are
+/// bit-identical across the two runs).
+#[test]
+fn crash_during_drain_then_recovery_dispatches_work_exactly_once() {
+    for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+        let clean = diurnal_fleet(2, reactive(), RouterKind::LeastLoaded, mode, 5).run().unwrap();
+        assert!(
+            !clean.decisions.is_empty(),
+            "{}: the diurnal peak must force a repartition",
+            mode.name()
+        );
+        let d = &clean.decisions[0];
+        assert!(d.downtime_s > 0.0, "{}: drains take time", mode.name());
+        // Strictly inside (decision, resume): the crash interrupts the
+        // drain/churn on the same GPU the decision targeted.
+        let crash_t = d.t + 0.5 * d.downtime_s;
+        let mut cfg = diurnal_fleet(2, reactive(), RouterKind::LeastLoaded, mode, 5);
+        cfg.faults = FaultPlan {
+            injections: vec![FaultInjection { t: crash_t, gpu: d.gpu, class: None, down_s: 20.0 }],
+            retry_budget: 3,
+            storm_guard: u64::MAX,
+        };
+        let out = cfg.run().unwrap();
+        let tag = mode.name();
+        assert_eq!(out.gpu_crashes, 1, "{tag}");
+        // Double dispatch would overshoot arrived; a vanished request
+        // would undershoot it. Either breaks the equality.
+        assert_eq!(
+            out.completed + out.failed_requests + out.lost_in_crash,
+            out.arrived,
+            "{tag}: crash-during-drain must conserve requests"
+        );
+        assert_eq!(
+            out.completed, out.arrived,
+            "{tag}: with a healthy sibling and budget 3, everything is served exactly once"
+        );
+        let per_class_completed: u64 = out.per_class.iter().map(|s| s.completed).sum();
+        assert_eq!(per_class_completed, out.arrived, "{tag}: no double service per class");
+        let per_gpu_completed: u64 = out.per_gpu.iter().map(|s| s.completed).sum();
+        assert_eq!(per_gpu_completed, out.arrived, "{tag}: no double service per GPU");
     }
 }
