@@ -24,6 +24,10 @@
 //!    on SLO-attaining goodput while strictly lowering the p99 tail,
 //!    with the extended conservation invariant
 //!    (completed + failed + lost + shed = arrived) at every level.
+//! 6. **telemetry** — the observability layer must be free when off
+//!    (outcomes bit-identical to a traced run), deterministic when on
+//!    (serial-vs-parallel payload checksums bit-equal), and exact (every
+//!    windowed counter series sums to its `FleetOutcome` total).
 //!
 //! The whole grid runs serial and parallel through the sweep engine and
 //! asserts bit-identical checksums (the determinism contract; the
@@ -37,7 +41,7 @@ use std::time::Instant;
 
 use migperf::cluster::{
     FaultInjection, FaultPlan, FleetConfig, FleetOutcome, FleetPolicyKind, OverloadPolicy,
-    RepartitionMode, RequestClass, RouterKind, ShedDiscipline, Tenant,
+    RepartitionMode, RequestClass, RouterKind, ShedDiscipline, TelemetryConfig, Tenant,
 };
 use migperf::mig::gpu::GpuModel;
 use migperf::models::zoo;
@@ -86,6 +90,7 @@ fn scenario(
         rho_max: 0.75,
         faults: FaultPlan::none(),
         overload: OverloadPolicy::none(),
+        telemetry: TelemetryConfig::off(),
         seed,
     }
 }
@@ -534,6 +539,109 @@ fn main() {
          (deadline {dl_p99:.1} ms vs baseline {base_p99:.1} ms)"
     );
 
+    // Telemetry: the observability layer must be free when off (outcomes
+    // bit-identical to a traced run), deterministic when on (serial vs
+    // parallel payload checksums bit-equal), and exact (every windowed
+    // counter series sums to its outcome total). Faults + deadlines keep
+    // the shed/retry series non-trivial.
+    let mk_tel = |telemetry: TelemetryConfig, seed: u64| {
+        let mut cfg = scenario(
+            versus_size,
+            reactive.clone(),
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            seed,
+            duration_s,
+            period_s,
+            window_s,
+        );
+        cfg.faults =
+            FaultPlan::from_mtbf(versus_size, duration_s, duration_s / 2.0, mttr_s, seed ^ 0x7e1e);
+        cfg.overload = OverloadPolicy { deadline_mult: 1.0, ..OverloadPolicy::none() };
+        cfg.telemetry = telemetry;
+        cfg
+    };
+    let traced = TelemetryConfig { enabled: true, interval_s: 1.0, trace_sample: 4 };
+    let started = Instant::now();
+    let off_out = mk_tel(TelemetryConfig::off(), seeds[0]).run().expect("telemetry-off run");
+    let tel_off_wall = started.elapsed().as_secs_f64();
+    let started = Instant::now();
+    let on_out = mk_tel(traced, seeds[0]).run().expect("telemetry-on run");
+    let tel_on_wall = started.elapsed().as_secs_f64();
+    assert!(off_out.telemetry.is_none(), "telemetry-off runs must carry no payload");
+    let off_identical = checksum(std::slice::from_ref(&off_out)).to_bits()
+        == checksum(std::slice::from_ref(&on_out)).to_bits()
+        && off_out.arrived == on_out.arrived
+        && off_out.completed == on_out.completed
+        && off_out.slo_violations == on_out.slo_violations
+        && off_out.shed_overload == on_out.shed_overload
+        && off_out.retried_requests == on_out.retried_requests
+        && off_out.lost_in_crash == on_out.lost_in_crash
+        && off_out.train_steps == on_out.train_steps;
+    assert!(off_identical, "telemetry must not perturb the simulation");
+    let tel = on_out.telemetry.as_ref().expect("traced run carries a payload");
+    assert!(!tel.series.all().is_empty(), "traced run must collect timelines");
+    assert!(!tel.spans.is_empty(), "traced run must collect spans");
+    let sum_series = |name: &str| -> u64 {
+        tel.series
+            .all()
+            .iter()
+            .filter(|s| s.name == name)
+            .flat_map(|s| s.points())
+            .map(|p| p.value as u64)
+            .sum()
+    };
+    let reconciliations = [
+        ("fleet_window_arrivals", sum_series("fleet_window_arrivals"), on_out.arrived),
+        ("fleet_window_routed", sum_series("fleet_window_routed"), on_out.routed),
+        ("fleet_window_completed", sum_series("fleet_window_completed"), on_out.completed),
+        ("fleet_window_violations", sum_series("fleet_window_violations"), on_out.slo_violations),
+        (
+            "fleet_window_shed_deadline",
+            sum_series("fleet_window_shed_deadline"),
+            on_out.shed_deadline,
+        ),
+        (
+            "fleet_window_shed_capacity",
+            sum_series("fleet_window_shed_capacity"),
+            on_out.shed_capacity,
+        ),
+        (
+            "fleet_window_shed_brownout",
+            sum_series("fleet_window_shed_brownout"),
+            on_out.shed_brownout,
+        ),
+        ("fleet_window_train_steps", sum_series("fleet_window_train_steps"), on_out.train_steps),
+    ];
+    for (name, got, want) in reconciliations {
+        assert_eq!(got, want, "{name} must sum exactly to its FleetOutcome total");
+    }
+    let tel_grid: Vec<FleetConfig> = seeds.iter().map(|&s| mk_tel(traced, s)).collect();
+    let started = Instant::now();
+    let tel_serial_outs = sweep::run_fleet(&serial, &tel_grid).expect("telemetry grid");
+    let tel_serial_wall = started.elapsed().as_secs_f64();
+    let started = Instant::now();
+    let tel_parallel_outs = sweep::run_fleet(&parallel, &tel_grid).expect("telemetry grid");
+    let tel_parallel_wall = started.elapsed().as_secs_f64();
+    let payload_checksum = |outs: &[FleetOutcome]| -> u64 {
+        outs.iter().fold(0xcbf2_9ce4_8422_2325u64, |h, o| {
+            let c = o.telemetry.as_ref().map_or(0, |t| t.checksum());
+            (h ^ c).wrapping_mul(0x0000_0100_0000_01b3)
+        })
+    };
+    let tel_checksum = payload_checksum(&tel_serial_outs);
+    assert_eq!(
+        tel_checksum,
+        payload_checksum(&tel_parallel_outs),
+        "telemetry payloads (timelines + traces) must be bit-identical at any worker count"
+    );
+    println!(
+        "\ntelemetry (fleet size {versus_size}, 1s interval, 1-in-4 spans): off {tel_off_wall:.2}s \
+         vs on {tel_on_wall:.2}s; {} series, {} spans, payload checksum {tel_checksum:016x}",
+        tel.series.all().len(),
+        tel.spans.len()
+    );
+
     let rows: Vec<Json> = grid
         .iter()
         .zip(&outs)
@@ -729,6 +837,23 @@ fn main() {
                             .collect(),
                     ),
                 ),
+            ]),
+        ),
+        (
+            "telemetry",
+            Json::obj(vec![
+                ("fleet_size", Json::Num(versus_size as f64)),
+                ("interval_s", Json::Num(1.0)),
+                ("trace_sample", Json::Num(4.0)),
+                ("off_identical", Json::Bool(off_identical)),
+                ("reconciliation_exact", Json::Bool(true)),
+                ("series", Json::Num(tel.series.all().len() as f64)),
+                ("spans", Json::Num(tel.spans.len() as f64)),
+                ("payload_checksum", Json::Str(format!("{tel_checksum:016x}"))),
+                ("off_wall_s", Json::Num(tel_off_wall)),
+                ("on_wall_s", Json::Num(tel_on_wall)),
+                ("sweep_serial_wall_s", Json::Num(tel_serial_wall)),
+                ("sweep_parallel_wall_s", Json::Num(tel_parallel_wall)),
             ]),
         ),
         ("rows", Json::Arr(rows)),

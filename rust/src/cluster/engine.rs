@@ -65,6 +65,7 @@ use super::faults::{FaultPlan, FaultRecord};
 use super::overload::{OverloadGuard, OverloadPolicy, ShedCause, ShedDiscipline};
 use super::policy::{FleetCtx, FleetObs, FleetPolicyKind, GpuObs};
 use super::router::{GpuHealth, RoutePolicy, RouterKind};
+use super::telemetry::{FleetRecorder, FleetTelemetry, TelemetryConfig};
 use super::tenancy::{jain_index, tenant_of_classes, validate_tenants, Tenant, TenantOutcome};
 
 /// One fleet-wide request class: a workload, its SLO, and the aggregate
@@ -146,6 +147,11 @@ pub struct FleetConfig {
     /// everything and keeps the engine byte-identical to the
     /// unprotected path).
     pub overload: OverloadPolicy,
+    /// Observability: windowed time-series, DCGM counter timelines and
+    /// sampled lifecycle spans ([`TelemetryConfig::off`] disables
+    /// everything; the recorder is strictly observational either way,
+    /// so the simulation results are identical on and off).
+    pub telemetry: TelemetryConfig,
     /// PRNG seed (class arrival streams derive per-class seeds from it).
     pub seed: u64,
 }
@@ -312,6 +318,9 @@ pub struct FleetOutcome {
     pub layouts: Vec<Vec<Layout>>,
     /// Per-repartition decision log.
     pub decisions: Vec<FleetDecision>,
+    /// Observability payload (windowed series + sampled spans); `None`
+    /// when the run's [`TelemetryConfig`] was off.
+    pub telemetry: Option<FleetTelemetry>,
 }
 
 /// Completion and reconfiguration events carry the epoch they were
@@ -336,13 +345,16 @@ enum Phase {
     Down,
 }
 
-/// One queued request: its original arrival time (never re-stamped, so
-/// queueing latency spans outages), how many crash retries it has
-/// already consumed, and its SLO-derived deadline (`INFINITY` when
-/// deadlines are disabled; stamped once at arrival, so it survives
-/// migration, stranding and crash retries).
+/// One queued request: its monotone arrival id (telemetry span key and
+/// trace-sampling anchor; stable across retries and migrations), its
+/// original arrival time (never re-stamped, so queueing latency spans
+/// outages), how many crash retries it has already consumed, and its
+/// SLO-derived deadline (`INFINITY` when deadlines are disabled; stamped
+/// once at arrival, so it survives migration, stranding and crash
+/// retries).
 #[derive(Debug, Clone, Copy)]
 struct Req {
+    id: u64,
     arrived: f64,
     tries: u32,
     deadline: f64,
@@ -404,6 +416,9 @@ struct GpuState {
     svc_est: Vec<StepEstimate>,
     svc_power: Vec<f64>,
     train_est: Option<StepEstimate>,
+    /// Power draw of the training instance under the current layout, W
+    /// (0 when no training job; feeds the train DCGM POWER series).
+    train_power: f64,
     pending: Option<PendingReconfig>,
 }
 
@@ -419,19 +434,28 @@ impl GpuState {
     }
 }
 
+/// Move the queue head into service. `est`/`power_w` are the replica's
+/// current step estimate and power draw (copied out by the caller to
+/// avoid aliasing the GPU state); the telemetry recorder observes the
+/// serve-start and drives the instance's DCGM counters busy.
+#[allow(clippy::too_many_arguments)] // DES plumbing, not an API
 fn start_replica(
     des: &mut Des<Ev>,
     r: &mut Replica,
+    tel: &mut FleetRecorder,
     gpu: usize,
     class: usize,
     now: f64,
-    service_s: f64,
+    est: StepEstimate,
+    power_w: f64,
 ) {
     debug_assert!(!r.busy, "replica g{gpu}c{class} already busy");
     debug_assert!(!r.down, "replica g{gpu}c{class} is crashed");
     r.busy = true;
     r.busy_since = now;
-    des.schedule_in(service_s, Ev::ServeDone { gpu, class, epoch: r.epoch });
+    des.schedule_in(est.seconds, Ev::ServeDone { gpu, class, epoch: r.epoch });
+    let head = r.queue.front().map_or(0, |q| q.id);
+    tel.on_serve_start(now, head, gpu, class, est, power_w);
 }
 
 /// Drain barrier for one GPU: once every replica and the training job are
@@ -482,13 +506,25 @@ fn route_request(
 
 /// Dump one replica's queued and in-flight requests at a crash, staling
 /// any pending `ServeDone` and crediting the partial busy time to the
-/// window counters.
-fn flush_replica(r: &mut Replica, class: usize, now: f64, dumped: &mut Vec<(usize, Req)>) {
+/// window counters. The recorder marks the in-flight head stale and
+/// zeroes the instance's DCGM counters.
+fn flush_replica(
+    r: &mut Replica,
+    tel: &mut FleetRecorder,
+    gpu: usize,
+    class: usize,
+    now: f64,
+    dumped: &mut Vec<(usize, Req)>,
+) {
     if r.busy {
         r.window_busy_s += now - r.busy_since;
         r.busy = false;
         r.epoch += 1;
+        if let Some(head) = r.queue.front() {
+            tel.on_stale(now, head.id, class, gpu);
+        }
     }
+    tel.on_replica_down(now, gpu, class);
     for req in r.queue.drain(..) {
         dumped.push((class, req));
     }
@@ -511,15 +547,23 @@ enum Dispatch {
 /// *idle* replica's queue — they are shed, never served. The in-service
 /// head is exempt by construction (callers only filter idle replicas,
 /// right before starting service).
-fn shed_expired(guard: &mut OverloadGuard, r: &mut Replica, gpu: usize, class: usize, now: f64) {
+fn shed_expired(
+    guard: &mut OverloadGuard,
+    r: &mut Replica,
+    tel: &mut FleetRecorder,
+    gpu: usize,
+    class: usize,
+    now: f64,
+) {
     if !guard.deadlines_enabled() {
         return;
     }
     debug_assert!(!r.busy, "deadline filter on a busy replica g{gpu}c{class}");
     while let Some(front) = r.queue.front() {
         if front.deadline < now {
-            r.queue.pop_front();
+            let expired = r.queue.pop_front().expect("front exists");
             guard.note_shed(Some(gpu), class, ShedCause::Deadline);
+            tel.on_shed(now, expired.id, class, Some(gpu), ShedCause::Deadline);
         } else {
             break;
         }
@@ -538,6 +582,7 @@ fn dispatch_req(
     gpus_state: &mut [GpuState],
     mode: RepartitionMode,
     guard: &mut OverloadGuard,
+    tel: &mut FleetRecorder,
     class: usize,
     req: Req,
     now: f64,
@@ -548,35 +593,44 @@ fn dispatch_req(
         return Dispatch::Stranded;
     };
     guard.note_route(g);
+    tel.on_route(now, req.id, class, g);
     let gs = &mut gpus_state[g];
     let cap = guard.queue_cap();
     if cap > 0 && gs.replicas[class].queue.len() >= cap {
         guard.note_shed(Some(g), class, ShedCause::Capacity);
         match guard.discipline() {
-            ShedDiscipline::RejectNewest => return Dispatch::Shed,
+            ShedDiscipline::RejectNewest => {
+                tel.on_shed(now, req.id, class, Some(g), ShedCause::Capacity);
+                return Dispatch::Shed;
+            }
             ShedDiscipline::DropOldest => {
                 // front = in service when busy: drop the oldest *waiting*
                 // request. A cap-1 queue whose head is in service has
                 // nothing waiting, so the newcomer is rejected instead.
                 let drop_at = usize::from(gs.replicas[class].busy);
                 if drop_at < gs.replicas[class].queue.len() {
-                    gs.replicas[class].queue.remove(drop_at);
+                    let victim =
+                        gs.replicas[class].queue.remove(drop_at).expect("index checked");
+                    tel.on_shed(now, victim.id, class, Some(g), ShedCause::Capacity);
                 } else {
+                    tel.on_shed(now, req.id, class, Some(g), ShedCause::Capacity);
                     return Dispatch::Shed;
                 }
             }
         }
     }
     gs.replicas[class].queue.push_back(req);
+    tel.on_enqueue(now, req.id, class, g);
     if gs.phase == Phase::Running && !gs.replicas[class].busy {
         // The queue may hold work that waited out a drain or an outage;
         // expired entries are shed before anything enters service. The
         // newcomer cannot be older than its own deadline at arrival, but
         // re-dispatched (migrated/retried/stranded) requests can.
-        shed_expired(guard, &mut gs.replicas[class], g, class, now);
+        shed_expired(guard, &mut gs.replicas[class], tel, g, class, now);
         if !gs.replicas[class].queue.is_empty() {
-            let service_s = gs.svc_est[class].seconds;
-            start_replica(des, &mut gs.replicas[class], g, class, now, service_s);
+            let est = gs.svc_est[class];
+            let power_w = gs.svc_power[class];
+            start_replica(des, &mut gs.replicas[class], tel, g, class, now, est, power_w);
         }
     }
     Dispatch::Placed(g)
@@ -621,6 +675,7 @@ fn drain_stranded(
     gpus_state: &mut [GpuState],
     mode: RepartitionMode,
     guard: &mut OverloadGuard,
+    tel: &mut FleetRecorder,
     stranded: &mut [VecDeque<Req>],
     t: f64,
     available: &mut Vec<bool>,
@@ -636,7 +691,8 @@ fn drain_stranded(
             stranded[c].push_back(req);
             continue;
         }
-        match dispatch_req(des, router, gpus_state, mode, guard, c, req, t, available, depth) {
+        match dispatch_req(des, router, gpus_state, mode, guard, tel, c, req, t, available, depth)
+        {
             // A capacity shed is terminal (already counted), not a block:
             // requests behind it may still find room.
             Dispatch::Placed(_) | Dispatch::Shed => {}
@@ -646,6 +702,48 @@ fn drain_stranded(
             }
         }
     }
+}
+
+/// Flush the windowed telemetry series at `t`. Runs right after
+/// `OverloadGuard::on_tick` and *before* the engine resets the window
+/// counters (and once more after the event loop, so the residual
+/// backlog window is captured) — every counter increment is observed in
+/// exactly one flush, which is why each windowed series sums exactly to
+/// its `FleetOutcome` total. Shed series diff the guard's cumulative
+/// per-class counters, so tick-time sheds (migration-induced capacity
+/// drops happen after this snapshot) telescope into the next flush
+/// without losing a count.
+fn telemetry_window_flush(
+    tel: &mut FleetRecorder,
+    t: f64,
+    gpus_state: &[GpuState],
+    guard: &OverloadGuard,
+) {
+    if !tel.timelines_enabled() {
+        return;
+    }
+    tel.window_begin(t);
+    for (g, gs) in gpus_state.iter().enumerate() {
+        for (c, r) in gs.replicas.iter().enumerate() {
+            tel.window_replica(
+                g,
+                c,
+                r.queue.len(),
+                r.window_busy_s,
+                r.window_arrivals,
+                r.window_completed,
+                r.window_violations,
+            );
+        }
+        tel.window_train(g, gs.window_train_steps);
+        tel.window_breaker(g, guard.breaker_state(g));
+    }
+    tel.window_end(
+        guard.brownout_level(),
+        guard.shed_deadline_per_class(),
+        guard.shed_capacity_per_class(),
+        guard.shed_brownout_per_class(),
+    );
 }
 
 impl FleetConfig {
@@ -699,6 +797,7 @@ impl FleetConfig {
             .validate(self.gpus.len(), self.classes.len(), self.duration_s)
             .map_err(FleetError::Invalid)?;
         self.overload.validate().map_err(FleetError::Invalid)?;
+        self.telemetry.validate().map_err(FleetError::Invalid)?;
         self.cost.validate().map_err(FleetError::Invalid)
     }
 
@@ -717,14 +816,17 @@ impl FleetConfig {
         (ws, class_workloads)
     }
 
-    /// Resolve one GPU's plan into per-class step estimates + power draws
-    /// and the training estimate.
+    /// Resolve one GPU's plan into per-class step estimates + power
+    /// draws, the training estimate, and the training power draw (0 when
+    /// no training job — telemetry feeds it into the train instance's
+    /// DCGM POWER series).
+    #[allow(clippy::type_complexity)]
     fn materialize_gpu(
         &self,
         sched: &Scheduler,
         plan: &RatePlan,
         class_base: usize,
-    ) -> Result<(Vec<StepEstimate>, Vec<f64>, Option<StepEstimate>), FleetError> {
+    ) -> Result<(Vec<StepEstimate>, Vec<f64>, Option<StepEstimate>, f64), FleetError> {
         let gpu = sched.gpu;
         let mut svc_est = Vec::with_capacity(self.classes.len());
         let mut svc_power = Vec::with_capacity(self.classes.len());
@@ -737,17 +839,19 @@ impl FleetConfig {
             svc_power.push(sched.energy.power_w(&res, est.gract));
             svc_est.push(est);
         }
-        let train_est = match &self.train {
+        let (train_est, train_power) = match &self.train {
             Some(spec) => {
                 let inst = plan.instance_of(0).ok_or_else(|| {
                     FleetError::Infeasible("training missing from the plan".into())
                 })?;
                 let res = ExecResource::from_gi(gpu, plan.layout.placements[inst].profile);
-                Some(sched.perf.step(&res, &spec.step_cost())?)
+                let est = sched.perf.step(&res, &spec.step_cost())?;
+                let power = sched.energy.power_w(&res, est.gract);
+                (Some(est), power)
             }
-            None => None,
+            None => (None, 0.0),
         };
-        Ok((svc_est, svc_power, train_est))
+        Ok((svc_est, svc_power, train_est, train_power))
     }
 
     /// Run the fleet simulation to completion.
@@ -798,7 +902,7 @@ impl FleetConfig {
             placement_engines[g]
                 .check_layout(&plan.layout.placements)
                 .map_err(|e| FleetError::Infeasible(e.to_string()))?;
-            let (svc_est, svc_power, train_est) =
+            let (svc_est, svc_power, train_est, train_power) =
                 self.materialize_gpu(&schedulers[g], plan, class_base)?;
             gpus_state.push(GpuState {
                 phase: Phase::Running,
@@ -810,6 +914,7 @@ impl FleetConfig {
                 svc_est,
                 svc_power,
                 train_est,
+                train_power,
                 pending: None,
             });
         }
@@ -830,6 +935,25 @@ impl FleetConfig {
         // vacuous, so the run is byte-identical to the unprotected path.
         let slo_ms: Vec<f64> = self.classes.iter().map(|c| c.slo_ms).collect();
         let mut guard = OverloadGuard::new(self.overload, &slo_ms, &tenants_eff, n_gpus);
+        // Telemetry recorder: strictly observational (never feeds back
+        // into routing, shedding or scheduling), so the simulation is
+        // bit-identical with telemetry on or off; when off every hook
+        // early-returns and no payload is allocated.
+        let mut tel = FleetRecorder::new(
+            &self.telemetry,
+            n_gpus,
+            n_classes,
+            &tenants_eff,
+            &tenant_of,
+            self.train.is_some(),
+        );
+        // Monotone arrival ids: the span key and trace-sampling anchor.
+        // Assigned unconditionally (they never influence the DES), so
+        // traced and untraced runs see identical event sequences.
+        let mut next_req_id: u64 = 0;
+        // Latest event time: the final telemetry flush and DCGM horizon
+        // must cover the backlog tail served past `duration_s`.
+        let mut end_t: f64 = 0.0;
 
         let mut collectors: Vec<Vec<MetricsCollector>> = (0..n_gpus)
             .map(|g| {
@@ -883,6 +1007,7 @@ impl FleetConfig {
             if let Some(est) = &gs.train_est {
                 gs.train_busy = true;
                 des.schedule_at(est.seconds, Ev::TrainDone { gpu: g, epoch: 0 });
+                tel.on_train_busy(0.0, g, *est, gs.train_power);
             }
         }
         if self.window_s < self.duration_s {
@@ -893,10 +1018,14 @@ impl FleetConfig {
         }
 
         while let Some((t, ev)) = des.next() {
+            end_t = end_t.max(t);
             match ev {
                 Ev::Arrive { class } => {
                     arrived_per_class[class] += 1;
                     guard.note_arrival();
+                    let id = next_req_id;
+                    next_req_id += 1;
+                    tel.on_arrive(t, id, class);
                     let gap = arrivals[class].next_gap();
                     if gap.is_finite() && t + gap <= self.duration_s {
                         des.schedule_at(t + gap, Ev::Arrive { class });
@@ -906,9 +1035,11 @@ impl FleetConfig {
                     // touches a replica queue or the router state.
                     if !guard.admits_class(class) {
                         guard.note_shed(None, class, ShedCause::Brownout);
+                        tel.on_shed(t, id, class, None, ShedCause::Brownout);
                         continue;
                     }
                     let req = Req {
+                        id,
                         arrived: t,
                         tries: 0,
                         deadline: guard.deadline(class, t),
@@ -919,6 +1050,7 @@ impl FleetConfig {
                         &mut gpus_state,
                         self.mode,
                         &mut guard,
+                        &mut tel,
                         class,
                         req,
                         t,
@@ -936,6 +1068,7 @@ impl FleetConfig {
                         Dispatch::Stranded => {
                             stranded[class].push_back(req);
                             stranded_requests += 1;
+                            tel.on_stranded(t, id, class);
                         }
                     }
                 }
@@ -945,11 +1078,11 @@ impl FleetConfig {
                     }
                     {
                         let gs = &mut gpus_state[gpu];
-                        let arrived_at = gs.replicas[class]
+                        let req = gs.replicas[class]
                             .queue
                             .pop_front()
-                            .expect("completion without request")
-                            .arrived;
+                            .expect("completion without request");
+                        let arrived_at = req.arrived;
                         gs.replicas[class].busy = false;
                         let busy_s = t - gs.replicas[class].busy_since;
                         gs.replicas[class].window_busy_s += busy_s;
@@ -964,21 +1097,32 @@ impl FleetConfig {
                         collectors[gpu][class].record_fb(gs.svc_est[class].fb_bytes);
                         gs.replicas[class].window_completed += 1;
                         gs.replicas[class].window_lat.push(latency_ms);
-                        if latency_ms > self.classes[class].slo_ms {
+                        let violated = latency_ms > self.classes[class].slo_ms;
+                        if violated {
                             violations[class] += 1;
                             gs.replicas[class].window_violations += 1;
                         } else {
                             slo_met[class] += 1;
                         }
+                        let est = gs.svc_est[class];
+                        tel.on_done(t, req.id, gpu, class, latency_ms, violated, est);
                     }
                     match gpus_state[gpu].phase {
                         Phase::Running => {
                             let gs = &mut gpus_state[gpu];
-                            shed_expired(&mut guard, &mut gs.replicas[class], gpu, class, t);
+                            shed_expired(
+                                &mut guard,
+                                &mut gs.replicas[class],
+                                &mut tel,
+                                gpu,
+                                class,
+                                t,
+                            );
                             if !gs.replicas[class].queue.is_empty() {
-                                let service_s = gs.svc_est[class].seconds;
+                                let est = gs.svc_est[class];
+                                let power_w = gs.svc_power[class];
                                 let r = &mut gs.replicas[class];
-                                start_replica(&mut des, r, gpu, class, t, service_s);
+                                start_replica(&mut des, r, &mut tel, gpu, class, t, est, power_w);
                             }
                         }
                         Phase::Draining => maybe_begin_reconfig(
@@ -998,6 +1142,9 @@ impl FleetConfig {
                     gpus_state[gpu].train_busy = false;
                     train_steps += 1;
                     gpus_state[gpu].window_train_steps += 1;
+                    if let Some(est) = gpus_state[gpu].train_est {
+                        tel.on_train_idle(t, gpu, est);
+                    }
                     match gpus_state[gpu].phase {
                         Phase::Running => {
                             if t < self.duration_s {
@@ -1006,6 +1153,7 @@ impl FleetConfig {
                                     gs.train_busy = true;
                                     let epoch = gs.train_epoch;
                                     des.schedule_in(est.seconds, Ev::TrainDone { gpu, epoch });
+                                    tel.on_train_busy(t, gpu, *est, gs.train_power);
                                 }
                             }
                         }
@@ -1024,6 +1172,10 @@ impl FleetConfig {
                     // brownout ladder advance on the shed/route counts of
                     // the window that just closed.
                     guard.on_tick(t);
+                    // Telemetry flushes the closing window before the engine
+                    // resets its counters below, so every increment lands in
+                    // exactly one flushed window and Σ(window) = final total.
+                    telemetry_window_flush(&mut tel, t, &gpus_state, &guard);
                     let mut gpu_obs = Vec::with_capacity(n_gpus);
                     for gs in gpus_state.iter_mut() {
                         let mut services = Vec::with_capacity(n_classes);
@@ -1093,12 +1245,14 @@ impl FleetConfig {
                                             gpus_state[g].replicas[c].queue.split_off(keep);
                                         for req in moved {
                                             migrated_here += 1;
+                                            tel.on_migrate(t, req.id, c, g);
                                             match dispatch_req(
                                                 &mut des,
                                                 router.as_mut(),
                                                 &mut gpus_state,
                                                 RepartitionMode::Rolling,
                                                 &mut guard,
+                                                &mut tel,
                                                 c,
                                                 req,
                                                 t,
@@ -1109,6 +1263,7 @@ impl FleetConfig {
                                                 Dispatch::Stranded => {
                                                     stranded[c].push_back(req);
                                                     stranded_requests += 1;
+                                                    tel.on_stranded(t, req.id, c);
                                                 }
                                             }
                                         }
@@ -1154,6 +1309,7 @@ impl FleetConfig {
                             &mut gpus_state,
                             self.mode,
                             &mut guard,
+                            &mut tel,
                             &mut stranded,
                             t,
                             &mut avail_scratch,
@@ -1179,6 +1335,7 @@ impl FleetConfig {
                         gs.svc_est = bound.0;
                         gs.svc_power = bound.1;
                         gs.train_est = bound.2;
+                        gs.train_power = bound.3;
                         gs.phase = Phase::Running;
                     }
                     let downtime = t - pend.decided_t;
@@ -1204,6 +1361,7 @@ impl FleetConfig {
                         &mut gpus_state,
                         self.mode,
                         &mut guard,
+                        &mut tel,
                         &mut stranded,
                         t,
                         &mut avail_scratch,
@@ -1216,16 +1374,19 @@ impl FleetConfig {
                         let gs = &mut gpus_state[gpu];
                         for c in 0..n_classes {
                             if !gs.replicas[c].down && !gs.replicas[c].busy {
-                                shed_expired(&mut guard, &mut gs.replicas[c], gpu, c, t);
+                                shed_expired(&mut guard, &mut gs.replicas[c], &mut tel, gpu, c, t);
                                 if !gs.replicas[c].queue.is_empty() {
-                                    let service_s = gs.svc_est[c].seconds;
+                                    let est = gs.svc_est[c];
+                                    let power_w = gs.svc_power[c];
                                     start_replica(
                                         &mut des,
                                         &mut gs.replicas[c],
+                                        &mut tel,
                                         gpu,
                                         c,
                                         t,
-                                        service_s,
+                                        est,
+                                        power_w,
                                     );
                                 }
                             }
@@ -1238,6 +1399,7 @@ impl FleetConfig {
                                     self.cost.train_restore_s + est.seconds,
                                     Ev::TrainDone { gpu, epoch },
                                 );
+                                tel.on_train_busy(t, gpu, *est, gs.train_power);
                             }
                         }
                     }
@@ -1266,15 +1428,18 @@ impl FleetConfig {
                                 gs.train_busy = false;
                                 gs.train_epoch += 1;
                             }
+                            if gs.train_est.is_some() {
+                                tel.on_train_down(t, g);
+                            }
                             for c in 0..n_classes {
-                                flush_replica(&mut gs.replicas[c], c, t, &mut dumped);
+                                flush_replica(&mut gs.replicas[c], &mut tel, g, c, t, &mut dumped);
                             }
                         }
                         Some(c) => {
                             instance_crashes += 1;
                             let gs = &mut gpus_state[g];
                             gs.replicas[c].down = true;
-                            flush_replica(&mut gs.replicas[c], c, t, &mut dumped);
+                            flush_replica(&mut gs.replicas[c], &mut tel, g, c, t, &mut dumped);
                             if gs.phase == Phase::Draining {
                                 // Losing the in-flight request may
                                 // complete the drain barrier.
@@ -1289,15 +1454,19 @@ impl FleetConfig {
                         if req.tries >= self.faults.retry_budget {
                             lost_here += 1;
                             lost_per_class[c] += 1;
+                            tel.on_lost(t, req.id, c, g);
                         } else if retried_here >= self.faults.storm_guard {
                             shed_here += 1;
                             failed_per_class[c] += 1;
+                            tel.on_failed_storm(t, req.id, c, g);
                         } else {
                             retried_here += 1;
                             retried_per_class[c] += 1;
+                            tel.on_retry(t, req.id, c, g);
                             // The retry keeps the original arrival stamp and
                             // deadline: a crash does not buy extra SLO time.
                             let req = Req {
+                                id: req.id,
                                 arrived: req.arrived,
                                 tries: req.tries + 1,
                                 deadline: req.deadline,
@@ -1308,6 +1477,7 @@ impl FleetConfig {
                                 &mut gpus_state,
                                 self.mode,
                                 &mut guard,
+                                &mut tel,
                                 c,
                                 req,
                                 t,
@@ -1318,6 +1488,7 @@ impl FleetConfig {
                                 Dispatch::Stranded => {
                                     stranded[c].push_back(req);
                                     stranded_requests += 1;
+                                    tel.on_stranded(t, req.id, c);
                                 }
                             }
                         }
@@ -1356,6 +1527,7 @@ impl FleetConfig {
                                         self.cost.train_restore_s + est.seconds,
                                         Ev::TrainDone { gpu: g, epoch },
                                     );
+                                    tel.on_train_busy(t, g, *est, gs.train_power);
                                 }
                             }
                         }
@@ -1369,6 +1541,7 @@ impl FleetConfig {
                         &mut gpus_state,
                         self.mode,
                         &mut guard,
+                        &mut tel,
                         &mut stranded,
                         t,
                         &mut avail_scratch,
@@ -1384,16 +1557,19 @@ impl FleetConfig {
                     if gs.phase == Phase::Running {
                         for c in 0..n_classes {
                             if !gs.replicas[c].down && !gs.replicas[c].busy {
-                                shed_expired(&mut guard, &mut gs.replicas[c], g, c, t);
+                                shed_expired(&mut guard, &mut gs.replicas[c], &mut tel, g, c, t);
                                 if !gs.replicas[c].queue.is_empty() {
-                                    let service_s = gs.svc_est[c].seconds;
+                                    let est = gs.svc_est[c];
+                                    let power_w = gs.svc_power[c];
                                     start_replica(
                                         &mut des,
                                         &mut gs.replicas[c],
+                                        &mut tel,
                                         g,
                                         c,
                                         t,
-                                        service_s,
+                                        est,
+                                        power_w,
                                     );
                                 }
                             }
@@ -1406,6 +1582,20 @@ impl FleetConfig {
         // Breakers still open when the horizon closes pay open-time up to
         // the nominal horizon, mirroring the downtime convention below.
         guard.finish(self.duration_s);
+
+        // Final telemetry flush: the residual backlog window (events past
+        // the last Tick, including the drain tail beyond `duration_s`) is
+        // captured so Σ(window series) equals the outcome totals exactly.
+        let end_t = end_t.max(self.duration_s);
+        telemetry_window_flush(&mut tel, end_t, &gpus_state, &guard);
+        if tel.tracing_enabled() {
+            for (c, q) in stranded.iter().enumerate() {
+                for req in q {
+                    tel.on_failed_end(end_t, req.id, c);
+                }
+            }
+        }
+        let telemetry = tel.into_output(end_t);
 
         // A permanently-failed fleet can leave requests stranded with
         // nothing left to recover: they fail, they are not silently
@@ -1566,6 +1756,7 @@ impl FleetConfig {
             fault_log,
             layouts,
             decisions,
+            telemetry,
         })
     }
 }
@@ -1612,6 +1803,7 @@ mod tests {
             rho_max: 0.75,
             faults: FaultPlan::none(),
             overload: OverloadPolicy::none(),
+            telemetry: TelemetryConfig::off(),
             seed: 2024,
         }
     }
@@ -1783,6 +1975,7 @@ mod tests {
             rho_max: 0.75,
             faults: FaultPlan::none(),
             overload: OverloadPolicy::none(),
+            telemetry: TelemetryConfig::off(),
             seed: 7,
         };
         let out = cfg.run().unwrap();
@@ -1937,6 +2130,7 @@ mod tests {
             rho_max: 0.75,
             faults: FaultPlan::none(),
             overload: OverloadPolicy::none(),
+            telemetry: TelemetryConfig::off(),
             seed: 11,
         };
         cfg.faults = FaultPlan {
@@ -2005,7 +2199,7 @@ mod tests {
         // to the lowest class index, and it sorts *within* classes too
         // (crash retries append old-timestamp requests behind younger
         // stranded arrivals).
-        let rq = |arrived: f64, tries: u32| Req { arrived, tries, deadline: f64::INFINITY };
+        let rq = |arrived: f64, tries: u32| Req { id: 0, arrived, tries, deadline: f64::INFINITY };
         let mut stranded: Vec<VecDeque<Req>> = vec![VecDeque::new(), VecDeque::new()];
         stranded[0].push_back(rq(10.0, 0));
         stranded[0].push_back(rq(20.0, 0));

@@ -35,16 +35,25 @@
 //!   brownout under fleet-wide pressure, and a per-GPU ingress circuit
 //!   breaker with half-open probing — extending conservation to
 //!   `completed + failed + lost_in_crash + shed_overload = arrived`;
+//! * [`telemetry`] — deterministic observability: windowed per-GPU/
+//!   per-class time-series (queue depth, busy fraction, arrivals,
+//!   completions, shed split, breaker/brownout state, per-tenant
+//!   goodput) plus per-instance DCGM GRACT/FBUSD/POWER timelines and
+//!   1-in-N sampled request lifecycle spans, exportable as Prometheus,
+//!   CSV, JSONL, and Chrome trace-event (Perfetto) documents — strictly
+//!   observational, so telemetry-off runs stay byte-identical and
+//!   telemetry-on payloads join the bitwise-determinism checksums;
 //! * fleet sweeps fan out through [`crate::sweep::run_fleet`] with the
 //!   engine's bitwise-determinism guarantee intact (a crash schedule is
 //!   config data, so faulted grids stay bit-identical too — and so are a
-//!   tenant set and an overload policy).
+//!   tenant set, an overload policy, and a telemetry config).
 
 pub mod engine;
 pub mod faults;
 pub mod overload;
 pub mod policy;
 pub mod router;
+pub mod telemetry;
 pub mod tenancy;
 
 pub use engine::{
@@ -62,6 +71,9 @@ pub use policy::{
 pub use router::{
     Affinity, GpuHealth, LeastLoaded, RoundRobin, RoutePolicy, RouterKind, WeightedFair,
     DEFAULT_AFFINITY_SPILL, DRR_CREDIT_CAP,
+};
+pub use telemetry::{
+    chrome_trace, spans_to_jsonl, FleetTelemetry, SpanEvent, SpanKind, TelemetryConfig,
 };
 pub use tenancy::{
     jain_index, parse_tenants, tenant_of_classes, validate_tenants, Tenant, TenantOutcome,

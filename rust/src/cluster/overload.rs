@@ -335,6 +335,12 @@ impl OverloadGuard {
         self.breakers[g].state
     }
 
+    /// Current brownout ladder level: how many tenants (lowest weight
+    /// first) are browned out right now (for telemetry and reporting).
+    pub fn brownout_level(&self) -> usize {
+        self.brownout_level
+    }
+
     /// Record that the router placed a request on GPU `g` (consumes a
     /// half-open probe).
     pub fn note_route(&mut self, g: usize) {

@@ -1,0 +1,905 @@
+//! Deterministic fleet observability: windowed time-series and request
+//! lifecycle tracing for the cluster DES.
+//!
+//! The paper's methodology (§4.2) is built on continuous monitoring — a
+//! DCGM-exporter + Prometheus stack sampling GRACT / FBUSD / POWER per
+//! MIG instance. This module gives fleet runs the same signals on the
+//! simulated clock:
+//!
+//! * **Timelines** — at every policy `Tick` (and once more at the end of
+//!   the run) the engine flushes per-GPU/per-class window counters into
+//!   [`util::timeseries::Series`](crate::util::timeseries::Series):
+//!   queue depth, busy fraction, routed arrivals, completions, SLO
+//!   violations, the shed split by cause, breaker state, brownout
+//!   ladder level, per-tenant windowed goodput, and per-instance
+//!   [`DcgmSampler`]-derived GRACT/FBUSD/POWER counters. Every windowed
+//!   counter series sums exactly to its `FleetOutcome` total (sheds are
+//!   derived by diffing the guard's cumulative counters, so tick-time
+//!   sheds telescope into the next window without losing a count).
+//! * **Spans** — deterministic 1-in-N sampled request lifecycle events
+//!   (arrive → route → enqueue → serve-start → done/shed/retry/migrate/
+//!   stale), keyed on the request's monotone arrival id, exportable as
+//!   Chrome trace-event JSON (Perfetto-loadable) or compact JSONL.
+//!
+//! The recorder is strictly observational: it never mutates simulation
+//! state, so telemetry-on runs produce bit-identical `FleetOutcome`s to
+//! telemetry-off runs, and the disabled recorder leaves every output
+//! byte-identical (all hooks early-return).
+
+use crate::metrics::dcgm::{DcgmSampler, InstantState};
+use crate::metrics::export::series_to_prometheus;
+use crate::simgpu::perfmodel::StepEstimate;
+use crate::util::timeseries::{Series, SeriesSet};
+
+use super::overload::{BreakerState, ShedCause};
+use super::tenancy::Tenant;
+
+/// Telemetry switches carried by `FleetConfig` (plain data: clone
+/// freely into sweep grids). [`TelemetryConfig::off`] disables
+/// everything and leaves the engine byte-identical to the untraced
+/// path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryConfig {
+    /// Collect windowed time-series and DCGM counter timelines.
+    pub enabled: bool,
+    /// DCGM sampling interval on the simulated clock, seconds (the
+    /// real exporter defaults to 1 s).
+    pub interval_s: f64,
+    /// Trace one request in every `trace_sample` (by arrival id);
+    /// `0` disables span collection entirely.
+    pub trace_sample: u64,
+}
+
+impl TelemetryConfig {
+    /// Everything off (the default for existing configs).
+    pub fn off() -> Self {
+        TelemetryConfig { enabled: false, interval_s: 1.0, trace_sample: 0 }
+    }
+
+    /// Timelines at `interval_s`, no tracing.
+    pub fn timelines(interval_s: f64) -> Self {
+        TelemetryConfig { enabled: true, interval_s, trace_sample: 0 }
+    }
+
+    /// True when the run should carry a telemetry payload at all.
+    pub fn active(&self) -> bool {
+        self.enabled || self.trace_sample > 0
+    }
+
+    /// Reject intervals the sampler cannot honor.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.enabled && !(self.interval_s.is_finite() && self.interval_s > 0.0) {
+            return Err(format!(
+                "telemetry interval {} must be positive and finite",
+                self.interval_s
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig::off()
+    }
+}
+
+/// What happened to a request at one point of its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpanKind {
+    /// Ingress arrival (opens the span).
+    Arrive,
+    /// Router picked a GPU.
+    Route,
+    /// Joined a replica queue.
+    Enqueue,
+    /// Moved to the head of the queue and began service.
+    ServeStart,
+    /// Completed service (closes the span).
+    Done {
+        /// End-to-end latency, milliseconds.
+        latency_ms: f64,
+        /// True when the completion blew its class SLO.
+        violated: bool,
+    },
+    /// Shed because its deadline expired while queued (closes the span).
+    ShedDeadline,
+    /// Shed because a bounded queue was full (closes the span).
+    ShedCapacity,
+    /// Shed at ingress by a tenant brownout (closes the span).
+    ShedBrownout,
+    /// No healthy replica could take it; parked at the fleet ingress.
+    Stranded,
+    /// Queue migrated off a draining GPU during a rolling repartition.
+    Migrate,
+    /// Re-admitted after a crash consumed its in-flight attempt.
+    Retry,
+    /// Was in flight when its replica was torn down (crash or drain).
+    Stale,
+    /// Crash retries exhausted its budget (closes the span).
+    Lost,
+    /// Dropped by the retry-storm guard after a crash (closes the span).
+    FailedStorm,
+    /// Still stranded when the run ended (closes the span).
+    FailedEnd,
+}
+
+impl SpanKind {
+    /// Stable lowercase name used in exports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Arrive => "arrive",
+            SpanKind::Route => "route",
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::ServeStart => "serve_start",
+            SpanKind::Done { .. } => "done",
+            SpanKind::ShedDeadline => "shed_deadline",
+            SpanKind::ShedCapacity => "shed_capacity",
+            SpanKind::ShedBrownout => "shed_brownout",
+            SpanKind::Stranded => "stranded",
+            SpanKind::Migrate => "migrate",
+            SpanKind::Retry => "retry",
+            SpanKind::Stale => "stale",
+            SpanKind::Lost => "lost",
+            SpanKind::FailedStorm => "failed_storm",
+            SpanKind::FailedEnd => "failed_end",
+        }
+    }
+
+    /// True when this event ends the request's lifecycle.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            SpanKind::Done { .. }
+                | SpanKind::ShedDeadline
+                | SpanKind::ShedCapacity
+                | SpanKind::ShedBrownout
+                | SpanKind::Lost
+                | SpanKind::FailedStorm
+                | SpanKind::FailedEnd
+        )
+    }
+
+    /// The shed span for an overload cause.
+    pub fn shed(cause: ShedCause) -> SpanKind {
+        match cause {
+            ShedCause::Deadline => SpanKind::ShedDeadline,
+            ShedCause::Capacity => SpanKind::ShedCapacity,
+            ShedCause::Brownout => SpanKind::ShedBrownout,
+        }
+    }
+}
+
+/// One sampled lifecycle event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    /// Simulation time, seconds.
+    pub t: f64,
+    /// Request id (monotone arrival order; stable across retries).
+    pub req: u64,
+    /// Request class index.
+    pub class: usize,
+    /// GPU involved, when the event happened on one.
+    pub gpu: Option<usize>,
+    /// What happened.
+    pub kind: SpanKind,
+}
+
+/// The telemetry payload attached to a `FleetOutcome` when the run was
+/// traced or sampled.
+#[derive(Debug, Clone, Default)]
+pub struct FleetTelemetry {
+    /// Windowed fleet series plus per-instance DCGM counter timelines.
+    pub series: SeriesSet,
+    /// Sampled lifecycle spans, in event order.
+    pub spans: Vec<SpanEvent>,
+}
+
+impl FleetTelemetry {
+    /// FNV-1a checksum over the rendered Prometheus timelines and the
+    /// JSONL span log — the bitwise-determinism anchor for benches and
+    /// the serial-vs-parallel sweep contract.
+    pub fn checksum(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(series_to_prometheus(&self.series).as_bytes());
+        eat(&[0]);
+        eat(spans_to_jsonl(&self.spans).as_bytes());
+        h
+    }
+}
+
+/// Windowed series storage, live only when `TelemetryConfig::enabled`.
+///
+/// Per-(gpu, class) series are stored flat at `gpu * n_classes + class`.
+struct Timelines {
+    n_classes: usize,
+    /// End of the window being flushed (set by `window_begin`).
+    cur_t: f64,
+    /// Width of the window being flushed, seconds.
+    cur_span: f64,
+    prev_flush_t: f64,
+    /// Ingress arrivals per class since the last flush (recorder-counted
+    /// so sums reconcile with `arrived`, not just routed).
+    window_ingress: Vec<u64>,
+    /// Cumulative guard shed counters at the last flush, per class.
+    prev_shed_deadline: Vec<u64>,
+    prev_shed_capacity: Vec<u64>,
+    prev_shed_brownout: Vec<u64>,
+    tenant_of: Vec<usize>,
+    tenant_weights: Vec<f64>,
+    /// Per-tenant accumulators for the window being flushed.
+    tw_completed: Vec<u64>,
+    tw_violations: Vec<u64>,
+    queue_depth: Vec<Series>,
+    busy_frac: Vec<Series>,
+    routed: Vec<Series>,
+    completed: Vec<Series>,
+    violations: Vec<Series>,
+    ingress: Vec<Series>,
+    shed_deadline: Vec<Series>,
+    shed_capacity: Vec<Series>,
+    shed_brownout: Vec<Series>,
+    train_steps: Vec<Series>,
+    breaker: Vec<Series>,
+    brownout_level: Series,
+    tenant_completed: Vec<Series>,
+    tenant_violations: Vec<Series>,
+    tenant_goodput: Vec<Series>,
+    tenant_norm_goodput: Vec<Series>,
+    dcgm_svc: Vec<DcgmSampler>,
+    dcgm_train: Vec<DcgmSampler>,
+}
+
+impl Timelines {
+    fn new(
+        interval_s: f64,
+        n_gpus: usize,
+        n_classes: usize,
+        tenants: &[Tenant],
+        tenant_of: &[usize],
+        has_train: bool,
+    ) -> Timelines {
+        let gc = |name: &str| -> Vec<Series> {
+            (0..n_gpus * n_classes)
+                .map(|i| {
+                    Series::new(name)
+                        .with_tag("gpu", (i / n_classes).to_string())
+                        .with_tag("class", (i % n_classes).to_string())
+                })
+                .collect()
+        };
+        let per_class = |name: &str| -> Vec<Series> {
+            (0..n_classes).map(|c| Series::new(name).with_tag("class", c.to_string())).collect()
+        };
+        let per_gpu = |name: &str| -> Vec<Series> {
+            (0..n_gpus).map(|g| Series::new(name).with_tag("gpu", g.to_string())).collect()
+        };
+        let per_tenant = |name: &str| -> Vec<Series> {
+            tenants.iter().map(|t| Series::new(name).with_tag("tenant", t.name.clone())).collect()
+        };
+        Timelines {
+            n_classes,
+            cur_t: 0.0,
+            cur_span: 0.0,
+            prev_flush_t: 0.0,
+            window_ingress: vec![0; n_classes],
+            prev_shed_deadline: vec![0; n_classes],
+            prev_shed_capacity: vec![0; n_classes],
+            prev_shed_brownout: vec![0; n_classes],
+            tenant_of: tenant_of.to_vec(),
+            tenant_weights: tenants.iter().map(|t| t.weight).collect(),
+            tw_completed: vec![0; tenants.len()],
+            tw_violations: vec![0; tenants.len()],
+            queue_depth: gc("fleet_queue_depth"),
+            busy_frac: gc("fleet_busy_frac"),
+            routed: gc("fleet_window_routed"),
+            completed: gc("fleet_window_completed"),
+            violations: gc("fleet_window_violations"),
+            ingress: per_class("fleet_window_arrivals"),
+            shed_deadline: per_class("fleet_window_shed_deadline"),
+            shed_capacity: per_class("fleet_window_shed_capacity"),
+            shed_brownout: per_class("fleet_window_shed_brownout"),
+            train_steps: per_gpu("fleet_window_train_steps"),
+            breaker: per_gpu("fleet_breaker_state"),
+            brownout_level: Series::new("fleet_brownout_level"),
+            tenant_completed: per_tenant("fleet_tenant_window_completed"),
+            tenant_violations: per_tenant("fleet_tenant_window_violations"),
+            tenant_goodput: per_tenant("fleet_tenant_goodput_rps"),
+            tenant_norm_goodput: per_tenant("fleet_tenant_norm_goodput_rps"),
+            dcgm_svc: (0..n_gpus * n_classes)
+                .map(|i| {
+                    DcgmSampler::new(
+                        format!("g{}/svc{}", i / n_classes, i % n_classes),
+                        interval_s,
+                    )
+                })
+                .collect(),
+            dcgm_train: if has_train {
+                (0..n_gpus).map(|g| DcgmSampler::new(format!("g{g}/train"), interval_s)).collect()
+            } else {
+                Vec::new()
+            },
+        }
+    }
+
+    fn window_begin(&mut self, t: f64) {
+        self.cur_t = t;
+        self.cur_span = t - self.prev_flush_t;
+        self.tw_completed.iter_mut().for_each(|v| *v = 0);
+        self.tw_violations.iter_mut().for_each(|v| *v = 0);
+    }
+
+    fn window_replica(
+        &mut self,
+        gpu: usize,
+        class: usize,
+        depth: usize,
+        busy_s: f64,
+        routed: u64,
+        completed: u64,
+        violations: u64,
+    ) {
+        let t = self.cur_t;
+        let i = gpu * self.n_classes + class;
+        self.queue_depth[i].push(t, depth as f64);
+        let frac = if self.cur_span > 0.0 { (busy_s / self.cur_span).min(1.0) } else { 0.0 };
+        self.busy_frac[i].push(t, frac);
+        self.routed[i].push(t, routed as f64);
+        self.completed[i].push(t, completed as f64);
+        self.violations[i].push(t, violations as f64);
+        let ti = self.tenant_of[class];
+        self.tw_completed[ti] += completed;
+        self.tw_violations[ti] += violations;
+    }
+
+    fn window_train(&mut self, gpu: usize, steps: u64) {
+        let t = self.cur_t;
+        self.train_steps[gpu].push(t, steps as f64);
+    }
+
+    fn window_breaker(&mut self, gpu: usize, state: BreakerState) {
+        let code = match state {
+            BreakerState::Closed => 0.0,
+            BreakerState::HalfOpen => 1.0,
+            BreakerState::Open => 2.0,
+        };
+        let t = self.cur_t;
+        self.breaker[gpu].push(t, code);
+    }
+
+    /// Flush guard-derived series (shed split by diffing cumulative
+    /// counters, brownout ladder level) and the per-tenant window rows,
+    /// then advance the window.
+    fn window_end(&mut self, level: usize, sd: &[u64], sc: &[u64], sb: &[u64]) {
+        let t = self.cur_t;
+        for c in 0..self.n_classes {
+            self.ingress[c].push(t, self.window_ingress[c] as f64);
+            self.window_ingress[c] = 0;
+            self.shed_deadline[c].push(t, (sd[c] - self.prev_shed_deadline[c]) as f64);
+            self.shed_capacity[c].push(t, (sc[c] - self.prev_shed_capacity[c]) as f64);
+            self.shed_brownout[c].push(t, (sb[c] - self.prev_shed_brownout[c]) as f64);
+            self.prev_shed_deadline[c] = sd[c];
+            self.prev_shed_capacity[c] = sc[c];
+            self.prev_shed_brownout[c] = sb[c];
+        }
+        self.brownout_level.push(t, level as f64);
+        for ti in 0..self.tenant_weights.len() {
+            self.tenant_completed[ti].push(t, self.tw_completed[ti] as f64);
+            self.tenant_violations[ti].push(t, self.tw_violations[ti] as f64);
+            let good = self.tw_completed[ti].saturating_sub(self.tw_violations[ti]) as f64;
+            let rps = if self.cur_span > 0.0 { good / self.cur_span } else { 0.0 };
+            self.tenant_goodput[ti].push(t, rps);
+            self.tenant_norm_goodput[ti].push(t, rps / self.tenant_weights[ti]);
+        }
+        self.prev_flush_t = t;
+    }
+
+    fn into_series(self, end_t: f64) -> SeriesSet {
+        let mut set = SeriesSet::new();
+        let mut add_all = |v: Vec<Series>| {
+            for s in v {
+                set.add(s);
+            }
+        };
+        add_all(self.queue_depth);
+        add_all(self.busy_frac);
+        add_all(self.routed);
+        add_all(self.completed);
+        add_all(self.violations);
+        add_all(self.ingress);
+        add_all(self.shed_deadline);
+        add_all(self.shed_capacity);
+        add_all(self.shed_brownout);
+        add_all(self.train_steps);
+        add_all(self.breaker);
+        set.add(self.brownout_level);
+        add_all(self.tenant_completed);
+        add_all(self.tenant_violations);
+        add_all(self.tenant_goodput);
+        add_all(self.tenant_norm_goodput);
+        for s in self.dcgm_svc {
+            set.extend(s.finish(end_t));
+        }
+        for s in self.dcgm_train {
+            set.extend(s.finish(end_t));
+        }
+        set
+    }
+}
+
+/// The engine-side recorder. Constructed for every run; when the config
+/// is off every hook early-returns, so the simulation path is identical
+/// with or without telemetry (the recorder never mutates sim state).
+pub struct FleetRecorder {
+    cfg: TelemetryConfig,
+    timelines: Option<Box<Timelines>>,
+    spans: Vec<SpanEvent>,
+}
+
+impl FleetRecorder {
+    /// Recorder for one run.
+    pub fn new(
+        cfg: &TelemetryConfig,
+        n_gpus: usize,
+        n_classes: usize,
+        tenants: &[Tenant],
+        tenant_of: &[usize],
+        has_train: bool,
+    ) -> FleetRecorder {
+        let timelines = if cfg.enabled {
+            Some(Box::new(Timelines::new(
+                cfg.interval_s,
+                n_gpus,
+                n_classes,
+                tenants,
+                tenant_of,
+                has_train,
+            )))
+        } else {
+            None
+        };
+        FleetRecorder { cfg: *cfg, timelines, spans: Vec::new() }
+    }
+
+    /// True when the run carries any telemetry payload.
+    pub fn active(&self) -> bool {
+        self.cfg.active()
+    }
+
+    /// True when windowed timelines are being collected.
+    pub fn timelines_enabled(&self) -> bool {
+        self.timelines.is_some()
+    }
+
+    /// True when lifecycle spans are being collected.
+    pub fn tracing_enabled(&self) -> bool {
+        self.cfg.trace_sample > 0
+    }
+
+    fn sampled(&self, id: u64) -> bool {
+        self.cfg.trace_sample > 0 && id % self.cfg.trace_sample == 0
+    }
+
+    fn span(&mut self, t: f64, id: u64, class: usize, gpu: Option<usize>, kind: SpanKind) {
+        if self.sampled(id) {
+            self.spans.push(SpanEvent { t, req: id, class, gpu, kind });
+        }
+    }
+
+    /// Ingress arrival: counts toward the window's per-class arrival
+    /// series and opens the request's span.
+    pub fn on_arrive(&mut self, t: f64, id: u64, class: usize) {
+        if let Some(tl) = &mut self.timelines {
+            tl.window_ingress[class] += 1;
+        }
+        self.span(t, id, class, None, SpanKind::Arrive);
+    }
+
+    /// Router picked GPU `gpu`.
+    pub fn on_route(&mut self, t: f64, id: u64, class: usize, gpu: usize) {
+        self.span(t, id, class, Some(gpu), SpanKind::Route);
+    }
+
+    /// Joined the replica queue on `gpu`.
+    pub fn on_enqueue(&mut self, t: f64, id: u64, class: usize, gpu: usize) {
+        self.span(t, id, class, Some(gpu), SpanKind::Enqueue);
+    }
+
+    /// Began service; also drives the instance's DCGM counters busy.
+    pub fn on_serve_start(
+        &mut self,
+        t: f64,
+        id: u64,
+        gpu: usize,
+        class: usize,
+        est: StepEstimate,
+        power_w: f64,
+    ) {
+        self.span(t, id, class, Some(gpu), SpanKind::ServeStart);
+        if let Some(tl) = &mut self.timelines {
+            tl.dcgm_svc[gpu * tl.n_classes + class].report(
+                t,
+                InstantState { gract: est.gract, fb_bytes: est.fb_bytes, power_w },
+            );
+        }
+    }
+
+    /// Completed service; the instance goes idle (model stays resident).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_done(
+        &mut self,
+        t: f64,
+        id: u64,
+        gpu: usize,
+        class: usize,
+        latency_ms: f64,
+        violated: bool,
+        est: StepEstimate,
+    ) {
+        self.span(t, id, class, Some(gpu), SpanKind::Done { latency_ms, violated });
+        if let Some(tl) = &mut self.timelines {
+            tl.dcgm_svc[gpu * tl.n_classes + class].report(
+                t,
+                InstantState { gract: 0.0, fb_bytes: est.fb_bytes, power_w: 0.0 },
+            );
+        }
+    }
+
+    /// Shed for an overload cause (terminal).
+    pub fn on_shed(&mut self, t: f64, id: u64, class: usize, gpu: Option<usize>, cause: ShedCause) {
+        self.span(t, id, class, gpu, SpanKind::shed(cause));
+    }
+
+    /// Parked at the fleet ingress with no healthy replica.
+    pub fn on_stranded(&mut self, t: f64, id: u64, class: usize) {
+        self.span(t, id, class, None, SpanKind::Stranded);
+    }
+
+    /// Migrated off a draining GPU.
+    pub fn on_migrate(&mut self, t: f64, id: u64, class: usize, from_gpu: usize) {
+        self.span(t, id, class, Some(from_gpu), SpanKind::Migrate);
+    }
+
+    /// Re-admitted after a crash.
+    pub fn on_retry(&mut self, t: f64, id: u64, class: usize, gpu: usize) {
+        self.span(t, id, class, Some(gpu), SpanKind::Retry);
+    }
+
+    /// In-flight attempt staled by a replica teardown.
+    pub fn on_stale(&mut self, t: f64, id: u64, class: usize, gpu: usize) {
+        self.span(t, id, class, Some(gpu), SpanKind::Stale);
+    }
+
+    /// Retry budget exhausted (terminal).
+    pub fn on_lost(&mut self, t: f64, id: u64, class: usize, gpu: usize) {
+        self.span(t, id, class, Some(gpu), SpanKind::Lost);
+    }
+
+    /// Dropped by the retry-storm guard (terminal).
+    pub fn on_failed_storm(&mut self, t: f64, id: u64, class: usize, gpu: usize) {
+        self.span(t, id, class, Some(gpu), SpanKind::FailedStorm);
+    }
+
+    /// Still stranded at end of run (terminal).
+    pub fn on_failed_end(&mut self, t: f64, id: u64, class: usize) {
+        self.span(t, id, class, None, SpanKind::FailedEnd);
+    }
+
+    /// A service replica was torn down by a crash: counters drop to zero.
+    pub fn on_replica_down(&mut self, t: f64, gpu: usize, class: usize) {
+        if let Some(tl) = &mut self.timelines {
+            tl.dcgm_svc[gpu * tl.n_classes + class].report(t, InstantState::default());
+        }
+    }
+
+    /// Training stepped onto the GPU (or resumed after reconfig/crash).
+    pub fn on_train_busy(&mut self, t: f64, gpu: usize, est: StepEstimate, power_w: f64) {
+        if let Some(tl) = &mut self.timelines {
+            if let Some(s) = tl.dcgm_train.get_mut(gpu) {
+                s.report(t, InstantState { gract: est.gract, fb_bytes: est.fb_bytes, power_w });
+            }
+        }
+    }
+
+    /// Training finished a step; the checkpoint stays resident.
+    pub fn on_train_idle(&mut self, t: f64, gpu: usize, est: StepEstimate) {
+        if let Some(tl) = &mut self.timelines {
+            if let Some(s) = tl.dcgm_train.get_mut(gpu) {
+                s.report(t, InstantState { gract: 0.0, fb_bytes: est.fb_bytes, power_w: 0.0 });
+            }
+        }
+    }
+
+    /// Training torn down by a GPU crash: counters drop to zero.
+    pub fn on_train_down(&mut self, t: f64, gpu: usize) {
+        if let Some(tl) = &mut self.timelines {
+            if let Some(s) = tl.dcgm_train.get_mut(gpu) {
+                s.report(t, InstantState::default());
+            }
+        }
+    }
+
+    /// Open the window ending at `t` (engine calls this right after
+    /// `OverloadGuard::on_tick`, before the window counters reset).
+    pub fn window_begin(&mut self, t: f64) {
+        if let Some(tl) = &mut self.timelines {
+            tl.window_begin(t);
+        }
+    }
+
+    /// One replica's window counters (called once per (gpu, class)).
+    #[allow(clippy::too_many_arguments)]
+    pub fn window_replica(
+        &mut self,
+        gpu: usize,
+        class: usize,
+        depth: usize,
+        busy_s: f64,
+        routed: u64,
+        completed: u64,
+        violations: u64,
+    ) {
+        if let Some(tl) = &mut self.timelines {
+            tl.window_replica(gpu, class, depth, busy_s, routed, completed, violations);
+        }
+    }
+
+    /// One GPU's window training steps.
+    pub fn window_train(&mut self, gpu: usize, steps: u64) {
+        if let Some(tl) = &mut self.timelines {
+            tl.window_train(gpu, steps);
+        }
+    }
+
+    /// One GPU's breaker state after the tick transition.
+    pub fn window_breaker(&mut self, gpu: usize, state: BreakerState) {
+        if let Some(tl) = &mut self.timelines {
+            tl.window_breaker(gpu, state);
+        }
+    }
+
+    /// Close the window: guard-derived series (cumulative shed counters
+    /// per class, brownout ladder level) and the per-tenant rows.
+    pub fn window_end(&mut self, level: usize, sd: &[u64], sc: &[u64], sb: &[u64]) {
+        if let Some(tl) = &mut self.timelines {
+            tl.window_end(level, sd, sc, sb);
+        }
+    }
+
+    /// Seal the recorder: finish the DCGM samplers at `end_t` and
+    /// return the run's payload (None when telemetry was off).
+    pub fn into_output(self, end_t: f64) -> Option<FleetTelemetry> {
+        if !self.cfg.active() {
+            return None;
+        }
+        let series = match self.timelines {
+            Some(tl) => tl.into_series(end_t),
+            None => SeriesSet::new(),
+        };
+        Some(FleetTelemetry { series, spans: self.spans })
+    }
+}
+
+/// Minimal JSON string escaper for labels and span fields.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Compact JSONL span log: one event per line, in event order.
+pub fn spans_to_jsonl(spans: &[SpanEvent]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    for sp in spans {
+        let _ = write!(out, "{{\"t\":{},\"req\":{},\"class\":{}", sp.t, sp.req, sp.class);
+        match sp.gpu {
+            Some(g) => {
+                let _ = write!(out, ",\"gpu\":{g}");
+            }
+            None => out.push_str(",\"gpu\":null"),
+        }
+        let _ = write!(out, ",\"kind\":\"{}\"", sp.kind.name());
+        if let SpanKind::Done { latency_ms, violated } = sp.kind {
+            let _ = write!(out, ",\"latency_ms\":{latency_ms},\"violated\":{violated}");
+        }
+        out.push_str("}\n");
+    }
+    out
+}
+
+/// Chrome trace-event JSON for one or more runs, loadable in Perfetto
+/// (`ui.perfetto.dev`) or `chrome://tracing`.
+///
+/// Each run becomes a process (`pid` = run index, named via a metadata
+/// event); each request class is a thread (`tid` = class). A request's
+/// lifecycle is an async span (`ph: "b"` at arrival, `ph: "e"` at its
+/// terminal event, matched on `cat`+`id`) with instant events for the
+/// intermediate stages. Timestamps are simulated microseconds.
+pub fn chrome_trace(runs: &[(&str, &[SpanEvent])]) -> String {
+    use std::fmt::Write;
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut emit = |s: String, out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push(',');
+        }
+        *first = false;
+        out.push('\n');
+        out.push_str(&s);
+    };
+    for (pid, (label, spans)) in runs.iter().enumerate() {
+        emit(
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                esc(label)
+            ),
+            &mut out,
+            &mut first,
+        );
+        for sp in spans.iter() {
+            let ts = sp.t * 1e6;
+            let tid = sp.class;
+            let mut args = String::new();
+            if let Some(g) = sp.gpu {
+                let _ = write!(args, "\"gpu\":{g}");
+            }
+            if let SpanKind::Done { latency_ms, violated } = sp.kind {
+                if !args.is_empty() {
+                    args.push(',');
+                }
+                let _ = write!(args, "\"latency_ms\":{latency_ms},\"violated\":{violated}");
+            }
+            let line = match sp.kind {
+                SpanKind::Arrive => format!(
+                    "{{\"name\":\"req\",\"cat\":\"req\",\"ph\":\"b\",\"id\":\"{}\",\
+                     \"pid\":{pid},\"tid\":{tid},\"ts\":{ts}}}",
+                    sp.req
+                ),
+                k if k.is_terminal() => format!(
+                    "{{\"name\":\"req\",\"cat\":\"req\",\"ph\":\"e\",\"id\":\"{}\",\
+                     \"pid\":{pid},\"tid\":{tid},\"ts\":{ts},\
+                     \"args\":{{\"outcome\":\"{}\"{}{}}}}}",
+                    sp.req,
+                    k.name(),
+                    if args.is_empty() { "" } else { "," },
+                    args
+                ),
+                k => format!(
+                    "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\
+                     \"tid\":{tid},\"ts\":{ts},\"args\":{{\"req\":{}{}{}}}}}",
+                    k.name(),
+                    sp.req,
+                    if args.is_empty() { "" } else { "," },
+                    args
+                ),
+            };
+            emit(line, &mut out, &mut first);
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_spans() -> Vec<SpanEvent> {
+        vec![
+            SpanEvent { t: 0.0, req: 0, class: 0, gpu: None, kind: SpanKind::Arrive },
+            SpanEvent { t: 0.0, req: 0, class: 0, gpu: Some(1), kind: SpanKind::Route },
+            SpanEvent { t: 0.5, req: 0, class: 0, gpu: Some(1), kind: SpanKind::ServeStart },
+            SpanEvent {
+                t: 1.0,
+                req: 0,
+                class: 0,
+                gpu: Some(1),
+                kind: SpanKind::Done { latency_ms: 1000.0, violated: true },
+            },
+        ]
+    }
+
+    #[test]
+    fn off_config_is_inactive_and_valid() {
+        let cfg = TelemetryConfig::off();
+        assert!(!cfg.active());
+        assert!(cfg.validate().is_ok());
+        // A broken interval only matters when timelines are on.
+        let broken = TelemetryConfig { enabled: false, interval_s: 0.0, trace_sample: 0 };
+        assert!(broken.validate().is_ok());
+        let broken_on = TelemetryConfig { enabled: true, interval_s: 0.0, trace_sample: 0 };
+        assert!(broken_on.validate().is_err());
+    }
+
+    #[test]
+    fn trace_only_config_is_active() {
+        let cfg = TelemetryConfig { enabled: false, interval_s: 1.0, trace_sample: 8 };
+        assert!(cfg.active());
+    }
+
+    #[test]
+    fn sampling_is_one_in_n_by_id() {
+        let cfg = TelemetryConfig { enabled: false, interval_s: 1.0, trace_sample: 4 };
+        let rec = FleetRecorder::new(&cfg, 1, 1, &Tenant::per_class(1), &[0], false);
+        assert!(rec.sampled(0));
+        assert!(!rec.sampled(1));
+        assert!(rec.sampled(4));
+        let off =
+            FleetRecorder::new(&TelemetryConfig::off(), 1, 1, &Tenant::per_class(1), &[0], false);
+        assert!(!off.sampled(0));
+    }
+
+    #[test]
+    fn jsonl_has_one_line_per_span() {
+        let spans = sample_spans();
+        let log = spans_to_jsonl(&spans);
+        assert_eq!(log.lines().count(), spans.len());
+        assert!(log.contains("\"kind\":\"done\""));
+        assert!(log.contains("\"latency_ms\":1000"));
+        assert!(log.contains("\"gpu\":null"));
+    }
+
+    #[test]
+    fn chrome_trace_opens_and_closes_async_spans() {
+        let spans = sample_spans();
+        let doc = chrome_trace(&[("demo/run", &spans)]);
+        assert!(doc.contains("\"ph\":\"M\""));
+        assert!(doc.contains("\"ph\":\"b\""));
+        assert!(doc.contains("\"ph\":\"e\""));
+        assert!(doc.contains("\"outcome\":\"done\""));
+        assert_eq!(doc.matches("\"ph\":\"b\"").count(), doc.matches("\"ph\":\"e\"").count());
+    }
+
+    #[test]
+    fn checksum_tracks_payload() {
+        let a = FleetTelemetry { series: SeriesSet::new(), spans: sample_spans() };
+        let b = FleetTelemetry { series: SeriesSet::new(), spans: Vec::new() };
+        assert_ne!(a.checksum(), b.checksum());
+        assert_eq!(a.checksum(), a.clone().checksum());
+    }
+
+    #[test]
+    fn terminal_kinds_close_exactly_once() {
+        for k in [
+            SpanKind::Done { latency_ms: 0.0, violated: false },
+            SpanKind::ShedDeadline,
+            SpanKind::ShedCapacity,
+            SpanKind::ShedBrownout,
+            SpanKind::Lost,
+            SpanKind::FailedStorm,
+            SpanKind::FailedEnd,
+        ] {
+            assert!(k.is_terminal(), "{} should be terminal", k.name());
+        }
+        for k in [
+            SpanKind::Arrive,
+            SpanKind::Route,
+            SpanKind::Enqueue,
+            SpanKind::ServeStart,
+            SpanKind::Stranded,
+            SpanKind::Migrate,
+            SpanKind::Retry,
+            SpanKind::Stale,
+        ] {
+            assert!(!k.is_terminal(), "{} should not be terminal", k.name());
+        }
+    }
+}

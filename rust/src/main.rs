@@ -913,6 +913,10 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     OptSpec { name: "brownout", value: "F", help: "brown out lowest-weight tenants when a window sheds > F of its arrivals (0 = off)", default: Some("0") },
                     OptSpec { name: "breaker", value: "F", help: "trip a per-GPU ingress breaker when its window shed fraction exceeds F (0 = off)", default: Some("0") },
                     OptSpec { name: "breaker-probes", value: "N", help: "requests admitted per half-open probe window", default: Some("8") },
+                    OptSpec { name: "telemetry", value: "DIR", help: "write per-run windowed time-series into DIR as Prometheus text (.prom) and CSV (.csv) exports", default: None },
+                    OptSpec { name: "telemetry-interval", value: "S", help: "telemetry window / DCGM sampling interval, simulated seconds", default: Some("1") },
+                    OptSpec { name: "trace", value: "FILE", help: "write sampled request lifecycle spans as Chrome trace-event JSON (load in Perfetto); a compact FILE.jsonl rides along", default: None },
+                    OptSpec { name: "trace-sample", value: "N", help: "trace one request in every N, by arrival id", default: Some("1") },
                     OptSpec { name: "seeds", value: "N", help: "replication seeds per grid point", default: Some("1") },
                     OptSpec { name: "seed", value: "S", help: "base seed", default: Some("2024") },
                     OptSpec { name: "workers", value: "N", help: "sweep worker threads (0 = auto)", default: Some("0") },
@@ -925,7 +929,8 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         return Ok(());
     }
     use migperf::cluster::{
-        FaultPlan, FleetConfig, FleetPolicyKind, RepartitionMode, RequestClass, RouterKind,
+        chrome_trace, spans_to_jsonl, FaultPlan, FleetConfig, FleetPolicyKind, RepartitionMode,
+        RequestClass, RouterKind, SpanEvent, TelemetryConfig,
     };
     use migperf::orchestrator::ReconfigCost;
     use migperf::sweep::SweepEngine;
@@ -1057,6 +1062,25 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
     let base_seed: u64 = args.parse_or("seed", 2024u64).map_err(|e| e.to_string())?;
     let workers: usize = args.parse_or("workers", 0usize).map_err(|e| e.to_string())?;
 
+    // Observability: `--telemetry DIR` turns on the windowed timelines
+    // and exports them per run; `--trace FILE` turns on span sampling
+    // and writes one combined Perfetto-loadable trace. Neither flag
+    // changes the simulation or the stdout document.
+    let telemetry_dir = args.get("telemetry").map(str::to_string);
+    let trace_file = args.get("trace").map(str::to_string);
+    let telemetry_interval: f64 =
+        args.parse_or("telemetry-interval", 1.0f64).map_err(|e| e.to_string())?;
+    let trace_sample: u64 = args.parse_or("trace-sample", 1u64).map_err(|e| e.to_string())?;
+    if trace_file.is_some() && trace_sample == 0 {
+        return Err("--trace-sample must be at least 1".into());
+    }
+    let telemetry = TelemetryConfig {
+        enabled: telemetry_dir.is_some(),
+        interval_s: telemetry_interval,
+        trace_sample: if trace_file.is_some() { trace_sample } else { 0 },
+    };
+    telemetry.validate()?;
+
     // Failure-injection axis: no faults by default; `--crash` pins one
     // explicit schedule; `--faults` sweeps no-faults plus one stochastic
     // MTBF/MTTR level per `--mtbf` value (per-seed schedules derive from
@@ -1167,6 +1191,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                                 rho_max,
                                 faults,
                                 overload,
+                                telemetry,
                                 seed,
                             });
                         }
@@ -1195,6 +1220,37 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             seed
         )
     };
+
+    if let Some(dir) = &telemetry_dir {
+        std::fs::create_dir_all(dir).map_err(|e| format!("--telemetry {dir}: {e}"))?;
+        for ((cfg, out), flabel) in runs.iter().zip(&outs).zip(&fault_labels) {
+            let Some(tel) = out.telemetry.as_ref() else { continue };
+            let stem = run_label(out, flabel, cfg.seed).replace('/', "_");
+            let prom_path = format!("{dir}/{stem}.prom");
+            std::fs::write(&prom_path, export::series_to_prometheus(&tel.series))
+                .map_err(|e| format!("{prom_path}: {e}"))?;
+            let csv_path = format!("{dir}/{stem}.csv");
+            std::fs::write(&csv_path, export::series_to_csv(&tel.series))
+                .map_err(|e| format!("{csv_path}: {e}"))?;
+        }
+    }
+    if let Some(path) = &trace_file {
+        let labeled: Vec<(String, &[SpanEvent])> = runs
+            .iter()
+            .zip(&outs)
+            .zip(&fault_labels)
+            .filter_map(|((cfg, out), flabel)| {
+                let tel = out.telemetry.as_ref()?;
+                Some((run_label(out, flabel, cfg.seed), tel.spans.as_slice()))
+            })
+            .collect();
+        let entries: Vec<(&str, &[SpanEvent])> =
+            labeled.iter().map(|(label, spans)| (label.as_str(), *spans)).collect();
+        std::fs::write(path, chrome_trace(&entries)).map_err(|e| format!("{path}: {e}"))?;
+        let jsonl: String = labeled.iter().map(|(_, spans)| spans_to_jsonl(spans)).collect();
+        let jsonl_path = format!("{path}.jsonl");
+        std::fs::write(&jsonl_path, jsonl).map_err(|e| format!("{jsonl_path}: {e}"))?;
+    }
 
     if args.flag("json") {
         let rows: Vec<Json> = runs

@@ -94,9 +94,10 @@ impl DcgmSampler {
     }
 
     /// Flush samples up to time `t` with the current state and return the
-    /// collected series.
+    /// collected series. Emission is clamped to the horizon: no sample
+    /// carries a timestamp beyond `t`.
     pub fn finish(mut self, t: f64) -> SeriesSet {
-        self.report(t + self.interval_s, self.state);
+        self.report(t, self.state);
         let mut set = SeriesSet::new();
         set.add(self.gract);
         set.add(self.fb);
@@ -124,11 +125,24 @@ mod tests {
         let set = s.finish(5.0);
         let g = set.get("gract").unwrap();
         // Samples at t=0,1,2,3 hold 0.5 (state *before* the 3.5 report),
-        // then 4,5,6 hold 0.9.
-        assert!(g.len() >= 6);
+        // then 4,5 hold 0.9.
+        assert_eq!(g.len(), 6);
         assert_eq!(g.points()[1].value, 0.5);
         let last = g.points().last().unwrap();
         assert_eq!(last.value, 0.9);
+    }
+
+    #[test]
+    fn finish_never_emits_past_the_horizon() {
+        let mut s = DcgmSampler::new("x", 1.0);
+        s.report(0.0, InstantState { gract: 0.3, fb_bytes: 0.0, power_w: 10.0 });
+        let set = s.finish(2.5);
+        for series in set.all() {
+            assert!(!series.is_empty());
+            for p in series.points() {
+                assert!(p.t <= 2.5, "sample at t={} beyond horizon 2.5", p.t);
+            }
+        }
     }
 
     #[test]

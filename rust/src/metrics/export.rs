@@ -339,11 +339,11 @@ fn render_labels(s: &Series) -> String {
     if s.tags.is_empty() {
         return String::new();
     }
-    let inner: Vec<String> = s
-        .tags
-        .iter()
-        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "\\\"")))
-        .collect();
+    // Exposition format escapes backslash, double-quote, and line-feed
+    // in label values (backslash first so the others stay unambiguous).
+    let escape = |v: &str| v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+    let inner: Vec<String> =
+        s.tags.iter().map(|(k, v)| format!("{k}=\"{}\"", escape(v))).collect();
     format!("{{{}}}", inner.join(","))
 }
 
@@ -416,6 +416,21 @@ mod tests {
         let out = series_to_prometheus(&set);
         assert!(out.contains("# TYPE migperf_gract gauge"));
         assert!(out.contains("migperf_gract{instance=\"1g.10gb\"} 0.75 1000"));
+    }
+
+    #[test]
+    fn prometheus_escapes_hostile_label_values() {
+        let mut set = SeriesSet::new();
+        let mut s = Series::new("gract").with_tag("instance", "a\\b\"c\nd");
+        s.push(0.0, 1.0);
+        set.add(s);
+        let out = series_to_prometheus(&set);
+        // Backslash, quote, and newline must all be escaped — and the
+        // data line must stay a single line.
+        assert!(out.contains("instance=\"a\\\\b\\\"c\\nd\""));
+        let data_lines: Vec<&str> =
+            out.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).collect();
+        assert_eq!(data_lines.len(), 1);
     }
 
     #[test]

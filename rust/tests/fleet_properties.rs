@@ -20,11 +20,16 @@
 //! across the shed-discipline × fault × tenant × router grid, shed
 //! sweeps stay bitwise-deterministic at 1/2/4/16 workers, and work
 //! queued on a GPU that crashes mid-drain and recovers is dispatched
-//! exactly once.
+//! exactly once; (i) telemetry is strictly observational — enabling
+//! timelines and tracing leaves every outcome counter and latency bit
+//! identical across the router × mode × fault × shed grid, traced
+//! sweeps (payload checksums included) stay bitwise-deterministic at
+//! 1/2/4/16 workers, and every windowed counter series sums exactly to
+//! its `FleetOutcome` total, per tenant too.
 
 use migperf::cluster::{
-    FaultInjection, FaultPlan, FleetConfig, FleetPolicyKind, OverloadPolicy, RepartitionMode,
-    RequestClass, RouterKind, ShedDiscipline, Tenant,
+    FaultInjection, FaultPlan, FleetConfig, FleetPolicyKind, FleetTelemetry, OverloadPolicy,
+    RepartitionMode, RequestClass, RouterKind, ShedDiscipline, TelemetryConfig, Tenant,
 };
 use migperf::mig::gpu::GpuModel;
 use migperf::mig::placement::PlacementEngine;
@@ -66,6 +71,7 @@ fn diurnal_fleet(
         rho_max: 0.75,
         faults: FaultPlan::none(),
         overload: OverloadPolicy::none(),
+        telemetry: TelemetryConfig::off(),
         seed,
     }
 }
@@ -93,6 +99,7 @@ fn poisson_fleet(n: usize, rate_per_class: f64, seed: u64) -> FleetConfig {
         rho_max: 0.75,
         faults: FaultPlan::none(),
         overload: OverloadPolicy::none(),
+        telemetry: TelemetryConfig::off(),
         seed,
     }
 }
@@ -808,5 +815,177 @@ fn crash_during_drain_then_recovery_dispatches_work_exactly_once() {
         assert_eq!(per_class_completed, out.arrived, "{tag}: no double service per class");
         let per_gpu_completed: u64 = out.per_gpu.iter().map(|s| s.completed).sum();
         assert_eq!(per_gpu_completed, out.arrived, "{tag}: no double service per GPU");
+    }
+}
+
+/// Sum every point of every series with this name (across all tag
+/// combinations). Window counters are exact small integers, so the cast
+/// is lossless.
+fn sum_series(tel: &FleetTelemetry, name: &str) -> u64 {
+    tel.series
+        .all()
+        .iter()
+        .filter(|s| s.name == name)
+        .flat_map(|s| s.points())
+        .map(|p| p.value as u64)
+        .sum()
+}
+
+/// (i1) Telemetry is strictly observational: across the router × mode ×
+/// fault × shed grid, a run with timelines and tracing enabled produces
+/// a `FleetOutcome` whose every counter and latency is bit-identical to
+/// the telemetry-off run of the same config.
+#[test]
+fn telemetry_never_perturbs_the_simulation() {
+    let crash = FaultPlan {
+        injections: vec![
+            FaultInjection { t: 50.0, gpu: 0, class: None, down_s: 25.0 },
+            FaultInjection { t: 120.0, gpu: 1, class: Some(0), down_s: 30.0 },
+        ],
+        retry_budget: 1,
+        storm_guard: u64::MAX,
+    };
+    let plans: Vec<(&str, FaultPlan)> = vec![("none", FaultPlan::none()), ("explicit", crash)];
+    let sheds: Vec<(&str, OverloadPolicy)> = vec![
+        ("none", OverloadPolicy::none()),
+        ("deadline", OverloadPolicy { deadline_mult: 1.0, ..OverloadPolicy::none() }),
+        (
+            "brownout",
+            OverloadPolicy { queue_cap: 1, brownout_threshold: 0.05, ..OverloadPolicy::none() },
+        ),
+    ];
+    for router in all_routers() {
+        for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+            for (fname, plan) in &plans {
+                for (pname, policy) in &sheds {
+                    let mut cfg = diurnal_fleet(2, reactive(), router.clone(), mode, 11);
+                    cfg.tenants = gold_bronze();
+                    cfg.faults = plan.clone();
+                    cfg.overload = *policy;
+                    let off = cfg.run().unwrap();
+                    cfg.telemetry =
+                        TelemetryConfig { enabled: true, interval_s: 1.0, trace_sample: 1 };
+                    let on = cfg.run().unwrap();
+                    let tag = format!("{}/{}/{fname}/{pname}", router.name(), mode.name());
+                    assert!(off.telemetry.is_none(), "{tag}: off run must carry no payload");
+                    assert!(on.telemetry.is_some(), "{tag}: on run must carry a payload");
+                    assert_eq!(off.arrived, on.arrived, "{tag}");
+                    assert_eq!(off.routed, on.routed, "{tag}");
+                    assert_eq!(off.completed, on.completed, "{tag}");
+                    assert_eq!(off.slo_violations, on.slo_violations, "{tag}");
+                    assert_eq!(off.shed_overload, on.shed_overload, "{tag}");
+                    assert_eq!(off.failed_requests, on.failed_requests, "{tag}");
+                    assert_eq!(off.retried_requests, on.retried_requests, "{tag}");
+                    assert_eq!(off.lost_in_crash, on.lost_in_crash, "{tag}");
+                    assert_eq!(off.train_steps, on.train_steps, "{tag}");
+                    assert_eq!(off.goodput_rps.to_bits(), on.goodput_rps.to_bits(), "{tag}");
+                    assert_eq!(
+                        off.pooled.p99_latency_ms.to_bits(),
+                        on.pooled.p99_latency_ms.to_bits(),
+                        "{tag}: tracing must not move the latency tail"
+                    );
+                    assert_eq!(
+                        off.fairness_jain.to_bits(),
+                        on.fairness_jain.to_bits(),
+                        "{tag}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// (i2) Traced sweeps are bitwise-deterministic at 1/2/4/16 workers —
+/// including the telemetry payload itself: the FNV checksum over the
+/// rendered Prometheus timelines and the span JSONL is bit-equal to the
+/// serial baseline at every worker count.
+#[test]
+fn telemetry_sweep_bitwise_deterministic_across_worker_counts() {
+    let mut grid: Vec<FleetConfig> = Vec::new();
+    for mode in [RepartitionMode::Rolling, RepartitionMode::InPlace] {
+        for seed in [2024u64, 2025u64] {
+            let mut cfg = diurnal_fleet(2, reactive(), RouterKind::WeightedFair, mode, seed);
+            cfg.tenants = gold_bronze();
+            cfg.faults = FaultPlan::from_mtbf(2, 240.0, 70.0, 15.0, seed ^ 0xFA17);
+            cfg.overload = OverloadPolicy { deadline_mult: 2.0, ..OverloadPolicy::none() };
+            cfg.telemetry = TelemetryConfig { enabled: true, interval_s: 1.0, trace_sample: 2 };
+            grid.push(cfg);
+        }
+    }
+    let baseline = sweep::run_fleet(&SweepEngine::new(1), &grid).unwrap();
+    for out in &baseline {
+        let tel = out.telemetry.as_ref().expect("traced run must carry a payload");
+        assert!(!tel.series.all().is_empty());
+        assert!(!tel.spans.is_empty());
+    }
+    for workers in [2usize, 4, 16] {
+        let outs = sweep::run_fleet(&SweepEngine::new(workers), &grid).unwrap();
+        assert_eq!(outs.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&outs) {
+            assert_eq!(a.arrived, b.arrived, "workers={workers}");
+            assert_eq!(a.completed, b.completed, "workers={workers}");
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "workers={workers}");
+            let (ta, tb) = (a.telemetry.as_ref().unwrap(), b.telemetry.as_ref().unwrap());
+            assert_eq!(ta.series.all().len(), tb.series.all().len(), "workers={workers}");
+            assert_eq!(ta.spans.len(), tb.spans.len(), "workers={workers}");
+            assert_eq!(
+                ta.checksum(),
+                tb.checksum(),
+                "workers={workers}: telemetry payload must be bit-identical"
+            );
+        }
+    }
+}
+
+/// (i3) Exact reconciliation: every windowed counter series sums to its
+/// `FleetOutcome` total — arrivals, routed, completions, violations, the
+/// shed split by cause, train steps, and the per-tenant completion and
+/// violation timelines against the per-tenant outcome rows.
+#[test]
+fn window_series_reconcile_exactly_with_outcome_totals() {
+    for (fname, plan) in [
+        ("none", FaultPlan::none()),
+        ("mtbf", FaultPlan::from_mtbf(2, 240.0, 60.0, 15.0, 3)),
+    ] {
+        let mut cfg =
+            diurnal_fleet(2, reactive(), RouterKind::WeightedFair, RepartitionMode::Rolling, 11);
+        cfg.tenants = gold_bronze();
+        cfg.faults = plan;
+        cfg.overload =
+            OverloadPolicy { queue_cap: 2, deadline_mult: 2.0, ..OverloadPolicy::none() };
+        cfg.telemetry = TelemetryConfig::timelines(1.0);
+        let out = cfg.run().unwrap();
+        let tel = out.telemetry.as_ref().expect("timelines run must carry a payload");
+        assert!(out.shed_overload > 0, "{fname}: the scenario must actually shed");
+        let cases = [
+            ("fleet_window_arrivals", out.arrived),
+            ("fleet_window_routed", out.routed),
+            ("fleet_window_completed", out.completed),
+            ("fleet_window_violations", out.slo_violations),
+            ("fleet_window_shed_deadline", out.shed_deadline),
+            ("fleet_window_shed_capacity", out.shed_capacity),
+            ("fleet_window_shed_brownout", out.shed_brownout),
+            ("fleet_window_train_steps", out.train_steps),
+        ];
+        for (name, want) in cases {
+            assert_eq!(
+                sum_series(tel, name),
+                want,
+                "{fname}: Σ {name} must equal its FleetOutcome total"
+            );
+        }
+        assert_eq!(out.tenants.len(), 2, "{fname}");
+        for t in &out.tenants {
+            let comp = tel
+                .series
+                .get_tagged("fleet_tenant_window_completed", "tenant", &t.name)
+                .map_or(0u64, |s| s.points().iter().map(|p| p.value as u64).sum());
+            assert_eq!(comp, t.completed, "{fname}/{}: tenant completions reconcile", t.name);
+            let viol = tel
+                .series
+                .get_tagged("fleet_tenant_window_violations", "tenant", &t.name)
+                .map_or(0u64, |s| s.points().iter().map(|p| p.value as u64).sum());
+            assert_eq!(viol, t.slo_violations, "{fname}/{}: tenant violations reconcile", t.name);
+        }
     }
 }
