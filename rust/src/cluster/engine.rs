@@ -62,7 +62,7 @@ use crate::workload::arrival::{Arrival, ArrivalError, ArrivalSpec};
 use crate::workload::spec::WorkloadSpec;
 
 use super::faults::{FaultPlan, FaultRecord};
-use super::overload::{OverloadGuard, OverloadPolicy, ShedCause, ShedDiscipline};
+use super::overload::{BreakerState, OverloadGuard, OverloadPolicy, ShedCause, ShedDiscipline};
 use super::policy::{FleetCtx, FleetObs, FleetPolicyKind, GpuObs};
 use super::router::{GpuHealth, RoutePolicy, RouterKind};
 use super::telemetry::{FleetRecorder, FleetTelemetry, TelemetryConfig};
@@ -434,6 +434,101 @@ impl GpuState {
     }
 }
 
+/// Read-only probe into the engine's live state, handed to an
+/// [`EngineInspector`] at each hook point. Everything here is a
+/// borrowed view — the probe cannot mutate the simulation, so an
+/// inspector can never change an outcome (the bitwise-determinism
+/// contract extends to inspected runs).
+pub struct EngineProbe<'a> {
+    gpus: &'a [GpuState],
+    guard: &'a OverloadGuard,
+    mode: RepartitionMode,
+}
+
+impl EngineProbe<'_> {
+    /// Fleet size.
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Reconfiguration discipline of the run.
+    pub fn mode(&self) -> RepartitionMode {
+        self.mode
+    }
+
+    /// The router's health view of one GPU.
+    pub fn gpu_health(&self, g: usize) -> GpuHealth {
+        self.gpus[g].health()
+    }
+
+    /// True while the replica is crashed by an instance-level fault.
+    pub fn replica_down(&self, g: usize, class: usize) -> bool {
+        self.gpus[g].replicas[class].down
+    }
+
+    /// True while the replica serves an in-flight request.
+    pub fn replica_busy(&self, g: usize, class: usize) -> bool {
+        self.gpus[g].replicas[class].busy
+    }
+
+    /// Current queue length of one replica (front = in service when
+    /// busy).
+    pub fn queue_depth(&self, g: usize, class: usize) -> usize {
+        self.gpus[g].replicas[class].queue.len()
+    }
+
+    /// The ingress breaker's admission verdict for one GPU.
+    pub fn gpu_admits(&self, g: usize) -> bool {
+        self.guard.gpu_admits(g)
+    }
+
+    /// One GPU's ingress breaker state.
+    pub fn breaker_state(&self, g: usize) -> BreakerState {
+        self.guard.breaker_state(g)
+    }
+
+    /// Current brownout ladder level (number of browned-out tenants).
+    pub fn brownout_level(&self) -> usize {
+        self.guard.brownout_level()
+    }
+
+    /// The exact routing-eligibility predicate `route_request` uses:
+    /// health-gated (crashed GPUs and replicas excluded; under rolling,
+    /// draining/reconfiguring GPUs too) AND-ed with the ingress breaker.
+    pub fn may_route(&self, g: usize, class: usize) -> bool {
+        let inplace = self.mode == RepartitionMode::InPlace;
+        self.gpus[g].health().may_route(inplace, self.gpus[g].replicas[class].down)
+            && self.guard.gpu_admits(g)
+    }
+}
+
+/// Read-only observer of a fleet run, for invariant checkers and the
+/// model-based testing harness. Every hook defaults to a no-op; the
+/// engine calls them with a borrowed [`EngineProbe`], so inspectors can
+/// assert on live state but never steer the simulation.
+pub trait EngineInspector {
+    /// A request of `class` was routed to `gpu` — called right after the
+    /// router chose the destination and *before* any breaker/queue
+    /// bookkeeping, so the probe shows the state the decision was made
+    /// against. Covers every dispatch path: arrivals, drain migration,
+    /// crash retries and stranded re-dispatch.
+    fn on_route(&mut self, _t: f64, _gpu: usize, _class: usize, _probe: &EngineProbe) {}
+    /// A window tick fired (after the overload guard advanced its
+    /// breaker/brownout state machines for the closing window).
+    fn on_tick(&mut self, _t: f64, _probe: &EngineProbe) {}
+    /// A crash executed on `gpu` (`class: None` = whole GPU), after its
+    /// queues were dumped and retries re-dispatched.
+    fn on_crash(&mut self, _t: f64, _gpu: usize, _class: Option<usize>, _probe: &EngineProbe) {}
+    /// A recovery executed on `gpu` (`class: None` = whole GPU), after
+    /// stranded re-dispatch and the defensive restart.
+    fn on_recover(&mut self, _t: f64, _gpu: usize, _class: Option<usize>, _probe: &EngineProbe) {}
+}
+
+/// The default inspector: observes nothing.
+pub struct NoopInspector;
+
+impl EngineInspector for NoopInspector {}
+
 /// Move the queue head into service. `est`/`power_w` are the replica's
 /// current step estimate and power draw (copied out by the caller to
 /// avoid aliasing the GPU state); the telemetry recorder observes the
@@ -583,6 +678,7 @@ fn dispatch_req(
     mode: RepartitionMode,
     guard: &mut OverloadGuard,
     tel: &mut FleetRecorder,
+    insp: &mut dyn EngineInspector,
     class: usize,
     req: Req,
     now: f64,
@@ -592,6 +688,10 @@ fn dispatch_req(
     let Some(g) = route_request(router, gpus_state, mode, class, guard, available, depth) else {
         return Dispatch::Stranded;
     };
+    // Observe before `note_route` mutates the guard (a half-open breaker
+    // consumes a probe there): the inspector sees exactly the state the
+    // routing decision was made against.
+    insp.on_route(now, g, class, &EngineProbe { gpus: &*gpus_state, guard: &*guard, mode });
     guard.note_route(g);
     tel.on_route(now, req.id, class, g);
     let gs = &mut gpus_state[g];
@@ -676,6 +776,7 @@ fn drain_stranded(
     mode: RepartitionMode,
     guard: &mut OverloadGuard,
     tel: &mut FleetRecorder,
+    insp: &mut dyn EngineInspector,
     stranded: &mut [VecDeque<Req>],
     t: f64,
     available: &mut Vec<bool>,
@@ -691,8 +792,9 @@ fn drain_stranded(
             stranded[c].push_back(req);
             continue;
         }
-        match dispatch_req(des, router, gpus_state, mode, guard, tel, c, req, t, available, depth)
-        {
+        match dispatch_req(
+            des, router, gpus_state, mode, guard, tel, insp, c, req, t, available, depth,
+        ) {
             // A capacity shed is terminal (already counted), not a block:
             // requests behind it may still find room.
             Dispatch::Placed(_) | Dispatch::Shed => {}
@@ -856,6 +958,17 @@ impl FleetConfig {
 
     /// Run the fleet simulation to completion.
     pub fn run(&self) -> Result<FleetOutcome, FleetError> {
+        self.run_with_inspector(&mut NoopInspector)
+    }
+
+    /// Run the fleet simulation to completion with a read-only
+    /// [`EngineInspector`] observing routing decisions, window ticks,
+    /// crashes and recoveries. The inspector cannot steer the run:
+    /// `run()` is exactly this with [`NoopInspector`], byte-for-byte.
+    pub fn run_with_inspector(
+        &self,
+        insp: &mut dyn EngineInspector,
+    ) -> Result<FleetOutcome, FleetError> {
         self.validate()?;
         let n_gpus = self.gpus.len();
         let n_classes = self.classes.len();
@@ -1051,6 +1164,7 @@ impl FleetConfig {
                         self.mode,
                         &mut guard,
                         &mut tel,
+                        insp,
                         class,
                         req,
                         t,
@@ -1176,6 +1290,10 @@ impl FleetConfig {
                     // resets its counters below, so every increment lands in
                     // exactly one flushed window and Σ(window) = final total.
                     telemetry_window_flush(&mut tel, t, &gpus_state, &guard);
+                    insp.on_tick(
+                        t,
+                        &EngineProbe { gpus: &gpus_state, guard: &guard, mode: self.mode },
+                    );
                     let mut gpu_obs = Vec::with_capacity(n_gpus);
                     for gs in gpus_state.iter_mut() {
                         let mut services = Vec::with_capacity(n_classes);
@@ -1253,6 +1371,7 @@ impl FleetConfig {
                                                 RepartitionMode::Rolling,
                                                 &mut guard,
                                                 &mut tel,
+                                                insp,
                                                 c,
                                                 req,
                                                 t,
@@ -1310,6 +1429,7 @@ impl FleetConfig {
                             self.mode,
                             &mut guard,
                             &mut tel,
+                            insp,
                             &mut stranded,
                             t,
                             &mut avail_scratch,
@@ -1362,6 +1482,7 @@ impl FleetConfig {
                         self.mode,
                         &mut guard,
                         &mut tel,
+                        insp,
                         &mut stranded,
                         t,
                         &mut avail_scratch,
@@ -1478,6 +1599,7 @@ impl FleetConfig {
                                 self.mode,
                                 &mut guard,
                                 &mut tel,
+                                insp,
                                 c,
                                 req,
                                 t,
@@ -1505,6 +1627,12 @@ impl FleetConfig {
                     if inj.down_s.is_finite() {
                         des.schedule_in(inj.down_s, Ev::Recover { fault });
                     }
+                    insp.on_crash(
+                        t,
+                        g,
+                        inj.class,
+                        &EngineProbe { gpus: &gpus_state, guard: &guard, mode: self.mode },
+                    );
                 }
                 Ev::Recover { fault } => {
                     let inj = self.faults.injections[fault];
@@ -1542,6 +1670,7 @@ impl FleetConfig {
                         self.mode,
                         &mut guard,
                         &mut tel,
+                        insp,
                         &mut stranded,
                         t,
                         &mut avail_scratch,
@@ -1575,6 +1704,12 @@ impl FleetConfig {
                             }
                         }
                     }
+                    insp.on_recover(
+                        t,
+                        g,
+                        inj.class,
+                        &EngineProbe { gpus: &gpus_state, guard: &guard, mode: self.mode },
+                    );
                 }
             }
         }

@@ -57,7 +57,8 @@ pub mod telemetry;
 pub mod tenancy;
 
 pub use engine::{
-    FleetConfig, FleetDecision, FleetError, FleetOutcome, RepartitionMode, RequestClass,
+    EngineInspector, EngineProbe, FleetConfig, FleetDecision, FleetError, FleetOutcome,
+    NoopInspector, RepartitionMode, RequestClass,
 };
 pub use faults::{FaultInjection, FaultPlan, FaultRecord, DEFAULT_RETRY_BUDGET};
 pub use overload::{
@@ -65,8 +66,8 @@ pub use overload::{
     DEFAULT_BREAKER_PROBES,
 };
 pub use policy::{
-    FleetAction, FleetCtx, FleetObs, FleetPolicy, FleetPolicyKind, FleetReactive, FleetStatic,
-    GpuObs,
+    FleetAction, FleetCtx, FleetObs, FleetPolicy, FleetPolicyKind, FleetReactive, FleetScripted,
+    FleetStatic, GpuObs, ScriptedRepartition,
 };
 pub use router::{
     Affinity, GpuHealth, LeastLoaded, RoundRobin, RoutePolicy, RouterKind, WeightedFair,

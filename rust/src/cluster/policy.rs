@@ -124,6 +124,10 @@ pub enum FleetPolicyKind {
     Static,
     /// Per-GPU hysteresis on observed pressure, one GPU per window.
     Reactive(ReactiveParams),
+    /// Pre-scripted repartitions at fixed times (testing harness: makes
+    /// *when* and *which GPU* exactly reproducible, unlike the
+    /// observation-driven policies).
+    Scripted(Vec<ScriptedRepartition>),
 }
 
 impl FleetPolicyKind {
@@ -132,6 +136,7 @@ impl FleetPolicyKind {
         match self {
             FleetPolicyKind::Static => "static",
             FleetPolicyKind::Reactive(_) => "reactive",
+            FleetPolicyKind::Scripted(_) => "scripted",
         }
     }
 
@@ -149,7 +154,85 @@ impl FleetPolicyKind {
         match self {
             FleetPolicyKind::Static => Box::new(FleetStatic),
             FleetPolicyKind::Reactive(p) => Box::new(FleetReactive { params: p.clone() }),
+            FleetPolicyKind::Scripted(s) => {
+                Box::new(FleetScripted { script: s.clone(), next: 0 })
+            }
         }
+    }
+}
+
+/// One entry of a [`FleetPolicyKind::Scripted`] schedule: at the first
+/// window tick at or after `at_t`, repartition `gpu` to whatever the
+/// exhaustive planner picks for the template demand scaled by
+/// `rate_scale`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScriptedRepartition {
+    /// Earliest window-tick time the entry fires at, simulated seconds.
+    pub at_t: f64,
+    /// Fleet index of the GPU to repartition (taken modulo fleet size).
+    pub gpu: usize,
+    /// Multiplier on the template per-class demand the new plan is sized
+    /// for; varying it is what forces a genuinely different layout.
+    pub rate_scale: f64,
+}
+
+/// Deterministic script player: consumes due entries in order, at most
+/// one per window tick (matching the engine's one-repartition-per-window
+/// contract). Entries whose GPU is not running at their tick are retried
+/// at the next tick rather than dropped — the engine only calls
+/// [`FleetPolicy::decide`] while every GPU is running, so in practice a
+/// due entry fires at the first all-running tick after `at_t`.
+#[derive(Debug)]
+pub struct FleetScripted {
+    /// The schedule, in firing order.
+    pub script: Vec<ScriptedRepartition>,
+    /// Index of the next unconsumed entry.
+    pub next: usize,
+}
+
+impl FleetPolicy for FleetScripted {
+    fn name(&self) -> &'static str {
+        "scripted"
+    }
+    fn decide(&mut self, obs: &FleetObs, ctx: &FleetCtx) -> Option<FleetAction> {
+        while self.next < self.script.len() {
+            let entry = &self.script[self.next];
+            if entry.at_t > obs.t {
+                return None; // not due yet; later entries fire even later
+            }
+            self.next += 1;
+            let n = obs.gpus.len();
+            if n == 0 {
+                continue;
+            }
+            let g = entry.gpu % n;
+            // Size for the template (whole-trace mean) demand scaled by
+            // the entry's factor: deterministic, independent of window
+            // observations.
+            let scale = if entry.rate_scale.is_finite() && entry.rate_scale >= 0.0 {
+                entry.rate_scale
+            } else {
+                1.0
+            };
+            let rates: Vec<f64> = ctx
+                .class_workloads
+                .iter()
+                .map(|&wi| {
+                    ctx.workloads[wi].demand_rps.unwrap_or(0.0).max(0.0) * scale
+                        * ctx.weights.get(g).copied().unwrap_or(0.0)
+                })
+                .collect();
+            let ws = ctx.planning_workloads(&rates);
+            let Some(plan) = ctx.schedulers[g].plan_for_demand(&ws, ctx.rho_max) else {
+                continue; // infeasible scale: skip the entry
+            };
+            let reason = format!(
+                "scripted: gpu {g} at t={:.1} (rate_scale {:.2})",
+                entry.at_t, entry.rate_scale
+            );
+            return Some(FleetAction { gpu: g, plan, reason });
+        }
+        None
     }
 }
 
@@ -457,6 +540,34 @@ mod tests {
             train_steps: 100,
             running: true,
         }
+    }
+
+    #[test]
+    fn scripted_policy_fires_in_order_and_at_most_once_per_tick() {
+        let f = fixture(2, 66.0);
+        let kind = FleetPolicyKind::Scripted(vec![
+            ScriptedRepartition { at_t: 30.0, gpu: 0, rate_scale: 0.1 },
+            ScriptedRepartition { at_t: 30.0, gpu: 5, rate_scale: 2.0 }, // gpu 5 % 2 = 1
+            ScriptedRepartition { at_t: 90.0, gpu: 1, rate_scale: 1.0 },
+        ]);
+        assert_eq!(kind.name(), "scripted");
+        let mut p = kind.build();
+        let calm = |t: f64| FleetObs {
+            t,
+            window_s: 10.0,
+            gpus: vec![obs_gpu([33.0, 33.0], 25.0, 0.5), obs_gpu([33.0, 33.0], 25.0, 0.5)],
+        };
+        // Before the first due time: nothing fires.
+        assert!(p.decide(&calm(10.0), &ctx(&f, 10.0)).is_none());
+        // Two entries due at t=30: exactly one fires per tick, in order.
+        let a = p.decide(&calm(30.0), &ctx(&f, 30.0)).expect("first entry due");
+        assert_eq!(a.gpu, 0);
+        assert!(a.reason.contains("scripted"), "{}", a.reason);
+        let b = p.decide(&calm(40.0), &ctx(&f, 40.0)).expect("second entry still queued");
+        assert_eq!(b.gpu, 1, "gpu index taken modulo fleet size");
+        assert!(p.decide(&calm(50.0), &ctx(&f, 50.0)).is_none(), "third not due until 90");
+        assert!(p.decide(&calm(90.0), &ctx(&f, 90.0)).is_some());
+        assert!(p.decide(&calm(500.0), &ctx(&f, 500.0)).is_none(), "script exhausted");
     }
 
     #[test]

@@ -45,6 +45,7 @@ pub mod scheduler;
 pub mod sharing;
 pub mod simgpu;
 pub mod sweep;
+pub mod testing;
 pub mod util;
 pub mod workload;
 

@@ -35,6 +35,7 @@ fn main() -> ExitCode {
         Some("plan") => cmd_plan(&args),
         Some("orchestrate") => cmd_orchestrate(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("fuzz") => cmd_fuzz(&args),
         Some("bench-check") => cmd_bench_check(&args),
         Some("layouts") => cmd_layouts(&args),
         Some("version") => {
@@ -70,6 +71,7 @@ fn print_usage() {
          plan        optimize a hybrid train+serve partition (paper §5)\n  \
          orchestrate online repartitioning policies under diurnal load\n  \
          fleet       multi-GPU fleet simulation (policy × router × fleet-size grids)\n  \
+         fuzz        model-based fuzzing of the fleet engine (random command sequences)\n  \
          bench-check compare a bench record against its checked-in baseline\n  \
          version     print the version\n\n\
          Run `migperf <COMMAND> --help` for command options.",
@@ -1435,6 +1437,107 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+fn cmd_fuzz(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        #[rustfmt::skip]
+        println!(
+            "{}",
+            render_help(
+                "migperf",
+                "fuzz",
+                "Model-based fuzzing of the fleet engine: generate random command \
+                 sequences (bursts, crashes, repartitions, overload knobs), replay \
+                 each against the engine under live routing/brownout invariants plus \
+                 a closed-form reference model, and minimize any failure to a \
+                 pasteable repro. Deterministic: the report digest is bitwise-\
+                 identical for a given --cases/--seed/--max-cmds at any worker count",
+                &[
+                    OptSpec { name: "cases", value: "N", help: "command sequences to run", default: Some("50") },
+                    OptSpec { name: "seed", value: "S", help: "master PRNG seed", default: Some("7") },
+                    OptSpec { name: "max-cmds", value: "K", help: "max commands per sequence", default: Some("24") },
+                    OptSpec { name: "workers", value: "W", help: "worker threads (0 = all cores)", default: Some("0") },
+                    OptSpec { name: "out", value: "DIR", help: "write failure repros + seeds under DIR", default: None },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    use migperf::sweep::SweepEngine;
+    use migperf::testing::run_fuzz;
+
+    let cases: usize = args.parse_or("cases", 50usize).map_err(|e| e.to_string())?;
+    let seed: u64 = args.parse_or("seed", 7u64).map_err(|e| e.to_string())?;
+    let max_cmds: usize = args.parse_or("max-cmds", 24usize).map_err(|e| e.to_string())?;
+    let workers: usize = args.parse_or("workers", 0usize).map_err(|e| e.to_string())?;
+    if cases == 0 {
+        return Err("--cases must be at least 1".into());
+    }
+    if max_cmds == 0 {
+        return Err("--max-cmds must be at least 1".into());
+    }
+    let engine = if workers == 0 { SweepEngine::from_env() } else { SweepEngine::new(workers) };
+    println!(
+        "fuzz: {cases} cases, seed {seed}, up to {max_cmds} commands each, {} workers",
+        engine.workers()
+    );
+    let report = run_fuzz(cases, seed, max_cmds, &engine);
+    println!(
+        "fuzz: {} / {} cases passed, digest {:016x}",
+        report.cases - report.failures.len(),
+        report.cases,
+        report.digest
+    );
+    if let Some(dir) = args.get("out").map(str::to_string) {
+        std::fs::create_dir_all(&dir).map_err(|e| format!("creating {dir}: {e}"))?;
+        let mut doc = String::new();
+        doc.push_str(&format!(
+            "# migperf fuzz report\ncases: {}\nseed: {}\nmax_cmds: {}\ndigest: {:016x}\n\
+             failures: {}\n",
+            report.cases,
+            report.seed,
+            report.max_cmds,
+            report.digest,
+            report.failures.len()
+        ));
+        for f in &report.failures {
+            doc.push_str(&format!(
+                "\n## case {} (case_seed {})\nviolations:\n",
+                f.index, f.case_seed
+            ));
+            for v in &f.violations {
+                doc.push_str(&format!("  - {v}\n"));
+            }
+            doc.push_str("minimized repro (paste into rust/tests/model_regressions.rs):\n");
+            doc.push_str(&f.repro);
+        }
+        let path = format!("{dir}/fuzz_report.txt");
+        std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
+        println!("fuzz: report written to {path}");
+    }
+    if report.failures.is_empty() {
+        Ok(())
+    } else {
+        for f in &report.failures {
+            eprintln!("\ncase {} (case_seed {}) failed:", f.index, f.case_seed);
+            for v in &f.violations {
+                eprintln!("  - {v}");
+            }
+            eprintln!("minimized repro (paste into rust/tests/model_regressions.rs):");
+            eprintln!("{}", f.repro);
+        }
+        Err(format!(
+            "{} of {} fuzz cases violated the model (seed {}; rerun with --cases {} --seed {} \
+             --max-cmds {} to reproduce)",
+            report.failures.len(),
+            report.cases,
+            report.seed,
+            report.cases,
+            report.seed,
+            report.max_cmds
+        ))
+    }
 }
 
 fn cmd_bench_check(args: &Args) -> Result<(), String> {

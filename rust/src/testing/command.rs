@@ -1,0 +1,489 @@
+//! The command grammar and its total compiler.
+//!
+//! A [`CommandSeq`] is an abstract fleet scenario: setup commands fix
+//! the pre-`t=0` configuration (fleet size, tenant weights, router,
+//! overload knobs — last occurrence wins, wherever it sits in the
+//! sequence), and timeline commands play out on a virtual clock that
+//! only [`Command::AdvanceTime`] moves. [`CommandSeq::compile`] lowers
+//! the sequence to a concrete [`FleetConfig`]:
+//!
+//! * arrivals become an [`ArrivalSpec::Replay`] trace per class, so the
+//!   reference model knows the *exact* per-class arrival count;
+//! * crash/recover pairs become a [`FaultPlan`] (a crash with no later
+//!   recovery is permanent, `down_s = ∞`);
+//! * repartitions become a [`FleetPolicyKind::Scripted`] schedule.
+//!
+//! The compiler is **total**: every sequence compiles to a config that
+//! passes [`FleetConfig::validate`]. Out-of-range indices wrap,
+//! parameters clamp to sane windows, a crash on an already-down GPU is
+//! dropped (the fault plan allows one open fault per GPU), a recover
+//! with nothing open is dropped, and per-class traces are thinned until
+//! their mean rate is plannable. Totality means validity is closed
+//! under command deletion and parameter shrinking — the shrinker can
+//! never wander out of the valid space, which is what makes delete-chunk
+//! minimization sound.
+
+use crate::cluster::engine::{FleetConfig, RepartitionMode, RequestClass};
+use crate::cluster::faults::{FaultInjection, FaultPlan};
+use crate::cluster::overload::{OverloadPolicy, ShedDiscipline, DEFAULT_BREAKER_PROBES};
+use crate::cluster::policy::{FleetPolicyKind, ScriptedRepartition};
+use crate::cluster::router::RouterKind;
+use crate::cluster::telemetry::TelemetryConfig;
+use crate::cluster::tenancy::Tenant;
+use crate::mig::gpu::GpuModel;
+use crate::models::zoo::lookup;
+use crate::orchestrator::ReconfigCost;
+use crate::workload::arrival::ArrivalSpec;
+use crate::workload::spec::WorkloadSpec;
+
+/// Number of request classes every compiled scenario serves (one per
+/// tenant: `gold` owns class 0, `bronze` class 1).
+pub const N_CLASSES: usize = 2;
+/// Observation-window (policy tick) length, seconds.
+pub const WINDOW_S: f64 = 5.0;
+/// Quiet margin appended after the last scripted moment, seconds — keeps
+/// `window_s < duration_s` and leaves room to drain.
+pub const MARGIN_S: f64 = 10.0;
+/// Per-class mean-rate ceiling (requests/s): traces are thinned to stay
+/// below it so the initial fleet plan is always feasible, even re-split
+/// under the most skewed tenant weights the grammar allows.
+pub const RATE_CAP_RPS: f64 = 20.0;
+
+/// One abstract step of a fleet scenario. `Debug` output doubles as the
+/// repro syntax: `Command::{:?}` is valid Rust construction code.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// Setup: fleet size (clamped to 1..=3 A100s), last wins.
+    ResizeFleet {
+        /// Number of GPUs.
+        gpus: usize,
+    },
+    /// Setup: tenant weights (clamped to [0.5, 4]), last wins.
+    RetuneTenants {
+        /// Weight of tenant `gold` (class 0).
+        gold: f64,
+        /// Weight of tenant `bronze` (class 1).
+        bronze: f64,
+    },
+    /// Setup: repartition discipline, last wins.
+    SetRolling {
+        /// `true` = rolling drain, `false` = in-place.
+        rolling: bool,
+    },
+    /// Setup: router choice as an index (mod 4: round-robin,
+    /// least-loaded, affinity, weighted-fair), last wins.
+    SetRouter {
+        /// Router index.
+        router: u8,
+    },
+    /// Setup: bounded queues + deadlines, last wins. `queue_cap` 0 =
+    /// unbounded (clamped to ≤ 16); `deadline_mult` < 1 disables
+    /// deadlines (else clamped to [1, 10]).
+    SetOverload {
+        /// Per-replica queue bound (0 = unbounded).
+        queue_cap: usize,
+        /// Deadline = arrival + mult × SLO (0 disables).
+        deadline_mult: f64,
+        /// `true` = drop-oldest, `false` = reject-newest.
+        drop_oldest: bool,
+    },
+    /// Setup: tenant-weighted brownout threshold, last wins.
+    /// Non-positive disables; else clamped to [0.05, 1].
+    SetBrownout {
+        /// Shed-pressure fraction that escalates the ladder.
+        threshold: f64,
+    },
+    /// Setup: per-GPU ingress breaker, last wins. Non-positive
+    /// `threshold` disables; else clamped to [0.05, 1]; `probes`
+    /// clamped to 1..=16.
+    SetBreaker {
+        /// Shed-fraction trip threshold.
+        threshold: f64,
+        /// Half-open probe budget.
+        probes: u64,
+    },
+    /// Timeline: advance the virtual clock (clamped to [0.5, 60] s).
+    AdvanceTime {
+        /// Seconds to advance.
+        dt_s: f64,
+    },
+    /// Timeline: `n` requests of `class` evenly spaced over the next
+    /// `over_s` seconds (class wraps mod 2, `n` clamps to 1..=200,
+    /// `over_s` to [0.1, 30]). Does not advance the clock.
+    ArriveBurst {
+        /// Request class.
+        class: usize,
+        /// Burst size.
+        n: u64,
+        /// Burst span, seconds.
+        over_s: f64,
+    },
+    /// Timeline: whole-GPU crash at the current clock (gpu wraps mod
+    /// fleet size; dropped if that GPU already has an open fault).
+    /// Permanent unless a later [`Command::Recover`] closes it.
+    CrashGpu {
+        /// Fleet index.
+        gpu: usize,
+    },
+    /// Timeline: instance-level crash of `class`'s replica on `gpu`
+    /// (same wrapping/drop rules as [`Command::CrashGpu`]).
+    CrashInstance {
+        /// Fleet index.
+        gpu: usize,
+        /// Crashed class.
+        class: usize,
+    },
+    /// Timeline: close the open fault on `gpu` at the current clock
+    /// (dropped when nothing is open there, or when the clock has not
+    /// advanced past the crash — recovery must be strictly later).
+    Recover {
+        /// Fleet index.
+        gpu: usize,
+    },
+    /// Timeline: scripted repartition of `gpu` at the first policy tick
+    /// at or after the current clock, sized for the template demand
+    /// scaled by `rate_scale` (clamped to [0.25, 2]).
+    Repartition {
+        /// Fleet index.
+        gpu: usize,
+        /// Demand multiplier the new plan is sized for.
+        rate_scale: f64,
+    },
+}
+
+/// A seeded command sequence: the unit the generator emits, the shrinker
+/// minimizes, and the regression corpus pins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommandSeq {
+    /// Seed the sequence was generated from (recorded for the repro; the
+    /// compiled config also uses it as the engine seed).
+    pub seed: u64,
+    /// The commands, in play order.
+    pub commands: Vec<Command>,
+}
+
+/// A compiled scenario: the concrete config plus the schedule facts the
+/// reference model checks against.
+#[derive(Debug, Clone)]
+pub struct Compiled {
+    /// The runnable fleet config (always passes `validate()`).
+    pub config: FleetConfig,
+    /// Per-class replay traces (the exact expected arrivals).
+    pub times: Vec<Vec<f64>>,
+    /// Scripted repartition count (upper bound on executed decisions).
+    pub scripted: usize,
+}
+
+fn clamp_f(v: f64, lo: f64, hi: f64) -> f64 {
+    if v.is_finite() {
+        v.clamp(lo, hi)
+    } else {
+        lo
+    }
+}
+
+impl CommandSeq {
+    /// Lower the sequence to a concrete, always-valid fleet config. See
+    /// the module docs for the totality rules.
+    pub fn compile(&self) -> Compiled {
+        // Pass 1 — setup, last occurrence wins.
+        let mut n_gpus: usize = 2;
+        let mut gold_w: f64 = 1.0;
+        let mut bronze_w: f64 = 1.0;
+        let mut rolling = true;
+        let mut router = RouterKind::LeastLoaded;
+        let mut overload = OverloadPolicy::none();
+        for cmd in &self.commands {
+            match *cmd {
+                Command::ResizeFleet { gpus } => n_gpus = gpus.clamp(1, 3),
+                Command::RetuneTenants { gold, bronze } => {
+                    gold_w = clamp_f(gold, 0.5, 4.0);
+                    bronze_w = clamp_f(bronze, 0.5, 4.0);
+                }
+                Command::SetRolling { rolling: r } => rolling = r,
+                Command::SetRouter { router: r } => {
+                    router = match r % 4 {
+                        0 => RouterKind::RoundRobin,
+                        1 => RouterKind::LeastLoaded,
+                        2 => RouterKind::Affinity { spill: 2 },
+                        _ => RouterKind::WeightedFair,
+                    };
+                }
+                Command::SetOverload { queue_cap, deadline_mult, drop_oldest } => {
+                    overload.queue_cap = queue_cap.min(16);
+                    overload.deadline_mult = if deadline_mult.is_finite() && deadline_mult >= 1.0
+                    {
+                        deadline_mult.clamp(1.0, 10.0)
+                    } else {
+                        0.0
+                    };
+                    overload.shed = if drop_oldest {
+                        ShedDiscipline::DropOldest
+                    } else {
+                        ShedDiscipline::RejectNewest
+                    };
+                }
+                Command::SetBrownout { threshold } => {
+                    overload.brownout_threshold = if threshold.is_finite() && threshold > 0.0 {
+                        threshold.clamp(0.05, 1.0)
+                    } else {
+                        f64::INFINITY
+                    };
+                }
+                Command::SetBreaker { threshold, probes } => {
+                    if threshold.is_finite() && threshold > 0.0 {
+                        overload.breaker_threshold = threshold.clamp(0.05, 1.0);
+                        overload.breaker_probes = probes.clamp(1, 16);
+                    } else {
+                        overload.breaker_threshold = f64::INFINITY;
+                        overload.breaker_probes = DEFAULT_BREAKER_PROBES;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Pass 2 — the timeline: arrivals, faults, scripted repartitions
+        // on the virtual clock.
+        let mut clock: f64 = 0.0;
+        let mut times: Vec<Vec<f64>> = vec![Vec::new(); N_CLASSES];
+        let mut injections: Vec<FaultInjection> = Vec::new();
+        // Per-GPU open fault: (injection index, crash time). The fault
+        // plan allows at most one open fault per GPU regardless of
+        // granularity.
+        let mut open: Vec<Option<(usize, f64)>> = vec![None; n_gpus];
+        let mut script: Vec<ScriptedRepartition> = Vec::new();
+        for cmd in &self.commands {
+            match *cmd {
+                Command::AdvanceTime { dt_s } => clock += clamp_f(dt_s, 0.5, 60.0),
+                Command::ArriveBurst { class, n, over_s } => {
+                    let c = class % N_CLASSES;
+                    let n = n.clamp(1, 200);
+                    let span = clamp_f(over_s, 0.1, 30.0);
+                    // Evenly spaced over [clock, clock + span]; clamped
+                    // monotone against whatever an earlier, longer burst
+                    // already appended.
+                    let mut last = times[c].last().copied().unwrap_or(0.0);
+                    for i in 0..n {
+                        let t = clock + span * (i as f64) / (n as f64);
+                        last = last.max(t);
+                        times[c].push(last);
+                    }
+                }
+                Command::CrashGpu { gpu } => {
+                    let g = gpu % n_gpus;
+                    if open[g].is_none() {
+                        open[g] = Some((injections.len(), clock));
+                        injections.push(FaultInjection {
+                            t: clock,
+                            gpu: g,
+                            class: None,
+                            down_s: f64::INFINITY,
+                        });
+                    }
+                }
+                Command::CrashInstance { gpu, class } => {
+                    let g = gpu % n_gpus;
+                    if open[g].is_none() {
+                        open[g] = Some((injections.len(), clock));
+                        injections.push(FaultInjection {
+                            t: clock,
+                            gpu: g,
+                            class: Some(class % N_CLASSES),
+                            down_s: f64::INFINITY,
+                        });
+                    }
+                }
+                Command::Recover { gpu } => {
+                    let g = gpu % n_gpus;
+                    if let Some((idx, t0)) = open[g] {
+                        if clock > t0 {
+                            injections[idx].down_s = clock - t0;
+                            open[g] = None;
+                        }
+                    }
+                }
+                Command::Repartition { gpu, rate_scale } => {
+                    script.push(ScriptedRepartition {
+                        at_t: clock,
+                        gpu: gpu % n_gpus,
+                        rate_scale: clamp_f(rate_scale, 0.25, 2.0),
+                    });
+                }
+                _ => {}
+            }
+        }
+
+        // Thin each trace until its whole-trace mean rate is plannable
+        // (halving keeps the trace monotone and terminates: a length-1
+        // trace has mean rate ≤ 1).
+        for trace in &mut times {
+            while mean_rate(trace) > RATE_CAP_RPS && trace.len() > 1 {
+                let kept: Vec<f64> =
+                    trace.iter().copied().enumerate().filter(|(i, _)| i % 2 == 0).map(|(_, t)| t)
+                        .collect();
+                *trace = kept;
+            }
+        }
+
+        // Horizon: past the last scripted moment AND the last arrival, so
+        // every replayed timestamp is inside the arrival horizon and the
+        // model's per-class counts are exact.
+        let last_arrival =
+            times.iter().filter_map(|t| t.last().copied()).fold(0.0_f64, f64::max);
+        let duration_s = clock.max(last_arrival) + MARGIN_S;
+
+        let bert = lookup("bert-base").expect("bert-base is in the model zoo");
+        let classes: Vec<RequestClass> = times
+            .iter()
+            .map(|t| RequestClass {
+                spec: WorkloadSpec::inference(bert, 8, 128),
+                slo_ms: 40.0,
+                arrival: ArrivalSpec::Replay { times: t.clone() },
+            })
+            .collect();
+        let policy = if script.is_empty() {
+            FleetPolicyKind::Static
+        } else {
+            FleetPolicyKind::Scripted(script.clone())
+        };
+        let config = FleetConfig {
+            gpus: vec![GpuModel::A100_80GB; n_gpus],
+            train: None,
+            classes,
+            tenants: vec![
+                Tenant::new("gold", gold_w, vec![0]),
+                Tenant::new("bronze", bronze_w, vec![1]),
+            ],
+            router,
+            policy,
+            mode: if rolling { RepartitionMode::Rolling } else { RepartitionMode::InPlace },
+            cost: ReconfigCost::default(),
+            duration_s,
+            window_s: WINDOW_S,
+            rho_max: 0.75,
+            faults: FaultPlan { injections, ..FaultPlan::default() },
+            overload,
+            telemetry: TelemetryConfig::timelines(WINDOW_S),
+            seed: self.seed,
+        };
+        Compiled { config, times, scripted: script.len() }
+    }
+}
+
+/// Whole-trace mean rate of a replay trace (the planner's sizing input);
+/// mirrors `ArrivalSpec::Replay::mean_rate`.
+fn mean_rate(times: &[f64]) -> f64 {
+    match times.last() {
+        Some(&last) => times.len() as f64 / last.max(1.0),
+        None => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_sequence_compiles_to_a_valid_idle_scenario() {
+        let seq = CommandSeq { seed: 1, commands: Vec::new() };
+        let c = seq.compile();
+        c.config.validate().expect("empty scenario must validate");
+        assert_eq!(c.config.gpus.len(), 2);
+        assert_eq!(c.config.classes.len(), N_CLASSES);
+        assert!(c.config.faults.is_empty());
+        assert_eq!(c.scripted, 0);
+        assert_eq!(c.config.policy, FleetPolicyKind::Static);
+        assert!(c.config.duration_s > c.config.window_s);
+    }
+
+    #[test]
+    fn compiler_is_total_over_hostile_parameters() {
+        // Extreme / non-finite parameters clamp rather than error, and
+        // the result still validates.
+        let seq = CommandSeq {
+            seed: 9,
+            commands: vec![
+                Command::ResizeFleet { gpus: 0 },
+                Command::ResizeFleet { gpus: usize::MAX },
+                Command::RetuneTenants { gold: f64::NAN, bronze: -3.0 },
+                Command::SetRouter { router: 255 },
+                Command::SetOverload {
+                    queue_cap: usize::MAX,
+                    deadline_mult: f64::INFINITY,
+                    drop_oldest: true,
+                },
+                Command::SetBrownout { threshold: f64::NAN },
+                Command::SetBreaker { threshold: 5.0, probes: 0 },
+                Command::AdvanceTime { dt_s: f64::NEG_INFINITY },
+                Command::ArriveBurst { class: 77, n: 0, over_s: -1.0 },
+                Command::CrashGpu { gpu: 12 },
+                Command::Recover { gpu: 999 },
+                Command::Repartition { gpu: 8, rate_scale: f64::NAN },
+            ],
+        };
+        let c = seq.compile();
+        c.config.validate().expect("hostile parameters must clamp, not invalidate");
+        assert_eq!(c.config.gpus.len(), 3, "usize::MAX clamps to the fleet ceiling");
+        assert_eq!(c.config.overload.queue_cap, 16);
+        assert!(c.config.overload.brownout_threshold.is_infinite(), "NaN disables");
+        assert_eq!(c.config.overload.breaker_probes, 1, "probes clamp up to 1");
+    }
+
+    #[test]
+    fn crash_recover_pairs_become_bounded_faults_and_orphans_are_permanent() {
+        let seq = CommandSeq {
+            seed: 3,
+            commands: vec![
+                Command::AdvanceTime { dt_s: 10.0 },
+                Command::CrashGpu { gpu: 0 },
+                Command::CrashGpu { gpu: 0 },       // already open: dropped
+                Command::CrashInstance { gpu: 0, class: 1 }, // same GPU open: dropped
+                Command::Recover { gpu: 0 },        // same clock as crash: dropped
+                Command::AdvanceTime { dt_s: 20.0 },
+                Command::Recover { gpu: 0 },        // closes at 30 → down_s = 20
+                Command::CrashInstance { gpu: 1, class: 5 }, // class wraps to 1
+                Command::Recover { gpu: 2 },        // nothing open on gpu 0 (2 % 2)… dropped? see below
+            ],
+        };
+        let c = seq.compile();
+        c.config.validate().unwrap();
+        let inj = &c.config.faults.injections;
+        assert_eq!(inj.len(), 2, "duplicates on an open GPU are dropped");
+        assert_eq!((inj[0].gpu, inj[0].class, inj[0].t), (0, None, 10.0));
+        assert_eq!(inj[0].down_s, 20.0, "closed by the strictly-later recover");
+        assert_eq!((inj[1].gpu, inj[1].class), (1, Some(1)), "indices wrap");
+        // gpu 2 wraps to 0, whose fault was already closed at the same
+        // clock — recovery must be strictly later, so the instance fault
+        // on gpu 1 stays permanent.
+        assert!(inj[1].down_s.is_infinite(), "unclosed crash is permanent");
+    }
+
+    #[test]
+    fn bursts_stay_monotone_and_rates_are_capped() {
+        let seq = CommandSeq {
+            seed: 5,
+            commands: vec![
+                // A long burst followed by an earlier-overlapping one:
+                // the trace must stay non-decreasing.
+                Command::ArriveBurst { class: 0, n: 50, over_s: 30.0 },
+                Command::AdvanceTime { dt_s: 1.0 },
+                Command::ArriveBurst { class: 0, n: 200, over_s: 0.1 },
+                Command::ArriveBurst { class: 0, n: 200, over_s: 0.1 },
+                Command::ArriveBurst { class: 0, n: 200, over_s: 0.1 },
+            ],
+        };
+        let c = seq.compile();
+        c.config.validate().unwrap();
+        let t = &c.times[0];
+        assert!(t.windows(2).all(|w| w[1] >= w[0]), "trace must be non-decreasing");
+        assert!(
+            mean_rate(t) <= RATE_CAP_RPS,
+            "thinning must cap the mean rate, got {}",
+            mean_rate(t)
+        );
+        // Every arrival lies inside the horizon, so the model's count is
+        // exact.
+        assert!(t.last().unwrap() + MARGIN_S <= c.config.duration_s + 1e-9);
+    }
+}

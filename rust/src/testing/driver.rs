@@ -1,0 +1,369 @@
+//! Replays command sequences against the real engine and checks them.
+//!
+//! [`run_case`] compiles one [`CommandSeq`], runs it under an
+//! [`InvariantInspector`] (live step-by-step checks through the engine's
+//! [`EngineInspector`] hooks) and then applies the reference model's
+//! closed-form checks ([`check_outcome`]) to the outcome. [`run_fuzz`]
+//! fans many generated cases out through the [`SweepEngine`]; results
+//! come back in input order, so the report digest is bitwise-identical
+//! at any worker count, and every failing case is minimized by the
+//! deterministic [`shrink`](crate::testing::shrink::shrink)er into a
+//! pasteable repro.
+
+use crate::cluster::engine::{EngineInspector, EngineProbe, FleetOutcome};
+use crate::cluster::router::GpuHealth;
+use crate::sweep::SweepEngine;
+use crate::testing::command::CommandSeq;
+use crate::testing::generate::generate;
+use crate::testing::model::check_outcome;
+use crate::testing::shrink::{repro_string, shrink};
+use crate::util::prng::Prng;
+
+/// Live invariant checker wired into the engine through the
+/// [`EngineInspector`] hooks. It keeps its own crash ledger from the
+/// `on_crash`/`on_recover` notifications and asserts, at every routing
+/// decision, that the destination was eligible (health-gated, breaker
+/// admitted) *at the moment of the decision* — catching
+/// route-to-crashed/route-to-draining/route-past-open-breaker bugs the
+/// end-of-run totals could mask.
+#[derive(Debug)]
+pub struct InvariantInspector {
+    n_classes: usize,
+    n_tenants: usize,
+    gpu_down: Vec<bool>,
+    replica_down: Vec<Vec<bool>>,
+    prev_brownout: Option<usize>,
+    routes_seen: u64,
+    /// Violations observed live, in event order.
+    pub violations: Vec<String>,
+}
+
+impl InvariantInspector {
+    /// Inspector for a fleet of `n_gpus` GPUs serving `n_classes`
+    /// classes across `n_tenants` tenants.
+    pub fn new(n_gpus: usize, n_classes: usize, n_tenants: usize) -> Self {
+        InvariantInspector {
+            n_classes,
+            n_tenants,
+            gpu_down: vec![false; n_gpus],
+            replica_down: vec![vec![false; n_classes]; n_gpus],
+            prev_brownout: None,
+            routes_seen: 0,
+            violations: Vec::new(),
+        }
+    }
+
+    /// Routing decisions observed (all dispatch paths).
+    pub fn routes_seen(&self) -> u64 {
+        self.routes_seen
+    }
+}
+
+impl EngineInspector for InvariantInspector {
+    fn on_route(&mut self, t: f64, gpu: usize, class: usize, probe: &EngineProbe) {
+        self.routes_seen += 1;
+        // The live eligibility predicate, probed at the exact moment the
+        // router committed (before breaker bookkeeping consumes a
+        // half-open probe).
+        if !probe.may_route(gpu, class) {
+            self.violations.push(format!(
+                "t={t:.3}: routed class {class} to ineligible gpu {gpu} \
+                 (health {:?}, replica_down {}, admits {})",
+                probe.gpu_health(gpu),
+                probe.replica_down(gpu, class),
+                probe.gpu_admits(gpu)
+            ));
+        }
+    }
+
+    fn on_tick(&mut self, t: f64, probe: &EngineProbe) {
+        let level = probe.brownout_level();
+        let max_level = self.n_tenants.saturating_sub(1);
+        if level > max_level {
+            self.violations.push(format!(
+                "t={t:.3}: brownout level {level} exceeds max {max_level}"
+            ));
+        }
+        if let Some(prev) = self.prev_brownout {
+            let step = level.abs_diff(prev);
+            if step > 1 {
+                self.violations.push(format!(
+                    "t={t:.3}: brownout level jumped {prev} -> {level} in one tick"
+                ));
+            }
+        }
+        self.prev_brownout = Some(level);
+    }
+
+    fn on_crash(&mut self, t: f64, gpu: usize, class: Option<usize>, probe: &EngineProbe) {
+        match class {
+            None => {
+                if probe.gpu_health(gpu) != GpuHealth::Down {
+                    self.violations.push(format!(
+                        "t={t:.3}: gpu {gpu} crashed but health is {:?}",
+                        probe.gpu_health(gpu)
+                    ));
+                }
+                // The crash dumps every queue on the GPU; anything left
+                // would be silently lost without a ledger entry.
+                for c in 0..self.n_classes {
+                    if probe.queue_depth(gpu, c) != 0 || probe.replica_busy(gpu, c) {
+                        self.violations.push(format!(
+                            "t={t:.3}: gpu {gpu} class {c} kept work across a GPU crash"
+                        ));
+                    }
+                }
+                self.gpu_down[gpu] = true;
+            }
+            Some(c) => {
+                if !probe.replica_down(gpu, c) {
+                    self.violations.push(format!(
+                        "t={t:.3}: replica ({gpu}, {c}) crashed but is not marked down"
+                    ));
+                }
+                if probe.queue_depth(gpu, c) != 0 || probe.replica_busy(gpu, c) {
+                    self.violations.push(format!(
+                        "t={t:.3}: replica ({gpu}, {c}) kept work across an instance crash"
+                    ));
+                }
+                self.replica_down[gpu][c] = true;
+            }
+        }
+    }
+
+    fn on_recover(&mut self, t: f64, gpu: usize, class: Option<usize>, probe: &EngineProbe) {
+        match class {
+            None => {
+                if probe.gpu_health(gpu) == GpuHealth::Down {
+                    self.violations.push(format!(
+                        "t={t:.3}: gpu {gpu} recovered but health is still Down"
+                    ));
+                }
+                if !self.gpu_down[gpu] {
+                    self.violations.push(format!(
+                        "t={t:.3}: gpu {gpu} recovered without a preceding crash"
+                    ));
+                }
+                self.gpu_down[gpu] = false;
+            }
+            Some(c) => {
+                if probe.replica_down(gpu, c) {
+                    self.violations.push(format!(
+                        "t={t:.3}: replica ({gpu}, {c}) recovered but is still down"
+                    ));
+                }
+                if !self.replica_down[gpu][c] {
+                    self.violations.push(format!(
+                        "t={t:.3}: replica ({gpu}, {c}) recovered without a preceding crash"
+                    ));
+                }
+                self.replica_down[gpu][c] = false;
+            }
+        }
+    }
+}
+
+/// Why one case failed: the violations, with the sequence that produced
+/// them.
+#[derive(Debug, Clone)]
+pub struct CaseFailure {
+    /// The (unshrunk) failing sequence.
+    pub seq: CommandSeq,
+    /// Every violation: live inspector findings, model findings, or an
+    /// engine error.
+    pub violations: Vec<String>,
+}
+
+/// Compile and run one sequence against the real engine and the model.
+/// `Ok` carries the outcome (regression tests assert extra facts on it);
+/// `Err` carries every violation found.
+pub fn run_case(seq: &CommandSeq) -> Result<FleetOutcome, CaseFailure> {
+    let compiled = seq.compile();
+    let cfg = compiled.config;
+    let mut insp =
+        InvariantInspector::new(cfg.gpus.len(), cfg.classes.len(), cfg.tenants.len().max(1));
+    let out = match cfg.run_with_inspector(&mut insp) {
+        Ok(out) => out,
+        Err(e) => {
+            return Err(CaseFailure {
+                seq: seq.clone(),
+                violations: vec![format!("engine error: {e}")],
+            });
+        }
+    };
+    let mut violations = insp.violations;
+    violations.extend(check_outcome(&cfg, &out));
+    if violations.is_empty() {
+        Ok(out)
+    } else {
+        Err(CaseFailure { seq: seq.clone(), violations })
+    }
+}
+
+/// One failing fuzz case, minimized.
+#[derive(Debug, Clone)]
+pub struct FailedCase {
+    /// Case index within the run.
+    pub index: usize,
+    /// The derived per-case seed ([`generate`] with this seed and the
+    /// run's `max_cmds` reproduces the unshrunk sequence).
+    pub case_seed: u64,
+    /// Violations from the original (unshrunk) sequence.
+    pub violations: Vec<String>,
+    /// The minimized sequence.
+    pub minimized: CommandSeq,
+    /// Self-contained pasteable repro of the minimized sequence.
+    pub repro: String,
+}
+
+/// Result of a fuzz run.
+#[derive(Debug, Clone)]
+pub struct FuzzReport {
+    /// Cases executed.
+    pub cases: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Command-count cap per case.
+    pub max_cmds: usize,
+    /// FNV-1a digest over every case's outcome fingerprint, in case
+    /// order — bitwise-identical at any worker count.
+    pub digest: u64,
+    /// The failing cases, minimized, in case order.
+    pub failures: Vec<FailedCase>,
+}
+
+impl FuzzReport {
+    /// True when every case passed.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Per-case seed: a pure function of (master seed, index), so any worker
+/// may compute it and a failing case replays standalone.
+pub fn case_seed(seed: u64, index: u64) -> u64 {
+    Prng::new(seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(index.wrapping_add(1))).next_u64()
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// The numbers a case contributes to the report digest: the whole
+/// conservation ledger plus the bit patterns of the derived metrics.
+fn fingerprint(out: &FleetOutcome) -> Vec<u64> {
+    vec![
+        out.arrived,
+        out.routed,
+        out.completed,
+        out.slo_violations,
+        out.failed_requests,
+        out.lost_in_crash,
+        out.shed_deadline,
+        out.shed_capacity,
+        out.shed_brownout,
+        out.breaker_trips,
+        out.reconfigurations,
+        out.gpu_crashes,
+        out.instance_crashes,
+        out.goodput_rps.to_bits(),
+        out.fairness_jain.to_bits(),
+        out.availability.to_bits(),
+    ]
+}
+
+/// Run `cases` generated cases on the worker pool. Failing cases are
+/// shrunk serially afterwards (shrinking replays sequences, so keeping
+/// it off the pool keeps the report digest independent of scheduling).
+pub fn run_fuzz(cases: usize, seed: u64, max_cmds: usize, engine: &SweepEngine) -> FuzzReport {
+    let idxs: Vec<u64> = (0..cases as u64).collect();
+    let results: Vec<(Vec<u64>, Option<CaseFailure>)> = engine.run(&idxs, |&i| {
+        let cs = case_seed(seed, i);
+        let seq = generate(cs, max_cmds);
+        match run_case(&seq) {
+            Ok(out) => (fingerprint(&out), None),
+            Err(f) => {
+                // A failure's digest contribution is its violation text,
+                // which is deterministic per case.
+                let mut h = FNV_OFFSET;
+                for v in &f.violations {
+                    h = fnv1a(h, v.as_bytes());
+                }
+                (vec![u64::MAX, h], Some(f))
+            }
+        }
+    });
+
+    let mut digest = FNV_OFFSET;
+    let mut failures = Vec::new();
+    for (i, (fp, fail)) in results.into_iter().enumerate() {
+        for w in &fp {
+            digest = fnv1a(digest, &w.to_le_bytes());
+        }
+        if let Some(f) = fail {
+            let minimized = shrink(&f.seq, |s| run_case(s).is_err());
+            let repro = repro_string(&minimized);
+            failures.push(FailedCase {
+                index: i,
+                case_seed: case_seed(seed, i as u64),
+                violations: f.violations,
+                minimized,
+                repro,
+            });
+        }
+    }
+    FuzzReport { cases, seed, max_cmds, digest, failures }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_cases_run_clean() {
+        // A pocket-sized version of the CI smoke: every generated case
+        // must satisfy the live invariants and the reference model.
+        for seed in 0..12u64 {
+            let seq = generate(case_seed(7, seed), 16);
+            if let Err(f) = run_case(&seq) {
+                panic!(
+                    "case seed {seed} violated the model:\n{}\nrepro:\n{}",
+                    f.violations.join("\n"),
+                    repro_string(&f.seq)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_digest_is_worker_count_independent() {
+        let serial = run_fuzz(8, 7, 12, &SweepEngine::serial());
+        for workers in [2usize, 4, 16] {
+            let par = run_fuzz(8, 7, 12, &SweepEngine::new(workers));
+            assert_eq!(
+                par.digest, serial.digest,
+                "digest must be bitwise-identical at {workers} workers"
+            );
+            assert_eq!(par.failures.len(), serial.failures.len());
+        }
+    }
+
+    #[test]
+    fn case_seeds_are_distinct_and_stable() {
+        let a: Vec<u64> = (0..64).map(|i| case_seed(42, i)).collect();
+        let b: Vec<u64> = (0..64).map(|i| case_seed(42, i)).collect();
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), a.len(), "per-case seeds must not collide");
+    }
+}

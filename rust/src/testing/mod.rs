@@ -1,0 +1,55 @@
+//! Stateful model-based testing of the fleet engine.
+//!
+//! The fleet engine composes crashes × repartitions × tenants × overload
+//! shedding × telemetry; example-based tests cannot cover the
+//! interleavings (a breaker going half-open during a rolling drain, a
+//! crash landing mid-brownout-escalation), and the planned arena/SoA
+//! hot-path refactor needs a correctness backstop that does. This module
+//! is a proptest-*stateful*-style harness built std-only on the seeded
+//! [`Prng`](crate::util::prng::Prng):
+//!
+//! * [`command`] — the [`Command`] grammar (arrive-burst, crash
+//!   GPU/instance, recover, repartition, resize, retune tenants, toggle
+//!   shed/brownout/breaker knobs, advance-time) and a *total* compiler
+//!   from a [`CommandSeq`] to a valid [`FleetConfig`]: every input
+//!   compiles (indices wrap, parameters clamp, impossible crashes are
+//!   dropped), so validity is closed under command deletion and the
+//!   shrinker can never escape the valid space;
+//! * [`generate`] — the seeded sequence generator (same seed, same
+//!   sequence, bit for bit);
+//! * [`model`] — the simplified reference model: closed-form
+//!   expectations over the compiled schedule (exact per-class arrival
+//!   counts via [`ArrivalSpec::Replay`](crate::workload::arrival::ArrivalSpec),
+//!   exact crash/downtime/availability bookkeeping, extended
+//!   conservation fleet-wide and per tenant, mechanism-off zeros,
+//!   brownout fairness-order monotonicity, telemetry/outcome
+//!   reconciliation);
+//! * [`driver`] — replays a sequence against the real engine under an
+//!   [`InvariantInspector`] (never-route-to-ineligible-GPU, brownout
+//!   ladder bounds, crash/recovery state checks, checked live at every
+//!   routing decision and tick via the engine's
+//!   [`EngineInspector`](crate::cluster::EngineInspector) hooks), then
+//!   runs the model checks on the outcome; [`run_fuzz`] fans cases out
+//!   through the [`SweepEngine`](crate::sweep::SweepEngine) under the
+//!   bitwise-determinism contract (the report digest is identical at any
+//!   worker count);
+//! * [`shrink`] — a deterministic delete-chunk + halve-parameters
+//!   minimizer that turns a failing sequence into a self-contained repro
+//!   (seed + command list) pasteable into `rust/tests/model_regressions.rs`.
+//!
+//! The CLI entry point is `migperf fuzz --cases N --seed S`; CI runs a
+//! 50-case smoke per PR and a 2000-case nightly sweep.
+
+pub mod command;
+pub mod driver;
+pub mod generate;
+pub mod model;
+pub mod shrink;
+
+pub use command::{Command, CommandSeq, Compiled};
+pub use driver::{
+    case_seed, run_case, run_fuzz, CaseFailure, FailedCase, FuzzReport, InvariantInspector,
+};
+pub use generate::generate;
+pub use model::check_outcome;
+pub use shrink::{repro_string, shrink};

@@ -1,0 +1,457 @@
+//! The simplified reference model the real engine is checked against.
+//!
+//! The model does not re-simulate queueing — that would just be a second
+//! engine with the same bugs. Instead it exploits what a compiled
+//! scenario makes *closed-form*: replay arrivals fix the exact per-class
+//! arrival counts, the fault plan fixes the exact crash/downtime
+//! timeline, and the scripted policy bounds the decision log. Everything
+//! else is checked as an invariant over the outcome itself — extended
+//! conservation (fleet-wide and per tenant), shed-mechanism-off zeros,
+//! bitwise-recomputable derived metrics, telemetry/outcome
+//! reconciliation and brownout fairness-order monotonicity.
+//!
+//! [`check_outcome`] returns human-readable violation strings (empty =
+//! the outcome is consistent with the model); the driver folds them into
+//! a [`CaseFailure`](crate::testing::driver::CaseFailure).
+
+use crate::cluster::engine::{FleetConfig, FleetOutcome, RepartitionMode};
+use crate::cluster::policy::FleetPolicyKind;
+use crate::cluster::tenancy::jain_index;
+use crate::workload::arrival::ArrivalSpec;
+
+/// Check one outcome against the model. Returns violation descriptions;
+/// an empty vector means every check passed.
+pub fn check_outcome(cfg: &FleetConfig, out: &FleetOutcome) -> Vec<String> {
+    let mut v: Vec<String> = Vec::new();
+    let mut fail = |msg: String| v.push(msg);
+
+    // --- 1. Exact per-class arrival counts (replay traces only). ---
+    if out.arrived_per_class.len() != cfg.classes.len() {
+        fail(format!(
+            "arrived_per_class has {} entries for {} classes",
+            out.arrived_per_class.len(),
+            cfg.classes.len()
+        ));
+    }
+    for (c, class) in cfg.classes.iter().enumerate() {
+        if let ArrivalSpec::Replay { times } = &class.arrival {
+            let expect = times.iter().filter(|&&t| t <= cfg.duration_s).count() as u64;
+            let got = out.arrived_per_class.get(c).copied().unwrap_or(0);
+            if got != expect {
+                fail(format!(
+                    "class {c}: replay trace schedules {expect} arrivals, engine saw {got}"
+                ));
+            }
+        }
+    }
+    let sum_classes: u64 = out.arrived_per_class.iter().sum();
+    if sum_classes != out.arrived {
+        fail(format!(
+            "Σ arrived_per_class = {sum_classes} != arrived = {}",
+            out.arrived
+        ));
+    }
+
+    // --- 2. Extended conservation, fleet-wide and per tenant. ---
+    let accounted = out.completed + out.failed_requests + out.lost_in_crash + out.shed_overload;
+    if accounted != out.arrived {
+        fail(format!(
+            "conservation: completed {} + failed {} + lost {} + shed {} = {accounted} \
+             != arrived {}",
+            out.completed, out.failed_requests, out.lost_in_crash, out.shed_overload, out.arrived
+        ));
+    }
+    let mut t_arrived = 0u64;
+    let mut t_completed = 0u64;
+    let mut t_viol = 0u64;
+    let mut t_failed = 0u64;
+    let mut t_lost = 0u64;
+    let mut t_retried = 0u64;
+    let mut t_shed = [0u64; 3];
+    for (ti, row) in out.tenants.iter().enumerate() {
+        let row_shed = row.shed_deadline + row.shed_capacity + row.shed_brownout;
+        let row_acc = row.completed + row.failed + row.lost_in_crash + row_shed;
+        if row_acc != row.arrived {
+            fail(format!(
+                "tenant {ti} ({}): conservation {row_acc} != arrived {}",
+                row.name, row.arrived
+            ));
+        }
+        t_arrived += row.arrived;
+        t_completed += row.completed;
+        t_viol += row.slo_violations;
+        t_failed += row.failed;
+        t_lost += row.lost_in_crash;
+        t_retried += row.retried;
+        t_shed[0] += row.shed_deadline;
+        t_shed[1] += row.shed_capacity;
+        t_shed[2] += row.shed_brownout;
+    }
+    for (what, tenant_sum, fleet) in [
+        ("arrived", t_arrived, out.arrived),
+        ("completed", t_completed, out.completed),
+        ("slo_violations", t_viol, out.slo_violations),
+        ("failed", t_failed, out.failed_requests),
+        ("lost_in_crash", t_lost, out.lost_in_crash),
+        ("retried", t_retried, out.retried_requests),
+        ("shed_deadline", t_shed[0], out.shed_deadline),
+        ("shed_capacity", t_shed[1], out.shed_capacity),
+        ("shed_brownout", t_shed[2], out.shed_brownout),
+    ] {
+        if tenant_sum != fleet {
+            fail(format!(
+                "tenant rows sum {what} to {tenant_sum}, fleet total is {fleet}"
+            ));
+        }
+    }
+    if out.routed > out.arrived {
+        fail(format!("routed {} exceeds arrived {}", out.routed, out.arrived));
+    }
+
+    // --- 3. Shed split identity and mechanism-off zeros. ---
+    let split = out.shed_deadline + out.shed_capacity + out.shed_brownout;
+    if split != out.shed_overload {
+        fail(format!(
+            "shed split {} + {} + {} = {split} != shed_overload {}",
+            out.shed_deadline, out.shed_capacity, out.shed_brownout, out.shed_overload
+        ));
+    }
+    if cfg.overload.deadline_mult == 0.0 && out.shed_deadline != 0 {
+        fail(format!("deadlines disabled but shed_deadline = {}", out.shed_deadline));
+    }
+    if cfg.overload.queue_cap == 0 && out.shed_capacity != 0 {
+        fail(format!("queues unbounded but shed_capacity = {}", out.shed_capacity));
+    }
+    if !cfg.overload.brownout_threshold.is_finite() && out.shed_brownout != 0 {
+        fail(format!("brownout disabled but shed_brownout = {}", out.shed_brownout));
+    }
+    if !cfg.overload.breaker_threshold.is_finite()
+        && (out.breaker_trips != 0 || out.breaker_open_s != 0.0)
+    {
+        fail(format!(
+            "breakers disabled but trips = {}, open_s = {}",
+            out.breaker_trips, out.breaker_open_s
+        ));
+    }
+
+    // --- 4. Exact crash bookkeeping. ---
+    let inj = &cfg.faults.injections;
+    let want_gpu = inj.iter().filter(|f| f.class.is_none()).count() as u64;
+    let want_inst = inj.iter().filter(|f| f.class.is_some()).count() as u64;
+    if out.gpu_crashes != want_gpu || out.instance_crashes != want_inst {
+        fail(format!(
+            "crash counts ({}, {}) != scheduled ({want_gpu}, {want_inst})",
+            out.gpu_crashes, out.instance_crashes
+        ));
+    }
+    if out.fault_log.len() != inj.len() {
+        fail(format!(
+            "fault_log has {} records for {} injections",
+            out.fault_log.len(),
+            inj.len()
+        ));
+    } else {
+        // Same multiset of (t, gpu, class, down_s): compare both sides
+        // under the same total order.
+        let key = |t: f64, g: usize, c: Option<usize>| {
+            (t.to_bits(), g, c.map(|x| x as i64).unwrap_or(-1))
+        };
+        let mut want: Vec<_> =
+            inj.iter().map(|f| (key(f.t, f.gpu, f.class), f.down_s.to_bits())).collect();
+        let mut got: Vec<_> =
+            out.fault_log.iter().map(|r| (key(r.t, r.gpu, r.class), r.down_s.to_bits())).collect();
+        want.sort_unstable();
+        got.sort_unstable();
+        if want != got {
+            fail("fault_log does not match the injection schedule".to_string());
+        }
+    }
+    if out.retried_requests != out.fault_log.iter().map(|r| r.retried).sum::<u64>() {
+        fail(format!(
+            "retried_requests {} != Σ fault_log.retried",
+            out.retried_requests
+        ));
+    }
+    if out.lost_in_crash != out.fault_log.iter().map(|r| r.lost).sum::<u64>() {
+        fail(format!("lost_in_crash {} != Σ fault_log.lost", out.lost_in_crash));
+    }
+    // Downtime is bitwise-recomputable from the schedule: each whole-GPU
+    // fault pays min(t + down_s, duration) − t, accumulated per GPU in
+    // time order (the engine adds the same terms in the same order).
+    let mut want_down = vec![0.0f64; cfg.gpus.len()];
+    let mut per_gpu: Vec<Vec<&crate::cluster::faults::FaultInjection>> =
+        vec![Vec::new(); cfg.gpus.len()];
+    for f in inj.iter().filter(|f| f.class.is_none()) {
+        if f.gpu < per_gpu.len() {
+            per_gpu[f.gpu].push(f);
+        }
+    }
+    for (g, fs) in per_gpu.iter_mut().enumerate() {
+        fs.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("finite fault times"));
+        for f in fs.iter() {
+            want_down[g] += (f.t + f.down_s).min(cfg.duration_s) - f.t;
+        }
+    }
+    if out.downtime_s_per_gpu.len() != cfg.gpus.len() {
+        fail(format!(
+            "downtime_s_per_gpu has {} entries for {} GPUs",
+            out.downtime_s_per_gpu.len(),
+            cfg.gpus.len()
+        ));
+    } else {
+        for (g, (&got, &want)) in
+            out.downtime_s_per_gpu.iter().zip(want_down.iter()).enumerate()
+        {
+            if got.to_bits() != want.to_bits() {
+                fail(format!("gpu {g}: downtime {got} != scheduled {want} (bitwise)"));
+            }
+        }
+        let avail = 1.0
+            - out.downtime_s_per_gpu.iter().sum::<f64>()
+                / (cfg.gpus.len() as f64 * cfg.duration_s);
+        if out.availability.to_bits() != avail.to_bits() {
+            fail(format!(
+                "availability {} != recomputed {avail} (bitwise)",
+                out.availability
+            ));
+        }
+    }
+    // --- 5. Fault-free runs are pristine. ---
+    if inj.is_empty() {
+        if out.lost_in_crash != 0 || out.retried_requests != 0 || !out.fault_log.is_empty() {
+            fail("no faults scheduled but crash counters are non-zero".to_string());
+        }
+        if out.availability != 1.0 {
+            fail(format!("no faults scheduled but availability = {}", out.availability));
+        }
+    }
+    // --- 6. Terminal failures need a cause. The storm guard is
+    // unbounded in compiled scenarios, so `failed` can only be requests
+    // stranded at the horizon — which requires a GPU that never came
+    // back (permanent fault) or an ingress breaker still open. ---
+    let permanent = inj.iter().any(|f| f.down_s.is_infinite());
+    if out.failed_requests > 0
+        && cfg.faults.storm_guard == u64::MAX
+        && !permanent
+        && !cfg.overload.breaker_threshold.is_finite()
+    {
+        fail(format!(
+            "failed_requests = {} with no permanent fault, no breaker and no storm guard",
+            out.failed_requests
+        ));
+    }
+
+    // --- 7. Repartition ledger. ---
+    if out.reconfigurations != out.decisions.len() as u64 {
+        fail(format!(
+            "reconfigurations {} != decision log length {}",
+            out.reconfigurations,
+            out.decisions.len()
+        ));
+    }
+    match &cfg.policy {
+        FleetPolicyKind::Static => {
+            if !out.decisions.is_empty() {
+                fail(format!("static policy executed {} repartitions", out.decisions.len()));
+            }
+        }
+        FleetPolicyKind::Scripted(s) => {
+            if out.decisions.len() > s.len() {
+                fail(format!(
+                    "{} decisions exceed the {} scripted entries",
+                    out.decisions.len(),
+                    s.len()
+                ));
+            }
+        }
+        FleetPolicyKind::Reactive(_) => {}
+    }
+    if out.layouts.len() != cfg.gpus.len() {
+        fail(format!(
+            "layouts has {} entries for {} GPUs",
+            out.layouts.len(),
+            cfg.gpus.len()
+        ));
+    } else {
+        for (g, history) in out.layouts.iter().enumerate() {
+            let moves = out.decisions.iter().filter(|d| d.gpu == g).count();
+            if history.len() != 1 + moves {
+                fail(format!(
+                    "gpu {g}: {} layouts in history, expected initial + {moves} repartitions",
+                    history.len()
+                ));
+            }
+        }
+    }
+    if cfg.mode == RepartitionMode::Rolling && out.unavailable_routes != 0 {
+        fail(format!(
+            "rolling mode routed {} requests to unavailable GPUs",
+            out.unavailable_routes
+        ));
+    }
+
+    // --- 8. Derived metrics are bitwise-recomputable. ---
+    let goodput = (out.completed - out.slo_violations.min(out.completed)) as f64 / cfg.duration_s;
+    if out.slo_violations > out.completed {
+        fail(format!(
+            "slo_violations {} exceed completed {}",
+            out.slo_violations, out.completed
+        ));
+    } else if out.goodput_rps.to_bits() != goodput.to_bits() {
+        fail(format!("goodput_rps {} != recomputed {goodput} (bitwise)", out.goodput_rps));
+    }
+    let frac = if out.completed > 0 {
+        out.slo_violations as f64 / out.completed as f64
+    } else {
+        0.0
+    };
+    if out.slo_violation_frac.to_bits() != frac.to_bits() {
+        fail(format!(
+            "slo_violation_frac {} != recomputed {frac} (bitwise)",
+            out.slo_violation_frac
+        ));
+    }
+    let mut norm = Vec::with_capacity(out.tenants.len());
+    for (ti, row) in out.tenants.iter().enumerate() {
+        if row.slo_violations > row.completed {
+            fail(format!("tenant {ti}: violations exceed completions"));
+            continue;
+        }
+        let g = (row.completed - row.slo_violations) as f64 / cfg.duration_s;
+        if row.goodput_rps.to_bits() != g.to_bits() {
+            fail(format!("tenant {ti}: goodput {} != recomputed {g}", row.goodput_rps));
+        }
+        let n = g / row.weight;
+        if row.norm_goodput_rps.to_bits() != n.to_bits() {
+            fail(format!(
+                "tenant {ti}: norm goodput {} != recomputed {n}",
+                row.norm_goodput_rps
+            ));
+        }
+        norm.push(row.norm_goodput_rps);
+    }
+    let jain = jain_index(&norm);
+    if norm.len() == out.tenants.len() && out.fairness_jain.to_bits() != jain.to_bits() {
+        fail(format!("fairness_jain {} != recomputed {jain} (bitwise)", out.fairness_jain));
+    }
+
+    // --- 9. Brownout never sheds the tenant the ladder protects last.
+    // The escalation order is weight-ascending (ties to the lowest
+    // index) and the ladder never reaches the full tenant count, so the
+    // final tenant in that order must end with zero brownout shed. ---
+    if out.tenants.len() > 1 {
+        let mut order: Vec<usize> = (0..out.tenants.len()).collect();
+        order.sort_by(|&a, &b| {
+            out.tenants[a]
+                .weight
+                .partial_cmp(&out.tenants[b].weight)
+                .expect("finite weights")
+                .then(a.cmp(&b))
+        });
+        let protected = *order.last().expect("non-empty");
+        if out.tenants[protected].shed_brownout != 0 {
+            fail(format!(
+                "tenant {protected} ({}) is last in brownout order but shed {} requests",
+                out.tenants[protected].name, out.tenants[protected].shed_brownout
+            ));
+        }
+    }
+
+    // --- 10. Telemetry reconciles with the outcome. ---
+    if let Some(tel) = &out.telemetry {
+        let sum_named = |name: &str| -> f64 {
+            tel.series
+                .all()
+                .iter()
+                .filter(|s| s.name == name)
+                .flat_map(|s| s.points())
+                .map(|p| p.value)
+                .sum()
+        };
+        for (name, total) in [
+            ("fleet_window_arrivals", out.arrived),
+            ("fleet_window_routed", out.routed),
+            ("fleet_window_completed", out.completed),
+            ("fleet_window_violations", out.slo_violations),
+            ("fleet_window_shed_deadline", out.shed_deadline),
+            ("fleet_window_shed_capacity", out.shed_capacity),
+            ("fleet_window_shed_brownout", out.shed_brownout),
+        ] {
+            let s = sum_named(name);
+            if (s - total as f64).abs() > 1e-6 {
+                fail(format!("telemetry series {name} sums to {s}, outcome total is {total}"));
+            }
+        }
+    }
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::command::{Command, CommandSeq};
+
+    fn run(seq: &CommandSeq) -> (FleetConfig, FleetOutcome) {
+        let cfg = seq.compile().config;
+        let out = cfg.run().expect("scenario must run");
+        (cfg, out)
+    }
+
+    #[test]
+    fn healthy_scenario_passes_every_check() {
+        let seq = CommandSeq {
+            seed: 11,
+            commands: vec![
+                Command::ArriveBurst { class: 0, n: 40, over_s: 10.0 },
+                Command::ArriveBurst { class: 1, n: 40, over_s: 10.0 },
+                Command::AdvanceTime { dt_s: 20.0 },
+            ],
+        };
+        let (cfg, out) = run(&seq);
+        let v = check_outcome(&cfg, &out);
+        assert!(v.is_empty(), "healthy run must satisfy the model:\n{}", v.join("\n"));
+        assert_eq!(out.arrived, 80);
+    }
+
+    #[test]
+    fn crash_scenario_passes_and_counts_downtime() {
+        let seq = CommandSeq {
+            seed: 13,
+            commands: vec![
+                Command::ArriveBurst { class: 0, n: 60, over_s: 20.0 },
+                Command::AdvanceTime { dt_s: 5.0 },
+                Command::CrashGpu { gpu: 0 },
+                Command::AdvanceTime { dt_s: 8.0 },
+                Command::Recover { gpu: 0 },
+                Command::AdvanceTime { dt_s: 20.0 },
+            ],
+        };
+        let (cfg, out) = run(&seq);
+        let v = check_outcome(&cfg, &out);
+        assert!(v.is_empty(), "crash run must satisfy the model:\n{}", v.join("\n"));
+        assert_eq!(out.gpu_crashes, 1);
+        assert!((out.downtime_s_per_gpu[0] - 8.0).abs() < 1e-12);
+        assert!(out.availability < 1.0);
+    }
+
+    #[test]
+    fn model_rejects_a_doctored_outcome() {
+        let seq = CommandSeq {
+            seed: 17,
+            commands: vec![
+                Command::ArriveBurst { class: 0, n: 20, over_s: 5.0 },
+                Command::AdvanceTime { dt_s: 10.0 },
+            ],
+        };
+        let (cfg, mut out) = run(&seq);
+        assert!(check_outcome(&cfg, &out).is_empty());
+        out.completed += 1; // break conservation + the arrival count
+        let v = check_outcome(&cfg, &out);
+        assert!(
+            v.iter().any(|m| m.contains("conservation")),
+            "the model must flag the broken ledger, got:\n{}",
+            v.join("\n")
+        );
+    }
+}

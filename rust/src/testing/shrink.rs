@@ -1,0 +1,203 @@
+//! Deterministic failing-sequence minimization and repro rendering.
+//!
+//! [`shrink`] is a ddmin-style reducer specialized to command
+//! sequences: delete-chunk passes (chunk size n/2, halving down to 1)
+//! remove whole command runs, then a halve-parameters pass shrinks the
+//! numbers inside the survivors (burst sizes, time advances, spans)
+//! toward small round values. Both passes are pure functions of the
+//! input sequence — no randomness — so the same failure always minimizes
+//! to the same repro, and the compiler's totality guarantee
+//! ([`CommandSeq::compile`] accepts *every* sequence) means no candidate
+//! ever has to be rejected as invalid.
+//!
+//! [`repro_string`] renders the result as pasteable Rust: the `Command`
+//! grammar's `Debug` output is valid constructor syntax (and the
+//! generator only emits dyadic parameters, so the decimals round-trip
+//! exactly). Drop the snippet into `rust/tests/model_regressions.rs` to
+//! pin the bug.
+
+use crate::testing::command::{Command, CommandSeq};
+
+/// Halve a command's magnitude parameters, preserving validity (the
+/// compiler clamps anyway; halving just drives toward the floor). Time
+/// *placement* parameters are left alone — deleting the preceding
+/// `AdvanceTime` moves events, halving both would thrash.
+fn halved(cmd: &Command) -> Command {
+    match *cmd {
+        Command::ArriveBurst { class, n, over_s } => {
+            Command::ArriveBurst { class, n: (n / 2).max(1), over_s }
+        }
+        Command::AdvanceTime { dt_s } => Command::AdvanceTime { dt_s: (dt_s / 2.0).max(0.5) },
+        ref c => c.clone(),
+    }
+}
+
+/// Minimize a failing sequence. `fails` must return `true` for the input
+/// (if it does not, the input is returned unchanged). The result still
+/// fails and is 1-minimal under chunk deletion: removing any single
+/// remaining command makes the failure disappear.
+pub fn shrink(seq: &CommandSeq, fails: impl Fn(&CommandSeq) -> bool) -> CommandSeq {
+    if !fails(seq) {
+        return seq.clone();
+    }
+    let mut best = seq.clone();
+
+    // Pass 1 — delete-chunk to a fixpoint: try removing spans of
+    // halving sizes; restart at the large size after any success so
+    // late deletions re-enable earlier ones.
+    let mut progress = true;
+    while progress {
+        progress = false;
+        let mut chunk = (best.commands.len() / 2).max(1);
+        loop {
+            let mut start = 0;
+            while start < best.commands.len() {
+                let end = (start + chunk).min(best.commands.len());
+                let mut candidate = best.clone();
+                candidate.commands.drain(start..end);
+                if !candidate.commands.is_empty() && fails(&candidate) {
+                    best = candidate;
+                    progress = true;
+                    // Do not advance: the next chunk now sits at `start`.
+                } else {
+                    start += 1;
+                }
+            }
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+    }
+
+    // Pass 2 — halve parameters to a fixpoint: repeatedly halve each
+    // command's magnitudes while the failure survives.
+    let mut progress = true;
+    while progress {
+        progress = false;
+        for i in 0..best.commands.len() {
+            let h = halved(&best.commands[i]);
+            if h == best.commands[i] {
+                continue;
+            }
+            let mut candidate = best.clone();
+            candidate.commands[i] = h;
+            if fails(&candidate) {
+                best = candidate;
+                progress = true;
+            }
+        }
+    }
+    best
+}
+
+/// Render a sequence as a self-contained, pasteable repro block.
+pub fn repro_string(seq: &CommandSeq) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("let seq = CommandSeq {{\n    seed: {},\n    commands: vec![\n", seq.seed));
+    for c in &seq.commands {
+        s.push_str(&format!("        Command::{c:?},\n"));
+    }
+    s.push_str("    ],\n};\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(commands: Vec<Command>) -> CommandSeq {
+        CommandSeq { seed: 7, commands }
+    }
+
+    #[test]
+    fn shrinks_to_the_minimal_failing_core() {
+        // Synthetic oracle: "fails" iff the sequence contains a CrashGpu
+        // AND total burst volume ≥ 40. Everything else is noise the
+        // shrinker must strip.
+        let fails = |s: &CommandSeq| {
+            let crash = s.commands.iter().any(|c| matches!(c, Command::CrashGpu { .. }));
+            let volume: u64 = s
+                .commands
+                .iter()
+                .map(|c| match c {
+                    Command::ArriveBurst { n, .. } => *n,
+                    _ => 0,
+                })
+                .sum();
+            crash && volume >= 40
+        };
+        let noisy = seq(vec![
+            Command::SetRolling { rolling: false },
+            Command::ArriveBurst { class: 0, n: 100, over_s: 5.0 },
+            Command::AdvanceTime { dt_s: 8.0 },
+            Command::Repartition { gpu: 1, rate_scale: 1.5 },
+            Command::CrashGpu { gpu: 0 },
+            Command::ArriveBurst { class: 1, n: 100, over_s: 5.0 },
+            Command::Recover { gpu: 0 },
+            Command::SetRouter { router: 3 },
+        ]);
+        assert!(fails(&noisy));
+        let min = shrink(&noisy, fails);
+        assert!(fails(&min), "the minimized sequence must still fail");
+        // Minimal core: one burst (halved down to the 40 threshold's
+        // neighborhood) and one crash.
+        assert_eq!(min.commands.len(), 2, "got: {}", repro_string(&min));
+        assert!(min.commands.iter().any(|c| matches!(c, Command::CrashGpu { .. })));
+        let volume: u64 = min
+            .commands
+            .iter()
+            .map(|c| match c {
+                Command::ArriveBurst { n, .. } => *n,
+                _ => 0,
+            })
+            .sum();
+        assert!(
+            (40..80).contains(&volume),
+            "halving must drive the burst toward the threshold, got {volume}"
+        );
+    }
+
+    #[test]
+    fn shrinker_is_deterministic_for_a_fixed_input() {
+        let fails = |s: &CommandSeq| {
+            s.commands.iter().filter(|c| matches!(c, Command::AdvanceTime { .. })).count() >= 2
+        };
+        let input = seq(vec![
+            Command::AdvanceTime { dt_s: 16.0 },
+            Command::ArriveBurst { class: 0, n: 10, over_s: 1.0 },
+            Command::AdvanceTime { dt_s: 16.0 },
+            Command::AdvanceTime { dt_s: 16.0 },
+            Command::CrashGpu { gpu: 0 },
+        ]);
+        let a = shrink(&input, fails);
+        let b = shrink(&input, fails);
+        assert_eq!(a, b, "same input must minimize identically");
+        assert_eq!(a.commands.len(), 2);
+        assert!(a.commands.iter().all(|c| matches!(
+            c,
+            Command::AdvanceTime { dt_s } if *dt_s == 0.5
+        )));
+    }
+
+    #[test]
+    fn non_failing_input_is_returned_unchanged() {
+        let input = seq(vec![Command::CrashGpu { gpu: 0 }]);
+        let out = shrink(&input, |_| false);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn repro_round_trips_through_debug_syntax() {
+        let input = seq(vec![
+            Command::ArriveBurst { class: 0, n: 37, over_s: 2.5 },
+            Command::CrashInstance { gpu: 1, class: 1 },
+            Command::SetBrownout { threshold: 0.125 },
+        ]);
+        let r = repro_string(&input);
+        assert!(r.contains("seed: 7"));
+        assert!(r.contains("Command::ArriveBurst { class: 0, n: 37, over_s: 2.5 },"));
+        assert!(r.contains("Command::CrashInstance { gpu: 1, class: 1 },"));
+        assert!(r.contains("Command::SetBrownout { threshold: 0.125 },"));
+    }
+}

@@ -262,6 +262,81 @@ impl Arrival for DiurnalArrival {
     }
 }
 
+/// Trace replay: emits a fixed, pre-computed list of arrival timestamps
+/// and then goes silent (infinite gap). Unlike the stochastic processes
+/// this makes the *exact* arrival count and every timestamp knowable in
+/// advance, which is what the model-based testing harness needs to write
+/// closed-form conservation expectations; it is also the natural carrier
+/// for real production traces.
+#[derive(Debug)]
+pub struct ReplayArrival {
+    times: Vec<f64>,
+    idx: usize,
+    t: f64,
+}
+
+impl ReplayArrival {
+    /// Replay of `times` (absolute seconds, non-decreasing, finite,
+    /// non-negative); rejects anything else. An empty trace is valid and
+    /// yields no arrivals.
+    pub fn try_new(times: Vec<f64>) -> Result<Self, ArrivalError> {
+        for (i, &t) in times.iter().enumerate() {
+            if !t.is_finite() || t < 0.0 {
+                return Err(ArrivalError {
+                    param: "replay time",
+                    value: t,
+                    requirement: "must be finite and non-negative",
+                });
+            }
+            if i > 0 && t < times[i - 1] {
+                return Err(ArrivalError {
+                    param: "replay time",
+                    value: t,
+                    requirement: "must be non-decreasing",
+                });
+            }
+        }
+        Ok(ReplayArrival { times, idx: 0, t: 0.0 })
+    }
+
+    /// Replay of `times`.
+    ///
+    /// # Panics
+    /// On unordered, negative or non-finite times (see
+    /// [`ReplayArrival::try_new`]).
+    pub fn new(times: Vec<f64>) -> Self {
+        Self::try_new(times).unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+impl Arrival for ReplayArrival {
+    fn next_gap(&mut self) -> f64 {
+        match self.times.get(self.idx) {
+            Some(&next) => {
+                let gap = next - self.t;
+                self.t = next;
+                self.idx += 1;
+                gap
+            }
+            // Trace exhausted: an infinite gap ends the stream (every
+            // consumer guards scheduling on `gap.is_finite()`).
+            None => f64::INFINITY,
+        }
+    }
+    fn rate(&self) -> f64 {
+        replay_mean_rate(&self.times)
+    }
+}
+
+/// Mean rate of a replay trace: count over span (with a 1 s floor so a
+/// sub-second trace does not report an absurd rate), 0 for an empty one.
+fn replay_mean_rate(times: &[f64]) -> f64 {
+    match times.last() {
+        Some(&last) => times.len() as f64 / last.max(1.0),
+        None => 0.0,
+    }
+}
+
 /// Plain-data description of an arrival process, cloneable into sweep
 /// grids; [`ArrivalSpec::build`] materializes the seeded process.
 #[derive(Debug, Clone, PartialEq)]
@@ -294,6 +369,11 @@ pub enum ArrivalSpec {
         /// Cycle length, seconds.
         period_s: f64,
     },
+    /// Exact trace replay: the listed absolute timestamps, then silence.
+    Replay {
+        /// Absolute arrival times, seconds, non-decreasing.
+        times: Vec<f64>,
+    },
 }
 
 impl ArrivalSpec {
@@ -309,6 +389,7 @@ impl ArrivalSpec {
             ArrivalSpec::Poisson { rate } | ArrivalSpec::Uniform { rate } => *rate,
             ArrivalSpec::Bursty { high_rate, low_rate, .. } => (high_rate + low_rate) / 2.0,
             ArrivalSpec::Diurnal { base_rate, peak_rate, .. } => (base_rate + peak_rate) / 2.0,
+            ArrivalSpec::Replay { times } => replay_mean_rate(times),
         }
     }
 
@@ -323,6 +404,7 @@ impl ArrivalSpec {
             ArrivalSpec::Diurnal { base_rate, peak_rate, period_s } => {
                 Box::new(DiurnalArrival::try_new(*base_rate, *peak_rate, *period_s, seed)?)
             }
+            ArrivalSpec::Replay { times } => Box::new(ReplayArrival::try_new(times.clone())?),
         })
     }
 }
@@ -530,6 +612,44 @@ mod tests {
         assert!(ArrivalSpec::Diurnal { base_rate: 1.0, peak_rate: 0.5, period_s: 60.0 }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn replay_yields_exact_times_then_infinity() {
+        let trace = vec![0.5, 0.5, 2.0, 7.25];
+        let mut r = ReplayArrival::new(trace.clone());
+        let mut t = 0.0;
+        let mut seen = Vec::new();
+        loop {
+            let gap = r.next_gap();
+            if !gap.is_finite() {
+                break;
+            }
+            assert!(gap >= 0.0, "gaps never negative, got {gap}");
+            t += gap;
+            seen.push(t);
+        }
+        assert_eq!(seen, trace, "replay reproduces the trace exactly");
+        // Stays exhausted.
+        assert!(r.next_gap().is_infinite());
+        assert!((r.rate() - 4.0 / 7.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_rejects_bad_traces_and_handles_degenerate_ones() {
+        assert!(ReplayArrival::try_new(vec![1.0, 0.5]).is_err(), "unordered");
+        assert!(ReplayArrival::try_new(vec![-1.0]).is_err(), "negative");
+        assert!(ReplayArrival::try_new(vec![f64::NAN]).is_err(), "NaN");
+        assert!(ReplayArrival::try_new(vec![f64::INFINITY]).is_err(), "infinite");
+        // Empty trace: valid, zero rate, immediately exhausted.
+        let mut empty = ReplayArrival::new(Vec::new());
+        assert_eq!(empty.rate(), 0.0);
+        assert!(empty.next_gap().is_infinite());
+        // Sub-second trace: the 1 s span floor keeps the rate sane.
+        let spec = ArrivalSpec::Replay { times: vec![0.1, 0.2] };
+        assert_eq!(spec.mean_rate(), 2.0);
+        spec.validate().unwrap();
+        assert!(ArrivalSpec::Replay { times: vec![3.0, 1.0] }.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Model-based regression corpus for the fleet engine.
+//!
+//! Each named case pins one command sequence — the format the fuzz
+//! shrinker emits (`migperf fuzz` prints failures in exactly this shape,
+//! ready to paste here). A case passes when [`run_case`] returns `Ok`,
+//! i.e. the real engine agreed with the live routing/brownout invariants
+//! *and* the closed-form reference model on every check: extended
+//! conservation (fleet and per tenant), exact arrival/crash/downtime
+//! bookkeeping, mechanism-off zeros, bitwise-recomputable derived
+//! metrics, telemetry reconciliation and brownout fairness order.
+//!
+//! The corpus deliberately covers the interleavings example tests miss:
+//! a breaker cycling while a scripted repartition drains the same GPU, a
+//! crash landing mid-brownout-escalation, a permanent outage under
+//! deadline shedding, and back-to-back crash/recover/repartition churn.
+//! Plus the harness's own contract: `run_fuzz` digests are
+//! bitwise-identical at 1/2/4/16 workers.
+
+use migperf::cluster::FleetOutcome;
+use migperf::sweep::SweepEngine;
+use migperf::testing::{run_case, run_fuzz, Command, CommandSeq};
+
+/// Run a pinned sequence and require the engine to satisfy every
+/// invariant; panics with the violations and a pasteable repro if not.
+fn assert_clean(name: &str, seq: &CommandSeq) -> FleetOutcome {
+    match run_case(seq) {
+        Ok(out) => out,
+        Err(f) => panic!(
+            "pinned case '{name}' violated the model:\n{}\nrepro:\n{}",
+            f.violations.join("\n"),
+            migperf::testing::repro_string(&f.seq)
+        ),
+    }
+}
+
+#[test]
+fn pinned_breaker_half_open_during_repartition() {
+    // An ingress breaker under a tight queue bound and deadlines, pushed
+    // by sustained two-class load, with a scripted repartition of the
+    // same GPU landing while the breaker may be half-open — the
+    // interleaving where a half-open probe grant could race the drain's
+    // eligibility gate. The model must still see perfect conservation
+    // and never-route-to-ineligible-GPU must hold at every decision.
+    let seq = CommandSeq {
+        seed: 101,
+        commands: vec![
+            Command::ResizeFleet { gpus: 2 },
+            Command::SetOverload { queue_cap: 2, deadline_mult: 1.0, drop_oldest: true },
+            Command::SetBreaker { threshold: 0.125, probes: 2 },
+            Command::SetRolling { rolling: true },
+            Command::ArriveBurst { class: 0, n: 200, over_s: 10.0 },
+            Command::ArriveBurst { class: 1, n: 200, over_s: 10.0 },
+            Command::AdvanceTime { dt_s: 6.0 },
+            Command::Repartition { gpu: 0, rate_scale: 0.25 },
+            Command::ArriveBurst { class: 0, n: 120, over_s: 8.0 },
+            Command::AdvanceTime { dt_s: 12.0 },
+            Command::Repartition { gpu: 0, rate_scale: 2.0 },
+            Command::AdvanceTime { dt_s: 10.0 },
+        ],
+    };
+    let compiled = seq.compile();
+    let out = assert_clean("breaker-half-open × repartition", &seq);
+    for (c, trace) in compiled.times.iter().enumerate() {
+        assert_eq!(
+            out.arrived_per_class[c] as usize,
+            trace.len(),
+            "class {c}: replay schedule fixes the exact arrival count"
+        );
+    }
+    assert!(out.reconfigurations <= 2, "at most the two scripted repartitions execute");
+    assert_eq!(out.unavailable_routes, 0, "rolling drains must divert, not enqueue");
+    assert_eq!(out.gpu_crashes + out.instance_crashes, 0);
+}
+
+#[test]
+fn pinned_crash_during_brownout_escalation() {
+    // Skewed tenant weights and a low brownout threshold so shedding
+    // pressure walks the ladder, then a whole-GPU crash in the middle of
+    // the escalation and a recovery while load is still flowing. The
+    // protected (highest-weight) tenant must end with zero brownout
+    // shed, the ladder must move at most one level per tick, and the
+    // crash bookkeeping must stay exact.
+    let seq = CommandSeq {
+        seed: 102,
+        commands: vec![
+            Command::ResizeFleet { gpus: 2 },
+            Command::RetuneTenants { gold: 4.0, bronze: 0.5 },
+            Command::SetOverload { queue_cap: 2, deadline_mult: 1.0, drop_oldest: false },
+            Command::SetBrownout { threshold: 0.125 },
+            Command::ArriveBurst { class: 0, n: 180, over_s: 12.0 },
+            Command::ArriveBurst { class: 1, n: 180, over_s: 12.0 },
+            Command::AdvanceTime { dt_s: 7.0 },
+            Command::CrashGpu { gpu: 1 },
+            Command::ArriveBurst { class: 1, n: 100, over_s: 6.0 },
+            Command::AdvanceTime { dt_s: 9.0 },
+            Command::Recover { gpu: 1 },
+            Command::AdvanceTime { dt_s: 15.0 },
+        ],
+    };
+    let out = assert_clean("crash during brownout escalation", &seq);
+    assert_eq!(out.gpu_crashes, 1);
+    assert_eq!(out.fault_log.len(), 1);
+    assert!((out.downtime_s_per_gpu[1] - 9.0).abs() < 1e-9, "crash at 7, recover at 16");
+    let gold = out.tenants.iter().find(|t| t.name == "gold").expect("gold tenant");
+    assert_eq!(
+        gold.shed_brownout, 0,
+        "the highest-weight tenant is last in brownout order and never sheds"
+    );
+}
+
+#[test]
+fn pinned_permanent_crash_under_deadline_shedding() {
+    // One GPU of two dies and never comes back while deadlines are
+    // enforced: the survivor absorbs what it can, expired requests shed,
+    // and anything stranded when the horizon closes must be accounted as
+    // failed — conservation has to balance through all four terms.
+    let seq = CommandSeq {
+        seed: 103,
+        commands: vec![
+            Command::ResizeFleet { gpus: 2 },
+            Command::SetOverload { queue_cap: 4, deadline_mult: 2.0, drop_oldest: false },
+            Command::ArriveBurst { class: 0, n: 150, over_s: 10.0 },
+            Command::AdvanceTime { dt_s: 4.0 },
+            Command::CrashGpu { gpu: 0 },
+            Command::ArriveBurst { class: 0, n: 150, over_s: 10.0 },
+            Command::ArriveBurst { class: 1, n: 80, over_s: 10.0 },
+            Command::AdvanceTime { dt_s: 20.0 },
+        ],
+    };
+    let compiled = seq.compile();
+    let out = assert_clean("permanent crash under deadline shedding", &seq);
+    assert_eq!(out.gpu_crashes, 1);
+    assert!(out.fault_log[0].down_s.is_infinite(), "no recover command: permanent outage");
+    // Exact downtime: crash at t=4 pays out to the horizon.
+    let expect = compiled.config.duration_s - 4.0;
+    assert_eq!(out.downtime_s_per_gpu[0].to_bits(), expect.to_bits());
+    assert!(out.availability < 1.0);
+}
+
+#[test]
+fn pinned_crash_recover_repartition_churn() {
+    // Back-to-back churn on one GPU: crash, recover, immediately
+    // repartition, crash again — with an instance-level crash on the
+    // sibling. Epoch staling, drain bookkeeping and the fault ledger all
+    // have to stay consistent through the pile-up.
+    let seq = CommandSeq {
+        seed: 104,
+        commands: vec![
+            Command::ResizeFleet { gpus: 3 },
+            Command::SetRouter { router: 3 },
+            Command::ArriveBurst { class: 0, n: 160, over_s: 16.0 },
+            Command::ArriveBurst { class: 1, n: 160, over_s: 16.0 },
+            Command::AdvanceTime { dt_s: 3.0 },
+            Command::CrashGpu { gpu: 0 },
+            Command::CrashInstance { gpu: 1, class: 0 },
+            Command::AdvanceTime { dt_s: 4.0 },
+            Command::Recover { gpu: 0 },
+            Command::Repartition { gpu: 0, rate_scale: 1.5 },
+            Command::AdvanceTime { dt_s: 2.0 },
+            Command::Recover { gpu: 1 },
+            Command::CrashGpu { gpu: 0 },
+            Command::AdvanceTime { dt_s: 5.0 },
+            Command::Recover { gpu: 0 },
+            Command::AdvanceTime { dt_s: 12.0 },
+        ],
+    };
+    let out = assert_clean("crash/recover/repartition churn", &seq);
+    assert_eq!(out.gpu_crashes, 2);
+    assert_eq!(out.instance_crashes, 1);
+    assert_eq!(out.fault_log.len(), 3);
+    // GPU 0: down [3, 7) and [9, 14) → 9 s of downtime.
+    assert!((out.downtime_s_per_gpu[0] - 9.0).abs() < 1e-9);
+    // Instance crashes never count as GPU downtime.
+    assert_eq!(out.downtime_s_per_gpu[1], 0.0);
+}
+
+#[test]
+fn fuzz_report_is_bitwise_deterministic_across_worker_counts() {
+    let serial = run_fuzz(24, 7, 16, &SweepEngine::new(1));
+    assert!(
+        serial.passed(),
+        "fuzz smoke (24 cases, seed 7) found violations:\n{:#?}",
+        serial.failures
+    );
+    for workers in [2usize, 4, 16] {
+        let par = run_fuzz(24, 7, 16, &SweepEngine::new(workers));
+        assert_eq!(
+            par.digest, serial.digest,
+            "fuzz digest must be bitwise-identical at {workers} workers"
+        );
+        assert!(par.passed());
+    }
+}
