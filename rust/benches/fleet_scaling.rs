@@ -28,6 +28,11 @@
 //!    (outcomes bit-identical to a traced run), deterministic when on
 //!    (serial-vs-parallel payload checksums bit-equal), and exact (every
 //!    windowed counter series sums to its `FleetOutcome` total).
+//! 7. **mega-fleet scaling** — the arena/SoA hot path at 1 → 1024 GPUs:
+//!    each size runs as one sharded mega-fleet (contiguous sub-fleets
+//!    merged in shard order), reporting events/sec; the merge must be
+//!    bit-identical at any worker count and a 1-shard run must be
+//!    exactly the unsharded simulation.
 //!
 //! The whole grid runs serial and parallel through the sweep engine and
 //! asserts bit-identical checksums (the determinism contract; the
@@ -642,6 +647,80 @@ fn main() {
         tel.spans.len()
     );
 
+    // Mega-fleet scaling: the arena/SoA hot-path claim. One huge config
+    // is sharded into contiguous sub-fleets (8 shards, fewer on tiny
+    // fleets) that run across the sweep workers and merge in shard
+    // order. `events_processed` is pure simulation output, deterministic
+    // per (config, shards); `events_per_sec` is wall-derived and never
+    // enters a checksum.
+    let mega_sizes: &[usize] = if smoke { &[1, 4, 16] } else { &[1, 4, 16, 64, 256, 1024] };
+    let (mega_duration_s, mega_period_s) = if smoke { (60.0, 30.0) } else { (150.0, 75.0) };
+    let mega_cfg = |n: usize| {
+        let mut cfg = scenario(
+            n,
+            FleetPolicyKind::Static,
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            seeds[0],
+            mega_duration_s,
+            mega_period_s,
+            window_s,
+        );
+        cfg.train = None; // measure the request hot path, not training ticks
+        cfg
+    };
+    println!(
+        "\nmega-fleet scaling (static policy, least-loaded, {mega_duration_s:.0}s horizon, \
+         <=8 shards):"
+    );
+    let mut mega_rows: Vec<(usize, usize, u64, u64, f64, f64)> = Vec::new();
+    for &n in mega_sizes {
+        let shards = n.min(8);
+        let out = sweep::run_mega(&parallel, &mega_cfg(n), shards).expect("mega run");
+        assert_eq!(
+            out.completed + out.failed_requests + out.lost_in_crash + out.shed_overload,
+            out.arrived,
+            "mega merge must conserve requests at {n} GPUs"
+        );
+        println!(
+            "  {n:>5} GPUs x{shards}: {:>9} arrived, {:>10} events, {:>12.0} events/s, \
+             goodput {:.1} rps",
+            out.arrived, out.events_processed, out.events_per_sec, out.goodput_rps
+        );
+        mega_rows.push((
+            n,
+            shards,
+            out.arrived,
+            out.events_processed,
+            out.events_per_sec,
+            out.goodput_rps,
+        ));
+    }
+    // Sharded-merge determinism: the same (config, shards) pair at
+    // different worker counts must merge bit-identically.
+    let det_cfg = mega_cfg(16);
+    let det_a = sweep::run_mega(&serial, &det_cfg, 8).expect("mega serial");
+    let det_b = sweep::run_mega(&parallel, &det_cfg, 8).expect("mega parallel");
+    assert_eq!(
+        checksum(std::slice::from_ref(&det_a)).to_bits(),
+        checksum(std::slice::from_ref(&det_b)).to_bits(),
+        "mega merges must be bit-identical at any worker count"
+    );
+    assert_eq!(
+        det_a.events_processed, det_b.events_processed,
+        "event counts are simulation output, not wall clock"
+    );
+    // shards == 1 must be exactly the unsharded simulation.
+    let one = mega_cfg(1);
+    let one_sharded = sweep::run_mega(&serial, &one, 1).expect("mega 1-shard");
+    let one_direct = one.run().expect("direct run");
+    assert_eq!(
+        checksum(std::slice::from_ref(&one_sharded)).to_bits(),
+        checksum(std::slice::from_ref(&one_direct)).to_bits(),
+        "a 1-shard mega run must be exactly the unsharded simulation"
+    );
+    assert_eq!(one_sharded.events_processed, one_direct.events_processed);
+
     let rows: Vec<Json> = grid
         .iter()
         .zip(&outs)
@@ -854,6 +933,33 @@ fn main() {
                 ("on_wall_s", Json::Num(tel_on_wall)),
                 ("sweep_serial_wall_s", Json::Num(tel_serial_wall)),
                 ("sweep_parallel_wall_s", Json::Num(tel_parallel_wall)),
+            ]),
+        ),
+        (
+            "mega",
+            Json::obj(vec![
+                ("duration_s", Json::Num(mega_duration_s)),
+                ("shards_max", Json::Num(8.0)),
+                ("merge_deterministic", Json::Bool(true)),
+                ("one_shard_exact", Json::Bool(true)),
+                (
+                    "rows",
+                    Json::Arr(
+                        mega_rows
+                            .iter()
+                            .map(|(n, shards, arrived, events, eps, goodput)| {
+                                Json::obj(vec![
+                                    ("fleet_size", Json::Num(*n as f64)),
+                                    ("shards", Json::Num(*shards as f64)),
+                                    ("arrived", Json::Num(*arrived as f64)),
+                                    ("events_processed", Json::Num(*events as f64)),
+                                    ("events_per_sec", Json::Num(*eps)),
+                                    ("goodput_rps", Json::Num(*goodput)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
         ("rows", Json::Arr(rows)),

@@ -1,10 +1,11 @@
 //! The fleet simulation engine.
 //!
 //! Runs N MIG-partitioned GPUs inside one discrete-event simulation:
-//! fleet-wide request classes arrive on aggregate streams, a
-//! [`RoutePolicy`] dispatches each request to one GPU's replica, and a
-//! [`FleetPolicy`] decides per observation window *which GPU* to
-//! repartition. Two reconfiguration disciplines are modelled:
+//! fleet-wide request classes arrive on aggregate streams, a routing
+//! policy ([`Router`]) dispatches each request to one GPU's replica, and
+//! a fleet policy ([`super::policy::FleetPolicyImpl`]) decides per
+//! observation window *which GPU* to repartition. Two reconfiguration
+//! disciplines are modelled:
 //!
 //! * **rolling** — the chosen GPU stops taking traffic, its queued
 //!   requests migrate to sibling GPUs, and only in-flight work drains
@@ -42,6 +43,16 @@
 //! `tests/fleet_properties.rs`. Because the crash schedule and the
 //! overload policy are part of the config, faulted and shedding sweeps
 //! stay bit-identical at any worker count.
+//!
+//! The hot path is arena-backed: live requests park their fields in the
+//! run's [`ReqArena`] (structure-of-arrays columns indexed by `u32`
+//! handles, slots recycled through a free list) and every replica and
+//! stranded queue holds handles, so routing, migration, crash retries
+//! and shedding move 4-byte indices instead of 32-byte structs and a
+//! steady-state run performs no per-request heap allocation. Arrival
+//! streams, the router and the fleet policy are enum-dispatched
+//! ([`ArrivalProcess`], [`Router`]) — no boxed-trait indirection in the
+//! per-event loop.
 
 use std::collections::VecDeque;
 
@@ -58,13 +69,13 @@ use crate::simgpu::perfmodel::{PerfError, StepEstimate};
 use crate::simgpu::resource::ExecResource;
 use crate::util::prng::Prng;
 use crate::util::stats::percentile_sorted;
-use crate::workload::arrival::{Arrival, ArrivalError, ArrivalSpec};
+use crate::workload::arrival::{ArrivalError, ArrivalProcess, ArrivalSpec};
 use crate::workload::spec::WorkloadSpec;
 
 use super::faults::{FaultPlan, FaultRecord};
 use super::overload::{BreakerState, OverloadGuard, OverloadPolicy, ShedCause, ShedDiscipline};
 use super::policy::{FleetCtx, FleetObs, FleetPolicyKind, GpuObs};
-use super::router::{GpuHealth, RoutePolicy, RouterKind};
+use super::router::{GpuHealth, Router, RouterKind};
 use super::telemetry::{FleetRecorder, FleetTelemetry, TelemetryConfig};
 use super::tenancy::{jain_index, tenant_of_classes, validate_tenants, Tenant, TenantOutcome};
 
@@ -312,6 +323,15 @@ pub struct FleetOutcome {
     /// Fleet availability over the horizon:
     /// `1 − Σ downtime / (fleet size × duration)`.
     pub availability: f64,
+    /// Discrete events the simulator processed over the run (arrivals,
+    /// completions, ticks, faults — everything popped off the calendar).
+    /// Deterministic per config and seed.
+    pub events_processed: u64,
+    /// Simulator throughput: `events_processed` divided by the host
+    /// wall-clock seconds the run took. Wall-derived, so it varies
+    /// between machines and runs — excluded from every determinism
+    /// fingerprint, checksum and regression comparison.
+    pub events_per_sec: f64,
     /// Executed fault timeline, in crash order.
     pub fault_log: Vec<FaultRecord>,
     /// Every layout each GPU adopted, in order (initial layout first).
@@ -360,9 +380,94 @@ struct Req {
     deadline: f64,
 }
 
+/// Slab-allocated request arena: the hot fields of every live request
+/// live in structure-of-arrays columns indexed by a `u32` handle, and
+/// the replica / stranded queues hold handles instead of `Req` values.
+/// Slots are recycled through a free list when a request leaves the
+/// system (completed, shed, lost or failed), so the columns grow to the
+/// peak number of in-flight requests — not the total arrival count —
+/// and the steady-state hot path performs no per-request allocation.
+///
+/// Tenant and epoch are deliberately not columns: a request's tenant is
+/// a pure function of its class (`tenant_of[class]`), and epochs belong
+/// to replicas/GPUs, not requests.
+#[derive(Debug, Default)]
+struct ReqArena {
+    id: Vec<u64>,
+    arrived: Vec<f64>,
+    deadline: Vec<f64>,
+    tries: Vec<u32>,
+    free: Vec<u32>,
+}
+
+impl ReqArena {
+    /// Park a request in the arena, reusing a released slot when one is
+    /// available.
+    fn alloc(&mut self, req: Req) -> u32 {
+        match self.free.pop() {
+            Some(h) => {
+                let i = h as usize;
+                self.id[i] = req.id;
+                self.arrived[i] = req.arrived;
+                self.deadline[i] = req.deadline;
+                self.tries[i] = req.tries;
+                h
+            }
+            None => {
+                let h = u32::try_from(self.id.len()).expect("more than u32::MAX live requests");
+                self.id.push(req.id);
+                self.arrived.push(req.arrived);
+                self.deadline.push(req.deadline);
+                self.tries.push(req.tries);
+                h
+            }
+        }
+    }
+
+    fn id(&self, h: u32) -> u64 {
+        self.id[h as usize]
+    }
+
+    fn arrived(&self, h: u32) -> f64 {
+        self.arrived[h as usize]
+    }
+
+    fn deadline(&self, h: u32) -> f64 {
+        self.deadline[h as usize]
+    }
+
+    fn tries(&self, h: u32) -> u32 {
+        self.tries[h as usize]
+    }
+
+    /// Copy one request's fields back out of the columns.
+    #[cfg(test)]
+    fn req(&self, h: u32) -> Req {
+        let i = h as usize;
+        Req {
+            id: self.id[i],
+            arrived: self.arrived[i],
+            tries: self.tries[i],
+            deadline: self.deadline[i],
+        }
+    }
+
+    /// Consume one crash retry in place: the handle, id, arrival stamp
+    /// and deadline all survive (a crash does not buy extra SLO time).
+    fn bump_tries(&mut self, h: u32) {
+        self.tries[h as usize] += 1;
+    }
+
+    /// Return a slot to the free list once the request leaves the
+    /// system. The caller must not use the handle again.
+    fn release(&mut self, h: u32) {
+        self.free.push(h);
+    }
+}
+
 #[derive(Debug)]
 struct Replica {
-    queue: VecDeque<Req>, // front = in service when busy
+    queue: VecDeque<u32>, // ReqArena handles; front = in service when busy
     busy: bool,
     busy_since: f64,
     /// Crashed by an instance-level fault; excluded from routing until
@@ -537,6 +642,7 @@ impl EngineInspector for NoopInspector {}
 fn start_replica(
     des: &mut Des<Ev>,
     r: &mut Replica,
+    arena: &ReqArena,
     tel: &mut FleetRecorder,
     gpu: usize,
     class: usize,
@@ -549,7 +655,7 @@ fn start_replica(
     r.busy = true;
     r.busy_since = now;
     des.schedule_in(est.seconds, Ev::ServeDone { gpu, class, epoch: r.epoch });
-    let head = r.queue.front().map_or(0, |q| q.id);
+    let head = r.queue.front().map_or(0, |&h| arena.id(h));
     tel.on_serve_start(now, head, gpu, class, est, power_w);
 }
 
@@ -580,7 +686,7 @@ fn maybe_begin_reconfig(
 /// caller-owned scratch buffers (refilled here), so the DES hot path
 /// performs no per-event heap allocation.
 fn route_request(
-    router: &mut dyn RoutePolicy,
+    router: &mut Router,
     gpus_state: &[GpuState],
     mode: RepartitionMode,
     class: usize,
@@ -605,18 +711,19 @@ fn route_request(
 /// zeroes the instance's DCGM counters.
 fn flush_replica(
     r: &mut Replica,
+    arena: &ReqArena,
     tel: &mut FleetRecorder,
     gpu: usize,
     class: usize,
     now: f64,
-    dumped: &mut Vec<(usize, Req)>,
+    dumped: &mut Vec<(usize, u32)>,
 ) {
     if r.busy {
         r.window_busy_s += now - r.busy_since;
         r.busy = false;
         r.epoch += 1;
-        if let Some(head) = r.queue.front() {
-            tel.on_stale(now, head.id, class, gpu);
+        if let Some(&head) = r.queue.front() {
+            tel.on_stale(now, arena.id(head), class, gpu);
         }
     }
     tel.on_replica_down(now, gpu, class);
@@ -644,6 +751,7 @@ enum Dispatch {
 /// right before starting service).
 fn shed_expired(
     guard: &mut OverloadGuard,
+    arena: &mut ReqArena,
     r: &mut Replica,
     tel: &mut FleetRecorder,
     gpu: usize,
@@ -654,11 +762,12 @@ fn shed_expired(
         return;
     }
     debug_assert!(!r.busy, "deadline filter on a busy replica g{gpu}c{class}");
-    while let Some(front) = r.queue.front() {
-        if front.deadline < now {
+    while let Some(&front) = r.queue.front() {
+        if arena.deadline(front) < now {
             let expired = r.queue.pop_front().expect("front exists");
             guard.note_shed(Some(gpu), class, ShedCause::Deadline);
-            tel.on_shed(now, expired.id, class, Some(gpu), ShedCause::Deadline);
+            tel.on_shed(now, arena.id(expired), class, Some(gpu), ShedCause::Deadline);
+            arena.release(expired);
         } else {
             break;
         }
@@ -670,17 +779,22 @@ fn shed_expired(
 /// shared by arrivals, drain migration, crash retries and stranded
 /// re-dispatch, and the overload guard's capacity bound and deadline
 /// expiry apply on every one of those paths.
+///
+/// `req` is an arena handle. On [`Dispatch::Shed`] the request left the
+/// system and its slot is released here; on [`Dispatch::Stranded`] the
+/// caller keeps the handle (and parks it in a stranded queue).
 #[allow(clippy::too_many_arguments)] // DES plumbing, not an API
 fn dispatch_req(
     des: &mut Des<Ev>,
-    router: &mut dyn RoutePolicy,
+    router: &mut Router,
     gpus_state: &mut [GpuState],
     mode: RepartitionMode,
     guard: &mut OverloadGuard,
     tel: &mut FleetRecorder,
     insp: &mut dyn EngineInspector,
+    arena: &mut ReqArena,
     class: usize,
-    req: Req,
+    req: u32,
     now: f64,
     available: &mut Vec<bool>,
     depth: &mut Vec<usize>,
@@ -693,14 +807,15 @@ fn dispatch_req(
     // routing decision was made against.
     insp.on_route(now, g, class, &EngineProbe { gpus: &*gpus_state, guard: &*guard, mode });
     guard.note_route(g);
-    tel.on_route(now, req.id, class, g);
+    tel.on_route(now, arena.id(req), class, g);
     let gs = &mut gpus_state[g];
     let cap = guard.queue_cap();
     if cap > 0 && gs.replicas[class].queue.len() >= cap {
         guard.note_shed(Some(g), class, ShedCause::Capacity);
         match guard.discipline() {
             ShedDiscipline::RejectNewest => {
-                tel.on_shed(now, req.id, class, Some(g), ShedCause::Capacity);
+                tel.on_shed(now, arena.id(req), class, Some(g), ShedCause::Capacity);
+                arena.release(req);
                 return Dispatch::Shed;
             }
             ShedDiscipline::DropOldest => {
@@ -711,26 +826,28 @@ fn dispatch_req(
                 if drop_at < gs.replicas[class].queue.len() {
                     let victim =
                         gs.replicas[class].queue.remove(drop_at).expect("index checked");
-                    tel.on_shed(now, victim.id, class, Some(g), ShedCause::Capacity);
+                    tel.on_shed(now, arena.id(victim), class, Some(g), ShedCause::Capacity);
+                    arena.release(victim);
                 } else {
-                    tel.on_shed(now, req.id, class, Some(g), ShedCause::Capacity);
+                    tel.on_shed(now, arena.id(req), class, Some(g), ShedCause::Capacity);
+                    arena.release(req);
                     return Dispatch::Shed;
                 }
             }
         }
     }
     gs.replicas[class].queue.push_back(req);
-    tel.on_enqueue(now, req.id, class, g);
+    tel.on_enqueue(now, arena.id(req), class, g);
     if gs.phase == Phase::Running && !gs.replicas[class].busy {
         // The queue may hold work that waited out a drain or an outage;
         // expired entries are shed before anything enters service. The
         // newcomer cannot be older than its own deadline at arrival, but
         // re-dispatched (migrated/retried/stranded) requests can.
-        shed_expired(guard, &mut gs.replicas[class], tel, g, class, now);
+        shed_expired(guard, arena, &mut gs.replicas[class], tel, g, class, now);
         if !gs.replicas[class].queue.is_empty() {
             let est = gs.svc_est[class];
             let power_w = gs.svc_power[class];
-            start_replica(des, &mut gs.replicas[class], tel, g, class, now, est, power_w);
+            start_replica(des, &mut gs.replicas[class], arena, tel, g, class, now, est, power_w);
         }
     }
     Dispatch::Placed(g)
@@ -747,15 +864,16 @@ fn dispatch_req(
 /// is also not internally sorted: crash retries append old-timestamp
 /// requests behind younger stranded arrivals, so the sort is needed
 /// within classes too.)
-fn stranded_dispatch_order(stranded: &mut [VecDeque<Req>]) -> Vec<(usize, Req)> {
+fn stranded_dispatch_order(stranded: &mut [VecDeque<u32>], arena: &ReqArena) -> Vec<(usize, u32)> {
     let total: usize = stranded.iter().map(|q| q.len()).sum();
-    let mut merged: Vec<(usize, Req)> = Vec::with_capacity(total);
+    let mut merged: Vec<(usize, u32)> = Vec::with_capacity(total);
     for (c, q) in stranded.iter_mut().enumerate() {
         merged.extend(q.drain(..).map(|req| (c, req)));
     }
     merged.sort_by(|a, b| {
-        a.1.arrived
-            .partial_cmp(&b.1.arrived)
+        arena
+            .arrived(a.1)
+            .partial_cmp(&arena.arrived(b.1))
             .expect("finite arrival timestamps")
             .then(a.0.cmp(&b.0))
     });
@@ -771,18 +889,19 @@ fn stranded_dispatch_order(stranded: &mut [VecDeque<Req>]) -> Vec<(usize, Req)> 
 #[allow(clippy::too_many_arguments)] // DES plumbing, not an API
 fn drain_stranded(
     des: &mut Des<Ev>,
-    router: &mut dyn RoutePolicy,
+    router: &mut Router,
     gpus_state: &mut [GpuState],
     mode: RepartitionMode,
     guard: &mut OverloadGuard,
     tel: &mut FleetRecorder,
     insp: &mut dyn EngineInspector,
-    stranded: &mut [VecDeque<Req>],
+    arena: &mut ReqArena,
+    stranded: &mut [VecDeque<u32>],
     t: f64,
     available: &mut Vec<bool>,
     depth: &mut Vec<usize>,
 ) {
-    let merged = stranded_dispatch_order(stranded);
+    let merged = stranded_dispatch_order(stranded, arena);
     if merged.is_empty() {
         return;
     }
@@ -793,7 +912,7 @@ fn drain_stranded(
             continue;
         }
         match dispatch_req(
-            des, router, gpus_state, mode, guard, tel, insp, c, req, t, available, depth,
+            des, router, gpus_state, mode, guard, tel, insp, arena, c, req, t, available, depth,
         ) {
             // A capacity shed is terminal (already counted), not a block:
             // requests behind it may still find room.
@@ -969,6 +1088,10 @@ impl FleetConfig {
         &self,
         insp: &mut dyn EngineInspector,
     ) -> Result<FleetOutcome, FleetError> {
+        // Wall clock over the whole run (planning + event loop +
+        // pooling); feeds only the wall-derived `events_per_sec`, never
+        // the simulation.
+        let wall_start = std::time::Instant::now();
         self.validate()?;
         let n_gpus = self.gpus.len();
         let n_classes = self.classes.len();
@@ -1033,7 +1156,7 @@ impl FleetConfig {
         }
 
         let mut seeder = Prng::new(self.seed);
-        let mut arrivals: Vec<Box<dyn Arrival>> = Vec::with_capacity(n_classes);
+        let mut arrivals: Vec<ArrivalProcess> = Vec::with_capacity(n_classes);
         for c in &self.classes {
             arrivals.push(c.arrival.build(seeder.next_u64())?);
         }
@@ -1047,6 +1170,9 @@ impl FleetConfig {
         // per-GPU ingress breakers. Disabled policies leave every check
         // vacuous, so the run is byte-identical to the unprotected path.
         let slo_ms: Vec<f64> = self.classes.iter().map(|c| c.slo_ms).collect();
+        // Hot per-class scalars, hoisted out of the per-event path so a
+        // completion never reaches back into the config structs.
+        let class_batch: Vec<u64> = self.classes.iter().map(|c| c.spec.batch as u64).collect();
         let mut guard = OverloadGuard::new(self.overload, &slo_ms, &tenants_eff, n_gpus);
         // Telemetry recorder: strictly observational (never feeds back
         // into routing, shedding or scheduling), so the simulation is
@@ -1081,7 +1207,7 @@ impl FleetConfig {
         let mut arrived_per_class: Vec<u64> = vec![0; n_classes];
         let mut slo_met: Vec<u64> = vec![0; n_classes];
         let mut violations: Vec<u64> = vec![0; n_classes];
-        let mut stranded: Vec<VecDeque<Req>> = vec![VecDeque::new(); n_classes];
+        let mut stranded: Vec<VecDeque<u32>> = vec![VecDeque::new(); n_classes];
         let mut last_change: Vec<f64> = vec![0.0; n_gpus];
         let mut layouts: Vec<Vec<Layout>> =
             plans.iter().map(|p| vec![p.layout.clone()]).collect();
@@ -1106,6 +1232,8 @@ impl FleetConfig {
         // Router scratch buffers, reused across every routing decision.
         let mut avail_scratch: Vec<bool> = Vec::with_capacity(n_gpus);
         let mut depth_scratch: Vec<usize> = Vec::with_capacity(n_gpus);
+        // The request arena: every live request's fields, SoA columns.
+        let mut arena = ReqArena::default();
 
         let mut des: Des<Ev> = Des::new();
         // Seed the calendar: one stream per class, training on every GPU,
@@ -1151,20 +1279,21 @@ impl FleetConfig {
                         tel.on_shed(t, id, class, None, ShedCause::Brownout);
                         continue;
                     }
-                    let req = Req {
+                    let req = arena.alloc(Req {
                         id,
                         arrived: t,
                         tries: 0,
                         deadline: guard.deadline(class, t),
-                    };
+                    });
                     match dispatch_req(
                         &mut des,
-                        router.as_mut(),
+                        &mut router,
                         &mut gpus_state,
                         self.mode,
                         &mut guard,
                         &mut tel,
                         insp,
+                        &mut arena,
                         class,
                         req,
                         t,
@@ -1196,22 +1325,18 @@ impl FleetConfig {
                             .queue
                             .pop_front()
                             .expect("completion without request");
-                        let arrived_at = req.arrived;
+                        let arrived_at = arena.arrived(req);
                         gs.replicas[class].busy = false;
                         let busy_s = t - gs.replicas[class].busy_since;
                         gs.replicas[class].window_busy_s += busy_s;
                         let latency_ms = (t - arrived_at) * 1e3;
-                        collectors[gpu][class].record_completion(
-                            t,
-                            latency_ms,
-                            self.classes[class].spec.batch as u64,
-                        );
+                        collectors[gpu][class].record_completion(t, latency_ms, class_batch[class]);
                         collectors[gpu][class].record_energy(gs.svc_power[class] * busy_s);
                         collectors[gpu][class].record_gract(gs.svc_est[class].gract);
                         collectors[gpu][class].record_fb(gs.svc_est[class].fb_bytes);
                         gs.replicas[class].window_completed += 1;
                         gs.replicas[class].window_lat.push(latency_ms);
-                        let violated = latency_ms > self.classes[class].slo_ms;
+                        let violated = latency_ms > slo_ms[class];
                         if violated {
                             violations[class] += 1;
                             gs.replicas[class].window_violations += 1;
@@ -1219,13 +1344,15 @@ impl FleetConfig {
                             slo_met[class] += 1;
                         }
                         let est = gs.svc_est[class];
-                        tel.on_done(t, req.id, gpu, class, latency_ms, violated, est);
+                        tel.on_done(t, arena.id(req), gpu, class, latency_ms, violated, est);
+                        arena.release(req);
                     }
                     match gpus_state[gpu].phase {
                         Phase::Running => {
                             let gs = &mut gpus_state[gpu];
                             shed_expired(
                                 &mut guard,
+                                &mut arena,
                                 &mut gs.replicas[class],
                                 &mut tel,
                                 gpu,
@@ -1236,7 +1363,9 @@ impl FleetConfig {
                                 let est = gs.svc_est[class];
                                 let power_w = gs.svc_power[class];
                                 let r = &mut gs.replicas[class];
-                                start_replica(&mut des, r, &mut tel, gpu, class, t, est, power_w);
+                                start_replica(
+                                    &mut des, r, &arena, &mut tel, gpu, class, t, est, power_w,
+                                );
                             }
                         }
                         Phase::Draining => maybe_begin_reconfig(
@@ -1363,15 +1492,16 @@ impl FleetConfig {
                                             gpus_state[g].replicas[c].queue.split_off(keep);
                                         for req in moved {
                                             migrated_here += 1;
-                                            tel.on_migrate(t, req.id, c, g);
+                                            tel.on_migrate(t, arena.id(req), c, g);
                                             match dispatch_req(
                                                 &mut des,
-                                                router.as_mut(),
+                                                &mut router,
                                                 &mut gpus_state,
                                                 RepartitionMode::Rolling,
                                                 &mut guard,
                                                 &mut tel,
                                                 insp,
+                                                &mut arena,
                                                 c,
                                                 req,
                                                 t,
@@ -1382,7 +1512,7 @@ impl FleetConfig {
                                                 Dispatch::Stranded => {
                                                     stranded[c].push_back(req);
                                                     stranded_requests += 1;
-                                                    tel.on_stranded(t, req.id, c);
+                                                    tel.on_stranded(t, arena.id(req), c);
                                                 }
                                             }
                                         }
@@ -1424,12 +1554,13 @@ impl FleetConfig {
                     if guard.breaker_enabled() {
                         drain_stranded(
                             &mut des,
-                            router.as_mut(),
+                            &mut router,
                             &mut gpus_state,
                             self.mode,
                             &mut guard,
                             &mut tel,
                             insp,
+                            &mut arena,
                             &mut stranded,
                             t,
                             &mut avail_scratch,
@@ -1477,12 +1608,13 @@ impl FleetConfig {
                     // or crashes that downed every destination).
                     drain_stranded(
                         &mut des,
-                        router.as_mut(),
+                        &mut router,
                         &mut gpus_state,
                         self.mode,
                         &mut guard,
                         &mut tel,
                         insp,
+                        &mut arena,
                         &mut stranded,
                         t,
                         &mut avail_scratch,
@@ -1495,13 +1627,22 @@ impl FleetConfig {
                         let gs = &mut gpus_state[gpu];
                         for c in 0..n_classes {
                             if !gs.replicas[c].down && !gs.replicas[c].busy {
-                                shed_expired(&mut guard, &mut gs.replicas[c], &mut tel, gpu, c, t);
+                                shed_expired(
+                                    &mut guard,
+                                    &mut arena,
+                                    &mut gs.replicas[c],
+                                    &mut tel,
+                                    gpu,
+                                    c,
+                                    t,
+                                );
                                 if !gs.replicas[c].queue.is_empty() {
                                     let est = gs.svc_est[c];
                                     let power_w = gs.svc_power[c];
                                     start_replica(
                                         &mut des,
                                         &mut gs.replicas[c],
+                                        &arena,
                                         &mut tel,
                                         gpu,
                                         c,
@@ -1531,7 +1672,7 @@ impl FleetConfig {
                     // Dump every affected queue first, then decide retry /
                     // shed / lose — retries must never land back on a
                     // replica this crash is taking down.
-                    let mut dumped: Vec<(usize, Req)> = Vec::new();
+                    let mut dumped: Vec<(usize, u32)> = Vec::new();
                     match inj.class {
                         None => {
                             gpu_crashes += 1;
@@ -1553,14 +1694,30 @@ impl FleetConfig {
                                 tel.on_train_down(t, g);
                             }
                             for c in 0..n_classes {
-                                flush_replica(&mut gs.replicas[c], &mut tel, g, c, t, &mut dumped);
+                                flush_replica(
+                                    &mut gs.replicas[c],
+                                    &arena,
+                                    &mut tel,
+                                    g,
+                                    c,
+                                    t,
+                                    &mut dumped,
+                                );
                             }
                         }
                         Some(c) => {
                             instance_crashes += 1;
                             let gs = &mut gpus_state[g];
                             gs.replicas[c].down = true;
-                            flush_replica(&mut gs.replicas[c], &mut tel, g, c, t, &mut dumped);
+                            flush_replica(
+                                &mut gs.replicas[c],
+                                &arena,
+                                &mut tel,
+                                g,
+                                c,
+                                t,
+                                &mut dumped,
+                            );
                             if gs.phase == Phase::Draining {
                                 // Losing the in-flight request may
                                 // complete the drain barrier.
@@ -1572,34 +1729,33 @@ impl FleetConfig {
                     let mut retried_here: u64 = 0;
                     let mut shed_here: u64 = 0;
                     for (c, req) in dumped {
-                        if req.tries >= self.faults.retry_budget {
+                        if arena.tries(req) >= self.faults.retry_budget {
                             lost_here += 1;
                             lost_per_class[c] += 1;
-                            tel.on_lost(t, req.id, c, g);
+                            tel.on_lost(t, arena.id(req), c, g);
+                            arena.release(req);
                         } else if retried_here >= self.faults.storm_guard {
                             shed_here += 1;
                             failed_per_class[c] += 1;
-                            tel.on_failed_storm(t, req.id, c, g);
+                            tel.on_failed_storm(t, arena.id(req), c, g);
+                            arena.release(req);
                         } else {
                             retried_here += 1;
                             retried_per_class[c] += 1;
-                            tel.on_retry(t, req.id, c, g);
-                            // The retry keeps the original arrival stamp and
-                            // deadline: a crash does not buy extra SLO time.
-                            let req = Req {
-                                id: req.id,
-                                arrived: req.arrived,
-                                tries: req.tries + 1,
-                                deadline: req.deadline,
-                            };
+                            tel.on_retry(t, arena.id(req), c, g);
+                            // The retry keeps the handle, id, arrival stamp
+                            // and deadline: a crash does not buy extra SLO
+                            // time.
+                            arena.bump_tries(req);
                             match dispatch_req(
                                 &mut des,
-                                router.as_mut(),
+                                &mut router,
                                 &mut gpus_state,
                                 self.mode,
                                 &mut guard,
                                 &mut tel,
                                 insp,
+                                &mut arena,
                                 c,
                                 req,
                                 t,
@@ -1610,7 +1766,7 @@ impl FleetConfig {
                                 Dispatch::Stranded => {
                                     stranded[c].push_back(req);
                                     stranded_requests += 1;
-                                    tel.on_stranded(t, req.id, c);
+                                    tel.on_stranded(t, arena.id(req), c);
                                 }
                             }
                         }
@@ -1665,12 +1821,13 @@ impl FleetConfig {
                     }
                     drain_stranded(
                         &mut des,
-                        router.as_mut(),
+                        &mut router,
                         &mut gpus_state,
                         self.mode,
                         &mut guard,
                         &mut tel,
                         insp,
+                        &mut arena,
                         &mut stranded,
                         t,
                         &mut avail_scratch,
@@ -1686,13 +1843,22 @@ impl FleetConfig {
                     if gs.phase == Phase::Running {
                         for c in 0..n_classes {
                             if !gs.replicas[c].down && !gs.replicas[c].busy {
-                                shed_expired(&mut guard, &mut gs.replicas[c], &mut tel, g, c, t);
+                                shed_expired(
+                                    &mut guard,
+                                    &mut arena,
+                                    &mut gs.replicas[c],
+                                    &mut tel,
+                                    g,
+                                    c,
+                                    t,
+                                );
                                 if !gs.replicas[c].queue.is_empty() {
                                     let est = gs.svc_est[c];
                                     let power_w = gs.svc_power[c];
                                     start_replica(
                                         &mut des,
                                         &mut gs.replicas[c],
+                                        &arena,
                                         &mut tel,
                                         g,
                                         c,
@@ -1725,8 +1891,8 @@ impl FleetConfig {
         telemetry_window_flush(&mut tel, end_t, &gpus_state, &guard);
         if tel.tracing_enabled() {
             for (c, q) in stranded.iter().enumerate() {
-                for req in q {
-                    tel.on_failed_end(end_t, req.id, c);
+                for &req in q {
+                    tel.on_failed_end(end_t, arena.id(req), c);
                 }
             }
         }
@@ -1846,6 +2012,13 @@ impl FleetConfig {
         let fairness_jain = jain_index(&norm);
 
         let train_batch = self.train.as_ref().map(|t| t.batch as f64).unwrap_or(0.0);
+        // Simulator throughput: deterministic event count over the
+        // wall-clock the run took. Wall-derived, so `events_per_sec`
+        // never participates in determinism fingerprints or checksums.
+        let events_processed = des.processed();
+        let wall_s = wall_start.elapsed().as_secs_f64();
+        let events_per_sec =
+            if wall_s > 0.0 { events_processed as f64 / wall_s } else { 0.0 };
         Ok(FleetOutcome {
             policy: self.policy.name(),
             router: self.router.name(),
@@ -1888,6 +2061,8 @@ impl FleetConfig {
             instance_crashes,
             downtime_s_per_gpu: downtime_per_gpu,
             availability,
+            events_processed,
+            events_per_sec,
             fault_log,
             layouts,
             decisions,
@@ -2334,21 +2509,71 @@ mod tests {
         // to the lowest class index, and it sorts *within* classes too
         // (crash retries append old-timestamp requests behind younger
         // stranded arrivals).
-        let rq = |arrived: f64, tries: u32| Req { id: 0, arrived, tries, deadline: f64::INFINITY };
-        let mut stranded: Vec<VecDeque<Req>> = vec![VecDeque::new(), VecDeque::new()];
-        stranded[0].push_back(rq(10.0, 0));
-        stranded[0].push_back(rq(20.0, 0));
-        stranded[1].push_back(rq(5.0, 1));
-        stranded[1].push_back(rq(20.0, 0));
-        stranded[1].push_back(rq(12.0, 1));
-        let order = stranded_dispatch_order(&mut stranded);
-        let key: Vec<(usize, f64)> = order.iter().map(|(c, r)| (*c, r.arrived)).collect();
+        let mut arena = ReqArena::default();
+        let rq = |arena: &mut ReqArena, arrived: f64, tries: u32| {
+            arena.alloc(Req { id: 0, arrived, tries, deadline: f64::INFINITY })
+        };
+        let mut stranded: Vec<VecDeque<u32>> = vec![VecDeque::new(), VecDeque::new()];
+        let h = rq(&mut arena, 10.0, 0);
+        stranded[0].push_back(h);
+        let h = rq(&mut arena, 20.0, 0);
+        stranded[0].push_back(h);
+        let h = rq(&mut arena, 5.0, 1);
+        stranded[1].push_back(h);
+        let h = rq(&mut arena, 20.0, 0);
+        stranded[1].push_back(h);
+        let h = rq(&mut arena, 12.0, 1);
+        stranded[1].push_back(h);
+        let order = stranded_dispatch_order(&mut stranded, &arena);
+        let key: Vec<(usize, f64)> = order.iter().map(|&(c, h)| (c, arena.arrived(h))).collect();
         assert_eq!(
             key,
             vec![(1, 5.0), (0, 10.0), (1, 12.0), (0, 20.0), (1, 20.0)],
             "globally oldest first, ties to the lowest class index"
         );
         assert!(stranded.iter().all(|q| q.is_empty()), "the queues are drained");
+    }
+
+    #[test]
+    fn req_arena_recycles_slots_through_the_free_list() {
+        let mut arena = ReqArena::default();
+        let a = arena.alloc(Req { id: 1, arrived: 0.5, tries: 0, deadline: 1.0 });
+        let b = arena.alloc(Req { id: 2, arrived: 0.75, tries: 0, deadline: 2.0 });
+        assert_eq!((a, b), (0, 1));
+        arena.release(a);
+        let c = arena.alloc(Req { id: 3, arrived: 1.0, tries: 1, deadline: 3.0 });
+        assert_eq!(c, a, "released slots are reused before the columns grow");
+        assert_eq!(arena.id.len(), 2, "the columns never grow past the live peak");
+        let r = arena.req(c);
+        assert_eq!((r.id, r.tries), (3, 1));
+        assert_eq!(r.arrived.to_bits(), 1.0f64.to_bits());
+        assert_eq!(r.deadline.to_bits(), 3.0f64.to_bits());
+        arena.bump_tries(b);
+        assert_eq!(arena.tries(b), 1);
+        assert_eq!(arena.id(b), 2);
+    }
+
+    #[test]
+    fn runs_report_events_processed_and_throughput() {
+        let out = demo(
+            2,
+            FleetPolicyKind::Static,
+            RouterKind::LeastLoaded,
+            RepartitionMode::Rolling,
+            240.0,
+            120.0,
+        )
+        .run()
+        .unwrap();
+        // Every arrival pops at least an Arrive and a ServeDone, plus
+        // ticks and training completions.
+        assert!(
+            out.events_processed > 2 * out.arrived,
+            "events {} vs arrived {}",
+            out.events_processed,
+            out.arrived
+        );
+        assert!(out.events_per_sec > 0.0, "wall-derived throughput must be positive");
     }
 
     #[test]

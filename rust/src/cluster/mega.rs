@@ -1,0 +1,458 @@
+//! Sharded mega-fleet runs: one huge [`FleetConfig`] decomposed into
+//! per-shard sub-fleets that execute across sweep workers and merge back
+//! into a single [`FleetOutcome`].
+//!
+//! A 1024-GPU fleet with millions of requests is one giant discrete-event
+//! simulation; even on the arena/SoA hot path a single calendar
+//! serializes it onto one core. The mega path trades the fleet-wide
+//! router for scale: the GPU list is partitioned into contiguous shards,
+//! every request class's arrival rate is scaled by the shard's GPU
+//! fraction (requests are routed *within* their shard), each shard runs
+//! as an independent simulation with a seed derived in shard order, and
+//! the shard outcomes merge in input order.
+//!
+//! Determinism guarantee: the shard decomposition is a pure function of
+//! `(config, shard count)` and every shard is itself a seeded,
+//! bit-deterministic fleet run, so a mega run is **bit-identical at any
+//! sweep worker count** for a fixed shard count. A sharded run is *not*
+//! bit-identical to the unsharded run of the same config (the router
+//! never sees cross-shard queue depths — it is a model-level
+//! decomposition, not an execution detail), except for `shards == 1`,
+//! which returns the config verbatim. Counter merges (arrivals,
+//! completions, sheds, crashes, downtime, events) are exact sums; pooled
+//! latency *percentiles* are completion-weighted combinations of the
+//! shard percentiles, which is approximate — exact per-GPU summaries are
+//! concatenated unchanged.
+
+use crate::metrics::collector::RunSummary;
+use crate::util::prng::Prng;
+use crate::workload::arrival::ArrivalSpec;
+
+use super::engine::{FleetConfig, FleetError, FleetOutcome};
+use super::faults::FaultPlan;
+use super::tenancy::jain_index;
+
+/// A mega-fleet run decomposed into per-shard sub-fleets.
+#[derive(Debug, Clone)]
+pub struct MegaPlan {
+    /// The sub-fleet configs, in fleet (shard) order.
+    pub shards: Vec<FleetConfig>,
+    /// Global fleet index of each shard's first GPU (for mapping
+    /// shard-local GPU indices in the merged outcome back to the
+    /// original fleet order).
+    pub offsets: Vec<usize>,
+}
+
+/// Scale an arrival stream to a shard's share of the fleet-wide traffic.
+/// Synthetic processes scale their rate parameters; replay traces cannot
+/// be thinned deterministically without changing the model, so they are
+/// rejected.
+fn scale_arrival(spec: &ArrivalSpec, frac: f64) -> Result<ArrivalSpec, FleetError> {
+    Ok(match spec {
+        ArrivalSpec::Poisson { rate } => ArrivalSpec::Poisson { rate: rate * frac },
+        ArrivalSpec::Uniform { rate } => ArrivalSpec::Uniform { rate: rate * frac },
+        ArrivalSpec::Bursty { high_rate, low_rate, mean_dwell_s } => ArrivalSpec::Bursty {
+            high_rate: high_rate * frac,
+            low_rate: low_rate * frac,
+            mean_dwell_s: *mean_dwell_s,
+        },
+        ArrivalSpec::Diurnal { base_rate, peak_rate, period_s } => ArrivalSpec::Diurnal {
+            base_rate: base_rate * frac,
+            peak_rate: peak_rate * frac,
+            period_s: *period_s,
+        },
+        ArrivalSpec::Replay { .. } => {
+            return Err(FleetError::Invalid(
+                "mega sharding cannot split a replay arrival trace; use a synthetic \
+                 arrival process or run unsharded"
+                    .into(),
+            ));
+        }
+    })
+}
+
+/// Decompose `cfg` into `shards` contiguous sub-fleets. Shard sizes
+/// differ by at most one GPU (the remainder lands on the lowest shard
+/// indices); arrival rates scale by each shard's GPU fraction; fault
+/// injections follow their GPU into its shard with the index rebased;
+/// per-shard seeds derive from the config seed in shard order. A shard
+/// count of 1 (or one clamped to 1 by the fleet size) returns the config
+/// verbatim, so `--mega 1` is exactly the unsharded run.
+pub fn shard_config(cfg: &FleetConfig, shards: usize) -> Result<MegaPlan, FleetError> {
+    if shards == 0 {
+        return Err(FleetError::Invalid("mega shard count must be at least 1".into()));
+    }
+    cfg.validate()?;
+    let n_gpus = cfg.gpus.len();
+    let shards = shards.min(n_gpus);
+    if shards == 1 {
+        return Ok(MegaPlan { shards: vec![cfg.clone()], offsets: vec![0] });
+    }
+    let base = n_gpus / shards;
+    let rem = n_gpus % shards;
+    let mut seeder = Prng::new(cfg.seed);
+    let mut plan = MegaPlan {
+        shards: Vec::with_capacity(shards),
+        offsets: Vec::with_capacity(shards),
+    };
+    let mut start = 0usize;
+    for s in 0..shards {
+        let size = base + usize::from(s < rem);
+        let end = start + size;
+        let frac = size as f64 / n_gpus as f64;
+        let mut sub = cfg.clone();
+        sub.gpus = cfg.gpus[start..end].to_vec();
+        for class in &mut sub.classes {
+            class.arrival = scale_arrival(&class.arrival, frac)?;
+        }
+        sub.faults = FaultPlan {
+            injections: cfg
+                .faults
+                .injections
+                .iter()
+                .filter(|inj| inj.gpu >= start && inj.gpu < end)
+                .map(|inj| {
+                    let mut inj = *inj;
+                    inj.gpu -= start;
+                    inj
+                })
+                .collect(),
+            ..cfg.faults.clone()
+        };
+        sub.seed = seeder.next_u64();
+        plan.shards.push(sub);
+        plan.offsets.push(start);
+        start = end;
+    }
+    Ok(plan)
+}
+
+/// Completion-weighted merge of shard summaries under one label. Counts,
+/// throughput, energy and maxima merge exactly; the mean merges exactly
+/// (completion-weighted); the standard deviation merges exactly through
+/// pooled moments; p50/p99 are completion-weighted combinations of the
+/// shard percentiles (approximate — a percentile cannot be recovered
+/// from per-shard percentiles).
+fn merge_summaries(label: String, parts: &[&RunSummary]) -> RunSummary {
+    let completed: u64 = parts.iter().map(|p| p.completed).sum();
+    let w = |f: fn(&RunSummary) -> f64| -> f64 {
+        if completed == 0 {
+            return 0.0;
+        }
+        parts.iter().map(|&p| f(p) * p.completed as f64).sum::<f64>() / completed as f64
+    };
+    let avg = w(|p| p.avg_latency_ms);
+    // Pooled second moment: E[x²] = Σ wᵢ(σᵢ² + μᵢ²) / W, σ² = E[x²] − μ².
+    let ex2 = w(|p| p.std_latency_ms * p.std_latency_ms + p.avg_latency_ms * p.avg_latency_ms);
+    let std = (ex2 - avg * avg).max(0.0).sqrt();
+    RunSummary {
+        label,
+        completed,
+        avg_latency_ms: avg,
+        std_latency_ms: std,
+        p50_latency_ms: w(|p| p.p50_latency_ms),
+        p99_latency_ms: w(|p| p.p99_latency_ms),
+        max_latency_ms: parts.iter().map(|p| p.max_latency_ms).fold(0.0, f64::max),
+        throughput: parts.iter().map(|p| p.throughput).sum(),
+        mean_gract: w(|p| p.mean_gract),
+        peak_fb_mib: parts.iter().map(|p| p.peak_fb_mib).fold(0.0, f64::max),
+        energy_j: parts.iter().map(|p| p.energy_j).sum(),
+        duration_s: parts.iter().map(|p| p.duration_s).fold(0.0, f64::max),
+    }
+}
+
+/// Merge per-shard outcomes back into one fleet-level [`FleetOutcome`],
+/// in shard (input) order. Counters sum exactly; rates and fractions are
+/// recomputed from the summed counters; per-GPU vectors concatenate in
+/// fleet order with shard-local GPU indices rebased via `plan.offsets`;
+/// telemetry payloads are dropped (`None`) — run shards individually
+/// when observability is needed. `wall_s` is the wall-clock of the whole
+/// sharded run and feeds only `events_per_sec`.
+pub fn merge_outcomes(
+    cfg: &FleetConfig,
+    plan: &MegaPlan,
+    outs: &[FleetOutcome],
+    wall_s: f64,
+) -> FleetOutcome {
+    assert_eq!(outs.len(), plan.shards.len(), "one outcome per shard");
+    assert!(!outs.is_empty(), "at least one shard");
+    let n_classes = cfg.classes.len();
+    let n_gpus = cfg.gpus.len();
+
+    let mut arrived_per_class = vec![0u64; n_classes];
+    for out in outs {
+        for (c, n) in out.arrived_per_class.iter().enumerate() {
+            arrived_per_class[c] += n;
+        }
+    }
+    let sum_u64 = |f: fn(&FleetOutcome) -> u64| -> u64 { outs.iter().map(f).sum() };
+    let sum_f64 = |f: fn(&FleetOutcome) -> f64| -> f64 { outs.iter().map(f).sum() };
+
+    let arrived = sum_u64(|o| o.arrived);
+    let completed = sum_u64(|o| o.completed);
+    let slo_violations = sum_u64(|o| o.slo_violations);
+    let met_total = completed - slo_violations;
+    let train_steps = sum_u64(|o| o.train_steps);
+    let train_batch = cfg.train.as_ref().map(|t| t.batch as f64).unwrap_or(0.0);
+
+    // Per-tenant rows share the tenant set across shards: counters sum,
+    // rates recompute, fairness recomputes over the merged rows.
+    let mut tenants = outs[0].tenants.clone();
+    for row in &mut tenants {
+        row.arrived = 0;
+        row.completed = 0;
+        row.slo_violations = 0;
+        row.failed = 0;
+        row.lost_in_crash = 0;
+        row.retried = 0;
+        row.shed_deadline = 0;
+        row.shed_capacity = 0;
+        row.shed_brownout = 0;
+    }
+    for out in outs {
+        for (ti, row) in out.tenants.iter().enumerate() {
+            let m = &mut tenants[ti];
+            m.arrived += row.arrived;
+            m.completed += row.completed;
+            m.slo_violations += row.slo_violations;
+            m.failed += row.failed;
+            m.lost_in_crash += row.lost_in_crash;
+            m.retried += row.retried;
+            m.shed_deadline += row.shed_deadline;
+            m.shed_capacity += row.shed_capacity;
+            m.shed_brownout += row.shed_brownout;
+        }
+    }
+    for row in &mut tenants {
+        row.goodput_rps = (row.completed - row.slo_violations) as f64 / cfg.duration_s;
+        row.slo_violation_frac = if row.completed > 0 {
+            row.slo_violations as f64 / row.completed as f64
+        } else {
+            0.0
+        };
+        row.norm_goodput_rps = row.goodput_rps / row.weight;
+    }
+    let norm: Vec<f64> = tenants.iter().map(|r| r.norm_goodput_rps).collect();
+    let fairness_jain = jain_index(&norm);
+
+    let per_class: Vec<RunSummary> = (0..n_classes)
+        .map(|c| {
+            let parts: Vec<&RunSummary> = outs.iter().map(|o| &o.per_class[c]).collect();
+            merge_summaries(outs[0].per_class[c].label.clone(), &parts)
+        })
+        .collect();
+    let per_gpu: Vec<RunSummary> =
+        outs.iter().flat_map(|o| o.per_gpu.iter().cloned()).collect();
+    let pooled = {
+        let parts: Vec<&RunSummary> = outs.iter().map(|o| &o.pooled).collect();
+        merge_summaries("fleet".into(), &parts)
+    };
+
+    let mut fault_log = Vec::new();
+    let mut decisions = Vec::new();
+    let mut layouts = Vec::with_capacity(n_gpus);
+    let mut downtime_s_per_gpu = Vec::with_capacity(n_gpus);
+    for (s, out) in outs.iter().enumerate() {
+        let off = plan.offsets[s];
+        fault_log.extend(out.fault_log.iter().map(|r| {
+            let mut r = r.clone();
+            r.gpu += off;
+            r
+        }));
+        decisions.extend(out.decisions.iter().map(|d| {
+            let mut d = d.clone();
+            d.gpu += off;
+            d
+        }));
+        layouts.extend(out.layouts.iter().cloned());
+        downtime_s_per_gpu.extend(out.downtime_s_per_gpu.iter().copied());
+    }
+    let availability =
+        1.0 - downtime_s_per_gpu.iter().sum::<f64>() / (n_gpus as f64 * cfg.duration_s);
+
+    let events_processed = sum_u64(|o| o.events_processed);
+    let events_per_sec =
+        if wall_s > 0.0 { events_processed as f64 / wall_s } else { 0.0 };
+
+    FleetOutcome {
+        policy: cfg.policy.name(),
+        router: cfg.router.name(),
+        mode: cfg.mode,
+        fleet_size: n_gpus,
+        duration_s: cfg.duration_s,
+        pooled,
+        per_class,
+        per_gpu,
+        arrived,
+        arrived_per_class,
+        routed: sum_u64(|o| o.routed),
+        completed,
+        slo_violations,
+        goodput_rps: met_total as f64 / cfg.duration_s,
+        slo_violation_frac: if completed > 0 {
+            slo_violations as f64 / completed as f64
+        } else {
+            0.0
+        },
+        tenants,
+        fairness_jain,
+        train_steps,
+        train_samples_per_s: train_steps as f64 * train_batch / cfg.duration_s,
+        reconfigurations: sum_u64(|o| o.reconfigurations),
+        reconfig_downtime_s: sum_f64(|o| o.reconfig_downtime_s),
+        migrated_requests: sum_u64(|o| o.migrated_requests),
+        stranded_requests: sum_u64(|o| o.stranded_requests),
+        unavailable_routes: sum_u64(|o| o.unavailable_routes),
+        failed_requests: sum_u64(|o| o.failed_requests),
+        retried_requests: sum_u64(|o| o.retried_requests),
+        lost_in_crash: sum_u64(|o| o.lost_in_crash),
+        shed_overload: sum_u64(|o| o.shed_overload),
+        shed_deadline: sum_u64(|o| o.shed_deadline),
+        shed_capacity: sum_u64(|o| o.shed_capacity),
+        shed_brownout: sum_u64(|o| o.shed_brownout),
+        breaker_trips: sum_u64(|o| o.breaker_trips),
+        breaker_open_s: sum_f64(|o| o.breaker_open_s),
+        gpu_crashes: sum_u64(|o| o.gpu_crashes),
+        instance_crashes: sum_u64(|o| o.instance_crashes),
+        downtime_s_per_gpu,
+        availability,
+        events_processed,
+        events_per_sec,
+        fault_log,
+        layouts,
+        decisions,
+        telemetry: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::engine::{RepartitionMode, RequestClass};
+    use crate::cluster::faults::FaultInjection;
+    use crate::cluster::overload::OverloadPolicy;
+    use crate::cluster::policy::FleetPolicyKind;
+    use crate::cluster::router::RouterKind;
+    use crate::cluster::telemetry::TelemetryConfig;
+    use crate::mig::gpu::GpuModel;
+    use crate::models::zoo::lookup;
+    use crate::orchestrator::ReconfigCost;
+    use crate::workload::spec::WorkloadSpec;
+
+    fn mega_demo(n: usize) -> FleetConfig {
+        let bert = lookup("bert-base").unwrap();
+        let class = RequestClass {
+            spec: WorkloadSpec::inference(bert, 8, 128),
+            slo_ms: 40.0,
+            arrival: ArrivalSpec::Poisson { rate: 12.0 * n as f64 },
+        };
+        FleetConfig {
+            gpus: vec![GpuModel::A100_80GB; n],
+            train: None,
+            classes: vec![class.clone(), class],
+            tenants: Vec::new(),
+            router: RouterKind::LeastLoaded,
+            policy: FleetPolicyKind::Static,
+            mode: RepartitionMode::Rolling,
+            cost: ReconfigCost::default(),
+            duration_s: 60.0,
+            window_s: 10.0,
+            rho_max: 0.75,
+            faults: FaultPlan::none(),
+            overload: OverloadPolicy::none(),
+            telemetry: TelemetryConfig::off(),
+            seed: 77,
+        }
+    }
+
+    #[test]
+    fn sharding_partitions_gpus_and_scales_rates() {
+        let cfg = mega_demo(10);
+        let plan = shard_config(&cfg, 4).unwrap();
+        assert_eq!(plan.shards.len(), 4);
+        assert_eq!(plan.offsets, vec![0, 3, 6, 8], "remainder lands on the low shards");
+        let sizes: Vec<usize> = plan.shards.iter().map(|s| s.gpus.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        let total_rate: f64 =
+            plan.shards.iter().map(|s| s.classes[0].arrival.mean_rate()).sum();
+        assert!(
+            (total_rate - cfg.classes[0].arrival.mean_rate()).abs() < 1e-9,
+            "shard rates sum to the fleet rate: {total_rate}"
+        );
+        let mut seeds: Vec<u64> = plan.shards.iter().map(|s| s.seed).collect();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 4, "shards draw distinct seeds");
+    }
+
+    #[test]
+    fn single_shard_is_the_config_verbatim() {
+        let cfg = mega_demo(4);
+        let plan = shard_config(&cfg, 1).unwrap();
+        assert_eq!(plan.shards.len(), 1);
+        assert_eq!(plan.shards[0].seed, cfg.seed, "--mega 1 must be the unsharded run");
+        assert_eq!(plan.shards[0].gpus.len(), 4);
+        // Shard counts above the fleet size clamp to one GPU per shard.
+        let plan = shard_config(&cfg, 64).unwrap();
+        assert_eq!(plan.shards.len(), 4);
+        assert!(plan.shards.iter().all(|s| s.gpus.len() == 1));
+    }
+
+    #[test]
+    fn faults_follow_their_gpu_into_the_shard() {
+        let mut cfg = mega_demo(4);
+        cfg.faults.injections = vec![
+            FaultInjection { t: 10.0, gpu: 0, class: None, down_s: 5.0 },
+            FaultInjection { t: 20.0, gpu: 3, class: Some(1), down_s: 5.0 },
+        ];
+        let plan = shard_config(&cfg, 2).unwrap();
+        assert_eq!(plan.shards[0].faults.injections.len(), 1);
+        assert_eq!(plan.shards[0].faults.injections[0].gpu, 0);
+        assert_eq!(plan.shards[1].faults.injections.len(), 1);
+        assert_eq!(plan.shards[1].faults.injections[0].gpu, 1, "index rebased to the shard");
+    }
+
+    #[test]
+    fn replay_traces_cannot_be_sharded() {
+        let mut cfg = mega_demo(4);
+        cfg.classes[0].arrival = ArrivalSpec::Replay { times: vec![1.0, 2.0, 3.0] };
+        assert!(matches!(shard_config(&cfg, 2), Err(FleetError::Invalid(_))));
+        // But --mega 1 passes the config through untouched.
+        assert!(shard_config(&cfg, 1).is_ok());
+    }
+
+    #[test]
+    fn merged_outcomes_conserve_and_merge_deterministically() {
+        let cfg = mega_demo(6);
+        let plan = shard_config(&cfg, 3).unwrap();
+        let outs: Vec<FleetOutcome> =
+            plan.shards.iter().map(|s| s.run().unwrap()).collect();
+        let merged = merge_outcomes(&cfg, &plan, &outs, 1.0);
+        assert_eq!(merged.fleet_size, 6);
+        assert_eq!(merged.per_gpu.len(), 6);
+        assert_eq!(merged.downtime_s_per_gpu.len(), 6);
+        assert_eq!(
+            merged.arrived,
+            outs.iter().map(|o| o.arrived).sum::<u64>(),
+            "arrivals sum exactly"
+        );
+        assert_eq!(
+            merged.completed + merged.failed_requests + merged.lost_in_crash
+                + merged.shed_overload,
+            merged.arrived,
+            "conservation survives the merge"
+        );
+        assert_eq!(
+            merged.events_processed,
+            outs.iter().map(|o| o.events_processed).sum::<u64>()
+        );
+        assert!(merged.events_per_sec > 0.0);
+        let again = merge_outcomes(&cfg, &plan, &outs, 1.0);
+        assert_eq!(merged.goodput_rps.to_bits(), again.goodput_rps.to_bits());
+        assert_eq!(
+            merged.pooled.p99_latency_ms.to_bits(),
+            again.pooled.p99_latency_ms.to_bits(),
+            "merging is a pure function of the shard outcomes"
+        );
+        assert_eq!(merged.fairness_jain.to_bits(), again.fairness_jain.to_bits());
+    }
+}

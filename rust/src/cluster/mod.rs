@@ -43,6 +43,12 @@
 //!   CSV, JSONL, and Chrome trace-event (Perfetto) documents — strictly
 //!   observational, so telemetry-off runs stay byte-identical and
 //!   telemetry-on payloads join the bitwise-determinism checksums;
+//! * [`mega`] — sharded mega-fleet runs: one huge [`FleetConfig`] is
+//!   decomposed into per-shard sub-fleets (contiguous GPU partition,
+//!   arrival rates scaled by the shard's GPU fraction), the shards run
+//!   across sweep workers, and the outcomes merge in deterministic
+//!   shard order — how the `migperf fleet --mega` events/sec scaling
+//!   figure is produced at 1024 GPUs;
 //! * fleet sweeps fan out through [`crate::sweep::run_fleet`] with the
 //!   engine's bitwise-determinism guarantee intact (a crash schedule is
 //!   config data, so faulted grids stay bit-identical too — and so are a
@@ -50,6 +56,7 @@
 
 pub mod engine;
 pub mod faults;
+pub mod mega;
 pub mod overload;
 pub mod policy;
 pub mod router;
@@ -65,12 +72,13 @@ pub use overload::{
     BreakerState, OverloadGuard, OverloadPolicy, ShedCause, ShedDiscipline,
     DEFAULT_BREAKER_PROBES,
 };
+pub use mega::{merge_outcomes, shard_config, MegaPlan};
 pub use policy::{
-    FleetAction, FleetCtx, FleetObs, FleetPolicy, FleetPolicyKind, FleetReactive, FleetScripted,
-    FleetStatic, GpuObs, ScriptedRepartition,
+    FleetAction, FleetCtx, FleetObs, FleetPolicy, FleetPolicyImpl, FleetPolicyKind, FleetReactive,
+    FleetScripted, FleetStatic, GpuObs, ScriptedRepartition,
 };
 pub use router::{
-    Affinity, GpuHealth, LeastLoaded, RoundRobin, RoutePolicy, RouterKind, WeightedFair,
+    Affinity, GpuHealth, LeastLoaded, RoundRobin, RoutePolicy, Router, RouterKind, WeightedFair,
     DEFAULT_AFFINITY_SPILL, DRR_CREDIT_CAP,
 };
 pub use telemetry::{

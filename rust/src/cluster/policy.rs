@@ -149,15 +149,61 @@ impl FleetPolicyKind {
         }
     }
 
-    /// Construct the stateful policy.
-    pub fn build(&self) -> Box<dyn FleetPolicy> {
+    /// Construct the stateful policy as an enum-dispatched
+    /// [`FleetPolicyImpl`] (no heap allocation, no vtable on the window
+    /// tick path).
+    pub fn build(&self) -> FleetPolicyImpl {
         match self {
-            FleetPolicyKind::Static => Box::new(FleetStatic),
-            FleetPolicyKind::Reactive(p) => Box::new(FleetReactive { params: p.clone() }),
+            FleetPolicyKind::Static => FleetPolicyImpl::Static(FleetStatic),
+            FleetPolicyKind::Reactive(p) => {
+                FleetPolicyImpl::Reactive(FleetReactive { params: p.clone() })
+            }
             FleetPolicyKind::Scripted(s) => {
-                Box::new(FleetScripted { script: s.clone(), next: 0 })
+                FleetPolicyImpl::Scripted(FleetScripted { script: s.clone(), next: 0 })
             }
         }
+    }
+}
+
+/// A built, stateful fleet policy with enum dispatch — the devirtualized
+/// counterpart of `Box<dyn FleetPolicy>`, kept inline in the engine.
+/// [`FleetPolicy`] stays implemented for generic consumers and tests.
+#[derive(Debug)]
+pub enum FleetPolicyImpl {
+    /// Fixed layouts.
+    Static(FleetStatic),
+    /// Pressure-driven hysteresis.
+    Reactive(FleetReactive),
+    /// Pre-scripted repartitions.
+    Scripted(FleetScripted),
+}
+
+impl FleetPolicyImpl {
+    /// Short name used in reports ("static", "reactive", "scripted").
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetPolicyImpl::Static(p) => FleetPolicy::name(p),
+            FleetPolicyImpl::Reactive(p) => FleetPolicy::name(p),
+            FleetPolicyImpl::Scripted(p) => FleetPolicy::name(p),
+        }
+    }
+
+    /// Propose at most one repartition for this observation window.
+    pub fn decide(&mut self, obs: &FleetObs, ctx: &FleetCtx) -> Option<FleetAction> {
+        match self {
+            FleetPolicyImpl::Static(p) => p.decide(obs, ctx),
+            FleetPolicyImpl::Reactive(p) => p.decide(obs, ctx),
+            FleetPolicyImpl::Scripted(p) => p.decide(obs, ctx),
+        }
+    }
+}
+
+impl FleetPolicy for FleetPolicyImpl {
+    fn name(&self) -> &'static str {
+        FleetPolicyImpl::name(self)
+    }
+    fn decide(&mut self, obs: &FleetObs, ctx: &FleetCtx) -> Option<FleetAction> {
+        FleetPolicyImpl::decide(self, obs, ctx)
     }
 }
 

@@ -126,13 +126,63 @@ impl RouterKind {
     /// `tenants` feeds [`WeightedFair`]'s credit table (an empty slice
     /// means a single all-classes tenant, i.e. plain least-loaded); the
     /// other routers ignore it.
-    pub fn build(&self, classes: usize, tenants: &[Tenant]) -> Box<dyn RoutePolicy> {
+    pub fn build(&self, classes: usize, tenants: &[Tenant]) -> Router {
         match self {
-            RouterKind::RoundRobin => Box::new(RoundRobin { cursors: vec![0; classes] }),
-            RouterKind::LeastLoaded => Box::new(LeastLoaded),
-            RouterKind::Affinity { spill } => Box::new(Affinity { spill: *spill }),
-            RouterKind::WeightedFair => Box::new(WeightedFair::new(classes, tenants)),
+            RouterKind::RoundRobin => Router::RoundRobin(RoundRobin { cursors: vec![0; classes] }),
+            RouterKind::LeastLoaded => Router::LeastLoaded(LeastLoaded),
+            RouterKind::Affinity { spill } => Router::Affinity(Affinity { spill: *spill }),
+            RouterKind::WeightedFair => Router::WeightedFair(WeightedFair::new(classes, tenants)),
         }
+    }
+}
+
+/// A built, stateful router with enum dispatch. The fleet engine makes
+/// one routing decision per arrival, retry and re-dispatch; routing
+/// through an enum instead of a `Box<dyn RoutePolicy>` keeps the state
+/// inline and lets the per-variant `route` bodies inline into the hot
+/// loop. [`RoutePolicy`] stays implemented for generic consumers.
+#[derive(Debug)]
+pub enum Router {
+    /// Per-class rotating cursor.
+    RoundRobin(RoundRobin),
+    /// Shallowest available queue.
+    LeastLoaded(LeastLoaded),
+    /// Sticky home GPU with spill.
+    Affinity(Affinity),
+    /// Deficit round-robin over tenant credit.
+    WeightedFair(WeightedFair),
+}
+
+impl Router {
+    /// Short name used in reports ("round-robin", ...).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Router::RoundRobin(r) => RoutePolicy::name(r),
+            Router::LeastLoaded(r) => RoutePolicy::name(r),
+            Router::Affinity(r) => RoutePolicy::name(r),
+            Router::WeightedFair(r) => RoutePolicy::name(r),
+        }
+    }
+
+    /// Pick a GPU for the next request of `class`, or `None` when no GPU
+    /// is available.
+    #[inline]
+    pub fn route(&mut self, class: usize, available: &[bool], depth: &[usize]) -> Option<usize> {
+        match self {
+            Router::RoundRobin(r) => r.route(class, available, depth),
+            Router::LeastLoaded(r) => r.route(class, available, depth),
+            Router::Affinity(r) => r.route(class, available, depth),
+            Router::WeightedFair(r) => r.route(class, available, depth),
+        }
+    }
+}
+
+impl RoutePolicy for Router {
+    fn name(&self) -> &'static str {
+        Router::name(self)
+    }
+    fn route(&mut self, class: usize, available: &[bool], depth: &[usize]) -> Option<usize> {
+        Router::route(self, class, available, depth)
     }
 }
 

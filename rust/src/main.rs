@@ -922,6 +922,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     OptSpec { name: "seeds", value: "N", help: "replication seeds per grid point", default: Some("1") },
                     OptSpec { name: "seed", value: "S", help: "base seed", default: Some("2024") },
                     OptSpec { name: "workers", value: "N", help: "sweep worker threads (0 = auto)", default: Some("0") },
+                    OptSpec { name: "mega", value: "N", help: "mega-fleet mode: shard each run into N contiguous sub-fleets across the workers and merge deterministically (0 = one shard per worker); incompatible with --telemetry/--trace", default: None },
                     OptSpec { name: "json", value: "", help: "emit JSON (with decision logs and fault timelines)", default: None },
                     OptSpec { name: "csv", value: "", help: "emit pooled summaries as CSV", default: None },
                     OptSpec { name: "decisions", value: "", help: "also print per-run decision logs and fault timelines", default: None },
@@ -1083,6 +1084,20 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
     };
     telemetry.validate()?;
 
+    // Mega-fleet mode: instead of fanning whole grid points across the
+    // workers, shard each run into contiguous sub-fleets and fan the
+    // shards (the 1024-GPU scaling path). The merge drops per-shard
+    // telemetry, so the observability flags are rejected up front.
+    let mega: Option<usize> = match args.get("mega") {
+        Some(v) => Some(v.parse().map_err(|_| format!("bad --mega '{v}'"))?),
+        None => None,
+    };
+    if mega.is_some() && (telemetry_dir.is_some() || trace_file.is_some()) {
+        return Err(
+            "--mega merges shard outcomes without telemetry; drop --telemetry/--trace".into()
+        );
+    }
+
     // Failure-injection axis: no faults by default; `--crash` pins one
     // explicit schedule; `--faults` sweeps no-faults plus one stochastic
     // MTBF/MTTR level per `--mtbf` value (per-seed schedules derive from
@@ -1208,7 +1223,19 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         SweepEngine::from_env()
     };
     let started = std::time::Instant::now();
-    let outs = migperf::sweep::run_fleet(&engine, &runs).map_err(|e| e.to_string())?;
+    let outs = match mega {
+        Some(n) => {
+            let shards = if n == 0 { engine.workers() } else { n };
+            let mut outs = Vec::with_capacity(runs.len());
+            for cfg in &runs {
+                outs.push(
+                    migperf::sweep::run_mega(&engine, cfg, shards).map_err(|e| e.to_string())?,
+                );
+            }
+            outs
+        }
+        None => migperf::sweep::run_fleet(&engine, &runs).map_err(|e| e.to_string())?,
+    };
     let wall_s = started.elapsed().as_secs_f64();
 
     let run_label = |out: &migperf::cluster::FleetOutcome, flabel: &str, seed: u64| {
@@ -1290,6 +1317,8 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                     ("instance_crashes", Json::Num(out.instance_crashes as f64)),
                     ("availability", Json::Num(out.availability)),
                     ("fairness_jain", Json::Num(out.fairness_jain)),
+                    ("events_processed", Json::Num(out.events_processed as f64)),
+                    ("events_per_sec", Json::Num(out.events_per_sec)),
                     ("tenants", export::tenant_outcomes_to_json(&out.tenants)),
                     ("fault_log", export::fault_records_to_json(&out.fault_log)),
                     ("decisions", export::fleet_decisions_to_json(&out.decisions)),
@@ -1313,10 +1342,10 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             .map(|((cfg, out), flabel)| {
                 let mut s = out.pooled.clone();
                 s.label = run_label(out, flabel, cfg.seed);
-                s
+                (s, out.events_processed, out.events_per_sec)
             })
             .collect();
-        print!("{}", export::summaries_to_csv(&rows));
+        print!("{}", export::fleet_summaries_to_csv(&rows));
         // Keep plain `--csv` a single parseable document; the per-tenant
         // accounting follows as a second CSV document (own header) only
         // when --decisions asks for the auxiliary logs.
@@ -1354,6 +1383,8 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             "shed",
             "trips",
             "avail_%",
+            "events",
+            "ev/s",
         ]);
         for ((cfg, out), flabel) in runs.iter().zip(&outs).zip(&fault_labels) {
             t.row(&[
@@ -1376,6 +1407,8 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
                 out.shed_overload.to_string(),
                 out.breaker_trips.to_string(),
                 format!("{:.2}", out.availability * 100.0),
+                out.events_processed.to_string(),
+                format!("{:.0}", out.events_per_sec),
             ]);
         }
         println!("{}", t.render());

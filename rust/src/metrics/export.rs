@@ -44,6 +44,40 @@ pub fn summaries_to_csv(rows: &[RunSummary]) -> String {
     out
 }
 
+/// CSV header used by [`fleet_summaries_to_csv`].
+pub const FLEET_SUMMARY_CSV_HEADER: &str = "label,completed,avg_latency_ms,std_latency_ms,p50_latency_ms,p99_latency_ms,max_latency_ms,throughput,mean_gract,peak_fb_mib,energy_j,duration_s,events_processed,events_per_sec";
+
+/// Serialize fleet run summaries as CSV, extending [`summaries_to_csv`]
+/// with the per-run DES event accounting: each row carries the pooled
+/// summary plus `(events_processed, events_per_sec)`. `events_processed`
+/// is deterministic for a config/seed; `events_per_sec` is wall-clock
+/// derived and excluded from every determinism check.
+pub fn fleet_summaries_to_csv(rows: &[(RunSummary, u64, f64)]) -> String {
+    let mut out = String::from(FLEET_SUMMARY_CSV_HEADER);
+    out.push('\n');
+    for (r, events, eps) in rows {
+        let _ = writeln!(
+            out,
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.3},{:.3},{:.6},{},{:.1}",
+            csv_escape(&r.label),
+            r.completed,
+            r.avg_latency_ms,
+            r.std_latency_ms,
+            r.p50_latency_ms,
+            r.p99_latency_ms,
+            r.max_latency_ms,
+            r.throughput,
+            r.mean_gract,
+            r.peak_fb_mib,
+            r.energy_j,
+            r.duration_s,
+            events,
+            eps,
+        );
+    }
+    out
+}
+
 fn csv_escape(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
@@ -390,6 +424,15 @@ mod tests {
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("label,completed"));
         assert!(lines[1].starts_with("a,10,"));
+    }
+
+    #[test]
+    fn fleet_csv_appends_event_columns() {
+        let out = fleet_summaries_to_csv(&[(summary("a"), 1234, 56789.25)]);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].ends_with("duration_s,events_processed,events_per_sec"));
+        assert!(lines[1].ends_with(",1234,56789.2"));
     }
 
     #[test]

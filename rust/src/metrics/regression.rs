@@ -10,6 +10,11 @@
 //!   (`wall_s`, `*_serial_s`, `*_parallel_s`, `ns_per_op`) may not exceed
 //!   the baseline by more than the relative tolerance (default 25%);
 //!   getting *faster* never fails;
+//! * **throughput floors** — keys that measure event throughput
+//!   (`events_per_sec`, `*_events_per_sec`) are the mirror image: they
+//!   may not fall *below* the baseline by more than the wall tolerance;
+//!   getting faster never fails. A `null` baseline (the state until a
+//!   mega-fleet floor is blessed) keeps the check advisory;
 //! * **deterministic drift** — every other pinned number (goodput,
 //!   SLO-violation fractions, checksums, grid sizes, config constants) is
 //!   simulation output that is bit-reproducible across machines, so any
@@ -84,6 +89,12 @@ fn is_wall_clock(key: &str) -> bool {
         || key.ends_with("_parallel_s")
 }
 
+/// Keys measuring event throughput: compared with the relative wall
+/// tolerance, one-sided (only *slower* — i.e. a lower rate — fails).
+fn is_throughput_floor(key: &str) -> bool {
+    key == "events_per_sec" || key.ends_with("_events_per_sec")
+}
+
 /// Compare `current` against `baseline` under `tol`. Only values pinned
 /// by the baseline are checked; see the module docs for the rules.
 pub fn compare(baseline: &Json, current: &Json, tol: &Tolerance) -> Comparison {
@@ -137,6 +148,17 @@ fn walk(base: &Json, cur: &Json, path: &str, key: &str, tol: &Tolerance, out: &m
                         message: format!(
                             "wall-clock regression: {c:.4} vs baseline {b:.4} \
                              (more than +{:.0}% slower)",
+                            tol.wall * 100.0
+                        ),
+                    });
+                }
+            } else if is_throughput_floor(key) {
+                if *b > 0.0 && *c < *b * (1.0 - tol.wall) {
+                    out.failures.push(Finding {
+                        path: path.to_string(),
+                        message: format!(
+                            "throughput regression: {c:.1} events/s vs baseline \
+                             floor {b:.1} (more than -{:.0}% slower)",
                             tol.wall * 100.0
                         ),
                     });
@@ -249,6 +271,26 @@ mod tests {
     fn prefixed_wall_keys_use_wall_tolerance() {
         let c = cmp(r#"{"fig11_serial_s": 4.0}"#, r#"{"fig11_serial_s": 6.0}"#);
         assert!(!c.passed(), "+50% on a prefixed wall key must fail");
+    }
+
+    #[test]
+    fn throughput_floor_is_one_sided() {
+        let base = r#"{"events_per_sec": 1000000.0}"#;
+        assert!(cmp(base, r#"{"events_per_sec": 900000.0}"#).passed(), "-10% is within 25%");
+        assert!(cmp(base, r#"{"events_per_sec": 5000000.0}"#).passed(), "faster never fails");
+        let c = cmp(base, r#"{"events_per_sec": 700000.0}"#);
+        assert!(!c.passed(), "-30% must fail");
+        assert!(c.failures[0].message.contains("throughput regression"));
+        assert_eq!(c.failures[0].path, "$.events_per_sec");
+    }
+
+    #[test]
+    fn prefixed_throughput_keys_and_null_floors() {
+        let c = cmp(r#"{"mega_events_per_sec": 100.0}"#, r#"{"mega_events_per_sec": 10.0}"#);
+        assert!(!c.passed(), "suffixed keys use the floor rule");
+        let advisory = cmp(r#"{"events_per_sec": null}"#, r#"{"events_per_sec": 1.0}"#);
+        assert!(advisory.passed(), "unblessed floor stays advisory");
+        assert_eq!(advisory.skipped, 1);
     }
 
     #[test]

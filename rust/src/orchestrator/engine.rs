@@ -31,7 +31,7 @@ use crate::simgpu::perfmodel::{PerfError, StepEstimate};
 use crate::simgpu::resource::ExecResource;
 use crate::util::prng::Prng;
 use crate::util::stats::percentile_sorted;
-use crate::workload::arrival::{Arrival, ArrivalError, ArrivalSpec};
+use crate::workload::arrival::{ArrivalError, ArrivalProcess, ArrivalSpec};
 use crate::workload::serving::pool_collectors;
 use crate::workload::spec::WorkloadSpec;
 
@@ -335,7 +335,7 @@ impl OrchestratorConfig {
 
         let n = self.services.len();
         let mut seeder = Prng::new(self.seed);
-        let mut arrivals: Vec<Box<dyn Arrival>> = Vec::with_capacity(n);
+        let mut arrivals: Vec<ArrivalProcess> = Vec::with_capacity(n);
         for s in &self.services {
             arrivals.push(s.arrival.build(seeder.next_u64())?);
         }

@@ -5,53 +5,72 @@
 //! run open-loop request streams against multiple simulated GPU instances
 //! or MPS clients; the DES makes an hour of simulated traffic cost
 //! milliseconds of wall time and keeps every run deterministic.
+//!
+//! # Storage layout
+//!
+//! Events live in a slab arena addressed by `u32` slots, with the hot
+//! ordering fields — timestamp and FIFO sequence — in structure-of-arrays
+//! columns beside the payload column. The calendar itself is a binary
+//! min-heap of *slots*, so a sift touches only the two `Vec`s of scalars
+//! plus one `u32` move per level instead of shuffling whole
+//! `(f64, u64, payload)` triples through a `BinaryHeap`. Popped slots
+//! recycle through a free list, so a steady-state simulation performs no
+//! allocation at all in the event loop regardless of how many events it
+//! processes. Pop order is exactly the old `BinaryHeap` contract:
+//! earliest timestamp first, FIFO (schedule order) among equal
+//! timestamps — `(at, seq)` is a total order, so the heap's internal
+//! shape never leaks into results and the bitwise-determinism contract
+//! is preserved.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
-/// An event scheduled on the virtual clock, carrying a user payload.
-#[derive(Debug, Clone)]
-struct Scheduled<E> {
-    at: f64,
-    seq: u64, // tie-break: FIFO among equal timestamps
-    payload: E,
-}
-
-impl<E> PartialEq for Scheduled<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<E> Eq for Scheduled<E> {}
-impl<E> PartialOrd for Scheduled<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Scheduled<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+/// Clamp a requested event time onto the valid `[now, ∞)` range.
+///
+/// Returns the sanitized time and whether a clamp was needed: a NaN or
+/// past timestamp maps to `now`. Release builds route every schedule
+/// through this instead of corrupting the heap order (a NaN timestamp
+/// would make the comparator lie and strand events); debug builds still
+/// panic at the call site so tests catch the bug at its source.
+#[inline]
+pub(crate) fn sanitize_event_time(at: f64, now: f64) -> (f64, bool) {
+    // `!(at >= now)` is true for NaN as well as for past timestamps.
+    if at >= now {
+        (at, false)
+    } else {
+        (now, true)
     }
 }
 
 /// Discrete-event simulation driver.
+///
+/// Slab-arena event calendar: `at`/`order` are SoA columns holding the
+/// ordering key of every live slot, `payload` the event bodies, `heap`
+/// a binary min-heap of slot indices keyed by `(at, order)`.
 #[derive(Debug)]
 pub struct Des<E> {
     now: f64,
     seq: u64,
-    queue: BinaryHeap<Scheduled<E>>,
     processed: u64,
+    clamped: u64,
+    at: Vec<f64>,
+    order: Vec<u64>,
+    payload: Vec<Option<E>>,
+    free: Vec<u32>,
+    heap: Vec<u32>,
 }
 
 impl<E> Des<E> {
     /// Fresh simulator with the clock at zero.
     pub fn new() -> Self {
-        Des { now: 0.0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+        Des {
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+            clamped: 0,
+            at: Vec::new(),
+            order: Vec::new(),
+            payload: Vec::new(),
+            free: Vec::new(),
+            heap: Vec::new(),
+        }
     }
 
     /// Current virtual time in seconds.
@@ -64,40 +83,143 @@ impl<E> Des<E> {
         self.processed
     }
 
+    /// Number of schedules whose timestamp had to be clamped onto the
+    /// valid range (NaN or in the past). Always zero in debug builds,
+    /// where such schedules panic instead.
+    pub fn clamped(&self) -> u64 {
+        self.clamped
+    }
+
     /// Number of pending events.
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.heap.len()
+    }
+
+    /// Slot capacity of the event arena (high-water mark of concurrently
+    /// pending events; recycled slots do not grow it).
+    pub fn arena_capacity(&self) -> usize {
+        self.at.len()
+    }
+
+    /// `true` when slot `a` orders strictly before slot `b`: earlier
+    /// timestamp first, FIFO sequence among equals. Timestamps are
+    /// sanitized non-NaN at insertion, so `<`/`==` are a total order.
+    #[inline]
+    fn before(&self, a: u32, b: u32) -> bool {
+        let (a, b) = (a as usize, b as usize);
+        self.at[a] < self.at[b] || (self.at[a] == self.at[b] && self.order[a] < self.order[b])
+    }
+
+    fn sift_up(&mut self, mut pos: usize) {
+        while pos > 0 {
+            let parent = (pos - 1) / 2;
+            if self.before(self.heap[pos], self.heap[parent]) {
+                self.heap.swap(pos, parent);
+                pos = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut pos: usize) {
+        let n = self.heap.len();
+        loop {
+            let l = 2 * pos + 1;
+            if l >= n {
+                break;
+            }
+            let r = l + 1;
+            let mut best = l;
+            if r < n && self.before(self.heap[r], self.heap[l]) {
+                best = r;
+            }
+            if self.before(self.heap[best], self.heap[pos]) {
+                self.heap.swap(pos, best);
+                pos = best;
+            } else {
+                break;
+            }
+        }
     }
 
     /// Schedule `payload` at absolute virtual time `at` (must not be in
     /// the past).
+    ///
+    /// Debug builds panic on a NaN or past timestamp; release builds
+    /// clamp it to `now` (counted in [`Des::clamped`], reported once on
+    /// stderr) rather than corrupt the calendar order.
     pub fn schedule_at(&mut self, at: f64, payload: E) {
-        assert!(at >= self.now, "cannot schedule in the past: {at} < {}", self.now);
-        self.queue.push(Scheduled { at, seq: self.seq, payload });
+        debug_assert!(at >= self.now, "cannot schedule in the past: {at} < {}", self.now);
+        let (at, was_clamped) = sanitize_event_time(at, self.now);
+        if was_clamped {
+            if self.clamped == 0 {
+                eprintln!(
+                    "migperf desim: clamped NaN/past event time to now={} (further clamps \
+                     counted silently)",
+                    self.now
+                );
+            }
+            self.clamped += 1;
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let i = s as usize;
+                self.at[i] = at;
+                self.order[i] = self.seq;
+                self.payload[i] = Some(payload);
+                s
+            }
+            None => {
+                let s = u32::try_from(self.at.len()).expect("event arena overflow");
+                self.at.push(at);
+                self.order.push(self.seq);
+                self.payload.push(Some(payload));
+                s
+            }
+        };
         self.seq += 1;
+        self.heap.push(slot);
+        self.sift_up(self.heap.len() - 1);
     }
 
     /// Schedule `payload` after a delay from now.
+    ///
+    /// Debug builds panic on a NaN or negative delay; release builds
+    /// clamp it to zero via the same guard as [`Des::schedule_at`].
     pub fn schedule_in(&mut self, delay: f64, payload: E) {
-        assert!(delay >= 0.0, "negative delay {delay}");
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
         self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Timestamp of the next event without popping it.
+    fn peek_at(&self) -> Option<f64> {
+        self.heap.first().map(|&s| self.at[s as usize])
     }
 
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn next(&mut self) -> Option<(f64, E)> {
-        self.queue.pop().map(|s| {
-            self.now = s.at;
-            self.processed += 1;
-            (s.at, s.payload)
-        })
+        let slot = *self.heap.first()?;
+        let last = self.heap.pop().expect("heap non-empty");
+        if !self.heap.is_empty() {
+            self.heap[0] = last;
+            self.sift_down(0);
+        }
+        let i = slot as usize;
+        let at = self.at[i];
+        let payload = self.payload[i].take().expect("live slot has a payload");
+        self.free.push(slot);
+        self.now = at;
+        self.processed += 1;
+        Some((at, payload))
     }
 
     /// Run until the queue is empty or `horizon` (virtual seconds) is
     /// passed. The handler may schedule further events through the `&mut
     /// Des` it receives.
     pub fn run_until(&mut self, horizon: f64, mut handler: impl FnMut(&mut Des<E>, f64, E)) {
-        while let Some(s) = self.queue.peek() {
-            if s.at > horizon {
+        while let Some(at) = self.peek_at() {
+            if at > horizon {
                 break;
             }
             let (at, payload) = self.next().unwrap();
@@ -206,5 +328,65 @@ mod tests {
         des.run_until(f64::INFINITY, |_, _, _| {});
         assert_eq!(des.processed(), 2);
         assert_eq!(des.pending(), 0);
+    }
+
+    #[test]
+    fn sanitize_clamps_nan_and_past_times() {
+        // The release-build guard: NaN and past timestamps clamp to now,
+        // valid times (including now itself and +inf) pass untouched.
+        assert_eq!(sanitize_event_time(5.0, 3.0), (5.0, false));
+        assert_eq!(sanitize_event_time(3.0, 3.0), (3.0, false));
+        assert_eq!(sanitize_event_time(f64::INFINITY, 3.0), (f64::INFINITY, false));
+        assert_eq!(sanitize_event_time(1.0, 3.0), (3.0, true));
+        assert_eq!(sanitize_event_time(-2.0, 0.0), (0.0, true));
+        assert_eq!(sanitize_event_time(f64::NAN, 3.0), (3.0, true));
+        assert_eq!(sanitize_event_time(f64::NEG_INFINITY, 3.0), (3.0, true));
+    }
+
+    #[test]
+    fn arena_slots_recycle_through_the_free_list() {
+        // A ping-pong of schedule/pop keeps at most two events pending,
+        // so the arena must plateau at two slots no matter how many
+        // events flow through it.
+        let mut des: Des<u32> = Des::new();
+        des.schedule_at(0.0, 0);
+        des.schedule_at(0.5, 1);
+        let mut n = 0u32;
+        des.run_until(1000.0, |des, _, _| {
+            n += 1;
+            if n < 500 {
+                des.schedule_in(1.0, n);
+            }
+        });
+        assert_eq!(n, 501, "both seeds plus 499 rescheduled events");
+        assert_eq!(des.arena_capacity(), 2, "free list recycles slots");
+        assert_eq!(des.clamped(), 0);
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop_keeps_total_order() {
+        // Mix pops and pushes so recycled slots carry fresh keys; the
+        // output must still be globally (time, FIFO) ordered.
+        let mut des: Des<usize> = Des::new();
+        for i in 0..8 {
+            des.schedule_at(i as f64 * 2.0, i);
+        }
+        let mut seen: Vec<(f64, usize)> = Vec::new();
+        let mut extra = 100;
+        des.run_until(f64::INFINITY, |des, t, e| {
+            seen.push((t, e));
+            if extra < 104 {
+                des.schedule_in(1.0, extra);
+                extra += 1;
+            }
+            if e == 0 {
+                extra = 100;
+                des.schedule_in(1.0, extra);
+                extra += 1;
+            }
+        });
+        let times: Vec<f64> = seen.iter().map(|&(t, _)| t).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "{times:?}");
+        assert_eq!(seen.len(), 8 + 5);
     }
 }

@@ -65,3 +65,31 @@ pub fn run_fleet(
 ) -> Result<Vec<FleetOutcome>, FleetError> {
     engine.try_run(runs, |cfg| cfg.run())
 }
+
+/// Run one mega-fleet simulation sharded across the worker pool: the
+/// config is decomposed by [`crate::cluster::shard_config`] into
+/// `shards` contiguous sub-fleets (arrival rates scaled by each shard's
+/// GPU fraction, fault injections following their GPU, per-shard seeds
+/// derived in shard order), the shards execute like any other fleet
+/// batch, and the outcomes merge in input order via
+/// [`crate::cluster::merge_outcomes`].
+///
+/// Determinism: for a fixed `(config, shards)` pair the result is
+/// bit-identical at any worker count — the decomposition is pure data
+/// and the merge runs in input order. A sharded run is a model-level
+/// decomposition, not bit-identical to the unsharded simulation of the
+/// same config (each shard routes within its own GPUs), except for
+/// `shards == 1`, which is exactly `config.run()`. The merged outcome's
+/// `events_per_sec` is measured over the whole sharded run's wall
+/// clock, so it reflects the parallel speedup.
+pub fn run_mega(
+    engine: &SweepEngine,
+    cfg: &FleetConfig,
+    shards: usize,
+) -> Result<FleetOutcome, FleetError> {
+    let plan = crate::cluster::shard_config(cfg, shards)?;
+    let wall_start = std::time::Instant::now();
+    let outs = engine.try_run(&plan.shards, |cfg| cfg.run())?;
+    let wall_s = wall_start.elapsed().as_secs_f64();
+    Ok(crate::cluster::merge_outcomes(cfg, &plan, &outs, wall_s))
+}

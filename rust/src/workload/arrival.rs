@@ -393,19 +393,80 @@ impl ArrivalSpec {
         }
     }
 
-    /// Build the seeded process.
-    pub fn build(&self, seed: u64) -> Result<Box<dyn Arrival>, ArrivalError> {
+    /// Build the seeded process as an enum-dispatched [`ArrivalProcess`]
+    /// (no heap allocation, no vtable in the per-arrival hot path).
+    pub fn build(&self, seed: u64) -> Result<ArrivalProcess, ArrivalError> {
         Ok(match self {
-            ArrivalSpec::Poisson { rate } => Box::new(PoissonArrival::try_new(*rate, seed)?),
-            ArrivalSpec::Uniform { rate } => Box::new(UniformArrival::try_new(*rate)?),
-            ArrivalSpec::Bursty { high_rate, low_rate, mean_dwell_s } => {
-                Box::new(BurstyArrival::try_new(*high_rate, *low_rate, *mean_dwell_s, seed)?)
+            ArrivalSpec::Poisson { rate } => {
+                ArrivalProcess::Poisson(PoissonArrival::try_new(*rate, seed)?)
             }
-            ArrivalSpec::Diurnal { base_rate, peak_rate, period_s } => {
-                Box::new(DiurnalArrival::try_new(*base_rate, *peak_rate, *period_s, seed)?)
+            ArrivalSpec::Uniform { rate } => {
+                ArrivalProcess::Uniform(UniformArrival::try_new(*rate)?)
             }
-            ArrivalSpec::Replay { times } => Box::new(ReplayArrival::try_new(times.clone())?),
+            ArrivalSpec::Bursty { high_rate, low_rate, mean_dwell_s } => ArrivalProcess::Bursty(
+                BurstyArrival::try_new(*high_rate, *low_rate, *mean_dwell_s, seed)?,
+            ),
+            ArrivalSpec::Diurnal { base_rate, peak_rate, period_s } => ArrivalProcess::Diurnal(
+                DiurnalArrival::try_new(*base_rate, *peak_rate, *period_s, seed)?,
+            ),
+            ArrivalSpec::Replay { times } => {
+                ArrivalProcess::Replay(ReplayArrival::try_new(times.clone())?)
+            }
         })
+    }
+}
+
+/// A built arrival process with enum dispatch: the DES hot loops pull one
+/// gap per arrival, so a vtable call (plus the pointer chase of a
+/// `Box<dyn Arrival>`) per request is pure overhead. The enum keeps the
+/// process inline in the engine's `Vec` and lets the compiler inline the
+/// per-variant samplers. [`Arrival`] stays implemented for generic
+/// consumers (trace capture, tests).
+#[derive(Debug)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson.
+    Poisson(PoissonArrival),
+    /// Fixed-gap arrivals.
+    Uniform(UniformArrival),
+    /// Markov-modulated on/off bursts.
+    Bursty(BurstyArrival),
+    /// Sinusoidal diurnal load (Lewis–Shedler thinning).
+    Diurnal(DiurnalArrival),
+    /// Exact trace replay.
+    Replay(ReplayArrival),
+}
+
+impl ArrivalProcess {
+    /// Next gap before the following request.
+    #[inline]
+    pub fn next_gap(&mut self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson(p) => p.next_gap(),
+            ArrivalProcess::Uniform(p) => p.next_gap(),
+            ArrivalProcess::Bursty(p) => p.next_gap(),
+            ArrivalProcess::Diurnal(p) => p.next_gap(),
+            ArrivalProcess::Replay(p) => p.next_gap(),
+        }
+    }
+
+    /// Mean request rate (requests/second) of the process.
+    pub fn rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson(p) => Arrival::rate(p),
+            ArrivalProcess::Uniform(p) => Arrival::rate(p),
+            ArrivalProcess::Bursty(p) => Arrival::rate(p),
+            ArrivalProcess::Diurnal(p) => Arrival::rate(p),
+            ArrivalProcess::Replay(p) => Arrival::rate(p),
+        }
+    }
+}
+
+impl Arrival for ArrivalProcess {
+    fn next_gap(&mut self) -> f64 {
+        ArrivalProcess::next_gap(self)
+    }
+    fn rate(&self) -> f64 {
+        ArrivalProcess::rate(self)
     }
 }
 

@@ -1,0 +1,295 @@
+//! Arena-refactor equivalence backstop.
+//!
+//! The arena/SoA hot path (handle-based request queues, enum-dispatched
+//! arrivals/routers/policies, slab event calendar) must be a pure
+//! representation change: for any command sequence the engine's outcome
+//! is bit-identical run to run, identical with and without an inspector
+//! attached, and the fuzz-report digest is bitwise-stable at any worker
+//! count. This suite replays the pinned `model_regressions.rs` corpus
+//! plus freshly generated sequences through a deep outcome fingerprint
+//! (the whole conservation ledger, derived-metric bit patterns, per-class
+//! and per-GPU vectors, and `events_processed` — everything except the
+//! wall-derived `events_per_sec`), and pins the mega-sharding contract
+//! (`shards == 1` is exactly the unsharded run; any shard count merges
+//! bit-identically at any worker count).
+
+use migperf::cluster::{
+    FaultPlan, FleetConfig, FleetOutcome, FleetPolicyKind, NoopInspector, OverloadPolicy,
+    RepartitionMode, RequestClass, RouterKind, TelemetryConfig,
+};
+use migperf::mig::gpu::GpuModel;
+use migperf::models::zoo;
+use migperf::orchestrator::ReconfigCost;
+use migperf::sweep::{self, SweepEngine};
+use migperf::testing::{case_seed, generate, run_case, run_fuzz, Command, CommandSeq};
+use migperf::workload::arrival::ArrivalSpec;
+use migperf::workload::spec::WorkloadSpec;
+
+/// Deep determinism fingerprint: every counter in the conservation
+/// ledger, the bit patterns of every derived float, and the per-class /
+/// per-GPU breakdowns. `events_per_sec` is deliberately absent — it is
+/// wall-derived and the only outcome field allowed to differ between
+/// replays of the same config.
+fn fingerprint(out: &FleetOutcome) -> Vec<u64> {
+    let mut v = vec![
+        out.arrived,
+        out.routed,
+        out.completed,
+        out.slo_violations,
+        out.failed_requests,
+        out.retried_requests,
+        out.lost_in_crash,
+        out.shed_overload,
+        out.shed_deadline,
+        out.shed_capacity,
+        out.shed_brownout,
+        out.breaker_trips,
+        out.reconfigurations,
+        out.migrated_requests,
+        out.stranded_requests,
+        out.unavailable_routes,
+        out.gpu_crashes,
+        out.instance_crashes,
+        out.train_steps,
+        out.events_processed,
+        out.goodput_rps.to_bits(),
+        out.slo_violation_frac.to_bits(),
+        out.fairness_jain.to_bits(),
+        out.availability.to_bits(),
+        out.reconfig_downtime_s.to_bits(),
+        out.breaker_open_s.to_bits(),
+        out.train_samples_per_s.to_bits(),
+        out.pooled.avg_latency_ms.to_bits(),
+        out.pooled.p50_latency_ms.to_bits(),
+        out.pooled.p99_latency_ms.to_bits(),
+        out.pooled.max_latency_ms.to_bits(),
+    ];
+    v.extend(out.arrived_per_class.iter().copied());
+    v.extend(out.downtime_s_per_gpu.iter().map(|d| d.to_bits()));
+    v.extend(out.per_class.iter().map(|s| s.avg_latency_ms.to_bits()));
+    v.extend(out.per_gpu.iter().map(|s| s.completed));
+    for t in &out.tenants {
+        v.extend([t.arrived, t.completed, t.goodput_rps.to_bits()]);
+    }
+    v
+}
+
+/// The pinned corpus: the same sequences `tests/model_regressions.rs`
+/// asserts model facts about, reused here as equivalence witnesses (they
+/// cover breaker × repartition, crash × brownout, permanent outage ×
+/// deadlines, and crash/recover/repartition churn).
+fn corpus() -> Vec<(&'static str, CommandSeq)> {
+    vec![
+        (
+            "breaker-half-open x repartition",
+            CommandSeq {
+                seed: 101,
+                commands: vec![
+                    Command::ResizeFleet { gpus: 2 },
+                    Command::SetOverload { queue_cap: 2, deadline_mult: 1.0, drop_oldest: true },
+                    Command::SetBreaker { threshold: 0.125, probes: 2 },
+                    Command::SetRolling { rolling: true },
+                    Command::ArriveBurst { class: 0, n: 200, over_s: 10.0 },
+                    Command::ArriveBurst { class: 1, n: 200, over_s: 10.0 },
+                    Command::AdvanceTime { dt_s: 6.0 },
+                    Command::Repartition { gpu: 0, rate_scale: 0.25 },
+                    Command::ArriveBurst { class: 0, n: 120, over_s: 8.0 },
+                    Command::AdvanceTime { dt_s: 12.0 },
+                    Command::Repartition { gpu: 0, rate_scale: 2.0 },
+                    Command::AdvanceTime { dt_s: 10.0 },
+                ],
+            },
+        ),
+        (
+            "crash during brownout escalation",
+            CommandSeq {
+                seed: 102,
+                commands: vec![
+                    Command::ResizeFleet { gpus: 2 },
+                    Command::RetuneTenants { gold: 4.0, bronze: 0.5 },
+                    Command::SetOverload { queue_cap: 2, deadline_mult: 1.0, drop_oldest: false },
+                    Command::SetBrownout { threshold: 0.125 },
+                    Command::ArriveBurst { class: 0, n: 180, over_s: 12.0 },
+                    Command::ArriveBurst { class: 1, n: 180, over_s: 12.0 },
+                    Command::AdvanceTime { dt_s: 7.0 },
+                    Command::CrashGpu { gpu: 1 },
+                    Command::ArriveBurst { class: 1, n: 100, over_s: 6.0 },
+                    Command::AdvanceTime { dt_s: 9.0 },
+                    Command::Recover { gpu: 1 },
+                    Command::AdvanceTime { dt_s: 15.0 },
+                ],
+            },
+        ),
+        (
+            "permanent crash under deadline shedding",
+            CommandSeq {
+                seed: 103,
+                commands: vec![
+                    Command::ResizeFleet { gpus: 2 },
+                    Command::SetOverload { queue_cap: 4, deadline_mult: 2.0, drop_oldest: false },
+                    Command::ArriveBurst { class: 0, n: 150, over_s: 10.0 },
+                    Command::AdvanceTime { dt_s: 4.0 },
+                    Command::CrashGpu { gpu: 0 },
+                    Command::ArriveBurst { class: 0, n: 150, over_s: 10.0 },
+                    Command::ArriveBurst { class: 1, n: 80, over_s: 10.0 },
+                    Command::AdvanceTime { dt_s: 20.0 },
+                ],
+            },
+        ),
+        (
+            "crash/recover/repartition churn",
+            CommandSeq {
+                seed: 104,
+                commands: vec![
+                    Command::ResizeFleet { gpus: 3 },
+                    Command::SetRouter { router: 3 },
+                    Command::ArriveBurst { class: 0, n: 160, over_s: 16.0 },
+                    Command::ArriveBurst { class: 1, n: 160, over_s: 16.0 },
+                    Command::AdvanceTime { dt_s: 3.0 },
+                    Command::CrashGpu { gpu: 0 },
+                    Command::CrashInstance { gpu: 1, class: 0 },
+                    Command::AdvanceTime { dt_s: 4.0 },
+                    Command::Recover { gpu: 0 },
+                    Command::Repartition { gpu: 0, rate_scale: 1.5 },
+                    Command::AdvanceTime { dt_s: 2.0 },
+                    Command::Recover { gpu: 1 },
+                    Command::CrashGpu { gpu: 0 },
+                    Command::AdvanceTime { dt_s: 5.0 },
+                    Command::Recover { gpu: 0 },
+                    Command::AdvanceTime { dt_s: 12.0 },
+                ],
+            },
+        ),
+    ]
+}
+
+/// A plain diurnal fleet (no replay traces), used where the command
+/// compiler's `ArrivalSpec::Replay` output would be rejected (mega
+/// sharding cannot split a trace).
+fn diurnal_fleet(n: usize, seed: u64) -> FleetConfig {
+    let bert = zoo::lookup("bert-base").unwrap();
+    let class = RequestClass {
+        spec: WorkloadSpec::inference(bert, 8, 128),
+        slo_ms: 40.0,
+        arrival: ArrivalSpec::Diurnal {
+            base_rate: 6.0 * n as f64,
+            peak_rate: 40.0 * n as f64,
+            period_s: 60.0,
+        },
+    };
+    FleetConfig {
+        gpus: vec![GpuModel::A100_80GB; n],
+        train: None,
+        classes: vec![class.clone(), class],
+        tenants: Vec::new(),
+        router: RouterKind::LeastLoaded,
+        policy: FleetPolicyKind::Static,
+        mode: RepartitionMode::Rolling,
+        cost: ReconfigCost::default(),
+        duration_s: 120.0,
+        window_s: 10.0,
+        rho_max: 0.75,
+        faults: FaultPlan::none(),
+        overload: OverloadPolicy::none(),
+        telemetry: TelemetryConfig::off(),
+        seed,
+    }
+}
+
+#[test]
+fn pinned_corpus_replays_bit_identically() {
+    for (name, seq) in corpus() {
+        // The sequence must still satisfy the live invariants and the
+        // closed-form model after the refactor...
+        let first = match run_case(&seq) {
+            Ok(out) => out,
+            Err(f) => panic!(
+                "pinned case '{name}' violated the model:\n{}",
+                f.violations.join("\n")
+            ),
+        };
+        // ...and replay to the same bits, down to events_processed.
+        let cfg = seq.compile().config;
+        let again = cfg.run().expect("replay");
+        assert_eq!(
+            fingerprint(&first),
+            fingerprint(&again),
+            "'{name}': replaying the same sequence must reproduce every bit"
+        );
+        assert!(again.events_processed > again.arrived, "every arrival is at least one event");
+    }
+}
+
+#[test]
+fn inspector_attachment_is_free() {
+    // run() is run_with_inspector(&mut NoopInspector); the probe hooks
+    // must never perturb the simulation, for pinned and generated
+    // sequences alike.
+    for (name, seq) in corpus() {
+        let cfg = seq.compile().config;
+        let plain = cfg.run().expect("run");
+        let mut noop = NoopInspector;
+        let probed = cfg.run_with_inspector(&mut noop).expect("probed run");
+        assert_eq!(
+            fingerprint(&plain),
+            fingerprint(&probed),
+            "'{name}': attaching an inspector must not change the outcome"
+        );
+    }
+    for i in 0..6u64 {
+        let seq = generate(case_seed(23, i), 14);
+        let cfg = seq.compile().config;
+        let plain = cfg.run().expect("run");
+        let mut noop = NoopInspector;
+        let probed = cfg.run_with_inspector(&mut noop).expect("probed run");
+        assert_eq!(fingerprint(&plain), fingerprint(&probed), "generated case {i}");
+    }
+}
+
+#[test]
+fn fuzz_digest_survives_reruns_and_worker_counts() {
+    // Same parameters, fresh engine state: the digest is a pure function
+    // of (cases, seed, max_cmds), not of scheduling or allocation order.
+    let first = run_fuzz(16, 11, 12, &SweepEngine::serial());
+    assert!(first.passed(), "fuzz violations:\n{:#?}", first.failures);
+    let rerun = run_fuzz(16, 11, 12, &SweepEngine::serial());
+    assert_eq!(first.digest, rerun.digest, "rerunning must reproduce the digest");
+    for workers in [2usize, 4, 16] {
+        let par = run_fuzz(16, 11, 12, &SweepEngine::new(workers));
+        assert_eq!(
+            par.digest, first.digest,
+            "fuzz digest must be bitwise-identical at {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn mega_single_shard_is_the_unsharded_run() {
+    let cfg = diurnal_fleet(3, 77);
+    let direct = cfg.run().expect("direct");
+    let sharded = sweep::run_mega(&SweepEngine::serial(), &cfg, 1).expect("1-shard mega");
+    assert_eq!(
+        fingerprint(&direct),
+        fingerprint(&sharded),
+        "shards == 1 must be exactly the unsharded simulation"
+    );
+}
+
+#[test]
+fn mega_merge_is_bit_identical_at_any_worker_count() {
+    let cfg = diurnal_fleet(8, 78);
+    let base = sweep::run_mega(&SweepEngine::serial(), &cfg, 4).expect("serial mega");
+    assert_eq!(
+        base.completed + base.failed_requests + base.lost_in_crash + base.shed_overload,
+        base.arrived,
+        "merged outcome must conserve requests"
+    );
+    for workers in [2usize, 4, 16] {
+        let par = sweep::run_mega(&SweepEngine::new(workers), &cfg, 4).expect("parallel mega");
+        assert_eq!(
+            fingerprint(&base),
+            fingerprint(&par),
+            "mega merge must be bit-identical at {workers} workers"
+        );
+    }
+}
