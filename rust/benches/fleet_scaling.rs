@@ -42,6 +42,10 @@
 //! `MIGPERF_BENCH_OUT` when set, else the working directory). Set
 //! `MIGPERF_PERF_SMOKE=1` to shrink the simulated horizon for CI.
 
+// Benches are sanctioned wall-clock sites (clippy.toml disallows
+// Instant::now elsewhere).
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use migperf::cluster::{

@@ -13,6 +13,10 @@
 //! track the perf trajectory. Set `MIGPERF_PERF_SMOKE=1` to shrink
 //! iteration counts for a quick CI smoke run.
 
+// Benches are sanctioned wall-clock sites (clippy.toml disallows
+// Instant::now elsewhere).
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use migperf::metrics::collector::MetricsCollector;

@@ -147,6 +147,7 @@ impl FaultPlan {
         }
         // Total order independent of generation order: by time, then GPU.
         injections.sort_by(|a, b| {
+            // lint:allow(float-order, reason="expect is a deliberate NaN guard: a NaN fault time must panic loudly, not order silently")
             a.t.partial_cmp(&b.t).expect("finite fault times").then(a.gpu.cmp(&b.gpu))
         });
         FaultPlan { injections, ..FaultPlan::default() }
@@ -193,6 +194,7 @@ impl FaultPlan {
         for gpu in 0..n_gpus {
             let mut per: Vec<&FaultInjection> =
                 self.injections.iter().filter(|f| f.gpu == gpu).collect();
+            // lint:allow(float-order, reason="expect is a deliberate NaN guard: a NaN fault time must panic loudly, not order silently")
             per.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("finite fault times"));
             for w in per.windows(2) {
                 if w[0].end() > w[1].t {

@@ -255,11 +255,7 @@ impl OverloadGuard {
             .collect();
         let mut brownout_order: Vec<usize> = (0..tenants.len()).collect();
         brownout_order.sort_by(|&a, &b| {
-            tenants[a]
-                .weight
-                .partial_cmp(&tenants[b].weight)
-                .expect("finite tenant weights")
-                .then(a.cmp(&b))
+            tenants[a].weight.total_cmp(&tenants[b].weight).then(a.cmp(&b))
         });
         OverloadGuard {
             policy,

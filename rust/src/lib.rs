@@ -35,6 +35,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod frameworks;
 pub mod leaderboard;
+pub mod lint;
 pub mod metrics;
 pub mod mig;
 pub mod models;

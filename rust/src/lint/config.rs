@@ -1,0 +1,271 @@
+//! Configuration for the determinism auditor: which paths carry the
+//! bitwise-determinism contract, which files are sanctioned wall-clock
+//! sites, which hot-path modules are under the panic budget, and the
+//! parser for the checked-in `lint-budget.toml` ratchet file.
+
+use std::collections::BTreeMap;
+
+/// Repo-specific lint configuration. Paths are matched as substrings of
+/// the scanned file's forward-slash path, so the config works whether the
+/// linter runs from `rust/` (CI) or the repo root.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Modules under the bitwise-determinism contract: map-iteration,
+    /// unstable-sort, float-order and entropy rules fire only here.
+    pub deterministic_paths: Vec<String>,
+    /// Files where wall-clock reads are sanctioned wholesale (the CLI,
+    /// the benches, the pjrt-gated executor). Sites inside deterministic
+    /// modules are instead annotated inline with `lint:allow`.
+    pub wallclock_allowed: Vec<String>,
+    /// Engine hot-path modules under the `lint-budget.toml` ratchet
+    /// (exact path suffixes, not substrings).
+    pub budget_modules: Vec<String>,
+    /// Directory-name fragments skipped when *walking* directories;
+    /// explicitly listed files are always linted (so CI can run the
+    /// linter directly on a known-bad fixture).
+    pub walk_excludes: Vec<String>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        let s = |v: &[&str]| v.iter().map(|p| p.to_string()).collect();
+        LintConfig {
+            deterministic_paths: s(&[
+                "src/cluster/",
+                "src/sweep/",
+                "src/simgpu/",
+                "src/testing/",
+                "src/workload/",
+                "src/metrics/",
+            ]),
+            wallclock_allowed: s(&["src/main.rs", "benches/", "src/runtime/executor.rs"]),
+            budget_modules: s(&[
+                "src/cluster/engine.rs",
+                "src/cluster/mega.rs",
+                "src/cluster/overload.rs",
+                "src/cluster/router.rs",
+                "src/simgpu/desim.rs",
+                "src/sweep/engine.rs",
+                "src/workload/serving.rs",
+            ]),
+            walk_excludes: s(&["lint_fixtures", "target/"]),
+        }
+    }
+}
+
+impl LintConfig {
+    /// True if `path` is under the bitwise-determinism contract.
+    pub fn is_deterministic(&self, path: &str) -> bool {
+        self.deterministic_paths.iter().any(|p| path.contains(p.as_str()))
+    }
+
+    /// True if wall-clock reads are sanctioned wholesale in `path`.
+    pub fn is_wallclock_allowed(&self, path: &str) -> bool {
+        self.wallclock_allowed.iter().any(|p| path.contains(p.as_str()))
+    }
+
+    /// The budget key for `path`, if it is a budgeted hot-path module.
+    pub fn budget_key(&self, path: &str) -> Option<&str> {
+        self.budget_modules.iter().map(String::as_str).find(|m| path.ends_with(m))
+    }
+}
+
+/// Per-module panic-budget counters. The checked-in numbers are a
+/// ratchet: a count above budget is an error, a count below budget is a
+/// stale-budget warning (an error under `--strict`), so the file always
+/// matches reality and can only move down.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BudgetEntry {
+    /// `.unwrap()` calls outside `#[cfg(test)]` items.
+    pub unwrap: u64,
+    /// `.expect(…)` calls outside `#[cfg(test)]` items.
+    pub expect: u64,
+    /// `panic!(…)` invocations outside `#[cfg(test)]` items.
+    pub panic: u64,
+    /// Index expressions `x[i]` outside `#[cfg(test)]` items.
+    pub index: u64,
+}
+
+impl BudgetEntry {
+    /// Counter value by name.
+    pub fn get(&self, counter: &str) -> Option<u64> {
+        match counter {
+            "unwrap" => Some(self.unwrap),
+            "expect" => Some(self.expect),
+            "panic" => Some(self.panic),
+            "index" => Some(self.index),
+            _ => None,
+        }
+    }
+
+    /// Counters in canonical order, paired with their names.
+    pub fn counters(&self) -> [(&'static str, u64); 4] {
+        [
+            ("unwrap", self.unwrap),
+            ("expect", self.expect),
+            ("panic", self.panic),
+            ("index", self.index),
+        ]
+    }
+}
+
+/// The parsed `lint-budget.toml`: module path → counters.
+#[derive(Debug, Clone, Default)]
+pub struct BudgetTable {
+    /// Entries keyed by module path as written in the file.
+    pub entries: BTreeMap<String, BudgetEntry>,
+}
+
+impl BudgetTable {
+    /// Entry for a scanned file, matched by path suffix so the table
+    /// written relative to `rust/` also resolves from the repo root.
+    pub fn entry_for(&self, path: &str) -> Option<(&str, &BudgetEntry)> {
+        self.entries
+            .iter()
+            .find(|(k, _)| path.ends_with(k.as_str()))
+            .map(|(k, e)| (k.as_str(), e))
+    }
+}
+
+/// Parse the `lint-budget.toml` subset:
+///
+/// ```toml
+/// [budget."src/cluster/engine.rs"]
+/// unwrap = 0
+/// expect = 4
+/// panic = 1
+/// index = 120
+/// ```
+///
+/// Comments (`#`) and blank lines are ignored. Anything else is an error
+/// — the ratchet file is machine-written, so leniency only hides typos.
+pub fn parse_budget(text: &str) -> Result<BudgetTable, String> {
+    let mut table = BudgetTable::default();
+    let mut current: Option<String> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = match raw.find('#') {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {lineno}: unterminated section header"))?;
+            let path = inner
+                .strip_prefix("budget.\"")
+                .and_then(|p| p.strip_suffix('"'))
+                .ok_or_else(|| {
+                    format!("line {lineno}: expected [budget.\"<path>\"], got [{inner}]")
+                })?;
+            if path.is_empty() {
+                return Err(format!("line {lineno}: empty module path"));
+            }
+            if table.entries.contains_key(path) {
+                return Err(format!("line {lineno}: duplicate section for {path}"));
+            }
+            table.entries.insert(path.to_string(), BudgetEntry::default());
+            current = Some(path.to_string());
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {lineno}: expected `key = value`, got `{line}`"))?;
+        let key = key.trim();
+        let value: u64 = value
+            .trim()
+            .parse()
+            .map_err(|_| format!("line {lineno}: `{key}` needs a non-negative integer"))?;
+        let section = current
+            .as_ref()
+            .ok_or_else(|| format!("line {lineno}: `{key}` outside any [budget.\"…\"] section"))?;
+        let entry = table.entries.get_mut(section).expect("section was just inserted");
+        match key {
+            "unwrap" => entry.unwrap = value,
+            "expect" => entry.expect = value,
+            "panic" => entry.panic = value,
+            "index" => entry.index = value,
+            other => return Err(format!("line {lineno}: unknown counter `{other}`")),
+        }
+    }
+    Ok(table)
+}
+
+/// Serialize a budget table in the canonical checked-in format.
+pub fn render_budget(table: &BudgetTable) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# Panic-budget ratchet for engine hot-path modules (see `migperf lint`).\n\
+         # Counts cover code outside #[cfg(test)] items and may only go down:\n\
+         # above-budget fails the lint gate, below-budget is a stale-budget\n\
+         # warning (error under --strict) telling you to tighten this file.\n",
+    );
+    for (path, e) in &table.entries {
+        out.push('\n');
+        out.push_str(&format!("[budget.\"{path}\"]\n"));
+        for (name, value) in e.counters() {
+            out.push_str(&format!("{name} = {value}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_classifies_paths() {
+        let cfg = LintConfig::default();
+        assert!(cfg.is_deterministic("src/cluster/engine.rs"));
+        assert!(cfg.is_deterministic("rust/src/metrics/collector.rs"));
+        assert!(!cfg.is_deterministic("src/mig/controller.rs"));
+        assert!(cfg.is_wallclock_allowed("benches/perf_hotpath.rs"));
+        assert!(cfg.is_wallclock_allowed("src/main.rs"));
+        assert!(cfg.is_wallclock_allowed("src/runtime/executor.rs"));
+        assert!(!cfg.is_wallclock_allowed("src/cluster/engine.rs"));
+        assert_eq!(cfg.budget_key("rust/src/cluster/engine.rs"), Some("src/cluster/engine.rs"));
+        assert_eq!(cfg.budget_key("src/cluster/telemetry.rs"), None);
+    }
+
+    #[test]
+    fn budget_roundtrip() {
+        let mut table = BudgetTable::default();
+        table.entries.insert(
+            "src/cluster/engine.rs".to_string(),
+            BudgetEntry { unwrap: 1, expect: 2, panic: 3, index: 4 },
+        );
+        let text = render_budget(&table);
+        let back = parse_budget(&text).unwrap();
+        assert_eq!(back.entries.len(), 1);
+        let e = back.entries.get("src/cluster/engine.rs").unwrap();
+        assert_eq!(*e, BudgetEntry { unwrap: 1, expect: 2, panic: 3, index: 4 });
+    }
+
+    #[test]
+    fn budget_parses_comments_and_suffix_match() {
+        let text = "# header\n[budget.\"src/sweep/engine.rs\"]\nunwrap = 7 # inline\n";
+        let table = parse_budget(text).unwrap();
+        let (key, e) = table.entry_for("rust/src/sweep/engine.rs").unwrap();
+        assert_eq!(key, "src/sweep/engine.rs");
+        assert_eq!(e.unwrap, 7);
+        assert_eq!(e.expect, 0);
+    }
+
+    #[test]
+    fn budget_rejects_malformed_input() {
+        assert!(parse_budget("[budget.\"a\"]\nbogus = 1\n").is_err(), "unknown counter");
+        assert!(parse_budget("unwrap = 1\n").is_err(), "counter outside a section");
+        assert!(parse_budget("[nope]\n").is_err(), "non-budget section");
+        assert!(parse_budget("[budget.\"a\"]\nunwrap = -1\n").is_err(), "negative count");
+        assert!(parse_budget("[budget.\"a\"]\nunwrap\n").is_err(), "missing value");
+        assert!(
+            parse_budget("[budget.\"a\"]\n[budget.\"a\"]\n").is_err(),
+            "duplicate section"
+        );
+    }
+}

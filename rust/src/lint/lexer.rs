@@ -1,0 +1,548 @@
+//! Minimal Rust source tokenizer for the determinism auditor.
+//!
+//! Produces a flat token stream (identifiers, literals, punctuation) plus
+//! the `//` line comments, with string, char, raw-string and comment
+//! interiors fully opaque — so no rule can ever fire on text that merely
+//! *looks* like code inside a literal or a comment. This is deliberately
+//! not a full Rust lexer: it covers exactly the subset the `lint` rules
+//! need, and every rule shares it so they all agree on what is code.
+//!
+//! Handled: line and (nested) block comments, plain strings with escapes,
+//! raw strings `r"…"`/`r#"…"#` with any hash count, byte strings and byte
+//! chars (`b"…"`, `br#"…"#`, `b'x'`), char literals vs lifetimes
+//! (`'a'` vs `'a`), raw identifiers (`r#type`), numeric literals with
+//! separators/suffixes/exponents, and multi-char operators joined into
+//! single tokens (so `>=` is never mistaken for an assignment).
+
+/// Kind of one lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`foo`, `for`; `r#type` lexes as `type`).
+    Ident,
+    /// Numeric literal, including suffixes (`1_000u32`, `0xff`, `1.5e-3`).
+    Num,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Lifetime,
+    /// Punctuation; multi-char operators are joined (`::`, `>=`, `+=`).
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    /// What kind of token this is.
+    pub kind: TokKind,
+    /// Identifier name or operator text; empty for literals.
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+impl Tok {
+    /// True if this token is the identifier `name`.
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    /// True if this token is the punctuation `op`.
+    pub fn is_punct(&self, op: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == op
+    }
+}
+
+/// One `//` line comment. Block comments are skipped entirely: the
+/// suppression syntax is line-comment-only by design, so a stale
+/// suppression can never hide inside a folded block comment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Comment {
+    /// Text after the `//`, untrimmed.
+    pub text: String,
+    /// 1-based line of the comment.
+    pub line: u32,
+    /// True when only whitespace precedes the `//` on its line: the
+    /// comment stands alone and annotates the next code line.
+    pub leading: bool,
+}
+
+/// Lexer output: the token stream and the line comments.
+#[derive(Debug, Clone, Default)]
+pub struct Lexed {
+    /// All non-comment tokens in source order.
+    pub toks: Vec<Tok>,
+    /// All `//` comments in source order.
+    pub comments: Vec<Comment>,
+}
+
+/// Three-char operators, matched before two- and one-char ones.
+const OPS3: &[&str] = &["<<=", ">>=", "..=", "..."];
+/// Two-char operators.
+const OPS2: &[&str] = &[
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>", "+=", "-=", "*=", "/=",
+    "%=", "^=", "&=", "|=", "..",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes become one-char
+/// `Punct` tokens, so hostile input degrades to noise rather than a
+/// missed or phantom rule match.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    // True until the first token on the current line; a `//` seen while
+    // this holds is a leading (annotation-style) comment.
+    let mut leading = true;
+
+    let at = |i: usize| if i < n { b[i] } else { '\0' };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            leading = true;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && at(i + 1) == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                text: b[start..j].iter().collect(),
+                line,
+                leading,
+            });
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && at(i + 1) == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && at(j + 1) == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && at(j + 1) == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw strings, raw identifiers, byte strings, byte chars.
+        if c == 'r' || c == 'b' {
+            // br"…" / br#"…"# (byte raw string).
+            if c == 'b' && at(i + 1) == 'r' && (at(i + 2) == '"' || at(i + 2) == '#') {
+                let start_line = line;
+                if let Some(j) = scan_raw_string(&b, i + 2, &mut line) {
+                    out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+                    leading = false;
+                    i = j;
+                    continue;
+                }
+            }
+            // r"…" / r#"…"# (raw string) or r#ident (raw identifier).
+            if c == 'r' && (at(i + 1) == '"' || at(i + 1) == '#') {
+                let start_line = line;
+                if let Some(j) = scan_raw_string(&b, i + 1, &mut line) {
+                    out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+                    leading = false;
+                    i = j;
+                    continue;
+                }
+                if at(i + 1) == '#' && is_ident_start(at(i + 2)) {
+                    let mut j = i + 2;
+                    while j < n && is_ident_char(b[j]) {
+                        j += 1;
+                    }
+                    let text: String = b[i + 2..j].iter().collect();
+                    out.toks.push(Tok { kind: TokKind::Ident, text, line });
+                    leading = false;
+                    i = j;
+                    continue;
+                }
+            }
+            // b"…" (byte string with escapes).
+            if c == 'b' && at(i + 1) == '"' {
+                let start_line = line;
+                i = scan_string(&b, i + 1, &mut line);
+                out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+                leading = false;
+                continue;
+            }
+            // b'…' (byte char).
+            if c == 'b' && at(i + 1) == '\'' {
+                if let Some(j) = scan_char(&b, i + 1) {
+                    out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                    leading = false;
+                    i = j;
+                    continue;
+                }
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        // Plain string.
+        if c == '"' {
+            let start_line = line;
+            i = scan_string(&b, i, &mut line);
+            out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+            leading = false;
+            continue;
+        }
+        // Char literal or lifetime.
+        if c == '\'' {
+            if let Some(j) = scan_char(&b, i) {
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                leading = false;
+                i = j;
+                continue;
+            }
+            // Lifetime: consume ident chars after the quote.
+            let mut j = i + 1;
+            while j < n && is_ident_char(b[j]) {
+                j += 1;
+            }
+            let text: String = b[i..j].iter().collect();
+            out.toks.push(Tok { kind: TokKind::Lifetime, text, line });
+            leading = false;
+            i = j.max(i + 1);
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_char(b[j]) {
+                j += 1;
+            }
+            let text: String = b[i..j].iter().collect();
+            out.toks.push(Tok { kind: TokKind::Ident, text, line });
+            leading = false;
+            i = j;
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            i = scan_number(&b, i);
+            out.toks.push(Tok { kind: TokKind::Num, text: String::new(), line });
+            leading = false;
+            continue;
+        }
+        // Punctuation, longest operators first.
+        let rest3: String = b[i..n.min(i + 3)].iter().collect();
+        let rest2: String = b[i..n.min(i + 2)].iter().collect();
+        let (text, len) = if OPS3.contains(&rest3.as_str()) {
+            (rest3, 3)
+        } else if OPS2.contains(&rest2.as_str()) {
+            (rest2, 2)
+        } else {
+            (c.to_string(), 1)
+        };
+        out.toks.push(Tok { kind: TokKind::Punct, text, line });
+        leading = false;
+        i += len;
+    }
+    out
+}
+
+/// Scan a `"…"` string with `\`-escapes; `start` is the opening quote.
+/// Returns the index one past the closing quote (or end of input).
+fn scan_string(b: &[char], start: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Scan a raw string whose hash-run (possibly empty) begins at `start`
+/// (`start` points at the first `#` or the opening `"`). Returns the
+/// index one past the closing delimiter, or `None` if this is not a raw
+/// string opener (e.g. `r#ident`).
+fn scan_raw_string(b: &[char], start: usize, line: &mut u32) -> Option<usize> {
+    let n = b.len();
+    let mut hashes = 0usize;
+    let mut j = start;
+    while j < n && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || b[j] != '"' {
+        return None;
+    }
+    j += 1;
+    while j < n {
+        if b[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Scan a char literal whose opening quote is at `start`. Returns the
+/// index one past the closing quote, or `None` if this is a lifetime.
+fn scan_char(b: &[char], start: usize) -> Option<usize> {
+    let n = b.len();
+    let next = if start + 1 < n { b[start + 1] } else { '\0' };
+    if next == '\\' {
+        // Escaped char: `'\n'`, `'\''`, `'\u{1F600}'`.
+        let mut j = start + 2;
+        if j < n && b[j] == 'u' && j + 1 < n && b[j + 1] == '{' {
+            j += 2;
+            while j < n && b[j] != '}' {
+                j += 1;
+            }
+            j += 1;
+        } else {
+            j += 1;
+        }
+        if j < n && b[j] == '\'' {
+            return Some(j + 1);
+        }
+        return None;
+    }
+    // Unescaped char: exactly one char then a closing quote.
+    if next != '\0' && next != '\'' && start + 2 < n && b[start + 2] == '\'' {
+        return Some(start + 3);
+    }
+    None
+}
+
+/// Scan a numeric literal starting at `start` (an ASCII digit). Returns
+/// the index one past the literal. Tuple indices stay separate: `a.0.fmt`
+/// lexes as `a` `.` `0` `.` `fmt` because the fractional dot is only
+/// consumed when a digit follows it.
+fn scan_number(b: &[char], start: usize) -> usize {
+    let n = b.len();
+    let mut j = start;
+    // Radix prefixes consume alphanumerics wholesale (0xff_u8, 0b1010).
+    if b[j] == '0' && j + 1 < n && matches!(b[j + 1], 'x' | 'o' | 'b') {
+        j += 2;
+        while j < n && is_ident_char(b[j]) {
+            j += 1;
+        }
+        return j;
+    }
+    while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+        j += 1;
+    }
+    // Fractional part only if a digit follows the dot (not `0..10`).
+    if j < n && b[j] == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+        j += 1;
+        while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+            j += 1;
+        }
+    }
+    // Exponent with optional sign.
+    if j < n && (b[j] == 'e' || b[j] == 'E') {
+        let sign = j + 1 < n && (b[j + 1] == '+' || b[j + 1] == '-');
+        let digit_at = j + if sign { 2 } else { 1 };
+        if digit_at < n && b[digit_at].is_ascii_digit() {
+            j = digit_at;
+            while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    // Type suffix (u32, f64, usize).
+    while j < n && is_ident_char(b[j]) {
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let l = lex("let x = a.partial_cmp(&b);");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["let", "x", "=", "a", ".", "partial_cmp", "(", "&", "b", ")", ";"]);
+    }
+
+    #[test]
+    fn multi_char_ops_are_joined() {
+        let l = lex("a >= b; c += 1; d == e; f => g; h..=i; j <<= 2;");
+        let ops: Vec<String> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct)
+            .map(|t| t.text.clone())
+            .collect();
+        assert!(ops.contains(&">=".to_string()));
+        assert!(ops.contains(&"+=".to_string()));
+        assert!(ops.contains(&"==".to_string()));
+        assert!(ops.contains(&"=>".to_string()));
+        assert!(ops.contains(&"..=".to_string()));
+        assert!(ops.contains(&"<<=".to_string()));
+        // `>=` must never decompose into a bare `=`.
+        assert!(!ops.contains(&"=".to_string()));
+    }
+
+    #[test]
+    fn strings_are_opaque() {
+        let src = r#"let s = "Instant::now() HashMap.iter() // not a comment";"#;
+        assert_eq!(idents(src), vec!["let", "s"]);
+    }
+
+    #[test]
+    fn raw_strings_are_opaque() {
+        let src = "let s = r#\"thread_rng() \"quoted\" SystemTime\"#; after();";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "s", "after"]);
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings_are_opaque() {
+        let ids = idents("let a = b\"Instant\"; let c = br#\"HashMap\"#; tail();");
+        assert_eq!(ids, vec!["let", "a", "let", "c", "tail"]);
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let src = "x(); // trailing Instant::now()\n  // lint:allow(wall-clock, reason=\"x\")\ny();";
+        let l = lex(src);
+        assert_eq!(l.comments.len(), 2);
+        assert!(!l.comments[0].leading, "trailing comment after code");
+        assert_eq!(l.comments[0].line, 1);
+        assert!(l.comments[1].leading, "comment alone on its line");
+        assert_eq!(l.comments[1].line, 2);
+        // The comment text never reaches the token stream.
+        assert_eq!(idents(src), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn block_comments_skipped_with_nesting_and_lines() {
+        let src = "a();\n/* outer /* nested */ still comment\nInstant::now() */\nb();";
+        let l = lex(src);
+        assert_eq!(idents(src), vec!["a", "b"]);
+        // Line counting survives the block comment.
+        assert_eq!(l.toks.last().unwrap().line, 4);
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let l = lex("let c = 'x'; fn f<'a>(v: &'a str) { let q = '\\n'; }");
+        let chars = l.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        let lifetimes = l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        assert_eq!(chars, 2, "'x' and '\\n'");
+        assert_eq!(lifetimes, 2, "<'a> and &'a");
+    }
+
+    #[test]
+    fn unicode_escape_char_literal() {
+        let l = lex("let c = '\\u{1F600}'; done();");
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+        assert!(l.toks.iter().any(|t| t.is_ident("done")));
+    }
+
+    #[test]
+    fn raw_identifier() {
+        let ids = idents("let r#type = 1; use r#fn;");
+        assert_eq!(ids, vec!["let", "type", "use", "fn"]);
+    }
+
+    #[test]
+    fn tuple_index_does_not_eat_method_call() {
+        let l = lex("a.0.cmp(&b.0)");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        // `0` lexes as a number, `.cmp` stays a separate method call.
+        assert!(texts.contains(&"cmp"));
+    }
+
+    #[test]
+    fn range_is_not_a_float() {
+        let l = lex("for i in 0..10 {}");
+        assert!(l.toks.iter().any(|t| t.is_punct("..")));
+    }
+
+    #[test]
+    fn numbers_with_suffixes_and_exponents() {
+        let l = lex("let a = 1_000u32 + 0xff_u8 + 1.5e-3 + 2.0f64;");
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Num).count(), 4);
+    }
+
+    #[test]
+    fn lines_are_tracked_through_strings() {
+        let src = "let a = \"line\nbreak\";\nlet b = 1;";
+        let l = lex(src);
+        let b_tok = l.toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn hostile_mix_never_leaks_literal_interiors() {
+        // Every hazard the rules look for, hidden inside literals and
+        // comments; the token stream must contain none of them.
+        let src = concat!(
+            "// Instant::now() in a comment\n",
+            "/* HashMap::new().iter() */\n",
+            "let a = \"thread_rng()\";\n",
+            "let b = r\"SystemTime::now()\";\n",
+            "let c = 'I';\n",
+            "let d = \"sort_unstable_by\";\n",
+        );
+        let ids = idents(src);
+        for hazard in ["Instant", "HashMap", "thread_rng", "SystemTime", "sort_unstable_by"] {
+            assert!(!ids.iter().any(|i| i == hazard), "{hazard} leaked out of a literal");
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! `migperf lint` — a std-only, dependency-free source auditor that
+//! enforces the repo's bitwise-determinism contract statically.
+//!
+//! The dynamic layers (the model-based fuzzer, the equivalence tests)
+//! only catch a determinism hazard after a seed happens to trigger it.
+//! This pass catches whole hazard classes at the source level: unordered
+//! hash-map traversal, wall-clock leakage into checksummed metrics,
+//! non-total float comparators, ambient entropy, and panic-surface creep
+//! in engine hot paths.
+//!
+//! Layout:
+//! - [`lexer`] — a small Rust tokenizer (strings, chars, raw strings,
+//!   nested block comments) so rules never fire inside literals.
+//! - [`config`] — which paths carry the contract, the sanctioned
+//!   wall-clock files, the budgeted hot-path modules, and the
+//!   `lint-budget.toml` ratchet parser.
+//! - [`rules`] — the rule engine (IDs `map-iteration`, `wall-clock`,
+//!   `unstable-sort`, `float-order`, `ambient-entropy`, `panic-budget`,
+//!   `debug-assert-effect`, `allow-syntax`).
+//! - [`report`] — grep-style text and machine-readable JSON rendering.
+//!
+//! Suppression is per-line and must carry a reason:
+//! `// lint:allow(rule-id, reason="why this is sound")`.
+
+pub mod config;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use config::{parse_budget, BudgetTable, LintConfig};
+use std::path::Path;
+
+/// Stable identifiers for every rule, as written in findings and in
+/// `lint:allow(...)` comments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// D1 — order-dependent `HashMap`/`HashSet` traversal in
+    /// deterministic modules.
+    MapIteration,
+    /// D2 — `Instant::now`/`SystemTime`/`.elapsed()` outside sanctioned
+    /// wall-clock files.
+    WallClock,
+    /// D3a — `sort_unstable_by`/`_by_key` without a visibly total
+    /// comparator in deterministic modules.
+    UnstableSort,
+    /// D3b — `partial_cmp` in deterministic modules.
+    FloatOrder,
+    /// D4 — ambient entropy (`rand::`, `thread_rng`, `OsRng`, …).
+    AmbientEntropy,
+    /// D5 — unwrap/expect/panic/index counts above the checked-in
+    /// ratchet for an engine hot-path module.
+    PanicBudget,
+    /// D6 — side-effectful expressions inside `debug_assert!` macros.
+    DebugAssertEffect,
+    /// Malformed `lint:allow` comment (unknown rule, missing reason).
+    AllowSyntax,
+}
+
+impl RuleId {
+    /// All rules, in catalog order.
+    pub const ALL: [RuleId; 8] = [
+        RuleId::MapIteration,
+        RuleId::WallClock,
+        RuleId::UnstableSort,
+        RuleId::FloatOrder,
+        RuleId::AmbientEntropy,
+        RuleId::PanicBudget,
+        RuleId::DebugAssertEffect,
+        RuleId::AllowSyntax,
+    ];
+
+    /// The kebab-case id used in findings and `lint:allow`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::MapIteration => "map-iteration",
+            RuleId::WallClock => "wall-clock",
+            RuleId::UnstableSort => "unstable-sort",
+            RuleId::FloatOrder => "float-order",
+            RuleId::AmbientEntropy => "ambient-entropy",
+            RuleId::PanicBudget => "panic-budget",
+            RuleId::DebugAssertEffect => "debug-assert-effect",
+            RuleId::AllowSyntax => "allow-syntax",
+        }
+    }
+
+    /// Parse a kebab-case rule id.
+    pub fn parse(s: &str) -> Option<RuleId> {
+        RuleId::ALL.into_iter().find(|r| r.as_str() == s)
+    }
+
+    /// Whether `lint:allow` may suppress this rule. The panic budget is
+    /// governed by `lint-budget.toml` instead, and a malformed allow
+    /// must never be able to hide itself.
+    pub fn suppressible(self) -> bool {
+        !matches!(self, RuleId::PanicBudget | RuleId::AllowSyntax)
+    }
+}
+
+/// Finding severity. Everything is an error except a stale (too-loose)
+/// budget entry, which is a warning — and still fails under `--strict`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Fails the lint in every mode.
+    Error,
+    /// Fails the lint only under `--strict`.
+    Warning,
+}
+
+/// One lint finding: location, rule, severity, human message, and the
+/// trimmed offending source line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Forward-slash path as scanned.
+    pub file: String,
+    /// 1-based line number.
+    pub line: u32,
+    /// Which rule fired.
+    pub rule: RuleId,
+    /// Error or warning.
+    pub severity: Severity,
+    /// What is wrong and what to do instead.
+    pub message: String,
+    /// The trimmed source line (first 80 chars), empty for file-level
+    /// findings.
+    pub excerpt: String,
+}
+
+/// The result of a lint run over a set of paths.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// All findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Whether the run was strict (warnings fail too).
+    pub strict: bool,
+}
+
+impl Report {
+    /// Number of error-severity findings.
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-severity findings.
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// Whether this run should exit nonzero.
+    pub fn failed(&self) -> bool {
+        self.errors() > 0 || (self.strict && self.warnings() > 0)
+    }
+}
+
+/// Lint the given paths (files are linted as-is; directories are walked
+/// recursively for `.rs` files, skipping `walk_excludes`). The budget
+/// file is optional overall but mandatory as soon as a budgeted module
+/// is scanned.
+pub fn run_paths(
+    paths: &[String],
+    budget_path: &str,
+    strict: bool,
+    cfg: &LintConfig,
+) -> Result<Report, String> {
+    let budget: Option<BudgetTable> = match std::fs::read_to_string(budget_path) {
+        Ok(text) => {
+            Some(parse_budget(&text).map_err(|e| format!("{budget_path}: {e}"))?)
+        }
+        Err(_) => None,
+    };
+
+    let mut files: Vec<String> = Vec::new();
+    for p in paths {
+        let norm = p.replace('\\', "/");
+        let path = Path::new(&norm);
+        if path.is_dir() {
+            walk(path, cfg, &mut files)?;
+        } else if path.is_file() {
+            // Explicitly listed files are always linted, even under an
+            // excluded directory — CI smoke-tests known-bad fixtures.
+            files.push(norm);
+        } else {
+            return Err(format!("lint: no such file or directory: {p}"));
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for file in &files {
+        let src = std::fs::read_to_string(file).map_err(|e| format!("{file}: {e}"))?;
+        findings.extend(rules::check_source(file, &src, cfg, budget.as_ref()));
+    }
+    findings.sort_by(|a, b| {
+        a.file
+            .cmp(&b.file)
+            .then_with(|| a.line.cmp(&b.line))
+            .then_with(|| a.rule.as_str().cmp(b.rule.as_str()))
+    });
+    Ok(Report { findings, files_scanned: files.len(), strict })
+}
+
+/// Recursive directory walk in sorted name order (deterministic report
+/// ordering regardless of readdir order).
+fn walk(dir: &Path, cfg: &LintConfig, out: &mut Vec<String>) -> Result<(), String> {
+    let mut entries: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("{}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for entry in entries {
+        let norm = entry.to_string_lossy().replace('\\', "/");
+        if cfg.walk_excludes.iter().any(|x| norm.contains(x.as_str())) {
+            continue;
+        }
+        if entry.is_dir() {
+            walk(&entry, cfg, out)?;
+        } else if norm.ends_with(".rs") {
+            out.push(norm);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_roundtrip() {
+        for rule in RuleId::ALL {
+            assert_eq!(RuleId::parse(rule.as_str()), Some(rule));
+        }
+        assert_eq!(RuleId::parse("no-such-rule"), None);
+    }
+
+    #[test]
+    fn budget_and_allow_syntax_are_not_suppressible() {
+        assert!(!RuleId::PanicBudget.suppressible());
+        assert!(!RuleId::AllowSyntax.suppressible());
+        assert!(RuleId::WallClock.suppressible());
+        assert!(RuleId::MapIteration.suppressible());
+    }
+
+    #[test]
+    fn report_failure_semantics() {
+        let warn = Finding {
+            file: "f.rs".to_string(),
+            line: 1,
+            rule: RuleId::PanicBudget,
+            severity: Severity::Warning,
+            message: String::new(),
+            excerpt: String::new(),
+        };
+        let lenient = Report { findings: vec![warn.clone()], files_scanned: 1, strict: false };
+        assert!(!lenient.failed(), "warnings pass in default mode");
+        let strict = Report { findings: vec![warn], files_scanned: 1, strict: true };
+        assert!(strict.failed(), "warnings fail under --strict");
+    }
+
+    #[test]
+    fn missing_path_is_an_error() {
+        let cfg = LintConfig::default();
+        let paths = vec!["definitely/not/a/path.rs".to_string()];
+        assert!(run_paths(&paths, "lint-budget.toml", false, &cfg).is_err());
+    }
+}

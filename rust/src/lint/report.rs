@@ -1,0 +1,138 @@
+//! Rendering for lint findings: grep-style text for the terminal, and a
+//! machine-readable JSON report uploaded as a CI artifact.
+
+use super::{Finding, Report, Severity};
+use crate::util::json::Json;
+
+/// Grep-style text report: one `file:line: [severity] rule-id: message`
+/// block per finding, followed by the offending line, then a summary.
+pub fn render_text(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        let sev = match f.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        out.push_str(&format!("{}:{}: [{sev}] {}: {}\n", f.file, f.line, f.rule.as_str(), f.message));
+        if !f.excerpt.is_empty() {
+            out.push_str(&format!("    {}\n", f.excerpt));
+        }
+    }
+    let errors = report.errors();
+    let warnings = report.warnings();
+    if errors == 0 && warnings == 0 {
+        out.push_str(&format!(
+            "lint clean: {} files scanned, 0 findings\n",
+            report.files_scanned
+        ));
+    } else {
+        out.push_str(&format!(
+            "lint: {} files scanned, {errors} errors, {warnings} warnings{}\n",
+            report.files_scanned,
+            if report.strict && errors == 0 && warnings > 0 {
+                " (warnings fail under --strict)"
+            } else {
+                ""
+            }
+        ));
+    }
+    out
+}
+
+fn finding_json(f: &Finding) -> Json {
+    Json::obj(vec![
+        ("file", Json::from(f.file.as_str())),
+        ("line", Json::from(f.line as i64)),
+        ("rule", Json::from(f.rule.as_str())),
+        (
+            "severity",
+            Json::from(match f.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            }),
+        ),
+        ("message", Json::from(f.message.as_str())),
+        ("excerpt", Json::from(f.excerpt.as_str())),
+    ])
+}
+
+/// Machine-readable report: summary counts plus the full finding list,
+/// stable field order (BTreeMap-backed) so diffs between CI artifacts are
+/// meaningful.
+pub fn render_json(report: &Report) -> String {
+    let findings: Vec<Json> = report.findings.iter().map(finding_json).collect();
+    let mut by_rule: Vec<(String, i64)> = Vec::new();
+    for f in &report.findings {
+        let id = f.rule.as_str();
+        match by_rule.iter_mut().find(|(k, _)| k == id) {
+            Some((_, n)) => *n += 1,
+            None => by_rule.push((id.to_string(), 1)),
+        }
+    }
+    by_rule.sort_by(|a, b| a.0.cmp(&b.0));
+    let rule_counts =
+        by_rule.iter().map(|(k, n)| (k.as_str(), Json::from(*n))).collect::<Vec<_>>();
+    let doc = Json::obj(vec![
+        ("tool", Json::from("migperf lint")),
+        ("strict", Json::from(report.strict)),
+        ("files_scanned", Json::from(report.files_scanned)),
+        ("errors", Json::from(report.errors() as i64)),
+        ("warnings", Json::from(report.warnings() as i64)),
+        ("failed", Json::from(report.failed())),
+        ("findings_by_rule", Json::obj(rule_counts)),
+        ("findings", Json::Arr(findings)),
+    ]);
+    let mut s = doc.to_pretty();
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::RuleId;
+    use crate::util::json;
+
+    fn sample() -> Report {
+        Report {
+            findings: vec![Finding {
+                file: "src/cluster/x.rs".to_string(),
+                line: 7,
+                rule: RuleId::WallClock,
+                severity: Severity::Error,
+                message: "wall clock".to_string(),
+                excerpt: "let t = Instant::now();".to_string(),
+            }],
+            files_scanned: 3,
+            strict: true,
+        }
+    }
+
+    #[test]
+    fn text_report_carries_location_rule_and_excerpt() {
+        let text = render_text(&sample());
+        assert!(text.contains("src/cluster/x.rs:7: [error] wall-clock: wall clock"));
+        assert!(text.contains("    let t = Instant::now();"));
+        assert!(text.contains("3 files scanned, 1 errors, 0 warnings"));
+    }
+
+    #[test]
+    fn clean_report_says_clean() {
+        let clean = Report { findings: vec![], files_scanned: 5, strict: false };
+        assert!(render_text(&clean).contains("lint clean: 5 files scanned"));
+        assert!(!clean.failed());
+    }
+
+    #[test]
+    fn json_report_parses_back_with_counts() {
+        let doc = json::parse(&render_json(&sample())).expect("valid json");
+        assert_eq!(doc.get("errors").and_then(Json::as_i64), Some(1));
+        assert_eq!(doc.get("failed").and_then(Json::as_bool), Some(true));
+        let by_rule = doc.get("findings_by_rule").unwrap();
+        assert_eq!(by_rule.get("wall-clock").and_then(Json::as_i64), Some(1));
+        let fs = doc.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].get("line").and_then(Json::as_i64), Some(7));
+        assert_eq!(fs[0].get("rule").and_then(Json::as_str), Some("wall-clock"));
+    }
+}

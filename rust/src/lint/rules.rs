@@ -1,0 +1,871 @@
+//! The determinism rule engine: repo-specific checks over the token
+//! stream produced by [`super::lexer`].
+//!
+//! Rules (IDs as used in findings and `lint:allow`):
+//!
+//! - `map-iteration` — no `HashMap`/`HashSet` *iteration* in deterministic
+//!   modules. Construction and point lookups are fine; order-dependent
+//!   traversal (`for … in map`, `.iter()`, `.keys()`, `.values()`,
+//!   `.drain()`, `.retain()`, …) is not, because the iteration order is
+//!   randomized per process and would leak into checksummed outcomes.
+//! - `wall-clock` — no `Instant::now`/`SystemTime`/`.elapsed()` outside
+//!   the sanctioned wall-clock-only files; wall-derived values must stay
+//!   out of every checksum and fingerprint.
+//! - `unstable-sort` — no `sort_unstable_by`/`sort_unstable_by_key` in
+//!   deterministic modules unless the comparator is visibly total
+//!   (`total_cmp`). Plain `sort_unstable()` is exempt: the `Ord` bound
+//!   makes equal elements indistinguishable.
+//! - `float-order` — no `partial_cmp` in deterministic modules: on NaN it
+//!   returns `None`, so comparators either panic or silently reorder. Use
+//!   `f64::total_cmp`, or annotate a deliberate NaN-guarding `expect`.
+//! - `ambient-entropy` — no `rand::`/`thread_rng`/`OsRng`/`RandomState`
+//!   anywhere: the only randomness source is the seeded `util::prng::Prng`.
+//! - `panic-budget` — `.unwrap()`/`.expect()`/`panic!`/indexing counts per
+//!   engine-hot-path module, ratcheted by `lint-budget.toml`.
+//! - `debug-assert-effect` — no side-effectful expressions inside
+//!   `debug_assert!` family macros (they vanish in release builds).
+//! - `allow-syntax` — malformed `lint:allow` comments (unknown rule id,
+//!   missing or empty `reason="…"`).
+//!
+//! Suppression: `// lint:allow(rule-id, reason="why this is sound")` on
+//! the offending line, or alone on the line immediately above it. The
+//! reason is mandatory. `panic-budget` and `allow-syntax` findings cannot
+//! be suppressed inline — the budget file is the former's mechanism.
+
+use super::config::{BudgetEntry, BudgetTable, LintConfig};
+use super::lexer::{lex, Comment, Tok, TokKind};
+use super::{Finding, RuleId, Severity};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Rust keywords: never treated as indexable expressions or as bindable
+/// hash-container names.
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move",
+    "mut", "pub", "ref", "return", "static", "struct", "super", "trait", "true", "type",
+    "unsafe", "use", "where", "while", "yield",
+];
+
+/// Order-dependent traversal methods on hash containers.
+const ITER_METHODS: &[&str] = &[
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "into_keys", "into_values",
+    "drain", "retain",
+];
+
+/// Wrapper tokens walked over between a binding's `:` and the hash type
+/// (`cache: Option<HashMap<…>>`, `m: &mut std::collections::HashMap<…>`).
+const TYPE_WRAPPERS: &[&str] = &[
+    "Option", "Vec", "Box", "Rc", "Arc", "RefCell", "Cell", "Mutex", "RwLock", "std",
+    "collections", "mut",
+];
+
+/// Wrapper tokens walked over between a binding's `=` and the hash
+/// constructor (`m = Some(HashMap::new())`).
+const CTOR_WRAPPERS: &[&str] = &["Some", "Ok", "Box", "Arc", "Rc", "RefCell", "Mutex", "RwLock"];
+
+/// Compound-assignment and assignment operators: side effects inside
+/// `debug_assert!` arguments. Comparison operators (`==`, `<=`, …) lex as
+/// single joined tokens, so a bare `=` here really is an assignment.
+const ASSIGN_OPS: &[&str] =
+    &["=", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<=", ">>="];
+
+/// Mutating method names: side effects inside `debug_assert!` arguments.
+const MUTATING_METHODS: &[&str] = &[
+    "push", "push_back", "push_front", "push_str", "insert", "remove", "pop", "pop_back",
+    "pop_front", "drain", "clear", "extend", "truncate", "retain", "swap", "sort", "sort_by",
+    "sort_by_key", "sort_unstable", "sort_unstable_by", "sort_unstable_by_key", "dedup",
+    "append", "split_off", "take", "replace", "set", "fill", "resize",
+];
+
+fn is_keyword(name: &str) -> bool {
+    KEYWORDS.contains(&name)
+}
+
+/// Lint one file. `path` is the forward-slash path used for module
+/// classification; `budget` is the parsed ratchet table, if any.
+pub fn check_source(
+    path: &str,
+    src: &str,
+    cfg: &LintConfig,
+    budget: Option<&BudgetTable>,
+) -> Vec<Finding> {
+    let lexed = lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let excerpt = |line: u32| -> String {
+        let text = lines.get(line.saturating_sub(1) as usize).map_or("", |l| l.trim());
+        let mut out: String = text.chars().take(80).collect();
+        if text.chars().count() > 80 {
+            out.push('…');
+        }
+        out
+    };
+
+    let (suppressions, mut findings) = collect_suppressions(path, &lexed.comments, &lexed.toks);
+    for f in &mut findings {
+        f.excerpt = excerpt(f.line);
+    }
+
+    let toks = &lexed.toks;
+    let deterministic = cfg.is_deterministic(path);
+    let mut raw: Vec<(u32, RuleId, String)> = Vec::new();
+
+    if deterministic {
+        rule_map_iteration(toks, &mut raw);
+        rule_unstable_sort(toks, &mut raw);
+        rule_float_order(toks, &mut raw);
+    }
+    if !cfg.is_wallclock_allowed(path) {
+        rule_wall_clock(toks, &mut raw);
+    }
+    rule_ambient_entropy(toks, &mut raw);
+    rule_debug_assert_effect(toks, &mut raw);
+
+    // Dedupe (a `for` over `.keys()` hits two patterns) and apply the
+    // inline suppressions.
+    let mut seen: BTreeSet<(u32, &'static str)> = BTreeSet::new();
+    for (line, rule, message) in raw {
+        if !seen.insert((line, rule.as_str())) {
+            continue;
+        }
+        if suppressions.get(&line).is_some_and(|rules| rules.contains(rule.as_str())) {
+            continue;
+        }
+        findings.push(Finding {
+            file: path.to_string(),
+            line,
+            rule,
+            severity: Severity::Error,
+            message,
+            excerpt: excerpt(line),
+        });
+    }
+
+    // Panic budget: module-level counts against the checked-in ratchet.
+    if let Some(key) = cfg.budget_key(path) {
+        let actual = count_budget(toks);
+        match budget.and_then(|t| t.entry_for(path)) {
+            None => findings.push(Finding {
+                file: path.to_string(),
+                line: 1,
+                rule: RuleId::PanicBudget,
+                severity: Severity::Error,
+                message: format!(
+                    "hot-path module has no [budget.\"{key}\"] entry in lint-budget.toml \
+                     (actual: unwrap={} expect={} panic={} index={})",
+                    actual.unwrap, actual.expect, actual.panic, actual.index
+                ),
+                excerpt: String::new(),
+            }),
+            Some((_, limit)) => {
+                for (name, have) in actual.counters() {
+                    let cap = limit.get(name).unwrap_or(0);
+                    if have > cap {
+                        findings.push(Finding {
+                            file: path.to_string(),
+                            line: 1,
+                            rule: RuleId::PanicBudget,
+                            severity: Severity::Error,
+                            message: format!(
+                                "{name} count {have} exceeds the ratcheted budget {cap}; \
+                                 remove the new {name} or justify lowering the bar"
+                            ),
+                            excerpt: String::new(),
+                        });
+                    } else if have < cap {
+                        findings.push(Finding {
+                            file: path.to_string(),
+                            line: 1,
+                            rule: RuleId::PanicBudget,
+                            severity: Severity::Warning,
+                            message: format!(
+                                "{name} count {have} is below the budget {cap}: tighten \
+                                 lint-budget.toml to {have} to lock in the improvement"
+                            ),
+                            excerpt: String::new(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        a.line.cmp(&b.line).then_with(|| a.rule.as_str().cmp(b.rule.as_str()))
+    });
+    findings
+}
+
+/// Parse every `lint:allow` comment into a line → rule-set map, emitting
+/// `allow-syntax` findings for malformed ones. A trailing comment covers
+/// its own line; a leading (stand-alone) comment covers the next line
+/// that carries any token, so stacked allows compose.
+fn collect_suppressions(
+    path: &str,
+    comments: &[Comment],
+    toks: &[Tok],
+) -> (BTreeMap<u32, BTreeSet<&'static str>>, Vec<Finding>) {
+    let mut map: BTreeMap<u32, BTreeSet<&'static str>> = BTreeMap::new();
+    let mut findings = Vec::new();
+    for c in comments {
+        match parse_allow(&c.text) {
+            Ok(None) => {}
+            Ok(Some(rule)) => {
+                let covered = if c.leading {
+                    toks.iter().map(|t| t.line).find(|&l| l > c.line).unwrap_or(c.line)
+                } else {
+                    c.line
+                };
+                map.entry(covered).or_default().insert(rule.as_str());
+            }
+            Err(msg) => findings.push(Finding {
+                file: path.to_string(),
+                line: c.line,
+                rule: RuleId::AllowSyntax,
+                severity: Severity::Error,
+                message: msg,
+                excerpt: String::new(),
+            }),
+        }
+    }
+    (map, findings)
+}
+
+/// Parse one comment. `Ok(None)`: not a `lint:allow` comment at all.
+/// `Err`: it tried to be one and is malformed.
+fn parse_allow(text: &str) -> Result<Option<RuleId>, String> {
+    let t = text.trim();
+    if !t.starts_with("lint:allow") {
+        return Ok(None);
+    }
+    let rest = &t["lint:allow".len()..];
+    let inner = rest
+        .strip_prefix('(')
+        .and_then(|r| r.find(')').map(|end| &r[..end]))
+        .ok_or_else(|| "lint:allow needs the form lint:allow(rule-id, reason=\"…\")".to_string())?;
+    let (id, tail) = inner
+        .split_once(',')
+        .ok_or_else(|| "lint:allow is missing the mandatory reason=\"…\"".to_string())?;
+    let id = id.trim();
+    let rule = RuleId::parse(id)
+        .ok_or_else(|| format!("lint:allow names unknown rule `{id}`"))?;
+    if !rule.suppressible() {
+        return Err(format!("rule `{id}` cannot be suppressed inline"));
+    }
+    let reason = tail
+        .trim()
+        .strip_prefix("reason=")
+        .ok_or_else(|| "lint:allow is missing the mandatory reason=\"…\"".to_string())?;
+    let reason = reason
+        .strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .ok_or_else(|| "lint:allow reason must be a double-quoted string".to_string())?;
+    if reason.trim().is_empty() {
+        return Err("lint:allow reason must not be empty".to_string());
+    }
+    Ok(Some(rule))
+}
+
+/// D1 — order-dependent traversal of `HashMap`/`HashSet`.
+fn rule_map_iteration(toks: &[Tok], out: &mut Vec<(u32, RuleId, String)>) {
+    let names = collect_hash_names(toks);
+    // (a) iteration methods invoked on a tracked name.
+    for i in 0..toks.len().saturating_sub(3) {
+        if toks[i].kind == TokKind::Ident
+            && names.contains(toks[i].text.as_str())
+            && toks[i + 1].is_punct(".")
+            && toks[i + 2].kind == TokKind::Ident
+            && ITER_METHODS.contains(&toks[i + 2].text.as_str())
+            && toks[i + 3].is_punct("(")
+        {
+            out.push((
+                toks[i].line,
+                RuleId::MapIteration,
+                format!(
+                    "`{}.{}()` traverses a hash container in randomized order; use a \
+                     BTreeMap/Vec or sort the keys first",
+                    toks[i].text, toks[i + 2].text
+                ),
+            ));
+        }
+    }
+    // (b) `for … in <expr mentioning a tracked name> {`.
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_ident("for") {
+            // Find the `in` of this loop header (bounded: a genuine loop
+            // header is short; `impl X for Y` never has one).
+            let mut k = i + 1;
+            let mut found_in = None;
+            while k < toks.len() && k - i < 24 {
+                if toks[k].is_ident("in") {
+                    found_in = Some(k);
+                    break;
+                }
+                if toks[k].is_punct("{") {
+                    break;
+                }
+                k += 1;
+            }
+            if let Some(start) = found_in {
+                let mut j = start + 1;
+                while j < toks.len() && !toks[j].is_punct("{") {
+                    if toks[j].kind == TokKind::Ident && names.contains(toks[j].text.as_str()) {
+                        out.push((
+                            toks[j].line,
+                            RuleId::MapIteration,
+                            format!(
+                                "`for … in {}` traverses a hash container in randomized \
+                                 order; use a BTreeMap/Vec or sort the keys first",
+                                toks[j].text
+                            ),
+                        ));
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Names bound to `HashMap`/`HashSet` in this file, via type annotations
+/// (`name: HashMap<…>`, struct fields, fn params) or constructors
+/// (`name = HashMap::new()`).
+fn collect_hash_names(toks: &[Tok]) -> BTreeSet<&str> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident("HashMap") || toks[i].is_ident("HashSet")) {
+            continue;
+        }
+        // Type-annotation form: walk back over wrappers to a `:`.
+        let mut j = i;
+        while j > 0 {
+            let t = &toks[j - 1];
+            let is_wrapper = (t.kind == TokKind::Punct && matches!(t.text.as_str(), "<" | "&" | "::"))
+                || (t.kind == TokKind::Ident && TYPE_WRAPPERS.contains(&t.text.as_str()))
+                || t.kind == TokKind::Lifetime;
+            if !is_wrapper {
+                break;
+            }
+            j -= 1;
+        }
+        if j >= 2 && toks[j - 1].is_punct(":") {
+            let cand = &toks[j - 2];
+            if cand.kind == TokKind::Ident && !is_keyword(&cand.text) {
+                names.insert(cand.text.as_str());
+                continue;
+            }
+        }
+        // Constructor form: walk back over call wrappers to an `=`.
+        let mut j = i;
+        while j > 0 {
+            let t = &toks[j - 1];
+            let is_wrapper = t.is_punct("(")
+                || (t.kind == TokKind::Ident && CTOR_WRAPPERS.contains(&t.text.as_str()));
+            if !is_wrapper {
+                break;
+            }
+            j -= 1;
+        }
+        if j >= 2 && toks[j - 1].is_punct("=") {
+            let cand = &toks[j - 2];
+            if cand.kind == TokKind::Ident && !is_keyword(&cand.text) {
+                names.insert(cand.text.as_str());
+            }
+        }
+    }
+    names
+}
+
+/// D2 — wall-clock reads outside the sanctioned files.
+fn rule_wall_clock(toks: &[Tok], out: &mut Vec<(u32, RuleId, String)>) {
+    for i in 0..toks.len() {
+        if toks[i].is_ident("Instant")
+            && i + 2 < toks.len()
+            && toks[i + 1].is_punct("::")
+            && toks[i + 2].is_ident("now")
+        {
+            out.push((
+                toks[i].line,
+                RuleId::WallClock,
+                "`Instant::now()` reads the wall clock; wall-derived values must never \
+                 reach a checksum or fingerprint"
+                    .to_string(),
+            ));
+        }
+        if toks[i].is_ident("SystemTime") || toks[i].is_ident("UNIX_EPOCH") {
+            out.push((
+                toks[i].line,
+                RuleId::WallClock,
+                format!("`{}` reads ambient time; use the simulated clock", toks[i].text),
+            ));
+        }
+        if toks[i].is_punct(".")
+            && i + 2 < toks.len()
+            && toks[i + 1].is_ident("elapsed")
+            && toks[i + 2].is_punct("(")
+        {
+            out.push((
+                toks[i + 1].line,
+                RuleId::WallClock,
+                "`.elapsed()` derives a wall-clock duration; keep it out of \
+                 deterministic state"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// D3a — unstable sorts whose comparator is not visibly total.
+fn rule_unstable_sort(toks: &[Tok], out: &mut Vec<(u32, RuleId, String)>) {
+    for i in 0..toks.len().saturating_sub(2) {
+        if !toks[i].is_punct(".") {
+            continue;
+        }
+        let name = &toks[i + 1];
+        if !(name.is_ident("sort_unstable_by") || name.is_ident("sort_unstable_by_key")) {
+            continue;
+        }
+        if !toks[i + 2].is_punct("(") {
+            continue;
+        }
+        // Scan the argument list for a visibly total comparator.
+        let mut depth = 1usize;
+        let mut j = i + 3;
+        let mut total = false;
+        while j < toks.len() && depth > 0 {
+            if toks[j].is_punct("(") {
+                depth += 1;
+            } else if toks[j].is_punct(")") {
+                depth -= 1;
+            } else if toks[j].is_ident("total_cmp") {
+                total = true;
+            }
+            j += 1;
+        }
+        if !total {
+            out.push((
+                name.line,
+                RuleId::UnstableSort,
+                format!(
+                    "`.{}()` with a comparator that is not visibly total: equal or \
+                     NaN-ordered keys make the result order nondeterministic",
+                    name.text
+                ),
+            ));
+        }
+    }
+}
+
+/// D3b — `partial_cmp` in deterministic modules.
+fn rule_float_order(toks: &[Tok], out: &mut Vec<(u32, RuleId, String)>) {
+    for t in toks {
+        if t.is_ident("partial_cmp") {
+            out.push((
+                t.line,
+                RuleId::FloatOrder,
+                "`partial_cmp` is not total on NaN; use `f64::total_cmp`, or annotate a \
+                 deliberate NaN-guarding `expect`"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// D4 — ambient entropy sources.
+fn rule_ambient_entropy(toks: &[Tok], out: &mut Vec<(u32, RuleId, String)>) {
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        let hit = matches!(
+            t.text.as_str(),
+            "thread_rng" | "from_entropy" | "OsRng" | "getrandom" | "RandomState"
+        ) && t.kind == TokKind::Ident;
+        let rand_path =
+            t.is_ident("rand") && i + 1 < toks.len() && toks[i + 1].is_punct("::");
+        if hit || rand_path {
+            out.push((
+                t.line,
+                RuleId::AmbientEntropy,
+                format!(
+                    "`{}` draws ambient entropy; all randomness must come from the \
+                     seeded util::prng::Prng",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// D6 — side effects inside `debug_assert!` family macros.
+fn rule_debug_assert_effect(toks: &[Tok], out: &mut Vec<(u32, RuleId, String)>) {
+    for i in 0..toks.len().saturating_sub(2) {
+        let name = &toks[i];
+        let nargs = if name.is_ident("debug_assert") {
+            1
+        } else if name.is_ident("debug_assert_eq") || name.is_ident("debug_assert_ne") {
+            2
+        } else {
+            continue;
+        };
+        if !(toks[i + 1].is_punct("!") && toks[i + 2].is_punct("(")) {
+            continue;
+        }
+        // Walk the asserted arguments (not the trailing format message,
+        // where `=` legitimately appears in named format args).
+        let mut depth = 1i32;
+        let mut commas = 0usize;
+        let mut j = i + 3;
+        while j < toks.len() && depth > 0 && commas < nargs {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    "," if depth == 1 => commas += 1,
+                    op if depth >= 1 && ASSIGN_OPS.contains(&op) => {
+                        out.push((
+                            name.line,
+                            RuleId::DebugAssertEffect,
+                            format!(
+                                "assignment inside `{}!` vanishes in release builds",
+                                name.text
+                            ),
+                        ));
+                    }
+                    _ => {}
+                }
+            } else if t.kind == TokKind::Ident
+                && MUTATING_METHODS.contains(&t.text.as_str())
+                && j > 0
+                && toks[j - 1].is_punct(".")
+                && j + 1 < toks.len()
+                && toks[j + 1].is_punct("(")
+            {
+                out.push((
+                    name.line,
+                    RuleId::DebugAssertEffect,
+                    format!(
+                        "`.{}()` mutates inside `{}!` and vanishes in release builds",
+                        t.text, name.text
+                    ),
+                ));
+            }
+            j += 1;
+        }
+    }
+}
+
+/// D5 — panic-budget counters for one file, skipping `#[cfg(test)]` items.
+pub fn count_budget(toks: &[Tok]) -> BudgetEntry {
+    let skip = cfg_test_ranges(toks);
+    let skipped = |i: usize| skip.iter().any(|&(a, b)| i >= a && i <= b);
+    let mut e = BudgetEntry::default();
+    for i in 0..toks.len() {
+        if skipped(i) {
+            continue;
+        }
+        let t = &toks[i];
+        // `.unwrap(` / `.expect(`
+        if t.kind == TokKind::Ident
+            && i > 0
+            && toks[i - 1].is_punct(".")
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct("(")
+        {
+            if t.text == "unwrap" {
+                e.unwrap += 1;
+            } else if t.text == "expect" {
+                e.expect += 1;
+            }
+        }
+        // `panic!(`
+        if t.is_ident("panic") && i + 1 < toks.len() && toks[i + 1].is_punct("!") {
+            e.panic += 1;
+        }
+        // Index expressions: `[` directly after an indexable expression.
+        if t.is_punct("[") && i > 0 {
+            let prev = &toks[i - 1];
+            let indexable = match prev.kind {
+                TokKind::Ident => !is_keyword(&prev.text),
+                TokKind::Num => true,
+                TokKind::Punct => matches!(prev.text.as_str(), ")" | "]" | "?"),
+                _ => false,
+            };
+            if indexable {
+                e.index += 1;
+            }
+        }
+    }
+    e
+}
+
+/// Token index ranges covered by `#[cfg(test)]` items (inline test mods,
+/// test-only helpers). Budget counters skip these: the ratchet measures
+/// hot-path production code, not assertions in tests.
+fn cfg_test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let is_cfg_test = toks[i].is_punct("#")
+            && toks[i + 1].is_punct("[")
+            && toks[i + 2].is_ident("cfg")
+            && toks[i + 3].is_punct("(")
+            && toks[i + 4].is_ident("test")
+            && toks[i + 5].is_punct(")")
+            && toks[i + 6].is_punct("]");
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i + 7;
+        // Skip any further attributes between the cfg and the item.
+        while j + 1 < toks.len() && toks[j].is_punct("#") && toks[j + 1].is_punct("[") {
+            let mut depth = 0i32;
+            j += 1;
+            while j < toks.len() {
+                if toks[j].is_punct("[") {
+                    depth += 1;
+                } else if toks[j].is_punct("]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        // The item ends at the first top-level `;` or the matching `}` of
+        // its first brace block (covers mods, fns, impls, use-decls).
+        let mut depth = 0i32;
+        let mut end = j;
+        while end < toks.len() {
+            let t = &toks[end];
+            if t.is_punct("{") {
+                depth += 1;
+            } else if t.is_punct("}") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t.is_punct(";") && depth == 0 {
+                break;
+            }
+            end += 1;
+        }
+        ranges.push((start, end.min(toks.len().saturating_sub(1))));
+        i = end + 1;
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LintConfig {
+        LintConfig::default()
+    }
+
+    fn check(path: &str, src: &str) -> Vec<Finding> {
+        check_source(path, src, &cfg(), None)
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn map_iteration_fires_on_traversal_not_construction() {
+        let src = "fn f() {\n\
+                   let mut m: HashMap<u32, u32> = HashMap::new();\n\
+                   m.insert(1, 2);\n\
+                   let v = m.get(&1);\n\
+                   for (k, val) in &m { use_it(k, val); }\n\
+                   let total: u32 = m.values().sum();\n\
+                   }\n";
+        let fs = check("src/cluster/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["map-iteration", "map-iteration"]);
+        assert_eq!(fs[0].line, 5, "for-loop traversal");
+        assert_eq!(fs[1].line, 6, ".values() traversal");
+    }
+
+    #[test]
+    fn map_iteration_tracks_fields_params_and_set_constructors() {
+        let src = "struct S { cache: HashMap<String, u32> }\n\
+                   fn g(seen: &HashSet<u32>, s: &S) {\n\
+                   for k in seen.iter() { touch(k); }\n\
+                   let c = s.cache.keys().count();\n\
+                   }\n";
+        let fs = check("src/sweep/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["map-iteration", "map-iteration"]);
+        assert_eq!(fs[0].line, 3);
+        assert_eq!(fs[1].line, 4);
+    }
+
+    #[test]
+    fn map_iteration_silent_outside_deterministic_modules() {
+        let src = "fn f(m: &HashMap<u32, u32>) { for k in m.keys() { t(k); } }\n";
+        assert!(check("src/mig/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_fires_and_respects_allowlist() {
+        let src = "fn f() {\n\
+                   let t0 = std::time::Instant::now();\n\
+                   let dt = t0.elapsed().as_secs_f64();\n\
+                   let s = SystemTime::now();\n\
+                   }\n";
+        let fs = check("src/cluster/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["wall-clock", "wall-clock", "wall-clock"]);
+        assert_eq!(fs[0].line, 2);
+        assert_eq!(fs[1].line, 3);
+        assert_eq!(fs[2].line, 4);
+        assert!(check("benches/x.rs", src).is_empty(), "benches are sanctioned");
+        assert!(check("src/main.rs", src).is_empty(), "the CLI is sanctioned");
+    }
+
+    #[test]
+    fn unstable_sort_exempts_visibly_total_comparators() {
+        let bad = "fn f(v: &mut Vec<f64>) { v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let fs = check("src/cluster/x.rs", bad);
+        assert_eq!(rules_of(&fs), vec!["float-order", "unstable-sort"]);
+        let good = "fn f(v: &mut Vec<f64>) { v.sort_unstable_by(f64::total_cmp); }\n";
+        assert!(check("src/cluster/x.rs", good).is_empty());
+        let plain = "fn f(v: &mut Vec<u32>) { v.sort_unstable(); }\n";
+        assert!(check("src/cluster/x.rs", plain).is_empty(), "Ord-bounded sort is exempt");
+    }
+
+    #[test]
+    fn ambient_entropy_fires_everywhere() {
+        let src = "fn f() { let r = rand::thread_rng(); }\n";
+        let fs = check("src/mig/x.rs", src);
+        assert!(rules_of(&fs).contains(&"ambient-entropy"));
+    }
+
+    #[test]
+    fn debug_assert_effect_catches_mutation_not_comparison() {
+        let bad = "fn f(v: &mut Vec<u32>) { debug_assert!(v.pop().is_some()); }\n";
+        assert_eq!(rules_of(&check("src/mig/x.rs", bad)), vec!["debug-assert-effect"]);
+        let bad2 = "fn f(mut x: u32) { debug_assert!({ x += 1; x > 0 }); }\n";
+        assert_eq!(rules_of(&check("src/mig/x.rs", bad2)), vec!["debug-assert-effect"]);
+        let good = "fn f(x: u32) { debug_assert!(x >= 1, \"x = {x}\"); }\n";
+        assert!(check("src/mig/x.rs", good).is_empty(), ">= is not an assignment");
+        let fmt_arg = "fn f(x: u32) { debug_assert_eq!(x, 1, \"ctx {y}\", y = 2); }\n";
+        assert!(check("src/mig/x.rs", fmt_arg).is_empty(), "named format args are fine");
+    }
+
+    #[test]
+    fn suppression_trailing_and_leading() {
+        let trailing = "fn f() { let t = std::time::Instant::now(); } \
+                        // lint:allow(wall-clock, reason=\"wall-only probe\")\n";
+        assert!(check("src/cluster/x.rs", trailing).is_empty());
+        let leading = "fn f() {\n\
+                       // lint:allow(wall-clock, reason=\"wall-only probe\")\n\
+                       let t = std::time::Instant::now();\n\
+                       }\n";
+        assert!(check("src/cluster/x.rs", leading).is_empty());
+        // The allow covers only its own line.
+        let elsewhere = "fn f() {\n\
+                         // lint:allow(wall-clock, reason=\"wall-only probe\")\n\
+                         let a = 1;\n\
+                         let t = std::time::Instant::now();\n\
+                         }\n";
+        assert_eq!(rules_of(&check("src/cluster/x.rs", elsewhere)), vec!["wall-clock"]);
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let src = "fn f() {\n\
+                   // lint:allow(wall-clock)\n\
+                   let t = std::time::Instant::now();\n\
+                   }\n";
+        let rules = rules_of(&check("src/cluster/x.rs", src));
+        assert!(rules.contains(&"allow-syntax"), "missing reason must be flagged");
+        assert!(rules.contains(&"wall-clock"), "malformed allow must not suppress");
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_a_finding() {
+        let src = "// lint:allow(no-such-rule, reason=\"x\")\nfn f() {}\n";
+        assert_eq!(rules_of(&check("src/cluster/x.rs", src)), vec!["allow-syntax"]);
+    }
+
+    #[test]
+    fn rules_never_fire_inside_literals_or_comments() {
+        let src = "fn f() {\n\
+                   let a = \"Instant::now() thread_rng()\";\n\
+                   let b = r#\"for k in m.keys() { SystemTime }\"#;\n\
+                   // Instant::now() in a comment\n\
+                   /* SystemTime::now() in a block comment */\n\
+                   }\n";
+        assert!(check("src/cluster/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn budget_counts_skip_cfg_test_items() {
+        let src = "fn hot(v: &[u32]) -> u32 {\n\
+                   let x = v[0];\n\
+                   let y = maybe().unwrap();\n\
+                   let z = other().expect(\"z\");\n\
+                   if x == 0 { panic!(\"zero\"); }\n\
+                   x + y + z\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   #[test]\n\
+                   fn t() { assert_eq!(hot(&[1]).unwrap(), 1); let q = arr[0]; }\n\
+                   }\n";
+        let counts = count_budget(&lex(src).toks);
+        assert_eq!(counts.unwrap, 1, "test-mod unwrap not counted");
+        assert_eq!(counts.expect, 1);
+        assert_eq!(counts.panic, 1);
+        assert_eq!(counts.index, 1, "slice index in hot code only");
+    }
+
+    #[test]
+    fn budget_ignores_attributes_types_and_macros() {
+        let src = "#[rustfmt::skip]\n\
+                   fn f(xs: &[f64; 4]) -> Vec<f64> {\n\
+                   let v = vec![1.0, 2.0];\n\
+                   let s = &xs[..2];\n\
+                   let first = v[0] + s[1] + point().0[2];\n\
+                   v\n\
+                   }\n";
+        let counts = count_budget(&lex(src).toks);
+        // xs[..2], v[0], s[1], .0[2] — not the attribute, array type or
+        // vec! macro brackets.
+        assert_eq!(counts.index, 4);
+        assert_eq!(counts.unwrap + counts.expect + counts.panic, 0);
+    }
+
+    #[test]
+    fn budget_findings_ratchet_both_ways() {
+        use super::super::config::parse_budget;
+        let src = "fn hot() { maybe().unwrap(); }\n";
+        let cfg = cfg();
+        let path = "src/cluster/engine.rs";
+        let over = parse_budget("[budget.\"src/cluster/engine.rs\"]\nunwrap = 0\n").unwrap();
+        let fs = check_source(path, src, &cfg, Some(&over));
+        assert_eq!(rules_of(&fs), vec!["panic-budget"]);
+        assert_eq!(fs[0].severity, Severity::Error);
+        let exact = parse_budget("[budget.\"src/cluster/engine.rs\"]\nunwrap = 1\n").unwrap();
+        assert!(check_source(path, src, &cfg, Some(&exact)).is_empty());
+        let stale = parse_budget("[budget.\"src/cluster/engine.rs\"]\nunwrap = 5\n").unwrap();
+        let fs = check_source(path, src, &cfg, Some(&stale));
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].severity, Severity::Warning, "stale budget is a warning");
+        let missing = parse_budget("").unwrap();
+        let fs = check_source(path, src, &cfg, Some(&missing));
+        assert_eq!(rules_of(&fs), vec!["panic-budget"], "budgeted module must have an entry");
+    }
+
+    #[test]
+    fn budget_not_applied_to_unbudgeted_files() {
+        let src = "fn hot() { maybe().unwrap(); }\n";
+        assert!(check("src/cluster/telemetry.rs", src).is_empty());
+    }
+}

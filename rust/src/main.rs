@@ -15,7 +15,8 @@ use migperf::util::argparse::{render_help, Args, OptSpec};
 use migperf::util::table::Table;
 use migperf::workload::spec::WorkloadKind;
 
-const BOOL_FLAGS: &[&str] = &["help", "json", "csv", "real", "decisions", "bless", "faults"];
+const BOOL_FLAGS: &[&str] =
+    &["help", "json", "csv", "real", "decisions", "bless", "faults", "strict"];
 
 fn main() -> ExitCode {
     let args = match Args::parse(std::env::args().skip(1), BOOL_FLAGS) {
@@ -38,6 +39,7 @@ fn main() -> ExitCode {
         Some("fuzz") => cmd_fuzz(&args),
         Some("bench-check") => cmd_bench_check(&args),
         Some("layouts") => cmd_layouts(&args),
+        Some("lint") => cmd_lint(&args),
         Some("version") => {
             println!("migperf {}", migperf::version());
             Ok(())
@@ -73,6 +75,7 @@ fn print_usage() {
          fleet       multi-GPU fleet simulation (policy × router × fleet-size grids)\n  \
          fuzz        model-based fuzzing of the fleet engine (random command sequences)\n  \
          bench-check compare a bench record against its checked-in baseline\n  \
+         lint        determinism-aware static analysis over the repo's own sources\n  \
          version     print the version\n\n\
          Run `migperf <COMMAND> --help` for command options.",
         migperf::version()
@@ -378,6 +381,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     } else {
         SweepEngine::from_env()
     };
+    #[allow(clippy::disallowed_methods)] // CLI wall timing, never checksummed
     let started = std::time::Instant::now();
     let outs = migperf::sweep::run_serving(&engine, &sims).map_err(|e| e.to_string())?;
     let wall_s = started.elapsed().as_secs_f64();
@@ -713,6 +717,7 @@ fn cmd_orchestrate(args: &Args) -> Result<(), String> {
     } else {
         SweepEngine::from_env()
     };
+    #[allow(clippy::disallowed_methods)] // CLI wall timing, never checksummed
     let started = std::time::Instant::now();
     let outs = migperf::sweep::run_orchestrator(&engine, &runs).map_err(|e| e.to_string())?;
     let wall_s = started.elapsed().as_secs_f64();
@@ -1222,6 +1227,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
     } else {
         SweepEngine::from_env()
     };
+    #[allow(clippy::disallowed_methods)] // CLI wall timing, never checksummed
     let started = std::time::Instant::now();
     let outs = match mega {
         Some(n) => {
@@ -1628,6 +1634,59 @@ fn cmd_bench_check(args: &Args) -> Result<(), String> {
             "{} bench metric(s) regressed or drifted against {baseline_path}",
             cmp.failures.len()
         ))
+    }
+}
+
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    if args.flag("help") {
+        #[rustfmt::skip]
+        println!(
+            "{}",
+            render_help(
+                "migperf",
+                "lint",
+                "Determinism-aware static analysis over the repo's own Rust sources: \
+                 hash-map iteration, wall-clock leakage, non-total float ordering, \
+                 ambient entropy, panic budgets and side-effectful debug_asserts. \
+                 Suppress per-line with `// lint:allow(rule-id, reason=\"...\")`. \
+                 Positional PATHS (files or directories) default to `src`.",
+                &[
+                    OptSpec { name: "strict", value: "", help: "also fail on warnings (stale budget entries)", default: None },
+                    OptSpec { name: "format", value: "F", help: "text | json", default: Some("text") },
+                    OptSpec { name: "budget", value: "FILE", help: "panic-budget ratchet file", default: Some("lint-budget.toml") },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    use migperf::lint::{config::LintConfig, report, run_paths};
+
+    let strict = args.flag("strict");
+    let format = args.str_or("format", "text");
+    if format != "text" && format != "json" {
+        return Err(format!("--format {format} must be text or json"));
+    }
+    let budget_path = args.str_or("budget", "lint-budget.toml");
+    let mut paths: Vec<String> = args.positional().to_vec();
+    if paths.is_empty() {
+        paths.push("src".to_string());
+    }
+    let cfg = LintConfig::default();
+    let rep = run_paths(&paths, &budget_path, strict, &cfg)?;
+    if format == "json" {
+        print!("{}", report::render_json(&rep));
+    } else {
+        print!("{}", report::render_text(&rep));
+    }
+    if rep.failed() {
+        Err(format!(
+            "lint failed: {} error(s), {} warning(s){}",
+            rep.errors(),
+            rep.warnings(),
+            if strict { " (strict)" } else { "" }
+        ))
+    } else {
+        Ok(())
     }
 }
 

@@ -100,6 +100,7 @@ impl SweepEngine {
                 .flat_map(|h| h.join().expect("sweep worker panicked"))
                 .collect()
         });
+        // lint:allow(unstable-sort, reason="keys are unique input indices, so equal keys cannot occur")
         indexed.sort_unstable_by_key(|&(i, _)| i);
         indexed.into_iter().map(|(_, r)| r).collect()
     }

@@ -187,6 +187,7 @@ pub fn check_outcome(cfg: &FleetConfig, out: &FleetOutcome) -> Vec<String> {
         }
     }
     for (g, fs) in per_gpu.iter_mut().enumerate() {
+        // lint:allow(float-order, reason="expect is a deliberate NaN guard on fuzz-generated fault times")
         fs.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("finite fault times"));
         for f in fs.iter() {
             want_down[g] += (f.t + f.down_s).min(cfg.duration_s) - f.t;
@@ -342,11 +343,7 @@ pub fn check_outcome(cfg: &FleetConfig, out: &FleetOutcome) -> Vec<String> {
     if out.tenants.len() > 1 {
         let mut order: Vec<usize> = (0..out.tenants.len()).collect();
         order.sort_by(|&a, &b| {
-            out.tenants[a]
-                .weight
-                .partial_cmp(&out.tenants[b].weight)
-                .expect("finite weights")
-                .then(a.cmp(&b))
+            out.tenants[a].weight.total_cmp(&out.tenants[b].weight).then(a.cmp(&b))
         });
         let protected = *order.last().expect("non-empty");
         if out.tenants[protected].shed_brownout != 0 {

@@ -1,0 +1,12 @@
+// Lint fixture (never compiled): malformed suppressions. Expected:
+// allow-syntax on line 6 (missing reason) AND wall-clock on line 7 (the
+// malformed allow suppresses nothing); allow-syntax on line 9 (unknown
+// rule id); allow-syntax on line 11 (empty reason).
+
+// lint:allow(wall-clock)
+pub fn probe() -> std::time::Instant { std::time::Instant::now() }
+
+// lint:allow(definitely-not-a-rule, reason="unknown id")
+
+// lint:allow(wall-clock, reason="")
+pub fn other() {}

@@ -1,0 +1,9 @@
+// Lint fixture (never compiled): side effects inside debug_assert!
+// (they vanish in release builds). Expected: debug-assert-effect errors
+// on lines 6 and 7; the pure comparison on line 8 must NOT fire.
+
+pub fn check(v: &mut Vec<u32>, mut x: u32) {
+    debug_assert!(v.pop().is_some());
+    debug_assert!({ x += 1; x > 0 });
+    debug_assert!(x >= 1, "x = {x}");
+}

@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): ambient entropy. Expected:
+// ambient-entropy errors on lines 5 and 6.
+
+pub fn unseeded() -> u64 {
+    let mut rng = rand::thread_rng();
+    let state = RandomState::new();
+    rng.gen::<u64>() ^ state.finish()
+}

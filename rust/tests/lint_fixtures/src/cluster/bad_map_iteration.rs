@@ -1,0 +1,14 @@
+// Lint fixture (never compiled): order-dependent hash traversal in a
+// deterministic module. Expected: map-iteration errors on lines 7 and
+// 10. Construction and the point lookup on line 6 must NOT fire.
+
+pub fn order_leak(m: &HashMap<u32, u32>, seen: &HashSet<u32>) -> u32 {
+    let mut acc = *m.get(&1).unwrap_or(&0);
+    for (k, v) in m.iter() {
+        acc += k + v;
+    }
+    for x in seen {
+        acc += x;
+    }
+    acc
+}

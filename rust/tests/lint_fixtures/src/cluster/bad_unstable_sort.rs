@@ -1,0 +1,9 @@
+// Lint fixture (never compiled): a non-total float comparator in a
+// deterministic module. Expected on line 6: float-order AND
+// unstable-sort. The total_cmp sort on line 8 must NOT fire.
+
+pub fn sort_latencies(v: &mut Vec<f64>, w: &mut Vec<f64>) {
+    v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+
+    w.sort_unstable_by(f64::total_cmp);
+}

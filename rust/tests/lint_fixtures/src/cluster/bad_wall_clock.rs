@@ -1,0 +1,9 @@
+// Lint fixture (never compiled): wall-clock reads outside sanctioned
+// sites. Expected: wall-clock errors on lines 5, 6 and 7.
+
+pub fn probe() -> f64 {
+    let t0 = std::time::Instant::now();
+    let dt = t0.elapsed().as_secs_f64();
+    let _ = SystemTime::now();
+    dt
+}

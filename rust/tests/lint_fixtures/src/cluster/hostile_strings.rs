@@ -1,0 +1,18 @@
+// Lint fixture (never compiled): every hazard the rules look for,
+// hidden inside string literals, raw strings, byte strings, chars and
+// comments. Expected: ZERO findings — a rule firing here means the
+// lexer leaked a literal interior into the token stream.
+//
+// Instant::now() for k in m.keys() thread_rng() sort_unstable_by
+/* SystemTime::now() partial_cmp rand::thread_rng() debug_assert!(v.pop()) */
+
+pub fn hostile() -> &'static str {
+    let a = "Instant::now() HashMap.iter() // rand::thread_rng()";
+    let b = r#"SystemTime "quoted" partial_cmp .elapsed()"#;
+    let c = b"debug_assert!(v.pop()) UNIX_EPOCH";
+    let d = br#"for x in seen { OsRng }"#;
+    let e = 'I';
+    let f = "multi\nline \\\" escape RandomState";
+    let _ = (a, b, c, d, e, f);
+    "clean"
+}

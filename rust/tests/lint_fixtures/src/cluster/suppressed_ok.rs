@@ -1,0 +1,10 @@
+// Lint fixture (never compiled): correctly suppressed findings, both
+// leading (line above) and trailing (same line) form. Expected: zero
+// findings.
+
+pub fn probe() -> f64 {
+    // lint:allow(wall-clock, reason="fixture demonstrates a sanctioned wall-only probe")
+    let t0 = std::time::Instant::now();
+    let dt = t0.elapsed().as_secs_f64(); // lint:allow(wall-clock, reason="wall-only, never checksummed")
+    dt
+}

@@ -1,0 +1,162 @@
+//! End-to-end tests for `migperf lint`: the repo itself must lint clean
+//! under `--strict` (the same invariant the CI gate enforces), the
+//! checked-in fixtures must produce their exact file:line findings, and
+//! the budget ratchet file must match the actual counts.
+//!
+//! Fixtures live under `tests/lint_fixtures/src/cluster/` so the path
+//! substring classifies them as deterministic modules; the directory is
+//! excluded from directory walks and never compiled by cargo.
+
+use migperf::lint::config::{parse_budget, LintConfig};
+use migperf::lint::lexer::lex;
+use migperf::lint::rules::count_budget;
+use migperf::lint::{report, run_paths, Report, Severity};
+
+const FIXTURES: &str = "tests/lint_fixtures/src/cluster";
+
+fn lint<S: AsRef<str>>(paths: &[S], strict: bool) -> Report {
+    let cfg = LintConfig::default();
+    let owned: Vec<String> = paths.iter().map(|p| p.as_ref().to_string()).collect();
+    run_paths(&owned, "lint-budget.toml", strict, &cfg).expect("lint run")
+}
+
+fn findings_of(rep: &Report) -> Vec<(u32, &'static str)> {
+    rep.findings.iter().map(|f| (f.line, f.rule.as_str())).collect()
+}
+
+#[test]
+fn repo_lints_clean_under_strict() {
+    let rep = lint(&["src"], true);
+    let shown: Vec<String> = rep
+        .findings
+        .iter()
+        .map(|f| format!("{}:{} {} — {}", f.file, f.line, f.rule.as_str(), f.message))
+        .collect();
+    assert!(!rep.failed(), "repo must lint clean at HEAD:\n{}", shown.join("\n"));
+    assert!(rep.files_scanned > 50, "src walk found only {} files", rep.files_scanned);
+}
+
+#[test]
+fn nightly_scope_lints_clean() {
+    // The nightly job widens the walk to benches/ and tests/; both must
+    // already be clean (fixtures are excluded from directory walks).
+    let rep = lint(&["src", "benches", "tests"], true);
+    let shown: Vec<String> = rep
+        .findings
+        .iter()
+        .map(|f| format!("{}:{} {} — {}", f.file, f.line, f.rule.as_str(), f.message))
+        .collect();
+    assert!(!rep.failed(), "nightly lint scope must be clean:\n{}", shown.join("\n"));
+}
+
+#[test]
+fn walker_skips_fixtures_but_lints_explicit_files() {
+    let rep = lint(&["tests"], false);
+    assert!(rep.files_scanned > 0);
+    // Known-bad fixtures under tests/ must not poison the directory walk…
+    assert!(!rep.failed(), "fixtures leaked into the tests/ walk");
+    // …while naming a fixture directly always lints it.
+    let direct = lint(&[&format!("{FIXTURES}/bad_wall_clock.rs")], false);
+    assert!(direct.failed());
+}
+
+#[test]
+fn fixture_wall_clock_exact_findings() {
+    let rep = lint(&[&format!("{FIXTURES}/bad_wall_clock.rs")], false);
+    assert_eq!(
+        findings_of(&rep),
+        vec![(5, "wall-clock"), (6, "wall-clock"), (7, "wall-clock")]
+    );
+}
+
+#[test]
+fn fixture_map_iteration_exact_findings() {
+    let rep = lint(&[&format!("{FIXTURES}/bad_map_iteration.rs")], false);
+    assert_eq!(findings_of(&rep), vec![(7, "map-iteration"), (10, "map-iteration")]);
+}
+
+#[test]
+fn fixture_unstable_sort_exact_findings() {
+    let rep = lint(&[&format!("{FIXTURES}/bad_unstable_sort.rs")], false);
+    assert_eq!(findings_of(&rep), vec![(6, "float-order"), (6, "unstable-sort")]);
+}
+
+#[test]
+fn fixture_entropy_exact_findings() {
+    let rep = lint(&[&format!("{FIXTURES}/bad_entropy.rs")], false);
+    assert_eq!(findings_of(&rep), vec![(5, "ambient-entropy"), (6, "ambient-entropy")]);
+}
+
+#[test]
+fn fixture_debug_assert_exact_findings() {
+    let rep = lint(&[&format!("{FIXTURES}/bad_debug_assert.rs")], false);
+    assert_eq!(
+        findings_of(&rep),
+        vec![(6, "debug-assert-effect"), (7, "debug-assert-effect")]
+    );
+}
+
+#[test]
+fn fixture_allow_without_reason_is_itself_a_finding() {
+    let rep = lint(&[&format!("{FIXTURES}/bad_allow_syntax.rs")], false);
+    assert_eq!(
+        findings_of(&rep),
+        vec![
+            (6, "allow-syntax"),  // missing reason
+            (7, "wall-clock"),    // the malformed allow suppressed nothing
+            (9, "allow-syntax"),  // unknown rule id
+            (11, "allow-syntax"), // empty reason
+        ]
+    );
+}
+
+#[test]
+fn fixture_suppressed_and_hostile_are_clean() {
+    for name in ["suppressed_ok.rs", "hostile_strings.rs"] {
+        let rep = lint(&[&format!("{FIXTURES}/{name}")], true);
+        let shown: Vec<String> = rep
+            .findings
+            .iter()
+            .map(|f| format!("{}:{} {}", f.file, f.line, f.rule.as_str()))
+            .collect();
+        assert!(rep.findings.is_empty(), "{name} must be clean: {shown:?}");
+    }
+}
+
+#[test]
+fn budget_file_matches_actual_counts() {
+    // The acceptance criterion in one test: every entry in the checked-in
+    // ratchet equals the count the auditor computes today, so the gate
+    // can neither silently loosen nor go stale.
+    let text = std::fs::read_to_string("lint-budget.toml").expect("ratchet file");
+    let table = parse_budget(&text).expect("ratchet parses");
+    let cfg = LintConfig::default();
+    assert_eq!(table.entries.len(), cfg.budget_modules.len());
+    for module in &cfg.budget_modules {
+        let src = std::fs::read_to_string(module).expect(module);
+        let actual = count_budget(&lex(&src).toks);
+        let (_, entry) = table.entry_for(module).expect("entry for budgeted module");
+        assert_eq!(
+            actual, *entry,
+            "{module}: lint-budget.toml is stale; update it to the actual counts"
+        );
+    }
+}
+
+#[test]
+fn json_report_roundtrips() {
+    use migperf::util::json;
+    let rep = lint(&[&format!("{FIXTURES}/bad_wall_clock.rs")], true);
+    let doc = json::parse(&report::render_json(&rep)).expect("valid json");
+    assert_eq!(doc.get("errors").and_then(json::Json::as_i64), Some(3));
+    assert_eq!(doc.get("failed").and_then(json::Json::as_bool), Some(true));
+    let by_rule = doc.get("findings_by_rule").expect("rule counts");
+    assert_eq!(by_rule.get("wall-clock").and_then(json::Json::as_i64), Some(3));
+}
+
+#[test]
+fn every_finding_is_error_severity_on_bad_fixtures() {
+    let rep = lint(&[&format!("{FIXTURES}/bad_allow_syntax.rs")], false);
+    assert!(rep.findings.iter().all(|f| f.severity == Severity::Error));
+    assert!(rep.failed(), "errors must fail even without --strict");
+}
